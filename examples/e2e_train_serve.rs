@@ -1,0 +1,187 @@
+//! End-to-end driver: the full KV-CAR lifecycle on a real (small)
+//! workload, proving every layer composes.  Recorded in EXPERIMENTS.md.
+//!
+//!   cargo run --release --example e2e_train_serve [-- --fast]
+//!
+//! Phases:
+//!   1. pretrain the tiny GPT-2-style model on the wiki-like corpus,
+//!      logging the loss curve (trained from rust over the AOT'd
+//!      train-step artifact — python never runs);
+//!   2. Alg. 1: per-layer AE training then joint finetune;
+//!   3. Alg. 2: head-similarity analysis and reuse finetune;
+//!   4. quality: ppl + zero-shot accuracy, baseline vs AE vs AE+reuse
+//!      vs AE+int8;
+//!   5. serving: batched requests through the coordinator under baseline
+//!      and compressed plans — latency/throughput + measured cache bytes.
+
+use anyhow::Result;
+use kvcar::compress::planner::{to_masks, with_selection};
+use kvcar::coordinator::{GenRequest, ServeConfig, ServingEngine};
+use kvcar::data::corpus;
+use kvcar::data::tasks::Task;
+use kvcar::eval::{perplexity, zero_shot};
+use kvcar::model::memory::{plan_savings, CompressionPlan};
+use kvcar::runtime::{artifacts_dir, Engine, Store};
+use kvcar::train::{TrainConfig, Trainer};
+use kvcar::util::cli::Args;
+
+const MODEL: &str = "gpt2t";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let fast = args.bool("fast");
+    let (pre_steps, s1, s2, ft) = if fast { (80, 10, 20, 12) } else { (300, 30, 80, 40) };
+    let eval_batches = if fast { 3 } else { 8 };
+    let zs_items = if fast { 60 } else { 200 };
+
+    let mut engine = Engine::new(&artifacts_dir())?;
+    println!("=== phase 1: pretraining ({pre_steps} steps) ===");
+    let mut tr = Trainer::new(
+        &mut engine,
+        MODEL,
+        TrainConfig {
+            verbose: false,
+            ..Default::default()
+        },
+    )?;
+    let spec = tr.spec.clone();
+    let mut wiki = corpus::wiki(0);
+    let log = tr.pretrain(&mut wiki, pre_steps)?;
+    print!("loss curve: ");
+    for (i, l) in log.losses.iter().enumerate() {
+        if i % (pre_steps / 10).max(1) == 0 || i + 1 == log.losses.len() {
+            print!("{l:.3} ");
+        }
+    }
+    println!("\n  ({} ms, final loss {:.3})", log.wall_ms, log.last());
+
+    println!("\n=== phase 2: Alg. 1 autoencoder training ===");
+    let ae_layers: Vec<usize> = (0..spec.n_layer - 1).collect();
+    let logs = tr.ae_stage1(&mut wiki, &ae_layers, s1)?;
+    for l in &logs {
+        println!("  {}: {:.3} -> {:.3}", l.stage, l.first(), l.last());
+    }
+    let j = tr.ae_stage2(&mut wiki, &ae_layers, s2)?;
+    println!("  joint: {:.3} -> {:.3}", j.first(), j.last());
+
+    println!("\n=== phase 3: Alg. 2 head analysis + reuse finetune ===");
+    let hd = tr.analyze_heads(&mut wiki, 3)?;
+    println!("  adjacent-layer K-head L1 distances:");
+    for l in 1..hd.n_layer {
+        let row: Vec<String> = hd.dk[l].iter().map(|d| format!("{d:.3}")).collect();
+        println!("    layer {l}: [{}]", row.join(", "));
+    }
+    let sel = hd.select_top(3, 3);
+    println!(
+        "  selected {} K heads, {} V heads for reuse",
+        sel.count_k(),
+        sel.count_v()
+    );
+    let plan_combined = with_selection(
+        CompressionPlan::ae_first_layers(&spec, spec.n_layer - 1),
+        &sel,
+    );
+    let ftl = tr.reuse_finetune(&mut wiki, &to_masks(&plan_combined), ft)?;
+    println!("  reuse finetune: {:.3} -> {:.3}", ftl.first(), ftl.last());
+    let trained = tr.store.clone();
+
+    println!("\n=== phase 4: quality under compression plans ===");
+    let plans: Vec<(&str, CompressionPlan)> = vec![
+        ("baseline", CompressionPlan::none(spec.n_layer, spec.n_kv_head)),
+        (
+            "AE (half layers)",
+            CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2),
+        ),
+        (
+            "AE (all-1 layers)",
+            CompressionPlan::ae_first_layers(&spec, spec.n_layer - 1),
+        ),
+        (
+            "AE + int8",
+            CompressionPlan::ae_first_layers(&spec, spec.n_layer - 1).with_quant(),
+        ),
+        ("AE + reuse", plan_combined.clone()),
+    ];
+    println!(
+        "{:<20} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "plan", "wiki ppl", "c4 ppl", "piqa", "wino", "savings"
+    );
+    let mut store = mk_store(&mut engine, &trained)?;
+    for (name, plan) in &plans {
+        let masks = to_masks(plan);
+        let mut w = corpus::wiki(99);
+        let mut c4 = corpus::c4(99);
+        let ppl_w = perplexity(&mut engine, &mut store, &spec, MODEL, &mut w, eval_batches, &masks)?;
+        let ppl_c = perplexity(&mut engine, &mut store, &spec, MODEL, &mut c4, eval_batches, &masks)?;
+        let piqa = zero_shot(&mut engine, &mut store, &spec, MODEL, Task::Piqa, zs_items, 5, &masks)?;
+        let wino = zero_shot(&mut engine, &mut store, &spec, MODEL, Task::Wino, zs_items, 5, &masks)?;
+        println!(
+            "{name:<20} {ppl_w:>9.3} {ppl_c:>9.3} {:>9.4} {:>9.4} {:>8.1}%",
+            piqa.accuracy(),
+            wino.accuracy(),
+            plan_savings(&spec, plan) * 100.0
+        );
+    }
+
+    println!("\n=== phase 5: serving baseline vs compressed ===");
+    let n_req = if fast { 6 } else { 16 };
+    for (name, plan) in [
+        ("baseline", CompressionPlan::none(spec.n_layer, spec.n_kv_head)),
+        ("AE+reuse+int8", {
+            let mut p = plan_combined.clone();
+            p.quant_int8 = true;
+            p
+        }),
+    ] {
+        let cfg = ServeConfig {
+            plan: plan.clone(),
+            max_batch: 8,
+            seed: 0,
+            per_step_reconstruct: false,
+        };
+        let mut serving = ServingEngine::new(&mut engine, MODEL, cfg)?;
+        overlay(&mut serving.store, &trained);
+        let mut prompts = corpus::wiki(42);
+        let reqs: Vec<GenRequest> = (0..n_req)
+            .map(|i| GenRequest::greedy(i as u64, &prompts.tokens(24), 32))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let responses = serving.run(reqs)?;
+        let wall = t0.elapsed();
+        println!(
+            "\n[{name}] modeled savings {:.1}%",
+            plan_savings(&spec, &plan) * 100.0
+        );
+        println!(
+            "  sample: {:?}",
+            String::from_utf8_lossy(&responses[0].output)
+        );
+        serving.metrics.print_summary(name);
+        let ps = serving.cache.pool_stats();
+        println!(
+            "  measured cache peak: {} bytes ({:.1} tok/s end-to-end)",
+            ps.peak_live_bytes,
+            serving.metrics.tokens_generated as f64 / wall.as_secs_f64()
+        );
+    }
+    println!("\ne2e complete.");
+    Ok(())
+}
+
+fn mk_store(engine: &mut Engine, trained: &Store) -> Result<Store> {
+    let mut store = Store::new();
+    engine.load_params(MODEL, &mut store)?;
+    overlay(&mut store, trained);
+    Ok(store)
+}
+
+fn overlay(into: &mut Store, from: &Store) {
+    let names: Vec<String> = from
+        .names()
+        .filter(|n| n.starts_with("base/") || n.starts_with("ae/"))
+        .cloned()
+        .collect();
+    for n in names {
+        into.insert(&n, from.get(&n).unwrap().clone());
+    }
+}

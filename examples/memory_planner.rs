@@ -1,0 +1,110 @@
+//! Memory planner: Eq. 3 calculator and compression-plan explorer.
+//!
+//! Reproduces the paper's §II-B worked example (GPT-2 Medium, fp16,
+//! L=2048, B=8 -> ~1.61 GB), then walks the KV-CAR mechanisms over the
+//! paper-scale models showing per-layer storage maps, modeled savings,
+//! and the A40 OOM frontier each plan buys.
+//!
+//!   cargo run --release --example memory_planner [-- --model gpt2-774m]
+
+use kvcar::compress::similarity::Selection;
+use kvcar::compress::planner::with_selection;
+use kvcar::kvcache::{CacheConfig, Side, StoreKind};
+use kvcar::memsim::GpuModel;
+use kvcar::model::memory::{
+    baseline_bytes_per_token, kv_bytes_per_token, kv_cache_bytes, plan_savings, CompressionPlan,
+};
+use kvcar::model::{gpt2_774m, gpt2_medium, tinyllama_1_1b, ModelSpec};
+use kvcar::util::cli::Args;
+
+fn gb(x: u64) -> f64 {
+    x as f64 / 1e9
+}
+
+fn show_plan(spec: &ModelSpec, name: &str, plan: &CompressionPlan) {
+    let per_tok = kv_bytes_per_token(spec, plan);
+    let base = baseline_bytes_per_token(spec);
+    println!(
+        "\n== {name}: {}/tok vs {} baseline -> savings {:.2}%",
+        per_tok,
+        base,
+        plan_savings(spec, plan) * 100.0
+    );
+    let cfg = CacheConfig::new(spec.clone(), plan.clone());
+    print!("   layer map: ");
+    for l in 0..spec.n_layer.min(24) {
+        let c = match cfg.store_kind(l, Side::K) {
+            StoreKind::FullAlias => 'A',
+            StoreKind::Latent => 'L',
+            StoreKind::Heads(h) if h.len() == spec.n_kv_head => '.',
+            StoreKind::Heads(_) => 'p',
+        };
+        print!("{c}");
+    }
+    if spec.n_layer > 24 {
+        print!("… ({} layers)", spec.n_layer);
+    }
+    println!("   (. raw, L latent, A alias, p partial heads)");
+    let gpu = GpuModel::a40_for(spec);
+    for b in [8usize, 32, 64] {
+        println!(
+            "   A40 max seq @ batch {:>3}: {}",
+            b,
+            gpu.max_seq_len(spec, plan, b)
+        );
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+
+    // --- the paper's Eq. 3 worked example -------------------------------
+    let med = gpt2_medium();
+    let none = CompressionPlan::none(med.n_layer, med.n_kv_head);
+    let bytes = kv_cache_bytes(&med, &none, 2048, 8);
+    println!("Eq. 3 worked example (paper §II-B):");
+    println!(
+        "  GPT-2 Medium, fp16, L_seq=2048, B=8  ->  {:.2} GB (paper: ~1.61 GB)",
+        gb(bytes)
+    );
+    println!(
+        "  model weights: {:.2} GB  ->  cache/model ratio {:.2}x (paper: ~2.33x)",
+        gb(med.weight_bytes()),
+        bytes as f64 / med.weight_bytes() as f64
+    );
+
+    // --- plan explorer over a paper-scale model -------------------------
+    let spec = match args.str("model", "gpt2-774m").as_str() {
+        "tinyllama-1.1b" => tinyllama_1_1b(),
+        _ => gpt2_774m(),
+    };
+    println!("\nplan explorer — {} (fp16 serving)", spec.name);
+
+    show_plan(&spec, "baseline", &CompressionPlan::none(spec.n_layer, spec.n_kv_head));
+    show_plan(
+        &spec,
+        "AE on half the layers",
+        &CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2),
+    );
+    show_plan(
+        &spec,
+        "AE on all layers",
+        &CompressionPlan::ae_first_layers(&spec, spec.n_layer),
+    );
+    show_plan(
+        &spec,
+        "AE everywhere + int8 latents",
+        &CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant(),
+    );
+    let sel = Selection::all_alternating(spec.n_layer, spec.n_kv_head, true, true);
+    show_plan(
+        &spec,
+        "all K+V heads reused on alternating layers",
+        &with_selection(CompressionPlan::none(spec.n_layer, spec.n_kv_head), &sel),
+    );
+    let combined = with_selection(
+        CompressionPlan::ae_first_layers(&spec, spec.n_layer),
+        &Selection::all_alternating(spec.n_layer, spec.n_kv_head, true, false),
+    );
+    show_plan(&spec, "combined: AE + alternating K reuse", &combined);
+}

@@ -1,0 +1,502 @@
+//! paper_repro — regenerate every table and figure of the KV-CAR paper
+//! on the substituted substrate (DESIGN.md §3,§6).
+//!
+//!   cargo run --release --example paper_repro -- <cmd> [--fast]
+//!
+//!   table2   AE compression: ppl (wiki, c4) + 0-shot acc (piqa, wino)
+//!            for both models, baseline vs compressed, with savings
+//!   table3   head replacement on gpt2t/wiki at six selection levels
+//!   table4   heads-only vs heads+AE (wiki ppl, piqa acc)
+//!   table5   piqa acc: Base / AE / AE+Int8 for both models
+//!   fig2     A40 OOM frontier, paper-scale GPT-2 774M
+//!   fig3     A40 OOM frontier, paper-scale TinyLlama 1.1B
+//!   all      everything above in sequence
+//!
+//! Absolute numbers use the tiny trained-from-scratch models, so they are
+//! not the paper's; the claims under reproduction are the *shapes*: who
+//! wins, roughly by how much, and where the cliffs are.  Paper values are
+//! printed alongside for comparison.  Checkpoints cache under
+//! checkpoints/ so repeated invocations skip training.
+
+use anyhow::Result;
+use kvcar::compress::planner::{to_masks, with_selection};
+use kvcar::compress::similarity::{HeadDistances, Selection};
+use kvcar::data::corpus;
+use kvcar::data::tasks::Task;
+use kvcar::eval::{perplexity, zero_shot};
+use kvcar::memsim::{frontier, FigureCompression, GpuModel, FIGURE_BATCHES};
+use kvcar::model::memory::{plan_savings, CompressionPlan};
+use kvcar::model::ModelSpec;
+use kvcar::runtime::{artifacts_dir, Engine, Store};
+use kvcar::train::{StageLog, TrainConfig, Trainer};
+use kvcar::util::cli::Args;
+use std::path::PathBuf;
+
+struct Steps {
+    pretrain: usize,
+    stage1: usize,
+    stage2: usize,
+    reuse_ft: usize,
+    eval_batches: usize,
+    zs_items: usize,
+}
+
+impl Steps {
+    fn new(fast: bool) -> Steps {
+        if fast {
+            Steps {
+                pretrain: 80,
+                stage1: 10,
+                stage2: 20,
+                reuse_ft: 12,
+                eval_batches: 3,
+                zs_items: 60,
+            }
+        } else {
+            Steps {
+                pretrain: 800,
+                stage1: 30,
+                stage2: 60,
+                reuse_ft: 40,
+                eval_batches: 8,
+                zs_items: 200,
+            }
+        }
+    }
+}
+
+struct Pipeline {
+    engine: Engine,
+    model: String,
+    spec: ModelSpec,
+    ckpt: PathBuf,
+    steps: Steps,
+}
+
+impl Pipeline {
+    fn new(model: &str, steps: Steps) -> Result<Pipeline> {
+        let engine = Engine::new(&artifacts_dir())?;
+        let spec = ModelSpec::from_manifest(&engine.manifest.raw, model)?;
+        Ok(Pipeline {
+            engine,
+            model: model.to_string(),
+            spec,
+            ckpt: PathBuf::from("checkpoints"),
+            steps,
+        })
+    }
+
+    fn have(&self, tag: &str) -> bool {
+        self.ckpt
+            .join(format!("{}_{tag}.bin", self.model))
+            .exists()
+    }
+
+    fn quiet_cfg() -> TrainConfig {
+        TrainConfig {
+            verbose: false,
+            ..Default::default()
+        }
+    }
+
+    /// Pretrain (once) and stage-1 AEs on every layer (once).
+    fn ensure_base(&mut self) -> Result<()> {
+        if !self.have("pretrained") {
+            println!("[{}] pretraining {} steps ...", self.model, self.steps.pretrain);
+            let mut tr = Trainer::new(&mut self.engine, &self.model, Self::quiet_cfg())?;
+            let mut c = corpus::wiki(0);
+            let log = tr.pretrain(&mut c, self.steps.pretrain)?;
+            println!("  loss {:.3} -> {:.3}", log.first(), log.last());
+            tr.checkpoint(&self.ckpt, "pretrained")?;
+        }
+        if !self.have("ae1") {
+            println!("[{}] Alg.1 stage 1 on all layers ...", self.model);
+            let mut tr = Trainer::new(&mut self.engine, &self.model, Self::quiet_cfg())?;
+            tr.restore(&self.ckpt, "pretrained")?;
+            let mut c = corpus::wiki(1);
+            let layers: Vec<usize> = (0..self.spec.n_layer).collect();
+            let logs = tr.ae_stage1(&mut c, &layers, self.steps.stage1)?;
+            let rec0: f32 = logs.iter().map(StageLog::first).sum::<f32>() / logs.len() as f32;
+            let rec1: f32 = logs.iter().map(StageLog::last).sum::<f32>() / logs.len() as f32;
+            println!("  mean per-layer loss {rec0:.3} -> {rec1:.3}");
+            tr.checkpoint(&self.ckpt, "ae1")?;
+        }
+        Ok(())
+    }
+
+    /// Stage-2 joint finetune for "AE on first k layers"; cached per k.
+    fn ensure_ae_k(&mut self, k: usize) -> Result<String> {
+        let tag = format!("ae_k{k}");
+        if !self.have(&tag) {
+            self.ensure_base()?;
+            let mut tr = Trainer::new(&mut self.engine, &self.model, Self::quiet_cfg())?;
+            tr.restore(&self.ckpt, "ae1")?;
+            let mut c = corpus::wiki(2);
+            let layers: Vec<usize> = (0..k).collect();
+            tr.ae_stage2(&mut c, &layers, self.steps.stage2)?;
+            tr.checkpoint(&self.ckpt, &tag)?;
+        }
+        Ok(tag)
+    }
+
+    /// Continued-training control: the reuse-finetune step with inert
+    /// masks, so reuse rows are compared against a baseline that saw the
+    /// same extra optimization steps (otherwise finetuning itself would
+    /// mask the compression penalty).
+    fn ensure_ctrl(&mut self) -> Result<()> {
+        let plan = self.none_plan();
+        self.ensure_reuse("ctrl", &plan, "pretrained")
+    }
+
+    /// Reuse finetune under a fixed plan; cached per tag.
+    fn ensure_reuse(&mut self, tag: &str, plan: &CompressionPlan, from: &str) -> Result<()> {
+        if !self.have(tag) {
+            let mut tr = Trainer::new(&mut self.engine, &self.model, Self::quiet_cfg())?;
+            tr.restore(&self.ckpt, from)?;
+            let mut c = corpus::wiki(3);
+            tr.reuse_finetune(&mut c, &to_masks(plan), self.steps.reuse_ft)?;
+            tr.checkpoint(&self.ckpt, tag)?;
+        }
+        Ok(())
+    }
+
+    fn store_for(&mut self, tag: &str) -> Result<Store> {
+        let mut store = Store::new();
+        self.engine.load_params(&self.model, &mut store)?;
+        store.load_params(
+            &self.ckpt.join(format!("{}_{tag}.bin", self.model)),
+            &self.ckpt.join(format!("{}_{tag}.json", self.model)),
+        )?;
+        Ok(store)
+    }
+
+    fn ppl(&mut self, tag: &str, dataset: &str, plan: &CompressionPlan) -> Result<f64> {
+        let mut store = self.store_for(tag)?;
+        let mut c = corpus::by_name(dataset, 77).unwrap();
+        let batches = self.steps.eval_batches;
+        perplexity(
+            &mut self.engine,
+            &mut store,
+            &self.spec.clone(),
+            &self.model.clone(),
+            &mut c,
+            batches,
+            &to_masks(plan),
+        )
+    }
+
+    fn acc(&mut self, tag: &str, task: Task, plan: &CompressionPlan) -> Result<f64> {
+        let mut store = self.store_for(tag)?;
+        let items = self.steps.zs_items;
+        let r = zero_shot(
+            &mut self.engine,
+            &mut store,
+            &self.spec.clone(),
+            &self.model.clone(),
+            task,
+            items,
+            77,
+            &to_masks(plan),
+        )?;
+        Ok(r.accuracy())
+    }
+
+    fn head_distances(&mut self, tag: &str) -> Result<HeadDistances> {
+        let mut tr = Trainer::new(&mut self.engine, &self.model, Self::quiet_cfg())?;
+        tr.restore(&self.ckpt, tag)?;
+        let mut c = corpus::wiki(5);
+        tr.analyze_heads(&mut c, 3)
+    }
+
+    fn none_plan(&self) -> CompressionPlan {
+        CompressionPlan::none(self.spec.n_layer, self.spec.n_kv_head)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table II
+// ---------------------------------------------------------------------------
+
+fn table2(fast: bool) -> Result<()> {
+    println!("\n================ TABLE II — autoencoder KV compression ================");
+    println!(
+        "{:<12} {:<10} {:<11} {:>9} {:>12} {:>9}   paper",
+        "model", "benchmark", "metric", "baseline", "compressed", "savings"
+    );
+    // compressed layer counts scaled from the paper's fractions
+    // (gpt2: 10/12 wiki, 4/12 c4, 10/12 piqa, 10/12 wino ->
+    //  gpt2t 8L: 7, 3, 7, 7 ; tinyllama 22L: 11, 6, 5, 22 ->
+    //  tinyllama_t 6L: 3, 2, 1, 6)
+    let cases: [(&str, [(usize, &str); 4], [&str; 4]); 2] = [
+        (
+            "gpt2t",
+            [(7, "wiki"), (3, "c4"), (7, "piqa"), (7, "wino")],
+            [
+                "21.4 -> 23.3 (41.6%)",
+                "34.61 -> 37.3 (25%)",
+                "0.6262 -> 0.6055 (41.6%)",
+                "0.5083 -> 0.5067 (41.6%)",
+            ],
+        ),
+        (
+            "tinyllama_t",
+            [(3, "wiki"), (2, "c4"), (1, "piqa"), (6, "wino")],
+            [
+                "10.29 -> 12.33 (25%)",
+                "15.69 -> 16.02 (13.6%)",
+                "0.6485 -> 0.6322 (11.4%)",
+                "0.5241 -> 0.5130 (50%)",
+            ],
+        ),
+    ];
+    for (model, rows, paper) in cases {
+        let mut p = Pipeline::new(model, Steps::new(fast))?;
+        p.ensure_base()?;
+        for ((k, bench), paper_note) in rows.iter().zip(paper.iter()) {
+            let tag = p.ensure_ae_k(*k)?;
+            let plan_c = CompressionPlan::ae_first_layers(&p.spec, *k);
+            let plan_0 = p.none_plan();
+            let savings = plan_savings(&p.spec, &plan_c) * 100.0;
+            match *bench {
+                "wiki" | "c4" => {
+                    let base = p.ppl(&tag, bench, &plan_0)?;
+                    let comp = p.ppl(&tag, bench, &plan_c)?;
+                    println!(
+                        "{model:<12} {bench:<10} {:<11} {base:>9.3} {:>12} {savings:>8.1}%   {paper_note}",
+                        "perplexity",
+                        format!("{comp:.3} ({k}L)"),
+                    );
+                }
+                task => {
+                    let t = Task::by_name(task).unwrap();
+                    let base = p.acc(&tag, t, &plan_0)?;
+                    let comp = p.acc(&tag, t, &plan_c)?;
+                    println!(
+                        "{model:<12} {bench:<10} {:<11} {base:>9.4} {:>12} {savings:>8.1}%   {paper_note}",
+                        "accuracy",
+                        format!("{comp:.4} ({k}L)"),
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table III
+// ---------------------------------------------------------------------------
+
+fn table3(fast: bool) -> Result<()> {
+    println!("\n========= TABLE III — head replacement (gpt2t on wiki-like) =========");
+    let mut p = Pipeline::new("gpt2t", Steps::new(fast))?;
+    p.ensure_base()?;
+    p.ensure_ctrl()?;
+    let base_ppl = p.ppl("ctrl", "wiki", &p.none_plan())?;
+    let (l, h) = (p.spec.n_layer, p.spec.n_kv_head);
+    let hd = p.head_distances("pretrained")?;
+
+    // paper selects 19K/25V/36KV of 144 heads; scaled to our 28
+    // reusable K heads that is ~4K, ~5V, ~4K+4V
+    let configs: Vec<(&str, Selection, &str)> = vec![
+        (
+            "all key and value",
+            Selection::all_alternating(l, h, true, true),
+            "21.4 -> 30.8 (50%)",
+        ),
+        (
+            "all key",
+            Selection::all_alternating(l, h, true, false),
+            "21.4 -> 26.4 (25%)",
+        ),
+        (
+            "all value",
+            Selection::all_alternating(l, h, false, true),
+            "21.4 -> 26.4 (25%)",
+        ),
+        ("4 key (top-sim)", hd.select_top(4, 0), "21.4 -> 21.8 (6.6%)"),
+        ("5 value (top-sim)", hd.select_top(0, 5), "21.4 -> 23.3 (8.7%)"),
+        (
+            "4 key + 4 value",
+            hd.select_top(4, 4),
+            "21.4 -> 23.9 (12.5%)",
+        ),
+    ];
+    println!(
+        "{:<22} {:>9} {:>11} {:>9}   paper",
+        "heads replaced", "baseline", "compressed", "savings"
+    );
+    for (name, sel, paper_note) in configs {
+        let plan = with_selection(p.none_plan(), &sel);
+        let tag = format!("reuse_{}", name.replace([' ', '+', '(', ')', '-'], "_"));
+        p.ensure_reuse(&tag, &plan, "pretrained")?;
+        let ppl = p.ppl(&tag, "wiki", &plan)?;
+        let savings = plan_savings(&p.spec, &plan) * 100.0;
+        println!(
+            "{name:<22} {base_ppl:>9.3} {ppl:>11.3} {savings:>8.1}%   {paper_note}"
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table IV
+// ---------------------------------------------------------------------------
+
+fn table4(fast: bool) -> Result<()> {
+    println!("\n==== TABLE IV — heads alone vs heads + autoencoders (gpt2t) ====");
+    let mut p = Pipeline::new("gpt2t", Steps::new(fast))?;
+    p.ensure_base()?;
+    p.ensure_ctrl()?;
+    let hd = p.head_distances("pretrained")?;
+    let sel = hd.select_top(4, 4);
+
+    // heads only
+    let plan_h = with_selection(p.none_plan(), &sel);
+    p.ensure_reuse("t4_heads", &plan_h, "pretrained")?;
+
+    // heads + AE on almost all layers (the paper's 47.85% configuration)
+    let k = p.spec.n_layer - 1;
+    let ae_tag = p.ensure_ae_k(k)?;
+    let plan_hae = with_selection(CompressionPlan::ae_first_layers(&p.spec, k), &sel);
+    p.ensure_reuse("t4_heads_ae", &plan_hae, &ae_tag)?;
+
+    let base_ppl = p.ppl("ctrl", "wiki", &p.none_plan())?;
+    let base_acc = p.acc("ctrl", Task::Piqa, &p.none_plan())?;
+    println!(
+        "{:<10} {:>10} {:>11} {:>9}   paper",
+        "dataset", "baseline", "compressed", "savings"
+    );
+    let rows = [
+        ("wiki", "t4_heads", &plan_h, true, "21.4 -> 23.9 (12.5%)"),
+        ("wiki", "t4_heads_ae", &plan_hae, true, "21.4 -> 23.9 (47.85%)"),
+        ("piqa", "t4_heads", &plan_h, false, "0.6262 -> 0.5892 (12.5%)"),
+        ("piqa", "t4_heads_ae", &plan_hae, false, "0.6262 -> 0.5936 (47.85%)"),
+    ];
+    for (ds, tag, plan, is_ppl, paper_note) in rows {
+        let savings = plan_savings(&p.spec, plan) * 100.0;
+        if is_ppl {
+            let v = p.ppl(tag, ds, plan)?;
+            println!(
+                "{ds:<10} {base_ppl:>10.3} {v:>11.3} {savings:>8.1}%   {paper_note}"
+            );
+        } else {
+            let v = p.acc(tag, Task::Piqa, plan)?;
+            println!(
+                "{ds:<10} {base_acc:>10.4} {v:>11.4} {savings:>8.1}%   {paper_note}"
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table V
+// ---------------------------------------------------------------------------
+
+fn table5(fast: bool) -> Result<()> {
+    println!("\n====== TABLE V — PIQA accuracy: Base / AE / AE+Int8 ======");
+    println!(
+        "{:<22} {:>8} {:>8} {:>8}   paper",
+        "model / task", "Base", "AE", "AE+Q"
+    );
+    let cases = [
+        ("gpt2t", 7usize, "0.6262 / 0.6055 / 0.6039"),
+        ("tinyllama_t", 1, "0.6485 / 0.6322 / 0.6219"),
+    ];
+    for (model, k, paper_note) in cases {
+        let mut p = Pipeline::new(model, Steps::new(fast))?;
+        p.ensure_base()?;
+        let tag = p.ensure_ae_k(k)?;
+        let plan0 = p.none_plan();
+        let plan_ae = CompressionPlan::ae_first_layers(&p.spec, k);
+        let plan_aeq = CompressionPlan::ae_first_layers(&p.spec, k).with_quant();
+        let base = p.acc(&tag, Task::Piqa, &plan0)?;
+        let ae = p.acc(&tag, Task::Piqa, &plan_ae)?;
+        let aeq = p.acc(&tag, Task::Piqa, &plan_aeq)?;
+        println!(
+            "{:<22} {base:>8.4} {ae:>8.4} {aeq:>8.4}   {paper_note}",
+            format!("{model} PIQA ({k}L)")
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figures 2 and 3
+// ---------------------------------------------------------------------------
+
+fn figure(spec: ModelSpec, deltas: &[(usize, FigureCompression, i64)]) {
+    let gpu = GpuModel::a40_for(&spec);
+    println!(
+        "\n==== max seq length vs batch before OOM — {} on A40 ====",
+        spec.name
+    );
+    print!("{:>8}", "batch");
+    for c in FigureCompression::all() {
+        print!("{:>18}", c.label());
+    }
+    println!();
+    for &b in &FIGURE_BATCHES {
+        print!("{b:>8}");
+        for c in FigureCompression::all() {
+            print!("{:>18}", frontier(&gpu, &spec, c.ratio(), &[b])[0].max_seq);
+        }
+        println!();
+    }
+    println!("paper's §V-B deltas vs ours:");
+    for &(b, c, paper_delta) in deltas {
+        let base = frontier(&gpu, &spec, FigureCompression::Baseline.ratio(), &[b])[0].max_seq;
+        let comp = frontier(&gpu, &spec, c.ratio(), &[b])[0].max_seq;
+        let ours = comp as i64 - base as i64;
+        println!(
+            "  batch {b:>3}, {:<16}: +{ours} tokens (paper: +{paper_delta})",
+            c.label()
+        );
+    }
+}
+
+fn fig2() {
+    figure(
+        kvcar::model::gpt2_774m(),
+        &[
+            (64, FigureCompression::Pct75, 5248),
+            (64, FigureCompression::Pct50, 2752),
+            (32, FigureCompression::Pct25, 1920),
+        ],
+    );
+}
+
+fn fig3() {
+    figure(
+        kvcar::model::tinyllama_1_1b(),
+        &[
+            (32, FigureCompression::Pct75, 3776),
+            (16, FigureCompression::Pct50, 2880),
+            (16, FigureCompression::Pct25, 1728),
+        ],
+    );
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let fast = args.bool("fast");
+    match args.command.as_deref() {
+        Some("table2") => table2(fast)?,
+        Some("table3") => table3(fast)?,
+        Some("table4") => table4(fast)?,
+        Some("table5") => table5(fast)?,
+        Some("fig2") => fig2(),
+        Some("fig3") => fig3(),
+        Some("all") | None => {
+            table2(fast)?;
+            table3(fast)?;
+            table4(fast)?;
+            table5(fast)?;
+            fig2();
+            fig3();
+        }
+        Some(other) => anyhow::bail!("unknown subcommand {other}"),
+    }
+    Ok(())
+}

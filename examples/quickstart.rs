@@ -1,0 +1,105 @@
+//! Quickstart: load the AOT artifacts, train the tiny GPT-2-style model
+//! briefly, then serve a few requests with KV-CAR compression on and
+//! report the measured cache savings.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+//!
+//! (~2 minutes on CPU.  For the full experiment driver see
+//! `examples/e2e_train_serve.rs`.)
+
+use kvcar::coordinator::{GenRequest, ServeConfig, ServingEngine};
+use kvcar::data::corpus;
+use kvcar::model::memory::{plan_savings, CompressionPlan};
+use kvcar::model::ModelSpec;
+use kvcar::runtime::{artifacts_dir, Engine};
+use kvcar::train::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let mut engine = Engine::new(&dir)?;
+    println!("loaded manifest: {} entry points", engine.manifest.entries.len());
+
+    // 1. pretrain the tiny base model on the wiki-like corpus
+    let mut trainer = Trainer::new(
+        &mut engine,
+        "gpt2t",
+        TrainConfig {
+            verbose: false,
+            ..Default::default()
+        },
+    )?;
+    let mut wiki = corpus::wiki(0);
+    println!("pretraining 120 steps ...");
+    let log = trainer.pretrain(&mut wiki, 120)?;
+    println!(
+        "  loss {:.3} -> {:.3}  ({} ms)",
+        log.first(),
+        log.last(),
+        log.wall_ms
+    );
+
+    // 2. train autoencoders on the first half of the layers (Alg. 1)
+    let spec = trainer.spec.clone();
+    let layers: Vec<usize> = (0..spec.n_layer / 2).collect();
+    println!("training autoencoders on layers {layers:?} ...");
+    trainer.ae_stage1(&mut wiki, &layers, 20)?;
+    let s2 = trainer.ae_stage2(&mut wiki, &layers, 40)?;
+    println!("  joint stage loss {:.3} -> {:.3}", s2.first(), s2.last());
+    let store = trainer.store.clone();
+
+    // 3. serve with the compressed cache
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2);
+    println!(
+        "serving with {} AE layers (modeled savings {:.1}%)",
+        plan.n_ae_layers(),
+        plan_savings(&spec, &plan) * 100.0
+    );
+    let cfg = ServeConfig {
+        plan,
+        max_batch: 4,
+        seed: 0,
+        per_step_reconstruct: false,
+    };
+    let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg)?;
+    serving.store = merge_params(serving.store, store);
+
+    let mut prompts = corpus::wiki(7);
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| GenRequest::greedy(i, &prompts.tokens(24), 24))
+        .collect();
+    let responses = serving.run(reqs)?;
+    for r in &responses {
+        println!(
+            "  req {} -> {:?}",
+            r.id,
+            String::from_utf8_lossy(&r.output)
+        );
+    }
+    serving.metrics.print_summary("quickstart");
+
+    // 4. measured vs modeled savings
+    let spec_check = ModelSpec::from_manifest(&serving.engine.manifest.raw, "gpt2t")?;
+    assert_eq!(spec_check.n_layer, spec.n_layer);
+    let ps = serving.cache.pool_stats();
+    println!(
+        "cache: peak {} bytes live, {} recycled allocations",
+        ps.peak_live_bytes, ps.recycles
+    );
+    Ok(())
+}
+
+/// Overlay trained params (base/, ae/) onto a serving store.
+fn merge_params(
+    mut into: kvcar::runtime::Store,
+    from: kvcar::runtime::Store,
+) -> kvcar::runtime::Store {
+    let names: Vec<String> = from
+        .names()
+        .filter(|n| n.starts_with("base/") || n.starts_with("ae/"))
+        .cloned()
+        .collect();
+    for n in names {
+        into.insert(&n, from.get(&n).unwrap().clone());
+    }
+    into
+}

@@ -1,0 +1,110 @@
+//! Serving-focused example: a Poisson-arrival workload through the
+//! threaded server front-end, baseline vs compressed, plus the paper's
+//! system claim at the coordinator level — under a fixed cache budget,
+//! compression admits a larger concurrent batch.
+//!
+//!   cargo run --release --example serving_batch [-- --requests 24]
+
+use anyhow::Result;
+use kvcar::coordinator::batcher::{plan_round, request_cache_bytes, BatcherConfig};
+use kvcar::coordinator::{GenRequest, Sampling, ServeConfig};
+use kvcar::data::corpus;
+use kvcar::model::memory::{plan_savings, CompressionPlan};
+use kvcar::model::ModelSpec;
+use kvcar::runtime::{artifacts_dir, Engine};
+use kvcar::server::Server;
+use kvcar::util::cli::Args;
+use kvcar::util::rng::Rng;
+use std::time::Duration;
+
+const MODEL: &str = "tinyllama_t";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize("requests", 24);
+    let max_new = args.usize("max-new", 24);
+    let rate_per_sec = args.f64("rate", 4.0);
+
+    let spec = {
+        let engine = Engine::new(&artifacts_dir())?;
+        ModelSpec::from_manifest(&engine.manifest.raw, MODEL)?
+    };
+
+    for (label, plan) in [
+        (
+            "baseline",
+            CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+        ),
+        (
+            "AE all layers + int8",
+            CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant(),
+        ),
+    ] {
+        println!(
+            "\n=== {label} (modeled savings {:.1}%) ===",
+            plan_savings(&spec, &plan) * 100.0
+        );
+        let server = Server::start(
+            artifacts_dir(),
+            MODEL.into(),
+            ServeConfig {
+                plan,
+                max_batch: 8,
+                seed: 9,
+                per_step_reconstruct: false,
+            },
+        )?;
+        let handle = server.handle();
+
+        // Poisson arrivals from client threads
+        let mut rng = Rng::new(13);
+        let mut prompts = corpus::wiki(13);
+        let mut joins = Vec::new();
+        let mut delay = Duration::ZERO;
+        for i in 0..n_requests {
+            delay += Duration::from_secs_f64(rng.exponential(rate_per_sec));
+            let req = GenRequest {
+                id: i as u64,
+                prompt: prompts.tokens(20),
+                max_new_tokens: max_new,
+                sampling: Sampling::Temperature(0.8),
+                stop_byte: None,
+            };
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                h.generate(req)
+            }));
+        }
+        let mut total_tokens = 0usize;
+        let mut worst_ms = 0.0f64;
+        for j in joins {
+            let r = j.join().unwrap()?;
+            total_tokens += r.generated_tokens;
+            let ms = (r.queue_latency + r.prefill_latency + r.decode_latency).as_secs_f64() * 1e3;
+            worst_ms = worst_ms.max(ms);
+        }
+        let m = handle.metrics()?;
+        m.print_summary(label);
+        println!("  client view: {total_tokens} tokens, worst request latency {worst_ms:.0} ms");
+        server.shutdown();
+    }
+
+    // --- admission-control view of the paper's batch-size claim ---------
+    println!("\n=== admission under a fixed cache budget (coordinator math) ===");
+    let base = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+    let comp = CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant();
+    let per_req = request_cache_bytes(&spec, &base, 20, max_new);
+    let budget = per_req * 3; // room for 3 uncompressed requests
+    let waiting: Vec<(usize, usize)> = (0..16).map(|_| (20, max_new)).collect();
+    for (label, plan) in [("baseline", &base), ("compressed", &comp)] {
+        let cfg = BatcherConfig {
+            max_batch: 16,
+            decode_batches: vec![1, 8],
+            cache_budget: Some(budget),
+        };
+        let p = plan_round(&cfg, &spec, plan, 0, 0, &waiting);
+        println!("  {label:<12} admits {:>2} concurrent requests", p.admit);
+    }
+    Ok(())
+}

@@ -1,0 +1,269 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); the rust runtime loads the
+results via ``HloModuleProto::from_text_file`` and never imports python.
+
+Interchange is HLO text, NOT ``lowered.compile()`` / ``.serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under ``artifacts/``:
+  manifest.json          — models, entry points, flattened input/output
+                           names + shapes + dtypes (what rust assembles)
+  {m}_{entry}.hlo.txt    — one per entry point per model
+  {m}_params.bin/.json   — randomly-initialized parameters (rust trains)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import params as P
+from . import train as T
+from .config import CONFIGS, ModelConfig, config_to_json
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_io(prefix, tree):
+    """[(name, shape, dtype)] for one named argument's pytree."""
+    out = []
+    for name, leaf in P.flat_entries(tree):
+        full = f"{prefix}/{name}" if name else prefix
+        out.append(
+            {
+                "name": full,
+                "shape": list(np.shape(leaf)),
+                "dtype": str(np.asarray(leaf).dtype)
+                if not hasattr(leaf, "dtype")
+                else str(leaf.dtype),
+            }
+        )
+    return out
+
+
+def lower_entry(fn, named_args, out_names, name, outdir, manifest):
+    """Lower ``fn(*values)`` and record flattened I/O in the manifest."""
+    values = [v for _, v in named_args]
+    # keep_unused: the manifest promises the full flattened input list; XLA
+    # must not prune arguments some entry point ignores (e.g. encode_kv
+    # never reads decoder weights).
+    lowered = jax.jit(fn, keep_unused=True).lower(*values)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(outdir, fname), "w") as f:
+        f.write(text)
+
+    inputs = []
+    for argname, v in named_args:
+        inputs.extend(_flat_io(argname, v))
+    out_tree = jax.eval_shape(fn, *values)
+    if not isinstance(out_tree, tuple):
+        out_tree = (out_tree,)
+    assert len(out_tree) == len(out_names), (name, len(out_tree), out_names)
+    outputs = []
+    for oname, sub in zip(out_names, out_tree):
+        outputs.extend(_flat_io(oname, sub))
+    manifest["entries"][name] = {
+        "file": fname,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+    print(f"  {name}: {len(text)//1024} KiB, {len(inputs)} in / {len(outputs)} out")
+
+
+def spec_tokens(b, s):
+    return jnp.zeros((b, s), jnp.int32)
+
+
+def spec_mask(b, s):
+    return jnp.ones((b, s), jnp.float32)
+
+
+def build_model(cfg: ModelConfig, outdir: str, manifest: dict, seed: int) -> None:
+    print(f"[{cfg.name}] init + lower")
+    params = P.init_params(cfg, seed)
+    base, ae = params["base"], params["ae"]
+    P.save_params(params, os.path.join(outdir, f"{cfg.name}_params.bin"),
+                  os.path.join(outdir, f"{cfg.name}_params.json"))
+
+    L, Hkv, S = cfg.n_layer, cfg.n_kv_head, cfg.max_seq
+    B = cfg.train_batch
+    kvd, dl = cfg.kv_dim, cfg.ae_latent
+    zl = jnp.zeros((L,), jnp.float32)
+    zlh = jnp.zeros((L, Hkv), jnp.float32)
+    scalar = jnp.float32(0.0)
+    i0 = jnp.int32(0)
+
+    mj = manifest["models"][cfg.name] = config_to_json(cfg)
+    mj["params_bin"] = f"{cfg.name}_params.bin"
+    mj["params_index"] = f"{cfg.name}_params.json"
+
+    low = lambda *a, **k: lower_entry(*a, outdir=outdir, manifest=manifest, **k)
+
+    # --- training steps -----------------------------------------------------
+    step_fn = T.make_train_step(cfg)
+    mb, vb = T.zeros_like_tree(base), T.zeros_like_tree(base)
+    low(
+        step_fn,
+        [("base", base), ("ae", ae), ("m", mb), ("v", vb), ("step", i0),
+         ("tokens", spec_tokens(B, S)), ("len_mask", spec_mask(B, S)),
+         ("lr", scalar)],
+        ["base", "m", "v", "step", "loss"],
+        name=f"{cfg.name}_train_step",
+    )
+
+    ae_fn = T.make_ae_train_step(cfg)
+    ma, va = T.zeros_like_tree(ae), T.zeros_like_tree(ae)
+    low(
+        ae_fn,
+        [("base", base), ("ae", ae), ("m", ma), ("v", va), ("step", i0),
+         ("tokens", spec_tokens(B, S)), ("len_mask", spec_mask(B, S)),
+         ("gmask", zl), ("lam", scalar), ("lr", scalar)],
+        ["ae", "m", "v", "step", "loss", "ce", "rec"],
+        name=f"{cfg.name}_ae_train_step",
+    )
+
+    rf_fn = T.make_reuse_ft_step(cfg)
+    low(
+        rf_fn,
+        [("base", base), ("ae", ae), ("m", mb), ("v", vb), ("step", i0),
+         ("tokens", spec_tokens(B, S)), ("len_mask", spec_mask(B, S)),
+         ("compress", zl), ("reuse_k", zlh), ("reuse_v", zlh),
+         ("lam", scalar), ("lr", scalar)],
+        ["base", "m", "v", "step", "loss", "ce", "rl1"],
+        name=f"{cfg.name}_reuse_ft_step",
+    )
+
+    # --- evaluation ----------------------------------------------------------
+    ev_fn = M.make_eval_loss(cfg)
+    ev = lambda base, ae, tokens, len_mask, compress, quant, reuse_k, reuse_v: ev_fn(
+        {"base": base, "ae": ae},
+        tokens,
+        len_mask,
+        {"compress": compress, "quant": quant, "reuse_k": reuse_k, "reuse_v": reuse_v},
+    )
+    low(
+        ev,
+        [("base", base), ("ae", ae), ("tokens", spec_tokens(cfg.eval_batch, S)),
+         ("len_mask", spec_mask(cfg.eval_batch, S)), ("compress", zl),
+         ("quant", scalar), ("reuse_k", zlh), ("reuse_v", zlh)],
+        ["nll", "ntok"],
+        name=f"{cfg.name}_eval_loss",
+    )
+
+    st_fn = M.make_kv_stats(cfg)
+    st = lambda base, ae, tokens, len_mask: st_fn(
+        {"base": base, "ae": ae}, tokens, len_mask
+    )
+    low(
+        st,
+        [("base", base), ("ae", ae), ("tokens", spec_tokens(cfg.eval_batch, S)),
+         ("len_mask", spec_mask(cfg.eval_batch, S))],
+        ["dk", "dv"],
+        name=f"{cfg.name}_kv_stats",
+    )
+
+    # --- serving -------------------------------------------------------------
+    pf_fn = M.make_prefill(cfg)
+    pf = lambda base, ae, tokens, len_mask, last, compress, quant, reuse_k, reuse_v: pf_fn(
+        {"base": base, "ae": ae},
+        tokens,
+        len_mask,
+        last,
+        {"compress": compress, "quant": quant, "reuse_k": reuse_k, "reuse_v": reuse_v},
+    )
+    low(
+        pf,
+        [("base", base), ("ae", ae), ("tokens", spec_tokens(1, S)),
+         ("len_mask", spec_mask(1, S)), ("last", i0), ("compress", zl),
+         ("quant", scalar), ("reuse_k", zlh), ("reuse_v", zlh)],
+        ["logits", "k_raw", "v_raw", "k_lat", "v_lat", "k_eff", "v_eff"],
+        name=f"{cfg.name}_prefill",
+    )
+
+    pfb_fn = M.make_prefill_base(cfg)
+    low(
+        pfb_fn,
+        [("base", base), ("tokens", spec_tokens(1, S)),
+         ("len_mask", spec_mask(1, S)), ("last", i0)],
+        ["logits", "k_raw", "v_raw"],
+        name=f"{cfg.name}_prefill_base",
+    )
+
+    for db in cfg.decode_batches:
+        ds_fn = M.make_decode_step(cfg, db)
+        ds = lambda base, ae, token, pos, k_cache, v_cache, compress, quant, reuse_k, reuse_v, _f=ds_fn: _f(
+            {"base": base, "ae": ae},
+            token,
+            pos,
+            k_cache,
+            v_cache,
+            {"compress": compress, "quant": quant, "reuse_k": reuse_k, "reuse_v": reuse_v},
+        )
+        low(
+            ds,
+            [("base", base), ("ae", ae), ("token", jnp.zeros((db,), jnp.int32)),
+             ("pos", jnp.zeros((db,), jnp.int32)),
+             ("k_cache", jnp.zeros((db, L, S, kvd), jnp.float32)),
+             ("v_cache", jnp.zeros((db, L, S, kvd), jnp.float32)),
+             ("compress", zl), ("quant", scalar),
+             ("reuse_k", zlh), ("reuse_v", zlh)],
+            ["logits", "k_lat", "v_lat", "k_raw", "v_raw", "k_eff", "v_eff"],
+            name=f"{cfg.name}_decode_step_b{db}",
+        )
+
+    ek_fn = M.make_encode_kv(cfg)
+    low(
+        ek_fn,
+        [("ae", ae), ("k_raw", jnp.zeros((L, S, kvd), jnp.float32)),
+         ("v_raw", jnp.zeros((L, S, kvd), jnp.float32))],
+        ["k_lat", "v_lat"],
+        name=f"{cfg.name}_encode_kv",
+    )
+
+    dk_fn = M.make_decode_kv(cfg)
+    low(
+        dk_fn,
+        [("ae", ae), ("k_lat", jnp.zeros((L, S, dl), jnp.float32)),
+         ("v_lat", jnp.zeros((L, S, dl), jnp.float32))],
+        ["k_rec", "v_rec"],
+        name=f"{cfg.name}_decode_kv",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--models", default="gpt2t,tinyllama_t")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"version": 1, "models": {}, "entries": {}}
+    for name in args.models.split(","):
+        build_model(CONFIGS[name], outdir, manifest, args.seed)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {outdir}/manifest.json ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

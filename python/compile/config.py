@@ -1,0 +1,116 @@
+"""Model and compression configuration for the KV-CAR reproduction.
+
+Two tiny-but-real model families mirror the paper's GPT-2 / TinyLlama
+pairing (see DESIGN.md §3 for the substitution rationale):
+
+* ``gpt2t``      — GPT-2-style: learned positional embeddings, LayerNorm,
+                   GELU MLP, MHA (n_kv_head == n_head), tied embeddings.
+* ``tinyllama_t``— TinyLlama-style: RoPE, RMSNorm, SwiGLU MLP, GQA
+                   (n_kv_head < n_head), tied embeddings.
+
+The paper-scale configs (``GPT2_774M``, ``TINYLLAMA_1_1B``) are used only
+by the rust memory simulator for Figs. 2-3; they are never instantiated
+as weights here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + KV-CAR hyper-parameters for one model."""
+
+    name: str
+    arch: str  # "gpt2" | "llama"
+    vocab: int
+    n_layer: int
+    d_model: int
+    n_head: int
+    n_kv_head: int
+    d_head: int
+    ffn_dim: int
+    max_seq: int
+    # --- KV-CAR autoencoder (paper §IV-A): kv_dim -> ae_hidden -> ae_latent
+    ae_hidden: int
+    ae_latent: int
+    # --- training shapes baked into the AOT'd step artifacts
+    train_batch: int = 8
+    eval_batch: int = 8
+    # decode artifacts are compiled per batch size
+    decode_batches: tuple = (1, 8)
+
+    @property
+    def kv_dim(self) -> int:
+        """Width of the K (or V) tensor that enters the cache per token."""
+        return self.n_kv_head * self.d_head
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_head * self.d_head
+
+    @property
+    def group_size(self) -> int:
+        """Query heads per KV head (1 for MHA, >1 for GQA)."""
+        assert self.n_head % self.n_kv_head == 0
+        return self.n_head // self.n_kv_head
+
+    @property
+    def latent_ratio(self) -> float:
+        """Per-layer KV-cache compression from the autoencoder alone."""
+        return self.ae_latent / self.kv_dim
+
+    def validate(self) -> "ModelConfig":
+        assert self.arch in ("gpt2", "llama"), self.arch
+        assert self.d_model == self.n_head * self.d_head
+        assert self.n_head % self.n_kv_head == 0
+        assert 0 < self.ae_latent < self.kv_dim
+        assert self.ae_hidden >= self.ae_latent
+        return self
+
+
+# Tiny trained-from-scratch stand-ins (DESIGN.md §3).  ae_latent = kv_dim/2
+# reproduces the paper's "compress key and value vectors by a factor of
+# two" setting.
+GPT2T = ModelConfig(
+    name="gpt2t",
+    arch="gpt2",
+    vocab=256,
+    n_layer=8,
+    d_model=128,
+    n_head=4,
+    n_kv_head=4,
+    d_head=32,
+    ffn_dim=512,
+    max_seq=128,
+    ae_hidden=96,
+    ae_latent=64,
+).validate()
+
+TINYLLAMA_T = ModelConfig(
+    name="tinyllama_t",
+    arch="llama",
+    vocab=256,
+    n_layer=6,
+    d_model=128,
+    n_head=4,
+    n_kv_head=2,
+    d_head=32,
+    ffn_dim=352,
+    max_seq=128,
+    ae_hidden=48,
+    ae_latent=32,
+).validate()
+
+CONFIGS = {c.name: c for c in (GPT2T, TINYLLAMA_T)}
+
+
+def config_to_json(cfg: ModelConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["kv_dim"] = cfg.kv_dim
+    d["q_dim"] = cfg.q_dim
+    d["group_size"] = cfg.group_size
+    d["decode_batches"] = list(cfg.decode_batches)
+    return d

@@ -1,0 +1,138 @@
+"""L2 profiling: static analysis of the lowered HLO artifacts.
+
+Parses the HLO text the AOT pipeline emits and reports, per entry point:
+op histogram, dot FLOPs per call (resolved through an instruction table,
+including inside while/fusion subcomputations), parameter and
+intermediate buffer bytes, and while-loop (scan) structure.  This is the
+"JAX tracer / HLO cost analysis" half of the performance pass
+(DESIGN.md §8); EXPERIMENTS.md §Perf quotes its output.
+
+Usage:
+    python -m compile.hlo_analysis [--artifacts ../artifacts] [--entry NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+
+# one instruction: "  name = <type> opname(operands...), attrs"
+INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?([\w.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\((.*)$"
+)
+SHAPE_RE = re.compile(r"(f32|s32|pred|u32|s8|bf16)\[([\d,]*)\]")
+
+
+def shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def first_shape(type_str: str):
+    """(dtype, dims list) of the first array shape in a type string."""
+    m = SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def analyze_text(text: str) -> dict:
+    ops = Counter()
+    # name -> dims (first shape of the result type; enough for dot args)
+    shapes: dict[str, list[int]] = {}
+    instrs = []
+    for line in text.splitlines():
+        m = INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        ops[op] += 1
+        fs = first_shape(type_str)
+        if fs:
+            shapes[name] = fs[1]
+        instrs.append((name, type_str, op, rest))
+
+    flops = 0
+    for name, type_str, op, rest in instrs:
+        if op != "dot":
+            continue
+        out = first_shape(type_str)
+        cm = re.search(r"lhs_contracting_dims=\{(\d+)\}", rest)
+        lhs_name = rest.split(",")[0].strip().lstrip("%")
+        lhs = shapes.get(lhs_name)
+        if out and cm and lhs:
+            cdim = int(cm.group(1))
+            if cdim < len(lhs):
+                flops += 2 * shape_elems(",".join(map(str, out[1]))) * lhs[cdim]
+
+    param_bytes = 0
+    inter_bytes = 0
+    for name, type_str, op, rest in instrs:
+        fs = first_shape(type_str)
+        if not fs:
+            continue
+        nbytes = shape_elems(",".join(map(str, fs[1]))) * (
+            4 if fs[0] in ("f32", "s32", "u32") else 2 if fs[0] == "bf16" else 1
+        )
+        if op == "parameter":
+            param_bytes += nbytes
+        else:
+            inter_bytes += nbytes
+
+    return {
+        "ops": dict(ops),
+        "total_ops": sum(ops.values()),
+        "dot_flops": flops,
+        "param_bytes": param_bytes,
+        "intermediate_bytes": inter_bytes,
+        "while_loops": ops.get("while", 0),
+        "dots": ops.get("dot", 0),
+        "fusible_elementwise": sum(
+            ops.get(k, 0)
+            for k in (
+                "add", "multiply", "subtract", "divide", "maximum", "minimum",
+                "exponential", "tanh", "rsqrt", "select", "compare",
+            )
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--entry", default=None, help="single entry point")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    man = json.load(open(os.path.join(args.artifacts, "manifest.json")))
+    entries = man["entries"]
+    names = [args.entry] if args.entry else sorted(entries)
+    results = {}
+    for name in names:
+        path = os.path.join(args.artifacts, entries[name]["file"])
+        results[name] = analyze_text(open(path).read())
+    if args.json:
+        print(json.dumps(results, indent=1))
+        return
+    print(
+        f"{'entry':<34}{'ops':>7}{'while':>7}{'dots':>6}{'MFLOP/iter':>12}"
+        f"{'params MiB':>12}{'fusible':>9}"
+    )
+    for name, r in results.items():
+        print(
+            f"{name:<34}{r['total_ops']:>7}{r['while_loops']:>7}{r['dots']:>6}"
+            f"{r['dot_flops'] / 1e6:>12.2f}{r['param_bytes'] / 2**20:>12.2f}"
+            f"{r['fusible_elementwise']:>9}"
+        )
+
+
+if __name__ == "__main__":
+    main()

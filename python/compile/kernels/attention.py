@@ -1,0 +1,131 @@
+"""Pallas attention kernels for the KV-CAR serving path.
+
+Two kernels, mirroring the paper's decode-phase dataflow (Fig. 1):
+
+* ``causal_attention`` — prefill: full causal self-attention, grid over
+  query heads.  On TPU each grid step streams one head's K/V panel
+  HBM->VMEM (the threadblock tiling a GPU flash kernel would use becomes
+  the BlockSpec over heads here; S<=128 keeps the SxS score tile at 64 KiB,
+  so no online-softmax pass is needed at this scale).
+* ``decode_attention`` — one query token against the (reconstructed) KV
+  cache, grid over query heads with a length mask — this is the kernel on
+  the rust hot path via the ``decode_step`` artifact.
+
+GQA is expressed in the index_map: query head h reads KV head
+``h // group_size``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _causal_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    # blocks: q [S, 1, dh], k/v [S, 1, dh], m [S] -> o [S, 1, dh]
+    q = q_ref[:, 0, :]
+    k = k_ref[:, 0, :]
+    v = v_ref[:, 0, :]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    neg = jnp.finfo(scores.dtype).min
+    keep = (cols <= rows) & (m_ref[...][None, :] > 0)
+    scores = jnp.where(keep, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_ref[:, 0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def causal_attention(q, k, v, length_mask, *, group_size: int = 1):
+    """q: [S, Hq, dh], k/v: [S, Hkv, dh], length_mask: [S] -> [S, Hq, dh]."""
+    s, hq, dh = q.shape
+    scale = 1.0 / (dh**0.5)
+    return pl.pallas_call(
+        functools.partial(_causal_kernel, scale=scale),
+        grid=(hq,),
+        in_specs=[
+            pl.BlockSpec((s, 1, dh), lambda h: (0, h, 0)),
+            pl.BlockSpec((s, 1, dh), lambda h, g=group_size: (0, h // g, 0)),
+            pl.BlockSpec((s, 1, dh), lambda h, g=group_size: (0, h // g, 0)),
+            pl.BlockSpec((s,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((s, 1, dh), lambda h: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, hq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, length_mask)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    # blocks: q [1, dh], k/v [S, 1, dh], m [S] -> o [1, dh]
+    q = q_ref[0, :]
+    k = k_ref[:, 0, :]
+    v = v_ref[:, 0, :]
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [S]
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(m_ref[...] > 0, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_ref[0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def decode_attention(q, k, v, length_mask, *, group_size: int = 1):
+    """q: [Hq, dh], k/v: [S, Hkv, dh], length_mask: [S] -> [Hq, dh]."""
+    hq, dh = q.shape
+    s = k.shape[0]
+    scale = 1.0 / (dh**0.5)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(hq,),
+        in_specs=[
+            pl.BlockSpec((1, dh), lambda h: (h, 0)),
+            pl.BlockSpec((s, 1, dh), lambda h, g=group_size: (0, h // g, 0)),
+            pl.BlockSpec((s, 1, dh), lambda h, g=group_size: (0, h // g, 0)),
+            pl.BlockSpec((s,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda h: (h, 0)),
+        out_shape=jax.ShapeDtypeStruct((hq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, length_mask)
+
+
+def _decode_batched_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, scale: float):
+    # blocks: q [1, 1, dh], k/v [1, S, 1, dh], m [1, S] -> o [1, 1, dh]
+    q = q_ref[0, 0, :]
+    k = k_ref[0, :, 0, :]
+    v = v_ref[0, :, 0, :]
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [S]
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(m_ref[0, :] > 0, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_ref[0, 0, :] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def decode_attention_batched(q, k, v, length_mask, *, group_size: int = 1):
+    """Batched decode attention — the rust serving hot path's kernel.
+
+    q: [B, Hq, dh], k/v: [B, S, Hkv, dh], length_mask: [B, S]
+    -> [B, Hq, dh].  Grid (B, Hq); each step streams one sequence's one
+    KV-head panel (S x dh) through VMEM.
+    """
+    b, hq, dh = q.shape
+    s = k.shape[1]
+    scale = 1.0 / (dh**0.5)
+    return pl.pallas_call(
+        functools.partial(_decode_batched_kernel, scale=scale),
+        grid=(b, hq),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda i, h, g=group_size: (i, 0, h // g, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda i, h, g=group_size: (i, 0, h // g, 0)),
+            pl.BlockSpec((1, s), lambda i, h: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda i, h: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, length_mask)

@@ -1,0 +1,87 @@
+"""Fused KV-CAR autoencoder Pallas kernel (paper §IV-A).
+
+One kernel evaluates a full autoencoder *half* — ``FC -> BatchNorm(stats) ->
+LeakyReLU -> FC`` — per row-block of tokens, so the intermediate hidden
+activation never leaves VMEM.  The encoder instance maps ``kv_dim ->
+ae_hidden -> ae_latent`` and the decoder ``ae_latent -> ae_hidden ->
+kv_dim``; both use inference-mode BatchNorm with running statistics (the
+EMA is maintained by the training step on the jnp path — kernels are
+inference-only, see ref.py docstring).
+
+VMEM per grid step (f32): bm*(In + H + Out) + In*H + H*Out + 4H + H + Out
+floats.  For the gpt2t encoder (In=128, H=96, Out=64, bm=128) that is
+~230 KiB; the weight tiles are resident across the row grid so on a real
+TPU the HBM traffic is one pass over the tokens, which is what makes the
+compress-on-store path cheap relative to the attention GEMMs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ae_half_kernel(
+    x_ref, w1_ref, b1_ref, g_ref, be_ref, mu_ref, var_ref, w2_ref, b2_ref, o_ref
+):
+    h = jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+    h = h + b1_ref[...]
+    inv = jax.lax.rsqrt(var_ref[...] + ref.BN_EPS)
+    h = (h - mu_ref[...]) * inv * g_ref[...] + be_ref[...]
+    h = jnp.where(h >= 0, h, ref.LEAKY_SLOPE * h)
+    o_ref[...] = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def ae_half(x, w1, b1, bn_g, bn_b, bn_mean, bn_var, w2, b2, *, bm: int = 128):
+    """Apply one autoencoder half to a batch of vectors.
+
+    x: [M, In]; returns [M, Out].  M must be a multiple of ``bm`` (or
+    smaller than it, in which case the whole batch is one block).
+    """
+    m, d_in = x.shape
+    d_hidden = w1.shape[1]
+    d_out = w2.shape[1]
+    bm = m if m <= bm else bm
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    full = lambda *dims: pl.BlockSpec(dims, lambda i: (0,) * len(dims))
+    return pl.pallas_call(
+        _ae_half_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i: (i, 0)),
+            full(d_in, d_hidden),
+            full(d_hidden),
+            full(d_hidden),
+            full(d_hidden),
+            full(d_hidden),
+            full(d_hidden),
+            full(d_hidden, d_out),
+            full(d_out),
+        ],
+        out_specs=pl.BlockSpec((bm, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        interpret=True,
+    )(x, w1, b1, bn_g, bn_b, bn_mean, bn_var, w2, b2)
+
+
+def ae_half_from_dict(x, p, *, bm: int = 128):
+    """Dict-parameter convenience wrapper matching ``ref.ae_half_apply``."""
+    return ae_half(
+        x,
+        p["w1"],
+        p["b1"],
+        p["bn_g"],
+        p["bn_b"],
+        p["bn_mean"],
+        p["bn_var"],
+        p["w2"],
+        p["b2"],
+        bm=bm,
+    )

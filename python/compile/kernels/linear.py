@@ -1,0 +1,73 @@
+"""Tiled linear (matmul + bias) Pallas kernel.
+
+The workhorse GEMM used by the fused autoencoder kernel's building blocks
+and exercised directly by the kernel test-suite.  Tiling is expressed with
+BlockSpecs over (rows, cols, reduction) so the same kernel body targets the
+MXU on real TPUs; on this CPU image it always runs with ``interpret=True``
+(Mosaic custom-calls are not executable on the CPU PJRT plugin — see
+DESIGN.md §4).
+
+VMEM budget per grid step (f32): bm*bk + bk*bn + bm*bn + bn floats.  With
+the default 128x128x128 tiles that is 3*64 KiB + 512 B ≈ 192 KiB, well
+under the ~16 MiB/core VMEM of TPU v4/v5 and MXU-shaped (128x128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """Grid (rows, cols, k): accumulate x_tile @ w_tile into acc scratch."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...] + b_ref[...]
+
+
+def _pick(block: int, dim: int) -> int:
+    return dim if dim <= block else block
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def linear(x, w, b=None, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``x @ w + b`` with 2-D output. x: [M, K], w: [K, N], b: [N] or None."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if b is None:
+        b = jnp.zeros((n,), dtype=x.dtype)
+    bm, bn, bk = _pick(bm, m), _pick(bn, n), _pick(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        "tile sizes must divide dims",
+        (m, n, k),
+        (bm, bn, bk),
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((bn,), lambda i, j, ki: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,87 @@
+"""Eq. 4 int8 affine quantization as Pallas kernels.
+
+Per-vector (last axis) min/max affine quantization of latent KV vectors,
+exactly the formulation in the paper's §IV-C.  Elementwise VPU work; the
+grid blocks rows so the kernel composes with the autoencoder kernel's
+row-block schedule (on TPU the quant epilogue would fuse into the encoder
+kernel's flush — kept separate here so the rust cache manager can also
+call it standalone via the ``encode_kv``/``decode_kv`` artifacts).
+
+The quantized code is carried as f32 holding integer values in [-128, 127]:
+the PJRT interchange stays single-dtype and the rust cache packs it to real
+i8 bytes for storage (``rust/src/compress/quant.rs`` mirrors this exactly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import Q_LEVELS
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, z_ref):
+    x = x_ref[...]
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    scale = Q_LEVELS / jnp.maximum(xmax - xmin, 1e-8)
+    zp = -jnp.round(scale * xmin) - 128.0
+    q_ref[...] = jnp.clip(jnp.round(scale * x + zp), -128.0, 127.0)
+    s_ref[...] = scale[:, 0]
+    z_ref[...] = zp[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def quantize(x, *, bm: int = 256):
+    """x: [M, F] -> (q [M, F], scale [M], zeropoint [M])."""
+    m, f = x.shape
+    bm = m if m <= bm else bm
+    assert m % bm == 0
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, f), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, f), x.dtype),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+        ),
+        interpret=True,
+    )(x)
+
+
+def _dequant_kernel(q_ref, s_ref, z_ref, o_ref):
+    o_ref[...] = (q_ref[...] - z_ref[...][:, None]) / s_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def dequantize(q, scale, zeropoint, *, bm: int = 256):
+    """Inverse of :func:`quantize`."""
+    m, f = q.shape
+    bm = m if m <= bm else bm
+    assert m % bm == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, f), q.dtype),
+        interpret=True,
+    )(q, scale, zeropoint)
+
+
+def quant_dequant(x, *, bm: int = 256):
+    q, s, z = quantize(x, bm=bm)
+    return dequantize(q, s, z, bm=bm)

@@ -1,0 +1,199 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest
+(``python/tests/``) asserts allclose between the two across a hypothesis
+shape/seed sweep.  The differentiable L2 model (``compile.model``) is built
+on these refs so that training steps never need a Pallas VJP, while the
+inference entry points call the Pallas kernels and are verified equivalent
+through these same functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LEAKY_SLOPE = 0.01  # LeakyReLU negative slope (paper §IV-A autoencoder)
+BN_EPS = 1e-5
+Q_LEVELS = 255.0  # Eq. 4 int8 affine range
+
+
+# ---------------------------------------------------------------------------
+# basic blocks
+# ---------------------------------------------------------------------------
+
+
+def linear(x, w, b=None):
+    """x @ w (+ b). x: [..., In], w: [In, Out], b: [Out]."""
+    y = jnp.matmul(x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def rmsnorm(x, g, eps=1e-6):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def leaky_relu(x, slope=LEAKY_SLOPE):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (llama arch)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, d_head, base=10000.0):
+    """positions: [...]; returns (cos, sin) of shape [..., d_head//2]."""
+    half = d_head // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., H, d_head]; cos/sin: broadcastable [..., 1, d_head//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention (oracles for the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def causal_attention(q, k, v, *, group_size=1, length_mask=None):
+    """Causal self-attention.
+
+    q: [S, Hq, dh], k/v: [S, Hkv, dh]; GQA maps query head h -> kv head
+    h // group_size.  length_mask: [S] 1.0 for valid positions.
+    Returns [S, Hq, dh].
+    """
+    s, hq, dh = q.shape
+    kk = jnp.repeat(k, group_size, axis=1)  # [S, Hq, dh]
+    vv = jnp.repeat(v, group_size, axis=1)
+    scores = jnp.einsum("qhd,khd->hqk", q, kk) / jnp.sqrt(jnp.float32(dh))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(causal[None, :, :], scores, neg)
+    if length_mask is not None:
+        scores = jnp.where(length_mask[None, None, :] > 0, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, vv)
+
+
+def decode_attention(q, k, v, *, group_size=1, length_mask=None):
+    """Single-token decode attention.
+
+    q: [Hq, dh], k/v: [S, Hkv, dh], length_mask: [S] (1.0 = attendable,
+    must include the current position).  Returns [Hq, dh].
+    """
+    _, dh = q.shape
+    kk = jnp.repeat(k, group_size, axis=1)
+    vv = jnp.repeat(v, group_size, axis=1)
+    scores = jnp.einsum("hd,khd->hk", q, kk) / jnp.sqrt(jnp.float32(dh))
+    if length_mask is not None:
+        neg = jnp.finfo(scores.dtype).min
+        scores = jnp.where(length_mask[None, :] > 0, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hk,khd->hd", p, vv)
+
+
+# ---------------------------------------------------------------------------
+# KV-CAR autoencoder (paper §IV-A): FC -> BatchNorm -> LeakyReLU -> FC
+# ---------------------------------------------------------------------------
+
+
+def bn_apply(x, gamma, beta, mean, var, eps=BN_EPS):
+    """Inference-mode batch norm over the feature axis with given stats."""
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def bn_batch_stats(x):
+    """Batch statistics over all leading axes. x: [..., F] -> ([F], [F])."""
+    flat = x.reshape(-1, x.shape[-1])
+    return jnp.mean(flat, axis=0), jnp.var(flat, axis=0)
+
+
+def ae_half_apply(x, p, *, train=False):
+    """One autoencoder half (encoder or decoder): FC -> BN -> LeakyReLU -> FC.
+
+    ``p`` is a dict with w1, b1, bn_g, bn_b, bn_mean, bn_var, w2, b2.
+    Returns (y, (mean, var)) — the statistics actually used (batch stats in
+    train mode, running stats otherwise) so the caller can maintain the EMA.
+    """
+    h = linear(x, p["w1"], p["b1"])
+    if train:
+        mean, var = bn_batch_stats(h)
+    else:
+        mean, var = p["bn_mean"], p["bn_var"]
+    h = bn_apply(h, p["bn_g"], p["bn_b"], mean, var)
+    h = leaky_relu(h)
+    y = linear(h, p["w2"], p["b2"])
+    return y, (mean, var)
+
+
+def ae_encode(x, enc, *, train=False):
+    """[..., kv_dim] -> [..., ae_latent]."""
+    return ae_half_apply(x, enc, train=train)
+
+
+def ae_decode(z, dec, *, train=False):
+    """[..., ae_latent] -> [..., kv_dim]."""
+    return ae_half_apply(z, dec, train=train)
+
+
+def ae_roundtrip(x, enc, dec, *, train=False, quant=None):
+    """Encode -> (optional int8 sim) -> decode. Returns (recon, stats)."""
+    z, est = ae_encode(x, enc, train=train)
+    if quant is not None:
+        z = jnp.where(quant > 0, quant_dequant(z), z)
+    y, dst = ae_decode(z, dec, train=train)
+    return y, (est, dst)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 int8 affine quantization (per-vector over the last axis)
+# ---------------------------------------------------------------------------
+
+
+def quant_params(x):
+    """Per-row scale/zeropoint per Eq. 4. x: [..., F]."""
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    scale = Q_LEVELS / jnp.maximum(xmax - xmin, 1e-8)
+    zeropoint = -jnp.round(scale * xmin) - 128.0
+    return scale, zeropoint
+
+
+def quantize(x):
+    """Returns (q int8-valued f32 in [-128, 127], scale, zeropoint)."""
+    scale, zeropoint = quant_params(x)
+    q = jnp.clip(jnp.round(scale * x + zeropoint), -128.0, 127.0)
+    return q, scale, zeropoint
+
+
+def dequantize(q, scale, zeropoint):
+    return (q - zeropoint) / scale
+
+
+def quant_dequant(x):
+    q, s, z = quantize(x)
+    return dequantize(q, s, z)

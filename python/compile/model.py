@@ -1,0 +1,533 @@
+"""L2: the KV-CAR transformer forward pass and serving entry points.
+
+One scan-over-layers forward implements every paper mechanism behind
+runtime-controlled masks, so a *single* AOT artifact per entry point serves
+baseline and all compressed variants:
+
+* ``compress`` [L]        — per-layer AE round-trip of K/V at the cache
+                            boundary (paper §IV-A).
+* ``quant``    []         — Eq. 4 int8 sim applied to the latents.
+* ``reuse_k/v`` [L, Hkv]  — per-(layer, head) cross-layer reuse: head h of
+                            layer l reads layer l-1's *stored* tensor
+                            (paper §IV-A second optimization).  Row 0 must
+                            be zero.
+
+Cache-boundary semantics follow Fig. 1 exactly: a token's *own* K/V enters
+its layer's attention raw (concatenated after the decoded cache), while
+every *past* token is seen through the store transform (AE round-trip /
+reuse).  In the batched eval forward this shows up as a diagonal
+correction on the score/output matrices; ``decode_step`` gets it for free
+by appending the raw row to the reconstructed cache.
+
+Training-mode forwards run on the jnp refs (differentiable); the decode
+hot path (``decode_step``) runs on the Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import attention as attn_pallas
+from .kernels import autoencoder as ae_pallas
+from .kernels import ref
+
+MODES = ("base", "eval", "ae_train", "stats")
+
+
+# ---------------------------------------------------------------------------
+# attention with cache-boundary (self-raw) semantics
+# ---------------------------------------------------------------------------
+
+
+def _attn_eval(q, k_eff, v_eff, k_cur, v_cur, *, group_size, len_mask):
+    """Causal attention where past keys come from the store transform.
+
+    q: [B,S,Hq,dh]; k_eff/v_eff: stored (transformed) K/V [B,S,Hkv,dh];
+    k_cur/v_cur: what each token's own position contributes to *its own*
+    layer's attention.  len_mask: [B,S].
+    """
+    b, s, hq, dh = q.shape
+    g = group_size
+    rep = lambda x: jnp.repeat(x, g, axis=2)
+    kk, vv, kc, vc = rep(k_eff), rep(v_eff), rep(k_cur), rep(v_cur)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk) * scale
+    self_scores = jnp.einsum("bqhd,bqhd->bhq", q, kc) * scale
+    eye = jnp.eye(s, dtype=scores.dtype)
+    scores = scores * (1.0 - eye) + self_scores[..., None] * eye
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    # The diagonal stays attendable even at padded positions so padded rows
+    # never softmax over an all-masked set (NaN poison through 0*NaN).
+    keep = causal & ((len_mask[:, None, None, :] > 0) | eye.astype(bool))
+    scores = jnp.where(keep, scores, jnp.finfo(scores.dtype).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vv)
+    p_diag = jnp.diagonal(p, axis1=-2, axis2=-1)  # [B,Hq,S]
+    out = out + jnp.einsum("bhq,bqhd->bqhd", p_diag, vc - vv)
+    return out
+
+
+def _masked_mean_l1(diff, len_mask):
+    """mean |diff| over valid positions. diff: [B,S,...], len_mask: [B,S]."""
+    red = tuple(range(2, diff.ndim))
+    per_pos = jnp.mean(jnp.abs(diff), axis=red)  # [B,S]
+    denom = jnp.maximum(jnp.sum(len_mask), 1.0)
+    return jnp.sum(per_pos * len_mask) / denom
+
+
+def _per_head_l1(k_raw, k_prev, len_mask):
+    """Mean |k_l - k_{l-1}| per KV head over valid positions -> [Hkv]."""
+    diff = jnp.mean(jnp.abs(k_raw - k_prev), axis=-1)  # [B,S,Hkv]
+    denom = jnp.maximum(jnp.sum(len_mask), 1.0)
+    return jnp.sum(diff * len_mask[:, :, None], axis=(0, 1)) / denom
+
+
+# ---------------------------------------------------------------------------
+# forward core (scan over layers)
+# ---------------------------------------------------------------------------
+
+_PER_LAYER_GPT2 = (
+    "wq wk wv wo bq bk bv bo ln1_g ln1_b ln2_g ln2_b "
+    "mlp_w1 mlp_b1 mlp_w2 mlp_b2"
+).split()
+_PER_LAYER_LLAMA = "wq wk wv wo rms1_g rms2_g w_gate w_up w_down".split()
+
+
+def per_layer_keys(cfg: ModelConfig):
+    return _PER_LAYER_GPT2 if cfg.arch == "gpt2" else _PER_LAYER_LLAMA
+
+
+def forward(cfg, params, tokens, len_mask, kvcfg, *, mode="eval", collect=()):
+    """Run the model; returns (logits [B,S,V], aux dict of per-layer ys).
+
+    kvcfg: {"compress": [L], "quant": [], "reuse_k": [L,Hkv],
+    "reuse_v": [L,Hkv]} — store transform skipped in mode "base"/"stats".
+    collect ⊆ {"kv_raw", "kv_lat", "kv_eff"} adds cache tensors to aux.
+    """
+    assert mode in MODES, mode
+    base, ae = params["base"], params["ae"]
+    b, s = tokens.shape
+    hkv, dh, g = cfg.n_kv_head, cfg.d_head, cfg.group_size
+    kvd = cfg.kv_dim
+
+    h = base["wte"][tokens]
+    positions = jnp.arange(s)
+    if cfg.arch == "gpt2":
+        h = h + base["wpe"][:s][None, :, :]
+        cos = sin = None
+    else:
+        cos, sin = ref.rope_angles(positions, dh)  # [S, dh/2]
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+
+    xs = {k: base[k] for k in per_layer_keys(cfg)}
+    xs["ae"] = ae
+    xs["compress"] = kvcfg["compress"]
+    xs["reuse_k"] = kvcfg["reuse_k"]
+    xs["reuse_v"] = kvcfg["reuse_v"]
+    quant = kvcfg["quant"]
+    transform = mode in ("eval", "ae_train")
+    bn_train = mode == "ae_train"
+
+    def body(carry, lp):
+        h, k_prev, v_prev = carry
+        if cfg.arch == "gpt2":
+            xn = ref.layernorm(h, lp["ln1_g"], lp["ln1_b"])
+            q = (xn @ lp["wq"] + lp["bq"]).reshape(b, s, cfg.n_head, dh)
+            k_raw = (xn @ lp["wk"] + lp["bk"]).reshape(b, s, hkv, dh)
+            v_raw = (xn @ lp["wv"] + lp["bv"]).reshape(b, s, hkv, dh)
+        else:
+            xn = ref.rmsnorm(h, lp["rms1_g"])
+            q = (xn @ lp["wq"]).reshape(b, s, cfg.n_head, dh)
+            k_raw = (xn @ lp["wk"]).reshape(b, s, hkv, dh)
+            v_raw = (xn @ lp["wv"]).reshape(b, s, hkv, dh)
+            q = ref.apply_rope(q, cos, sin)
+            k_raw = ref.apply_rope(k_raw, cos, sin)
+
+        aux = {}
+        kf = k_raw.reshape(b, s, kvd)
+        vf = v_raw.reshape(b, s, kvd)
+        if transform:
+            c = lp["compress"]
+            zk, (k_em, k_ev) = ref.ae_encode(kf, lp["ae"]["k"]["enc"], train=bn_train)
+            zv, (v_em, v_ev) = ref.ae_encode(vf, lp["ae"]["v"]["enc"], train=bn_train)
+            zk_q = jnp.where(quant > 0, ref.quant_dequant(zk), zk)
+            zv_q = jnp.where(quant > 0, ref.quant_dequant(zv), zv)
+            k_rec, (k_dm, k_dv) = ref.ae_decode(
+                zk_q, lp["ae"]["k"]["dec"], train=bn_train
+            )
+            v_rec, (v_dm, v_dv) = ref.ae_decode(
+                zv_q, lp["ae"]["v"]["dec"], train=bn_train
+            )
+            if bn_train:
+                # stats actually used this step, for the EMA (gated later
+                # by the per-layer grad mask in train.ae_train_step).
+                aux["bn"] = {
+                    "k": {"enc": (k_em, k_ev), "dec": (k_dm, k_dv)},
+                    "v": {"enc": (v_em, v_ev), "dec": (v_dm, v_dv)},
+                }
+            k_store = c * k_rec + (1.0 - c) * kf
+            v_store = c * v_rec + (1.0 - c) * vf
+            aux["l1_k"] = c * _masked_mean_l1(k_rec - kf, len_mask)
+            aux["l1_v"] = c * _masked_mean_l1(v_rec - vf, len_mask)
+            if "kv_lat" in collect:
+                aux["k_lat"] = zk
+                aux["v_lat"] = zv
+        else:
+            k_store, v_store = kf, vf
+            aux["l1_k"] = jnp.float32(0.0)
+            aux["l1_v"] = jnp.float32(0.0)
+
+        k_store_h = k_store.reshape(b, s, hkv, dh)
+        v_store_h = v_store.reshape(b, s, hkv, dh)
+
+        if mode == "stats":
+            aux["dk"] = _per_head_l1(k_raw, k_prev, len_mask)
+            aux["dv"] = _per_head_l1(v_raw, v_prev, len_mask)
+            carry_k, carry_v = k_raw, v_raw
+            k_eff, v_eff, k_cur, v_cur = k_store_h, v_store_h, k_raw, v_raw
+        else:
+            rk = lp["reuse_k"][None, None, :, None]
+            rv = lp["reuse_v"][None, None, :, None]
+            k_eff = rk * k_prev + (1.0 - rk) * k_store_h
+            v_eff = rv * v_prev + (1.0 - rv) * v_store_h
+            k_cur = rk * k_prev + (1.0 - rk) * k_raw
+            v_cur = rv * v_prev + (1.0 - rv) * v_raw
+            aux["l1_rk"] = _masked_mean_l1(rk * (k_prev - k_store_h), len_mask)
+            aux["l1_rv"] = _masked_mean_l1(rv * (v_prev - v_store_h), len_mask)
+            carry_k, carry_v = k_eff, v_eff
+
+        if "kv_raw" in collect:
+            aux["k_raw"] = kf
+            aux["v_raw"] = vf
+        if "kv_eff" in collect:
+            aux["k_eff"] = k_eff.reshape(b, s, kvd)
+            aux["v_eff"] = v_eff.reshape(b, s, kvd)
+
+        att = _attn_eval(
+            q, k_eff, v_eff, k_cur, v_cur, group_size=g, len_mask=len_mask
+        )
+        att = att.reshape(b, s, cfg.q_dim)
+        if cfg.arch == "gpt2":
+            h = h + att @ lp["wo"] + lp["bo"]
+            xn2 = ref.layernorm(h, lp["ln2_g"], lp["ln2_b"])
+            mlp = ref.gelu(xn2 @ lp["mlp_w1"] + lp["mlp_b1"])
+            h = h + mlp @ lp["mlp_w2"] + lp["mlp_b2"]
+        else:
+            h = h + att @ lp["wo"]
+            xn2 = ref.rmsnorm(h, lp["rms2_g"])
+            mlp = ref.silu(xn2 @ lp["w_gate"]) * (xn2 @ lp["w_up"])
+            h = h + mlp @ lp["w_down"]
+        return (h, carry_k, carry_v), aux
+
+    zeros_kv = jnp.zeros((b, s, hkv, dh), dtype=h.dtype)
+    (h, _, _), ys = jax.lax.scan(body, (h, zeros_kv, zeros_kv), xs)
+
+    if cfg.arch == "gpt2":
+        h = ref.layernorm(h, base["lnf_g"], base["lnf_b"])
+    else:
+        h = ref.rmsnorm(h, base["rmsf_g"])
+    logits = h @ base["wte"].T
+    return logits, ys
+
+
+# ---------------------------------------------------------------------------
+# losses / configs
+# ---------------------------------------------------------------------------
+
+
+def per_seq_nll(logits, tokens, len_mask):
+    """Next-token NLL summed per sequence. Returns (nll [B], ntok [B])."""
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = len_mask[:, 1:]
+    return -jnp.sum(ll * mask, axis=-1), jnp.sum(mask, axis=-1)
+
+
+def baseline_kvcfg(cfg: ModelConfig):
+    return {
+        "compress": jnp.zeros((cfg.n_layer,), jnp.float32),
+        "quant": jnp.float32(0.0),
+        "reuse_k": jnp.zeros((cfg.n_layer, cfg.n_kv_head), jnp.float32),
+        "reuse_v": jnp.zeros((cfg.n_layer, cfg.n_kv_head), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# entry points (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """(params, tokens [B,S], len_mask [B,S], kvcfg) -> (nll [B], ntok [B])."""
+
+    def eval_loss(params, tokens, len_mask, kvcfg):
+        logits, _ = forward(cfg, params, tokens, len_mask, kvcfg, mode="eval")
+        return per_seq_nll(logits, tokens, len_mask)
+
+    return eval_loss
+
+
+def make_kv_stats(cfg: ModelConfig):
+    """(params, tokens, len_mask) -> (dk [L,Hkv], dv [L,Hkv]); row 0 is the
+    (meaningless) distance to a zero carry and is ignored by rust."""
+
+    def kv_stats(params, tokens, len_mask):
+        _, ys = forward(
+            cfg, params, tokens, len_mask, baseline_kvcfg(cfg), mode="stats"
+        )
+        return ys["dk"], ys["dv"]
+
+    return kv_stats
+
+
+def make_prefill(cfg: ModelConfig):
+    """Prompt pass with store-transform semantics (matches eval ppl path).
+
+    (params, tokens [1,S], len_mask [1,S], last i32, kvcfg) ->
+    (logits_last [V], k_raw/v_raw [L,S,kvd], k_lat/v_lat [L,S,dl],
+     k_eff/v_eff [L,S,kvd])
+    """
+
+    def prefill(params, tokens, len_mask, last, kvcfg):
+        logits, ys = forward(
+            cfg,
+            params,
+            tokens,
+            len_mask,
+            kvcfg,
+            mode="eval",
+            collect=("kv_raw", "kv_lat", "kv_eff"),
+        )
+        squeeze = lambda a: a[:, 0]  # [L,1,S,*] -> [L,S,*]
+        return (
+            logits[0, last, :],
+            squeeze(ys["k_raw"]),
+            squeeze(ys["v_raw"]),
+            squeeze(ys["k_lat"]),
+            squeeze(ys["v_lat"]),
+            squeeze(ys["k_eff"]),
+            squeeze(ys["v_eff"]),
+        )
+
+    return prefill
+
+
+def make_prefill_base(cfg: ModelConfig):
+    """Baseline (uncompressed) prefill on the Pallas causal-attention
+    kernel — the serving fast path when no store transform is active.
+
+    (base_params, tokens [1,S], len_mask [1,S], last) ->
+    (logits_last [V], k_raw [L,S,kvd], v_raw [L,S,kvd])
+    """
+    b = 1
+    hkv, dh, kvd = cfg.n_kv_head, cfg.d_head, cfg.kv_dim
+
+    def prefill_base(base, tokens, len_mask, last):
+        s = tokens.shape[1]
+        h = base["wte"][tokens]
+        if cfg.arch == "gpt2":
+            h = h + base["wpe"][:s][None, :, :]
+            cos = sin = None
+        else:
+            cos, sin = ref.rope_angles(jnp.arange(s), dh)
+            cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+
+        xs = {k: base[k] for k in per_layer_keys(cfg)}
+
+        def body(h, lp):
+            if cfg.arch == "gpt2":
+                xn = ref.layernorm(h, lp["ln1_g"], lp["ln1_b"])
+                q = (xn @ lp["wq"] + lp["bq"]).reshape(b, s, cfg.n_head, dh)
+                k = (xn @ lp["wk"] + lp["bk"]).reshape(b, s, hkv, dh)
+                v = (xn @ lp["wv"] + lp["bv"]).reshape(b, s, hkv, dh)
+            else:
+                xn = ref.rmsnorm(h, lp["rms1_g"])
+                q = (xn @ lp["wq"]).reshape(b, s, cfg.n_head, dh)
+                k = (xn @ lp["wk"]).reshape(b, s, hkv, dh)
+                v = (xn @ lp["wv"]).reshape(b, s, hkv, dh)
+                q = ref.apply_rope(q, cos, sin)
+                k = ref.apply_rope(k, cos, sin)
+            att = attn_pallas.causal_attention(
+                q[0], k[0], v[0], len_mask[0], group_size=cfg.group_size
+            )[None]
+            att = att.reshape(b, s, cfg.q_dim)
+            if cfg.arch == "gpt2":
+                h = h + att @ lp["wo"] + lp["bo"]
+                xn2 = ref.layernorm(h, lp["ln2_g"], lp["ln2_b"])
+                mlp = ref.gelu(xn2 @ lp["mlp_w1"] + lp["mlp_b1"])
+                h = h + mlp @ lp["mlp_w2"] + lp["mlp_b2"]
+            else:
+                h = h + att @ lp["wo"]
+                xn2 = ref.rmsnorm(h, lp["rms2_g"])
+                mlp = ref.silu(xn2 @ lp["w_gate"]) * (xn2 @ lp["w_up"])
+                h = h + mlp @ lp["w_down"]
+            return h, (k.reshape(b, s, kvd)[0], v.reshape(b, s, kvd)[0])
+
+        h, (ks, vs) = jax.lax.scan(body, h, xs)
+        if cfg.arch == "gpt2":
+            h = ref.layernorm(h, base["lnf_g"], base["lnf_b"])
+        else:
+            h = ref.rmsnorm(h, base["rmsf_g"])
+        logits = h @ base["wte"].T
+        return logits[0, last, :], ks, vs
+
+    return prefill_base
+
+
+def make_decode_step(cfg: ModelConfig, batch: int):
+    """One decode step over the reconstructed effective cache (Pallas path).
+
+    (params, token [B], pos [B], k_cache [B,L,S,kvd], v_cache, kvcfg) ->
+    (logits [B,V],
+     k_lat/v_lat [B,L,dl]      — latents to store for compressed layers,
+     k_raw/v_raw [B,L,kvd]     — raw rows to store for uncompressed layers,
+     k_eff/v_eff [B,L,kvd]     — reuse-resolved stored rows: what rust
+                                  appends to the effective cache buffers)
+
+    Dataflow per the paper's Fig. 1 decode phase: the cache holds decoded
+    (reconstructed) past K/V; the current token's raw row is written at
+    ``pos`` before attention (decoded-past + raw-current concatenation).
+    """
+    b = batch
+    hkv, dh, kvd, s = cfg.n_kv_head, cfg.d_head, cfg.kv_dim, cfg.max_seq
+
+    def decode_step(params, token, pos, k_cache, v_cache, kvcfg):
+        base, ae = params["base"], params["ae"]
+        quant = kvcfg["quant"]
+        h = base["wte"][token]  # [B,D]
+        if cfg.arch == "gpt2":
+            h = h + base["wpe"][pos]
+            cos = sin = None
+        else:
+            cos, sin = ref.rope_angles(pos, dh)  # [B, dh/2]
+            cos, sin = cos[:, None, :], sin[:, None, :]
+
+        xs = {k: base[k] for k in per_layer_keys(cfg)}
+        xs["ae"] = ae
+        xs["compress"] = kvcfg["compress"]
+        xs["reuse_k"] = kvcfg["reuse_k"]
+        xs["reuse_v"] = kvcfg["reuse_v"]
+        xs["k_cache"] = jnp.transpose(k_cache, (1, 0, 2, 3))  # [L,B,S,kvd]
+        xs["v_cache"] = jnp.transpose(v_cache, (1, 0, 2, 3))
+        att_mask = (
+            jax.lax.broadcasted_iota(jnp.int32, (b, s), 1) <= pos[:, None]
+        ).astype(jnp.float32)
+
+        def body(carry, lp):
+            h, k_sc_prev, v_sc_prev = carry  # [B,Hkv,dh] prev stored-current
+            if cfg.arch == "gpt2":
+                xn = ref.layernorm(h, lp["ln1_g"], lp["ln1_b"])
+                q = (xn @ lp["wq"] + lp["bq"]).reshape(b, cfg.n_head, dh)
+                k_raw = (xn @ lp["wk"] + lp["bk"]).reshape(b, hkv, dh)
+                v_raw = (xn @ lp["wv"] + lp["bv"]).reshape(b, hkv, dh)
+            else:
+                xn = ref.rmsnorm(h, lp["rms1_g"])
+                q = (xn @ lp["wq"]).reshape(b, cfg.n_head, dh)
+                k_raw = (xn @ lp["wk"]).reshape(b, hkv, dh)
+                v_raw = (xn @ lp["wv"]).reshape(b, hkv, dh)
+                q = ref.apply_rope(q, cos, sin)
+                k_raw = ref.apply_rope(k_raw, cos, sin)
+
+            kf = k_raw.reshape(b, kvd)
+            vf = v_raw.reshape(b, kvd)
+            # store transform on the Pallas AE kernels (inference BN)
+            zk = ae_pallas.ae_half_from_dict(kf, lp["ae"]["k"]["enc"])
+            zv = ae_pallas.ae_half_from_dict(vf, lp["ae"]["v"]["enc"])
+            zk_q = jnp.where(quant > 0, ref.quant_dequant(zk), zk)
+            zv_q = jnp.where(quant > 0, ref.quant_dequant(zv), zv)
+            k_rec = ae_pallas.ae_half_from_dict(zk_q, lp["ae"]["k"]["dec"])
+            v_rec = ae_pallas.ae_half_from_dict(zv_q, lp["ae"]["v"]["dec"])
+            c = lp["compress"]
+            k_store = (c * k_rec + (1.0 - c) * kf).reshape(b, hkv, dh)
+            v_store = (c * v_rec + (1.0 - c) * vf).reshape(b, hkv, dh)
+
+            rk = lp["reuse_k"][None, :, None]
+            rv = lp["reuse_v"][None, :, None]
+            k_cur = rk * k_sc_prev + (1.0 - rk) * k_raw  # attention row
+            v_cur = rv * v_sc_prev + (1.0 - rv) * v_raw
+            k_sc = rk * k_sc_prev + (1.0 - rk) * k_store  # stored row
+            v_sc = rv * v_sc_prev + (1.0 - rv) * v_store
+
+            # write the current row into the effective cache at pos
+            kc = lp["k_cache"].reshape(b, s, hkv, dh)
+            vc = lp["v_cache"].reshape(b, s, hkv, dh)
+            write = jax.vmap(
+                lambda buf, row, p: jax.lax.dynamic_update_slice(
+                    buf, row[None], (p, 0, 0)
+                )
+            )
+            kc = write(kc, k_cur, pos)
+            vc = write(vc, v_cur, pos)
+
+            att = attn_pallas.decode_attention_batched(
+                q, kc, vc, att_mask, group_size=cfg.group_size
+            )
+            att = att.reshape(b, cfg.q_dim)
+            if cfg.arch == "gpt2":
+                h = h + att @ lp["wo"] + lp["bo"]
+                xn2 = ref.layernorm(h, lp["ln2_g"], lp["ln2_b"])
+                mlp = ref.gelu(xn2 @ lp["mlp_w1"] + lp["mlp_b1"])
+                h = h + mlp @ lp["mlp_w2"] + lp["mlp_b2"]
+            else:
+                h = h + att @ lp["wo"]
+                xn2 = ref.rmsnorm(h, lp["rms2_g"])
+                mlp = ref.silu(xn2 @ lp["w_gate"]) * (xn2 @ lp["w_up"])
+                h = h + mlp @ lp["w_down"]
+            ys = (zk, zv, kf, vf, k_sc.reshape(b, kvd), v_sc.reshape(b, kvd))
+            return (h, k_sc, v_sc), ys
+
+        zeros_cur = jnp.zeros((b, hkv, dh), dtype=h.dtype)
+        (h, _, _), ys = jax.lax.scan(body, (h, zeros_cur, zeros_cur), xs)
+        if cfg.arch == "gpt2":
+            h = ref.layernorm(h, base["lnf_g"], base["lnf_b"])
+        else:
+            h = ref.rmsnorm(h, base["rmsf_g"])
+        logits = h @ base["wte"].T  # [B,V]
+        swap = lambda a: jnp.transpose(a, (1, 0, 2))  # [L,B,*] -> [B,L,*]
+        zk, zv, kf, vf, ke, ve = ys
+        return (logits, swap(zk), swap(zv), swap(kf), swap(vf), swap(ke), swap(ve))
+
+    return decode_step
+
+
+def make_encode_kv(cfg: ModelConfig):
+    """Standalone AE encode of raw cache rows (Pallas): used by the rust
+    cache manager to compress prefill output or migrate blocks.
+
+    (ae, k_raw [L,S,kvd], v_raw [L,S,kvd]) -> (k_lat, v_lat [L,S,dl])
+    """
+
+    def encode_kv(ae, k_raw, v_raw):
+        def body(_, lp):
+            zk = ae_pallas.ae_half_from_dict(lp["k_rows"], lp["ae"]["k"]["enc"])
+            zv = ae_pallas.ae_half_from_dict(lp["v_rows"], lp["ae"]["v"]["enc"])
+            return (), (zk, zv)
+
+        xs = {"ae": ae, "k_rows": k_raw, "v_rows": v_raw}
+        _, (zk, zv) = jax.lax.scan(body, (), xs)
+        return zk, zv
+
+    return encode_kv
+
+
+def make_decode_kv(cfg: ModelConfig):
+    """Standalone AE decode of latent cache rows (Pallas): reconstruction
+    on retrieval, used to (re)build the effective cache.
+
+    (ae, k_lat [L,S,dl], v_lat [L,S,dl]) -> (k_rec, v_rec [L,S,kvd])
+    """
+
+    def decode_kv(ae, k_lat, v_lat):
+        def body(_, lp):
+            kr = ae_pallas.ae_half_from_dict(lp["k_lat"], lp["ae"]["k"]["dec"])
+            vr = ae_pallas.ae_half_from_dict(lp["v_lat"], lp["ae"]["v"]["dec"])
+            return (), (kr, vr)
+
+        xs = {"ae": ae, "k_lat": k_lat, "v_lat": v_lat}
+        _, (kr, vr) = jax.lax.scan(body, (), xs)
+        return kr, vr
+
+    return decode_kv

@@ -1,0 +1,149 @@
+"""Parameter initialization and flat binary I/O for the AOT bridge.
+
+Parameters are nested dicts of f32 arrays with all per-layer tensors
+*stacked along a leading layer axis* (the MaxText idiom): the transformer
+body is a single ``lax.scan`` over that axis, which keeps the HLO small and
+the PJRT argument count manageable.
+
+The rust runtime loads the same parameters from ``artifacts/{m}_params.bin``
+(concatenated little-endian f32 buffers) + ``{m}_params.json`` (name, shape,
+offset — in ``jax.tree_util`` flatten order, which rust re-sorts by name).
+Checkpoints written by the rust training driver use the identical format.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def _norm(key, shape, std=0.02):
+    return jax.random.normal(key, shape, dtype=jnp.float32) * std
+
+
+def init_base(cfg: ModelConfig, key) -> dict:
+    """Initialize the base transformer (GPT-2 or Llama arch)."""
+    L, D, F = cfg.n_layer, cfg.d_model, cfg.ffn_dim
+    qd, kvd, S, V = cfg.q_dim, cfg.kv_dim, cfg.max_seq, cfg.vocab
+    ks = iter(jax.random.split(key, 32))
+    wo_std = 0.02 / np.sqrt(2.0 * L)
+    p = {
+        "wte": _norm(next(ks), (V, D)),
+        "wq": _norm(next(ks), (L, D, qd)),
+        "wk": _norm(next(ks), (L, D, kvd)),
+        "wv": _norm(next(ks), (L, D, kvd)),
+        "wo": _norm(next(ks), (L, qd, D), std=wo_std),
+    }
+    if cfg.arch == "gpt2":
+        p.update(
+            {
+                "wpe": _norm(next(ks), (S, D)),
+                "bq": jnp.zeros((L, qd)),
+                "bk": jnp.zeros((L, kvd)),
+                "bv": jnp.zeros((L, kvd)),
+                "bo": jnp.zeros((L, D)),
+                "ln1_g": jnp.ones((L, D)),
+                "ln1_b": jnp.zeros((L, D)),
+                "ln2_g": jnp.ones((L, D)),
+                "ln2_b": jnp.zeros((L, D)),
+                "lnf_g": jnp.ones((D,)),
+                "lnf_b": jnp.zeros((D,)),
+                "mlp_w1": _norm(next(ks), (L, D, F)),
+                "mlp_b1": jnp.zeros((L, F)),
+                "mlp_w2": _norm(next(ks), (L, F, D), std=wo_std),
+                "mlp_b2": jnp.zeros((L, D)),
+            }
+        )
+    else:  # llama
+        p.update(
+            {
+                "rms1_g": jnp.ones((L, D)),
+                "rms2_g": jnp.ones((L, D)),
+                "rmsf_g": jnp.ones((D,)),
+                "w_gate": _norm(next(ks), (L, D, F)),
+                "w_up": _norm(next(ks), (L, D, F)),
+                "w_down": _norm(next(ks), (L, F, D), std=wo_std),
+            }
+        )
+    return p
+
+
+def _init_ae_half(key, l, d_in, d_hidden, d_out) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _norm(k1, (l, d_in, d_hidden), std=1.0 / np.sqrt(d_in)),
+        "b1": jnp.zeros((l, d_hidden)),
+        "bn_g": jnp.ones((l, d_hidden)),
+        "bn_b": jnp.zeros((l, d_hidden)),
+        "bn_mean": jnp.zeros((l, d_hidden)),
+        "bn_var": jnp.ones((l, d_hidden)),
+        "w2": _norm(k2, (l, d_hidden, d_out), std=1.0 / np.sqrt(d_hidden)),
+        "b2": jnp.zeros((l, d_out)),
+    }
+
+
+def init_ae(cfg: ModelConfig, key) -> dict:
+    """Per-layer K and V autoencoders (paper §IV-A), stacked over layers."""
+    L, kvd, H, dl = cfg.n_layer, cfg.kv_dim, cfg.ae_hidden, cfg.ae_latent
+    kk, kv = jax.random.split(key)
+    out = {}
+    for name, k in (("k", kk), ("v", kv)):
+        ke, kd = jax.random.split(k)
+        out[name] = {
+            "enc": _init_ae_half(ke, L, kvd, H, dl),
+            "dec": _init_ae_half(kd, L, dl, H, kvd),
+        }
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    kb, ka = jax.random.split(jax.random.PRNGKey(seed))
+    return {"base": init_base(cfg, kb), "ae": init_ae(cfg, ka)}
+
+
+# ---------------------------------------------------------------------------
+# flat I/O (shared format with rust/src/runtime/params.rs)
+# ---------------------------------------------------------------------------
+
+
+def flat_entries(tree):
+    """[(name, leaf)] in jax flatten order; names like base/wq, ae/k/enc/w1."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_params(tree, bin_path: str, json_path: str) -> None:
+    entries = flat_entries(tree)
+    index, offset = [], 0
+    with open(bin_path, "wb") as f:
+        for name, leaf in entries:
+            arr = np.asarray(leaf, dtype=np.float32)
+            f.write(arr.tobytes())
+            index.append(
+                {"name": name, "shape": list(arr.shape), "offset": offset}
+            )
+            offset += arr.nbytes
+    with open(json_path, "w") as f:
+        json.dump({"total_bytes": offset, "params": index}, f, indent=1)
+
+
+def load_params(tree_like, bin_path: str) -> dict:
+    """Load a params.bin written by save_params (or the rust driver)."""
+    entries = flat_entries(tree_like)
+    raw = np.fromfile(bin_path, dtype=np.float32)
+    leaves, offset = [], 0
+    for _, leaf in entries:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        leaves.append(jnp.asarray(raw[offset : offset + n].reshape(leaf.shape)))
+        offset += n
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

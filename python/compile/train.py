@@ -1,0 +1,185 @@
+"""L2 training steps (paper Algorithms 1 and 2), AOT'd and driven from rust.
+
+Three step functions, each lowered to one HLO artifact; the rust training
+driver (``rust/src/train/``) owns the loop, data, schedules, and
+checkpoints, and calls these as pure (state, batch, hyper) -> state
+transitions:
+
+* ``train_step``    — base-LM pretraining (builds the frozen "pretrained
+                      model" Alg. 1 starts from).
+* ``ae_train_step`` — Alg. 1: CE + lambda * scaled-L1 reconstruction loss;
+                      the per-layer ``gmask`` gates which layers' AEs are
+                      (a) active in the forward, (b) gradient-updated, and
+                      (c) BN-EMA-updated.  Stage 1 = one-hot masks driven
+                      layer-by-layer from rust; stage 2 = the selected set.
+* ``reuse_ft_step`` — Alg. 2: CE + lambda * scaled-L1 between actual and
+                      reused K/V; base params finetuned, AEs frozen.
+
+Optimizer is Adam (beta1=0.9, beta2=0.999); lr and lambda are runtime
+scalars so rust owns the schedule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .config import ModelConfig
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+BN_MOMENTUM = 0.1
+
+
+def adam_update(grads, m, v, step, lr):
+    """One Adam step over a pytree. ``step`` is the new (1-based) count."""
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - ADAM_B1**t
+    c2 = 1.0 - ADAM_B2**t
+    new_m = jax.tree.map(lambda mm, g: ADAM_B1 * mm + (1 - ADAM_B1) * g, m, grads)
+    new_v = jax.tree.map(lambda vv, g: ADAM_B2 * vv + (1 - ADAM_B2) * g * g, v, grads)
+    upd = jax.tree.map(
+        lambda mm, vv: lr * (mm / c1) / (jnp.sqrt(vv / c2) + ADAM_EPS),
+        new_m,
+        new_v,
+    )
+    return upd, new_m, new_v
+
+
+def mean_ce(logits, tokens, len_mask):
+    nll, ntok = M.per_seq_nll(logits, tokens, len_mask)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(ntok), 1.0)
+
+
+def zeros_like_tree(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# base pretraining
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig):
+    """(base, m, v, step i32, tokens [B,S], len_mask [B,S], lr) ->
+    (base', m', v', step', loss)."""
+    ae_dummy = None  # forward in "base" mode never touches AE params
+
+    def loss_fn(base, ae, tokens, len_mask):
+        params = {"base": base, "ae": ae}
+        logits, _ = M.forward(
+            cfg, params, tokens, len_mask, M.baseline_kvcfg(cfg), mode="base"
+        )
+        return mean_ce(logits, tokens, len_mask)
+
+    def train_step(base, ae, m, v, step, tokens, len_mask, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(base, ae, tokens, len_mask)
+        new_step = step + 1
+        upd, m, v = adam_update(grads, m, v, new_step, lr)
+        base = jax.tree.map(lambda p, u: p - u, base, upd)
+        return base, m, v, new_step, loss
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: autoencoder training (staged, mask-driven)
+# ---------------------------------------------------------------------------
+
+
+def _gmask_tree(ae, gmask):
+    """Broadcast the per-layer grad mask over every AE leaf ([L, ...])."""
+    return jax.tree.map(
+        lambda p: gmask.reshape((-1,) + (1,) * (p.ndim - 1)), ae
+    )
+
+
+def make_ae_train_step(cfg: ModelConfig):
+    """(base, ae, m, v, step, tokens, len_mask, gmask [L], lam, lr) ->
+    (ae', m', v', step', loss, ce, rec).
+
+    Base params are frozen (never updated); AE params are updated only on
+    layers where gmask = 1.  BN running stats get an EMA update from the
+    batch stats actually used, gated by the same mask.
+    """
+
+    def loss_fn(ae, base, tokens, len_mask, gmask, lam):
+        params = {"base": base, "ae": ae}
+        kvcfg = {
+            "compress": gmask,
+            "quant": jnp.float32(0.0),
+            "reuse_k": jnp.zeros((cfg.n_layer, cfg.n_kv_head), jnp.float32),
+            "reuse_v": jnp.zeros((cfg.n_layer, cfg.n_kv_head), jnp.float32),
+        }
+        logits, ys = M.forward(
+            cfg, params, tokens, len_mask, kvcfg, mode="ae_train"
+        )
+        ce = mean_ce(logits, tokens, len_mask)
+        rec = jnp.sum(ys["l1_k"] + ys["l1_v"])  # already gated by compress
+        return ce + lam * rec, (ce, rec, ys["bn"])
+
+    def ae_train_step(base, ae, m, v, step, tokens, len_mask, gmask, lam, lr):
+        (loss, (ce, rec, bn)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            ae, base, tokens, len_mask, gmask, lam
+        )
+        new_step = step + 1
+        upd, m, v = adam_update(grads, m, v, new_step, lr)
+        gm = _gmask_tree(ae, gmask)
+        ae = jax.tree.map(lambda p, u, g: p - g * u, ae, upd, gm)
+        # EMA on BN running stats, gated per layer
+        gcol = gmask[:, None]
+        for t in ("k", "v"):
+            for half in ("enc", "dec"):
+                mean_b, var_b = bn[t][half]
+                node = ae[t][half]
+                node["bn_mean"] = node["bn_mean"] + gcol * BN_MOMENTUM * (
+                    mean_b - node["bn_mean"]
+                )
+                node["bn_var"] = node["bn_var"] + gcol * BN_MOMENTUM * (
+                    var_b - node["bn_var"]
+                )
+        return ae, m, v, new_step, loss, ce, rec
+
+    return ae_train_step
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: inter-layer reuse finetuning
+# ---------------------------------------------------------------------------
+
+
+def make_reuse_ft_step(cfg: ModelConfig):
+    """(base, ae, m, v, step, tokens, len_mask, compress [L],
+    reuse_k [L,Hkv], reuse_v [L,Hkv], lam, lr) ->
+    (base', m', v', step', loss, ce, rl1).
+
+    Finetunes the base model under fixed reuse masks (and, for the
+    combined Table-IV configuration, fixed trained AEs) with the paper's
+    CE + scaled-L1(actual vs reused) objective.  AEs are frozen.
+    """
+
+    def loss_fn(base, ae, tokens, len_mask, compress, reuse_k, reuse_v, lam):
+        params = {"base": base, "ae": jax.lax.stop_gradient(ae)}
+        kvcfg = {
+            "compress": compress,
+            "quant": jnp.float32(0.0),
+            "reuse_k": reuse_k,
+            "reuse_v": reuse_v,
+        }
+        logits, ys = M.forward(cfg, params, tokens, len_mask, kvcfg, mode="eval")
+        ce = mean_ce(logits, tokens, len_mask)
+        rl1 = jnp.sum(ys["l1_rk"] + ys["l1_rv"])
+        return ce + lam * rl1, (ce, rl1)
+
+    def reuse_ft_step(
+        base, ae, m, v, step, tokens, len_mask, compress, reuse_k, reuse_v, lam, lr
+    ):
+        (loss, (ce, rl1)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            base, ae, tokens, len_mask, compress, reuse_k, reuse_v, lam
+        )
+        new_step = step + 1
+        upd, m, v = adam_update(grads, m, v, new_step, lr)
+        base = jax.tree.map(lambda p, u: p - u, base, upd)
+        return base, m, v, new_step, loss, ce, rl1
+
+    return reuse_ft_step

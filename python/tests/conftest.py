@@ -1,0 +1,18 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def f32(rng, *shape):
+    return np.asarray(rng.randn(*shape), dtype=np.float32)

@@ -1,0 +1,93 @@
+"""AOT bridge invariants: params binary format round-trip and, when
+artifacts have been built, manifest consistency (the contract the rust
+runtime parses)."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import params as P
+from compile.config import CONFIGS
+from .conftest import ARTIFACTS
+
+
+def test_params_bin_roundtrip(tmp_path):
+    cfg = CONFIGS["gpt2t"]
+    params = P.init_params(cfg, 42)
+    b, j = str(tmp_path / "p.bin"), str(tmp_path / "p.json")
+    P.save_params(params, b, j)
+    loaded = P.load_params(params, b)
+    for (n1, l1), (n2, l2) in zip(P.flat_entries(params), P.flat_entries(loaded)):
+        assert n1 == n2
+        np.testing.assert_array_equal(np.array(l1), np.array(l2))
+    idx = json.load(open(j))
+    assert idx["total_bytes"] == os.path.getsize(b)
+    names = [e["name"] for e in idx["params"]]
+    assert len(names) == len(set(names))
+    assert all(n.startswith(("base/", "ae/")) for n in names)
+
+
+def test_flat_entries_deterministic_order():
+    cfg = CONFIGS["tinyllama_t"]
+    p1 = P.init_params(cfg, 0)
+    p2 = P.init_params(cfg, 1)
+    assert [n for n, _ in P.flat_entries(p1)] == [n for n, _ in P.flat_entries(p2)]
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_structure():
+    man = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    assert man["version"] == 1
+    assert set(man["models"]) == {"gpt2t", "tinyllama_t"}
+    for name, entry in man["entries"].items():
+        assert os.path.exists(os.path.join(ARTIFACTS, entry["file"])), name
+        for io in entry["inputs"] + entry["outputs"]:
+            assert io["dtype"] in ("float32", "int32"), (name, io)
+            assert all(isinstance(d, int) for d in io["shape"])
+
+
+@needs_artifacts
+def test_manifest_entry_set_complete():
+    man = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    for m, mj in man["models"].items():
+        expected = {
+            f"{m}_{e}"
+            for e in (
+                "train_step ae_train_step reuse_ft_step eval_loss kv_stats "
+                "prefill prefill_base encode_kv decode_kv"
+            ).split()
+        }
+        expected |= {f"{m}_decode_step_b{b}" for b in mj["decode_batches"]}
+        assert expected <= set(man["entries"]), m
+
+
+@needs_artifacts
+def test_manifest_params_match_bin():
+    man = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    for m, mj in man["models"].items():
+        idx = json.load(open(os.path.join(ARTIFACTS, mj["params_index"])))
+        size = os.path.getsize(os.path.join(ARTIFACTS, mj["params_bin"]))
+        assert idx["total_bytes"] == size
+        # every train-step input named base/* or ae/* exists in the index
+        names = {e["name"] for e in idx["params"]}
+        ts = man["entries"][f"{m}_train_step"]
+        for io in ts["inputs"]:
+            if io["name"].startswith(("base/", "ae/")):
+                assert io["name"] in names, io["name"]
+
+
+@needs_artifacts
+def test_hlo_text_is_parseable_header():
+    man = json.load(open(os.path.join(ARTIFACTS, "manifest.json")))
+    for name, entry in man["entries"].items():
+        head = open(os.path.join(ARTIFACTS, entry["file"])).read(200)
+        assert head.startswith("HloModule"), name

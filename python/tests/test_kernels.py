@@ -1,0 +1,257 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes/seeds; assert_allclose everywhere.  These are the
+CORE correctness signal for the AOT'd serving path — the decode_step
+artifact is built from exactly these kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import autoencoder as ae_k
+from compile.kernels import linear as lin_k
+from compile.kernels import quant as q_k
+from compile.kernels import ref
+
+SET = dict(max_examples=12, deadline=None)
+
+
+def _f32(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def _ae_params(rng, d_in, d_h, d_out):
+    return {
+        "w1": _f32(rng, d_in, d_h),
+        "b1": _f32(rng, d_h),
+        "bn_g": _f32(rng, d_h),
+        "bn_b": _f32(rng, d_h),
+        "bn_mean": _f32(rng, d_h),
+        "bn_var": jnp.abs(_f32(rng, d_h)) + 0.3,
+        "w2": _f32(rng, d_h, d_out),
+        "b2": _f32(rng, d_out),
+    }
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([1, 8, 64, 128, 256]),
+    k=st.sampled_from([32, 64, 128]),
+    n=st.sampled_from([32, 64, 96, 128, 384]),
+    seed=st.integers(0, 2**31 - 1),
+    bias=st.booleans(),
+)
+def test_linear_matches_ref(m, k, n, seed, bias):
+    rng = np.random.default_rng(seed)
+    x, w = _f32(rng, m, k), _f32(rng, k, n)
+    b = _f32(rng, n) if bias else None
+    got = lin_k.linear(x, w, b)
+    want = ref.linear(x, w, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=2e-4)
+
+
+def test_linear_tiled_grid():
+    """Multi-tile grid (all three grid axes > 1) accumulates correctly."""
+    rng = np.random.default_rng(7)
+    x, w, b = _f32(rng, 256, 256), _f32(rng, 256, 256), _f32(rng, 256)
+    got = lin_k.linear(x, w, b, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(
+        np.array(got), np.array(ref.linear(x, w, b)), rtol=2e-5, atol=2e-3
+    )
+
+
+def test_linear_rejects_indivisible_tiles():
+    x, w = jnp.zeros((100, 64)), jnp.zeros((64, 64))
+    with pytest.raises(AssertionError):
+        lin_k.linear(x, w, bm=64)
+
+
+# ---------------------------------------------------------------------------
+# fused autoencoder halves
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([1, 8, 128, 256]),
+    dims=st.sampled_from([(128, 96, 64), (64, 48, 32), (32, 96, 128), (64, 64, 64)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ae_half_matches_ref(m, dims, seed):
+    d_in, d_h, d_out = dims
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, m, d_in)
+    p = _ae_params(rng, d_in, d_h, d_out)
+    got = ae_k.ae_half_from_dict(x, p)
+    want, _ = ref.ae_half_apply(x, p)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=2e-4)
+
+
+def test_ae_roundtrip_shrinks_then_restores_shape():
+    rng = np.random.default_rng(0)
+    enc = _ae_params(rng, 128, 96, 64)
+    dec = _ae_params(rng, 64, 96, 128)
+    x = _f32(rng, 16, 128)
+    z = ae_k.ae_half_from_dict(x, enc)
+    assert z.shape == (16, 64)
+    y = ae_k.ae_half_from_dict(z, dec)
+    assert y.shape == (16, 128)
+
+
+def test_ae_leaky_relu_negative_region():
+    """Constructed input forcing the BN output negative exercises the
+    LeakyReLU slope rather than the identity branch."""
+    rng = np.random.default_rng(3)
+    p = _ae_params(rng, 8, 8, 8)
+    p["bn_b"] = jnp.full((8,), -100.0)  # push everything negative
+    x = _f32(rng, 4, 8)
+    got = ae_k.ae_half_from_dict(x, p)
+    want, _ = ref.ae_half_apply(x, p)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    s=st.sampled_from([4, 32, 128]),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 2), (2, 1)]),
+    dh=st.sampled_from([16, 32]),
+    valid_frac=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_causal_attention_matches_ref(s, heads, dh, valid_frac, seed):
+    hq, hkv = heads
+    g = hq // hkv
+    rng = np.random.default_rng(seed)
+    q, k, v = _f32(rng, s, hq, dh), _f32(rng, s, hkv, dh), _f32(rng, s, hkv, dh)
+    n_valid = max(1, int(s * valid_frac))
+    m = jnp.zeros((s,), jnp.float32).at[:n_valid].set(1.0)
+    got = attn_k.causal_attention(q, k, v, m, group_size=g)
+    want = ref.causal_attention(q, k, v, group_size=g, length_mask=m)
+    np.testing.assert_allclose(
+        np.array(got)[:n_valid], np.array(want)[:n_valid], rtol=2e-5, atol=2e-4
+    )
+
+
+@settings(**SET)
+@given(
+    s=st.sampled_from([4, 32, 128]),
+    heads=st.sampled_from([(4, 4), (4, 2), (8, 2)]),
+    dh=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(s, heads, dh, seed):
+    hq, hkv = heads
+    g = hq // hkv
+    rng = np.random.default_rng(seed)
+    q, k, v = _f32(rng, hq, dh), _f32(rng, s, hkv, dh), _f32(rng, s, hkv, dh)
+    n_valid = rng.integers(1, s + 1)
+    m = jnp.zeros((s,), jnp.float32).at[:n_valid].set(1.0)
+    got = attn_k.decode_attention(q, k, v, m, group_size=g)
+    want = ref.decode_attention(q, k, v, group_size=g, length_mask=m)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-5, atol=2e-4)
+
+
+@settings(**SET)
+@given(
+    b=st.sampled_from([1, 2, 8]),
+    s=st.sampled_from([16, 128]),
+    heads=st.sampled_from([(4, 4), (4, 2)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_batched_matches_per_seq(b, s, heads, seed):
+    hq, hkv = heads
+    g, dh = hq // hkv, 32
+    rng = np.random.default_rng(seed)
+    q = _f32(rng, b, hq, dh)
+    k, v = _f32(rng, b, s, hkv, dh), _f32(rng, b, s, hkv, dh)
+    lens = rng.integers(1, s + 1, size=b)
+    m = jnp.asarray((np.arange(s)[None, :] < lens[:, None]).astype(np.float32))
+    got = attn_k.decode_attention_batched(q, k, v, m, group_size=g)
+    for i in range(b):
+        want = ref.decode_attention(
+            q[i], k[i], v[i], group_size=g, length_mask=m[i]
+        )
+        np.testing.assert_allclose(
+            np.array(got[i]), np.array(want), rtol=2e-5, atol=2e-4
+        )
+
+
+def test_decode_attention_single_valid_token():
+    """Mask with exactly one attendable position returns that value row."""
+    rng = np.random.default_rng(0)
+    q, k = _f32(rng, 4, 32), _f32(rng, 16, 4, 32)
+    v = _f32(rng, 16, 4, 32)
+    m = jnp.zeros((16,), jnp.float32).at[5].set(1.0)
+    got = attn_k.decode_attention(q, k, v, m, group_size=1)
+    np.testing.assert_allclose(np.array(got), np.array(v[5]), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 quantization
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([1, 8, 256, 512]),
+    f=st.sampled_from([16, 32, 64]),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matches_ref(m, f, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, m, f) * scale
+    q, s, z = q_k.quantize(x)
+    qe, se, ze = ref.quantize(x)  # ref keeps dims: [M,1] vs kernel's [M]
+    np.testing.assert_allclose(np.array(q), np.array(qe), atol=1e-5)
+    np.testing.assert_allclose(np.array(s), np.array(se)[:, 0], rtol=1e-6)
+    np.testing.assert_allclose(np.array(z), np.array(ze)[:, 0], atol=1e-5)
+    got = q_k.dequantize(q, s, z)
+    want = ref.dequantize(qe, se, ze)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SET)
+@given(
+    m=st.sampled_from([4, 64]),
+    f=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_roundtrip_error_bound(m, f, seed):
+    """|x - dq(q(x))| <= (max-min)/255 per row — the Eq. 4 step size."""
+    rng = np.random.default_rng(seed)
+    x = _f32(rng, m, f)
+    y = np.array(q_k.quant_dequant(x))
+    xn = np.array(x)
+    step = (xn.max(axis=1) - xn.min(axis=1)) / 255.0
+    err = np.abs(y - xn).max(axis=1)
+    assert (err <= step + 1e-6).all()
+
+
+def test_quant_integer_codes():
+    rng = np.random.default_rng(1)
+    x = _f32(rng, 8, 32)
+    q, _, _ = q_k.quantize(x)
+    qn = np.array(q)
+    assert (qn == np.round(qn)).all()
+    assert qn.min() >= -128 and qn.max() <= 127
+
+
+def test_quant_constant_row_is_stable():
+    """max == min degenerate row must not produce NaN/inf."""
+    x = jnp.full((2, 16), 3.25, jnp.float32)
+    y = np.array(q_k.quant_dequant(x))
+    assert np.isfinite(y).all()

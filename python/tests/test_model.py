@@ -1,0 +1,195 @@
+"""L2 model semantics: forward shapes, mask algebra, cache-boundary
+equivalences, and the per-mechanism behaviours the paper relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import params as P
+from compile.config import CONFIGS, GPT2T, TINYLLAMA_T
+
+BOTH = pytest.mark.parametrize("cfg", [GPT2T, TINYLLAMA_T], ids=lambda c: c.name)
+
+
+def _setup(cfg, b=2, s=24, seed=0):
+    params = P.init_params(cfg, seed)
+    rng = np.random.RandomState(seed)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32)
+    mask = jnp.ones((b, s), jnp.float32)
+    return params, tok, mask
+
+
+@BOTH
+def test_forward_shapes(cfg):
+    params, tok, mask = _setup(cfg)
+    logits, ys = M.forward(cfg, params, tok, mask, M.baseline_kvcfg(cfg), mode="base")
+    assert logits.shape == (2, 24, cfg.vocab)
+    assert np.isfinite(np.array(logits)).all()
+
+
+@BOTH
+def test_eval_with_zero_masks_equals_base(cfg):
+    """The eval path with all masks off is bit-identical to the baseline
+    forward — the single-artifact-many-variants design rests on this."""
+    params, tok, mask = _setup(cfg)
+    lb, _ = M.forward(cfg, params, tok, mask, M.baseline_kvcfg(cfg), mode="base")
+    le, _ = M.forward(cfg, params, tok, mask, M.baseline_kvcfg(cfg), mode="eval")
+    np.testing.assert_array_equal(np.array(lb), np.array(le))
+
+
+@BOTH
+def test_compression_changes_logits(cfg):
+    params, tok, mask = _setup(cfg)
+    kv = M.baseline_kvcfg(cfg)
+    lb, _ = M.forward(cfg, params, tok, mask, kv, mode="eval")
+    kv2 = dict(kv, compress=jnp.ones((cfg.n_layer,), jnp.float32))
+    lc, _ = M.forward(cfg, params, tok, mask, kv2, mode="eval")
+    assert np.abs(np.array(lb) - np.array(lc)).max() > 1e-4
+
+
+@BOTH
+def test_quant_flag_changes_compressed_logits_only(cfg):
+    params, tok, mask = _setup(cfg)
+    kv_c = dict(M.baseline_kvcfg(cfg), compress=jnp.ones((cfg.n_layer,)))
+    kv_cq = dict(kv_c, quant=jnp.float32(1.0))
+    lc, _ = M.forward(cfg, params, tok, mask, kv_c, mode="eval")
+    lq, _ = M.forward(cfg, params, tok, mask, kv_cq, mode="eval")
+    assert np.abs(np.array(lc) - np.array(lq)).max() > 0  # quant perturbs
+    # without compression the latents never exist: quant flag is inert
+    kv_q = dict(M.baseline_kvcfg(cfg), quant=jnp.float32(1.0))
+    lb, _ = M.forward(cfg, params, tok, mask, M.baseline_kvcfg(cfg), mode="eval")
+    lbq, _ = M.forward(cfg, params, tok, mask, kv_q, mode="eval")
+    np.testing.assert_array_equal(np.array(lb), np.array(lbq))
+
+
+@BOTH
+def test_padded_positions_do_not_poison_loss(cfg):
+    params, tok, _ = _setup(cfg)
+    mask = jnp.ones((2, 24), jnp.float32).at[:, 10:].set(0.0)
+    kv = dict(M.baseline_kvcfg(cfg), compress=jnp.ones((cfg.n_layer,)))
+    logits, _ = M.forward(cfg, params, tok, mask, kv, mode="eval")
+    nll, ntok = M.per_seq_nll(logits, tok, mask)
+    assert np.isfinite(np.array(nll)).all()
+    assert np.array(ntok).tolist() == [9.0, 9.0]
+
+
+@BOTH
+def test_padding_invariance(cfg):
+    """Valid-position logits must not depend on what the padding holds."""
+    params, tok, _ = _setup(cfg)
+    mask = jnp.ones((2, 24), jnp.float32).at[:, 12:].set(0.0)
+    tok2 = tok.at[:, 12:].set(0)
+    kv = dict(M.baseline_kvcfg(cfg), compress=jnp.ones((cfg.n_layer,)))
+    l1, _ = M.forward(cfg, params, tok, mask, kv, mode="eval")
+    l2, _ = M.forward(cfg, params, tok2, mask, kv, mode="eval")
+    np.testing.assert_allclose(
+        np.array(l1[:, :12]), np.array(l2[:, :12]), rtol=1e-5, atol=1e-5
+    )
+
+
+@BOTH
+def test_reuse_layer0_row_is_inert_guard(cfg):
+    """Reusing into layer 0 (no previous layer) blends against the zero
+    carry — callers must keep row 0 at zero; verify nonzero row 0 changes
+    the output so rust-side validation is justified."""
+    params, tok, mask = _setup(cfg)
+    kv = M.baseline_kvcfg(cfg)
+    l0, _ = M.forward(cfg, params, tok, mask, kv, mode="eval")
+    bad = dict(kv, reuse_k=kv["reuse_k"].at[0, 0].set(1.0))
+    l1, _ = M.forward(cfg, params, tok, mask, bad, mode="eval")
+    assert np.abs(np.array(l0) - np.array(l1)).max() > 0
+
+
+@BOTH
+def test_reuse_of_identical_layer_is_lossless(cfg):
+    """If layer l's K/V projections are copied from layer l-1 and the
+    residual stream were identical, reuse would be exact; here we check the
+    mechanism directly: with reuse masks on, layer l attends with layer
+    l-1's stored tensors (logit delta is nonzero vs baseline but zero when
+    the stored tensors coincide by construction)."""
+    params, tok, mask = _setup(cfg)
+    # make layer 1 K/V projections identical to layer 0 AND make layer 1's
+    # input equal layer 0's input by zeroing layer 0's output projections.
+    base = dict(params["base"])
+    for k in ("wk", "wv", "bk", "bv") if cfg.arch == "gpt2" else ("wk", "wv"):
+        base[k] = base[k].at[1].set(base[k][0])
+    zero_like = lambda a: a.at[0].set(jnp.zeros_like(a[0]))
+    base["wo"] = zero_like(base["wo"])
+    if cfg.arch == "gpt2":
+        base["bo"] = zero_like(base["bo"])
+        base["mlp_w2"] = zero_like(base["mlp_w2"])
+        base["mlp_b2"] = zero_like(base["mlp_b2"])
+    else:
+        base["w_down"] = zero_like(base["w_down"])
+    p2 = {"base": base, "ae": params["ae"]}
+    kv = M.baseline_kvcfg(cfg)
+    l_noreuse, _ = M.forward(cfg, p2, tok, mask, kv, mode="eval")
+    full = dict(
+        kv,
+        reuse_k=kv["reuse_k"].at[1].set(1.0),
+        reuse_v=kv["reuse_v"].at[1].set(1.0),
+    )
+    l_reuse, _ = M.forward(cfg, p2, tok, mask, full, mode="eval")
+    np.testing.assert_allclose(
+        np.array(l_noreuse), np.array(l_reuse), rtol=1e-5, atol=1e-5
+    )
+
+
+@BOTH
+def test_stats_mode_detects_identical_adjacent_layers(cfg):
+    """kv_stats L1 distance for a layer whose K/V equals the previous
+    layer's must be ~0 — the signal Alg. 2's threshold keys on."""
+    params, tok, mask = _setup(cfg)
+    base = dict(params["base"])
+    for k in ("wk", "wv", "bk", "bv") if cfg.arch == "gpt2" else ("wk", "wv"):
+        base[k] = base[k].at[1].set(base[k][0])
+    zero_like = lambda a: a.at[0].set(jnp.zeros_like(a[0]))
+    base["wo"] = zero_like(base["wo"])
+    if cfg.arch == "gpt2":
+        base["bo"] = zero_like(base["bo"])
+        base["mlp_w2"] = zero_like(base["mlp_w2"])
+        base["mlp_b2"] = zero_like(base["mlp_b2"])
+    else:
+        base["w_down"] = zero_like(base["w_down"])
+    p2 = {"base": base, "ae": params["ae"]}
+    dk, dv = M.make_kv_stats(cfg)(p2, tok, mask)
+    dk, dv = np.array(dk), np.array(dv)
+    assert dk[1].max() < 1e-5 and dv[1].max() < 1e-5
+    assert dk[2:].min() > 1e-3  # other layers genuinely differ
+
+
+@BOTH
+def test_per_seq_nll_manual(cfg):
+    params, tok, mask = _setup(cfg, b=1, s=8)
+    logits, _ = M.forward(cfg, params, tok, mask, M.baseline_kvcfg(cfg), mode="base")
+    nll, ntok = M.per_seq_nll(logits, tok, mask)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    manual = -sum(float(lp[0, t, tok[0, t + 1]]) for t in range(7))
+    assert abs(float(nll[0]) - manual) < 1e-3
+    assert float(ntok[0]) == 7.0
+
+
+@BOTH
+def test_ae_train_mode_uses_batch_stats(cfg):
+    """ae_train BN uses batch stats: corrupting running stats must not
+    change the ae_train forward, but must change the eval forward."""
+    params, tok, mask = _setup(cfg)
+    kv = dict(M.baseline_kvcfg(cfg), compress=jnp.ones((cfg.n_layer,)))
+    p_bad = jax.tree.map(lambda x: x, params)
+    p_bad["ae"]["k"]["enc"]["bn_mean"] = (
+        params["ae"]["k"]["enc"]["bn_mean"] + 100.0
+    )
+    for mode, should_change in (("ae_train", False), ("eval", True)):
+        l1, _ = M.forward(cfg, params, tok, mask, kv, mode=mode)
+        l2, _ = M.forward(cfg, p_bad, tok, mask, kv, mode=mode)
+        delta = np.abs(np.array(l1) - np.array(l2)).max()
+        assert (delta > 1e-3) == should_change, (mode, delta)
+
+
+def test_configs_registry():
+    assert set(CONFIGS) == {"gpt2t", "tinyllama_t"}
+    for c in CONFIGS.values():
+        c.validate()
+        assert c.latent_ratio == 0.5  # paper's factor-of-two setting

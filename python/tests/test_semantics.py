@@ -1,0 +1,106 @@
+"""Additional L2 semantics: GQA head mapping, RoPE properties, tied
+embeddings, aux-loss bookkeeping — behaviours the rust coordinator's
+correctness silently depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import params as P
+from compile.config import GPT2T, TINYLLAMA_T
+from compile.kernels import ref
+
+
+def test_gqa_group_mapping_in_ref_attention():
+    """Query heads h use KV head h // group_size: perturbing KV head 0
+    must affect exactly query heads 0..group_size-1."""
+    rng = np.random.RandomState(0)
+    s, hq, hkv, dh = 6, 4, 2, 8
+    q = jnp.asarray(rng.randn(s, hq, dh).astype(np.float32))
+    k = jnp.asarray(rng.randn(s, hkv, dh).astype(np.float32))
+    v = jnp.asarray(rng.randn(s, hkv, dh).astype(np.float32))
+    m = jnp.ones((s,), jnp.float32)
+    base = ref.causal_attention(q, k, v, group_size=2, length_mask=m)
+    v2 = v.at[:, 0, :].add(10.0)
+    out = ref.causal_attention(q, k, v2, group_size=2, length_mask=m)
+    delta = np.abs(np.array(out - base)).max(axis=(0, 2))  # per query head
+    assert delta[0] > 1.0 and delta[1] > 1.0
+    assert delta[2] < 1e-5 and delta[3] < 1e-5
+
+
+def test_rope_preserves_norm_and_relative_scores():
+    """RoPE is a rotation (norm preserved) and q.k depends only on the
+    position difference."""
+    rng = np.random.RandomState(1)
+    dh = 32
+    x = jnp.asarray(rng.randn(1, dh).astype(np.float32))
+    y = jnp.asarray(rng.randn(1, dh).astype(np.float32))
+    for pos in [0, 3, 17]:
+        cos, sin = ref.rope_angles(jnp.array([pos]), dh)
+        xr = ref.apply_rope(x[None], cos[:, None, :], sin[:, None, :])[0]
+        np.testing.assert_allclose(
+            np.linalg.norm(np.array(xr)), np.linalg.norm(np.array(x)), rtol=1e-5
+        )
+    # relative property: <R_a x, R_b y> == <R_{a+d} x, R_{b+d} y>
+    def score(pa, pb):
+        ca, sa = ref.rope_angles(jnp.array([pa]), dh)
+        cb, sb = ref.rope_angles(jnp.array([pb]), dh)
+        xr = ref.apply_rope(x[None], ca[:, None, :], sa[:, None, :])[0]
+        yr = ref.apply_rope(y[None], cb[:, None, :], sb[:, None, :])[0]
+        return float(jnp.sum(xr * yr))
+
+    assert abs(score(2, 5) - score(10, 13)) < 1e-3
+    assert abs(score(0, 4) - score(7, 11)) < 1e-3
+    # and genuinely position-dependent
+    assert abs(score(2, 5) - score(2, 9)) > 1e-3
+
+
+@pytest.mark.parametrize("cfg", [GPT2T, TINYLLAMA_T], ids=lambda c: c.name)
+def test_tied_embeddings(cfg):
+    """Logits head is wte^T: doubling a token's embedding row doubles its
+    logit everywhere."""
+    params = P.init_params(cfg, 0)
+    rng = np.random.RandomState(2)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab, (1, 8)), jnp.int32)
+    mask = jnp.ones((1, 8), jnp.float32)
+    l1, _ = M.forward(cfg, params, tok, mask, M.baseline_kvcfg(cfg), mode="base")
+    target = 123  # token id not in the input (embeddings unaffected)
+    assert int((np.array(tok) == target).sum()) == 0
+    p2 = jax.tree.map(lambda x: x, params)
+    p2["base"]["wte"] = params["base"]["wte"].at[target].multiply(2.0)
+    l2, _ = M.forward(cfg, p2, tok, mask, M.baseline_kvcfg(cfg), mode="base")
+    r = np.array(l2[..., target]) / np.array(l1[..., target])
+    np.testing.assert_allclose(r, 2.0, rtol=1e-4)
+    others = np.abs(np.array(l2) - np.array(l1))
+    others[..., target] = 0
+    assert others.max() < 1e-5
+
+
+@pytest.mark.parametrize("cfg", [GPT2T], ids=lambda c: c.name)
+def test_aux_losses_gated_by_masks(cfg):
+    params = P.init_params(cfg, 0)
+    rng = np.random.RandomState(3)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab, (2, 16)), jnp.int32)
+    mask = jnp.ones((2, 16), jnp.float32)
+    kv = M.baseline_kvcfg(cfg)
+    _, ys = M.forward(cfg, params, tok, mask, kv, mode="eval")
+    assert float(jnp.sum(ys["l1_k"])) == 0.0  # no compression -> no recon loss
+    assert float(jnp.sum(ys["l1_rk"])) == 0.0  # no reuse -> no reuse loss
+    kv2 = dict(kv, compress=jnp.ones((cfg.n_layer,)))
+    _, ys2 = M.forward(cfg, params, tok, mask, kv2, mode="eval")
+    assert float(jnp.sum(ys2["l1_k"])) > 0.0
+    assert np.all(np.array(ys2["l1_k"]) > 0)
+    kv3 = dict(kv, reuse_k=kv["reuse_k"].at[2].set(1.0))
+    _, ys3 = M.forward(cfg, params, tok, mask, kv3, mode="eval")
+    l1_rk = np.array(ys3["l1_rk"])
+    assert l1_rk[2] > 0 and l1_rk[1] == 0 and l1_rk[3] == 0
+
+
+def test_quant_dequant_idempotent_on_grid():
+    """Values already on the quantization grid survive exactly."""
+    x = jnp.linspace(-1.0, 1.0, 256).reshape(1, 256)
+    y = ref.quant_dequant(x)
+    z = ref.quant_dequant(y)
+    np.testing.assert_allclose(np.array(y), np.array(z), atol=1e-6)

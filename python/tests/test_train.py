@@ -1,0 +1,137 @@
+"""Training-step invariants for Algorithms 1 and 2 (paper §IV-B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import params as P
+from compile import train as T
+from compile.config import GPT2T, TINYLLAMA_T
+
+BOTH = pytest.mark.parametrize("cfg", [GPT2T, TINYLLAMA_T], ids=lambda c: c.name)
+
+
+def _batch(cfg, b=4, s=24, seed=0):
+    rng = np.random.RandomState(seed)
+    # low-entropy synthetic data so a few steps visibly reduce loss
+    tok = np.tile(np.arange(s) % 7, (b, 1)) + rng.randint(0, 3, (b, s))
+    tok = jnp.asarray(tok % cfg.vocab, jnp.int32)
+    return tok, jnp.ones((b, s), jnp.float32)
+
+
+@BOTH
+def test_base_training_reduces_loss(cfg):
+    params = P.init_params(cfg, 0)
+    base, ae = params["base"], params["ae"]
+    tok, mask = _batch(cfg)
+    fn = jax.jit(T.make_train_step(cfg))
+    m, v = T.zeros_like_tree(base), T.zeros_like_tree(base)
+    step = jnp.int32(0)
+    losses = []
+    for _ in range(8):
+        base, m, v, step, loss = fn(base, ae, m, v, step, tok, mask, jnp.float32(3e-3))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses
+    assert int(step) == 8
+
+
+@BOTH
+def test_ae_step_freezes_unselected_layers_exactly(cfg):
+    params = P.init_params(cfg, 0)
+    base, ae = params["base"], params["ae"]
+    tok, mask = _batch(cfg)
+    fn = jax.jit(T.make_ae_train_step(cfg))
+    m, v = T.zeros_like_tree(ae), T.zeros_like_tree(ae)
+    gmask = jnp.zeros((cfg.n_layer,)).at[2].set(1.0)
+    ae2, m, v, step, loss, ce, rec = fn(
+        base, ae, m, v, jnp.int32(0), tok, mask, gmask, jnp.float32(0.1), jnp.float32(1e-3)
+    )
+    for name, leaf_old in P.flat_entries(ae):
+        leaf_new = dict(P.flat_entries(ae2))[name]
+        old, new = np.array(leaf_old), np.array(leaf_new)
+        np.testing.assert_array_equal(old[0], new[0], err_msg=name)  # frozen
+        np.testing.assert_array_equal(old[3:], new[3:], err_msg=name)
+    # the selected layer's encoder weights moved
+    d = np.abs(np.array(ae2["k"]["enc"]["w1"][2]) - np.array(ae["k"]["enc"]["w1"][2]))
+    assert d.max() > 0
+
+
+@BOTH
+def test_ae_step_updates_bn_stats_only_on_selected_layer(cfg):
+    params = P.init_params(cfg, 0)
+    base, ae = params["base"], params["ae"]
+    tok, mask = _batch(cfg)
+    fn = jax.jit(T.make_ae_train_step(cfg))
+    m, v = T.zeros_like_tree(ae), T.zeros_like_tree(ae)
+    gmask = jnp.zeros((cfg.n_layer,)).at[1].set(1.0)
+    ae2, *_ = fn(
+        base, ae, m, v, jnp.int32(0), tok, mask, gmask, jnp.float32(0.1), jnp.float32(1e-3)
+    )
+    for t in ("k", "v"):
+        for half in ("enc", "dec"):
+            mean_old = np.array(ae[t][half]["bn_mean"])
+            mean_new = np.array(ae2[t][half]["bn_mean"])
+            assert np.abs(mean_new[1] - mean_old[1]).max() > 0, (t, half)
+            np.testing.assert_array_equal(mean_new[0], mean_old[0])
+
+
+@BOTH
+def test_ae_staged_training_reduces_reconstruction(cfg):
+    """Alg. 1 stage 1 on one layer: the scaled-L1 reconstruction term must
+    fall over a handful of steps."""
+    params = P.init_params(cfg, 0)
+    base, ae = params["base"], params["ae"]
+    tok, mask = _batch(cfg)
+    fn = jax.jit(T.make_ae_train_step(cfg))
+    m, v = T.zeros_like_tree(ae), T.zeros_like_tree(ae)
+    gmask = jnp.zeros((cfg.n_layer,)).at[0].set(1.0)
+    step = jnp.int32(0)
+    recs = []
+    for _ in range(10):
+        ae, m, v, step, loss, ce, rec = fn(
+            base, ae, m, v, step, tok, mask, gmask, jnp.float32(1.0), jnp.float32(3e-3)
+        )
+        recs.append(float(rec))
+    assert recs[-1] < recs[0] * 0.9, recs
+
+
+@BOTH
+def test_reuse_ft_freezes_ae_and_moves_base(cfg):
+    params = P.init_params(cfg, 0)
+    base, ae = params["base"], params["ae"]
+    tok, mask = _batch(cfg)
+    fn = jax.jit(T.make_reuse_ft_step(cfg))
+    m, v = T.zeros_like_tree(base), T.zeros_like_tree(base)
+    rk = jnp.zeros((cfg.n_layer, cfg.n_kv_head)).at[1].set(1.0)
+    base2, m, v, step, loss, ce, rl1 = fn(
+        base, ae, m, v, jnp.int32(0), tok, mask,
+        jnp.zeros((cfg.n_layer,)), rk, rk, jnp.float32(0.1), jnp.float32(1e-3),
+    )
+    assert float(rl1) > 0
+    d = np.abs(np.array(base2["wq"]) - np.array(base["wq"]))
+    assert d.max() > 0
+
+
+@BOTH
+def test_adam_bias_correction_first_step_magnitude(cfg):
+    """After one Adam step with lr, |update| ~= lr for nonzero grads
+    (bias-corrected first moment / sqrt second moment ~= sign(g))."""
+    params = P.init_params(cfg, 0)
+    base, ae = params["base"], params["ae"]
+    tok, mask = _batch(cfg)
+    fn = jax.jit(T.make_train_step(cfg))
+    m, v = T.zeros_like_tree(base), T.zeros_like_tree(base)
+    lr = 1e-3
+    base2, *_ = fn(base, ae, m, v, jnp.int32(0), tok, mask, jnp.float32(lr))
+    d = np.abs(np.array(base2["wte"]) - np.array(base["wte"]))
+    moved = d[d > 0]
+    assert moved.size > 0
+    np.testing.assert_allclose(moved.max(), lr, rtol=0.05)
+
+
+def test_zeros_like_tree():
+    t = {"a": jnp.ones((2, 3)), "b": {"c": jnp.ones((4,))}}
+    z = T.zeros_like_tree(t)
+    assert float(jnp.sum(z["a"])) == 0.0 and z["b"]["c"].shape == (4,)

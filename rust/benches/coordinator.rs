@@ -1,0 +1,44 @@
+//! Coordinator logic benches (no runtime needed): admission/batch
+//! planning, corpus + task generation, similarity selection.
+
+use kvcar::compress::similarity::HeadDistances;
+use kvcar::coordinator::batcher::{plan_round, BatcherConfig};
+use kvcar::data::{corpus, tasks};
+use kvcar::model::gpt2_774m;
+use kvcar::model::memory::CompressionPlan;
+use kvcar::util::bench::{black_box, Bench};
+
+fn main() {
+    let spec = gpt2_774m();
+    let plan = CompressionPlan::ae_first_layers(&spec, 18);
+    let cfg = BatcherConfig {
+        max_batch: 8,
+        decode_batches: vec![1, 8],
+        cache_budget: Some(1 << 30),
+    };
+    let waiting: Vec<(usize, usize)> = (0..64).map(|i| (32 + i % 100, 64)).collect();
+    let r = Bench::new("coordinator/plan_round/64_waiting")
+        .run(|| black_box(plan_round(&cfg, &spec, &plan, 3, 123 << 20, &waiting)));
+    r.print();
+
+    let mut c = corpus::wiki(0);
+    let r = Bench::new("data/corpus_tokens/4KiB").run(|| black_box(c.tokens(4096)));
+    r.print_throughput(4096.0, "B");
+
+    let mut c4 = corpus::c4(0);
+    let r = Bench::new("data/corpus_tokens_noisy/4KiB").run(|| black_box(c4.tokens(4096)));
+    r.print_throughput(4096.0, "B");
+
+    let r = Bench::new("data/piqa_items/100")
+        .run(|| black_box(tasks::generate(tasks::Task::Piqa, 100, 1)));
+    r.print_throughput(100.0, "item");
+
+    // similarity selection over paper-scale head counts
+    let mut hd = HeadDistances::new(36, 20);
+    let flat: Vec<f32> = (0..36 * 20).map(|i| (i % 97) as f32 / 97.0).collect();
+    hd.accumulate(&flat, &flat);
+    let hd = hd.finalize();
+    let r = Bench::new("similarity/select_top/36x20")
+        .run(|| black_box(hd.select_top(19, 25)));
+    r.print();
+}

@@ -1,0 +1,99 @@
+//! End-to-end decode hot path over real artifacts: per-round latency for
+//! batch 1 and 8 under baseline / AE / AE+int8 / faithful-reconstruct
+//! plans, plus prefill latency.  The headline L3 numbers for
+//! EXPERIMENTS.md §Perf.
+//!
+//! Skips (exit 0) when artifacts are missing.
+
+use kvcar::coordinator::{GenRequest, ServeConfig, ServingEngine};
+use kvcar::data::corpus;
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::ModelSpec;
+use kvcar::runtime::{artifacts_dir, Engine};
+use kvcar::util::bench::fmt_ns;
+
+const MODEL: &str = "gpt2t";
+
+fn run_case(
+    engine: &mut Engine,
+    label: &str,
+    plan: CompressionPlan,
+    batch: usize,
+    faithful: bool,
+    rounds: usize,
+) {
+    let cfg = ServeConfig {
+        plan,
+        max_batch: batch,
+        seed: 3,
+        per_step_reconstruct: faithful,
+    };
+    let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
+    let mut prompts = corpus::wiki(5);
+    // warmup: pay XLA compilation outside the measured window
+    let warm: Vec<GenRequest> = (0..batch)
+        .map(|i| GenRequest::greedy(i as u64, &prompts.tokens(8), 2))
+        .collect();
+    serving.run(warm).unwrap();
+    serving.metrics = Default::default();
+    let reqs: Vec<GenRequest> = (0..batch)
+        .map(|i| GenRequest::greedy(i as u64, &prompts.tokens(16), rounds))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let out = serving.run(reqs).unwrap();
+    let wall = t0.elapsed();
+    let tokens: usize = out.iter().map(|r| r.generated_tokens).sum();
+    let per_round = serving.metrics.decode_step_latency.mean_ms();
+    let p99 = serving.metrics.decode_step_latency.percentile_ms(99.0);
+    println!(
+        "bench decode_hotpath/{label:<36} round mean={:>10} p99={:>10}  {:>8.1} tok/s (b={batch})",
+        fmt_ns(per_round * 1e6),
+        fmt_ns(p99 * 1e6),
+        tokens as f64 / wall.as_secs_f64(),
+    );
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("decode_hotpath: skipped (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::new(&dir).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, MODEL).unwrap();
+    let rounds = std::env::var("KVCAR_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+
+    let none = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+    let ae = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+    let aeq = CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant();
+
+    for b in [1usize, 8] {
+        run_case(&mut engine, &format!("baseline/b{b}"), none.clone(), b, false, rounds);
+        run_case(&mut engine, &format!("ae_all/b{b}"), ae.clone(), b, false, rounds);
+        run_case(&mut engine, &format!("ae_int8/b{b}"), aeq.clone(), b, false, rounds);
+    }
+    // faithful per-step reconstruction (the unoptimized paper dataflow)
+    run_case(&mut engine, "ae_all_faithful/b1", ae.clone(), 1, true, rounds);
+
+    // prefill latency
+    let cfg = ServeConfig {
+        plan: ae,
+        max_batch: 1,
+        seed: 1,
+        per_step_reconstruct: false,
+    };
+    let mut serving = ServingEngine::new(&mut engine, MODEL, cfg).unwrap();
+    let mut prompts = corpus::wiki(6);
+    for _ in 0..8 {
+        let reqs = vec![GenRequest::greedy(0, &prompts.tokens(64), 1)];
+        serving.run(reqs).unwrap();
+    }
+    println!(
+        "bench decode_hotpath/prefill_64tok                 mean={:>10} p99={:>10}",
+        fmt_ns(serving.metrics.prefill_latency.mean_ms() * 1e6),
+        fmt_ns(serving.metrics.prefill_latency.percentile_ms(99.0) * 1e6),
+    );
+}

@@ -1,0 +1,89 @@
+//! Cache-manager hot-path benches: append/read throughput per storage
+//! format and plan, allocator recycle behaviour.  These are the L3
+//! per-token costs the serving loop pays (EXPERIMENTS.md §Perf).
+
+use kvcar::kvcache::{CacheConfig, CacheManager, Side};
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::{Arch, ModelSpec};
+use kvcar::util::bench::{black_box, Bench};
+use kvcar::util::rng::Rng;
+
+fn spec() -> ModelSpec {
+    ModelSpec {
+        name: "bench".into(),
+        arch: Arch::Gpt2,
+        vocab: 256,
+        n_layer: 8,
+        d_model: 128,
+        n_head: 4,
+        n_kv_head: 4,
+        d_head: 32,
+        ffn_dim: 512,
+        max_seq: 128,
+        ae_hidden: 96,
+        ae_latent: 64,
+        bytes_per_el: 4,
+    }
+}
+
+fn rows(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn bench_append(label: &str, plan: CompressionPlan) {
+    let spec = spec();
+    let mut rng = Rng::new(1);
+    let kl = rows(&mut rng, spec.n_layer * spec.ae_latent);
+    let vl = rows(&mut rng, spec.n_layer * spec.ae_latent);
+    let kr = rows(&mut rng, spec.n_layer * spec.kv_dim());
+    let vr = rows(&mut rng, spec.n_layer * spec.kv_dim());
+    let mut mgr = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let r = Bench::new(&format!("kvcache/append_token/{label}")).run(|| {
+        let id = mgr.create_sequence();
+        for _ in 0..64 {
+            mgr.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+        }
+        mgr.free_sequence(id);
+    });
+    r.print_throughput(64.0, "tok");
+}
+
+fn bench_read(label: &str, plan: CompressionPlan) {
+    let spec = spec();
+    let mut rng = Rng::new(2);
+    let kl = rows(&mut rng, spec.n_layer * spec.ae_latent);
+    let vl = rows(&mut rng, spec.n_layer * spec.ae_latent);
+    let kr = rows(&mut rng, spec.n_layer * spec.kv_dim());
+    let vr = rows(&mut rng, spec.n_layer * spec.kv_dim());
+    let mut mgr = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let id = mgr.create_sequence();
+    for _ in 0..128 {
+        mgr.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+    }
+    let r = Bench::new(&format!("kvcache/stored_rows/{label}")).run(|| {
+        for l in 0..spec.n_layer {
+            black_box(mgr.stored_rows(id, l, Side::K).unwrap());
+            black_box(mgr.stored_rows(id, l, Side::V).unwrap());
+        }
+    });
+    r.print_throughput((spec.n_layer * 2 * 128) as f64, "row");
+}
+
+fn main() {
+    let s = spec();
+    bench_append("raw_f32", CompressionPlan::none(s.n_layer, s.n_kv_head));
+    bench_append("latent", CompressionPlan::ae_first_layers(&s, s.n_layer));
+    bench_append(
+        "latent_int8",
+        CompressionPlan::ae_first_layers(&s, s.n_layer).with_quant(),
+    );
+    let mut reuse = CompressionPlan::none(s.n_layer, s.n_kv_head);
+    for l in (1..s.n_layer).step_by(2) {
+        reuse.reuse_k[l] = vec![true; s.n_kv_head];
+        reuse.reuse_v[l] = vec![true; s.n_kv_head];
+    }
+    bench_append("alternating_alias", reuse.clone());
+
+    bench_read("raw_f32", CompressionPlan::none(s.n_layer, s.n_kv_head));
+    bench_read("latent_int8", CompressionPlan::ae_first_layers(&s, s.n_layer).with_quant());
+}

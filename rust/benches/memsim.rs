@@ -1,0 +1,26 @@
+//! Fig. 2/3 frontier-sweep benches (cheap; exists so every figure has a
+//! regenerating bench target) plus Eq. 3 accounting cost.
+
+use kvcar::memsim::{frontier, FigureCompression, GpuModel, FIGURE_BATCHES};
+use kvcar::model::memory::{kv_bytes_per_token, CompressionPlan};
+use kvcar::model::{gpt2_774m, tinyllama_1_1b};
+use kvcar::util::bench::{black_box, Bench};
+
+fn main() {
+    for spec in [gpt2_774m(), tinyllama_1_1b()] {
+        let gpu = GpuModel::a40_for(&spec);
+        let name = spec.name.clone();
+        let r = Bench::new(&format!("memsim/frontier_sweep/{name}")).run(|| {
+            for c in FigureCompression::all() {
+                black_box(frontier(&gpu, &spec, c.ratio(), &FIGURE_BATCHES));
+            }
+        });
+        r.print();
+    }
+
+    let spec = gpt2_774m();
+    let plan = CompressionPlan::ae_first_layers(&spec, 18).with_quant();
+    let r = Bench::new("memory/kv_bytes_per_token/gpt2-774m")
+        .run(|| black_box(kv_bytes_per_token(&spec, &plan)));
+    r.print();
+}

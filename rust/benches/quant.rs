@@ -1,0 +1,31 @@
+//! Eq. 4 quantization bandwidth (the int8 packing cost the cache pays
+//! per stored vector).
+
+use kvcar::compress::quant::{dequantize_into, quantize};
+use kvcar::util::bench::{black_box, Bench};
+use kvcar::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    for n in [64usize, 640, 4096] {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let r = Bench::new(&format!("quant/quantize/{n}")).run(|| black_box(quantize(&x)));
+        r.print_throughput(n as f64 * 4.0, "B");
+
+        let q = quantize(&x);
+        let mut out = vec![0.0f32; n];
+        let r = Bench::new(&format!("quant/dequantize/{n}"))
+            .run(|| dequantize_into(black_box(&q), black_box(&mut out)));
+        r.print_throughput(n as f64 * 4.0, "B");
+    }
+
+    // round-trip at the cache's actual latent width
+    let x: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+    let mut out = vec![0.0f32; 64];
+    let r = Bench::new("quant/roundtrip/latent64").run(|| {
+        let q = quantize(black_box(&x));
+        dequantize_into(&q, &mut out);
+        black_box(out[0])
+    });
+    r.print();
+}

@@ -1,0 +1,6 @@
+//! KV-CAR compression machinery on the rust side: Eq. 4 int8 packing,
+//! Alg. 2 similarity analysis, and plan construction.
+
+pub mod planner;
+pub mod quant;
+pub mod similarity;

@@ -1,0 +1,142 @@
+//! Compression planning: assemble a `CompressionPlan` (model/memory.rs)
+//! from the paper's configurations and from measured head similarities,
+//! and express plans as the runtime mask vectors the AOT artifacts take.
+
+use super::similarity::Selection;
+use crate::model::memory::CompressionPlan;
+use crate::model::ModelSpec;
+
+/// Runtime masks in artifact layout: compress [L], reuse [L*Hkv] row-major,
+/// quant scalar — exactly the f32 inputs of eval_loss/prefill/decode_step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimeMasks {
+    pub compress: Vec<f32>,
+    pub reuse_k: Vec<f32>,
+    pub reuse_v: Vec<f32>,
+    pub quant: f32,
+}
+
+pub fn to_masks(plan: &CompressionPlan) -> RuntimeMasks {
+    let fl = |b: &bool| if *b { 1.0 } else { 0.0 };
+    RuntimeMasks {
+        compress: plan.ae_layers.iter().map(fl).collect(),
+        reuse_k: plan.reuse_k.iter().flatten().map(fl).collect(),
+        reuse_v: plan.reuse_v.iter().flatten().map(fl).collect(),
+        quant: if plan.quant_int8 { 1.0 } else { 0.0 },
+    }
+}
+
+/// Attach a reuse selection (from similarity analysis) to a plan.
+pub fn with_selection(mut plan: CompressionPlan, sel: &Selection) -> CompressionPlan {
+    plan.reuse_k = sel.reuse_k.clone();
+    plan.reuse_v = sel.reuse_v.clone();
+    plan
+}
+
+/// The paper's Table II configuration: AE on the first k layers.
+pub fn table2_plan(spec: &ModelSpec, k_layers: usize) -> CompressionPlan {
+    CompressionPlan::ae_first_layers(spec, k_layers)
+}
+
+/// The paper's Table IV combined configuration: selective head reuse plus
+/// AE on every layer that keeps its own storage (no AE on fully-reused
+/// layers — their storage is already zero).
+pub fn combined_plan(spec: &ModelSpec, sel: &Selection, ae_layers: usize) -> CompressionPlan {
+    let mut plan = with_selection(
+        CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+        sel,
+    );
+    let mut placed = 0;
+    for l in 0..spec.n_layer {
+        if placed >= ae_layers {
+            break;
+        }
+        let fully_reused = plan.reuse_k[l].iter().all(|&r| r)
+            && plan.reuse_v[l].iter().all(|&r| r);
+        if !fully_reused {
+            plan.ae_layers[l] = true;
+            placed += 1;
+        }
+    }
+    plan
+}
+
+/// Greedy layer-budget search: the largest k such that AE-on-k-layers
+/// stays within `max_ppl_increase` according to a caller-supplied
+/// evaluation oracle (the rust eval harness running the eval_loss
+/// artifact).  Mirrors the paper's per-dataset "up to N layers" sweep.
+pub fn max_layers_within_budget(
+    spec: &ModelSpec,
+    baseline_ppl: f64,
+    max_ppl_increase: f64,
+    mut eval_ppl: impl FnMut(&CompressionPlan) -> f64,
+) -> (usize, f64) {
+    let mut best = (0, baseline_ppl);
+    for k in 1..=spec.n_layer {
+        let plan = table2_plan(spec, k);
+        let ppl = eval_ppl(&plan);
+        if ppl <= baseline_ppl + max_ppl_increase {
+            best = (k, ppl);
+        } else {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt2_774m;
+    use crate::model::memory::plan_savings;
+
+    #[test]
+    fn masks_layout() {
+        let spec = gpt2_774m();
+        let mut plan = CompressionPlan::ae_first_layers(&spec, 2);
+        plan.reuse_k[3][5] = true;
+        plan.quant_int8 = true;
+        let m = to_masks(&plan);
+        assert_eq!(m.compress.len(), 36);
+        assert_eq!(m.compress[1], 1.0);
+        assert_eq!(m.compress[2], 0.0);
+        assert_eq!(m.reuse_k.len(), 36 * 20);
+        assert_eq!(m.reuse_k[3 * 20 + 5], 1.0);
+        assert_eq!(m.reuse_k.iter().sum::<f32>(), 1.0);
+        assert_eq!(m.quant, 1.0);
+    }
+
+    #[test]
+    fn combined_plan_skips_fully_reused_layers() {
+        let spec = gpt2_774m();
+        let mut sel = Selection::new(spec.n_layer, spec.n_kv_head);
+        sel.reuse_k[1] = vec![true; spec.n_kv_head];
+        sel.reuse_v[1] = vec![true; spec.n_kv_head];
+        let plan = combined_plan(&spec, &sel, 3);
+        assert!(!plan.ae_layers[1], "fully reused layer must not get an AE");
+        assert_eq!(plan.n_ae_layers(), 3);
+        assert!(plan.validate().is_ok());
+    }
+
+    #[test]
+    fn combined_savings_exceed_parts() {
+        let spec = gpt2_774m();
+        let sel = Selection::all_alternating(spec.n_layer, spec.n_kv_head, true, false);
+        let heads_only = with_selection(
+            CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+            &sel,
+        );
+        let combined = combined_plan(&spec, &sel, spec.n_layer);
+        assert!(plan_savings(&spec, &combined) > plan_savings(&spec, &heads_only));
+    }
+
+    #[test]
+    fn budget_search_monotone_oracle() {
+        let spec = gpt2_774m();
+        // fake oracle: ppl grows 0.1 per compressed layer
+        let (k, ppl) =
+            max_layers_within_budget(&spec, 20.0, 1.05, |p| 20.0 + 0.1 * p.n_ae_layers() as f64);
+        assert_eq!(k, 10);
+        assert!((ppl - 21.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,149 @@
+//! Eq. 4 int8 affine quantization on real byte buffers.
+//!
+//! This is the storage-side twin of the Pallas quant kernel
+//! (`python/compile/kernels/quant.py`): the kernel simulates
+//! quantize->dequantize inside the XLA graph (for accuracy evaluation),
+//! while this module actually *packs* latent vectors into i8 bytes inside
+//! the rust KV cache — the component that realizes the memory savings.
+//!
+//!   scale     = 255 / (max(x) - min(x))
+//!   zeropoint = -round(scale * min(x)) - 128
+//!   q         = clamp(round(scale * x + zeropoint), -128, 127)   (Eq. 4)
+
+/// A quantized vector: i8 codes + per-vector affine header.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantVec {
+    pub codes: Vec<i8>,
+    pub scale: f32,
+    pub zeropoint: f32,
+}
+
+impl QuantVec {
+    pub fn stored_bytes(&self) -> usize {
+        self.codes.len() + 8 // f32 scale + f32 zeropoint
+    }
+}
+
+pub fn quantize(x: &[f32]) -> QuantVec {
+    debug_assert!(!x.is_empty());
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scale = 255.0 / (hi - lo).max(1e-8);
+    // round-half-to-even everywhere, matching jnp.round in the L1/L2
+    // reference (keeps in-graph quant sim and rust packing bit-identical)
+    let zeropoint = -(scale * lo).round_ties_even() - 128.0;
+    let codes = x
+        .iter()
+        .map(|&v| {
+            (scale * v + zeropoint)
+                .round_ties_even()
+                .clamp(-128.0, 127.0) as i8
+        })
+        .collect();
+    QuantVec {
+        codes,
+        scale,
+        zeropoint,
+    }
+}
+
+pub fn dequantize_into(q: &QuantVec, out: &mut [f32]) {
+    debug_assert_eq!(q.codes.len(), out.len());
+    let inv = 1.0 / q.scale;
+    for (o, &c) in out.iter_mut().zip(&q.codes) {
+        *o = (c as f32 - q.zeropoint) * inv;
+    }
+}
+
+pub fn dequantize(q: &QuantVec) -> Vec<f32> {
+    let mut out = vec![0.0; q.codes.len()];
+    dequantize_into(q, &mut out);
+    out
+}
+
+/// Max absolute round-trip error bound for a vector: one quantization step.
+pub fn error_bound(x: &[f32]) -> f32 {
+    let lo = x.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    (hi - lo).max(1e-8) / 255.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn roundtrip_error_within_bound() {
+        check(100, |rng| {
+            let n = rng.range(1, 512);
+            let scale = 10f32.powf(rng.f32() * 4.0 - 2.0);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, scale)).collect();
+            let q = quantize(&x);
+            let y = dequantize(&q);
+            let bound = error_bound(&x) + 1e-6;
+            for (a, b) in x.iter().zip(&y) {
+                prop_assert!(
+                    (a - b).abs() <= bound,
+                    "err {} > bound {bound}",
+                    (a - b).abs()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // cross-checked against compile/kernels/ref.py quantize()
+        let x = [0.0f32, 1.0, 2.0, 3.0];
+        let q = quantize(&x);
+        assert_eq!(q.scale, 85.0);
+        assert_eq!(q.zeropoint, -128.0);
+        assert_eq!(q.codes, vec![-128, -43, 42, 127]);
+    }
+
+    #[test]
+    fn constant_vector_is_finite() {
+        let x = [2.5f32; 16];
+        let q = quantize(&x);
+        let y = dequantize(&q);
+        assert!(y.iter().all(|v| v.is_finite()));
+        // degenerate range: reconstruction error stays within one step of
+        // the (clamped) scale
+        assert!(y.iter().all(|v| (v - 2.5).abs() < 2.5 + 1.0));
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let q = quantize(&[1.0; 64]);
+        assert_eq!(q.stored_bytes(), 72); // 64 codes + 8-byte header
+    }
+
+    #[test]
+    fn codes_span_full_range() {
+        let x: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let q = quantize(&x);
+        assert_eq!(*q.codes.first().unwrap(), -128);
+        assert_eq!(*q.codes.last().unwrap(), 127);
+    }
+
+    #[test]
+    fn monotone_inputs_monotone_codes() {
+        check(50, |rng| {
+            let n = rng.range(2, 128);
+            let mut x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            x.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q = quantize(&x);
+            for w in q.codes.windows(2) {
+                prop_assert!(w[0] <= w[1], "codes not monotone");
+            }
+            Ok(())
+        });
+    }
+}

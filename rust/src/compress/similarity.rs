@@ -1,0 +1,246 @@
+//! Alg. 2 steps 1-3: similarity-guided head selection.
+//!
+//! The `kv_stats` artifact produces mean adjacent-layer L1 distances per
+//! KV head (`dk`, `dv`, each [L, Hkv]; row 0 is meaningless — layer 0 has
+//! no predecessor).  This module averages them across evaluation batches,
+//! then selects heads to reuse either by an absolute threshold (the
+//! paper's "empirically determined threshold") or by a top-N budget (the
+//! paper's "19 key / 25 value / 36 key-and-value" configurations).
+
+#[derive(Debug, Clone)]
+pub struct HeadDistances {
+    pub n_layer: usize,
+    pub n_kv_head: usize,
+    /// [L][Hkv] mean L1 distance |head(l) - head(l-1)|; row 0 unused
+    pub dk: Vec<Vec<f64>>,
+    pub dv: Vec<Vec<f64>>,
+    batches: usize,
+}
+
+impl HeadDistances {
+    pub fn new(n_layer: usize, n_kv_head: usize) -> Self {
+        HeadDistances {
+            n_layer,
+            n_kv_head,
+            dk: vec![vec![0.0; n_kv_head]; n_layer],
+            dv: vec![vec![0.0; n_kv_head]; n_layer],
+            batches: 0,
+        }
+    }
+
+    /// Accumulate one batch's [L*Hkv] row-major stats from the artifact.
+    pub fn accumulate(&mut self, dk_flat: &[f32], dv_flat: &[f32]) {
+        assert_eq!(dk_flat.len(), self.n_layer * self.n_kv_head);
+        assert_eq!(dv_flat.len(), self.n_layer * self.n_kv_head);
+        for l in 0..self.n_layer {
+            for h in 0..self.n_kv_head {
+                self.dk[l][h] += dk_flat[l * self.n_kv_head + h] as f64;
+                self.dv[l][h] += dv_flat[l * self.n_kv_head + h] as f64;
+            }
+        }
+        self.batches += 1;
+    }
+
+    /// Mean over accumulated batches.
+    pub fn finalize(mut self) -> Self {
+        let n = self.batches.max(1) as f64;
+        for row in self.dk.iter_mut().chain(self.dv.iter_mut()) {
+            for v in row.iter_mut() {
+                *v /= n;
+            }
+        }
+        self.batches = 1;
+        self
+    }
+
+    fn candidates(&self, which: Which) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        let src = match which {
+            Which::K => &self.dk,
+            Which::V => &self.dv,
+        };
+        for l in 1..self.n_layer {
+            for h in 0..self.n_kv_head {
+                out.push(Candidate {
+                    layer: l,
+                    head: h,
+                    which,
+                    distance: src[l][h],
+                });
+            }
+        }
+        out
+    }
+
+    /// Heads whose distance falls below `threshold` (paper's Alg. 2).
+    pub fn select_by_threshold(&self, threshold: f64) -> Selection {
+        let mut sel = Selection::new(self.n_layer, self.n_kv_head);
+        for c in self
+            .candidates(Which::K)
+            .into_iter()
+            .chain(self.candidates(Which::V))
+        {
+            if c.distance < threshold {
+                sel.set(&c);
+            }
+        }
+        sel
+    }
+
+    /// The `n_k` most-similar K heads and `n_v` most-similar V heads
+    /// (Table III's selective configurations).
+    pub fn select_top(&self, n_k: usize, n_v: usize) -> Selection {
+        let mut sel = Selection::new(self.n_layer, self.n_kv_head);
+        for (which, n) in [(Which::K, n_k), (Which::V, n_v)] {
+            let mut cands = self.candidates(which);
+            cands.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+            for c in cands.into_iter().take(n) {
+                sel.set(&c);
+            }
+        }
+        sel
+    }
+
+    /// Threshold that would select exactly `n` heads of the given kind —
+    /// how the paper's "empirical threshold" is actually picked.
+    pub fn threshold_for_budget(&self, which_k: bool, n: usize) -> f64 {
+        let mut d: Vec<f64> = self
+            .candidates(if which_k { Which::K } else { Which::V })
+            .iter()
+            .map(|c| c.distance)
+            .collect();
+        d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if n == 0 {
+            return 0.0;
+        }
+        d.get(n - 1).copied().unwrap_or(f64::INFINITY) + f64::EPSILON
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Which {
+    K,
+    V,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    pub layer: usize,
+    pub head: usize,
+    pub which: Which,
+    pub distance: f64,
+}
+
+/// Boolean reuse masks, the shape the artifacts and the cache manager use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    pub reuse_k: Vec<Vec<bool>>,
+    pub reuse_v: Vec<Vec<bool>>,
+}
+
+impl Selection {
+    pub fn new(n_layer: usize, n_kv_head: usize) -> Self {
+        Selection {
+            reuse_k: vec![vec![false; n_kv_head]; n_layer],
+            reuse_v: vec![vec![false; n_kv_head]; n_layer],
+        }
+    }
+
+    fn set(&mut self, c: &Candidate) {
+        match c.which {
+            Which::K => self.reuse_k[c.layer][c.head] = true,
+            Which::V => self.reuse_v[c.layer][c.head] = true,
+        }
+    }
+
+    pub fn count_k(&self) -> usize {
+        self.reuse_k.iter().flatten().filter(|&&b| b).count()
+    }
+
+    pub fn count_v(&self) -> usize {
+        self.reuse_v.iter().flatten().filter(|&&b| b).count()
+    }
+
+    /// All K and V heads of layers 1, 3, 5, ... (the paper's "all key and
+    /// value heads replaced" upper bound — alternating layers so every
+    /// reused layer has a stored predecessor).
+    pub fn all_alternating(n_layer: usize, n_kv_head: usize, k: bool, v: bool) -> Selection {
+        let mut s = Selection::new(n_layer, n_kv_head);
+        for l in (1..n_layer).step_by(2) {
+            if k {
+                s.reuse_k[l] = vec![true; n_kv_head];
+            }
+            if v {
+                s.reuse_v[l] = vec![true; n_kv_head];
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_stats() -> HeadDistances {
+        let mut hd = HeadDistances::new(4, 2);
+        // layer 1 head 0 is very similar; layer 3 head 1 moderately
+        let dk = [
+            9.0, 9.0, // layer 0 (ignored)
+            0.1, 5.0, // layer 1
+            4.0, 4.0, // layer 2
+            3.0, 0.5, // layer 3
+        ];
+        let dv = [9.0, 9.0, 6.0, 0.2, 5.0, 5.0, 0.3, 4.0];
+        hd.accumulate(&dk.map(|x| x as f32), &dv.map(|x| x as f32));
+        hd.finalize()
+    }
+
+    #[test]
+    fn threshold_selection_ignores_layer0() {
+        let sel = fake_stats().select_by_threshold(1.0);
+        assert!(!sel.reuse_k[0][0] && !sel.reuse_k[0][1]);
+        assert!(sel.reuse_k[1][0]);
+        assert!(sel.reuse_k[3][1]);
+        assert!(sel.reuse_v[1][1]);
+        assert!(sel.reuse_v[3][0]);
+        assert_eq!(sel.count_k(), 2);
+        assert_eq!(sel.count_v(), 2);
+    }
+
+    #[test]
+    fn top_n_selects_most_similar() {
+        let sel = fake_stats().select_top(1, 2);
+        assert_eq!(sel.count_k(), 1);
+        assert!(sel.reuse_k[1][0]); // distance 0.1 is the global K min
+        assert_eq!(sel.count_v(), 2);
+        assert!(sel.reuse_v[1][1] && sel.reuse_v[3][0]);
+    }
+
+    #[test]
+    fn budget_threshold_consistent_with_top_n() {
+        let hd = fake_stats();
+        let th = hd.threshold_for_budget(true, 2);
+        let by_th = hd.select_by_threshold(th);
+        assert_eq!(by_th.count_k(), 2);
+    }
+
+    #[test]
+    fn accumulate_averages() {
+        let mut hd = HeadDistances::new(2, 1);
+        hd.accumulate(&[0.0, 2.0], &[0.0, 4.0]);
+        hd.accumulate(&[0.0, 4.0], &[0.0, 8.0]);
+        let hd = hd.finalize();
+        assert_eq!(hd.dk[1][0], 3.0);
+        assert_eq!(hd.dv[1][0], 6.0);
+    }
+
+    #[test]
+    fn alternating_upper_bound() {
+        let s = Selection::all_alternating(6, 4, true, true);
+        assert_eq!(s.count_k(), 12);
+        assert!(!s.reuse_k[0].iter().any(|&b| b));
+        assert!(s.reuse_k[1].iter().all(|&b| b));
+        assert!(!s.reuse_k[2].iter().any(|&b| b));
+    }
+}

@@ -1,0 +1,160 @@
+//! Admission control and batch planning (pure logic, unit-testable
+//! without the runtime).
+//!
+//! The scheduler consumes `BatchPlan`s: which waiting requests to admit
+//! given the free decode slots and the cache budget, and which compiled
+//! decode batch size to run a round at.  Policy: FIFO admission (no
+//! starvation), admit while slots and memory allow, pick the smallest
+//! compiled batch size covering the live set (padding wastes compute).
+
+use crate::model::memory::{kv_bytes_per_token, CompressionPlan};
+use crate::model::ModelSpec;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPlan {
+    /// indices into the waiting queue to admit now (FIFO prefix)
+    pub admit: usize,
+    /// compiled decode batch size to use for the next round
+    pub decode_batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    /// compiled decode batch sizes available (ascending)
+    pub decode_batches: Vec<usize>,
+    /// bytes available for the compressed cache (admission control);
+    /// None = unlimited
+    pub cache_budget: Option<usize>,
+}
+
+/// Worst-case cache bytes one request needs: its prompt plus its token
+/// budget at the plan's per-token rate.
+pub fn request_cache_bytes(
+    spec: &ModelSpec,
+    plan: &CompressionPlan,
+    prompt_len: usize,
+    max_new: usize,
+) -> usize {
+    let tokens = (prompt_len + max_new).min(spec.max_seq);
+    kv_bytes_per_token(spec, plan) * tokens
+}
+
+pub fn plan_round(
+    cfg: &BatcherConfig,
+    spec: &ModelSpec,
+    plan: &CompressionPlan,
+    live: usize,
+    live_cache_bytes: usize,
+    waiting: &[(usize, usize)], // (prompt_len, max_new) per waiting request
+) -> BatchPlan {
+    let mut admit = 0;
+    let mut projected = live_cache_bytes;
+    while admit < waiting.len() && live + admit < cfg.max_batch {
+        let (p, m) = waiting[admit];
+        let need = request_cache_bytes(spec, plan, p, m);
+        if let Some(budget) = cfg.cache_budget {
+            if projected + need > budget {
+                break;
+            }
+        }
+        projected += need;
+        admit += 1;
+    }
+    let target = (live + admit).max(1);
+    let decode_batch = cfg
+        .decode_batches
+        .iter()
+        .copied()
+        .find(|&b| b >= target)
+        .unwrap_or_else(|| *cfg.decode_batches.last().unwrap());
+    BatchPlan {
+        admit,
+        decode_batch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::gpt2_774m;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    fn cfg(budget: Option<usize>) -> BatcherConfig {
+        BatcherConfig {
+            max_batch: 8,
+            decode_batches: vec![1, 8],
+            cache_budget: budget,
+        }
+    }
+
+    #[test]
+    fn admits_fifo_up_to_slots() {
+        let spec = gpt2_774m();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let waiting = vec![(10, 20); 12];
+        let p = plan_round(&cfg(None), &spec, &plan, 3, 0, &waiting);
+        assert_eq!(p.admit, 5); // 3 live + 5 = 8
+        assert_eq!(p.decode_batch, 8);
+    }
+
+    #[test]
+    fn single_sequence_uses_small_batch() {
+        let spec = gpt2_774m();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let p = plan_round(&cfg(None), &spec, &plan, 1, 0, &[]);
+        assert_eq!(p.decode_batch, 1);
+    }
+
+    #[test]
+    fn budget_blocks_admission() {
+        let spec = gpt2_774m();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let one = request_cache_bytes(&spec, &plan, 10, 20);
+        let waiting = vec![(10, 20); 6];
+        let p = plan_round(&cfg(Some(one * 3)), &spec, &plan, 0, 0, &waiting);
+        assert_eq!(p.admit, 3);
+    }
+
+    #[test]
+    fn compression_admits_more_under_same_budget() {
+        let spec = gpt2_774m();
+        let base = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let comp = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+        let budget = request_cache_bytes(&spec, &base, 50, 50) * 2;
+        let waiting = vec![(50, 50); 8];
+        let p_base = plan_round(&cfg(Some(budget)), &spec, &base, 0, 0, &waiting);
+        let p_comp = plan_round(&cfg(Some(budget)), &spec, &comp, 0, 0, &waiting);
+        assert_eq!(p_base.admit, 2);
+        assert_eq!(p_comp.admit, 4); // the paper's larger-batch claim
+    }
+
+    #[test]
+    fn plan_invariants_random_traffic() {
+        check(60, |rng| {
+            let spec = gpt2_774m();
+            let plan = CompressionPlan::ae_first_layers(&spec, rng.below(37));
+            let live = rng.below(9);
+            let waiting: Vec<(usize, usize)> = (0..rng.below(20))
+                .map(|_| (rng.range(1, 200), rng.range(1, 100)))
+                .collect();
+            let budget = if rng.bool(0.5) {
+                Some(rng.range(1, 1 << 30))
+            } else {
+                None
+            };
+            let c = BatcherConfig {
+                max_batch: 8,
+                decode_batches: vec![1, 8],
+                cache_budget: budget,
+            };
+            let p = plan_round(&c, &spec, &plan, live, 0, &waiting);
+            prop_assert!(p.admit <= waiting.len());
+            prop_assert!(live + p.admit <= c.max_batch || p.admit == 0);
+            prop_assert!(p.decode_batch == 1 || p.decode_batch == 8);
+            prop_assert!(p.decode_batch >= (live + p.admit).min(8).max(1));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! Serving metrics: latency distributions, throughput, cache savings.
+
+use std::time::Duration;
+
+#[derive(Debug, Default, Clone)]
+pub struct Histogram {
+    samples_ns: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ns.push(d.as_nanos() as u64);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ns.is_empty()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64 / 1e6
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ns.clone();
+        s.sort_unstable();
+        let idx = ((s.len() - 1) as f64 * p / 100.0).round() as usize;
+        s[idx] as f64 / 1e6
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ServeMetrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub prefill_latency: Histogram,
+    /// per decode round, per token
+    pub decode_step_latency: Histogram,
+    pub queue_latency: Histogram,
+    /// decode rounds executed and total rows (batch slots) used
+    pub decode_rounds: u64,
+    pub decode_slots_used: u64,
+    pub decode_slots_total: u64,
+    pub wall: Duration,
+}
+
+impl ServeMetrics {
+    pub fn throughput_tok_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / secs
+    }
+
+    /// Fraction of decode batch slots doing useful work (batching quality).
+    pub fn batch_efficiency(&self) -> f64 {
+        if self.decode_slots_total == 0 {
+            return 0.0;
+        }
+        self.decode_slots_used as f64 / self.decode_slots_total as f64
+    }
+
+    pub fn print_summary(&self, label: &str) {
+        println!("--- serve metrics: {label} ---");
+        println!(
+            "  requests {}  tokens {}  wall {:.2}s  throughput {:.1} tok/s",
+            self.requests_completed,
+            self.tokens_generated,
+            self.wall.as_secs_f64(),
+            self.throughput_tok_per_sec()
+        );
+        println!(
+            "  prefill ms: mean {:.1} p50 {:.1} p99 {:.1}   decode-step ms: mean {:.2} p50 {:.2} p99 {:.2}",
+            self.prefill_latency.mean_ms(),
+            self.prefill_latency.percentile_ms(50.0),
+            self.prefill_latency.percentile_ms(99.0),
+            self.decode_step_latency.mean_ms(),
+            self.decode_step_latency.percentile_ms(50.0),
+            self.decode_step_latency.percentile_ms(99.0),
+        );
+        println!(
+            "  queue ms: mean {:.1}   batch efficiency {:.0}%  ({} rounds)",
+            self.queue_latency.mean_ms(),
+            self.batch_efficiency() * 100.0,
+            self.decode_rounds,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::default();
+        for i in 1..=100u64 {
+            h.record(Duration::from_millis(i));
+        }
+        assert!((h.percentile_ms(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile_ms(99.0) - 99.0).abs() <= 1.0);
+        assert!((h.mean_ms() - 50.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn batch_efficiency() {
+        let m = ServeMetrics {
+            decode_slots_used: 30,
+            decode_slots_total: 40,
+            ..Default::default()
+        };
+        assert!((m.batch_efficiency() - 0.75).abs() < 1e-9);
+    }
+}

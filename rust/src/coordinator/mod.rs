@@ -1,0 +1,11 @@
+//! L3 serving coordinator: request types, admission/batch planning, the
+//! prefill/decode scheduler, and metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod trace;
+
+pub use request::{GenRequest, GenResponse, Sampling};
+pub use scheduler::{ServeConfig, ServingEngine};

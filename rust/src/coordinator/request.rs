@@ -1,0 +1,75 @@
+//! Request/response types for the serving path.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// temperature > 0 softmax sampling (seeded, deterministic)
+    Temperature(f32),
+}
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// stop generation at this byte (e.g. b'.'), in addition to the
+    /// max_new_tokens budget
+    pub stop_byte: Option<u8>,
+}
+
+impl GenRequest {
+    pub fn greedy(id: u64, prompt: &[u8], max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: prompt.to_vec(),
+            max_new_tokens,
+            sampling: Sampling::Greedy,
+            stop_byte: None,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub id: u64,
+    /// generated continuation (prompt excluded)
+    pub output: Vec<u8>,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub prefill_latency: Duration,
+    pub decode_latency: Duration,
+    /// queueing delay before prefill started
+    pub queue_latency: Duration,
+}
+
+impl GenResponse {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.decode_latency.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let r = GenResponse {
+            id: 1,
+            output: vec![b'a'; 10],
+            prompt_tokens: 5,
+            generated_tokens: 10,
+            prefill_latency: Duration::from_millis(100),
+            decode_latency: Duration::from_millis(500),
+            queue_latency: Duration::ZERO,
+        };
+        assert!((r.tokens_per_sec() - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,568 @@
+//! The serving engine: prefill/decode scheduling with continuous batching
+//! over the compressed KV cache.
+//!
+//! Dataflow per the paper's Fig. 1:
+//!
+//! * **prefill** — one request at a time through the `{m}_prefill`
+//!   artifact (store-transform semantics), then the prompt's compressed
+//!   rows enter the cache manager (latents for AE layers, raw or
+//!   head-subset rows otherwise; int8-packed when the plan stacks Eq. 4).
+//! * **decode** — active sequences are batched each round through
+//!   `{m}_decode_step_b{B}`; the artifact receives the *effective*
+//!   (decoded + reuse-resolved) cache, appends the new token's raw row
+//!   in-graph, and returns latent/raw/effective rows for storage.
+//!
+//! The effective cache is transient scratch (the decode-on-retrieval
+//! working set).  Two modes:
+//!
+//! * `incremental` (default) — effective rows are appended as decode
+//!   produces them; the persistent store is still only compressed rows.
+//! * `per_step_reconstruct` — the faithful-paper mode: every round
+//!   rebuilds the effective cache from the compressed store through the
+//!   `{m}_decode_kv` decoder artifact (reconstruction on every
+//!   retrieval).  Slower; used to validate the incremental path and to
+//!   quantify the optimization in EXPERIMENTS.md §Perf.
+
+use super::metrics::ServeMetrics;
+use super::request::{GenRequest, GenResponse, Sampling};
+use crate::compress::planner::{to_masks, RuntimeMasks};
+use crate::kvcache::{CacheConfig, CacheManager, Side, StoredRows};
+use crate::model::memory::CompressionPlan;
+use crate::model::ModelSpec;
+use crate::runtime::{Engine, Store, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub plan: CompressionPlan,
+    /// concurrent decode sequences targeted by the batcher
+    pub max_batch: usize,
+    pub seed: u64,
+    /// faithful-paper mode: rebuild the effective cache from the
+    /// compressed store every decode round
+    pub per_step_reconstruct: bool,
+}
+
+impl ServeConfig {
+    pub fn baseline(spec: &ModelSpec) -> ServeConfig {
+        ServeConfig {
+            plan: CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+            max_batch: 8,
+            seed: 0,
+            per_step_reconstruct: false,
+        }
+    }
+}
+
+struct EffBuf {
+    /// [L, S, kvd] row-major
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+struct ActiveSeq {
+    req: GenRequest,
+    cache_id: u64,
+    /// position the next decode step writes (prompt_len + generated - 1
+    /// is the last written; see step accounting in decode_round)
+    pos: usize,
+    next_token: u8,
+    output: Vec<u8>,
+    enqueued: Instant,
+    prefill_start: Instant,
+    prefill_end: Instant,
+    decode_time: std::time::Duration,
+    done: bool,
+}
+
+pub struct ServingEngine<'e> {
+    pub engine: &'e mut Engine,
+    pub store: Store,
+    pub spec: ModelSpec,
+    pub model: String,
+    pub masks: RuntimeMasks,
+    pub cache: CacheManager,
+    pub cfg: ServeConfig,
+    pub metrics: ServeMetrics,
+    eff: HashMap<u64, EffBuf>,
+    decode_batches: Vec<usize>,
+    rng: Rng,
+    /// reusable decode-round staging buffers (avoid 4 MB/round allocs)
+    kc_buf: Vec<f32>,
+    vc_buf: Vec<f32>,
+}
+
+impl<'e> ServingEngine<'e> {
+    pub fn new(engine: &'e mut Engine, model: &str, cfg: ServeConfig) -> Result<Self> {
+        let mut store = Store::new();
+        engine.load_params(model, &mut store)?;
+        let spec = ModelSpec::from_manifest(&engine.manifest.raw, model)?;
+        cfg.plan
+            .validate()
+            .map_err(|e| anyhow!("invalid plan: {e}"))?;
+        let masks = to_masks(&cfg.plan);
+        let decode_batches: Vec<usize> = engine
+            .manifest
+            .raw
+            .get("models")
+            .and_then(|m| m.get(model))
+            .and_then(|m| m.get("decode_batches"))
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_else(|| vec![1, 8]);
+        let cache = CacheManager::new(CacheConfig::new(spec.clone(), cfg.plan.clone()));
+        let seed = cfg.seed;
+        let mut s = ServingEngine {
+            engine,
+            store,
+            spec,
+            model: model.to_string(),
+            masks,
+            cache,
+            cfg,
+            metrics: ServeMetrics::default(),
+            eff: HashMap::new(),
+            decode_batches,
+            rng: Rng::new(seed ^ 0x5E47E),
+            kc_buf: Vec::new(),
+            vc_buf: Vec::new(),
+        };
+        s.apply_masks();
+        Ok(s)
+    }
+
+    fn apply_masks(&mut self) {
+        let (l, h) = (self.spec.n_layer, self.spec.n_kv_head);
+        self.store
+            .insert("compress", Tensor::f32(vec![l], self.masks.compress.clone()));
+        self.store
+            .insert("reuse_k", Tensor::f32(vec![l, h], self.masks.reuse_k.clone()));
+        self.store
+            .insert("reuse_v", Tensor::f32(vec![l, h], self.masks.reuse_v.clone()));
+        self.store
+            .insert("quant", Tensor::scalar_f32(self.masks.quant));
+    }
+
+    fn sample(&mut self, logits: &[f32], sampling: Sampling) -> u8 {
+        match sampling {
+            Sampling::Greedy => {
+                let mut best = 0usize;
+                let mut best_v = f32::NEG_INFINITY;
+                for (i, &v) in logits.iter().enumerate() {
+                    if v > best_v {
+                        best_v = v;
+                        best = i;
+                    }
+                }
+                best as u8
+            }
+            Sampling::Temperature(t) => {
+                let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f64> = logits
+                    .iter()
+                    .map(|&v| (((v - m) / t.max(1e-4)) as f64).exp())
+                    .collect();
+                self.rng.weighted(&weights) as u8
+            }
+        }
+    }
+
+    /// Run prefill for one request; returns the active sequence handle.
+    fn prefill(&mut self, req: GenRequest, enqueued: Instant) -> Result<ActiveSeq> {
+        let t0 = Instant::now();
+        let (l, s, kvd, dl, v) = (
+            self.spec.n_layer,
+            self.spec.max_seq,
+            self.spec.kv_dim(),
+            self.spec.ae_latent,
+            self.spec.vocab,
+        );
+        let plen = req.prompt.len().clamp(1, s - 1);
+        let mut tokens = vec![0i32; s];
+        let mut mask = vec![0.0f32; s];
+        for t in 0..plen {
+            tokens[t] = req.prompt[t] as i32;
+            mask[t] = 1.0;
+        }
+        self.store.insert("tokens", Tensor::i32(vec![1, s], tokens));
+        self.store.insert("len_mask", Tensor::f32(vec![1, s], mask));
+        self.store
+            .insert("last", Tensor::scalar_i32((plen - 1) as i32));
+        let entry = format!("{}_prefill", self.model);
+        let out = self.engine.execute(&entry, &self.store)?;
+        let logits = out[0].1.as_f32()?;
+        debug_assert_eq!(logits.len(), v);
+        let k_raw = out[1].1.as_f32()?;
+        let v_raw = out[2].1.as_f32()?;
+        let k_lat = out[3].1.as_f32()?;
+        let v_lat = out[4].1.as_f32()?;
+        let k_eff = out[5].1.as_f32()?;
+        let v_eff = out[6].1.as_f32()?;
+
+        // store the prompt's compressed rows
+        let cache_id = self.cache.create_sequence();
+        let mut kl = vec![0.0f32; l * dl];
+        let mut vl = vec![0.0f32; l * dl];
+        let mut kr = vec![0.0f32; l * kvd];
+        let mut vr = vec![0.0f32; l * kvd];
+        for t in 0..plen {
+            for layer in 0..l {
+                kl[layer * dl..(layer + 1) * dl]
+                    .copy_from_slice(&k_lat[layer * s * dl + t * dl..][..dl]);
+                vl[layer * dl..(layer + 1) * dl]
+                    .copy_from_slice(&v_lat[layer * s * dl + t * dl..][..dl]);
+                kr[layer * kvd..(layer + 1) * kvd]
+                    .copy_from_slice(&k_raw[layer * s * kvd + t * kvd..][..kvd]);
+                vr[layer * kvd..(layer + 1) * kvd]
+                    .copy_from_slice(&v_raw[layer * s * kvd + t * kvd..][..kvd]);
+            }
+            self.cache.append_token(cache_id, &kl, &vl, &kr, &vr)?;
+        }
+
+        // effective-cache scratch, seeded from the prefill's k_eff/v_eff
+        let mut eff = EffBuf {
+            k: vec![0.0; l * s * kvd],
+            v: vec![0.0; l * s * kvd],
+        };
+        for layer in 0..l {
+            let base = layer * s * kvd;
+            eff.k[base..base + plen * kvd].copy_from_slice(&k_eff[base..base + plen * kvd]);
+            eff.v[base..base + plen * kvd].copy_from_slice(&v_eff[base..base + plen * kvd]);
+        }
+        self.eff.insert(cache_id, eff);
+
+        let first = self.sample(logits, req.sampling);
+        let now = Instant::now();
+        self.metrics.prefill_latency.record(now - t0);
+        self.metrics.queue_latency.record(t0 - enqueued);
+        self.metrics.tokens_generated += 1; // prefill samples the first token
+        let mut seq = ActiveSeq {
+            cache_id,
+            pos: plen,
+            next_token: first,
+            output: vec![first],
+            enqueued,
+            prefill_start: t0,
+            prefill_end: now,
+            decode_time: std::time::Duration::ZERO,
+            done: false,
+            req,
+        };
+        self.check_done(&mut seq);
+        Ok(seq)
+    }
+
+    fn check_done(&self, seq: &mut ActiveSeq) {
+        let last = *seq.output.last().unwrap();
+        if seq.output.len() >= seq.req.max_new_tokens
+            || seq.pos >= self.spec.max_seq
+            || seq.req.stop_byte == Some(last)
+        {
+            seq.done = true;
+        }
+    }
+
+    /// Faithful-paper reconstruction: rebuild one sequence's effective
+    /// cache from the compressed store (latents through the decoder
+    /// artifact, aliases resolved layer-by-layer).
+    pub fn rebuild_effective(&mut self, cache_id: u64) -> Result<()> {
+        let (l, s, kvd, dl) = (
+            self.spec.n_layer,
+            self.spec.max_seq,
+            self.spec.kv_dim(),
+            self.spec.ae_latent,
+        );
+        let len = self
+            .cache
+            .seq_len(cache_id)
+            .ok_or_else(|| anyhow!("unknown sequence"))?;
+        // pass 1: gather latents for AE layers, decode them in one call
+        let mut k_lat = vec![0.0f32; l * s * dl];
+        let mut v_lat = vec![0.0f32; l * s * dl];
+        let mut has_latent = false;
+        for layer in 0..l {
+            for (side, buf) in [(Side::K, &mut k_lat), (Side::V, &mut v_lat)] {
+                if let StoredRows::Latent(rows) = self.cache.stored_rows(cache_id, layer, side)? {
+                    has_latent = true;
+                    for t in 0..len {
+                        buf[layer * s * dl + t * dl..][..dl]
+                            .copy_from_slice(&rows[t * dl..(t + 1) * dl]);
+                    }
+                }
+            }
+        }
+        let (k_rec, v_rec) = if has_latent {
+            self.store.insert("k_lat", Tensor::f32(vec![l, s, dl], k_lat));
+            self.store.insert("v_lat", Tensor::f32(vec![l, s, dl], v_lat));
+            let entry = format!("{}_decode_kv", self.model);
+            let out = self.engine.execute(&entry, &self.store)?;
+            (
+                out[0].1.as_f32()?.to_vec(),
+                out[1].1.as_f32()?.to_vec(),
+            )
+        } else {
+            (vec![0.0; l * s * kvd], vec![0.0; l * s * kvd])
+        };
+
+        // pass 2: assemble effective rows layer-by-layer (aliases read the
+        // already-assembled previous layer)
+        let dh = self.spec.d_head;
+        let (reuse_k, reuse_v) = {
+            let (rk, rv) = self.cache.reuse_masks();
+            (rk.clone(), rv.clone())
+        };
+        let mut eff = EffBuf {
+            k: vec![0.0; l * s * kvd],
+            v: vec![0.0; l * s * kvd],
+        };
+        for layer in 0..l {
+            for (side, out_buf, rec, reuse) in [
+                (Side::K, 0usize, &k_rec, &reuse_k),
+                (Side::V, 1, &v_rec, &reuse_v),
+            ] {
+                let stored = self.cache.stored_rows(cache_id, layer, side)?;
+                let (dst_all, src_prev): (&mut Vec<f32>, Vec<f32>) = if out_buf == 0 {
+                    let prev = if layer > 0 {
+                        eff.k[(layer - 1) * s * kvd..layer * s * kvd].to_vec()
+                    } else {
+                        vec![0.0; s * kvd]
+                    };
+                    (&mut eff.k, prev)
+                } else {
+                    let prev = if layer > 0 {
+                        eff.v[(layer - 1) * s * kvd..layer * s * kvd].to_vec()
+                    } else {
+                        vec![0.0; s * kvd]
+                    };
+                    (&mut eff.v, prev)
+                };
+                let dst = &mut dst_all[layer * s * kvd..(layer + 1) * s * kvd];
+                match stored {
+                    StoredRows::Alias => {
+                        dst[..len * kvd].copy_from_slice(&src_prev[..len * kvd]);
+                    }
+                    StoredRows::Latent(_) => {
+                        for t in 0..len {
+                            dst[t * kvd..(t + 1) * kvd]
+                                .copy_from_slice(&rec[layer * s * kvd + t * kvd..][..kvd]);
+                        }
+                        // reused heads override the reconstruction
+                        for (h, &r) in reuse[layer].iter().enumerate() {
+                            if r {
+                                for t in 0..len {
+                                    dst[t * kvd + h * dh..t * kvd + (h + 1) * dh]
+                                        .copy_from_slice(
+                                            &src_prev[t * kvd + h * dh..t * kvd + (h + 1) * dh],
+                                        );
+                                }
+                            }
+                        }
+                    }
+                    StoredRows::Heads(rows, heads) => {
+                        let epr = heads.len() * dh;
+                        for t in 0..len {
+                            for (slot, &h) in heads.iter().enumerate() {
+                                dst[t * kvd + h * dh..t * kvd + (h + 1) * dh].copy_from_slice(
+                                    &rows[t * epr + slot * dh..t * epr + (slot + 1) * dh],
+                                );
+                            }
+                        }
+                        for (h, &r) in reuse[layer].iter().enumerate() {
+                            if r {
+                                for t in 0..len {
+                                    dst[t * kvd + h * dh..t * kvd + (h + 1) * dh]
+                                        .copy_from_slice(
+                                            &src_prev[t * kvd + h * dh..t * kvd + (h + 1) * dh],
+                                        );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.eff.insert(cache_id, eff);
+        Ok(())
+    }
+
+    /// One batched decode round over the given active sequences.
+    fn decode_round(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
+        let live: Vec<usize> = (0..active.len()).filter(|&i| !active[i].done).collect();
+        if live.is_empty() {
+            return Ok(());
+        }
+        if self.cfg.per_step_reconstruct {
+            for &i in &live {
+                self.rebuild_effective(active[i].cache_id)?;
+            }
+        }
+        let t0 = Instant::now();
+        let b = *self
+            .decode_batches
+            .iter()
+            .find(|&&b| b >= live.len())
+            .unwrap_or(self.decode_batches.last().unwrap());
+        let rows = live.len().min(b);
+        let (l, s, kvd, dl, v) = (
+            self.spec.n_layer,
+            self.spec.max_seq,
+            self.spec.kv_dim(),
+            self.spec.ae_latent,
+            self.spec.vocab,
+        );
+        let mut token = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        // recycle staging buffers across rounds: steal the previous
+        // round's tensors back out of the store instead of allocating
+        // fresh multi-MB vectors every round
+        let need = b * l * s * kvd;
+        let mut steal = |name: &str, fallback: &mut Vec<f32>| -> Vec<f32> {
+            let mut data = std::mem::take(fallback);
+            if let Ok(t) = self.store.get_mut(name) {
+                let old = std::mem::replace(
+                    t,
+                    Tensor::F32 {
+                        shape: vec![0],
+                        data: Vec::new(),
+                    },
+                );
+                if let Tensor::F32 { data: d, .. } = old {
+                    data = d;
+                }
+            }
+            data.resize(need, 0.0);
+            data
+        };
+        let mut k_cache = steal("k_cache", &mut self.kc_buf);
+        let mut v_cache = steal("v_cache", &mut self.vc_buf);
+        for (slot, &i) in live.iter().take(rows).enumerate() {
+            let seq = &active[i];
+            token[slot] = seq.next_token as i32;
+            pos[slot] = seq.pos as i32;
+            let eff = &self.eff[&seq.cache_id];
+            k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.k);
+            v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.v);
+        }
+        for slot in rows..b {
+            k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
+            v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
+        }
+        self.store.insert("token", Tensor::i32(vec![b], token));
+        self.store.insert("pos", Tensor::i32(vec![b], pos));
+        self.store
+            .insert("k_cache", Tensor::f32(vec![b, l, s, kvd], k_cache));
+        self.store
+            .insert("v_cache", Tensor::f32(vec![b, l, s, kvd], v_cache));
+        let entry = format!("{}_decode_step_b{}", self.model, b);
+        let out = self.engine.execute(&entry, &self.store)?;
+        let round = t0.elapsed();
+        self.metrics.decode_rounds += 1;
+        self.metrics.decode_slots_used += rows as u64;
+        self.metrics.decode_slots_total += b as u64;
+        self.metrics.decode_step_latency.record(round);
+
+        let logits = out[0].1.as_f32()?;
+        let k_lat = out[1].1.as_f32()?;
+        let v_lat = out[2].1.as_f32()?;
+        let k_raw = out[3].1.as_f32()?;
+        let v_raw = out[4].1.as_f32()?;
+        let k_eff = out[5].1.as_f32()?;
+        let v_eff = out[6].1.as_f32()?;
+
+        for (slot, &i) in live.iter().take(rows).enumerate() {
+            let sampling = active[i].req.sampling;
+            let next = self.sample(&logits[slot * v..(slot + 1) * v], sampling);
+            let seq = &mut active[i];
+            self.cache.append_token(
+                seq.cache_id,
+                &k_lat[slot * l * dl..(slot + 1) * l * dl],
+                &v_lat[slot * l * dl..(slot + 1) * l * dl],
+                &k_raw[slot * l * kvd..(slot + 1) * l * kvd],
+                &v_raw[slot * l * kvd..(slot + 1) * l * kvd],
+            )?;
+            let eff = self.eff.get_mut(&seq.cache_id).unwrap();
+            for layer in 0..l {
+                let dst = layer * s * kvd + seq.pos * kvd;
+                eff.k[dst..dst + kvd]
+                    .copy_from_slice(&k_eff[slot * l * kvd + layer * kvd..][..kvd]);
+                eff.v[dst..dst + kvd]
+                    .copy_from_slice(&v_eff[slot * l * kvd + layer * kvd..][..kvd]);
+            }
+            seq.pos += 1;
+            seq.output.push(next);
+            seq.next_token = next;
+            seq.decode_time += round;
+            seq.generated_check(self.spec.max_seq);
+            self.metrics.tokens_generated += 1;
+        }
+        Ok(())
+    }
+
+    fn retire(&mut self, seq: ActiveSeq) -> GenResponse {
+        self.cache.free_sequence(seq.cache_id);
+        self.eff.remove(&seq.cache_id);
+        self.metrics.requests_completed += 1;
+        GenResponse {
+            id: seq.req.id,
+            prompt_tokens: seq.req.prompt.len().min(self.spec.max_seq - 1),
+            generated_tokens: seq.output.len(),
+            output: seq.output,
+            prefill_latency: seq.prefill_end - seq.prefill_start,
+            decode_latency: seq.decode_time,
+            queue_latency: seq.prefill_start - seq.enqueued,
+        }
+    }
+
+    /// Serve a workload to completion with continuous batching: admit new
+    /// prefills whenever a decode slot frees up.
+    pub fn run(&mut self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
+        let t0 = Instant::now();
+        let enqueued = Instant::now();
+        let mut waiting: VecDeque<GenRequest> = requests.into();
+        let mut active: Vec<ActiveSeq> = Vec::new();
+        let mut done: Vec<GenResponse> = Vec::new();
+        loop {
+            while active.len() < self.cfg.max_batch {
+                match waiting.pop_front() {
+                    Some(req) => active.push(self.prefill(req, enqueued)?),
+                    None => break,
+                }
+            }
+            if active.is_empty() {
+                break;
+            }
+            self.decode_round(&mut active)?;
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].done {
+                    let seq = active.swap_remove(i);
+                    done.push(self.retire(seq));
+                } else {
+                    i += 1;
+                }
+            }
+            if active.is_empty() && waiting.is_empty() {
+                break;
+            }
+        }
+        self.metrics.wall += t0.elapsed();
+        done.sort_by_key(|r| r.id);
+        Ok(done)
+    }
+}
+
+impl ActiveSeq {
+    fn generated_check(&mut self, max_seq: usize) {
+        let last = *self.output.last().unwrap();
+        if self.output.len() >= self.req.max_new_tokens
+            || self.pos >= max_seq
+            || self.req.stop_byte == Some(last)
+        {
+            self.done = true;
+        }
+    }
+}

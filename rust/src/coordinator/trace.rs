@@ -1,0 +1,239 @@
+//! Serving workload traces: generation and replay.
+//!
+//! The paper's system evaluation sweeps batch size and sequence length;
+//! serving papers additionally characterize arrival processes.  This
+//! module generates deterministic traces (Poisson or bursty arrivals,
+//! configurable prompt/output length distributions) and the
+//! `serving_batch` example replays them against the coordinator.
+//! Traces serialize to JSON so a run can be archived in EXPERIMENTS.md
+//! and replayed bit-identically.
+
+use super::request::{GenRequest, Sampling};
+use crate::data::corpus::Corpus;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::time::Duration;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// exponential inter-arrival times at `rate` req/s
+    Poisson { rate: f64 },
+    /// bursts of `size` back-to-back requests every `period_ms`
+    Bursty { size: usize, period_ms: u64 },
+    /// everything at t=0 (offline / throughput mode)
+    Batch,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    pub arrival: Arrival,
+    pub prompt_len_range: (usize, usize),
+    pub max_new_range: (usize, usize),
+    pub temperature: Option<f32>,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 16,
+            arrival: Arrival::Poisson { rate: 4.0 },
+            prompt_len_range: (12, 32),
+            max_new_range: (16, 48),
+            temperature: None,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceItem {
+    pub at: Duration,
+    pub request: GenRequest,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub items: Vec<TraceItem>,
+}
+
+pub fn generate(cfg: &TraceConfig, corpus: &mut Corpus) -> Trace {
+    let mut rng = Rng::new(cfg.seed ^ 0x7ACE);
+    let mut items = Vec::with_capacity(cfg.n_requests);
+    let mut t = Duration::ZERO;
+    for i in 0..cfg.n_requests {
+        match cfg.arrival {
+            Arrival::Poisson { rate } => {
+                t += Duration::from_secs_f64(rng.exponential(rate));
+            }
+            Arrival::Bursty { size, period_ms } => {
+                if i > 0 && i % size == 0 {
+                    t += Duration::from_millis(period_ms);
+                }
+            }
+            Arrival::Batch => {}
+        }
+        let plen = rng.range(cfg.prompt_len_range.0, cfg.prompt_len_range.1 + 1);
+        let max_new = rng.range(cfg.max_new_range.0, cfg.max_new_range.1 + 1);
+        items.push(TraceItem {
+            at: t,
+            request: GenRequest {
+                id: i as u64,
+                prompt: corpus.tokens(plen),
+                max_new_tokens: max_new,
+                sampling: match cfg.temperature {
+                    Some(temp) => Sampling::Temperature(temp),
+                    None => Sampling::Greedy,
+                },
+                stop_byte: None,
+            },
+        });
+    }
+    Trace { items }
+}
+
+impl Trace {
+    pub fn total_prompt_tokens(&self) -> usize {
+        self.items.iter().map(|i| i.request.prompt.len()).sum()
+    }
+
+    pub fn total_max_new(&self) -> usize {
+        self.items.iter().map(|i| i.request.max_new_tokens).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::arr(self.items.iter().map(|i| {
+            json::obj(vec![
+                ("at_us", json::num(i.at.as_micros() as f64)),
+                ("id", json::num(i.request.id as f64)),
+                (
+                    "prompt",
+                    json::s(&String::from_utf8_lossy(&i.request.prompt)),
+                ),
+                ("max_new", json::num(i.request.max_new_tokens as f64)),
+                (
+                    "temperature",
+                    match i.request.sampling {
+                        Sampling::Greedy => Json::Null,
+                        Sampling::Temperature(t) => json::num(t as f64),
+                    },
+                ),
+            ])
+        }))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("trace must be array"))?;
+        let mut items = Vec::with_capacity(arr.len());
+        for e in arr {
+            let at =
+                Duration::from_micros(e.get("at_us").and_then(Json::as_i64).unwrap_or(0) as u64);
+            let prompt = e
+                .get("prompt")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("trace item missing prompt"))?
+                .as_bytes()
+                .to_vec();
+            let sampling = match e.get("temperature") {
+                Some(Json::Num(t)) => Sampling::Temperature(*t as f32),
+                _ => Sampling::Greedy,
+            };
+            items.push(TraceItem {
+                at,
+                request: GenRequest {
+                    id: e.get("id").and_then(Json::as_i64).unwrap_or(0) as u64,
+                    prompt,
+                    max_new_tokens: e
+                        .get("max_new")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("trace item missing max_new"))?,
+                    sampling,
+                    stop_byte: None,
+                },
+            });
+        }
+        Ok(Trace { items })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::wiki;
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg, &mut wiki(3));
+        let b = generate(&cfg, &mut wiki(3));
+        assert_eq!(a.items.len(), b.items.len());
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.request.prompt, y.request.prompt);
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let cfg = TraceConfig {
+            n_requests: 50,
+            ..Default::default()
+        };
+        let t = generate(&cfg, &mut wiki(0));
+        for w in t.items.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        assert!(t.items.last().unwrap().at > Duration::ZERO);
+    }
+
+    #[test]
+    fn bursty_arrivals_grouped() {
+        let cfg = TraceConfig {
+            n_requests: 9,
+            arrival: Arrival::Bursty {
+                size: 3,
+                period_ms: 100,
+            },
+            ..Default::default()
+        };
+        let t = generate(&cfg, &mut wiki(1));
+        assert_eq!(t.items[0].at, t.items[2].at);
+        assert_eq!(t.items[3].at, Duration::from_millis(100));
+        assert_eq!(t.items[8].at, Duration::from_millis(200));
+    }
+
+    #[test]
+    fn lengths_within_ranges() {
+        let cfg = TraceConfig {
+            n_requests: 40,
+            prompt_len_range: (5, 9),
+            max_new_range: (2, 4),
+            ..Default::default()
+        };
+        let t = generate(&cfg, &mut wiki(2));
+        for i in &t.items {
+            assert!((5..=9).contains(&i.request.prompt.len()));
+            assert!((2..=4).contains(&i.request.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = TraceConfig {
+            n_requests: 5,
+            temperature: Some(0.7),
+            ..Default::default()
+        };
+        let t = generate(&cfg, &mut wiki(4));
+        let j = t.to_json();
+        let t2 = Trace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(t.items.len(), t2.items.len());
+        for (a, b) in t.items.iter().zip(&t2.items) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+            assert_eq!(a.request.max_new_tokens, b.request.max_new_tokens);
+            assert_eq!(a.at.as_micros(), b.at.as_micros());
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Token batch assembly: fixed-shape [B, S] i32 token + f32 mask buffers
+//! matching what the AOT'd train/eval artifacts expect.
+
+use super::corpus::Corpus;
+use super::tasks::ChoiceItem;
+
+#[derive(Debug, Clone)]
+pub struct TokenBatch {
+    pub batch: usize,
+    pub seq: usize,
+    /// row-major [B, S]
+    pub tokens: Vec<i32>,
+    /// row-major [B, S]; 1.0 = valid
+    pub mask: Vec<f32>,
+}
+
+impl TokenBatch {
+    pub fn new(batch: usize, seq: usize) -> Self {
+        TokenBatch {
+            batch,
+            seq,
+            tokens: vec![0; batch * seq],
+            mask: vec![0.0; batch * seq],
+        }
+    }
+
+    /// Fill row `b` with `bytes` (truncated to S), mask the rest.
+    pub fn set_row(&mut self, b: usize, bytes: &[u8]) {
+        assert!(b < self.batch);
+        let n = bytes.len().min(self.seq);
+        for (i, &byte) in bytes[..n].iter().enumerate() {
+            self.tokens[b * self.seq + i] = byte as i32;
+            self.mask[b * self.seq + i] = 1.0;
+        }
+        for i in n..self.seq {
+            self.tokens[b * self.seq + i] = 0;
+            self.mask[b * self.seq + i] = 0.0;
+        }
+    }
+
+    pub fn row_len(&self, b: usize) -> usize {
+        self.mask[b * self.seq..(b + 1) * self.seq]
+            .iter()
+            .filter(|&&m| m > 0.0)
+            .count()
+    }
+
+    /// Number of loss-bearing (next-token) positions per row.
+    pub fn loss_tokens(&self, b: usize) -> usize {
+        self.row_len(b).saturating_sub(1)
+    }
+}
+
+/// Full-length language-model batches from a corpus stream.
+pub fn lm_batch(corpus: &mut Corpus, batch: usize, seq: usize) -> TokenBatch {
+    let mut tb = TokenBatch::new(batch, seq);
+    for b in 0..batch {
+        let bytes = corpus.tokens(seq);
+        tb.set_row(b, &bytes);
+    }
+    tb
+}
+
+/// Pack choice-task candidates into eval batches.  Each item occupies two
+/// rows (correct, wrong), so `batch` must be even; returns row metadata
+/// mapping row -> (item index, is_correct).
+pub fn choice_batches(
+    items: &[ChoiceItem],
+    batch: usize,
+    seq: usize,
+) -> Vec<(TokenBatch, Vec<(usize, bool)>)> {
+    assert!(batch >= 2 && batch % 2 == 0, "choice batches need even batch");
+    let mut out = Vec::new();
+    let per_batch = batch / 2;
+    for (chunk_idx, chunk) in items.chunks(per_batch).enumerate() {
+        let mut tb = TokenBatch::new(batch, seq);
+        let mut meta = Vec::with_capacity(batch);
+        for (i, item) in chunk.iter().enumerate() {
+            let idx = chunk_idx * per_batch + i;
+            tb.set_row(2 * i, &item.correct);
+            meta.push((idx, true));
+            tb.set_row(2 * i + 1, &item.wrong);
+            meta.push((idx, false));
+        }
+        // chunk may be short on the tail: pad meta with sentinel rows
+        while meta.len() < batch {
+            meta.push((usize::MAX, false));
+        }
+        out.push((tb, meta));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::wiki;
+    use crate::data::tasks::{generate, Task};
+
+    #[test]
+    fn lm_batch_shapes_and_masks() {
+        let mut c = wiki(0);
+        let tb = lm_batch(&mut c, 4, 64);
+        assert_eq!(tb.tokens.len(), 256);
+        assert!(tb.mask.iter().all(|&m| m == 1.0)); // full-length rows
+        assert!(tb.tokens.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn set_row_truncates_and_pads() {
+        let mut tb = TokenBatch::new(2, 8);
+        tb.set_row(0, b"abcdefghij"); // longer than S
+        tb.set_row(1, b"xy");
+        assert_eq!(tb.row_len(0), 8);
+        assert_eq!(tb.row_len(1), 2);
+        assert_eq!(tb.loss_tokens(1), 1);
+        assert_eq!(tb.tokens[8], b'x' as i32);
+        assert_eq!(tb.mask[10], 0.0);
+    }
+
+    #[test]
+    fn choice_batches_pair_rows() {
+        let items = generate(Task::Piqa, 5, 0);
+        let batches = choice_batches(&items, 4, 64);
+        assert_eq!(batches.len(), 3); // ceil(5/2)
+        let (tb, meta) = &batches[0];
+        assert_eq!(meta[0], (0, true));
+        assert_eq!(meta[1], (0, false));
+        assert_eq!(meta[2], (1, true));
+        assert!(tb.row_len(0) > 0);
+        // tail batch padded with sentinels
+        let (_, meta_last) = &batches[2];
+        assert_eq!(meta_last[2].0, usize::MAX);
+    }
+}

@@ -1,0 +1,6 @@
+//! Synthetic data substrates: corpora (wiki-like, c4-like), zero-shot
+//! choice tasks (piqa-like, wino-like), and batch assembly.
+
+pub mod batch;
+pub mod corpus;
+pub mod tasks;

@@ -1,0 +1,167 @@
+//! Synthetic zero-shot two-choice tasks standing in for PIQA and
+//! Winogrande (DESIGN.md §3).
+//!
+//! Both are scored exactly like the real benchmarks: the model assigns a
+//! total log-likelihood to each full candidate sequence and the lower-NLL
+//! candidate wins.  Neither task is ever trained on — the regularities
+//! they probe are only present in the pretraining corpus.
+//!
+//! * `piqa`-like: physical/semantic *plausibility* — which continuation is
+//!   compatible with the noun's class ("the furry | cat sleeps ." vs
+//!   "the furry | rock sleeps .").
+//! * `wino`-like: referential *agreement* — which verb form agrees with
+//!   the subject across a distractor noun phrase ("the cats near the dog
+//!   | sleep ." vs "| sleeps .").
+
+use super::corpus::{adjectives_for, NounClass, NOUNS, VERBS, VERBS_ANIMAL};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ChoiceItem {
+    /// full candidate sequences (prompt + continuation), bytes
+    pub correct: Vec<u8>,
+    pub wrong: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Piqa,
+    Wino,
+}
+
+impl Task {
+    pub fn by_name(name: &str) -> Option<Task> {
+        match name {
+            "piqa" => Some(Task::Piqa),
+            "wino" | "winogrande" => Some(Task::Wino),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Piqa => "piqa",
+            Task::Wino => "wino",
+        }
+    }
+}
+
+pub fn generate(task: Task, n: usize, seed: u64) -> Vec<ChoiceItem> {
+    let mut rng = Rng::new(seed ^ 0x7A5C);
+    (0..n)
+        .map(|_| match task {
+            Task::Piqa => piqa_item(&mut rng),
+            Task::Wino => wino_item(&mut rng),
+        })
+        .collect()
+}
+
+/// Plausibility: adjective (and verb) must match the noun class.
+fn piqa_item(rng: &mut Rng) -> ChoiceItem {
+    // pick an animal noun and an object noun; the adjective + verb come
+    // from the animal class, so the object continuation is implausible
+    let (good_pool, bad_pool, adj_class) = if rng.bool(0.5) {
+        (NounClass::Animal, NounClass::Object, NounClass::Animal)
+    } else {
+        (NounClass::Object, NounClass::Animal, NounClass::Object)
+    };
+    let good: Vec<_> = NOUNS.iter().filter(|n| n.class == good_pool).collect();
+    let bad: Vec<_> = NOUNS.iter().filter(|n| n.class == bad_pool).collect();
+    let gn = *rng.choice(&good);
+    let bn = *rng.choice(&bad);
+    let adj = *rng.choice(adjectives_for(adj_class));
+    let plural = rng.bool(0.5);
+    let (gs, bs) = if plural {
+        (gn.plur, bn.plur)
+    } else {
+        (gn.sing, bn.sing)
+    };
+    // verbs legal for the good class keep the correct side grammatical
+    let pool: Vec<(&str, &str)> = if good_pool == NounClass::Animal {
+        VERBS.iter().chain(VERBS_ANIMAL).copied().collect()
+    } else {
+        VERBS.to_vec()
+    };
+    let (vs, vp) = *rng.choice(&pool);
+    let verb = if plural { vp } else { vs };
+    ChoiceItem {
+        correct: format!("the {adj} {gs} {verb} .").into_bytes(),
+        wrong: format!("the {adj} {bs} {verb} .").into_bytes(),
+    }
+}
+
+/// Agreement: the verb must agree with the head noun, not the distractor.
+fn wino_item(rng: &mut Rng) -> ChoiceItem {
+    let noun = *rng.choice(NOUNS);
+    let dist = *rng.choice(NOUNS);
+    let subj_plural = rng.bool(0.5);
+    // distractor takes the opposite number to make agreement non-trivial
+    let subj = if subj_plural { noun.plur } else { noun.sing };
+    let dn = if subj_plural { dist.sing } else { dist.plur };
+    let pool: Vec<(&str, &str)> = if noun.class == NounClass::Animal {
+        VERBS.iter().chain(VERBS_ANIMAL).copied().collect()
+    } else {
+        VERBS.to_vec()
+    };
+    let (vs, vp) = *rng.choice(&pool);
+    let (good_v, bad_v) = if subj_plural { (vp, vs) } else { (vs, vp) };
+    ChoiceItem {
+        correct: format!("the {subj} near the {dn} {good_v} .").into_bytes(),
+        wrong: format!("the {subj} near the {dn} {bad_v} .").into_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(Task::Piqa, 10, 3);
+        let b = generate(Task::Piqa, 10, 3);
+        assert_eq!(a[0].correct, b[0].correct);
+        assert_eq!(a[9].wrong, b[9].wrong);
+    }
+
+    #[test]
+    fn piqa_choices_differ_only_in_noun() {
+        for item in generate(Task::Piqa, 50, 1) {
+            assert_ne!(item.correct, item.wrong);
+            let c = String::from_utf8(item.correct).unwrap();
+            let w = String::from_utf8(item.wrong).unwrap();
+            // same adjective prefix
+            let cp: Vec<&str> = c.split(' ').collect();
+            let wp: Vec<&str> = w.split(' ').collect();
+            assert_eq!(cp[1], wp[1], "{c} | {w}");
+            assert_ne!(cp[2], wp[2]);
+        }
+    }
+
+    #[test]
+    fn wino_choices_differ_only_in_verb() {
+        for item in generate(Task::Wino, 50, 2) {
+            let c = String::from_utf8(item.correct).unwrap();
+            let w = String::from_utf8(item.wrong).unwrap();
+            let cp: Vec<&str> = c.split(' ').collect();
+            let wp: Vec<&str> = w.split(' ').collect();
+            assert_eq!(cp[..cp.len() - 2], wp[..wp.len() - 2], "{c} | {w}");
+            assert_ne!(cp[cp.len() - 2], wp[wp.len() - 2]);
+        }
+    }
+
+    #[test]
+    fn wino_correct_agrees_with_subject() {
+        for item in generate(Task::Wino, 50, 4) {
+            let c = String::from_utf8(item.correct).unwrap();
+            let parts: Vec<&str> = c.split(' ').collect();
+            let subj = parts[1];
+            let verb = parts[parts.len() - 2];
+            let subj_plural = NOUNS.iter().any(|n| n.plur == subj);
+            let verb_plural = VERBS
+                .iter()
+                .chain(VERBS_ANIMAL)
+                .any(|(_, vp)| *vp == verb);
+            assert_eq!(subj_plural, verb_plural, "{c}");
+        }
+    }
+}

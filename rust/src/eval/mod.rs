@@ -1,0 +1,128 @@
+//! Evaluation harness: perplexity on the synthetic corpora and zero-shot
+//! accuracy on the choice tasks — the measurements behind Tables II-V.
+//!
+//! Every configuration (baseline, AE-k-layers, head reuse, +int8) is the
+//! *same* eval_loss artifact driven with different runtime masks, so
+//! baseline and compressed numbers are perfectly comparable.
+
+pub mod report;
+
+use crate::compress::planner::RuntimeMasks;
+use crate::data::batch::{choice_batches, lm_batch};
+use crate::data::corpus::Corpus;
+use crate::data::tasks::{generate, Task};
+use crate::model::ModelSpec;
+use crate::runtime::{Engine, Store, Tensor};
+use anyhow::Result;
+
+pub const EVAL_BATCH: usize = 8;
+
+fn apply_masks(store: &mut Store, spec: &ModelSpec, masks: &RuntimeMasks) {
+    let (l, h) = (spec.n_layer, spec.n_kv_head);
+    store.insert("compress", Tensor::f32(vec![l], masks.compress.clone()));
+    store.insert("reuse_k", Tensor::f32(vec![l, h], masks.reuse_k.clone()));
+    store.insert("reuse_v", Tensor::f32(vec![l, h], masks.reuse_v.clone()));
+    store.insert("quant", Tensor::scalar_f32(masks.quant));
+}
+
+/// Perplexity over `batches` batches of the corpus under the given masks.
+pub fn perplexity(
+    engine: &mut Engine,
+    store: &mut Store,
+    spec: &ModelSpec,
+    model: &str,
+    corpus: &mut Corpus,
+    batches: usize,
+    masks: &RuntimeMasks,
+) -> Result<f64> {
+    let entry = format!("{model}_eval_loss");
+    apply_masks(store, spec, masks);
+    let s = spec.max_seq;
+    let (mut nll_sum, mut tok_sum) = (0.0f64, 0.0f64);
+    for _ in 0..batches {
+        let tb = lm_batch(corpus, EVAL_BATCH, s);
+        store.insert("tokens", Tensor::i32(vec![EVAL_BATCH, s], tb.tokens));
+        store.insert("len_mask", Tensor::f32(vec![EVAL_BATCH, s], tb.mask));
+        let out = engine.execute(&entry, store)?;
+        nll_sum += out[0].1.as_f32()?.iter().map(|&x| x as f64).sum::<f64>();
+        tok_sum += out[1].1.as_f32()?.iter().map(|&x| x as f64).sum::<f64>();
+    }
+    Ok((nll_sum / tok_sum.max(1.0)).exp())
+}
+
+#[derive(Debug, Clone)]
+pub struct ZeroShotResult {
+    pub task: &'static str,
+    pub items: usize,
+    pub correct: usize,
+}
+
+impl ZeroShotResult {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.items.max(1) as f64
+    }
+}
+
+/// Zero-shot accuracy: score both candidates of each item by summed NLL;
+/// the lower-NLL candidate wins (exactly the real benchmarks' protocol).
+pub fn zero_shot(
+    engine: &mut Engine,
+    store: &mut Store,
+    spec: &ModelSpec,
+    model: &str,
+    task: Task,
+    n_items: usize,
+    seed: u64,
+    masks: &RuntimeMasks,
+) -> Result<ZeroShotResult> {
+    let entry = format!("{model}_eval_loss");
+    apply_masks(store, spec, masks);
+    let items = generate(task, n_items, seed);
+    let mut scores: Vec<(f64, f64)> = vec![(f64::NAN, f64::NAN); items.len()];
+    for (tb, meta) in choice_batches(&items, EVAL_BATCH, spec.max_seq) {
+        store.insert(
+            "tokens",
+            Tensor::i32(vec![EVAL_BATCH, spec.max_seq], tb.tokens.clone()),
+        );
+        store.insert(
+            "len_mask",
+            Tensor::f32(vec![EVAL_BATCH, spec.max_seq], tb.mask.clone()),
+        );
+        let out = engine.execute(&entry, store)?;
+        let nll = out[0].1.as_f32()?;
+        for (row, &(item, is_correct)) in meta.iter().enumerate() {
+            if item == usize::MAX {
+                continue;
+            }
+            if is_correct {
+                scores[item].0 = nll[row] as f64;
+            } else {
+                scores[item].1 = nll[row] as f64;
+            }
+        }
+    }
+    let correct = scores
+        .iter()
+        .filter(|(c, w)| c.is_finite() && w.is_finite() && c < w)
+        .count();
+    Ok(ZeroShotResult {
+        task: task.name(),
+        items: items.len(),
+        correct,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_shot_result_math() {
+        let r = ZeroShotResult {
+            task: "piqa",
+            items: 200,
+            correct: 131,
+        };
+        assert!((r.accuracy() - 0.655).abs() < 1e-9);
+    }
+}

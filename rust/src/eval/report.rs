@@ -1,0 +1,193 @@
+//! Experiment report writer: renders result tables as aligned plain text
+//! and GitHub markdown, and archives them as JSON — the format quoted in
+//! EXPERIMENTS.md.  Keeping this in the library (rather than ad-hoc
+//! println!s in examples) makes every repro table machine-diffable.
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Str(String),
+    Num(f64, usize), // value, decimals
+    Pct(f64),
+}
+
+impl Cell {
+    pub fn s(v: impl Into<String>) -> Cell {
+        Cell::Str(v.into())
+    }
+    pub fn f(v: f64, decimals: usize) -> Cell {
+        Cell::Num(v, decimals)
+    }
+    pub fn pct(v: f64) -> Cell {
+        Cell::Pct(v)
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Num(v, d) => format!("{v:.*}", d),
+            Cell::Pct(v) => format!("{:.1}%", v * 100.0),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Cell::Str(s) => json::s(s),
+            Cell::Num(v, _) => json::num(*v),
+            Cell::Pct(v) => json::num(*v),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) -> &mut Self {
+        assert_eq!(cells.len(), self.columns.len(), "{}", self.title);
+        self.rows.push(cells);
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.columns.iter().map(String::len).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.render().len());
+            }
+        }
+        w
+    }
+
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = format!("{}\n", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+            .collect();
+        out.push_str(&format!("  {}\n", header.join("  ")));
+        for r in &self.rows {
+            let cells: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c.render(), width = w[i]))
+                .collect();
+            out.push_str(&format!("  {}\n", cells.join("  ")));
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.columns.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.columns.len())
+        ));
+        for r in &self.rows {
+            let cells: Vec<String> = r.iter().map(Cell::render).collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            (
+                "columns",
+                json::arr(self.columns.iter().map(|c| json::s(c))),
+            ),
+            (
+                "rows",
+                json::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| json::arr(r.iter().map(Cell::to_json))),
+                ),
+            ),
+        ])
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_text());
+    }
+
+    /// Append markdown to a report file (e.g. results/experiments.md).
+    pub fn append_markdown(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        writeln!(f, "{}", self.to_markdown())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Table X", &["config", "ppl", "savings"]);
+        t.row(vec![Cell::s("baseline"), Cell::f(3.021, 3), Cell::pct(0.0)]);
+        t.row(vec![Cell::s("AE 4L"), Cell::f(3.444, 3), Cell::pct(0.25)]);
+        t
+    }
+
+    #[test]
+    fn text_alignment() {
+        let txt = sample().to_text();
+        assert!(txt.contains("Table X"));
+        assert!(txt.contains("3.021"));
+        assert!(txt.contains("25.0%"));
+        // aligned columns: every data line has the same length
+        let lines: Vec<&str> = txt.lines().skip(1).collect();
+        assert_eq!(lines[0].len(), lines[1].len());
+        assert_eq!(lines[1].len(), lines[2].len());
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.starts_with("### Table X"));
+        // header + separator + 2 rows, 4 pipes each
+        assert_eq!(md.matches('|').count(), 4 * 4);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = sample().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.get("rows").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec![Cell::s("only one")]);
+    }
+}

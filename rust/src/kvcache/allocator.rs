@@ -1,0 +1,198 @@
+//! Block pool: recycling allocator with byte accounting.
+//!
+//! Blocks freed when sequences retire are recycled by (format, row
+//! elements) class instead of returning to the system allocator — the
+//! serving loop allocates and frees cache blocks on every request, and
+//! this keeps the hot path free of large allocations.  Accounting feeds
+//! the coordinator's admission control and the memory numbers reported in
+//! EXPERIMENTS.md (cross-checked against model::memory's Eq. 3 math).
+
+use super::block::{Block, Format};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Class {
+    format: Format,
+    elements: usize,
+    capacity: usize,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct PoolStats {
+    /// bytes in blocks currently handed out
+    pub live_bytes: usize,
+    /// bytes parked on free lists
+    pub free_bytes: usize,
+    /// high-water mark of live_bytes
+    pub peak_live_bytes: usize,
+    pub allocations: u64,
+    pub recycles: u64,
+    pub frees: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct BlockPool {
+    free: HashMap<Class, Vec<Block>>,
+    stats: PoolStats,
+    /// optional cap on live bytes (admission control); None = unlimited
+    pub budget_bytes: Option<usize>,
+}
+
+impl BlockPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(budget_bytes: usize) -> Self {
+        BlockPool {
+            budget_bytes: Some(budget_bytes),
+            ..Default::default()
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    pub fn would_fit(&self, format: Format, elements: usize, capacity: usize) -> bool {
+        match self.budget_bytes {
+            None => true,
+            Some(b) => {
+                self.stats.live_bytes + format.row_bytes(elements) * capacity <= b
+            }
+        }
+    }
+
+    /// Allocate (or recycle) a block. Returns None if over budget.
+    pub fn alloc(&mut self, format: Format, elements: usize, capacity: usize) -> Option<Block> {
+        if !self.would_fit(format, elements, capacity) {
+            return None;
+        }
+        let class = Class {
+            format,
+            elements,
+            capacity,
+        };
+        let block = if let Some(mut b) = self.free.get_mut(&class).and_then(Vec::pop) {
+            self.stats.free_bytes -= b.stored_bytes();
+            self.stats.recycles += 1;
+            b.rows = 0; // reset without zeroing: rows gate all reads
+            b
+        } else {
+            self.stats.allocations += 1;
+            Block::new(format, elements, capacity)
+        };
+        self.stats.live_bytes += block.stored_bytes();
+        self.stats.peak_live_bytes = self.stats.peak_live_bytes.max(self.stats.live_bytes);
+        Some(block)
+    }
+
+    pub fn free(&mut self, block: Block) {
+        let class = Class {
+            format: block.format,
+            elements: block.elements_per_row,
+            capacity: block.capacity,
+        };
+        self.stats.live_bytes -= block.stored_bytes();
+        self.stats.free_bytes += block.stored_bytes();
+        self.stats.frees += 1;
+        self.free.entry(class).or_default().push(block);
+    }
+
+    /// Drop the free lists (e.g. between experiments).
+    pub fn trim(&mut self) {
+        self.free.clear();
+        self.stats.free_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn alloc_free_recycle() {
+        let mut p = BlockPool::new();
+        let b = p.alloc(Format::F32, 8, 4).unwrap();
+        let bytes = b.stored_bytes();
+        assert_eq!(p.stats().live_bytes, bytes);
+        p.free(b);
+        assert_eq!(p.stats().live_bytes, 0);
+        assert_eq!(p.stats().free_bytes, bytes);
+        let _b2 = p.alloc(Format::F32, 8, 4).unwrap();
+        assert_eq!(p.stats().recycles, 1);
+        assert_eq!(p.stats().allocations, 1);
+        assert_eq!(p.stats().free_bytes, 0);
+    }
+
+    #[test]
+    fn recycled_block_is_reset() {
+        let mut p = BlockPool::new();
+        let mut b = p.alloc(Format::F32, 2, 2).unwrap();
+        b.push_row(&[1.0, 2.0]);
+        p.free(b);
+        let b2 = p.alloc(Format::F32, 2, 2).unwrap();
+        assert_eq!(b2.rows, 0);
+        assert!(!b2.is_full());
+    }
+
+    #[test]
+    fn budget_enforced() {
+        let mut p = BlockPool::with_budget(100);
+        assert!(p.alloc(Format::F32, 8, 4).is_none()); // 128 B > 100
+        let b = p.alloc(Format::F32, 4, 4).unwrap(); // 64 B
+        assert!(p.alloc(Format::F32, 4, 4).is_none()); // would exceed
+        p.free(b);
+        assert!(p.alloc(Format::F32, 4, 4).is_some());
+    }
+
+    #[test]
+    fn accounting_invariants_under_random_traffic() {
+        check(40, |rng| {
+            let mut p = BlockPool::new();
+            let mut live: Vec<Block> = Vec::new();
+            let mut expected_live = 0usize;
+            for _ in 0..200 {
+                if live.is_empty() || rng.bool(0.6) {
+                    let elements = rng.range(1, 32);
+                    let fmt = *rng.choice(&[Format::F32, Format::F16, Format::Int8]);
+                    let b = p.alloc(fmt, elements, 8).unwrap();
+                    expected_live += b.stored_bytes();
+                    live.push(b);
+                } else {
+                    let i = rng.below(live.len());
+                    let b = live.swap_remove(i);
+                    expected_live -= b.stored_bytes();
+                    p.free(b);
+                }
+                prop_assert!(
+                    p.stats().live_bytes == expected_live,
+                    "live {} != expected {}",
+                    p.stats().live_bytes,
+                    expected_live
+                );
+                prop_assert!(p.stats().peak_live_bytes >= p.stats().live_bytes);
+            }
+            // freeing everything zeroes live bytes
+            for b in live.drain(..) {
+                p.free(b);
+            }
+            prop_assert!(p.stats().live_bytes == 0);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trim_clears_freelists() {
+        let mut p = BlockPool::new();
+        let b = p.alloc(Format::F16, 8, 8).unwrap();
+        p.free(b);
+        assert!(p.stats().free_bytes > 0);
+        p.trim();
+        assert_eq!(p.stats().free_bytes, 0);
+        let _ = p.alloc(Format::F16, 8, 8).unwrap();
+        assert_eq!(p.stats().allocations, 2); // no recycle after trim
+    }
+}

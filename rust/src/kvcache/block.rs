@@ -1,0 +1,300 @@
+//! Cache block storage formats and row codecs.
+//!
+//! A block holds `block_size` token rows for one (sequence, layer, K|V)
+//! stream.  Rows are encoded per the layer's store kind:
+//!
+//! * `F32` / `F16`  — raw (or head-subset) KV vectors
+//! * `Int8`         — Eq. 4 affine-quantized codes + 8-byte header
+//!
+//! Latent rows (AE-compressed layers) use the same codecs with
+//! `ae_latent` elements — the format is orthogonal to what the elements
+//! mean.  f16 conversion is implemented in-tree (no `half` crate offline).
+
+use crate::compress::quant::{dequantize_into, quantize, QuantVec};
+
+/// Element encoding for stored rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    F32,
+    F16,
+    Int8,
+}
+
+impl Format {
+    pub fn row_bytes(self, elements: usize) -> usize {
+        match self {
+            Format::F32 => elements * 4,
+            Format::F16 => elements * 2,
+            Format::Int8 => elements + 8, // codes + f32 scale + f32 zeropoint
+        }
+    }
+}
+
+// --- f16 (IEEE 754 binary16) conversion -----------------------------------
+
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal: round-to-nearest-even on the truncated 13 bits
+        let mut mant = frac >> 13;
+        let rem = frac & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+            mant += 1;
+        }
+        let mut e16 = (unbiased + 15) as u32;
+        if mant == 0x400 {
+            mant = 0;
+            e16 += 1;
+            if e16 >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((e16 as u16) << 10) | (mant as u16);
+    }
+    if unbiased >= -24 {
+        // subnormal: mant16 = round(full * 2^(unbiased+1)), full = 1.frac23
+        let shift = (-1 - unbiased) as u32;
+        let full = frac | 0x80_0000;
+        let mant = full >> shift;
+        let rem = full & ((1 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mant = if rem > half || (rem == half && (mant & 1) == 1) {
+            mant + 1
+        } else {
+            mant
+        };
+        return sign | mant as u16;
+    }
+    sign // underflow -> signed zero
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (frac << 13)
+    } else if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: value = frac * 2^-24; normalize to 1.f * 2^(p-24)
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            f &= 0x3FF;
+            sign | (((114 + e) as u32) << 23) | (f << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// One storage block: encoded bytes for up to `capacity` rows.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub format: Format,
+    pub elements_per_row: usize,
+    pub capacity: usize,
+    pub rows: usize,
+    pub data: Vec<u8>,
+}
+
+impl Block {
+    pub fn new(format: Format, elements_per_row: usize, capacity: usize) -> Block {
+        Block {
+            format,
+            elements_per_row,
+            capacity,
+            rows: 0,
+            data: vec![0u8; format.row_bytes(elements_per_row) * capacity],
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.rows == self.capacity
+    }
+
+    pub fn stored_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.elements_per_row);
+        assert!(!self.is_full());
+        let rb = self.format.row_bytes(self.elements_per_row);
+        let off = self.rows * rb;
+        match self.format {
+            Format::F32 => {
+                for (i, &v) in row.iter().enumerate() {
+                    self.data[off + i * 4..off + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            Format::F16 => {
+                for (i, &v) in row.iter().enumerate() {
+                    self.data[off + i * 2..off + i * 2 + 2]
+                        .copy_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                }
+            }
+            Format::Int8 => {
+                let q = quantize(row);
+                self.data[off..off + 4].copy_from_slice(&q.scale.to_le_bytes());
+                self.data[off + 4..off + 8].copy_from_slice(&q.zeropoint.to_le_bytes());
+                for (i, &c) in q.codes.iter().enumerate() {
+                    self.data[off + 8 + i] = c as u8;
+                }
+            }
+        }
+        self.rows += 1;
+    }
+
+    pub fn read_row(&self, idx: usize, out: &mut [f32]) {
+        assert!(idx < self.rows);
+        assert_eq!(out.len(), self.elements_per_row);
+        let rb = self.format.row_bytes(self.elements_per_row);
+        let off = idx * rb;
+        match self.format {
+            Format::F32 => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = f32::from_le_bytes(
+                        self.data[off + i * 4..off + i * 4 + 4].try_into().unwrap(),
+                    );
+                }
+            }
+            Format::F16 => {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = f16_bits_to_f32(u16::from_le_bytes(
+                        self.data[off + i * 2..off + i * 2 + 2].try_into().unwrap(),
+                    ));
+                }
+            }
+            Format::Int8 => {
+                let scale = f32::from_le_bytes(self.data[off..off + 4].try_into().unwrap());
+                let zeropoint =
+                    f32::from_le_bytes(self.data[off + 4..off + 8].try_into().unwrap());
+                let codes: Vec<i8> = self.data[off + 8..off + 8 + self.elements_per_row]
+                    .iter()
+                    .map(|&b| b as i8)
+                    .collect();
+                dequantize_into(
+                    &QuantVec {
+                        codes,
+                        scale,
+                        zeropoint,
+                    },
+                    out,
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        check(200, |rng| {
+            let v = rng.normal_f32(0.0, 10.0);
+            let r = f16_bits_to_f32(f32_to_f16_bits(v));
+            let rel = ((v - r) / v.abs().max(1e-3)).abs();
+            prop_assert!(rel < 1e-3, "v={v} r={r} rel={rel}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(1e9), 0x7C00); // overflow
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+        assert_eq!(f32_to_f16_bits(1e-10), 0); // underflow to zero
+        // subnormal roundtrip
+        let sub = f16_bits_to_f32(0x0001);
+        assert!(sub > 0.0 && sub < 1e-7);
+        assert_eq!(f32_to_f16_bits(sub), 0x0001);
+    }
+
+    #[test]
+    fn block_f32_roundtrip() {
+        let mut b = Block::new(Format::F32, 8, 4);
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| (0..8).map(|j| (i * 8 + j) as f32).collect()).collect();
+        for r in &rows {
+            b.push_row(r);
+        }
+        assert!(b.is_full());
+        let mut out = vec![0.0; 8];
+        for (i, r) in rows.iter().enumerate() {
+            b.read_row(i, &mut out);
+            assert_eq!(&out, r);
+        }
+    }
+
+    #[test]
+    fn block_formats_bounded_error() {
+        check(60, |rng| {
+            let elements = rng.range(1, 64);
+            let fmt = *rng.choice(&[Format::F32, Format::F16, Format::Int8]);
+            let mut b = Block::new(fmt, elements, 8);
+            let row: Vec<f32> = (0..elements).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            b.push_row(&row);
+            let mut out = vec![0.0; elements];
+            b.read_row(0, &mut out);
+            let tol = match fmt {
+                Format::F32 => 0.0,
+                Format::F16 => 0.01,
+                Format::Int8 => {
+                    let lo = row.iter().cloned().fold(f32::INFINITY, f32::min);
+                    let hi = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    (hi - lo).max(1e-8) / 255.0 + 1e-5
+                }
+            };
+            for (a, c) in row.iter().zip(&out) {
+                prop_assert!((a - c).abs() <= tol, "fmt {fmt:?}: {} vs {}", a, c);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn storage_sizes() {
+        assert_eq!(Format::F32.row_bytes(64), 256);
+        assert_eq!(Format::F16.row_bytes(64), 128);
+        assert_eq!(Format::Int8.row_bytes(64), 72);
+        let b = Block::new(Format::Int8, 64, 16);
+        assert_eq!(b.stored_bytes(), 72 * 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overfull_block_panics() {
+        let mut b = Block::new(Format::F32, 4, 1);
+        b.push_row(&[0.0; 4]);
+        b.push_row(&[0.0; 4]);
+    }
+}

@@ -1,0 +1,558 @@
+//! The compressed KV-cache manager — the storage half of KV-CAR's
+//! contribution, owned by the rust coordinator.
+//!
+//! Per (layer, K|V) stream the compression plan induces a *store kind*:
+//!
+//! * `FullAlias`       — every head reused from layer l-1: nothing stored.
+//! * `Latent`          — AE layer: `ae_latent` elements per token (the
+//!                       encoder output; f32 or int8 per Eq. 4).
+//! * `Heads(stored)`   — raw storage for the non-reused head subset.
+//!
+//! The persistent store holds only compressed payloads; reconstruction to
+//! full-width vectors happens on retrieval (decoder artifact + alias
+//! resolution), in scratch buffers owned by the scheduler — the paper's
+//! decode-on-retrieval dataflow (Fig. 1).  Byte accounting here is the
+//! measured counterpart of the Eq. 3 analysis in `model::memory` and the
+//! two are cross-checked in tests.
+
+use super::allocator::{BlockPool, PoolStats};
+use super::block::{Block, Format};
+use crate::model::memory::CompressionPlan;
+use crate::model::ModelSpec;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreKind {
+    FullAlias,
+    Latent,
+    /// stored (non-reused) head indices, ascending
+    Heads(Vec<usize>),
+}
+
+impl StoreKind {
+    pub fn elements(&self, spec: &ModelSpec) -> usize {
+        match self {
+            StoreKind::FullAlias => 0,
+            StoreKind::Latent => spec.ae_latent,
+            StoreKind::Heads(h) => h.len() * spec.d_head,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    K,
+    V,
+}
+
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub spec: ModelSpec,
+    pub plan: CompressionPlan,
+    /// encoding of raw (non-latent) rows
+    pub raw_format: Format,
+    /// encoding of latent rows (Int8 when the plan stacks Eq. 4)
+    pub latent_format: Format,
+    pub block_size: usize,
+}
+
+impl CacheConfig {
+    pub fn new(spec: ModelSpec, plan: CompressionPlan) -> Self {
+        let latent_format = if plan.quant_int8 {
+            Format::Int8
+        } else {
+            Format::F32
+        };
+        CacheConfig {
+            spec,
+            plan,
+            raw_format: Format::F32,
+            latent_format,
+            block_size: 16,
+        }
+    }
+
+    pub fn store_kind(&self, layer: usize, side: Side) -> StoreKind {
+        let reuse = match side {
+            Side::K => &self.plan.reuse_k[layer],
+            Side::V => &self.plan.reuse_v[layer],
+        };
+        if reuse.iter().all(|&r| r) {
+            return StoreKind::FullAlias;
+        }
+        if self.plan.ae_layers[layer] {
+            return StoreKind::Latent;
+        }
+        StoreKind::Heads(
+            (0..self.spec.n_kv_head)
+                .filter(|&h| !reuse[h])
+                .collect(),
+        )
+    }
+
+    fn format_for(&self, kind: &StoreKind) -> Format {
+        match kind {
+            StoreKind::Latent => self.latent_format,
+            _ => {
+                if self.plan.quant_int8 {
+                    Format::Int8
+                } else {
+                    self.raw_format
+                }
+            }
+        }
+    }
+}
+
+/// Rows of one stream read back from the store, decoded to f32.
+#[derive(Debug, Clone)]
+pub enum StoredRows {
+    /// nothing stored — resolve from layer l-1
+    Alias,
+    /// [len, ae_latent] row-major latents (run the decoder artifact)
+    Latent(Vec<f32>),
+    /// [len, stored_heads * d_head] row-major raw slices + head indices
+    Heads(Vec<f32>, Vec<usize>),
+}
+
+struct Stream {
+    kind: StoreKind,
+    blocks: Vec<Block>,
+}
+
+struct SeqCache {
+    len: usize,
+    /// [layer][side] streams, side 0 = K, 1 = V
+    streams: Vec<[Stream; 2]>,
+}
+
+pub struct CacheManager {
+    pub cfg: CacheConfig,
+    pool: BlockPool,
+    seqs: HashMap<u64, SeqCache>,
+    next_id: u64,
+}
+
+impl CacheManager {
+    pub fn new(cfg: CacheConfig) -> Self {
+        cfg.plan.validate().expect("invalid compression plan");
+        CacheManager {
+            cfg,
+            pool: BlockPool::new(),
+            seqs: HashMap::new(),
+            next_id: 1,
+        }
+    }
+
+    pub fn with_budget(cfg: CacheConfig, budget_bytes: usize) -> Self {
+        let mut m = Self::new(cfg);
+        m.pool = BlockPool::with_budget(budget_bytes);
+        m
+    }
+
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
+    pub fn n_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn create_sequence(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        let spec = &self.cfg.spec;
+        let streams = (0..spec.n_layer)
+            .map(|l| {
+                [
+                    Stream {
+                        kind: self.cfg.store_kind(l, Side::K),
+                        blocks: Vec::new(),
+                    },
+                    Stream {
+                        kind: self.cfg.store_kind(l, Side::V),
+                        blocks: Vec::new(),
+                    },
+                ]
+            })
+            .collect();
+        self.seqs.insert(id, SeqCache { len: 0, streams });
+        id
+    }
+
+    pub fn free_sequence(&mut self, id: u64) {
+        if let Some(seq) = self.seqs.remove(&id) {
+            for mut pair in seq.streams {
+                for s in pair.iter_mut() {
+                    for b in s.blocks.drain(..) {
+                        self.pool.free(b);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn seq_len(&self, id: u64) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// Append one token's storage rows for every layer.
+    ///
+    /// `k_lat`/`v_lat`: [L * ae_latent] row-major latents (decode_step /
+    /// encode_kv outputs — ignored for non-AE layers);
+    /// `k_raw`/`v_raw`: [L * kv_dim] raw rows (ignored for AE layers).
+    pub fn append_token(
+        &mut self,
+        id: u64,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        k_raw: &[f32],
+        v_raw: &[f32],
+    ) -> Result<()> {
+        let spec = self.cfg.spec.clone();
+        let (l, dl, kvd, dh) = (spec.n_layer, spec.ae_latent, spec.kv_dim(), spec.d_head);
+        anyhow::ensure!(k_lat.len() == l * dl && v_lat.len() == l * dl, "latent shape");
+        anyhow::ensure!(k_raw.len() == l * kvd && v_raw.len() == l * kvd, "raw shape");
+        let seq = self
+            .seqs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        anyhow::ensure!(seq.len < spec.max_seq, "sequence at max_seq");
+
+        let mut scratch: Vec<f32> = Vec::with_capacity(kvd);
+        for layer in 0..l {
+            for (side, lat, raw) in [(0usize, k_lat, k_raw), (1, v_lat, v_raw)] {
+                // borrow dance: compute row before touching the stream
+                let kind = seq.streams[layer][side].kind.clone();
+                let row: Option<&[f32]> = match &kind {
+                    StoreKind::FullAlias => None,
+                    StoreKind::Latent => Some(&lat[layer * dl..(layer + 1) * dl]),
+                    StoreKind::Heads(heads) => {
+                        scratch.clear();
+                        for &h in heads {
+                            let base = layer * kvd + h * dh;
+                            scratch.extend_from_slice(&raw[base..base + dh]);
+                        }
+                        Some(&scratch)
+                    }
+                };
+                if let Some(row) = row {
+                    let fmt = self.cfg.format_for(&kind);
+                    let stream = &mut seq.streams[layer][side];
+                    if stream.blocks.last().map_or(true, Block::is_full) {
+                        let b = self
+                            .pool
+                            .alloc(fmt, row.len(), self.cfg.block_size)
+                            .ok_or_else(|| anyhow!("cache budget exceeded"))?;
+                        stream.blocks.push(b);
+                    }
+                    stream.blocks.last_mut().unwrap().push_row(row);
+                }
+            }
+        }
+        seq.len += 1;
+        Ok(())
+    }
+
+    /// Read back one stream, decoded to f32 (see `StoredRows`).
+    pub fn stored_rows(&self, id: u64, layer: usize, side: Side) -> Result<StoredRows> {
+        let seq = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        let stream = &seq.streams[layer][side as usize];
+        match &stream.kind {
+            StoreKind::FullAlias => Ok(StoredRows::Alias),
+            StoreKind::Latent => {
+                Ok(StoredRows::Latent(read_all(stream, seq.len)))
+            }
+            StoreKind::Heads(heads) => Ok(StoredRows::Heads(
+                read_all(stream, seq.len),
+                heads.clone(),
+            )),
+        }
+    }
+
+    /// Measured stored bytes for a sequence (block capacity granularity).
+    pub fn seq_stored_bytes(&self, id: u64) -> usize {
+        self.seqs
+            .get(&id)
+            .map(|s| {
+                s.streams
+                    .iter()
+                    .flat_map(|pair| pair.iter())
+                    .flat_map(|st| st.blocks.iter())
+                    .map(Block::stored_bytes)
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// What an uncompressed f32 cache would use for the same length.
+    pub fn seq_baseline_bytes(&self, id: u64) -> usize {
+        let len = self.seq_len(id).unwrap_or(0);
+        // round up to block granularity for a like-for-like comparison
+        let blocks = len.div_ceil(self.cfg.block_size);
+        let spec = &self.cfg.spec;
+        2 * spec.n_layer
+            * Format::F32.row_bytes(spec.kv_dim())
+            * blocks
+            * self.cfg.block_size
+    }
+
+    pub fn reuse_masks(&self) -> (&Vec<Vec<bool>>, &Vec<Vec<bool>>) {
+        (&self.cfg.plan.reuse_k, &self.cfg.plan.reuse_v)
+    }
+}
+
+fn read_all(stream: &Stream, len: usize) -> Vec<f32> {
+    let epr = stream
+        .blocks
+        .first()
+        .map(|b| b.elements_per_row)
+        .unwrap_or(0);
+    let mut out = vec![0.0f32; len * epr];
+    let mut row = 0usize;
+    for b in &stream.blocks {
+        for i in 0..b.rows {
+            if row >= len {
+                break;
+            }
+            b.read_row(i, &mut out[row * epr..(row + 1) * epr]);
+            row += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::memory::{kv_bytes_per_token, CompressionPlan};
+    use crate::model::{Arch, ModelSpec};
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "test".into(),
+            arch: Arch::Gpt2,
+            vocab: 256,
+            n_layer: 4,
+            d_model: 32,
+            n_head: 4,
+            n_kv_head: 4,
+            d_head: 8,
+            ffn_dim: 64,
+            max_seq: 64,
+            ae_hidden: 24,
+            ae_latent: 16,
+            bytes_per_el: 4,
+        }
+    }
+
+    fn rand_rows(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    fn append_n(m: &mut CacheManager, id: u64, n: usize, rng: &mut Rng) {
+        let spec = m.cfg.spec.clone();
+        for _ in 0..n {
+            let kl = rand_rows(rng, spec.n_layer * spec.ae_latent);
+            let vl = rand_rows(rng, spec.n_layer * spec.ae_latent);
+            let kr = rand_rows(rng, spec.n_layer * spec.kv_dim());
+            let vr = rand_rows(rng, spec.n_layer * spec.kv_dim());
+            m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrip_exact() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(0);
+        let kr = rand_rows(&mut rng, spec.n_layer * spec.kv_dim());
+        let dummy_lat = vec![0.0; spec.n_layer * spec.ae_latent];
+        m.append_token(id, &dummy_lat, &dummy_lat, &kr, &kr).unwrap();
+        match m.stored_rows(id, 2, Side::K).unwrap() {
+            StoredRows::Heads(rows, heads) => {
+                assert_eq!(heads, vec![0, 1, 2, 3]);
+                assert_eq!(rows, kr[2 * spec.kv_dim()..3 * spec.kv_dim()].to_vec());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn latent_layers_store_latents() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 2);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(1);
+        let kl = rand_rows(&mut rng, spec.n_layer * spec.ae_latent);
+        let zeros_raw = vec![0.0; spec.n_layer * spec.kv_dim()];
+        m.append_token(id, &kl, &kl, &zeros_raw, &zeros_raw).unwrap();
+        match m.stored_rows(id, 0, Side::K).unwrap() {
+            StoredRows::Latent(rows) => {
+                assert_eq!(rows, kl[..spec.ae_latent].to_vec());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            m.stored_rows(id, 3, Side::K).unwrap(),
+            StoredRows::Heads(_, _)
+        ));
+    }
+
+    #[test]
+    fn fully_reused_layer_stores_nothing() {
+        let spec = tiny_spec();
+        let mut plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        plan.reuse_k[1] = vec![true; 4];
+        plan.reuse_v[1] = vec![true; 4];
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(2);
+        append_n(&mut m, id, 16, &mut rng);
+        assert!(matches!(
+            m.stored_rows(id, 1, Side::K).unwrap(),
+            StoredRows::Alias
+        ));
+        // measured == modeled (block-aligned length)
+        let measured = m.seq_stored_bytes(id);
+        let modeled = kv_bytes_per_token(&spec, &plan) * 16;
+        assert_eq!(measured, modeled);
+    }
+
+    #[test]
+    fn partial_head_reuse_stores_subset() {
+        let spec = tiny_spec();
+        let mut plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        plan.reuse_k[2][1] = true;
+        plan.reuse_k[2][3] = true;
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(3);
+        let kr = rand_rows(&mut rng, spec.n_layer * spec.kv_dim());
+        let lat = vec![0.0; spec.n_layer * spec.ae_latent];
+        m.append_token(id, &lat, &lat, &kr, &kr).unwrap();
+        match m.stored_rows(id, 2, Side::K).unwrap() {
+            StoredRows::Heads(rows, heads) => {
+                assert_eq!(heads, vec![0, 2]);
+                let dh = spec.d_head;
+                let base = 2 * spec.kv_dim();
+                assert_eq!(&rows[..dh], &kr[base..base + dh]);
+                assert_eq!(&rows[dh..2 * dh], &kr[base + 2 * dh..base + 3 * dh]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn measured_savings_match_model_accounting() {
+        // across random plans, measured block bytes == Eq.3 generalized
+        // accounting at block-aligned lengths
+        check(25, |rng| {
+            let spec = tiny_spec();
+            let mut plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+            for l in 0..spec.n_layer {
+                plan.ae_layers[l] = rng.bool(0.4);
+                if l > 0 {
+                    for h in 0..spec.n_kv_head {
+                        plan.reuse_k[l][h] = rng.bool(0.25);
+                        plan.reuse_v[l][h] = rng.bool(0.25);
+                    }
+                }
+            }
+            plan.quant_int8 = rng.bool(0.5);
+            let mut spec4 = spec.clone();
+            spec4.bytes_per_el = 4; // modeled f32 to match runtime store
+            let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+            let id = m.create_sequence();
+            let n = m.cfg.block_size * rng.range(1, 4);
+            append_n(&mut m, id, n, rng);
+            let measured = m.seq_stored_bytes(id);
+            let modeled = kv_bytes_per_token(&spec4, &plan) * n;
+            prop_assert!(
+                measured == modeled,
+                "measured {measured} != modeled {modeled} (plan {plan:?})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn free_sequence_releases_everything() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 4);
+        let mut m = CacheManager::new(CacheConfig::new(spec, plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(5);
+        append_n(&mut m, id, 40, &mut rng);
+        assert!(m.pool_stats().live_bytes > 0);
+        m.free_sequence(id);
+        assert_eq!(m.pool_stats().live_bytes, 0);
+        assert!(m.pool_stats().free_bytes > 0);
+        assert!(m.stored_rows(id, 0, Side::K).is_err());
+    }
+
+    #[test]
+    fn budget_rejects_overflow() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut m = CacheManager::with_budget(CacheConfig::new(spec, plan), 4096);
+        let id = m.create_sequence();
+        let mut rng = Rng::new(6);
+        let mut appended = 0;
+        loop {
+            let spec = m.cfg.spec.clone();
+            let kl = rand_rows(&mut rng, spec.n_layer * spec.ae_latent);
+            let kr = rand_rows(&mut rng, spec.n_layer * spec.kv_dim());
+            match m.append_token(id, &kl, &kl, &kr, &kr) {
+                Ok(()) => appended += 1,
+                Err(e) => {
+                    assert!(e.to_string().contains("budget"));
+                    break;
+                }
+            }
+            assert!(appended < 1000, "budget never enforced");
+        }
+    }
+
+    #[test]
+    fn max_seq_enforced() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(7);
+        append_n(&mut m, id, spec.max_seq, &mut rng);
+        let kl = vec![0.0; spec.n_layer * spec.ae_latent];
+        let kr = vec![0.0; spec.n_layer * spec.kv_dim()];
+        assert!(m.append_token(id, &kl, &kl, &kr, &kr).is_err());
+    }
+
+    #[test]
+    fn int8_latent_rows_are_close() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 4).with_quant();
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(8);
+        let kl = rand_rows(&mut rng, spec.n_layer * spec.ae_latent);
+        let kr = vec![0.0; spec.n_layer * spec.kv_dim()];
+        m.append_token(id, &kl, &kl, &kr, &kr).unwrap();
+        if let StoredRows::Latent(rows) = m.stored_rows(id, 0, Side::K).unwrap() {
+            for (a, b) in rows.iter().zip(&kl[..spec.ae_latent]) {
+                assert!((a - b).abs() < 0.05, "{a} vs {b}");
+            }
+        } else {
+            panic!("expected latent");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Paged, compressed KV cache (the KV-CAR storage engine).
+
+pub mod allocator;
+pub mod block;
+pub mod manager;
+pub mod tier;
+
+pub use block::Format;
+pub use manager::{CacheConfig, CacheManager, Side, StoreKind, StoredRows};

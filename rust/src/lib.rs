@@ -1,0 +1,32 @@
+//! KV-CAR: KV cache compression using autoencoders and cross-layer KV
+//! reuse — a full-system reproduction.
+//!
+//! Three-layer architecture (DESIGN.md):
+//!
+//! * **L3 (this crate)** — serving coordinator: request router, continuous
+//!   batcher, prefill/decode scheduler, and the compressed paged KV-cache
+//!   manager where KV-CAR's mechanisms (latent storage, head-reuse
+//!   aliasing, Eq. 4 int8) are first-class block formats.  Also the
+//!   training driver (Algorithms 1-2 run from rust over AOT'd step
+//!   artifacts), the evaluation harness, and the A40 memory simulator
+//!   that regenerates the paper's Figs. 2-3.
+//! * **L2 (python/compile, build time)** — JAX transformer (GPT-2-style
+//!   and TinyLlama-style) with the AE/reuse/quant mechanisms behind
+//!   runtime masks, lowered once to HLO text.
+//! * **L1 (python/compile/kernels, build time)** — Pallas kernels: fused
+//!   autoencoder halves, decode attention, Eq. 4 quantization.
+//!
+//! Python never runs at serve time: the `runtime` module loads the HLO
+//! artifacts via PJRT and everything else is rust.
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod kvcache;
+pub mod memsim;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod train;
+pub mod util;

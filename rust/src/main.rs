@@ -1,0 +1,269 @@
+//! kvcar — KV-CAR coordinator CLI.
+//!
+//! Subcommands:
+//!   info                      artifact + model inventory
+//!   pretrain                  base-LM pretraining (stage 0)
+//!   train-ae                  Alg. 1 staged autoencoder training
+//!   analyze                   Alg. 2 head-similarity analysis
+//!   train-reuse               Alg. 2 reuse finetuning
+//!   eval                      perplexity / zero-shot under a plan
+//!   serve                     demo serve of a synthetic workload
+//!   memplan                   Fig. 2/3 OOM-frontier table
+//!
+//! Common flags: --model gpt2t|tinyllama_t  --artifacts DIR  --seed N
+
+use anyhow::{anyhow, Result};
+use kvcar::compress::planner::{self, to_masks};
+use kvcar::compress::similarity::Selection;
+use kvcar::coordinator::{GenRequest, Sampling, ServeConfig, ServingEngine};
+use kvcar::data::corpus;
+use kvcar::data::tasks::Task;
+use kvcar::eval::{perplexity, zero_shot};
+use kvcar::memsim::{frontier, FigureCompression, GpuModel, FIGURE_BATCHES};
+use kvcar::model::memory::{plan_savings, CompressionPlan};
+use kvcar::model::ModelSpec;
+use kvcar::runtime::{Engine, Store};
+use kvcar::train::{TrainConfig, Trainer};
+use kvcar::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts(args: &Args) -> PathBuf {
+    args.opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(kvcar::runtime::artifacts_dir)
+}
+
+fn plan_from_args(args: &Args, spec: &ModelSpec) -> CompressionPlan {
+    let mut plan = CompressionPlan::ae_first_layers(spec, args.usize("ae-layers", 0));
+    if args.bool("quant") {
+        plan.quant_int8 = true;
+    }
+    if args.bool("reuse-all-alternating") {
+        let sel = Selection::all_alternating(spec.n_layer, spec.n_kv_head, true, true);
+        plan = planner::with_selection(plan, &sel);
+    }
+    plan
+}
+
+fn run(args: &Args) -> Result<()> {
+    let model = args.str("model", "gpt2t");
+    match args.command.as_deref() {
+        Some("info") => {
+            let engine = Engine::new(&artifacts(args))?;
+            println!("models: {:?}", engine.manifest.models);
+            for (name, e) in &engine.manifest.entries {
+                println!(
+                    "  {name:<32} {} in / {} out",
+                    e.inputs.len(),
+                    e.outputs.len()
+                );
+            }
+            Ok(())
+        }
+        Some("pretrain") => {
+            let mut engine = Engine::new(&artifacts(args))?;
+            let mut tr = Trainer::new(&mut engine, &model, TrainConfig::default())?;
+            let mut c = corpus::by_name(&args.str("corpus", "wiki"), args.u64("seed", 0))
+                .ok_or_else(|| anyhow!("unknown corpus"))?;
+            let log = tr.pretrain(&mut c, args.usize("steps", 300))?;
+            println!(
+                "pretrain: {:.4} -> {:.4} in {} ms",
+                log.first(),
+                log.last(),
+                log.wall_ms
+            );
+            tr.checkpoint(&PathBuf::from(args.str("out", "checkpoints")), "pretrained")?;
+            Ok(())
+        }
+        Some("train-ae") => {
+            let mut engine = Engine::new(&artifacts(args))?;
+            let mut tr = Trainer::new(&mut engine, &model, TrainConfig::default())?;
+            let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));
+            tr.restore(&ckpt, &args.str("from", "pretrained"))?;
+            let mut c = corpus::by_name(&args.str("corpus", "wiki"), args.u64("seed", 0))
+                .ok_or_else(|| anyhow!("unknown corpus"))?;
+            let n = args.usize("ae-layers", tr.spec.n_layer / 2);
+            let layers: Vec<usize> = (0..n).collect();
+            tr.ae_stage1(&mut c, &layers, args.usize("stage1-steps", 60))?;
+            tr.ae_stage2(&mut c, &layers, args.usize("stage2-steps", 120))?;
+            tr.checkpoint(&ckpt, "ae")?;
+            println!("saved checkpoint 'ae'");
+            Ok(())
+        }
+        Some("analyze") => {
+            let mut engine = Engine::new(&artifacts(args))?;
+            let mut tr = Trainer::new(&mut engine, &model, TrainConfig::default())?;
+            let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));
+            tr.restore(&ckpt, &args.str("from", "pretrained")).ok();
+            let mut c = corpus::by_name("wiki", args.u64("seed", 0)).unwrap();
+            let hd = tr.analyze_heads(&mut c, args.usize("batches", 4))?;
+            println!("adjacent-layer head L1 distances (K):");
+            for l in 1..hd.n_layer {
+                let row: Vec<String> = hd.dk[l].iter().map(|d| format!("{d:.4}")).collect();
+                println!("  layer {l:>2}: {}", row.join("  "));
+            }
+            Ok(())
+        }
+        Some("train-reuse") => {
+            let mut engine = Engine::new(&artifacts(args))?;
+            let mut tr = Trainer::new(&mut engine, &model, TrainConfig::default())?;
+            let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));
+            tr.restore(&ckpt, &args.str("from", "ae"))?;
+            let mut c = corpus::by_name("wiki", args.u64("seed", 0)).unwrap();
+            let hd = tr.analyze_heads(&mut c, 4)?;
+            let sel = hd.select_top(args.usize("reuse-k", 2), args.usize("reuse-v", 2));
+            let plan = planner::with_selection(plan_from_args(args, &tr.spec), &sel);
+            tr.reuse_finetune(&mut c, &to_masks(&plan), args.usize("steps", 120))?;
+            tr.checkpoint(&ckpt, "reuse")?;
+            println!("saved checkpoint 'reuse'");
+            Ok(())
+        }
+        Some("eval") => {
+            let mut engine = Engine::new(&artifacts(args))?;
+            let mut store = Store::new();
+            engine.load_params(&model, &mut store)?;
+            let spec = ModelSpec::from_manifest(&engine.manifest.raw, &model)?;
+            let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));
+            if let Some(tag) = args.opt("from") {
+                store.load_params(
+                    &ckpt.join(format!("{model}_{tag}.bin")),
+                    &ckpt.join(format!("{model}_{tag}.json")),
+                )?;
+            }
+            let plan = plan_from_args(args, &spec);
+            let masks = to_masks(&plan);
+            let which = args.str("dataset", "wiki");
+            match which.as_str() {
+                "wiki" | "c4" => {
+                    let mut c = corpus::by_name(&which, args.u64("seed", 1)).unwrap();
+                    let ppl = perplexity(
+                        &mut engine,
+                        &mut store,
+                        &spec,
+                        &model,
+                        &mut c,
+                        args.usize("batches", 8),
+                        &masks,
+                    )?;
+                    println!(
+                        "{model} {which}: ppl {ppl:.3}  (savings {:.2}%)",
+                        plan_savings(&spec, &plan) * 100.0
+                    );
+                }
+                "piqa" | "wino" => {
+                    let task = Task::by_name(&which).unwrap();
+                    let r = zero_shot(
+                        &mut engine,
+                        &mut store,
+                        &spec,
+                        &model,
+                        task,
+                        args.usize("items", 200),
+                        args.u64("seed", 1),
+                        &masks,
+                    )?;
+                    println!(
+                        "{model} {which}: acc {:.4} ({}/{})  (savings {:.2}%)",
+                        r.accuracy(),
+                        r.correct,
+                        r.items,
+                        plan_savings(&spec, &plan) * 100.0
+                    );
+                }
+                other => return Err(anyhow!("unknown dataset {other}")),
+            }
+            Ok(())
+        }
+        Some("serve") => {
+            let mut engine = Engine::new(&artifacts(args))?;
+            let spec = ModelSpec::from_manifest(&engine.manifest.raw, &model)?;
+            let plan = plan_from_args(args, &spec);
+            println!(
+                "serving {} with plan: {} AE layers, {} reused heads, int8={} (savings {:.1}%)",
+                model,
+                plan.n_ae_layers(),
+                plan.n_reused_heads(),
+                plan.quant_int8,
+                plan_savings(&spec, &plan) * 100.0
+            );
+            let cfg = ServeConfig {
+                plan,
+                max_batch: args.usize("batch", 8),
+                seed: args.u64("seed", 0),
+                per_step_reconstruct: args.bool("faithful"),
+            };
+            let mut serving = ServingEngine::new(&mut engine, &model, cfg)?;
+            let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));
+            if let Some(tag) = args.opt("from") {
+                serving.store.load_params(
+                    &ckpt.join(format!("{model}_{tag}.bin")),
+                    &ckpt.join(format!("{model}_{tag}.json")),
+                )?;
+            }
+            let mut c = corpus::wiki(args.u64("seed", 0));
+            let n = args.usize("requests", 16);
+            let reqs: Vec<GenRequest> = (0..n)
+                .map(|i| {
+                    let prompt = c.tokens(args.usize("prompt-len", 24));
+                    GenRequest {
+                        id: i as u64,
+                        prompt,
+                        max_new_tokens: args.usize("max-new", 32),
+                        sampling: Sampling::Greedy,
+                        stop_byte: None,
+                    }
+                })
+                .collect();
+            let responses = serving.run(reqs)?;
+            for r in responses.iter().take(3) {
+                println!("  req {}: {:?}", r.id, String::from_utf8_lossy(&r.output));
+            }
+            serving.metrics.print_summary(&model);
+            let ps = serving.cache.pool_stats();
+            println!(
+                "  cache peak bytes {} (recycles {})",
+                ps.peak_live_bytes, ps.recycles
+            );
+            Ok(())
+        }
+        Some("memplan") => {
+            let spec = match args.str("paper-model", "gpt2-774m").as_str() {
+                "gpt2-774m" => kvcar::model::gpt2_774m(),
+                "tinyllama-1.1b" => kvcar::model::tinyllama_1_1b(),
+                other => return Err(anyhow!("unknown paper model {other}")),
+            };
+            let gpu = GpuModel::a40_for(&spec);
+            println!(
+                "max sequence length before OOM — {} on {}",
+                spec.name, gpu.name
+            );
+            print!("{:>8}", "batch");
+            for c in FigureCompression::all() {
+                print!("{:>18}", c.label());
+            }
+            println!();
+            for &b in &FIGURE_BATCHES {
+                print!("{b:>8}");
+                for c in FigureCompression::all() {
+                    let f = frontier(&gpu, &spec, c.ratio(), &[b]);
+                    print!("{:>18}", f[0].max_seq);
+                }
+                println!();
+            }
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown command '{other}' (see src/main.rs docs)")),
+        None => {
+            println!("kvcar — see `rust/src/main.rs` header for subcommands");
+            Ok(())
+        }
+    }
+}

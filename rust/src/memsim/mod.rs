@@ -1,0 +1,259 @@
+//! GPU memory simulator — regenerates the paper's system evaluation
+//! (Figs. 2 and 3: max sequence length vs batch size before OOM on an
+//! NVIDIA A40, under 0/25/50/75% KV compression).
+//!
+//! The paper's measurement is pure memory arithmetic: decoding runs out of
+//! device memory when weights + runtime overhead + activation workspace +
+//! KV cache exceed capacity.  We model each term explicitly and solve for
+//! the OOM frontier:
+//!
+//!   capacity >= weights + fixed + act_per_token * B * S
+//!                + kv_per_token(plan) * B * S
+//!
+//!   max_seq(B) = (capacity - weights - fixed) / (B * (act + kv))
+//!
+//! Calibration (documented per DESIGN.md §3 substitution rule): `fixed`
+//! covers the CUDA context + allocator slack; `act_per_token` covers the
+//! transient activations/workspace the serving stack keeps per token of
+//! context at peak (attention scores, hidden states).  Constants are
+//! chosen once so the *baseline* GPT-2 curve lands in the paper's range;
+//! the compression curves then follow from the plan arithmetic alone —
+//! those are the claims under reproduction.
+
+use crate::model::memory::{kv_bytes_per_token, CompressionPlan};
+use crate::model::ModelSpec;
+
+/// NVIDIA A40: the paper reports 44.98 GB usable.
+pub const A40_BYTES: u64 = 44_980_000_000;
+
+/// Fixed runtime overhead: CUDA context, cuBLAS workspaces, fragmentation.
+pub const FIXED_OVERHEAD_BYTES: u64 = 600_000_000;
+
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub name: String,
+    pub capacity_bytes: u64,
+    pub fixed_bytes: u64,
+    /// transient activation/workspace bytes retained per token of context
+    /// at the peak of a decode step, per sequence (scales with d_model)
+    pub act_bytes_per_token: f64,
+}
+
+impl GpuModel {
+    /// A40 sized for the given model: activation term scales with model
+    /// width (fp16 hidden states + attention workspace; the live-layer
+    /// multiplier is calibrated once per architecture family so the
+    /// *baseline* curve lands in the paper's range — the compression
+    /// curves then follow from plan arithmetic alone, see module docs).
+    pub fn a40_for(spec: &ModelSpec) -> GpuModel {
+        let live_layers = match spec.arch {
+            crate::model::Arch::Gpt2 => 12,
+            crate::model::Arch::Llama => 16,
+        };
+        GpuModel {
+            name: format!("A40/{}", spec.name),
+            capacity_bytes: A40_BYTES,
+            fixed_bytes: FIXED_OVERHEAD_BYTES,
+            act_bytes_per_token: (spec.d_model * 2 * live_layers) as f64,
+        }
+    }
+
+    /// Bytes available for the KV cache + activations once weights are
+    /// resident.
+    pub fn dynamic_budget(&self, spec: &ModelSpec) -> u64 {
+        self.capacity_bytes
+            .saturating_sub(spec.weight_bytes() + spec.ae_param_count() * spec.bytes_per_el as u64)
+            .saturating_sub(self.fixed_bytes)
+    }
+
+    /// Max sequence length before OOM at the given batch size and plan.
+    pub fn max_seq_len(&self, spec: &ModelSpec, plan: &CompressionPlan, batch: usize) -> usize {
+        let budget = self.dynamic_budget(spec) as f64;
+        let per_tok = self.act_bytes_per_token + kv_bytes_per_token(spec, plan) as f64;
+        let s = budget / (batch as f64 * per_tok);
+        s.floor() as usize
+    }
+
+    /// Max batch size before OOM at the given sequence length.
+    pub fn max_batch(&self, spec: &ModelSpec, plan: &CompressionPlan, seq_len: usize) -> usize {
+        let budget = self.dynamic_budget(spec) as f64;
+        let per_tok = self.act_bytes_per_token + kv_bytes_per_token(spec, plan) as f64;
+        (budget / (seq_len as f64 * per_tok)).floor() as usize
+    }
+
+    /// Whether a workload fits (used by the coordinator's admission
+    /// control when configured with a simulated device budget).
+    pub fn fits(
+        &self,
+        spec: &ModelSpec,
+        plan: &CompressionPlan,
+        batch: usize,
+        seq_len: usize,
+    ) -> bool {
+        let per_tok = self.act_bytes_per_token + kv_bytes_per_token(spec, plan) as f64;
+        (batch as f64 * seq_len as f64 * per_tok) <= self.dynamic_budget(spec) as f64
+    }
+}
+
+/// A "k% compression" plan in the figure's sense: the KV payload is
+/// reduced to (1-k) of baseline, uniformly. 50% = AE-halving everywhere;
+/// 75% = AE + int8-like halving again. Implemented as a fractional payload
+/// so the sweep hits the exact ratios the figure labels.
+#[derive(Debug, Clone, Copy)]
+pub enum FigureCompression {
+    Baseline,
+    Pct25,
+    Pct50,
+    Pct75,
+}
+
+impl FigureCompression {
+    pub fn ratio(self) -> f64 {
+        match self {
+            FigureCompression::Baseline => 1.0,
+            FigureCompression::Pct25 => 0.75,
+            FigureCompression::Pct50 => 0.50,
+            FigureCompression::Pct75 => 0.25,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FigureCompression::Baseline => "baseline",
+            FigureCompression::Pct25 => "25% compression",
+            FigureCompression::Pct50 => "50% compression",
+            FigureCompression::Pct75 => "75% compression",
+        }
+    }
+
+    pub fn all() -> [FigureCompression; 4] {
+        [
+            FigureCompression::Baseline,
+            FigureCompression::Pct25,
+            FigureCompression::Pct50,
+            FigureCompression::Pct75,
+        ]
+    }
+
+    /// Concrete KV-CAR plan achieving this ratio on the given spec:
+    /// 25% -> AE on half the layers; 50% -> AE everywhere; 75% -> AE
+    /// everywhere + int8 on the latents (2 B/el fp16 -> ~1 B/el).
+    pub fn as_plan(self, spec: &ModelSpec) -> CompressionPlan {
+        match self {
+            FigureCompression::Baseline => CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+            FigureCompression::Pct25 => CompressionPlan::ae_first_layers(spec, spec.n_layer / 2),
+            FigureCompression::Pct50 => CompressionPlan::ae_first_layers(spec, spec.n_layer),
+            FigureCompression::Pct75 => {
+                CompressionPlan::ae_first_layers(spec, spec.n_layer).with_quant()
+            }
+        }
+    }
+}
+
+/// One row of a Fig. 2/3 sweep.
+#[derive(Debug, Clone)]
+pub struct FrontierPoint {
+    pub batch: usize,
+    pub max_seq: usize,
+}
+
+/// Sweep max_seq over batch sizes for one compression ratio, using an
+/// idealized fractional payload (the figure's definition of "k%
+/// compression") so ratios are exact.
+pub fn frontier(
+    gpu: &GpuModel,
+    spec: &ModelSpec,
+    ratio: f64,
+    batches: &[usize],
+) -> Vec<FrontierPoint> {
+    let base = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+    let base_kv = kv_bytes_per_token(spec, &base) as f64;
+    batches
+        .iter()
+        .map(|&b| {
+            let per_tok = gpu.act_bytes_per_token + base_kv * ratio;
+            let budget = gpu.dynamic_budget(spec) as f64;
+            FrontierPoint {
+                batch: b,
+                max_seq: (budget / (b as f64 * per_tok)).floor() as usize,
+            }
+        })
+        .collect()
+}
+
+pub const FIGURE_BATCHES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{gpt2_774m, tinyllama_1_1b};
+
+    #[test]
+    fn more_compression_never_hurts() {
+        let spec = gpt2_774m();
+        let gpu = GpuModel::a40_for(&spec);
+        for b in FIGURE_BATCHES {
+            let mut prev = 0;
+            for c in FigureCompression::all() {
+                let s = gpu.max_seq_len(&spec, &c.as_plan(&spec), b);
+                assert!(s >= prev, "b={b} {c:?}");
+                prev = s;
+            }
+        }
+    }
+
+    #[test]
+    fn seq_len_decreases_with_batch() {
+        let spec = tinyllama_1_1b();
+        let gpu = GpuModel::a40_for(&spec);
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut prev = usize::MAX;
+        for b in FIGURE_BATCHES {
+            let s = gpu.max_seq_len(&spec, &plan, b);
+            assert!(s < prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn frontier_ratio_shifts_curve_up() {
+        let spec = gpt2_774m();
+        let gpu = GpuModel::a40_for(&spec);
+        let f1 = frontier(&gpu, &spec, 1.0, &FIGURE_BATCHES);
+        let f4 = frontier(&gpu, &spec, 0.25, &FIGURE_BATCHES);
+        for (a, b) in f1.iter().zip(&f4) {
+            assert!(b.max_seq > a.max_seq * 2, "{} vs {}", a.max_seq, b.max_seq);
+        }
+    }
+
+    #[test]
+    fn fits_matches_frontier() {
+        let spec = gpt2_774m();
+        let gpu = GpuModel::a40_for(&spec);
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let s = gpu.max_seq_len(&spec, &plan, 16);
+        assert!(gpu.fits(&spec, &plan, 16, s));
+        assert!(!gpu.fits(&spec, &plan, 16, s + 16));
+    }
+
+    #[test]
+    fn max_batch_inverse_of_max_seq() {
+        let spec = tinyllama_1_1b();
+        let gpu = GpuModel::a40_for(&spec);
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let s = gpu.max_seq_len(&spec, &plan, 8);
+        let b = gpu.max_batch(&spec, &plan, s);
+        assert!((8..=9).contains(&b), "{b}");
+    }
+
+    #[test]
+    fn paper_ballpark_gpt2_baseline() {
+        // the baseline GPT-2 curve should land at a few thousand tokens at
+        // B=64 (the paper's deltas imply a ~1.7-3k baseline there)
+        let spec = gpt2_774m();
+        let gpu = GpuModel::a40_for(&spec);
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let s = gpu.max_seq_len(&spec, &plan, 64);
+        assert!((1_000..6_000).contains(&s), "{s}");
+    }
+}

@@ -1,0 +1,229 @@
+//! KV-cache memory accounting — Eq. 3 of the paper, generalized to
+//! per-layer / per-head compression plans.
+//!
+//!   KV_Cache_Size = 2 * P * N_layers * d_kv * L_seq * B            (Eq. 3)
+//!
+//! With KV-CAR the per-token-per-layer payload is no longer uniform:
+//! AE-compressed layers store `ae_latent` floats per K (and V) vector,
+//! reused heads store nothing (they alias the previous layer's block),
+//! and int8 quantization shrinks each stored element to one byte plus a
+//! per-vector (scale, zeropoint) header.  `plan_*` functions compute the
+//! exact footprint the rust cache manager will measure at runtime — the
+//! two are cross-checked in kvcache tests.
+
+use super::ModelSpec;
+
+/// Which compression mechanisms apply where. Mirrors the runtime masks the
+/// AOT artifacts take (compress [L], reuse_k/v [L][Hkv], quant flag).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionPlan {
+    /// per-layer: K/V vectors stored as `ae_latent` latents
+    pub ae_layers: Vec<bool>,
+    /// per-(layer, kv-head): K head aliases layer l-1's stored K
+    pub reuse_k: Vec<Vec<bool>>,
+    /// per-(layer, kv-head): V head aliases layer l-1's stored V
+    pub reuse_v: Vec<Vec<bool>>,
+    /// int8 (Eq. 4) storage of whatever is stored
+    pub quant_int8: bool,
+}
+
+/// Per-vector header bytes when int8 quantized: f32 scale + f32 zeropoint.
+pub const QUANT_HEADER_BYTES: usize = 8;
+
+impl CompressionPlan {
+    pub fn none(n_layer: usize, n_kv_head: usize) -> Self {
+        CompressionPlan {
+            ae_layers: vec![false; n_layer],
+            reuse_k: vec![vec![false; n_kv_head]; n_layer],
+            reuse_v: vec![vec![false; n_kv_head]; n_layer],
+            quant_int8: false,
+        }
+    }
+
+    /// AE on the first `k` layers (the paper's "compressed (k layers)")
+    pub fn ae_first_layers(spec: &ModelSpec, k: usize) -> Self {
+        let mut p = Self::none(spec.n_layer, spec.n_kv_head);
+        for l in 0..k.min(spec.n_layer) {
+            p.ae_layers[l] = true;
+        }
+        p
+    }
+
+    pub fn with_quant(mut self) -> Self {
+        self.quant_int8 = true;
+        self
+    }
+
+    /// Validity: layer 0 can never reuse (there is no layer -1).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.reuse_k[0].iter().any(|&r| r) || self.reuse_v[0].iter().any(|&r| r) {
+            return Err("layer 0 cannot reuse heads".into());
+        }
+        let l = self.ae_layers.len();
+        if self.reuse_k.len() != l || self.reuse_v.len() != l {
+            return Err("mask length mismatch".into());
+        }
+        Ok(())
+    }
+
+    pub fn n_reused_heads(&self) -> usize {
+        self.reuse_k
+            .iter()
+            .chain(self.reuse_v.iter())
+            .flatten()
+            .filter(|&&r| r)
+            .count()
+    }
+
+    pub fn n_ae_layers(&self) -> usize {
+        self.ae_layers.iter().filter(|&&a| a).count()
+    }
+}
+
+/// Stored bytes for one token's K *or* V at one layer under the plan.
+///
+/// Rules (matching `kvcache::manager` exactly):
+/// * all heads reused        -> 0 bytes (full alias)
+/// * AE layer                -> ae_latent elements (latent covers the whole
+///                              kv vector; per-head granularity is lost, so
+///                              partially-reused AE layers still store the
+///                              full latent — reuse only pays on non-AE
+///                              layers, which the planner accounts for)
+/// * else                    -> (n_kv_head - reused) * d_head elements
+/// * int8                    -> 1 byte/element + QUANT_HEADER_BYTES
+pub fn stored_bytes_one(
+    spec: &ModelSpec,
+    plan: &CompressionPlan,
+    layer: usize,
+    reuse_row: &[bool],
+) -> usize {
+    let reused = reuse_row.iter().filter(|&&r| r).count();
+    let elements = if reused == spec.n_kv_head {
+        return 0;
+    } else if plan.ae_layers[layer] {
+        spec.ae_latent
+    } else {
+        (spec.n_kv_head - reused) * spec.d_head
+    };
+    if plan.quant_int8 {
+        elements + QUANT_HEADER_BYTES
+    } else {
+        elements * spec.bytes_per_el
+    }
+}
+
+/// Total stored bytes for one token across all layers (K + V).
+pub fn kv_bytes_per_token(spec: &ModelSpec, plan: &CompressionPlan) -> usize {
+    (0..spec.n_layer)
+        .map(|l| {
+            stored_bytes_one(spec, plan, l, &plan.reuse_k[l])
+                + stored_bytes_one(spec, plan, l, &plan.reuse_v[l])
+        })
+        .sum()
+}
+
+/// Baseline Eq. 3 bytes per token (no compression).
+pub fn baseline_bytes_per_token(spec: &ModelSpec) -> usize {
+    2 * spec.bytes_per_el * spec.n_layer * spec.kv_dim()
+}
+
+/// Eq. 3, full cache: per-token bytes * L_seq * B.
+pub fn kv_cache_bytes(
+    spec: &ModelSpec,
+    plan: &CompressionPlan,
+    seq_len: usize,
+    batch: usize,
+) -> u64 {
+    kv_bytes_per_token(spec, plan) as u64 * seq_len as u64 * batch as u64
+}
+
+/// Fractional savings vs the uncompressed cache (the paper's "Memory
+/// Savings" column).
+pub fn plan_savings(spec: &ModelSpec, plan: &CompressionPlan) -> f64 {
+    1.0 - kv_bytes_per_token(spec, plan) as f64 / baseline_bytes_per_token(spec) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{gpt2_774m, gpt2_medium};
+
+    #[test]
+    fn eq3_worked_example() {
+        // paper §II-B: GPT-2 Medium, fp16, L=2048, B=8 -> ~1.61 GB
+        let spec = gpt2_medium();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let bytes = kv_cache_bytes(&spec, &plan, 2048, 8);
+        let gb = bytes as f64 / 1e9;
+        assert!((gb - 1.61).abs() < 0.02, "{gb}");
+    }
+
+    #[test]
+    fn ae_half_on_all_layers_saves_half() {
+        let spec = gpt2_774m();
+        let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+        let s = plan_savings(&spec, &plan);
+        assert!((s - 0.5).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn ae_k_of_l_layers_scales_linearly() {
+        let spec = gpt2_774m();
+        for k in [0, 9, 18, 36] {
+            let plan = CompressionPlan::ae_first_layers(&spec, k);
+            let want = 0.5 * k as f64 / 36.0;
+            assert!((plan_savings(&spec, &plan) - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn full_reuse_of_alternating_layers_halves() {
+        // paper: "replacing all the key and value heads between consecutive
+        // layers could halve the KV cache"
+        let spec = gpt2_774m();
+        let mut plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        for l in (1..spec.n_layer).step_by(2) {
+            plan.reuse_k[l] = vec![true; spec.n_kv_head];
+            plan.reuse_v[l] = vec![true; spec.n_kv_head];
+        }
+        let s = plan_savings(&spec, &plan);
+        assert!((s - 0.5).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn all_key_reuse_saves_quarter() {
+        // Table III row "all key": 25%
+        let spec = gpt2_774m();
+        let mut plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        for l in (1..spec.n_layer).step_by(2) {
+            plan.reuse_k[l] = vec![true; spec.n_kv_head];
+        }
+        assert!((plan_savings(&spec, &plan) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_head_reuse_accounting() {
+        let spec = gpt2_774m(); // 20 kv heads
+        let mut plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        plan.reuse_k[3][0] = true; // one K head of one layer
+        let per_head = spec.d_head * spec.bytes_per_el;
+        let delta = baseline_bytes_per_token(&spec) - kv_bytes_per_token(&spec, &plan);
+        assert_eq!(delta, per_head);
+    }
+
+    #[test]
+    fn quant_int8_shrinks_storage() {
+        let spec = gpt2_774m();
+        let base = CompressionPlan::ae_first_layers(&spec, 10);
+        let q = CompressionPlan::ae_first_layers(&spec, 10).with_quant();
+        assert!(kv_bytes_per_token(&spec, &q) < kv_bytes_per_token(&spec, &base));
+    }
+
+    #[test]
+    fn layer0_reuse_rejected() {
+        let spec = gpt2_774m();
+        let mut plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        plan.reuse_k[0][0] = true;
+        assert!(plan.validate().is_err());
+    }
+}

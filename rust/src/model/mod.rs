@@ -1,0 +1,208 @@
+//! Model architecture specs.
+//!
+//! Two kinds of specs coexist (DESIGN.md §3):
+//!
+//! * **Runtime specs** (`gpt2t`, `tinyllama_t`) — the tiny trained-from-
+//!   scratch models whose AOT artifacts actually execute; loaded from
+//!   `artifacts/manifest.json` so rust and python can never disagree.
+//! * **Paper-scale specs** (`gpt2-774m`, `tinyllama-1.1b`) — the exact
+//!   dimensions of the models the paper evaluates, used by the memory
+//!   simulator to regenerate Figs. 2-3 and the Eq. 3 worked example.
+
+pub mod memory;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub arch: Arch,
+    pub vocab: usize,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_kv_head: usize,
+    pub d_head: usize,
+    pub ffn_dim: usize,
+    pub max_seq: usize,
+    /// KV-CAR autoencoder dims (kv_dim -> ae_hidden -> ae_latent)
+    pub ae_hidden: usize,
+    pub ae_latent: usize,
+    /// bytes per stored element for this deployment (4 = f32 runtime,
+    /// 2 = the paper's fp16 serving assumption)
+    pub bytes_per_el: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Gpt2,
+    Llama,
+}
+
+impl ModelSpec {
+    /// Width of the K (or V) vector entering the cache per token per layer.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_head * self.d_head
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_head * self.d_head
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.n_head / self.n_kv_head
+    }
+
+    /// Approximate parameter count (embeddings tied).
+    pub fn param_count(&self) -> u64 {
+        let (d, f, l) = (self.d_model as u64, self.ffn_dim as u64, self.n_layer as u64);
+        let (qd, kvd) = (self.q_dim() as u64, self.kv_dim() as u64);
+        let attn = d * qd + 2 * d * kvd + qd * d;
+        let per_layer = match self.arch {
+            Arch::Gpt2 => attn + (qd + 2 * kvd + d) + 2 * d * f + f + d + 4 * d,
+            Arch::Llama => attn + 3 * d * f + 2 * d,
+        };
+        let emb = (self.vocab as u64) * d
+            + if self.arch == Arch::Gpt2 {
+                (self.max_seq as u64) * d
+            } else {
+                0
+            };
+        emb + l * per_layer + d
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.param_count() * self.bytes_per_el as u64
+    }
+
+    /// Parameters added by the per-layer K+V autoencoders.
+    pub fn ae_param_count(&self) -> u64 {
+        let (kvd, h, dl) = (
+            self.kv_dim() as u64,
+            self.ae_hidden as u64,
+            self.ae_latent as u64,
+        );
+        // enc: kvd*h + h + 4h + h*dl + dl ; dec mirrored ; x2 for K and V
+        let enc = kvd * h + h + 4 * h + h * dl + dl;
+        let dec = dl * h + h + 4 * h + h * kvd + kvd;
+        2 * (enc + dec) * self.n_layer as u64
+    }
+
+    pub fn from_manifest(man: &Json, name: &str) -> Result<ModelSpec> {
+        let m = man
+            .get("models")
+            .and_then(|ms| ms.get(name))
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))?;
+        let get = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest model '{name}' missing field '{k}'"))
+        };
+        let arch = match m.get("arch").and_then(Json::as_str) {
+            Some("gpt2") => Arch::Gpt2,
+            Some("llama") => Arch::Llama,
+            other => return Err(anyhow!("unknown arch {other:?}")),
+        };
+        Ok(ModelSpec {
+            name: name.to_string(),
+            arch,
+            vocab: get("vocab")?,
+            n_layer: get("n_layer")?,
+            d_model: get("d_model")?,
+            n_head: get("n_head")?,
+            n_kv_head: get("n_kv_head")?,
+            d_head: get("d_head")?,
+            ffn_dim: get("ffn_dim")?,
+            max_seq: get("max_seq")?,
+            ae_hidden: get("ae_hidden")?,
+            ae_latent: get("ae_latent")?,
+            bytes_per_el: 4, // runtime artifacts are f32
+        })
+    }
+}
+
+/// GPT-2 774M (GPT-2 Large), as evaluated in the paper (fp16 serving).
+pub fn gpt2_774m() -> ModelSpec {
+    ModelSpec {
+        name: "gpt2-774m".into(),
+        arch: Arch::Gpt2,
+        vocab: 50257,
+        n_layer: 36,
+        d_model: 1280,
+        n_head: 20,
+        n_kv_head: 20,
+        d_head: 64,
+        ffn_dim: 5120,
+        max_seq: 1024,
+        ae_hidden: 256, // "lightweight" (paper §I): AE params ~9% of model
+        ae_latent: 640, // paper's factor-of-two embedding compression
+        bytes_per_el: 2,
+    }
+}
+
+/// TinyLlama 1.1B, as evaluated in the paper (fp16 serving, GQA 32q/4kv).
+pub fn tinyllama_1_1b() -> ModelSpec {
+    ModelSpec {
+        name: "tinyllama-1.1b".into(),
+        arch: Arch::Llama,
+        vocab: 32000,
+        n_layer: 22,
+        d_model: 2048,
+        n_head: 32,
+        n_kv_head: 4,
+        d_head: 64,
+        ffn_dim: 5632,
+        max_seq: 2048,
+        ae_hidden: 192,
+        ae_latent: 128,
+        bytes_per_el: 2,
+    }
+}
+
+/// GPT-2 Medium — the paper's §II-B worked example for Eq. 3.
+pub fn gpt2_medium() -> ModelSpec {
+    ModelSpec {
+        name: "gpt2-medium".into(),
+        arch: Arch::Gpt2,
+        vocab: 50257,
+        n_layer: 24,
+        d_model: 1024,
+        n_head: 16,
+        n_kv_head: 16,
+        d_head: 64,
+        ffn_dim: 4096,
+        max_seq: 1024,
+        ae_hidden: 768,
+        ae_latent: 512,
+        bytes_per_el: 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_param_counts() {
+        // within 6% of the advertised sizes
+        let g = gpt2_774m().param_count() as f64;
+        assert!((g - 774e6).abs() / 774e6 < 0.06, "{g}");
+        let t = tinyllama_1_1b().param_count() as f64;
+        assert!((t - 1.1e9).abs() / 1.1e9 < 0.06, "{t}");
+    }
+
+    #[test]
+    fn kv_dims() {
+        assert_eq!(gpt2_774m().kv_dim(), 1280);
+        assert_eq!(tinyllama_1_1b().kv_dim(), 256); // GQA shrinks the cache
+        assert_eq!(tinyllama_1_1b().group_size(), 8);
+    }
+
+    #[test]
+    fn ae_params_are_small_relative_to_model() {
+        let s = gpt2_774m();
+        let frac = s.ae_param_count() as f64 / s.param_count() as f64;
+        assert!(frac < 0.25, "autoencoders must stay lightweight: {frac}");
+    }
+}

@@ -1,0 +1,238 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and executes them with named inputs from a `Store`.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and aot.py).
+//!
+//! Entry points were lowered with `return_tuple=True`, so execution
+//! returns one tuple literal that is decomposed and mapped back to the
+//! manifest's output names.
+
+use super::manifest::{DType, EntrySpec, Manifest};
+use super::store::Store;
+use super::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// per-entry device-resident input buffers keyed by store version:
+    /// an input is re-uploaded only when its tensor changed since the
+    /// previous call, so parameters (the bulk of every signature) stay
+    /// on device across thousands of steps.  EXPERIMENTS.md §Perf L3.
+    buffer_cache: HashMap<String, Vec<Option<(u64, xla::PjRtBuffer)>>>,
+    /// disable to fall back to literal-per-call execution (perf A/B)
+    pub use_buffer_cache: bool,
+    pub stats: EngineStats,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_ns: u128,
+    pub execute_ns: u128,
+    /// host<->device literal traffic in elements
+    pub input_elements: u64,
+    pub output_elements: u64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine {
+            manifest,
+            client,
+            executables: HashMap::new(),
+            buffer_cache: HashMap::new(),
+            use_buffer_cache: std::env::var("KVCAR_NO_BUFFER_CACHE").is_err(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    /// Compile (or fetch the cached) executable for an entry point.
+    pub fn load(&mut self, entry: &str) -> Result<()> {
+        if self.executables.contains_key(entry) {
+            return Ok(());
+        }
+        let spec = self.manifest.entry(entry)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {:?}: {e:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {entry}: {e:?}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_ns += t0.elapsed().as_nanos();
+        self.executables.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load the model's parameters into the store (base/* and ae/*).
+    pub fn load_params(&self, model: &str, store: &mut Store) -> Result<usize> {
+        store.load_params(
+            &self.manifest.params_bin(model)?,
+            &self.manifest.params_index(model)?,
+        )
+    }
+
+    /// Execute `entry` reading inputs by name from the store; returns
+    /// outputs keyed by the manifest's output names.
+    pub fn execute(&mut self, entry: &str, store: &Store) -> Result<Vec<(String, Tensor)>> {
+        self.load(entry)?;
+        let spec = self.manifest.entry(entry)?.clone();
+        let result = if self.use_buffer_cache {
+            self.execute_buffered(entry, &spec, store)?
+        } else {
+            let mut literals = Vec::with_capacity(spec.inputs.len());
+            for io in &spec.inputs {
+                let t = store
+                    .get(&io.name)
+                    .with_context(|| format!("assembling inputs for {entry}"))?;
+                check_io(io, t).with_context(|| format!("input {} of {entry}", io.name))?;
+                self.stats.input_elements += t.len() as u64;
+                literals.push(t.to_literal()?);
+            }
+            let exe = self.executables.get(entry).unwrap();
+            let t0 = Instant::now();
+            let r = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("executing {entry}: {e:?}"))?;
+            self.stats.execute_ns += t0.elapsed().as_nanos();
+            r
+        };
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {entry}: {e:?}"))?;
+        self.stats.executions += 1;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing result of {entry}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{entry}: {} outputs, manifest says {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (io, lit) in spec.outputs.iter().zip(parts) {
+            let t = Tensor::from_literal(&lit)
+                .with_context(|| format!("output {} of {entry}", io.name))?;
+            check_io(io, &t).with_context(|| format!("output {} of {entry}", io.name))?;
+            self.stats.output_elements += t.len() as u64;
+            out.push((io.name.clone(), t));
+        }
+        Ok(out)
+    }
+
+    /// Buffered execution: inputs become device-resident PjRtBuffers,
+    /// re-uploaded only when the store version changed.
+    fn execute_buffered(
+        &mut self,
+        entry: &str,
+        spec: &EntrySpec,
+        store: &Store,
+    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        let cache = self
+            .buffer_cache
+            .entry(entry.to_string())
+            .or_insert_with(|| {
+                let mut v = Vec::new();
+                v.resize_with(spec.inputs.len(), || None);
+                v
+            });
+        for (i, io) in spec.inputs.iter().enumerate() {
+            let ver = store.version(&io.name);
+            if matches!(cache[i], Some((v, _)) if v == ver) {
+                continue;
+            }
+            let t = store
+                .get(&io.name)
+                .with_context(|| format!("assembling inputs for {entry}"))?;
+            check_io(io, t).with_context(|| format!("input {} of {entry}", io.name))?;
+            self.stats.input_elements += t.len() as u64;
+            let buf = match t {
+                Tensor::F32 { shape, data } => self
+                    .client
+                    .buffer_from_host_buffer(data, shape, None),
+                Tensor::I32 { shape, data } => self
+                    .client
+                    .buffer_from_host_buffer(data, shape, None),
+            }
+            .map_err(|e| anyhow!("uploading {} for {entry}: {e:?}", io.name))?;
+            cache[i] = Some((ver, buf));
+        }
+        let bufs: Vec<&xla::PjRtBuffer> =
+            cache.iter().map(|e| &e.as_ref().unwrap().1).collect();
+        let exe = self.executables.get(entry).unwrap();
+        let t0 = Instant::now();
+        let r = exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow!("executing {entry}: {e:?}"))?;
+        self.stats.execute_ns += t0.elapsed().as_nanos();
+        Ok(r)
+    }
+
+    /// Execute and write outputs back into the store (training steps:
+    /// outputs are named like their input counterparts).
+    pub fn execute_into(&mut self, entry: &str, store: &mut Store) -> Result<()> {
+        for (name, t) in self.execute(entry, store)? {
+            store.insert(&name, t);
+        }
+        Ok(())
+    }
+
+    pub fn entry_spec(&self, entry: &str) -> Result<&EntrySpec> {
+        self.manifest.entry(entry)
+    }
+
+    /// Initialize zero tensors for every input of `entry` with the given
+    /// prefix (optimizer state `m/`, `v/`, counters).
+    pub fn init_zeros(&self, entry: &str, prefix: &str, store: &mut Store) -> Result<()> {
+        for io in &self.manifest.entry(entry)?.inputs {
+            if io.name.starts_with(prefix) && !store.contains(&io.name) {
+                let t = match io.dtype {
+                    DType::F32 => Tensor::zeros_f32(io.shape.clone()),
+                    DType::I32 => Tensor::i32(
+                        io.shape.clone(),
+                        vec![0; io.shape.iter().product::<usize>().max(1)],
+                    ),
+                };
+                store.insert(&io.name, t);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn check_io(io: &super::manifest::IoSpec, t: &Tensor) -> Result<()> {
+    let dtype_ok = matches!(
+        (&io.dtype, t),
+        (DType::F32, Tensor::F32 { .. }) | (DType::I32, Tensor::I32 { .. })
+    );
+    anyhow::ensure!(
+        dtype_ok,
+        "dtype mismatch: manifest {:?}, tensor {}",
+        io.dtype,
+        t.dtype_name()
+    );
+    anyhow::ensure!(
+        io.shape == t.shape(),
+        "shape mismatch: manifest {:?}, tensor {:?}",
+        io.shape,
+        t.shape()
+    );
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! AOT manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  Describes every entry point's HLO file and its
+//! flattened input/output tensors (name, shape, dtype, in call order).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<String>,
+    pub entries: BTreeMap<String, EntrySpec>,
+    pub raw: Json,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("io missing name"))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("io {name} missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match j.get("dtype").and_then(Json::as_str) {
+        Some("float32") => DType::F32,
+        Some("int32") => DType::I32,
+        other => return Err(anyhow!("io {name}: unsupported dtype {other:?}")),
+    };
+    Ok(IoSpec { name, shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let raw = Json::parse(&text).context("parsing manifest.json")?;
+        let models = raw
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+            .keys()
+            .cloned()
+            .collect();
+        let mut entries = BTreeMap::new();
+        for (name, e) in raw
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let file = dir.join(
+                e.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry {name} missing file"))?,
+            );
+            let parse_list = |key: &str| -> Result<Vec<IoSpec>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {name} missing {key}"))?
+                    .iter()
+                    .map(parse_io)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            models,
+            entries,
+            raw,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("entry '{name}' not in manifest"))
+    }
+
+    pub fn params_bin(&self, model: &str) -> Result<PathBuf> {
+        let f = self
+            .raw
+            .get("models")
+            .and_then(|m| m.get(model))
+            .and_then(|m| m.get("params_bin"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("model {model} missing params_bin"))?;
+        Ok(self.dir.join(f))
+    }
+
+    pub fn params_index(&self, model: &str) -> Result<PathBuf> {
+        let f = self
+            .raw
+            .get("models")
+            .and_then(|m| m.get(model))
+            .and_then(|m| m.get("params_index"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("model {model} missing params_index"))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_io_spec() {
+        let j = Json::parse(r#"{"name":"base/wq","shape":[8,128,128],"dtype":"float32"}"#)
+            .unwrap();
+        let io = parse_io(&j).unwrap();
+        assert_eq!(io.name, "base/wq");
+        assert_eq!(io.elements(), 8 * 128 * 128);
+        assert_eq!(io.dtype, DType::F32);
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let j = Json::parse(r#"{"name":"x","shape":[1],"dtype":"float64"}"#).unwrap();
+        assert!(parse_io(&j).is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_hints_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: manifest + params loading, HLO-text compilation, and
+//! named-tensor execution of the AOT artifacts.
+
+pub mod engine;
+pub mod manifest;
+pub mod store;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{DType, EntrySpec, IoSpec, Manifest};
+pub use store::Store;
+pub use tensor::Tensor;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: $KVCAR_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("KVCAR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

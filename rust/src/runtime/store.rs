@@ -1,0 +1,199 @@
+//! Named tensor store: parameters + optimizer state + step counters, the
+//! mutable state the training driver and serving engine thread through
+//! artifact calls.
+//!
+//! Binary format shared with `python/compile/params.py`: `params.bin` is
+//! concatenated little-endian f32 buffers; `params.json` indexes them by
+//! name/shape/offset.  Rust checkpoints use the identical format, so a
+//! rust-trained model can be reloaded by python tests and vice versa.
+
+use super::tensor::Tensor;
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Store {
+    map: BTreeMap<String, Tensor>,
+    /// monotone per-tensor versions: the engine's device-buffer cache
+    /// re-uploads an input only when its version changed since the last
+    /// call (parameters stay resident across thousands of steps)
+    versions: BTreeMap<String, u64>,
+    counter: u64,
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.counter += 1;
+        self.versions.insert(name.to_string(), self.counter);
+        self.map.insert(name.to_string(), t);
+    }
+
+    /// Version of a tensor (0 = absent). Bumped on every insert.
+    pub fn version(&self, name: &str) -> u64 {
+        self.versions.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .ok_or_else(|| anyhow!("store has no tensor '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        // conservatively bump: the caller may mutate through this borrow
+        self.counter += 1;
+        self.versions.insert(name.to_string(), self.counter);
+        self.map
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("store has no tensor '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Names with the given prefix (e.g. all of "base/", "ae/").
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a String> {
+        self.map.keys().filter(move |k| k.starts_with(prefix))
+    }
+
+    /// Load `params.bin` + `params.json` into the store.
+    pub fn load_params(&mut self, bin: &Path, index: &Path) -> Result<usize> {
+        let idx_text = std::fs::read_to_string(index)
+            .with_context(|| format!("reading {index:?}"))?;
+        let idx = Json::parse(&idx_text)?;
+        let bytes = std::fs::read(bin).with_context(|| format!("reading {bin:?}"))?;
+        let total = idx
+            .get("total_bytes")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("params index missing total_bytes"))?;
+        anyhow::ensure!(bytes.len() == total, "params.bin size mismatch");
+        let entries = idx
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("params index missing params"))?;
+        let mut count = 0;
+        for e in entries {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param missing name"))?;
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param {name} missing shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let offset = e
+                .get("offset")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("param {name} missing offset"))?;
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(offset + n * 4 <= bytes.len(), "param {name} out of range");
+            let data: Vec<f32> = bytes[offset..offset + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            self.insert(name, Tensor::f32(shape, data));
+            count += 1;
+        }
+        Ok(count)
+    }
+
+    /// Save every f32 tensor matching `prefixes` in the shared format.
+    pub fn save_params(&self, bin: &Path, index: &Path, prefixes: &[&str]) -> Result<()> {
+        let mut entries: Vec<Json> = Vec::new();
+        let mut file = std::io::BufWriter::new(
+            std::fs::File::create(bin).with_context(|| format!("creating {bin:?}"))?,
+        );
+        let mut offset = 0usize;
+        for (name, t) in &self.map {
+            if !prefixes.iter().any(|p| name.starts_with(p)) {
+                continue;
+            }
+            let data = t.as_f32()?;
+            for v in data {
+                file.write_all(&v.to_le_bytes())?;
+            }
+            entries.push(json::obj(vec![
+                ("name", json::s(name)),
+                (
+                    "shape",
+                    json::arr(t.shape().iter().map(|&d| json::num(d as f64))),
+                ),
+                ("offset", json::num(offset as f64)),
+            ]));
+            offset += data.len() * 4;
+        }
+        file.flush()?;
+        let idx = json::obj(vec![
+            ("total_bytes", json::num(offset as f64)),
+            ("params", Json::Arr(entries)),
+        ]);
+        std::fs::write(index, idx.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("kvcar_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = Store::new();
+        s.insert("base/wq", Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        s.insert("ae/k/enc/w1", Tensor::f32(vec![3], vec![-1.0, 0.5, 9.0]));
+        s.insert("m/base/wq", Tensor::zeros_f32(vec![2, 2])); // excluded
+        let bin = dir.join("p.bin");
+        let idx = dir.join("p.json");
+        s.save_params(&bin, &idx, &["base/", "ae/"]).unwrap();
+
+        let mut s2 = Store::new();
+        let n = s2.load_params(&bin, &idx).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(s2.get("base/wq").unwrap(), s.get("base/wq").unwrap());
+        assert_eq!(s2.get("ae/k/enc/w1").unwrap(), s.get("ae/k/enc/w1").unwrap());
+        assert!(s2.get("m/base/wq").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefix_iteration() {
+        let mut s = Store::new();
+        s.insert("base/a", Tensor::scalar_f32(1.0));
+        s.insert("base/b", Tensor::scalar_f32(2.0));
+        s.insert("ae/c", Tensor::scalar_f32(3.0));
+        assert_eq!(s.with_prefix("base/").count(), 2);
+        assert_eq!(s.with_prefix("ae/").count(), 1);
+    }
+
+    #[test]
+    fn missing_tensor_error_names_it() {
+        let s = Store::new();
+        let e = s.get("nope").unwrap_err();
+        assert!(e.to_string().contains("nope"));
+    }
+}

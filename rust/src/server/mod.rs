@@ -1,0 +1,171 @@
+//! Threaded serving front-end (tokio is not available offline, so the
+//! async boundary is a worker thread + channels).
+//!
+//! The worker owns the PJRT engine and the serving scheduler; clients
+//! submit `GenRequest`s from any thread and receive their `GenResponse`
+//! over a per-request channel.  Requests arriving while a wave is in
+//! flight accumulate and are admitted by the scheduler's continuous
+//! batcher on the next wave.
+
+use crate::coordinator::{GenRequest, GenResponse, ServeConfig, ServingEngine};
+use crate::runtime::Engine;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+enum Msg {
+    Generate(GenRequest, Sender<Result<GenResponse, String>>),
+    Metrics(Sender<crate::coordinator::metrics::ServeMetrics>),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+}
+
+impl Clone for ServerHandle {
+    fn clone(&self) -> Self {
+        ServerHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Blocking generate call (client side).
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Generate(req, tx))
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> Result<crate::coordinator::metrics::ServeMetrics> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Metrics(tx))
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+}
+
+impl Server {
+    /// Start the worker; compiles the model's serving artifacts eagerly.
+    pub fn start(artifacts: PathBuf, model: String, cfg: ServeConfig) -> Result<Server> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("kvcar-serve".into())
+            .spawn(move || worker(artifacts, model, cfg, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server thread died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Server {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle {
+            tx: self.tx.clone(),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(
+    artifacts: PathBuf,
+    model: String,
+    cfg: ServeConfig,
+    rx: Receiver<Msg>,
+    ready: Sender<Result<(), String>>,
+) {
+    let mut engine = match Engine::new(&artifacts) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let mut serving = match ServingEngine::new(&mut engine, &model, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+
+    loop {
+        // gather a wave: block for the first request, then drain briefly
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let mut wave: Vec<(GenRequest, Sender<Result<GenResponse, String>>)> = Vec::new();
+        match first {
+            Msg::Shutdown => return,
+            Msg::Metrics(tx) => {
+                let _ = tx.send(serving.metrics.clone());
+                continue;
+            }
+            Msg::Generate(req, tx) => wave.push((req, tx)),
+        }
+        let window = Duration::from_millis(2);
+        while wave.len() < serving.cfg.max_batch {
+            match rx.recv_timeout(window) {
+                Ok(Msg::Generate(req, tx)) => wave.push((req, tx)),
+                Ok(Msg::Metrics(tx)) => {
+                    let _ = tx.send(serving.metrics.clone());
+                }
+                Ok(Msg::Shutdown) | Err(_) => break,
+            }
+        }
+        let reqs: Vec<GenRequest> = wave.iter().map(|(r, _)| r.clone()).collect();
+        match serving.run(reqs) {
+            Ok(responses) => {
+                for (req, tx) in wave {
+                    let resp = responses
+                        .iter()
+                        .find(|r| r.id == req.id)
+                        .cloned()
+                        .ok_or_else(|| "response missing".to_string());
+                    let _ = tx.send(resp);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (_, tx) in wave {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}

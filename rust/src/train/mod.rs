@@ -1,0 +1,253 @@
+//! Training driver: the paper's Algorithms 1 and 2 run *from rust* over
+//! the AOT'd step artifacts.  Rust owns the loop, data stream, learning
+//! schedule, stage sequencing, and checkpoints; python never runs.
+//!
+//! Stages (paper §IV-B):
+//!
+//! 1. `pretrain`        — base LM on the synthetic corpus (builds the
+//!                        "pretrained model" Alg. 1 line 1 starts from).
+//! 2. `ae_stage1`       — Alg. 1 lines 4-19: one layer at a time, one-hot
+//!                        grad mask, CE + lambda*L1 reconstruction loss.
+//! 3. `ae_stage2`       — Alg. 1 lines 22-26: joint finetune of the
+//!                        selected layers' AEs.
+//! 4. `analyze_heads`   — Alg. 2 lines 1-3: collect adjacent-layer head
+//!                        L1 distances over evaluation batches.
+//! 5. `reuse_finetune`  — Alg. 2 lines 4-18: finetune under fixed reuse
+//!                        masks with the CE + scaled-L1 objective.
+
+pub mod schedule;
+
+use crate::compress::planner::RuntimeMasks;
+use crate::compress::similarity::HeadDistances;
+use crate::data::batch::lm_batch;
+use crate::data::corpus::Corpus;
+use crate::model::ModelSpec;
+use crate::runtime::{Engine, Store, Tensor};
+use anyhow::Result;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub lr: f32,
+    /// aux-loss scale lambda (paper: "scaled by an empirical value")
+    pub lam: f32,
+    pub log_every: usize,
+    pub verbose: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 3e-3,
+            lam: 0.3,
+            log_every: 25,
+            verbose: true,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StageLog {
+    pub stage: String,
+    pub losses: Vec<f32>,
+    pub wall_ms: u128,
+}
+
+impl StageLog {
+    pub fn first(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+    pub fn last(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e mut Engine,
+    pub store: Store,
+    pub spec: ModelSpec,
+    pub model: String,
+    pub cfg: TrainConfig,
+    pub logs: Vec<StageLog>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e mut Engine, model: &str, cfg: TrainConfig) -> Result<Self> {
+        let mut store = Store::new();
+        engine.load_params(model, &mut store)?;
+        let spec = ModelSpec::from_manifest(&engine.manifest.raw, model)?;
+        Ok(Trainer {
+            engine,
+            store,
+            spec,
+            model: model.to_string(),
+            cfg,
+            logs: Vec::new(),
+        })
+    }
+
+    /// Zero every optimizer-state / counter input of a step entry —
+    /// called at stage boundaries (each stage owns a fresh Adam state).
+    fn reset_opt_state(&mut self, entry: &str) -> Result<()> {
+        let spec = self.engine.entry_spec(entry)?.clone();
+        for io in &spec.inputs {
+            if io.name.starts_with("m/") || io.name.starts_with("v/") || io.name == "step" {
+                let t = match io.dtype {
+                    crate::runtime::DType::F32 => Tensor::zeros_f32(io.shape.clone()),
+                    crate::runtime::DType::I32 => Tensor::i32(
+                        io.shape.clone(),
+                        vec![0; io.shape.iter().product::<usize>().max(1)],
+                    ),
+                };
+                self.store.insert(&io.name, t);
+            }
+        }
+        Ok(())
+    }
+
+    fn push_batch(&mut self, corpus: &mut Corpus) {
+        let (b, s) = (8, self.spec.max_seq);
+        let tb = lm_batch(corpus, b, s);
+        self.store.insert("tokens", Tensor::i32(vec![b, s], tb.tokens));
+        self.store.insert("len_mask", Tensor::f32(vec![b, s], tb.mask));
+    }
+
+    fn run_stage(
+        &mut self,
+        entry: &str,
+        stage: &str,
+        corpus: &mut Corpus,
+        steps: usize,
+        lr: f32,
+    ) -> Result<StageLog> {
+        let t0 = Instant::now();
+        self.store.insert("lr", Tensor::scalar_f32(lr));
+        let mut losses = Vec::with_capacity(steps);
+        for step in 0..steps {
+            self.push_batch(corpus);
+            self.engine.execute_into(entry, &mut self.store)?;
+            let loss = self.store.get("loss")?.scalar_f32_value()?;
+            losses.push(loss);
+            if self.cfg.verbose && (step % self.cfg.log_every == 0 || step + 1 == steps) {
+                println!("[{stage}] step {step:>4}  loss {loss:.4}");
+            }
+        }
+        let log = StageLog {
+            stage: stage.to_string(),
+            losses,
+            wall_ms: t0.elapsed().as_millis(),
+        };
+        self.logs.push(log.clone());
+        Ok(log)
+    }
+
+    /// Stage 0: base-LM pretraining.
+    pub fn pretrain(&mut self, corpus: &mut Corpus, steps: usize) -> Result<StageLog> {
+        let entry = format!("{}_train_step", self.model);
+        self.reset_opt_state(&entry)?;
+        let lr = self.cfg.lr;
+        self.run_stage(&entry, "pretrain", corpus, steps, lr)
+    }
+
+    fn push_gmask(&mut self, layers: &[usize]) {
+        let l = self.spec.n_layer;
+        let mut g = vec![0.0f32; l];
+        for &i in layers {
+            g[i] = 1.0;
+        }
+        self.store.insert("gmask", Tensor::f32(vec![l], g));
+    }
+
+    /// Alg. 1 stage 1: train each selected layer's AEs in isolation.
+    pub fn ae_stage1(
+        &mut self,
+        corpus: &mut Corpus,
+        layers: &[usize],
+        steps_per_layer: usize,
+    ) -> Result<Vec<StageLog>> {
+        let entry = format!("{}_ae_train_step", self.model);
+        self.store.insert("lam", Tensor::scalar_f32(self.cfg.lam));
+        let mut out = Vec::new();
+        for &layer in layers {
+            self.reset_opt_state(&entry)?;
+            self.push_gmask(&[layer]);
+            let lr = self.cfg.lr;
+            out.push(self.run_stage(
+                &entry,
+                &format!("ae_stage1[layer {layer}]"),
+                corpus,
+                steps_per_layer,
+                lr,
+            )?);
+        }
+        Ok(out)
+    }
+
+    /// Alg. 1 stage 2: joint finetune over the selected layer set.
+    pub fn ae_stage2(
+        &mut self,
+        corpus: &mut Corpus,
+        layers: &[usize],
+        steps: usize,
+    ) -> Result<StageLog> {
+        let entry = format!("{}_ae_train_step", self.model);
+        self.reset_opt_state(&entry)?;
+        self.push_gmask(layers);
+        self.store.insert("lam", Tensor::scalar_f32(self.cfg.lam));
+        let lr = self.cfg.lr * 0.3; // gentler joint stage
+        self.run_stage(&entry, "ae_stage2", corpus, steps, lr)
+    }
+
+    /// Alg. 2 lines 1-3: head similarity over `batches` eval batches.
+    pub fn analyze_heads(&mut self, corpus: &mut Corpus, batches: usize) -> Result<HeadDistances> {
+        let entry = format!("{}_kv_stats", self.model);
+        let mut hd = HeadDistances::new(self.spec.n_layer, self.spec.n_kv_head);
+        for _ in 0..batches {
+            self.push_batch(corpus);
+            let out = self.engine.execute(&entry, &self.store)?;
+            hd.accumulate(out[0].1.as_f32()?, out[1].1.as_f32()?);
+        }
+        Ok(hd.finalize())
+    }
+
+    /// Alg. 2 lines 4-18: finetune under fixed masks.
+    pub fn reuse_finetune(
+        &mut self,
+        corpus: &mut Corpus,
+        masks: &RuntimeMasks,
+        steps: usize,
+    ) -> Result<StageLog> {
+        let entry = format!("{}_reuse_ft_step", self.model);
+        self.reset_opt_state(&entry)?;
+        self.apply_masks(masks);
+        self.store.insert("lam", Tensor::scalar_f32(self.cfg.lam));
+        let lr = self.cfg.lr * 0.3;
+        self.run_stage(&entry, "reuse_ft", corpus, steps, lr)
+    }
+
+    pub fn apply_masks(&mut self, masks: &RuntimeMasks) {
+        let (l, h) = (self.spec.n_layer, self.spec.n_kv_head);
+        self.store
+            .insert("compress", Tensor::f32(vec![l], masks.compress.clone()));
+        self.store
+            .insert("reuse_k", Tensor::f32(vec![l, h], masks.reuse_k.clone()));
+        self.store
+            .insert("reuse_v", Tensor::f32(vec![l, h], masks.reuse_v.clone()));
+        self.store.insert("quant", Tensor::scalar_f32(masks.quant));
+    }
+
+    /// Checkpoint base + AE params in the shared binary format.
+    pub fn checkpoint(&self, dir: &std::path::Path, tag: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let bin = dir.join(format!("{}_{tag}.bin", self.model));
+        let idx = dir.join(format!("{}_{tag}.json", self.model));
+        self.store.save_params(&bin, &idx, &["base/", "ae/"])?;
+        Ok(())
+    }
+
+    pub fn restore(&mut self, dir: &std::path::Path, tag: &str) -> Result<usize> {
+        let bin = dir.join(format!("{}_{tag}.bin", self.model));
+        let idx = dir.join(format!("{}_{tag}.json", self.model));
+        self.store.load_params(&bin, &idx)
+    }
+}

@@ -1,0 +1,118 @@
+//! Learning-rate schedules for the training driver.
+//!
+//! The AOT'd step artifacts take `lr` as a runtime scalar, so schedules
+//! live entirely in rust.  Linear warmup + cosine decay is the default
+//! for pretraining; the AE and reuse stages use constant-with-warmup
+//! (short stages at small step counts — paper §IV-B keeps these simple).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant {
+        lr: f32,
+    },
+    WarmupCosine {
+        peak_lr: f32,
+        /// floor as a fraction of peak (e.g. 0.1)
+        min_frac: f32,
+        warmup_steps: usize,
+        total_steps: usize,
+    },
+    WarmupConstant {
+        lr: f32,
+        warmup_steps: usize,
+    },
+}
+
+impl Schedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupConstant { lr, warmup_steps } => {
+                if warmup_steps == 0 || step >= warmup_steps {
+                    lr
+                } else {
+                    lr * (step + 1) as f32 / warmup_steps as f32
+                }
+            }
+            Schedule::WarmupCosine {
+                peak_lr,
+                min_frac,
+                warmup_steps,
+                total_steps,
+            } => {
+                if step < warmup_steps {
+                    return peak_lr * (step + 1) as f32 / warmup_steps.max(1) as f32;
+                }
+                let t = (step - warmup_steps) as f32
+                    / (total_steps.saturating_sub(warmup_steps)).max(1) as f32;
+                let t = t.clamp(0.0, 1.0);
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                peak_lr * (min_frac + (1.0 - min_frac) * cos)
+            }
+        }
+    }
+
+    /// Default pretraining schedule for `total` steps.
+    pub fn pretrain_default(peak_lr: f32, total: usize) -> Schedule {
+        Schedule::WarmupCosine {
+            peak_lr,
+            min_frac: 0.1,
+            warmup_steps: (total / 20).max(5).min(total),
+            total_steps: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 1e-3 };
+        assert_eq!(s.lr_at(0), 1e-3);
+        assert_eq!(s.lr_at(10_000), 1e-3);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::WarmupConstant {
+            lr: 1.0,
+            warmup_steps: 10,
+        };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.lr_at(10), 1.0);
+        assert_eq!(s.lr_at(99), 1.0);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = Schedule::WarmupCosine {
+            peak_lr: 1.0,
+            min_frac: 0.1,
+            warmup_steps: 10,
+            total_steps: 110,
+        };
+        // peak right after warmup
+        assert!((s.lr_at(10) - 1.0).abs() < 1e-3);
+        // floor at the end
+        assert!((s.lr_at(110) - 0.1).abs() < 1e-3);
+        assert!((s.lr_at(10_000) - 0.1).abs() < 1e-3);
+        // monotone decreasing after warmup
+        let mut prev = f32::INFINITY;
+        for step in 10..110 {
+            let lr = s.lr_at(step);
+            assert!(lr <= prev + 1e-6);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn pretrain_default_sane() {
+        let s = Schedule::pretrain_default(3e-3, 300);
+        assert!(s.lr_at(0) > 0.0);
+        assert!(s.lr_at(0) < 3e-3);
+        assert!(s.lr_at(299) < 1e-3);
+    }
+}

@@ -1,0 +1,141 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets use this: warmup, fixed-duration measurement,
+//! mean / p50 / p99 per iteration, throughput reporting, and a plain-text
+//! row format that EXPERIMENTS.md quotes directly.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+pub struct Bench {
+    pub name: String,
+    warmup: Duration,
+    measure: Duration,
+    min_iters: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Report {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} iters={:<8} mean={:>12}  p50={:>12}  p99={:>12}  min={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+
+    /// Print with derived throughput (elements or bytes per second).
+    pub fn print_throughput(&self, units_per_iter: f64, unit: &str) {
+        let per_sec = units_per_iter / (self.mean_ns * 1e-9);
+        println!(
+            "bench {:<44} iters={:<8} mean={:>12}  p50={:>12}  p99={:>12}  {:>12.3e} {}/s",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            per_sec,
+            unit,
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Env knobs let `make bench-fast` shrink runs during iteration.
+        let ms = |k: &str, d: u64| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        Bench {
+            name: name.to_string(),
+            warmup: Duration::from_millis(ms("KVCAR_BENCH_WARMUP_MS", 200)),
+            measure: Duration::from_millis(ms("KVCAR_BENCH_MEASURE_MS", 1000)),
+            min_iters: 10,
+        }
+    }
+
+    pub fn with_measure_ms(mut self, ms: u64) -> Self {
+        self.measure = Duration::from_millis(ms);
+        self
+    }
+
+    /// Run `f` repeatedly, timing each call.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Report {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples: Vec<f64> = Vec::with_capacity(4096);
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples.len() < self.min_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if samples.len() >= 2_000_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        Report {
+            name: self.name.clone(),
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p50_ns: samples[n / 2],
+            p99_ns: samples[((n - 1) as f64 * 0.99) as usize],
+            min_ns: samples[0],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::new("noop").with_measure_ms(20).run(|| 1 + 1);
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p50_ns <= r.p99_ns + 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates: JSON, CLI, RNG, bench harness, property testing.
+//!
+//! Only the `xla` crate closure is available offline in this image, so
+//! these are implemented from scratch rather than pulled from crates.io.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

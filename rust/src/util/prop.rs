@@ -1,0 +1,72 @@
+//! Property-based testing helper (proptest is not available offline).
+//!
+//! `check(cases, |rng| ...)` runs a property over many independently
+//! seeded RNGs; on failure it reports the failing seed so the case can be
+//! replayed with `check_seed`.  Generators live on `Rng` (util::rng) —
+//! tests compose them inline, e.g. random cache traffic or random batch
+//! plans.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the seed on the
+/// first failure.  Seeds derive from an env-overridable base so CI can
+/// reproduce a failure exactly (`KVCAR_PROP_SEED=<seed>` pins a run).
+pub fn check(cases: usize, prop: impl Fn(&mut Rng) -> Result<(), String>) {
+    if let Ok(pin) = std::env::var("KVCAR_PROP_SEED") {
+        let seed: u64 = pin.parse().expect("KVCAR_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (pinned seed {seed}): {msg}");
+        }
+        return;
+    }
+    let base = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case} (replay with KVCAR_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helper returning `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(50, |rng| {
+            let n = rng.range(1, 100);
+            prop_assert!(n >= 1 && n < 100, "n out of range: {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_with_seed_report() {
+        check(50, |rng| {
+            let n = rng.below(10);
+            prop_assert!(n < 5, "n = {n}");
+            Ok(())
+        });
+    }
+}

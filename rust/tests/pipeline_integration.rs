@@ -1,0 +1,222 @@
+//! End-to-end pipeline integration over real artifacts:
+//! pretrain -> AE stages -> head analysis -> serve, plus the
+//! faithful-vs-incremental effective-cache equivalence that validates
+//! the coordinator's reconstruction path.
+//!
+//! Kept small (tens of steps) — the full-scale run lives in
+//! `examples/e2e_train_serve.rs` and EXPERIMENTS.md.
+
+use kvcar::compress::planner::{to_masks, with_selection};
+use kvcar::coordinator::{GenRequest, Sampling, ServeConfig, ServingEngine};
+use kvcar::data::corpus;
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::ModelSpec;
+use kvcar::runtime::{artifacts_dir, Engine};
+use kvcar::train::{TrainConfig, Trainer};
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn quiet() -> TrainConfig {
+    TrainConfig {
+        verbose: false,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn train_pipeline_losses_improve() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let mut tr = Trainer::new(&mut engine, "gpt2t", quiet()).unwrap();
+    let mut c = corpus::wiki(11);
+
+    // stage 0: pretraining reduces CE
+    let log = tr.pretrain(&mut c, 40).unwrap();
+    assert!(
+        log.last() < log.first() * 0.7,
+        "pretrain did not learn: {} -> {}",
+        log.first(),
+        log.last()
+    );
+
+    // Alg. 1 stage 1 on two layers: per-layer runs converge
+    let s1 = tr.ae_stage1(&mut c, &[0, 1], 15).unwrap();
+    for log in &s1 {
+        assert!(
+            log.last() < log.first(),
+            "{}: {} -> {}",
+            log.stage,
+            log.first(),
+            log.last()
+        );
+    }
+
+    // Alg. 1 stage 2 joint
+    let s2 = tr.ae_stage2(&mut c, &[0, 1], 15).unwrap();
+    assert!(s2.last() <= s2.first() * 1.05);
+
+    // Alg. 2: similarity analysis produces usable distances
+    let hd = tr.analyze_heads(&mut c, 2).unwrap();
+    let sel = hd.select_top(1, 1);
+    assert_eq!(sel.count_k(), 1);
+    assert_eq!(sel.count_v(), 1);
+
+    // Alg. 2: reuse finetune runs and keeps loss finite
+    let plan = with_selection(
+        CompressionPlan::none(tr.spec.n_layer, tr.spec.n_kv_head),
+        &sel,
+    );
+    let ft = tr.reuse_finetune(&mut c, &to_masks(&plan), 10).unwrap();
+    assert!(ft.last().is_finite());
+    assert!(ft.last() < ft.first() * 1.2);
+}
+
+#[test]
+fn serve_baseline_and_compressed_produce_tokens() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "tinyllama_t").unwrap();
+    for ae_layers in [0, spec.n_layer] {
+        let cfg = ServeConfig {
+            plan: CompressionPlan::ae_first_layers(&spec, ae_layers),
+            max_batch: 4,
+            seed: 1,
+            per_step_reconstruct: false,
+        };
+        let mut serving = ServingEngine::new(&mut engine, "tinyllama_t", cfg).unwrap();
+        let reqs: Vec<GenRequest> = (0..3)
+            .map(|i| GenRequest::greedy(i, b"the furry cat ", 8))
+            .collect();
+        let out = serving.run(reqs).unwrap();
+        assert_eq!(out.len(), 3);
+        for r in &out {
+            assert_eq!(r.generated_tokens, 8);
+            assert_eq!(r.output.len(), 8);
+        }
+        assert_eq!(serving.metrics.requests_completed, 3);
+        assert!(serving.metrics.tokens_generated >= 24);
+        // all cache memory released at retire
+        assert_eq!(serving.cache.pool_stats().live_bytes, 0);
+    }
+}
+
+#[test]
+fn compressed_cache_measures_smaller() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    let mut peaks = Vec::new();
+    for plan in [
+        CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+        CompressionPlan::ae_first_layers(&spec, spec.n_layer),
+        CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant(),
+    ] {
+        let cfg = ServeConfig {
+            plan,
+            max_batch: 2,
+            seed: 2,
+            per_step_reconstruct: false,
+        };
+        let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
+        let reqs = vec![GenRequest::greedy(0, b"the grey rock stands .", 12)];
+        serving.run(reqs).unwrap();
+        peaks.push(serving.cache.pool_stats().peak_live_bytes);
+    }
+    assert!(
+        peaks[1] < peaks[0] * 3 / 5,
+        "AE cache not smaller: {peaks:?}"
+    );
+    assert!(peaks[2] < peaks[1] / 2, "int8 not smaller: {peaks:?}");
+}
+
+#[test]
+fn faithful_reconstruction_matches_incremental() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    // mixed plan: AE on half the layers, one reused head pair, no quant
+    // (quant packing is validated separately; f32 keeps this exact)
+    let mut plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2);
+    plan.reuse_k[3][0] = true;
+    plan.reuse_v[2][1] = true;
+    let prompt = b"the wild foxes hide and the mossy stones stand .";
+    let mut outs = Vec::new();
+    for faithful in [false, true] {
+        let cfg = ServeConfig {
+            plan: plan.clone(),
+            max_batch: 1,
+            seed: 3,
+            per_step_reconstruct: faithful,
+        };
+        let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
+        let out = serving
+            .run(vec![GenRequest::greedy(0, prompt, 10)])
+            .unwrap();
+        outs.push(out[0].output.clone());
+    }
+    assert_eq!(
+        outs[0], outs[1],
+        "incremental vs per-step-reconstruct outputs diverge"
+    );
+}
+
+#[test]
+fn server_thread_front_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let spec_plan;
+    {
+        let engine = Engine::new(&artifacts_dir()).unwrap();
+        let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+        spec_plan = CompressionPlan::ae_first_layers(&spec, 2);
+    }
+    let server = kvcar::server::Server::start(
+        artifacts_dir(),
+        "gpt2t".into(),
+        ServeConfig {
+            plan: spec_plan,
+            max_batch: 4,
+            seed: 4,
+            per_step_reconstruct: false,
+        },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut joins = Vec::new();
+    for i in 0..4u64 {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || {
+            h.generate(GenRequest {
+                id: i,
+                prompt: b"the quick birds ".to_vec(),
+                max_new_tokens: 6,
+                sampling: Sampling::Greedy,
+                stop_byte: None,
+            })
+            .unwrap()
+        }));
+    }
+    for (i, j) in joins.into_iter().enumerate() {
+        let r = j.join().unwrap();
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.generated_tokens, 6);
+    }
+    let m = handle.metrics().unwrap();
+    assert_eq!(m.requests_completed, 4);
+    server.shutdown();
+}

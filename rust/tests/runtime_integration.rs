@@ -1,0 +1,131 @@
+//! Runtime integration: every manifest entry compiles; eval/encode/decode
+//! artifacts execute with real parameters and produce sane numbers.
+//!
+//! Requires `make artifacts`; tests no-op (with a notice) when the
+//! artifacts directory is missing so `cargo test` stays runnable on a
+//! fresh checkout.
+
+use kvcar::model::ModelSpec;
+use kvcar::runtime::{artifacts_dir, Engine, Store, Tensor};
+
+fn engine_or_skip() -> Option<(Engine, Store, ModelSpec)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    let mut engine = Engine::new(&dir).expect("engine");
+    let mut store = Store::new();
+    let n = engine.load_params("gpt2t", &mut store).expect("params");
+    assert!(n > 50, "expected many params, got {n}");
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    Some((engine, store, spec))
+}
+
+fn push_masks(store: &mut Store, spec: &ModelSpec, compress_layers: usize, quant: f32) {
+    let l = spec.n_layer;
+    let h = spec.n_kv_head;
+    let mut compress = vec![0.0f32; l];
+    for c in compress.iter_mut().take(compress_layers) {
+        *c = 1.0;
+    }
+    store.insert("compress", Tensor::f32(vec![l], compress));
+    store.insert("quant", Tensor::scalar_f32(quant));
+    store.insert("reuse_k", Tensor::zeros_f32(vec![l, h]));
+    store.insert("reuse_v", Tensor::zeros_f32(vec![l, h]));
+}
+
+#[test]
+fn all_entries_compile() {
+    let Some((mut engine, _, _)) = engine_or_skip() else {
+        return;
+    };
+    let names: Vec<String> = engine.manifest.entries.keys().cloned().collect();
+    for name in names {
+        engine.load(&name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    }
+    assert!(engine.stats.compiles >= 20);
+}
+
+#[test]
+fn eval_loss_baseline_vs_compressed() {
+    let Some((mut engine, mut store, spec)) = engine_or_skip() else {
+        return;
+    };
+    let (b, s) = (8, spec.max_seq);
+    let mut corpus = kvcar::data::corpus::wiki(0);
+    let tb = kvcar::data::batch::lm_batch(&mut corpus, b, s);
+    store.insert("tokens", Tensor::i32(vec![b, s], tb.tokens.clone()));
+    store.insert("len_mask", Tensor::f32(vec![b, s], tb.mask.clone()));
+
+    push_masks(&mut store, &spec, 0, 0.0);
+    let out = engine.execute("gpt2t_eval_loss", &store).unwrap();
+    let nll_base = out[0].1.as_f32().unwrap().to_vec();
+    let ntok = out[1].1.as_f32().unwrap().to_vec();
+    assert!(nll_base.iter().all(|x| x.is_finite() && *x > 0.0));
+    assert!(ntok.iter().all(|&x| x == (s - 1) as f32));
+
+    push_masks(&mut store, &spec, spec.n_layer, 0.0);
+    let out = engine.execute("gpt2t_eval_loss", &store).unwrap();
+    let nll_comp = out[0].1.as_f32().unwrap();
+    // untrained AEs wreck the model: compressed nll must differ (and
+    // typically be much worse)
+    let diff: f32 = nll_base
+        .iter()
+        .zip(nll_comp)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(diff > 1.0, "compression had no effect: {diff}");
+}
+
+#[test]
+fn encode_decode_kv_roundtrip_shapes() {
+    let Some((mut engine, mut store, spec)) = engine_or_skip() else {
+        return;
+    };
+    let (l, s, kvd, dl) = (spec.n_layer, spec.max_seq, spec.kv_dim(), spec.ae_latent);
+    let mut rng = kvcar::util::rng::Rng::new(7);
+    let mk = |n: usize, rng: &mut kvcar::util::rng::Rng| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    };
+    store.insert("k_raw", Tensor::f32(vec![l, s, kvd], mk(l * s * kvd, &mut rng)));
+    store.insert("v_raw", Tensor::f32(vec![l, s, kvd], mk(l * s * kvd, &mut rng)));
+    let out = engine.execute("gpt2t_encode_kv", &store).unwrap();
+    assert_eq!(out[0].0, "k_lat");
+    assert_eq!(out[0].1.shape(), &[l, s, dl]);
+    store.insert("k_lat", out[0].1.clone());
+    store.insert("v_lat", out[1].1.clone());
+    let out = engine.execute("gpt2t_decode_kv", &store).unwrap();
+    assert_eq!(out[0].0, "k_rec");
+    assert_eq!(out[0].1.shape(), &[l, s, kvd]);
+    assert!(out[0].1.as_f32().unwrap().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn kv_stats_shapes_and_positivity() {
+    let Some((mut engine, mut store, spec)) = engine_or_skip() else {
+        return;
+    };
+    let (b, s) = (8, spec.max_seq);
+    let mut corpus = kvcar::data::corpus::wiki(3);
+    let tb = kvcar::data::batch::lm_batch(&mut corpus, b, s);
+    store.insert("tokens", Tensor::i32(vec![b, s], tb.tokens));
+    store.insert("len_mask", Tensor::f32(vec![b, s], tb.mask));
+    let out = engine.execute("gpt2t_kv_stats", &store).unwrap();
+    let dk = out[0].1.as_f32().unwrap();
+    assert_eq!(out[0].1.shape(), &[spec.n_layer, spec.n_kv_head]);
+    // rows 1.. are genuine distances: strictly positive
+    assert!(dk[spec.n_kv_head..].iter().all(|&x| x > 0.0));
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some((mut engine, mut store, spec)) = engine_or_skip() else {
+        return;
+    };
+    store.insert("tokens", Tensor::i32(vec![1, 4], vec![0; 4])); // wrong shape
+    store.insert("len_mask", Tensor::f32(vec![1, 4], vec![1.0; 4]));
+    push_masks(&mut store, &spec, 0, 0.0);
+    let err = engine.execute("gpt2t_eval_loss", &store).unwrap_err();
+    assert!(format!("{err:#}").contains("shape mismatch"));
+}
