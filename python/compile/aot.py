@@ -247,6 +247,18 @@ def build_model(cfg: ModelConfig, outdir: str, manifest: dict, seed: int) -> Non
         name=f"{cfg.name}_decode_kv",
     )
 
+    # token-granular decoder for the incremental effective-cache path:
+    # the serving engine reconstructs one new row per decode step, so it
+    # runs the AE decoder on a [L, 1, dl] slice instead of [L, S, dl]
+    # (falls back to the padded full entry when this one is absent).
+    low(
+        dk_fn,
+        [("ae", ae), ("k_lat", jnp.zeros((L, 1, dl), jnp.float32)),
+         ("v_lat", jnp.zeros((L, 1, dl), jnp.float32))],
+        ["k_rec", "v_rec"],
+        name=f"{cfg.name}_decode_kv_t",
+    )
+
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)

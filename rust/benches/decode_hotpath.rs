@@ -3,7 +3,14 @@
 //! plans, plus prefill latency.  The headline L3 numbers for
 //! EXPERIMENTS.md §Perf.
 //!
-//! Skips (exit 0) when artifacts are missing.
+//! Besides the human-readable rows, the run emits a machine-readable
+//! `BENCH_decode_hotpath.json` (override with `KVCAR_BENCH_JSON`) so the
+//! perf trajectory — in particular the faithful-reconstruct round mean,
+//! the path the incremental effective-cache refactor targets — is
+//! tracked across PRs.  When a previous file exists its numbers are
+//! reported as deltas before being replaced.
+//!
+//! Skips (exit 0, file untouched) when artifacts are missing.
 
 use kvcar::coordinator::{GenRequest, ServeConfig, ServingEngine};
 use kvcar::data::corpus;
@@ -11,8 +18,18 @@ use kvcar::model::memory::CompressionPlan;
 use kvcar::model::ModelSpec;
 use kvcar::runtime::{artifacts_dir, Engine};
 use kvcar::util::bench::fmt_ns;
+use kvcar::util::json::{self, Json};
 
 const MODEL: &str = "gpt2t";
+
+struct CaseResult {
+    label: String,
+    batch: usize,
+    faithful: bool,
+    mean_ms: f64,
+    p99_ms: f64,
+    tok_s: f64,
+}
 
 fn run_case(
     engine: &mut Engine,
@@ -21,7 +38,7 @@ fn run_case(
     batch: usize,
     faithful: bool,
     rounds: usize,
-) {
+) -> CaseResult {
     let cfg = ServeConfig {
         plan,
         max_batch: batch,
@@ -45,12 +62,89 @@ fn run_case(
     let tokens: usize = out.iter().map(|r| r.generated_tokens).sum();
     let per_round = serving.metrics.decode_step_latency.mean_ms();
     let p99 = serving.metrics.decode_step_latency.percentile_ms(99.0);
+    let tok_s = tokens as f64 / wall.as_secs_f64();
     println!(
         "bench decode_hotpath/{label:<36} round mean={:>10} p99={:>10}  {:>8.1} tok/s (b={batch})",
         fmt_ns(per_round * 1e6),
         fmt_ns(p99 * 1e6),
-        tokens as f64 / wall.as_secs_f64(),
+        tok_s,
     );
+    CaseResult {
+        label: label.to_string(),
+        batch,
+        faithful,
+        mean_ms: per_round,
+        p99_ms: p99,
+        tok_s,
+    }
+}
+
+fn json_path() -> String {
+    std::env::var("KVCAR_BENCH_JSON").unwrap_or_else(|_| "BENCH_decode_hotpath.json".into())
+}
+
+/// Compare against the previous run's file (the cross-PR trajectory).
+fn report_deltas(prev: &Json, cases: &[CaseResult]) {
+    let Some(prev_cases) = prev.get("cases").and_then(Json::as_arr) else {
+        return;
+    };
+    for c in cases {
+        let old = prev_cases.iter().find_map(|p| {
+            (p.get("label").and_then(Json::as_str) == Some(c.label.as_str()))
+                .then(|| p.get("round_mean_ms").and_then(Json::as_f64))
+                .flatten()
+        });
+        if let Some(old_mean) = old {
+            if old_mean > 0.0 {
+                println!(
+                    "bench decode_hotpath/{:<36} vs previous: {:+.1}% round mean ({:.3} -> {:.3} ms)",
+                    c.label,
+                    100.0 * (c.mean_ms - old_mean) / old_mean,
+                    old_mean,
+                    c.mean_ms,
+                );
+            }
+        }
+    }
+}
+
+fn write_json(cases: &[CaseResult], prefill_mean_ms: f64, prefill_p99_ms: f64, rounds: usize) {
+    let path = json_path();
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(prev) = Json::parse(&text) {
+            report_deltas(&prev, cases);
+        }
+    }
+    let j = json::obj(vec![
+        ("version", json::num(1.0)),
+        ("bench", json::s("decode_hotpath")),
+        ("model", json::s(MODEL)),
+        ("rounds", json::num(rounds as f64)),
+        (
+            "cases",
+            json::arr(cases.iter().map(|c| {
+                json::obj(vec![
+                    ("label", json::s(&c.label)),
+                    ("batch", json::num(c.batch as f64)),
+                    ("faithful", Json::Bool(c.faithful)),
+                    ("round_mean_ms", json::num(c.mean_ms)),
+                    ("round_p99_ms", json::num(c.p99_ms)),
+                    ("tok_per_s", json::num(c.tok_s)),
+                ])
+            })),
+        ),
+        (
+            "prefill_64tok",
+            json::obj(vec![
+                ("mean_ms", json::num(prefill_mean_ms)),
+                ("p99_ms", json::num(prefill_p99_ms)),
+            ]),
+        ),
+    ]);
+    match std::fs::write(&path, j.to_string()) {
+        Ok(()) => println!("bench decode_hotpath: wrote {path}"),
+        Err(e) => eprintln!("bench decode_hotpath: could not write {path}: {e}"),
+    }
 }
 
 fn main() {
@@ -70,13 +164,16 @@ fn main() {
     let ae = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
     let aeq = CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant();
 
+    let mut cases = Vec::new();
     for b in [1usize, 8] {
-        run_case(&mut engine, &format!("baseline/b{b}"), none.clone(), b, false, rounds);
-        run_case(&mut engine, &format!("ae_all/b{b}"), ae.clone(), b, false, rounds);
-        run_case(&mut engine, &format!("ae_int8/b{b}"), aeq.clone(), b, false, rounds);
+        cases.push(run_case(&mut engine, &format!("baseline/b{b}"), none.clone(), b, false, rounds));
+        cases.push(run_case(&mut engine, &format!("ae_all/b{b}"), ae.clone(), b, false, rounds));
+        cases.push(run_case(&mut engine, &format!("ae_int8/b{b}"), aeq.clone(), b, false, rounds));
     }
-    // faithful per-step reconstruction (the unoptimized paper dataflow)
-    run_case(&mut engine, "ae_all_faithful/b1", ae.clone(), 1, true, rounds);
+    // faithful per-step reconstruction — the decode-on-retrieval dataflow
+    // the incremental effective-cache path optimizes; tracked across PRs
+    cases.push(run_case(&mut engine, "ae_all_faithful/b1", ae.clone(), 1, true, rounds));
+    cases.push(run_case(&mut engine, "ae_int8_faithful/b1", aeq.clone(), 1, true, rounds));
 
     // prefill latency
     let cfg = ServeConfig {
@@ -91,9 +188,12 @@ fn main() {
         let reqs = vec![GenRequest::greedy(0, &prompts.tokens(64), 1)];
         serving.run(reqs).unwrap();
     }
+    let prefill_mean = serving.metrics.prefill_latency.mean_ms();
+    let prefill_p99 = serving.metrics.prefill_latency.percentile_ms(99.0);
     println!(
         "bench decode_hotpath/prefill_64tok                 mean={:>10} p99={:>10}",
-        fmt_ns(serving.metrics.prefill_latency.mean_ms() * 1e6),
-        fmt_ns(serving.metrics.prefill_latency.percentile_ms(99.0) * 1e6),
+        fmt_ns(prefill_mean * 1e6),
+        fmt_ns(prefill_p99 * 1e6),
     );
+    write_json(&cases, prefill_mean, prefill_p99, rounds);
 }

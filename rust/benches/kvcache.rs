@@ -2,7 +2,7 @@
 //! format and plan, allocator recycle behaviour.  These are the L3
 //! per-token costs the serving loop pays (EXPERIMENTS.md §Perf).
 
-use kvcar::kvcache::{CacheConfig, CacheManager, Side};
+use kvcar::kvcache::{CacheConfig, CacheManager, Side, StreamRows};
 use kvcar::model::memory::CompressionPlan;
 use kvcar::model::{Arch, ModelSpec};
 use kvcar::util::bench::{black_box, Bench};
@@ -69,6 +69,57 @@ fn bench_read(label: &str, plan: CompressionPlan) {
     r.print_throughput((spec.n_layer * 2 * 128) as f64, "row");
 }
 
+/// Bulk prefill ingest: one `append_rows` call for 64 tokens (the
+/// streaming path) vs 64 `append_token` calls (bench_append above).
+fn bench_append_bulk(label: &str, plan: CompressionPlan) {
+    let spec = spec();
+    let mut rng = Rng::new(3);
+    let n = 64usize;
+    let kl = rows(&mut rng, spec.n_layer * n * spec.ae_latent);
+    let vl = rows(&mut rng, spec.n_layer * n * spec.ae_latent);
+    let kr = rows(&mut rng, spec.n_layer * n * spec.kv_dim());
+    let vr = rows(&mut rng, spec.n_layer * n * spec.kv_dim());
+    let mut mgr = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let r = Bench::new(&format!("kvcache/append_rows/{label}")).run(|| {
+        let id = mgr.create_sequence();
+        mgr.append_rows(id, n, n, &kl, &vl, &kr, &vr).unwrap();
+        mgr.free_sequence(id);
+    });
+    r.print_throughput(n as f64, "tok");
+}
+
+/// Zero-copy retrieval: decode every stream straight into a reused
+/// buffer through the `stream` view (vs `stored_rows`' owned Vecs).
+fn bench_stream(label: &str, plan: CompressionPlan) {
+    let spec = spec();
+    let mut rng = Rng::new(4);
+    let kl = rows(&mut rng, spec.n_layer * spec.ae_latent);
+    let vl = rows(&mut rng, spec.n_layer * spec.ae_latent);
+    let kr = rows(&mut rng, spec.n_layer * spec.kv_dim());
+    let vr = rows(&mut rng, spec.n_layer * spec.kv_dim());
+    let mut mgr = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let id = mgr.create_sequence();
+    for _ in 0..128 {
+        mgr.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+    }
+    let mut out = vec![0.0f32; 128 * spec.kv_dim()];
+    let r = Bench::new(&format!("kvcache/stream_decode/{label}")).run(|| {
+        for l in 0..spec.n_layer {
+            for side in [Side::K, Side::V] {
+                let view = match mgr.stream(id, l, side).unwrap() {
+                    StreamRows::Alias => continue,
+                    StreamRows::Latent(v) => v,
+                    StreamRows::Heads(v, _) => v,
+                };
+                let n = view.len() * view.elements_per_row();
+                view.decode_range_into(0, view.len(), &mut out[..n]);
+                black_box(&out[..n]);
+            }
+        }
+    });
+    r.print_throughput((spec.n_layer * 2 * 128) as f64, "row");
+}
+
 fn main() {
     let s = spec();
     bench_append("raw_f32", CompressionPlan::none(s.n_layer, s.n_kv_head));
@@ -84,6 +135,18 @@ fn main() {
     }
     bench_append("alternating_alias", reuse.clone());
 
+    bench_append_bulk("raw_f32", CompressionPlan::none(s.n_layer, s.n_kv_head));
+    bench_append_bulk(
+        "latent_int8",
+        CompressionPlan::ae_first_layers(&s, s.n_layer).with_quant(),
+    );
+
     bench_read("raw_f32", CompressionPlan::none(s.n_layer, s.n_kv_head));
     bench_read("latent_int8", CompressionPlan::ae_first_layers(&s, s.n_layer).with_quant());
+
+    bench_stream("raw_f32", CompressionPlan::none(s.n_layer, s.n_kv_head));
+    bench_stream(
+        "latent_int8",
+        CompressionPlan::ae_first_layers(&s, s.n_layer).with_quant(),
+    );
 }

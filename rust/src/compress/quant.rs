@@ -10,6 +10,11 @@
 //!   zeropoint = -round(scale * min(x)) - 128
 //!   q         = clamp(round(scale * x + zeropoint), -128, 127)   (Eq. 4)
 
+/// Per-vector header bytes when packed: f32 scale + f32 zeropoint.  The
+/// single source of truth for the int8 row layout — `Format::row_bytes`
+/// and the Eq. 3 accounting in `model::memory` both reference it.
+pub const QUANT_HEADER_BYTES: usize = 8;
+
 /// A quantized vector: i8 codes + per-vector affine header.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantVec {
@@ -20,11 +25,12 @@ pub struct QuantVec {
 
 impl QuantVec {
     pub fn stored_bytes(&self) -> usize {
-        self.codes.len() + 8 // f32 scale + f32 zeropoint
+        self.codes.len() + QUANT_HEADER_BYTES
     }
 }
 
-pub fn quantize(x: &[f32]) -> QuantVec {
+/// Eq. 4 affine parameters for a vector: (scale, zeropoint).
+pub fn affine_params(x: &[f32]) -> (f32, f32) {
     debug_assert!(!x.is_empty());
     let mut lo = f32::INFINITY;
     let mut hi = f32::NEG_INFINITY;
@@ -36,6 +42,11 @@ pub fn quantize(x: &[f32]) -> QuantVec {
     // round-half-to-even everywhere, matching jnp.round in the L1/L2
     // reference (keeps in-graph quant sim and rust packing bit-identical)
     let zeropoint = -(scale * lo).round_ties_even() - 128.0;
+    (scale, zeropoint)
+}
+
+pub fn quantize(x: &[f32]) -> QuantVec {
+    let (scale, zeropoint) = affine_params(x);
     let codes = x
         .iter()
         .map(|&v| {
@@ -48,6 +59,30 @@ pub fn quantize(x: &[f32]) -> QuantVec {
         codes,
         scale,
         zeropoint,
+    }
+}
+
+/// Quantize straight into a caller byte buffer (each code is the i8's
+/// two's-complement byte), no allocation — the block store's bulk-encode
+/// path.  Returns (scale, zeropoint).
+pub fn quantize_into(x: &[f32], codes: &mut [u8]) -> (f32, f32) {
+    debug_assert_eq!(x.len(), codes.len());
+    let (scale, zeropoint) = affine_params(x);
+    for (c, &v) in codes.iter_mut().zip(x) {
+        *c = (scale * v + zeropoint)
+            .round_ties_even()
+            .clamp(-128.0, 127.0) as i8 as u8;
+    }
+    (scale, zeropoint)
+}
+
+/// Dequantize codes read as raw two's-complement bytes, no allocation —
+/// the block store's bulk-decode path.
+pub fn dequantize_codes_into(codes: &[u8], scale: f32, zeropoint: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let inv = 1.0 / scale;
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = (c as i8 as f32 - zeropoint) * inv;
     }
 }
 
@@ -123,6 +158,33 @@ mod tests {
     fn storage_accounting() {
         let q = quantize(&[1.0; 64]);
         assert_eq!(q.stored_bytes(), 72); // 64 codes + 8-byte header
+    }
+
+    #[test]
+    fn in_place_codec_is_bit_identical() {
+        check(60, |rng| {
+            let n = rng.range(1, 256);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let q = quantize(&x);
+            let mut codes = vec![0u8; n];
+            let (scale, zeropoint) = quantize_into(&x, &mut codes);
+            prop_assert!(scale.to_bits() == q.scale.to_bits(), "scale mismatch");
+            prop_assert!(
+                zeropoint.to_bits() == q.zeropoint.to_bits(),
+                "zeropoint mismatch"
+            );
+            for (a, &b) in q.codes.iter().zip(&codes) {
+                prop_assert!(*a as u8 == b, "code mismatch: {a} vs {}", b as i8);
+            }
+            let mut out_a = vec![0.0f32; n];
+            let mut out_b = vec![0.0f32; n];
+            dequantize_into(&q, &mut out_a);
+            dequantize_codes_into(&codes, scale, zeropoint, &mut out_b);
+            for (a, b) in out_a.iter().zip(&out_b) {
+                prop_assert!(a.to_bits() == b.to_bits(), "dequant mismatch");
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! prefill/decode scheduler, and metrics.
 
 pub mod batcher;
+pub mod effective;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod trace;
 
+pub use effective::{EffStats, EffectiveCache, LatentDecoder};
 pub use request::{GenRequest, GenResponse, Sampling};
 pub use scheduler::{ServeConfig, ServingEngine};

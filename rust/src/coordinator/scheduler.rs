@@ -12,21 +12,27 @@
 //!   (decoded + reuse-resolved) cache, appends the new token's raw row
 //!   in-graph, and returns latent/raw/effective rows for storage.
 //!
-//! The effective cache is transient scratch (the decode-on-retrieval
-//! working set).  Two modes:
+//! The effective cache is per-sequence scratch owned by an
+//! `EffectiveCache` (coordinator::effective) — the decode-on-retrieval
+//! working set.  Two modes:
 //!
-//! * `incremental` (default) — effective rows are appended as decode
-//!   produces them; the persistent store is still only compressed rows.
-//! * `per_step_reconstruct` — the faithful-paper mode: every round
-//!   rebuilds the effective cache from the compressed store through the
-//!   `{m}_decode_kv` decoder artifact (reconstruction on every
-//!   retrieval).  Slower; used to validate the incremental path and to
-//!   quantify the optimization in EXPERIMENTS.md §Perf.
+//! * in-graph (default) — decode_step returns each new token's effective
+//!   row and `push_step_row` appends it; the persistent store is still
+//!   only compressed rows.
+//! * `per_step_reconstruct` — the faithful-paper mode: effective rows
+//!   come from the compressed store through the decoder artifacts
+//!   (reconstruction on retrieval).  Maintained *incrementally*: each
+//!   round `EffectiveCache::advance` reconstructs only the rows past the
+//!   cache manager's `decoded_upto` watermark — the AE decoder runs on a
+//!   `[L, 1, dl]` slice per step (`{m}_decode_kv_t`), not `[L, max_seq,
+//!   dl]`.  `rebuild_full` remains for eviction-resume (tier.rs).
 
+use super::effective::{EffectiveCache, LatentDecoder};
 use super::metrics::ServeMetrics;
 use super::request::{GenRequest, GenResponse, Sampling};
 use crate::compress::planner::{to_masks, RuntimeMasks};
-use crate::kvcache::{CacheConfig, CacheManager, Side, StoredRows};
+use crate::kvcache::tier::HostTier;
+use crate::kvcache::{CacheConfig, CacheManager};
 use crate::model::memory::CompressionPlan;
 use crate::model::ModelSpec;
 use crate::runtime::{Engine, Store, Tensor};
@@ -34,7 +40,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -56,12 +62,6 @@ impl ServeConfig {
             per_step_reconstruct: false,
         }
     }
-}
-
-struct EffBuf {
-    /// [L, S, kvd] row-major
-    k: Vec<f32>,
-    v: Vec<f32>,
 }
 
 struct ActiveSeq {
@@ -88,12 +88,9 @@ pub struct ServingEngine<'e> {
     pub cache: CacheManager,
     pub cfg: ServeConfig,
     pub metrics: ServeMetrics,
-    eff: HashMap<u64, EffBuf>,
+    eff: HashMap<u64, EffectiveCache>,
     decode_batches: Vec<usize>,
     rng: Rng,
-    /// reusable decode-round staging buffers (avoid 4 MB/round allocs)
-    kc_buf: Vec<f32>,
-    vc_buf: Vec<f32>,
 }
 
 impl<'e> ServingEngine<'e> {
@@ -128,8 +125,6 @@ impl<'e> ServingEngine<'e> {
             eff: HashMap::new(),
             decode_batches,
             rng: Rng::new(seed ^ 0x5E47E),
-            kc_buf: Vec::new(),
-            vc_buf: Vec::new(),
         };
         s.apply_masks();
         Ok(s)
@@ -182,14 +177,18 @@ impl<'e> ServingEngine<'e> {
             self.spec.vocab,
         );
         let plen = req.prompt.len().clamp(1, s - 1);
-        let mut tokens = vec![0i32; s];
-        let mut mask = vec![0.0f32; s];
-        for t in 0..plen {
-            tokens[t] = req.prompt[t] as i32;
-            mask[t] = 1.0;
+        {
+            let tokens = self.store.insert_view_i32("tokens", vec![1, s]);
+            tokens.fill(0);
+            for t in 0..plen {
+                tokens[t] = req.prompt[t] as i32;
+            }
         }
-        self.store.insert("tokens", Tensor::i32(vec![1, s], tokens));
-        self.store.insert("len_mask", Tensor::f32(vec![1, s], mask));
+        {
+            let mask = self.store.insert_view("len_mask", vec![1, s]);
+            mask.fill(0.0);
+            mask[..plen].fill(1.0);
+        }
         self.store
             .insert("last", Tensor::scalar_i32((plen - 1) as i32));
         let entry = format!("{}_prefill", self.model);
@@ -202,36 +201,22 @@ impl<'e> ServingEngine<'e> {
         let v_lat = out[4].1.as_f32()?;
         let k_eff = out[5].1.as_f32()?;
         let v_eff = out[6].1.as_f32()?;
+        debug_assert_eq!(k_lat.len(), l * s * dl);
+        debug_assert_eq!(k_raw.len(), l * s * kvd);
 
-        // store the prompt's compressed rows
+        // bulk-ingest the prompt's compressed rows (the artifact outputs
+        // are already [L, S, *] prefill-shaped — no per-token staging)
         let cache_id = self.cache.create_sequence();
-        let mut kl = vec![0.0f32; l * dl];
-        let mut vl = vec![0.0f32; l * dl];
-        let mut kr = vec![0.0f32; l * kvd];
-        let mut vr = vec![0.0f32; l * kvd];
-        for t in 0..plen {
-            for layer in 0..l {
-                kl[layer * dl..(layer + 1) * dl]
-                    .copy_from_slice(&k_lat[layer * s * dl + t * dl..][..dl]);
-                vl[layer * dl..(layer + 1) * dl]
-                    .copy_from_slice(&v_lat[layer * s * dl + t * dl..][..dl]);
-                kr[layer * kvd..(layer + 1) * kvd]
-                    .copy_from_slice(&k_raw[layer * s * kvd + t * kvd..][..kvd]);
-                vr[layer * kvd..(layer + 1) * kvd]
-                    .copy_from_slice(&v_raw[layer * s * kvd + t * kvd..][..kvd]);
-            }
-            self.cache.append_token(cache_id, &kl, &vl, &kr, &vr)?;
-        }
+        self.cache
+            .append_rows(cache_id, plen, s, k_lat, v_lat, k_raw, v_raw)?;
 
-        // effective-cache scratch, seeded from the prefill's k_eff/v_eff
-        let mut eff = EffBuf {
-            k: vec![0.0; l * s * kvd],
-            v: vec![0.0; l * s * kvd],
-        };
-        for layer in 0..l {
-            let base = layer * s * kvd;
-            eff.k[base..base + plen * kvd].copy_from_slice(&k_eff[base..base + plen * kvd]);
-            eff.v[base..base + plen * kvd].copy_from_slice(&v_eff[base..base + plen * kvd]);
+        // effective-cache scratch.  In-graph mode seeds from the
+        // prefill's exact k_eff/v_eff (and advances the watermark); the
+        // faithful mode leaves the watermark at 0 so the first decode
+        // round reconstructs the prompt from the compressed store.
+        let mut eff = EffectiveCache::new(&self.spec);
+        if !self.cfg.per_step_reconstruct {
+            eff.seed(&mut self.cache, cache_id, k_eff, v_eff, plen);
         }
         self.eff.insert(cache_id, eff);
 
@@ -266,127 +251,53 @@ impl<'e> ServingEngine<'e> {
         }
     }
 
-    /// Faithful-paper reconstruction: rebuild one sequence's effective
-    /// cache from the compressed store (latents through the decoder
-    /// artifact, aliases resolved layer-by-layer).
+    /// Faithful full reconstruction of one sequence's effective cache
+    /// from the compressed store — the eviction-resume path.  Per-step
+    /// maintenance goes through `EffectiveCache::advance` instead
+    /// (incremental, O(new rows)).
     pub fn rebuild_effective(&mut self, cache_id: u64) -> Result<()> {
-        let (l, s, kvd, dl) = (
-            self.spec.n_layer,
-            self.spec.max_seq,
-            self.spec.kv_dim(),
-            self.spec.ae_latent,
-        );
+        let spec = &self.spec;
+        let eff = self
+            .eff
+            .entry(cache_id)
+            .or_insert_with(|| EffectiveCache::new(spec));
+        let mut dec = ArtifactDecoder {
+            engine: &mut *self.engine,
+            store: &mut self.store,
+            model: &self.model,
+            spec: &self.spec,
+        };
+        eff.rebuild_full(&mut self.cache, cache_id, &mut dec)?;
+        Ok(())
+    }
+
+    /// Evict a sequence's working set: drop the effective-cache scratch,
+    /// invalidate the decode watermark, and park the compressed payload
+    /// in the host tier (modeled PCIe cost — the compressed bytes are
+    /// what moves, which is the paper's composition-with-offloading
+    /// claim).
+    pub fn park_sequence(&mut self, cache_id: u64, tier: &mut HostTier) -> Result<Duration> {
         let len = self
             .cache
             .seq_len(cache_id)
-            .ok_or_else(|| anyhow!("unknown sequence"))?;
-        // pass 1: gather latents for AE layers, decode them in one call
-        let mut k_lat = vec![0.0f32; l * s * dl];
-        let mut v_lat = vec![0.0f32; l * s * dl];
-        let mut has_latent = false;
-        for layer in 0..l {
-            for (side, buf) in [(Side::K, &mut k_lat), (Side::V, &mut v_lat)] {
-                if let StoredRows::Latent(rows) = self.cache.stored_rows(cache_id, layer, side)? {
-                    has_latent = true;
-                    for t in 0..len {
-                        buf[layer * s * dl + t * dl..][..dl]
-                            .copy_from_slice(&rows[t * dl..(t + 1) * dl]);
-                    }
-                }
-            }
-        }
-        let (k_rec, v_rec) = if has_latent {
-            self.store.insert("k_lat", Tensor::f32(vec![l, s, dl], k_lat));
-            self.store.insert("v_lat", Tensor::f32(vec![l, s, dl], v_lat));
-            let entry = format!("{}_decode_kv", self.model);
-            let out = self.engine.execute(&entry, &self.store)?;
-            (
-                out[0].1.as_f32()?.to_vec(),
-                out[1].1.as_f32()?.to_vec(),
-            )
-        } else {
-            (vec![0.0; l * s * kvd], vec![0.0; l * s * kvd])
-        };
+            .ok_or_else(|| anyhow!("unknown sequence {cache_id}"))?;
+        anyhow::ensure!(
+            !tier.is_parked(cache_id),
+            "sequence {cache_id} already parked (double-evict would corrupt tier accounting)"
+        );
+        self.eff.remove(&cache_id);
+        self.cache.reset_decoded(cache_id);
+        Ok(tier.evict(cache_id, self.cache.seq_stored_bytes(cache_id), len))
+    }
 
-        // pass 2: assemble effective rows layer-by-layer (aliases read the
-        // already-assembled previous layer)
-        let dh = self.spec.d_head;
-        let (reuse_k, reuse_v) = {
-            let (rk, rv) = self.cache.reuse_masks();
-            (rk.clone(), rv.clone())
-        };
-        let mut eff = EffBuf {
-            k: vec![0.0; l * s * kvd],
-            v: vec![0.0; l * s * kvd],
-        };
-        for layer in 0..l {
-            for (side, out_buf, rec, reuse) in [
-                (Side::K, 0usize, &k_rec, &reuse_k),
-                (Side::V, 1, &v_rec, &reuse_v),
-            ] {
-                let stored = self.cache.stored_rows(cache_id, layer, side)?;
-                let (dst_all, src_prev): (&mut Vec<f32>, Vec<f32>) = if out_buf == 0 {
-                    let prev = if layer > 0 {
-                        eff.k[(layer - 1) * s * kvd..layer * s * kvd].to_vec()
-                    } else {
-                        vec![0.0; s * kvd]
-                    };
-                    (&mut eff.k, prev)
-                } else {
-                    let prev = if layer > 0 {
-                        eff.v[(layer - 1) * s * kvd..layer * s * kvd].to_vec()
-                    } else {
-                        vec![0.0; s * kvd]
-                    };
-                    (&mut eff.v, prev)
-                };
-                let dst = &mut dst_all[layer * s * kvd..(layer + 1) * s * kvd];
-                match stored {
-                    StoredRows::Alias => {
-                        dst[..len * kvd].copy_from_slice(&src_prev[..len * kvd]);
-                    }
-                    StoredRows::Latent(_) => {
-                        for t in 0..len {
-                            dst[t * kvd..(t + 1) * kvd]
-                                .copy_from_slice(&rec[layer * s * kvd + t * kvd..][..kvd]);
-                        }
-                        // reused heads override the reconstruction
-                        for (h, &r) in reuse[layer].iter().enumerate() {
-                            if r {
-                                for t in 0..len {
-                                    dst[t * kvd + h * dh..t * kvd + (h + 1) * dh]
-                                        .copy_from_slice(
-                                            &src_prev[t * kvd + h * dh..t * kvd + (h + 1) * dh],
-                                        );
-                                }
-                            }
-                        }
-                    }
-                    StoredRows::Heads(rows, heads) => {
-                        let epr = heads.len() * dh;
-                        for t in 0..len {
-                            for (slot, &h) in heads.iter().enumerate() {
-                                dst[t * kvd + h * dh..t * kvd + (h + 1) * dh].copy_from_slice(
-                                    &rows[t * epr + slot * dh..t * epr + (slot + 1) * dh],
-                                );
-                            }
-                        }
-                        for (h, &r) in reuse[layer].iter().enumerate() {
-                            if r {
-                                for t in 0..len {
-                                    dst[t * kvd + h * dh..t * kvd + (h + 1) * dh]
-                                        .copy_from_slice(
-                                            &src_prev[t * kvd + h * dh..t * kvd + (h + 1) * dh],
-                                        );
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        self.eff.insert(cache_id, eff);
-        Ok(())
+    /// Resume a parked sequence: pay the modeled transfer and rebuild
+    /// the effective cache in full from the compressed store.
+    pub fn resume_sequence(&mut self, cache_id: u64, tier: &mut HostTier) -> Result<Duration> {
+        let (_len, cost) = tier
+            .resume(cache_id)
+            .ok_or_else(|| anyhow!("sequence {cache_id} not parked"))?;
+        self.rebuild_effective(cache_id)?;
+        Ok(cost)
     }
 
     /// One batched decode round over the given active sequences.
@@ -395,12 +306,29 @@ impl<'e> ServingEngine<'e> {
         if live.is_empty() {
             return Ok(());
         }
+        // the round timer starts before reconstruction so the measured
+        // decode_step_latency includes the retrieval work the incremental
+        // path optimizes (BENCH_decode_hotpath.json tracks this number)
+        let t0 = Instant::now();
         if self.cfg.per_step_reconstruct {
+            // incremental faithful reconstruction: decode only the rows
+            // appended past each sequence's watermark (O(new rows) per
+            // round — the prompt once after prefill, then one row/step)
+            let mut dec = ArtifactDecoder {
+                engine: &mut *self.engine,
+                store: &mut self.store,
+                model: &self.model,
+                spec: &self.spec,
+            };
             for &i in &live {
-                self.rebuild_effective(active[i].cache_id)?;
+                let id = active[i].cache_id;
+                let eff = self
+                    .eff
+                    .get_mut(&id)
+                    .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
+                eff.advance(&mut self.cache, id, &mut dec)?;
             }
         }
-        let t0 = Instant::now();
         let b = *self
             .decode_batches
             .iter()
@@ -414,49 +342,43 @@ impl<'e> ServingEngine<'e> {
             self.spec.ae_latent,
             self.spec.vocab,
         );
-        let mut token = vec![0i32; b];
-        let mut pos = vec![0i32; b];
-        // recycle staging buffers across rounds: steal the previous
-        // round's tensors back out of the store instead of allocating
-        // fresh multi-MB vectors every round
-        let need = b * l * s * kvd;
-        let mut steal = |name: &str, fallback: &mut Vec<f32>| -> Vec<f32> {
-            let mut data = std::mem::take(fallback);
-            if let Ok(t) = self.store.get_mut(name) {
-                let old = std::mem::replace(
-                    t,
-                    Tensor::F32 {
-                        shape: vec![0],
-                        data: Vec::new(),
-                    },
-                );
-                if let Tensor::F32 { data: d, .. } = old {
-                    data = d;
-                }
+        // stage decode inputs into store-resident buffers: insert_view
+        // overwrites the previous round's allocations in place (no
+        // multi-MB Vec churn, no tensor re-creation)
+        {
+            let token = self.store.insert_view_i32("token", vec![b]);
+            token.fill(0);
+            for (slot, &i) in live.iter().take(rows).enumerate() {
+                token[slot] = active[i].next_token as i32;
             }
-            data.resize(need, 0.0);
-            data
-        };
-        let mut k_cache = steal("k_cache", &mut self.kc_buf);
-        let mut v_cache = steal("v_cache", &mut self.vc_buf);
-        for (slot, &i) in live.iter().take(rows).enumerate() {
-            let seq = &active[i];
-            token[slot] = seq.next_token as i32;
-            pos[slot] = seq.pos as i32;
-            let eff = &self.eff[&seq.cache_id];
-            k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.k);
-            v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.v);
         }
-        for slot in rows..b {
-            k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
-            v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
+        {
+            let pos = self.store.insert_view_i32("pos", vec![b]);
+            pos.fill(0);
+            for (slot, &i) in live.iter().take(rows).enumerate() {
+                pos[slot] = active[i].pos as i32;
+            }
         }
-        self.store.insert("token", Tensor::i32(vec![b], token));
-        self.store.insert("pos", Tensor::i32(vec![b], pos));
-        self.store
-            .insert("k_cache", Tensor::f32(vec![b, l, s, kvd], k_cache));
-        self.store
-            .insert("v_cache", Tensor::f32(vec![b, l, s, kvd], v_cache));
+        {
+            let k_cache = self.store.insert_view("k_cache", vec![b, l, s, kvd]);
+            for (slot, &i) in live.iter().take(rows).enumerate() {
+                let eff = &self.eff[&active[i].cache_id];
+                k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.k);
+            }
+            for slot in rows..b {
+                k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
+            }
+        }
+        {
+            let v_cache = self.store.insert_view("v_cache", vec![b, l, s, kvd]);
+            for (slot, &i) in live.iter().take(rows).enumerate() {
+                let eff = &self.eff[&active[i].cache_id];
+                v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.v);
+            }
+            for slot in rows..b {
+                v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
+            }
+        }
         let entry = format!("{}_decode_step_b{}", self.model, b);
         let out = self.engine.execute(&entry, &self.store)?;
         let round = t0.elapsed();
@@ -484,13 +406,20 @@ impl<'e> ServingEngine<'e> {
                 &k_raw[slot * l * kvd..(slot + 1) * l * kvd],
                 &v_raw[slot * l * kvd..(slot + 1) * l * kvd],
             )?;
-            let eff = self.eff.get_mut(&seq.cache_id).unwrap();
-            for layer in 0..l {
-                let dst = layer * s * kvd + seq.pos * kvd;
-                eff.k[dst..dst + kvd]
-                    .copy_from_slice(&k_eff[slot * l * kvd + layer * kvd..][..kvd]);
-                eff.v[dst..dst + kvd]
-                    .copy_from_slice(&v_eff[slot * l * kvd + layer * kvd..][..kvd]);
+            if !self.cfg.per_step_reconstruct {
+                // in-graph mode: the artifact returned the new token's
+                // exact effective rows; append them and move the
+                // watermark.  Faithful mode leaves the watermark behind
+                // so the next round's advance() reconstructs this row
+                // from the compressed store instead.
+                let eff = self.eff.get_mut(&seq.cache_id).unwrap();
+                eff.push_step_row(
+                    &mut self.cache,
+                    seq.cache_id,
+                    seq.pos,
+                    &k_eff[slot * l * kvd..(slot + 1) * l * kvd],
+                    &v_eff[slot * l * kvd..(slot + 1) * l * kvd],
+                );
             }
             seq.pos += 1;
             seq.output.push(next);
@@ -552,6 +481,79 @@ impl<'e> ServingEngine<'e> {
         self.metrics.wall += t0.elapsed();
         done.sort_by_key(|r| r.id);
         Ok(done)
+    }
+}
+
+/// `LatentDecoder` over the AOT decoder artifacts.  Prefers the
+/// token-granular `{m}_decode_kv_t` entry ([L, 1, dl] — constant work
+/// per step); falls back to zero-padding through the full-sequence
+/// `{m}_decode_kv` signature for bulk ranges (prompt reconstruction,
+/// eviction-resume) and for artifact sets built before the `_t` entry
+/// existed.
+struct ArtifactDecoder<'a> {
+    engine: &'a mut Engine,
+    store: &'a mut Store,
+    model: &'a str,
+    spec: &'a ModelSpec,
+}
+
+impl LatentDecoder for ArtifactDecoder<'_> {
+    fn decode_latents_into(
+        &mut self,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        n: usize,
+        k_rec: &mut [f32],
+        v_rec: &mut [f32],
+    ) -> Result<()> {
+        let (l, s, dl, kvd) = (
+            self.spec.n_layer,
+            self.spec.max_seq,
+            self.spec.ae_latent,
+            self.spec.kv_dim(),
+        );
+        debug_assert_eq!(k_lat.len(), l * n * dl);
+        debug_assert_eq!(k_rec.len(), l * n * kvd);
+        let entry_t = format!("{}_decode_kv_t", self.model);
+        if n == 1 && self.engine.manifest.entries.contains_key(&entry_t) {
+            self.store
+                .insert_view("k_lat", vec![l, 1, dl])
+                .copy_from_slice(k_lat);
+            self.store
+                .insert_view("v_lat", vec![l, 1, dl])
+                .copy_from_slice(v_lat);
+            let out = self.engine.execute(&entry_t, self.store)?;
+            k_rec.copy_from_slice(out[0].1.as_f32()?);
+            v_rec.copy_from_slice(out[1].1.as_f32()?);
+            return Ok(());
+        }
+        anyhow::ensure!(n <= s, "latent range exceeds max_seq");
+        {
+            let kd = self.store.insert_view("k_lat", vec![l, s, dl]);
+            kd.fill(0.0);
+            for layer in 0..l {
+                kd[layer * s * dl..layer * s * dl + n * dl]
+                    .copy_from_slice(&k_lat[layer * n * dl..(layer + 1) * n * dl]);
+            }
+        }
+        {
+            let vd = self.store.insert_view("v_lat", vec![l, s, dl]);
+            vd.fill(0.0);
+            for layer in 0..l {
+                vd[layer * s * dl..layer * s * dl + n * dl]
+                    .copy_from_slice(&v_lat[layer * n * dl..(layer + 1) * n * dl]);
+            }
+        }
+        let entry = format!("{}_decode_kv", self.model);
+        let out = self.engine.execute(&entry, self.store)?;
+        let (kr, vr) = (out[0].1.as_f32()?, out[1].1.as_f32()?);
+        for layer in 0..l {
+            k_rec[layer * n * kvd..(layer + 1) * n * kvd]
+                .copy_from_slice(&kr[layer * s * kvd..layer * s * kvd + n * kvd]);
+            v_rec[layer * n * kvd..(layer + 1) * n * kvd]
+                .copy_from_slice(&vr[layer * s * kvd..layer * s * kvd + n * kvd]);
+        }
+        Ok(())
     }
 }
 

@@ -10,7 +10,7 @@
 //! `ae_latent` elements — the format is orthogonal to what the elements
 //! mean.  f16 conversion is implemented in-tree (no `half` crate offline).
 
-use crate::compress::quant::{dequantize_into, quantize, QuantVec};
+use crate::compress::quant::{dequantize_codes_into, quantize_into, QUANT_HEADER_BYTES};
 
 /// Element encoding for stored rows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -25,7 +25,10 @@ impl Format {
         match self {
             Format::F32 => elements * 4,
             Format::F16 => elements * 2,
-            Format::Int8 => elements + 8, // codes + f32 scale + f32 zeropoint
+            // codes + the (scale, zeropoint) header the row codec writes;
+            // sharing QUANT_HEADER_BYTES keeps layout and accounting
+            // coupled to one definition (regression-tested below)
+            Format::Int8 => elements + QUANT_HEADER_BYTES,
         }
     }
 }
@@ -105,6 +108,90 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
+// --- bulk slice codecs -----------------------------------------------------
+// Whole-range chunked `to_le_bytes`/`from_le_bytes` conversion instead of
+// per-element indexed offset arithmetic; the fixed-width chunk loops
+// vectorize.  Int8 stays per-row (each row carries its own affine header).
+
+fn encode_f32_slice(dst: &mut [u8], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len() * 4);
+    for (c, &v) in dst.chunks_exact_mut(4).zip(src) {
+        c.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn decode_f32_slice(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * 4);
+    for (o, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+        *o = f32::from_le_bytes(c.try_into().unwrap());
+    }
+}
+
+fn encode_f16_slice(dst: &mut [u8], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len() * 2);
+    for (c, &v) in dst.chunks_exact_mut(2).zip(src) {
+        c.copy_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+    }
+}
+
+fn decode_f16_slice(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * 2);
+    for (o, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        *o = f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap()));
+    }
+}
+
+fn encode_int8_row(dst: &mut [u8], src: &[f32]) {
+    let (header, codes) = dst.split_at_mut(QUANT_HEADER_BYTES);
+    let (scale, zeropoint) = quantize_into(src, codes);
+    header[..4].copy_from_slice(&scale.to_le_bytes());
+    header[4..8].copy_from_slice(&zeropoint.to_le_bytes());
+}
+
+fn decode_int8_row(src: &[u8], dst: &mut [f32]) {
+    let (header, codes) = src.split_at(QUANT_HEADER_BYTES);
+    let scale = f32::from_le_bytes(header[..4].try_into().unwrap());
+    let zeropoint = f32::from_le_bytes(header[4..8].try_into().unwrap());
+    dequantize_codes_into(codes, scale, zeropoint, dst);
+}
+
+/// Borrowed view over a contiguous row range of one block: readers get
+/// the encoded payload (`raw`) or decoded-range access (`decode_into`)
+/// without cloning block data.
+#[derive(Debug, Clone, Copy)]
+pub struct RowsView<'a> {
+    pub format: Format,
+    pub elements_per_row: usize,
+    pub rows: usize,
+    data: &'a [u8],
+}
+
+impl<'a> RowsView<'a> {
+    /// The encoded bytes backing this range (zero-copy).
+    pub fn raw(&self) -> &'a [u8] {
+        self.data
+    }
+
+    /// Decode every row in the view into `out` ([rows * elements] f32).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.elements_per_row);
+        match self.format {
+            Format::F32 => decode_f32_slice(self.data, out),
+            Format::F16 => decode_f16_slice(self.data, out),
+            Format::Int8 => {
+                let rb = self.format.row_bytes(self.elements_per_row);
+                for (r, o) in self
+                    .data
+                    .chunks_exact(rb)
+                    .zip(out.chunks_exact_mut(self.elements_per_row))
+                {
+                    decode_int8_row(r, o);
+                }
+            }
+        }
+    }
+}
+
 /// One storage block: encoded bytes for up to `capacity` rows.
 #[derive(Debug, Clone)]
 pub struct Block {
@@ -134,73 +221,60 @@ impl Block {
         self.data.len()
     }
 
+    /// Bulk-encode as many whole rows from `rows` (flat [n, elements]
+    /// row-major) as fit in the remaining capacity; returns the number of
+    /// rows consumed.  The f32/f16 paths convert the whole range with one
+    /// chunked pass (no per-row offset math).
+    pub fn push_rows(&mut self, rows: &[f32]) -> usize {
+        let epr = self.elements_per_row;
+        assert!(epr > 0, "zero-width rows are never stored");
+        assert_eq!(rows.len() % epr, 0, "partial row");
+        let n = (rows.len() / epr).min(self.capacity - self.rows);
+        if n == 0 {
+            return 0;
+        }
+        let rb = self.format.row_bytes(epr);
+        let dst = &mut self.data[self.rows * rb..(self.rows + n) * rb];
+        let src = &rows[..n * epr];
+        match self.format {
+            Format::F32 => encode_f32_slice(dst, src),
+            Format::F16 => encode_f16_slice(dst, src),
+            Format::Int8 => {
+                for (d, s) in dst.chunks_exact_mut(rb).zip(src.chunks_exact(epr)) {
+                    encode_int8_row(d, s);
+                }
+            }
+        }
+        self.rows += n;
+        n
+    }
+
     pub fn push_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.elements_per_row);
         assert!(!self.is_full());
+        let pushed = self.push_rows(row);
+        debug_assert_eq!(pushed, 1);
+    }
+
+    /// Borrowed view over rows [start, end) (see `RowsView`).
+    pub fn rows_view(&self, start: usize, end: usize) -> RowsView<'_> {
+        assert!(start <= end && end <= self.rows, "rows {start}..{end} of {}", self.rows);
         let rb = self.format.row_bytes(self.elements_per_row);
-        let off = self.rows * rb;
-        match self.format {
-            Format::F32 => {
-                for (i, &v) in row.iter().enumerate() {
-                    self.data[off + i * 4..off + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
-                }
-            }
-            Format::F16 => {
-                for (i, &v) in row.iter().enumerate() {
-                    self.data[off + i * 2..off + i * 2 + 2]
-                        .copy_from_slice(&f32_to_f16_bits(v).to_le_bytes());
-                }
-            }
-            Format::Int8 => {
-                let q = quantize(row);
-                self.data[off..off + 4].copy_from_slice(&q.scale.to_le_bytes());
-                self.data[off + 4..off + 8].copy_from_slice(&q.zeropoint.to_le_bytes());
-                for (i, &c) in q.codes.iter().enumerate() {
-                    self.data[off + 8 + i] = c as u8;
-                }
-            }
+        RowsView {
+            format: self.format,
+            elements_per_row: self.elements_per_row,
+            rows: end - start,
+            data: &self.data[start * rb..end * rb],
         }
-        self.rows += 1;
+    }
+
+    /// Decode rows [start, end) into `out` ([(end-start) * elements] f32).
+    pub fn decode_rows_into(&self, start: usize, end: usize, out: &mut [f32]) {
+        self.rows_view(start, end).decode_into(out);
     }
 
     pub fn read_row(&self, idx: usize, out: &mut [f32]) {
-        assert!(idx < self.rows);
-        assert_eq!(out.len(), self.elements_per_row);
-        let rb = self.format.row_bytes(self.elements_per_row);
-        let off = idx * rb;
-        match self.format {
-            Format::F32 => {
-                for (i, o) in out.iter_mut().enumerate() {
-                    *o = f32::from_le_bytes(
-                        self.data[off + i * 4..off + i * 4 + 4].try_into().unwrap(),
-                    );
-                }
-            }
-            Format::F16 => {
-                for (i, o) in out.iter_mut().enumerate() {
-                    *o = f16_bits_to_f32(u16::from_le_bytes(
-                        self.data[off + i * 2..off + i * 2 + 2].try_into().unwrap(),
-                    ));
-                }
-            }
-            Format::Int8 => {
-                let scale = f32::from_le_bytes(self.data[off..off + 4].try_into().unwrap());
-                let zeropoint =
-                    f32::from_le_bytes(self.data[off + 4..off + 8].try_into().unwrap());
-                let codes: Vec<i8> = self.data[off + 8..off + 8 + self.elements_per_row]
-                    .iter()
-                    .map(|&b| b as i8)
-                    .collect();
-                dequantize_into(
-                    &QuantVec {
-                        codes,
-                        scale,
-                        zeropoint,
-                    },
-                    out,
-                );
-            }
-        }
+        self.decode_rows_into(idx, idx + 1, out);
     }
 }
 
@@ -296,5 +370,188 @@ mod tests {
         let mut b = Block::new(Format::F32, 4, 1);
         b.push_row(&[0.0; 4]);
         b.push_row(&[0.0; 4]);
+    }
+
+    #[test]
+    fn int8_row_layout_accounts_for_header() {
+        // regression: the Int8 codec writes an 8-byte (scale, zeropoint)
+        // header per row; row_bytes must include it or a capacity-full
+        // block would write out of bounds on its last rows.
+        check(30, |rng| {
+            let elements = rng.range(1, 96);
+            let capacity = rng.range(1, 12);
+            prop_assert!(
+                Format::Int8.row_bytes(elements) == elements + QUANT_HEADER_BYTES,
+                "row_bytes dropped the quant header"
+            );
+            let mut b = Block::new(Format::Int8, elements, capacity);
+            prop_assert!(
+                b.data.len() == capacity * (elements + QUANT_HEADER_BYTES),
+                "block allocation misses header space"
+            );
+            let rows: Vec<Vec<f32>> = (0..capacity)
+                .map(|_| (0..elements).map(|_| rng.normal_f32(0.0, 2.0)).collect())
+                .collect();
+            for r in &rows {
+                b.push_row(r); // would panic on out-of-bounds writes
+            }
+            prop_assert!(b.is_full(), "block should be exactly full");
+            // every row (incl. the last) reads back within quant error
+            let mut out = vec![0.0f32; elements];
+            for (i, r) in rows.iter().enumerate() {
+                b.read_row(i, &mut out);
+                let lo = r.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let tol = (hi - lo).max(1e-8) / 255.0 + 1e-5;
+                for (a, c) in r.iter().zip(&out) {
+                    prop_assert!((a - c).abs() <= tol, "row {i}: {a} vs {c}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bulk_push_rows_matches_push_row_bitwise() {
+        check(40, |rng| {
+            let elements = rng.range(1, 48);
+            let capacity = rng.range(2, 10);
+            let fmt = *rng.choice(&[Format::F32, Format::F16, Format::Int8]);
+            let n = rng.range(1, capacity + 1);
+            let flat: Vec<f32> = (0..n * elements).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let mut scalar = Block::new(fmt, elements, capacity);
+            for r in flat.chunks_exact(elements) {
+                scalar.push_row(r);
+            }
+            let mut bulk = Block::new(fmt, elements, capacity);
+            let pushed = bulk.push_rows(&flat);
+            prop_assert!(pushed == n, "pushed {pushed} != {n}");
+            prop_assert!(bulk.rows == scalar.rows);
+            prop_assert!(bulk.data == scalar.data, "encoded bytes diverge ({fmt:?})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn push_rows_clamps_to_capacity() {
+        let mut b = Block::new(Format::F32, 2, 3);
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect(); // 5 rows
+        assert_eq!(b.push_rows(&flat), 3);
+        assert!(b.is_full());
+        assert_eq!(b.push_rows(&flat), 0);
+    }
+
+    #[test]
+    fn rows_view_decodes_ranges_without_copy() {
+        check(30, |rng| {
+            let elements = rng.range(1, 32);
+            let fmt = *rng.choice(&[Format::F32, Format::F16, Format::Int8]);
+            let n = rng.range(1, 9);
+            let mut b = Block::new(fmt, elements, 8);
+            let flat: Vec<f32> = (0..n * elements).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            b.push_rows(&flat);
+            let start = rng.range(0, n);
+            let end = rng.range(start, n + 1);
+            let view = b.rows_view(start, end);
+            prop_assert!(
+                view.raw().len() == (end - start) * fmt.row_bytes(elements),
+                "raw view length"
+            );
+            let mut ranged = vec![0.0f32; (end - start) * elements];
+            view.decode_into(&mut ranged);
+            // must agree bitwise with per-row reads
+            let mut row = vec![0.0f32; elements];
+            for (i, chunk) in (start..end).zip(ranged.chunks_exact(elements)) {
+                b.read_row(i, &mut row);
+                for (a, c) in row.iter().zip(chunk) {
+                    prop_assert!(a.to_bits() == c.to_bits(), "range decode diverges");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    // --- f16 codec properties (subnormals, specials, boundary) -------------
+
+    #[test]
+    fn f16_exhaustive_bit_roundtrip() {
+        // every finite f16 value is exactly representable in f32, so the
+        // f16 -> f32 -> f16 trip must reproduce the exact bit pattern;
+        // NaNs must stay NaN (payload may canonicalize)
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1F;
+            let frac = h & 0x3FF;
+            let x = f16_bits_to_f32(h);
+            if exp == 0x1F && frac != 0 {
+                assert!(x.is_nan(), "{h:#06x} should decode to NaN");
+                assert!(
+                    f16_bits_to_f32(f32_to_f16_bits(x)).is_nan(),
+                    "{h:#06x} NaN not preserved"
+                );
+            } else {
+                assert_eq!(
+                    f32_to_f16_bits(x),
+                    h,
+                    "{h:#06x} (value {x:e}) does not roundtrip"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f16_subnormal_range_roundtrip_error_bounded() {
+        // values in the f16 subnormal range [2^-24, 2^-14): round-to-
+        // nearest of a grid with spacing 2^-24 -> error <= 2^-25
+        check(200, |rng| {
+            let x = (2.0f32.powi(-24) + rng.f32() * (2.0f32.powi(-14) - 2.0f32.powi(-24)))
+                * if rng.bool(0.5) { -1.0 } else { 1.0 };
+            let r = f16_bits_to_f32(f32_to_f16_bits(x));
+            let err = (x - r).abs();
+            prop_assert!(
+                err <= 2.0f32.powi(-25) * 1.0001,
+                "subnormal x={x:e} r={r:e} err={err:e}"
+            );
+            prop_assert!(
+                r == 0.0 || r.signum() == x.signum(),
+                "sign flipped: {x:e} -> {r:e}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f16_normal_subnormal_boundary_straddle() {
+        // values straddling 2^-14 (the smallest f16 normal): both sides
+        // round to within half a subnormal ulp (2^-25)
+        let boundary = 2.0f32.powi(-14);
+        check(200, |rng| {
+            let scale = 0.5 + 1.5 * rng.f32(); // [0.5, 2)
+            let x = boundary * scale;
+            let r = f16_bits_to_f32(f32_to_f16_bits(x));
+            prop_assert!(
+                (x - r).abs() <= 2.0f32.powi(-25) * 1.0001,
+                "boundary x={x:e} r={r:e}"
+            );
+            Ok(())
+        });
+        // exactly representable points on both sides are exact
+        for exact in [boundary, boundary - 2.0f32.powi(-24), boundary + 2.0f32.powi(-24)] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(exact)), exact, "{exact:e}");
+        }
+    }
+
+    #[test]
+    fn f16_specials_signed() {
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xFC00), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // signed zeros keep their sign bit
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert!(f16_bits_to_f32(0x8000).is_sign_negative());
+        // underflow keeps the sign
+        assert_eq!(f32_to_f16_bits(-1e-10), 0x8000);
     }
 }

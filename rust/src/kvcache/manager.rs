@@ -16,7 +16,7 @@
 //! two are cross-checked in tests.
 
 use super::allocator::{BlockPool, PoolStats};
-use super::block::{Block, Format};
+use super::block::{Block, Format, RowsView};
 use crate::model::memory::CompressionPlan;
 use crate::model::ModelSpec;
 use anyhow::{anyhow, Result};
@@ -105,7 +105,8 @@ impl CacheConfig {
     }
 }
 
-/// Rows of one stream read back from the store, decoded to f32.
+/// Rows of one stream read back from the store, decoded to f32 into
+/// owned buffers.  The zero-copy counterpart is `CacheManager::stream`.
 #[derive(Debug, Clone)]
 pub enum StoredRows {
     /// nothing stored — resolve from layer l-1
@@ -116,6 +117,90 @@ pub enum StoredRows {
     Heads(Vec<f32>, Vec<usize>),
 }
 
+/// Borrowed view of one stream's rows — the incremental retrieval API.
+/// Callers decode only the row ranges they need (typically "rows since
+/// the `decoded_upto` watermark") straight into their own buffers.
+pub enum StreamRows<'a> {
+    /// nothing stored — resolve from layer l-1
+    Alias,
+    /// latent rows (run the decoder artifact over the decoded range)
+    Latent(StreamView<'a>),
+    /// raw head-subset rows + stored (non-reused) head indices
+    Heads(StreamView<'a>, &'a [usize]),
+}
+
+/// Block-spanning, borrowed row-range access for one (seq, layer, K|V)
+/// stream: no owned copies of block data, decode on demand.
+pub struct StreamView<'a> {
+    blocks: &'a [Block],
+    len: usize,
+    elements_per_row: usize,
+}
+
+impl<'a> StreamView<'a> {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn elements_per_row(&self) -> usize {
+        self.elements_per_row
+    }
+
+    /// Decode rows [start, end) into `out` ([(end-start) * elements]
+    /// f32), walking blocks without copying encoded bytes.
+    pub fn decode_range_into(&self, start: usize, end: usize, out: &mut [f32]) {
+        assert!(
+            start <= end && end <= self.len,
+            "row range {start}..{end} outside 0..{}",
+            self.len
+        );
+        let epr = self.elements_per_row;
+        assert_eq!(out.len(), (end - start) * epr);
+        if start == end {
+            return;
+        }
+        let cap = self.blocks[0].capacity;
+        let (mut row, mut off) = (start, 0usize);
+        while row < end {
+            let (b, i) = (row / cap, row % cap);
+            let take = (cap - i).min(end - row);
+            self.blocks[b].decode_rows_into(i, i + take, &mut out[off..off + take * epr]);
+            row += take;
+            off += take * epr;
+        }
+    }
+
+    /// Decode the whole stream into a fresh buffer.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len * self.elements_per_row];
+        self.decode_range_into(0, self.len, &mut out);
+        out
+    }
+
+    /// Encoded bytes of rows [start, end) as per-block borrowed views
+    /// (zero-copy; e.g. tier transfer without a decode round-trip).
+    pub fn raw_views(&self, start: usize, end: usize) -> Vec<RowsView<'a>> {
+        assert!(start <= end && end <= self.len);
+        let mut views = Vec::new();
+        if start == end {
+            return views;
+        }
+        let cap = self.blocks[0].capacity;
+        let mut row = start;
+        while row < end {
+            let (b, i) = (row / cap, row % cap);
+            let take = (cap - i).min(end - row);
+            views.push(self.blocks[b].rows_view(i, i + take));
+            row += take;
+        }
+        views
+    }
+}
+
 struct Stream {
     kind: StoreKind,
     blocks: Vec<Block>,
@@ -123,6 +208,9 @@ struct Stream {
 
 struct SeqCache {
     len: usize,
+    /// decode watermark: rows [0, decoded_upto) are already materialized
+    /// in some effective-cache scratch; retrieval asks for "rows since"
+    decoded_upto: usize,
     /// [layer][side] streams, side 0 = K, 1 = V
     streams: Vec<[Stream; 2]>,
 }
@@ -177,7 +265,14 @@ impl CacheManager {
                 ]
             })
             .collect();
-        self.seqs.insert(id, SeqCache { len: 0, streams });
+        self.seqs.insert(
+            id,
+            SeqCache {
+                len: 0,
+                decoded_upto: 0,
+                streams,
+            },
+        );
         id
     }
 
@@ -210,67 +305,140 @@ impl CacheManager {
         k_raw: &[f32],
         v_raw: &[f32],
     ) -> Result<()> {
+        self.append_rows(id, 1, 1, k_lat, v_lat, k_raw, v_raw)
+    }
+
+    /// Bulk-append `n` tokens' storage rows for every layer from
+    /// prefill-shaped buffers (the streaming ingest path: rows cross
+    /// block boundaries through `Block::push_rows`, no per-token calls).
+    ///
+    /// `k_lat`/`v_lat`: [L, stride, ae_latent] row-major latents;
+    /// `k_raw`/`v_raw`: [L, stride, kv_dim] raw rows; token t of layer l
+    /// sits at `l * stride * width + t * width` and `n <= stride`.
+    pub fn append_rows(
+        &mut self,
+        id: u64,
+        n: usize,
+        stride: usize,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        k_raw: &[f32],
+        v_raw: &[f32],
+    ) -> Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
         let spec = self.cfg.spec.clone();
         let (l, dl, kvd, dh) = (spec.n_layer, spec.ae_latent, spec.kv_dim(), spec.d_head);
-        anyhow::ensure!(k_lat.len() == l * dl && v_lat.len() == l * dl, "latent shape");
-        anyhow::ensure!(k_raw.len() == l * kvd && v_raw.len() == l * kvd, "raw shape");
+        anyhow::ensure!(n <= stride, "n exceeds buffer stride");
+        anyhow::ensure!(
+            k_lat.len() == l * stride * dl && v_lat.len() == l * stride * dl,
+            "latent shape"
+        );
+        anyhow::ensure!(
+            k_raw.len() == l * stride * kvd && v_raw.len() == l * stride * kvd,
+            "raw shape"
+        );
         let seq = self
             .seqs
             .get_mut(&id)
             .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
-        anyhow::ensure!(seq.len < spec.max_seq, "sequence at max_seq");
+        anyhow::ensure!(seq.len + n <= spec.max_seq, "sequence at max_seq");
 
-        let mut scratch: Vec<f32> = Vec::with_capacity(kvd);
+        let mut gather: Vec<f32> = Vec::new();
         for layer in 0..l {
             for (side, lat, raw) in [(0usize, k_lat, k_raw), (1, v_lat, v_raw)] {
-                // borrow dance: compute row before touching the stream
+                // borrow dance: assemble the rows before touching the stream
                 let kind = seq.streams[layer][side].kind.clone();
-                let row: Option<&[f32]> = match &kind {
+                let rows: Option<&[f32]> = match &kind {
                     StoreKind::FullAlias => None,
-                    StoreKind::Latent => Some(&lat[layer * dl..(layer + 1) * dl]),
+                    StoreKind::Latent => {
+                        let base = layer * stride * dl;
+                        Some(&lat[base..base + n * dl])
+                    }
                     StoreKind::Heads(heads) => {
-                        scratch.clear();
-                        for &h in heads {
-                            let base = layer * kvd + h * dh;
-                            scratch.extend_from_slice(&raw[base..base + dh]);
+                        gather.clear();
+                        gather.reserve(n * heads.len() * dh);
+                        for t in 0..n {
+                            for &h in heads {
+                                let base = layer * stride * kvd + t * kvd + h * dh;
+                                gather.extend_from_slice(&raw[base..base + dh]);
+                            }
                         }
-                        Some(&scratch)
+                        Some(&gather)
                     }
                 };
-                if let Some(row) = row {
+                if let Some(mut rows) = rows {
                     let fmt = self.cfg.format_for(&kind);
+                    let epr = kind.elements(&spec);
                     let stream = &mut seq.streams[layer][side];
-                    if stream.blocks.last().map_or(true, Block::is_full) {
-                        let b = self
-                            .pool
-                            .alloc(fmt, row.len(), self.cfg.block_size)
-                            .ok_or_else(|| anyhow!("cache budget exceeded"))?;
-                        stream.blocks.push(b);
+                    while !rows.is_empty() {
+                        if stream.blocks.last().map_or(true, Block::is_full) {
+                            let b = self
+                                .pool
+                                .alloc(fmt, epr, self.cfg.block_size)
+                                .ok_or_else(|| anyhow!("cache budget exceeded"))?;
+                            stream.blocks.push(b);
+                        }
+                        let pushed = stream.blocks.last_mut().unwrap().push_rows(rows);
+                        rows = &rows[pushed * epr..];
                     }
-                    stream.blocks.last_mut().unwrap().push_row(row);
                 }
             }
         }
-        seq.len += 1;
+        seq.len += n;
         Ok(())
     }
 
-    /// Read back one stream, decoded to f32 (see `StoredRows`).
+    /// Read back one stream, decoded to f32 into owned buffers (see
+    /// `StoredRows`).  Prefer `stream` + `decode_range_into` on hot
+    /// paths — it neither clones block data nor re-decodes old rows.
     pub fn stored_rows(&self, id: u64, layer: usize, side: Side) -> Result<StoredRows> {
+        Ok(match self.stream(id, layer, side)? {
+            StreamRows::Alias => StoredRows::Alias,
+            StreamRows::Latent(v) => StoredRows::Latent(v.to_vec()),
+            StreamRows::Heads(v, heads) => StoredRows::Heads(v.to_vec(), heads.to_vec()),
+        })
+    }
+
+    /// Borrowed view of one stream — the zero-copy retrieval API (see
+    /// `StreamRows`).
+    pub fn stream(&self, id: u64, layer: usize, side: Side) -> Result<StreamRows<'_>> {
         let seq = self
             .seqs
             .get(&id)
             .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
         let stream = &seq.streams[layer][side as usize];
-        match &stream.kind {
-            StoreKind::FullAlias => Ok(StoredRows::Alias),
-            StoreKind::Latent => {
-                Ok(StoredRows::Latent(read_all(stream, seq.len)))
-            }
-            StoreKind::Heads(heads) => Ok(StoredRows::Heads(
-                read_all(stream, seq.len),
-                heads.clone(),
-            )),
+        let view = StreamView {
+            blocks: &stream.blocks,
+            len: seq.len,
+            elements_per_row: stream.kind.elements(&self.cfg.spec),
+        };
+        Ok(match &stream.kind {
+            StoreKind::FullAlias => StreamRows::Alias,
+            StoreKind::Latent => StreamRows::Latent(view),
+            StoreKind::Heads(heads) => StreamRows::Heads(view, heads),
+        })
+    }
+
+    /// Decode watermark for a sequence: rows [0, watermark) have already
+    /// been materialized into effective-cache scratch.
+    pub fn decoded_upto(&self, id: u64) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.decoded_upto)
+    }
+
+    /// Advance the decode watermark (clamped to the sequence length).
+    pub fn mark_decoded(&mut self, id: u64, upto: usize) {
+        if let Some(s) = self.seqs.get_mut(&id) {
+            s.decoded_upto = upto.min(s.len);
+        }
+    }
+
+    /// Invalidate the watermark (eviction-resume: the scratch was
+    /// dropped, the next retrieval must rebuild from row 0).
+    pub fn reset_decoded(&mut self, id: u64) {
+        if let Some(s) = self.seqs.get_mut(&id) {
+            s.decoded_upto = 0;
         }
     }
 
@@ -304,26 +472,6 @@ impl CacheManager {
     pub fn reuse_masks(&self) -> (&Vec<Vec<bool>>, &Vec<Vec<bool>>) {
         (&self.cfg.plan.reuse_k, &self.cfg.plan.reuse_v)
     }
-}
-
-fn read_all(stream: &Stream, len: usize) -> Vec<f32> {
-    let epr = stream
-        .blocks
-        .first()
-        .map(|b| b.elements_per_row)
-        .unwrap_or(0);
-    let mut out = vec![0.0f32; len * epr];
-    let mut row = 0usize;
-    for b in &stream.blocks {
-        for i in 0..b.rows {
-            if row >= len {
-                break;
-            }
-            b.read_row(i, &mut out[row * epr..(row + 1) * epr]);
-            row += 1;
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -535,6 +683,203 @@ mod tests {
         let kl = vec![0.0; spec.n_layer * spec.ae_latent];
         let kr = vec![0.0; spec.n_layer * spec.kv_dim()];
         assert!(m.append_token(id, &kl, &kl, &kr, &kr).is_err());
+    }
+
+    fn random_plan(rng: &mut Rng, spec: &ModelSpec) -> CompressionPlan {
+        CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head)
+    }
+
+    #[test]
+    fn stream_view_matches_stored_rows_bitwise() {
+        check(20, |rng| {
+            let spec = tiny_spec();
+            let plan = random_plan(rng, &spec);
+            let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+            let id = m.create_sequence();
+            let n = rng.range(1, 50);
+            append_n(&mut m, id, n, rng);
+            for layer in 0..spec.n_layer {
+                for side in [Side::K, Side::V] {
+                    let owned = m.stored_rows(id, layer, side).unwrap();
+                    match (owned, m.stream(id, layer, side).unwrap()) {
+                        (StoredRows::Alias, StreamRows::Alias) => {}
+                        (StoredRows::Latent(rows), StreamRows::Latent(view)) => {
+                            prop_assert!(view.len() == n && rows.len() == n * view.elements_per_row());
+                            let viewed = view.to_vec();
+                            for (a, b) in rows.iter().zip(&viewed) {
+                                prop_assert!(a.to_bits() == b.to_bits(), "latent diverges");
+                            }
+                        }
+                        (StoredRows::Heads(rows, heads), StreamRows::Heads(view, h2)) => {
+                            prop_assert!(heads == h2, "head sets diverge");
+                            let viewed = view.to_vec();
+                            for (a, b) in rows.iter().zip(&viewed) {
+                                prop_assert!(a.to_bits() == b.to_bits(), "heads diverge");
+                            }
+                        }
+                        other => return Err(format!("kind mismatch {:?}", other.0)),
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chunked_range_decode_matches_full() {
+        // the incremental-retrieval invariant: decoding [0,n) in random
+        // watermark-sized chunks equals one full-range decode, bitwise
+        check(20, |rng| {
+            let spec = tiny_spec();
+            let plan = random_plan(rng, &spec);
+            let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+            let id = m.create_sequence();
+            let n = rng.range(2, 50);
+            append_n(&mut m, id, n, rng);
+            for layer in 0..spec.n_layer {
+                for side in [Side::K, Side::V] {
+                    let view = match m.stream(id, layer, side).unwrap() {
+                        StreamRows::Alias => continue,
+                        StreamRows::Latent(v) => v,
+                        StreamRows::Heads(v, _) => v,
+                    };
+                    let epr = view.elements_per_row();
+                    let full = view.to_vec();
+                    let mut chunked = vec![0.0f32; n * epr];
+                    let mut at = 0;
+                    while at < n {
+                        let to = rng.range(at, n) + 1;
+                        view.decode_range_into(at, to, &mut chunked[at * epr..to * epr]);
+                        at = to;
+                    }
+                    for (a, b) in full.iter().zip(&chunked) {
+                        prop_assert!(a.to_bits() == b.to_bits(), "chunked decode diverges");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bulk_append_rows_matches_per_token_appends() {
+        check(15, |rng| {
+            let spec = tiny_spec();
+            let plan = random_plan(rng, &spec);
+            let (l, dl, kvd) = (spec.n_layer, spec.ae_latent, spec.kv_dim());
+            let n = rng.range(1, spec.max_seq);
+            // prefill-shaped buffers [L, n, *]
+            let kl = rand_rows(rng, l * n * dl);
+            let vl = rand_rows(rng, l * n * dl);
+            let kr = rand_rows(rng, l * n * kvd);
+            let vr = rand_rows(rng, l * n * kvd);
+            let mut bulk = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+            let bid = bulk.create_sequence();
+            bulk.append_rows(bid, n, n, &kl, &vl, &kr, &vr).unwrap();
+            let mut scalar = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+            let sid = scalar.create_sequence();
+            let (mut tkl, mut tvl) = (vec![0.0; l * dl], vec![0.0; l * dl]);
+            let (mut tkr, mut tvr) = (vec![0.0; l * kvd], vec![0.0; l * kvd]);
+            for t in 0..n {
+                for layer in 0..l {
+                    tkl[layer * dl..][..dl].copy_from_slice(&kl[layer * n * dl + t * dl..][..dl]);
+                    tvl[layer * dl..][..dl].copy_from_slice(&vl[layer * n * dl + t * dl..][..dl]);
+                    tkr[layer * kvd..][..kvd]
+                        .copy_from_slice(&kr[layer * n * kvd + t * kvd..][..kvd]);
+                    tvr[layer * kvd..][..kvd]
+                        .copy_from_slice(&vr[layer * n * kvd + t * kvd..][..kvd]);
+                }
+                scalar.append_token(sid, &tkl, &tvl, &tkr, &tvr).unwrap();
+            }
+            prop_assert!(bulk.seq_len(bid) == scalar.seq_len(sid));
+            prop_assert!(
+                bulk.seq_stored_bytes(bid) == scalar.seq_stored_bytes(sid),
+                "stored bytes diverge"
+            );
+            for layer in 0..l {
+                for side in [Side::K, Side::V] {
+                    let a = bulk.stored_rows(bid, layer, side).unwrap();
+                    let b = scalar.stored_rows(sid, layer, side).unwrap();
+                    let rows = |x: &StoredRows| match x {
+                        StoredRows::Alias => Vec::new(),
+                        StoredRows::Latent(r) => r.clone(),
+                        StoredRows::Heads(r, _) => r.clone(),
+                    };
+                    let (ra, rb) = (rows(&a), rows(&b));
+                    prop_assert!(ra.len() == rb.len(), "row count diverges");
+                    for (x, y) in ra.iter().zip(&rb) {
+                        prop_assert!(x.to_bits() == y.to_bits(), "bulk append diverges");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn raw_views_expose_exact_encoded_bytes() {
+        // the zero-copy raw path (tier transfer without decode): the
+        // per-block views must cover the range exactly and decode to the
+        // same values as the f32 range decode
+        check(15, |rng| {
+            let spec = tiny_spec();
+            let plan = random_plan(rng, &spec);
+            let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+            let id = m.create_sequence();
+            let n = rng.range(2, 50);
+            append_n(&mut m, id, n, rng);
+            for layer in 0..spec.n_layer {
+                for side in [Side::K, Side::V] {
+                    let view = match m.stream(id, layer, side).unwrap() {
+                        StreamRows::Alias => continue,
+                        StreamRows::Latent(v) => v,
+                        StreamRows::Heads(v, _) => v,
+                    };
+                    let epr = view.elements_per_row();
+                    let start = rng.range(0, n);
+                    let end = rng.range(start, n) + 1;
+                    let views = view.raw_views(start, end);
+                    let rows: usize = views.iter().map(|v| v.rows).sum();
+                    prop_assert!(rows == end - start, "raw views must cover the range");
+                    // decoding the raw views piecewise == range decode
+                    let mut piecewise = Vec::with_capacity((end - start) * epr);
+                    for v in &views {
+                        let mut part = vec![0.0f32; v.rows * epr];
+                        v.decode_into(&mut part);
+                        prop_assert!(
+                            v.raw().len() == v.rows * v.format.row_bytes(epr),
+                            "raw byte length mismatch"
+                        );
+                        piecewise.extend_from_slice(&part);
+                    }
+                    let mut ranged = vec![0.0f32; (end - start) * epr];
+                    view.decode_range_into(start, end, &mut ranged);
+                    for (a, b) in piecewise.iter().zip(&ranged) {
+                        prop_assert!(a.to_bits() == b.to_bits(), "raw views diverge");
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn watermark_tracks_and_clamps() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut m = CacheManager::new(CacheConfig::new(spec, plan));
+        let id = m.create_sequence();
+        assert_eq!(m.decoded_upto(id), Some(0));
+        let mut rng = Rng::new(17);
+        append_n(&mut m, id, 10, &mut rng);
+        assert_eq!(m.decoded_upto(id), Some(0)); // appends do not decode
+        m.mark_decoded(id, 7);
+        assert_eq!(m.decoded_upto(id), Some(7));
+        m.mark_decoded(id, 99); // clamped to len
+        assert_eq!(m.decoded_upto(id), Some(10));
+        m.reset_decoded(id);
+        assert_eq!(m.decoded_upto(id), Some(0));
+        assert_eq!(m.decoded_upto(12345), None);
     }
 
     #[test]

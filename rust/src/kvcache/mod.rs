@@ -5,5 +5,5 @@ pub mod block;
 pub mod manager;
 pub mod tier;
 
-pub use block::Format;
-pub use manager::{CacheConfig, CacheManager, Side, StoreKind, StoredRows};
+pub use block::{Format, RowsView};
+pub use manager::{CacheConfig, CacheManager, Side, StoreKind, StoredRows, StreamRows, StreamView};

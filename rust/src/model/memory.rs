@@ -27,8 +27,10 @@ pub struct CompressionPlan {
     pub quant_int8: bool,
 }
 
-/// Per-vector header bytes when int8 quantized: f32 scale + f32 zeropoint.
-pub const QUANT_HEADER_BYTES: usize = 8;
+/// Per-vector header bytes when int8 quantized: f32 scale + f32
+/// zeropoint.  Re-exported from the packing codec so the analytical
+/// model can never drift from the bytes the block store actually writes.
+pub use crate::compress::quant::QUANT_HEADER_BYTES;
 
 impl CompressionPlan {
     pub fn none(n_layer: usize, n_kv_head: usize) -> Self {
@@ -52,6 +54,29 @@ impl CompressionPlan {
     pub fn with_quant(mut self) -> Self {
         self.quant_int8 = true;
         self
+    }
+
+    /// Random valid plan spanning every store kind — full-alias layers,
+    /// scattered head reuse, AE layers, int8 — for test/bench plan-space
+    /// sampling (defined once so every suite samples the same space).
+    pub fn random(rng: &mut crate::util::rng::Rng, n_layer: usize, n_kv_head: usize) -> Self {
+        let mut plan = Self::none(n_layer, n_kv_head);
+        for l in 0..n_layer {
+            plan.ae_layers[l] = rng.bool(0.4);
+            if l > 0 {
+                if rng.bool(0.2) {
+                    plan.reuse_k[l] = vec![true; n_kv_head];
+                    plan.reuse_v[l] = vec![true; n_kv_head];
+                } else {
+                    for h in 0..n_kv_head {
+                        plan.reuse_k[l][h] = rng.bool(0.25);
+                        plan.reuse_v[l][h] = rng.bool(0.25);
+                    }
+                }
+            }
+        }
+        plan.quant_int8 = rng.bool(0.5);
+        plan
     }
 
     /// Validity: layer 0 can never reuse (there is no layer -1).

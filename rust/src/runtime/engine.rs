@@ -40,6 +40,10 @@ pub struct EngineStats {
     /// host<->device literal traffic in elements
     pub input_elements: u64,
     pub output_elements: u64,
+    /// buffered path: inputs re-uploaded because their store version
+    /// changed (staging traffic) vs served from the device-resident cache
+    pub input_uploads: u64,
+    pub input_cache_hits: u64,
 }
 
 impl Engine {
@@ -156,8 +160,10 @@ impl Engine {
         for (i, io) in spec.inputs.iter().enumerate() {
             let ver = store.version(&io.name);
             if matches!(cache[i], Some((v, _)) if v == ver) {
+                self.stats.input_cache_hits += 1;
                 continue;
             }
+            self.stats.input_uploads += 1;
             let t = store
                 .get(&io.name)
                 .with_context(|| format!("assembling inputs for {entry}"))?;

@@ -35,6 +35,64 @@ impl Store {
         self.map.insert(name.to_string(), t);
     }
 
+    /// Insert-or-overwrite an f32 tensor in place, reusing the existing
+    /// allocation when the element count matches — the per-step staging
+    /// path (latents, k/v cache inputs) writes into the resident buffer
+    /// instead of allocating a fresh `Vec` every round.  Returns the
+    /// tensor's mutable data sized to `shape`; contents are the previous
+    /// values on reuse (callers overwrite) and zeros on (re)allocation.
+    /// The version is bumped either way so the engine re-uploads.
+    pub fn insert_view(&mut self, name: &str, shape: Vec<usize>) -> &mut [f32] {
+        let n: usize = shape.iter().product();
+        self.counter += 1;
+        self.versions.insert(name.to_string(), self.counter);
+        let t = self
+            .map
+            .entry(name.to_string())
+            .or_insert_with(|| Tensor::zeros_f32(shape.clone()));
+        match t {
+            Tensor::F32 { shape: sh, data } if data.len() == n => {
+                *sh = shape;
+                data
+            }
+            other => {
+                *other = Tensor::zeros_f32(shape);
+                match other {
+                    Tensor::F32 { data, .. } => data,
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
+    /// `insert_view` for i32 tensors (token/pos staging).
+    pub fn insert_view_i32(&mut self, name: &str, shape: Vec<usize>) -> &mut [i32] {
+        let n: usize = shape.iter().product();
+        self.counter += 1;
+        self.versions.insert(name.to_string(), self.counter);
+        let make = |shape: Vec<usize>| Tensor::I32 {
+            data: vec![0; shape.iter().product()],
+            shape,
+        };
+        let t = self
+            .map
+            .entry(name.to_string())
+            .or_insert_with(|| make(shape.clone()));
+        match t {
+            Tensor::I32 { shape: sh, data } if data.len() == n => {
+                *sh = shape;
+                data
+            }
+            other => {
+                *other = make(shape);
+                match other {
+                    Tensor::I32 { data, .. } => data,
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+
     /// Version of a tensor (0 = absent). Bumped on every insert.
     pub fn version(&self, name: &str) -> u64 {
         self.versions.get(name).copied().unwrap_or(0)
@@ -195,5 +253,45 @@ mod tests {
         let s = Store::new();
         let e = s.get("nope").unwrap_err();
         assert!(e.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn insert_view_reuses_allocation_and_bumps_version() {
+        let mut s = Store::new();
+        let v0 = s.version("stage");
+        let ptr0 = {
+            let d = s.insert_view("stage", vec![2, 3]);
+            assert_eq!(d.len(), 6);
+            assert!(d.iter().all(|&x| x == 0.0)); // fresh: zeroed
+            d.copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            d.as_ptr()
+        };
+        let v1 = s.version("stage");
+        assert!(v1 > v0);
+        // same element count, different shape: allocation is reused
+        let ptr1 = {
+            let d = s.insert_view("stage", vec![6]);
+            assert_eq!(d.len(), 6);
+            assert_eq!(d[0], 1.0); // previous contents (caller overwrites)
+            d.as_ptr()
+        };
+        assert_eq!(ptr0, ptr1, "same-size overwrite must not reallocate");
+        assert_eq!(s.get("stage").unwrap().shape(), &[6]);
+        assert!(s.version("stage") > v1);
+        // different element count: reallocates and zeroes
+        let d = s.insert_view("stage", vec![4]);
+        assert_eq!(d, [0.0; 4]);
+    }
+
+    #[test]
+    fn insert_view_replaces_other_dtype() {
+        let mut s = Store::new();
+        s.insert("x", Tensor::i32(vec![2], vec![7, 8]));
+        let d = s.insert_view("x", vec![2]);
+        assert_eq!(d, [0.0; 2]);
+        let d = s.insert_view_i32("x", vec![3]);
+        assert_eq!(d, [0i32; 3]);
+        d[1] = 5;
+        assert_eq!(s.get("x").unwrap().as_i32().unwrap(), &[0, 5, 0]);
     }
 }

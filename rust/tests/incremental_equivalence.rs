@@ -1,0 +1,140 @@
+//! Randomized equivalence for the incremental retrieval path: chunked,
+//! watermark-driven `EffectiveCache::advance` calls are **bit-identical**
+//! to a one-shot `rebuild_full` for every plan kind — full-alias layers,
+//! AE latents, head subsets, int8 packing, and arbitrary mixes.
+//!
+//! Runs without artifacts: the AE decoder is a deterministic pure-rust
+//! mock (row-wise, so chunked calls compose exactly like the real
+//! per-row decoder MLP).
+
+use kvcar::coordinator::effective::RowWiseMockDecoder;
+use kvcar::coordinator::EffectiveCache;
+use kvcar::kvcache::{CacheConfig, CacheManager};
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::{Arch, ModelSpec};
+use kvcar::prop_assert;
+use kvcar::util::prop::check;
+use kvcar::util::rng::Rng;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec {
+        name: "equiv".into(),
+        arch: Arch::Gpt2,
+        vocab: 256,
+        n_layer: 5,
+        d_model: 48,
+        n_head: 6,
+        n_kv_head: 6,
+        d_head: 8,
+        ffn_dim: 96,
+        max_seq: 64,
+        ae_hidden: 32,
+        ae_latent: 24,
+        bytes_per_el: 4,
+    }
+}
+
+fn random_plan(rng: &mut Rng, spec: &ModelSpec) -> CompressionPlan {
+    CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head)
+}
+
+fn append_random_token(m: &mut CacheManager, id: u64, rng: &mut Rng) {
+    let spec = m.cfg.spec.clone();
+    let mk = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    };
+    let kl = mk(rng, spec.n_layer * spec.ae_latent);
+    let vl = mk(rng, spec.n_layer * spec.ae_latent);
+    let kr = mk(rng, spec.n_layer * spec.kv_dim());
+    let vr = mk(rng, spec.n_layer * spec.kv_dim());
+    m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) -> std::result::Result<(), String> {
+    prop_assert!(a.len() == b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: bit divergence at {i}: {x} vs {y}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn incremental_advances_bitwise_match_full_rebuild() {
+    check(30, |rng| {
+        let spec = tiny_spec();
+        let plan = random_plan(rng, &spec);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut dec = RowWiseMockDecoder::for_spec(&spec);
+        // incremental: random-sized append/advance chunks (watermark
+        // splits the decode at arbitrary boundaries)
+        let mut inc = EffectiveCache::new(&spec);
+        let total = rng.range(1, spec.max_seq);
+        let mut appended = 0;
+        while appended < total {
+            let chunk = rng.range(1, 5).min(total - appended);
+            for _ in 0..chunk {
+                append_random_token(&mut m, id, rng);
+            }
+            appended += chunk;
+            let n = inc.advance(&mut m, id, &mut dec).map_err(|e| e.to_string())?;
+            prop_assert!(n == chunk, "advance decoded {n}, expected {chunk}");
+        }
+        // watermark: re-advancing with nothing new decodes nothing
+        let n = inc.advance(&mut m, id, &mut dec).map_err(|e| e.to_string())?;
+        prop_assert!(n == 0, "no-op advance decoded {n} rows");
+        prop_assert!(
+            inc.stats.rows_decoded == total as u64,
+            "each row must be decoded exactly once ({} for len {total})",
+            inc.stats.rows_decoded
+        );
+        prop_assert!(inc.stats.full_rebuilds == 0, "incremental path did a full rebuild");
+
+        // one-shot full rebuild into a fresh scratch
+        let mut full = EffectiveCache::new(&spec);
+        full.rebuild_full(&mut m, id, &mut dec).map_err(|e| e.to_string())?;
+        assert_bits_eq(&inc.k, &full.k, "effective K")?;
+        assert_bits_eq(&inc.v, &full.v, "effective V")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_resume_rebuild_matches_continuous_incremental() {
+    check(15, |rng| {
+        let spec = tiny_spec();
+        let plan = random_plan(rng, &spec);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut dec = RowWiseMockDecoder::for_spec(&spec);
+        // a sequence that advanced incrementally its whole life
+        let mut inc = EffectiveCache::new(&spec);
+        let total = rng.range(4, 40);
+        for _ in 0..total {
+            append_random_token(&mut m, id, rng);
+            inc.advance(&mut m, id, &mut dec).map_err(|e| e.to_string())?;
+        }
+        // eviction: scratch dropped, watermark invalidated; resume does
+        // one full rebuild (the tier.rs path)
+        m.reset_decoded(id);
+        let mut resumed = EffectiveCache::new(&spec);
+        let n = resumed
+            .advance(&mut m, id, &mut dec)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(n == total, "resume advance must rebuild all {total} rows, got {n}");
+        assert_bits_eq(&inc.k, &resumed.k, "resumed K (advance)")?;
+        assert_bits_eq(&inc.v, &resumed.v, "resumed V (advance)")?;
+
+        let mut rebuilt = EffectiveCache::new(&spec);
+        rebuilt
+            .rebuild_full(&mut m, id, &mut dec)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(rebuilt.stats.full_rebuilds == 1, "rebuild_full must count itself");
+        assert_bits_eq(&inc.k, &rebuilt.k, "resumed K (rebuild_full)")?;
+        assert_bits_eq(&inc.v, &rebuilt.v, "resumed V (rebuild_full)")?;
+        Ok(())
+    });
+}

@@ -175,6 +175,45 @@ fn faithful_reconstruction_matches_incremental() {
 }
 
 #[test]
+fn park_resume_rebuilds_effective_cache() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    let cfg = ServeConfig {
+        plan: CompressionPlan::ae_first_layers(&spec, 2),
+        max_batch: 1,
+        seed: 9,
+        per_step_reconstruct: false,
+    };
+    let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
+    // build a cached sequence directly through the public cache handle
+    let id = serving.cache.create_sequence();
+    let (l, dl, kvd) = (spec.n_layer, spec.ae_latent, spec.kv_dim());
+    let mut rng = kvcar::util::rng::Rng::new(13);
+    let n = 12;
+    for _ in 0..n {
+        let kl: Vec<f32> = (0..l * dl).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let kr: Vec<f32> = (0..l * kvd).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        serving.cache.append_token(id, &kl, &kl, &kr, &kr).unwrap();
+    }
+    let mut tier = kvcar::kvcache::tier::HostTier::new();
+    let park_cost = serving.park_sequence(id, &mut tier).unwrap();
+    assert!(tier.is_parked(id));
+    assert!(park_cost > std::time::Duration::ZERO);
+    assert_eq!(serving.cache.decoded_upto(id), Some(0)); // watermark invalidated
+    // double-park must be rejected, not silently double-counted
+    assert!(serving.park_sequence(id, &mut tier).is_err());
+    let resume_cost = serving.resume_sequence(id, &mut tier).unwrap();
+    assert!(!tier.is_parked(id));
+    assert!(resume_cost > std::time::Duration::ZERO);
+    // resume rebuilt the effective cache in full: watermark back at len
+    assert_eq!(serving.cache.decoded_upto(id), Some(n));
+    assert!(serving.resume_sequence(id, &mut tier).is_err()); // not parked
+}
+
+#[test]
 fn server_thread_front_end() {
     if !have_artifacts() {
         return;

@@ -102,6 +102,65 @@ fn encode_decode_kv_roundtrip_shapes() {
 }
 
 #[test]
+fn decode_kv_t_matches_full_decode_rows() {
+    // The incremental effective-cache path decodes one token through
+    // `decode_kv_t` ([L,1,dl]) while prompt reconstruction and
+    // eviction-resume go through the padded full `decode_kv` ([L,S,dl]).
+    // The LatentDecoder contract requires the two independently-lowered
+    // programs to agree per row, or incrementally-advanced scratch would
+    // diverge from a post-resume rebuild.  Skips (like every artifact
+    // test) when artifacts are missing, and when the artifact set
+    // predates the `_t` entry.
+    let Some((mut engine, mut store, spec)) = engine_or_skip() else {
+        return;
+    };
+    if !engine.manifest.entries.contains_key("gpt2t_decode_kv_t") {
+        eprintln!("skipping: artifacts predate decode_kv_t (re-run `make artifacts`)");
+        return;
+    }
+    let (l, s, dl, kvd) = (spec.n_layer, spec.max_seq, spec.ae_latent, spec.kv_dim());
+    let mut rng = kvcar::util::rng::Rng::new(11);
+    let mk = |n: usize, rng: &mut kvcar::util::rng::Rng| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    };
+    let k_lat = mk(l * s * dl, &mut rng);
+    let v_lat = mk(l * s * dl, &mut rng);
+    store.insert("k_lat", Tensor::f32(vec![l, s, dl], k_lat.clone()));
+    store.insert("v_lat", Tensor::f32(vec![l, s, dl], v_lat.clone()));
+    let full = engine.execute("gpt2t_decode_kv", &store).unwrap();
+    let k_full = full[0].1.as_f32().unwrap().to_vec();
+    let v_full = full[1].1.as_f32().unwrap().to_vec();
+
+    for t in [0usize, 1, s / 2, s - 1] {
+        let slice = |lat: &[f32]| -> Vec<f32> {
+            (0..l)
+                .flat_map(|layer| lat[layer * s * dl + t * dl..][..dl].to_vec())
+                .collect()
+        };
+        store.insert("k_lat", Tensor::f32(vec![l, 1, dl], slice(&k_lat)));
+        store.insert("v_lat", Tensor::f32(vec![l, 1, dl], slice(&v_lat)));
+        let one = engine.execute("gpt2t_decode_kv_t", &store).unwrap();
+        for (name, row, all) in [
+            ("k_rec", one[0].1.as_f32().unwrap(), &k_full),
+            ("v_rec", one[1].1.as_f32().unwrap(), &v_full),
+        ] {
+            for layer in 0..l {
+                let a = &row[layer * kvd..(layer + 1) * kvd];
+                let b = &all[layer * s * kvd + t * kvd..][..kvd];
+                for (x, y) in a.iter().zip(b) {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "{name} t={t} layer={layer}: decode_kv_t diverges from \
+                         decode_kv ({x:e} vs {y:e}) — the incremental path would \
+                         not be bit-identical to rebuild_full on this backend"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn kv_stats_shapes_and_positivity() {
     let Some((mut engine, mut store, spec)) = engine_or_skip() else {
         return;
