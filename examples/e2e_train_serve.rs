@@ -138,6 +138,7 @@ fn main() -> Result<()> {
             max_batch: 8,
             seed: 0,
             per_step_reconstruct: false,
+            cache_budget: None,
         };
         let mut serving = ServingEngine::new(&mut engine, MODEL, cfg)?;
         overlay(&mut serving.store, &trained);

@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         max_batch: 4,
         seed: 0,
         per_step_reconstruct: false,
+        cache_budget: None,
     };
     let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg)?;
     serving.store = merge_params(serving.store, store);

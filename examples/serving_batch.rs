@@ -52,6 +52,7 @@ fn main() -> Result<()> {
                 max_batch: 8,
                 seed: 9,
                 per_step_reconstruct: false,
+                cache_budget: None,
             },
         )?;
         let handle = server.handle();

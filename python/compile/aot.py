@@ -259,6 +259,22 @@ def build_model(cfg: ModelConfig, outdir: str, manifest: dict, seed: int) -> Non
         name=f"{cfg.name}_decode_kv_t",
     )
 
+    # cross-sequence batched decoder for the faithful serving mode: the
+    # scheduler packs every live sequence's pending watermark row into one
+    # [B, 1, dl] slot per layer and issues a single call per decode round
+    # instead of B decode_kv_t calls.  B is the largest compiled decode
+    # batch; smaller rounds zero-pad unused slots (same policy as
+    # decode_step_b{B}).
+    dkb_fn = M.make_decode_kv_batched(cfg)
+    Bmax = max(cfg.decode_batches)
+    low(
+        dkb_fn,
+        [("ae", ae), ("k_lat", jnp.zeros((Bmax, L, 1, dl), jnp.float32)),
+         ("v_lat", jnp.zeros((Bmax, L, 1, dl), jnp.float32))],
+        ["k_rec", "v_rec"],
+        name=f"{cfg.name}_decode_kv_bt",
+    )
+
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)

@@ -531,3 +531,37 @@ def make_decode_kv(cfg: ModelConfig):
         return kr, vr
 
     return decode_kv
+
+
+def make_decode_kv_batched(cfg: ModelConfig):
+    """Cross-sequence batched AE decode for the faithful serving mode.
+
+    (ae, k_lat [B,L,1,dl], v_lat [B,L,1,dl]) -> (k_rec, v_rec [B,L,1,kvd])
+
+    Each decode round reconstructs exactly one pending watermark row per
+    live sequence, so the rust scheduler packs those rows into one
+    ``[B, L, 1, dl]`` tensor and issues a single decoder call instead of
+    B ``decode_kv_t`` calls.  The layout is transposed to ``[L, B, dl]``
+    and decoded with the same scan-over-layers / rows-per-layer dataflow
+    as ``decode_kv`` — the decoder is a pure per-row map, so slot b of
+    the batched call is bit-identical to a ``decode_kv_t`` call on that
+    slot alone (the property the rust equivalence tests rely on).
+    """
+
+    def decode_kv_bt(ae, k_lat, v_lat):
+        # [B, L, 1, dl] -> [L, B, dl]: the B watermark rows of one layer
+        # become that layer's row batch
+        to_rows = lambda a: jnp.transpose(a[:, :, 0, :], (1, 0, 2))
+
+        def body(_, lp):
+            kr = ae_pallas.ae_half_from_dict(lp["k_lat"], lp["ae"]["k"]["dec"])
+            vr = ae_pallas.ae_half_from_dict(lp["v_lat"], lp["ae"]["v"]["dec"])
+            return (), (kr, vr)
+
+        xs = {"ae": ae, "k_lat": to_rows(k_lat), "v_lat": to_rows(v_lat)}
+        _, (kr, vr) = jax.lax.scan(body, (), xs)
+        # [L, B, kvd] -> [B, L, 1, kvd]
+        back = lambda a: jnp.transpose(a, (1, 0, 2))[:, :, None, :]
+        return back(kr), back(vr)
+
+    return decode_kv_bt

@@ -117,3 +117,29 @@ def test_encode_decode_kv_roundtrip_consistency(cfg):
         r_want, _ = ref.ae_decode(z_want, dec)
         np.testing.assert_allclose(np.array(zk[l]), np.array(z_want), rtol=2e-5, atol=2e-4)
         np.testing.assert_allclose(np.array(kr[l]), np.array(r_want), rtol=2e-5, atol=2e-4)
+
+
+@BOTH
+def test_batched_decode_kv_bit_matches_token_decode(cfg):
+    """decode_kv_bt packs one watermark row per live sequence into
+    [B, L, 1, dl]; every slot must be *bit-identical* to a decode_kv_t
+    call on that slot alone — the contract the rust scheduler's batched
+    faithful advance relies on for bitwise equivalence with the
+    per-sequence path."""
+    params = P.init_params(cfg, 0)
+    L, dl, kvd = cfg.n_layer, cfg.ae_latent, cfg.kv_dim
+    B = max(cfg.decode_batches)
+    rng = np.random.RandomState(11)
+    k = jnp.asarray(rng.randn(B, L, 1, dl).astype(np.float32))
+    v = jnp.asarray(rng.randn(B, L, 1, dl).astype(np.float32))
+    kr_b, vr_b = M.make_decode_kv_batched(cfg)(params["ae"], k, v)
+    assert kr_b.shape == (B, L, 1, kvd)
+    dk = M.make_decode_kv(cfg)
+    for b in (0, 1, B - 1):
+        kr_t, vr_t = dk(params["ae"], k[b], v[b])
+        assert (
+            np.asarray(kr_b[b]).view(np.uint32) == np.asarray(kr_t).view(np.uint32)
+        ).all(), f"K slot {b} diverges from decode_kv_t"
+        assert (
+            np.asarray(vr_b[b]).view(np.uint32) == np.asarray(vr_t).view(np.uint32)
+        ).all(), f"V slot {b} diverges from decode_kv_t"

@@ -44,6 +44,7 @@ fn run_case(
         max_batch: batch,
         seed: 3,
         per_step_reconstruct: faithful,
+        cache_budget: None,
     };
     let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
     let mut prompts = corpus::wiki(5);
@@ -110,10 +111,18 @@ fn report_deltas(prev: &Json, cases: &[CaseResult]) {
 
 fn write_json(cases: &[CaseResult], prefill_mean_ms: f64, prefill_p99_ms: f64, rounds: usize) {
     let path = json_path();
-    if let Ok(text) = std::fs::read_to_string(&path) {
-        if let Ok(prev) = Json::parse(&text) {
-            report_deltas(&prev, cases);
-        }
+    match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(prev) => report_deltas(&prev, cases),
+            Err(e) => println!(
+                "bench decode_hotpath: previous {path} unreadable ({e}); skipping deltas"
+            ),
+        },
+        // absent baseline is the normal first-run case, not an error:
+        // say so instead of silently comparing against nothing
+        Err(_) => println!(
+            "bench decode_hotpath: no previous run ({path} absent); deltas start next run"
+        ),
     }
     let j = json::obj(vec![
         ("version", json::num(1.0)),
@@ -171,9 +180,13 @@ fn main() {
         cases.push(run_case(&mut engine, &format!("ae_int8/b{b}"), aeq.clone(), b, false, rounds));
     }
     // faithful per-step reconstruction — the decode-on-retrieval dataflow
-    // the incremental effective-cache path optimizes; tracked across PRs
+    // the incremental effective-cache path optimizes; tracked across PRs.
+    // b8 exercises the batch-first path: one {m}_decode_kv_bt launch per
+    // round instead of one decode_kv_t launch per live sequence
     cases.push(run_case(&mut engine, "ae_all_faithful/b1", ae.clone(), 1, true, rounds));
     cases.push(run_case(&mut engine, "ae_int8_faithful/b1", aeq.clone(), 1, true, rounds));
+    cases.push(run_case(&mut engine, "ae_all_faithful/b8", ae.clone(), 8, true, rounds));
+    cases.push(run_case(&mut engine, "ae_int8_faithful/b8", aeq.clone(), 8, true, rounds));
 
     // prefill latency
     let cfg = ServeConfig {
@@ -181,6 +194,7 @@ fn main() {
         max_batch: 1,
         seed: 1,
         per_step_reconstruct: false,
+        cache_budget: None,
     };
     let mut serving = ServingEngine::new(&mut engine, MODEL, cfg).unwrap();
     let mut prompts = corpus::wiki(6);

@@ -10,12 +10,17 @@ use crate::model::ModelSpec;
 /// quant scalar — exactly the f32 inputs of eval_loss/prefill/decode_step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RuntimeMasks {
+    /// [L] 1.0 where the AE round-trip applies
     pub compress: Vec<f32>,
+    /// [L * Hkv] row-major 1.0 where K head (l, h) aliases layer l-1
     pub reuse_k: Vec<f32>,
+    /// [L * Hkv] row-major 1.0 where V head (l, h) aliases layer l-1
     pub reuse_v: Vec<f32>,
+    /// 1.0 to apply the Eq. 4 int8 sim to latents
     pub quant: f32,
 }
 
+/// Lower a boolean plan to the f32 mask tensors the artifacts consume.
 pub fn to_masks(plan: &CompressionPlan) -> RuntimeMasks {
     let fl = |b: &bool| if *b { 1.0 } else { 0.0 };
     RuntimeMasks {

@@ -18,12 +18,16 @@ pub const QUANT_HEADER_BYTES: usize = 8;
 /// A quantized vector: i8 codes + per-vector affine header.
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantVec {
+    /// one signed code per input element
     pub codes: Vec<i8>,
+    /// dequantization step (Eq. 4 scale)
     pub scale: f32,
+    /// value code 0 maps back to
     pub zeropoint: f32,
 }
 
 impl QuantVec {
+    /// Codes plus the (scale, zeropoint) header.
     pub fn stored_bytes(&self) -> usize {
         self.codes.len() + QUANT_HEADER_BYTES
     }
@@ -45,6 +49,7 @@ pub fn affine_params(x: &[f32]) -> (f32, f32) {
     (scale, zeropoint)
 }
 
+/// Eq. 4 affine quantization into an owned `QuantVec`.
 pub fn quantize(x: &[f32]) -> QuantVec {
     let (scale, zeropoint) = affine_params(x);
     let codes = x
@@ -86,6 +91,7 @@ pub fn dequantize_codes_into(codes: &[u8], scale: f32, zeropoint: f32, out: &mut
     }
 }
 
+/// Dequantize a `QuantVec` into `out`.
 pub fn dequantize_into(q: &QuantVec, out: &mut [f32]) {
     debug_assert_eq!(q.codes.len(), out.len());
     let inv = 1.0 / q.scale;
@@ -94,6 +100,7 @@ pub fn dequantize_into(q: &QuantVec, out: &mut [f32]) {
     }
 }
 
+/// Dequantize into a fresh buffer.
 pub fn dequantize(q: &QuantVec) -> Vec<f32> {
     let mut out = vec![0.0; q.codes.len()];
     dequantize_into(q, &mut out);

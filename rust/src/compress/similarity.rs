@@ -8,16 +8,22 @@
 //! paper's "19 key / 25 value / 36 key-and-value" configurations).
 
 #[derive(Debug, Clone)]
+/// Per-(layer, head) K/V distance-to-previous-layer matrices
+/// (Alg. 2's similarity statistics).
 pub struct HeadDistances {
+    /// layers covered
     pub n_layer: usize,
+    /// KV heads per layer
     pub n_kv_head: usize,
     /// [L][Hkv] mean L1 distance |head(l) - head(l-1)|; row 0 unused
     pub dk: Vec<Vec<f64>>,
+    /// [L][Hkv] mean L1 V distances; row 0 unused
     pub dv: Vec<Vec<f64>>,
     batches: usize,
 }
 
 impl HeadDistances {
+    /// Zeroed distance matrices.
     pub fn new(n_layer: usize, n_kv_head: usize) -> Self {
         HeadDistances {
             n_layer,
@@ -118,27 +124,38 @@ impl HeadDistances {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// K or V selection for a reuse candidate.
 pub enum Which {
+    /// key head
     K,
+    /// value head
     V,
 }
 
 #[derive(Debug, Clone, Copy)]
+/// One reusable head with its measured distance.
 pub struct Candidate {
+    /// layer index (>= 1)
     pub layer: usize,
+    /// KV head index
     pub head: usize,
+    /// K or V side
     pub which: Which,
+    /// mean L1 distance to the same head one layer below
     pub distance: f64,
 }
 
 /// Boolean reuse masks, the shape the artifacts and the cache manager use.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Selection {
+    /// [L][Hkv] true where K head (l, h) aliases layer l-1
     pub reuse_k: Vec<Vec<bool>>,
+    /// [L][Hkv] true where V head (l, h) aliases layer l-1
     pub reuse_v: Vec<Vec<bool>>,
 }
 
 impl Selection {
+    /// All-false selection (nothing reused).
     pub fn new(n_layer: usize, n_kv_head: usize) -> Self {
         Selection {
             reuse_k: vec![vec![false; n_kv_head]; n_layer],
@@ -153,10 +170,12 @@ impl Selection {
         }
     }
 
+    /// Selected K pairs.
     pub fn count_k(&self) -> usize {
         self.reuse_k.iter().flatten().filter(|&&b| b).count()
     }
 
+    /// Selected V pairs.
     pub fn count_v(&self) -> usize {
         self.reuse_v.iter().flatten().filter(|&&b| b).count()
     }

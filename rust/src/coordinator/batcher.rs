@@ -6,11 +6,21 @@
 //! decode batch size to run a round at.  Policy: FIFO admission (no
 //! starvation), admit while slots and memory allow, pick the smallest
 //! compiled batch size covering the live set (padding wastes compute).
+//!
+//! Under memory pressure the same module plans the park/resume side:
+//! [`plan_parking`] picks which live sequences to spill to the host
+//! tier (lowest priority first, never all of them) and [`plan_resume`]
+//! picks which parked sequences fit again (oldest first).  The
+//! scheduler executes those decisions through
+//! `ServingEngine::park_sequence` / `resume_sequence`, which move the
+//! sequences' actual encoded bytes (`CacheManager::
+//! extract_sequence_bytes`) and rebuild on resume via `rebuild_full`.
 
 use crate::model::memory::{kv_bytes_per_token, CompressionPlan};
 use crate::model::ModelSpec;
 
 #[derive(Debug, Clone, PartialEq)]
+/// One round's admission decision.
 pub struct BatchPlan {
     /// indices into the waiting queue to admit now (FIFO prefix)
     pub admit: usize,
@@ -19,7 +29,9 @@ pub struct BatchPlan {
 }
 
 #[derive(Debug, Clone)]
+/// Slot, compiled-batch, and budget limits admission plans under.
 pub struct BatcherConfig {
+    /// concurrent decode sequences targeted
     pub max_batch: usize,
     /// compiled decode batch sizes available (ascending)
     pub decode_batches: Vec<usize>,
@@ -40,6 +52,8 @@ pub fn request_cache_bytes(
     kv_bytes_per_token(spec, plan) * tokens
 }
 
+/// Plan one admission round: FIFO-admit while slots and the budget
+/// allow, then pick the smallest compiled batch covering the live set.
 pub fn plan_round(
     cfg: &BatcherConfig,
     spec: &ModelSpec,
@@ -72,6 +86,63 @@ pub fn plan_round(
         admit,
         decode_batch,
     }
+}
+
+/// Worst-case device-cache growth of one live sequence across one decode
+/// round: each of its stored streams may start a fresh block when the
+/// appended token crosses a block boundary.
+pub fn round_headroom_bytes(spec: &ModelSpec, plan: &CompressionPlan, block_size: usize) -> usize {
+    kv_bytes_per_token(spec, plan) * block_size
+}
+
+/// Which live sequences to park so the projected next round fits
+/// `budget`.
+///
+/// `live` is `(id, stored_bytes)` in admission order (oldest / highest
+/// priority first); `headroom` is the per-sequence worst-case growth of
+/// one round ([`round_headroom_bytes`]).  Victims are chosen lowest
+/// priority first (latest admitted), and the oldest sequence is never
+/// parked — at least one sequence must keep decoding so rounds complete
+/// and memory eventually frees.  Returns victim ids, park order.
+pub fn plan_parking(budget: usize, headroom: usize, live: &[(u64, usize)]) -> Vec<u64> {
+    let mut total: usize = live.iter().map(|l| l.1).sum();
+    let mut count = live.len();
+    let mut park = Vec::new();
+    for &(id, bytes) in live.iter().skip(1).rev() {
+        if total + count * headroom <= budget {
+            break;
+        }
+        park.push(id);
+        total -= bytes;
+        count -= 1;
+    }
+    park
+}
+
+/// Which parked sequences fit back on the device: oldest first, admitted
+/// while the projected total (current live bytes + headroom for every
+/// running sequence + the candidate's own payload) stays under `budget`.
+///
+/// `parked` is `(id, stored_bytes)` in admission order (oldest first).
+pub fn plan_resume(
+    budget: usize,
+    headroom: usize,
+    live_bytes: usize,
+    live_count: usize,
+    parked: &[(u64, usize)],
+) -> Vec<u64> {
+    let mut total = live_bytes;
+    let mut count = live_count;
+    let mut resume = Vec::new();
+    for &(id, bytes) in parked {
+        if total + bytes + (count + 1) * headroom > budget {
+            break;
+        }
+        resume.push(id);
+        total += bytes;
+        count += 1;
+    }
+    resume
 }
 
 #[cfg(test)]
@@ -128,6 +199,74 @@ mod tests {
         let p_comp = plan_round(&cfg(Some(budget)), &spec, &comp, 0, 0, &waiting);
         assert_eq!(p_base.admit, 2);
         assert_eq!(p_comp.admit, 4); // the paper's larger-batch claim
+    }
+
+    #[test]
+    fn parking_picks_lowest_priority_and_keeps_one_live() {
+        // three live sequences, admission order 1 < 2 < 3; only ~one fits
+        let live = vec![(1u64, 100usize), (2, 100), (3, 100)];
+        let park = plan_parking(150, 10, &live);
+        assert_eq!(park, vec![3, 2], "latest admitted park first");
+        // budget below even one sequence: everything but the oldest parks
+        let park = plan_parking(10, 10, &live);
+        assert_eq!(park, vec![3, 2]);
+        // plenty of budget: nobody parks
+        assert!(plan_parking(1 << 20, 10, &live).is_empty());
+        assert!(plan_parking(0, 0, &[(7, 500)]).is_empty(), "sole sequence never parks");
+    }
+
+    #[test]
+    fn resume_is_fifo_and_budget_bounded() {
+        let parked = vec![(4u64, 100usize), (5, 100), (6, 100)];
+        // room for two more after the running set
+        let resume = plan_resume(350, 10, 100, 1, &parked);
+        assert_eq!(resume, vec![4, 5], "oldest parked resume first");
+        assert!(plan_resume(120, 10, 100, 1, &parked).is_empty());
+        let all = plan_resume(1 << 20, 10, 0, 0, &parked);
+        assert_eq!(all, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn park_resume_plans_compose() {
+        check(50, |rng| {
+            let n = rng.range(1, 10);
+            let live: Vec<(u64, usize)> =
+                (0..n).map(|i| (i as u64, rng.range(1, 5000))).collect();
+            let budget = rng.range(1, 20_000);
+            let headroom = rng.range(0, 300);
+            let park = plan_parking(budget, headroom, &live);
+            prop_assert!(park.len() < live.len(), "must keep one sequence live");
+            // victims come from the tail of the admission order
+            let ids: Vec<u64> = live.iter().map(|l| l.0).collect();
+            let keep = live.len() - park.len();
+            for (i, id) in park.iter().enumerate() {
+                prop_assert!(
+                    *id == ids[live.len() - 1 - i],
+                    "park order must be strictly latest-first"
+                );
+            }
+            let kept_bytes: usize = live[..keep].iter().map(|l| l.1).sum();
+            // after parking, either we fit or nothing more could be parked
+            prop_assert!(
+                kept_bytes + keep * headroom <= budget || keep == 1,
+                "parked too little: {kept_bytes} + {keep}*{headroom} > {budget}"
+            );
+            // resuming the victims immediately must not overflow
+            let parked: Vec<(u64, usize)> = park
+                .iter()
+                .rev()
+                .map(|id| live[ids.iter().position(|x| x == id).unwrap()])
+                .collect();
+            let resume = plan_resume(budget, headroom, kept_bytes, keep, &parked);
+            let resumed_bytes: usize =
+                resume.iter().map(|id| parked.iter().find(|p| p.0 == *id).unwrap().1).sum();
+            prop_assert!(
+                kept_bytes + resumed_bytes + (keep + resume.len()) * headroom <= budget
+                    || resume.is_empty(),
+                "resume plan overflows the budget"
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -19,10 +19,23 @@
 //! (randomized cross-check in `tests/incremental_equivalence.rs`); the
 //! full path remains for eviction-resume, where the scratch was dropped
 //! while the sequence was parked in the host tier.
+//!
+//! On top of the per-sequence path, [`BatchedAdvance`] makes the
+//! faithful serving mode *batch-first*: each decode round the pending
+//! watermark row of every live sequence is packed into one
+//! `[B, L, 1, dl]` staging tensor and reconstructed with a **single**
+//! batched decoder call (`{m}_decode_kv_bt`), so the round issues O(1)
+//! decoder launches instead of O(B).  Sequences with bulk pending
+//! ranges (prompt reconstruction, eviction-resume) fall back to the
+//! per-sequence ladder, and the whole scheme degrades gracefully when
+//! the artifact set lacks the batched entry (`batch_capacity() ==
+//! None`).  Bitwise equivalence with the per-sequence path is asserted
+//! in `tests/batched_faithful.rs` across all plan kinds.
 
 use crate::kvcache::{CacheManager, Side, StreamRows};
 use crate::model::ModelSpec;
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 
 /// Runs the AE decoder over latent rows.  The serving engine implements
 /// this with the `{model}_decode_kv[_t]` artifacts; tests use pure-rust
@@ -43,21 +56,85 @@ pub trait LatentDecoder {
     ) -> Result<()>;
 }
 
+/// Batched counterpart of [`LatentDecoder`]: reconstructs one pending
+/// watermark row for each of `b` sequences in a single call over a
+/// packed `[b, L, 1, dl]` staging tensor.
+///
+/// Implementations must be pure per-slot (and per-row) maps: slot `i`
+/// of a batched call must equal a per-sequence `decode_latents_into`
+/// call on that slot alone, **bitwise** — this is what makes the
+/// batched faithful advance equivalent to the per-sequence path (the
+/// L2 `decode_kv_bt` entry satisfies it by construction; see
+/// `python/tests/test_decode_parity.py`).
+pub trait BatchLatentDecoder: LatentDecoder {
+    /// Maximum sequences a single batched call covers, or `None` when
+    /// no batched decoder is available (e.g. an artifact set built
+    /// before the `decode_kv_bt` entry existed) — callers then fall
+    /// back to per-sequence advances.
+    fn batch_capacity(&self) -> Option<usize>;
+
+    /// `k_lat`/`v_lat`: `[b, L, 1, dl]` row-major packed latents; write
+    /// the `[b, L, 1, kvd]` reconstructions into `k_rec`/`v_rec`.
+    /// `b` never exceeds `batch_capacity()`.
+    fn decode_latents_batch_into(
+        &mut self,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        b: usize,
+        k_rec: &mut [f32],
+        v_rec: &mut [f32],
+    ) -> Result<()>;
+}
+
 /// Deterministic row-wise mock decoder for tests and benches: a pure
 /// function of each latent row (like the real per-row decoder MLP), so
 /// chunked calls compose exactly to full-range calls — the one
 /// `LatentDecoder` contract the equivalence tests rely on.  Defined
-/// once here so every suite tests the same purity guarantee.
+/// once here so every suite tests the same purity guarantee.  Also
+/// implements [`BatchLatentDecoder`] (the same pure row map, so batched
+/// calls are bitwise-equal to per-sequence calls by construction) and
+/// counts calls on both paths so tests can assert launch counts.
 pub struct RowWiseMockDecoder {
+    /// latent width the mock consumes per row
     pub ae_latent: usize,
+    /// reconstruction width the mock produces per row
     pub kv_dim: usize,
+    /// capacity reported through `BatchLatentDecoder::batch_capacity`;
+    /// `None` simulates an artifact set without the batched entry
+    pub capacity: Option<usize>,
+    /// per-sequence (`decode_latents_into`) calls observed
+    pub seq_calls: u64,
+    /// batched (`decode_latents_batch_into`) calls observed
+    pub batch_calls: u64,
 }
 
 impl RowWiseMockDecoder {
+    /// Mock sized for `spec`, batch-capable with a default capacity of 8.
     pub fn for_spec(spec: &ModelSpec) -> Self {
         RowWiseMockDecoder {
             ae_latent: spec.ae_latent,
             kv_dim: spec.kv_dim(),
+            capacity: Some(8),
+            seq_calls: 0,
+            batch_calls: 0,
+        }
+    }
+
+    /// Override the reported batch capacity (None = no batched decoder).
+    pub fn with_capacity(mut self, capacity: Option<usize>) -> Self {
+        self.capacity = capacity;
+        self
+    }
+
+    fn decode_rows(&self, lat: &[f32], rec: &mut [f32]) {
+        for (row_lat, row_rec) in lat
+            .chunks_exact(self.ae_latent)
+            .zip(rec.chunks_exact_mut(self.kv_dim))
+        {
+            for (j, o) in row_rec.iter_mut().enumerate() {
+                *o = row_lat[j % self.ae_latent] * 0.5
+                    + row_lat[(j * 7 + 1) % self.ae_latent] * 0.25;
+            }
         }
     }
 }
@@ -71,17 +148,29 @@ impl LatentDecoder for RowWiseMockDecoder {
         k_rec: &mut [f32],
         v_rec: &mut [f32],
     ) -> Result<()> {
-        for (lat, rec) in [(k_lat, &mut *k_rec), (v_lat, &mut *v_rec)] {
-            for (row_lat, row_rec) in lat
-                .chunks_exact(self.ae_latent)
-                .zip(rec.chunks_exact_mut(self.kv_dim))
-            {
-                for (j, o) in row_rec.iter_mut().enumerate() {
-                    *o = row_lat[j % self.ae_latent] * 0.5
-                        + row_lat[(j * 7 + 1) % self.ae_latent] * 0.25;
-                }
-            }
-        }
+        self.seq_calls += 1;
+        self.decode_rows(k_lat, k_rec);
+        self.decode_rows(v_lat, v_rec);
+        Ok(())
+    }
+}
+
+impl BatchLatentDecoder for RowWiseMockDecoder {
+    fn batch_capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    fn decode_latents_batch_into(
+        &mut self,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        _b: usize,
+        k_rec: &mut [f32],
+        v_rec: &mut [f32],
+    ) -> Result<()> {
+        self.batch_calls += 1;
+        self.decode_rows(k_lat, k_rec);
+        self.decode_rows(v_lat, v_rec);
         Ok(())
     }
 }
@@ -90,7 +179,9 @@ impl LatentDecoder for RowWiseMockDecoder {
 /// `rows_decoded` grows by new rows per step, not by sequence length.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct EffStats {
+    /// from-scratch reconstructions (eviction-resume path)
     pub full_rebuilds: u64,
+    /// watermark-driven advances (steady-state path)
     pub incremental_advances: u64,
     /// token rows gathered + decoded + assembled, totalled across calls
     pub rows_decoded: u64,
@@ -114,10 +205,12 @@ pub struct EffectiveCache {
     k_rec_stage: Vec<f32>,
     v_rec_stage: Vec<f32>,
     head_stage: Vec<f32>,
+    /// per-sequence work counters (cost-law assertions)
     pub stats: EffStats,
 }
 
 impl EffectiveCache {
+    /// Zeroed scratch sized for `spec` (buffers are reused per step).
     pub fn new(spec: &ModelSpec) -> Self {
         let n = spec.n_layer * spec.max_seq * spec.kv_dim();
         EffectiveCache {
@@ -235,36 +328,22 @@ impl EffectiveCache {
         to: usize,
         dec: &mut dyn LatentDecoder,
     ) -> Result<()> {
-        let (l, s, kvd, dl, dh) = (
-            self.n_layer,
-            self.max_seq,
-            self.kv_dim,
-            self.ae_latent,
-            self.d_head,
-        );
+        let (l, kvd, dl) = (self.n_layer, self.kv_dim, self.ae_latent);
         let n = to - from;
 
         // pass 1: gather the range's latents into [L, n, dl] staging
         self.k_lat_stage.resize(l * n * dl, 0.0);
         self.v_lat_stage.resize(l * n * dl, 0.0);
-        self.k_lat_stage.fill(0.0);
-        self.v_lat_stage.fill(0.0);
-        let mut has_latent = false;
-        for layer in 0..l {
-            for (side, stage) in [
-                (Side::K, &mut self.k_lat_stage),
-                (Side::V, &mut self.v_lat_stage),
-            ] {
-                if let StreamRows::Latent(view) = cache.stream(id, layer, side)? {
-                    has_latent = true;
-                    view.decode_range_into(
-                        from,
-                        to,
-                        &mut stage[layer * n * dl..(layer + 1) * n * dl],
-                    );
-                }
-            }
-        }
+        let has_latent = gather_latent_rows(
+            cache,
+            id,
+            from,
+            to,
+            l,
+            dl,
+            &mut self.k_lat_stage,
+            &mut self.v_lat_stage,
+        )?;
 
         // pass 2: one decoder call over the [L, n, dl] slice
         self.k_rec_stage.resize(l * n * kvd, 0.0);
@@ -279,16 +358,40 @@ impl EffectiveCache {
             )?;
         }
 
-        // pass 3: assemble the new rows layer-by-layer, ascending —
-        // aliases read layer l-1's rows for the same token range, which
-        // this pass (or an earlier advance) already materialized
+        // pass 3: assemble (borrow dance: the rec stages are read while
+        // the effective buffers are written, so lend them out)
+        let k_rec = std::mem::take(&mut self.k_rec_stage);
+        let v_rec = std::mem::take(&mut self.v_rec_stage);
+        let r = self.assemble_range(cache, id, from, to, &k_rec, &v_rec);
+        self.k_rec_stage = k_rec;
+        self.v_rec_stage = v_rec;
+        r
+    }
+
+    /// Assemble reconstructed rows [from, to) into the effective buffers
+    /// layer-by-layer, ascending — aliases read layer l-1's rows for the
+    /// same token range, which this pass (or an earlier advance) already
+    /// materialized.  `k_rec`/`v_rec` are `[L, n, kvd]` decoder outputs
+    /// (only read for `Latent` streams).
+    fn assemble_range(
+        &mut self,
+        cache: &CacheManager,
+        id: u64,
+        from: usize,
+        to: usize,
+        k_rec: &[f32],
+        v_rec: &[f32],
+    ) -> Result<()> {
+        let (l, s, kvd, dh) = (self.n_layer, self.max_seq, self.kv_dim, self.d_head);
+        let n = to - from;
+        debug_assert_eq!(k_rec.len(), l * n * kvd);
         let (reuse_k, reuse_v) = cache.reuse_masks();
         for layer in 0..l {
             for side in [Side::K, Side::V] {
                 let stored = cache.stream(id, layer, side)?;
                 let (buf, rec, reuse) = match side {
-                    Side::K => (&mut self.k, &self.k_rec_stage, reuse_k),
-                    Side::V => (&mut self.v, &self.v_rec_stage, reuse_v),
+                    Side::K => (&mut self.k, k_rec, reuse_k),
+                    Side::V => (&mut self.v, v_rec, reuse_v),
                 };
                 let (prev_part, cur_part) = buf.split_at_mut(layer * s * kvd);
                 let prev: &[f32] = if layer == 0 {
@@ -322,6 +425,209 @@ impl EffectiveCache {
             }
         }
         Ok(())
+    }
+}
+
+/// Gather the latent rows [from, to) of every layer of one sequence
+/// into `[L, n, dl]` staging (`k_out`/`v_out` are zeroed first; non-AE
+/// layers stay zero).  Returns whether any stream actually stores
+/// latents — when false the decoder call can be skipped entirely.
+fn gather_latent_rows(
+    cache: &CacheManager,
+    id: u64,
+    from: usize,
+    to: usize,
+    n_layer: usize,
+    dl: usize,
+    k_out: &mut [f32],
+    v_out: &mut [f32],
+) -> Result<bool> {
+    let n = to - from;
+    debug_assert_eq!(k_out.len(), n_layer * n * dl);
+    k_out.fill(0.0);
+    v_out.fill(0.0);
+    let mut has_latent = false;
+    for layer in 0..n_layer {
+        for (side, out) in [(Side::K, &mut *k_out), (Side::V, &mut *v_out)] {
+            if let StreamRows::Latent(view) = cache.stream(id, layer, side)? {
+                has_latent = true;
+                view.decode_range_into(from, to, &mut out[layer * n * dl..(layer + 1) * n * dl]);
+            }
+        }
+    }
+    Ok(has_latent)
+}
+
+/// Work counters for the batch-first faithful path: tests assert one
+/// batched decoder call per round for B > 1 live sequences.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BatchedStats {
+    /// batched decoder calls issued (one per round in steady state)
+    pub batched_calls: u64,
+    /// watermark rows reconstructed through batched calls
+    pub batched_rows: u64,
+    /// sequences advanced through the per-sequence fallback (bulk
+    /// pending ranges, lone rows, or no batched decoder available)
+    pub fallback_advances: u64,
+}
+
+/// Batch-first planner for the faithful serving mode.
+///
+/// Each decode round, `advance_round` collects the pending watermark
+/// row of every live sequence, packs them into one shared `[B, L, 1,
+/// dl]` staging buffer (reused across rounds — no per-round
+/// allocations), reconstructs all of them with a **single**
+/// [`BatchLatentDecoder::decode_latents_batch_into`] call, and unpacks
+/// each slot through the owning sequence's assemble pass (alias and
+/// head-reuse resolution stay per-sequence).  The decode round
+/// therefore issues O(1) decoder launches instead of O(B).
+///
+/// Fallback ladder, per sequence: sequences whose pending range is not
+/// exactly one row (prompt reconstruction after prefill,
+/// eviction-resume) and lone single-row sequences take the per-sequence
+/// [`EffectiveCache::advance`] path (`decode_kv_t` → padded
+/// `decode_kv`); when the decoder reports no batch capacity at all the
+/// whole round degrades to per-sequence advances.  Every path is
+/// bitwise-identical (see `tests/batched_faithful.rs`).
+#[derive(Default)]
+pub struct BatchedAdvance {
+    k_lat: Vec<f32>,
+    v_lat: Vec<f32>,
+    k_rec: Vec<f32>,
+    v_rec: Vec<f32>,
+    /// launch accounting for the batch-first path
+    pub stats: BatchedStats,
+}
+
+impl BatchedAdvance {
+    /// Empty planner; staging grows on first use and is then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance every sequence in `ids` to its current length, batching
+    /// the single-row (steady-state decode) reconstructions into shared
+    /// decoder calls.  Returns the total rows reconstructed.
+    pub fn advance_round<D: BatchLatentDecoder>(
+        &mut self,
+        cache: &mut CacheManager,
+        effs: &mut HashMap<u64, EffectiveCache>,
+        ids: &[u64],
+        dec: &mut D,
+    ) -> Result<usize> {
+        let cap = dec.batch_capacity().filter(|&c| c > 1);
+        let mut total = 0usize;
+        let mut single: Vec<(u64, usize)> = Vec::new();
+        for &id in ids {
+            let len = cache
+                .seq_len(id)
+                .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+            let from = cache.decoded_upto(id).unwrap_or(0);
+            if from >= len {
+                continue;
+            }
+            if len - from == 1 && cap.is_some() {
+                single.push((id, from));
+            } else {
+                // bulk pending range (prompt reconstruction, resume) or
+                // no batched decoder: per-sequence incremental advance
+                total += Self::fallback(cache, effs, id, dec)?;
+                self.stats.fallback_advances += 1;
+            }
+        }
+        let Some(cap) = cap else {
+            return Ok(total);
+        };
+        for group in single.chunks(cap) {
+            if group.len() == 1 {
+                // a lone row decodes cheaper through the unpadded
+                // [L, 1, dl] per-sequence path
+                total += Self::fallback(cache, effs, group[0].0, dec)?;
+                self.stats.fallback_advances += 1;
+            } else {
+                total += self.advance_group(cache, effs, group, dec)?;
+            }
+        }
+        Ok(total)
+    }
+
+    fn fallback<D: BatchLatentDecoder>(
+        cache: &mut CacheManager,
+        effs: &mut HashMap<u64, EffectiveCache>,
+        id: u64,
+        dec: &mut D,
+    ) -> Result<usize> {
+        effs.get_mut(&id)
+            .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?
+            .advance(cache, id, dec)
+    }
+
+    /// One packed decoder call over `group` (each entry one pending row).
+    fn advance_group<D: BatchLatentDecoder>(
+        &mut self,
+        cache: &mut CacheManager,
+        effs: &mut HashMap<u64, EffectiveCache>,
+        group: &[(u64, usize)],
+        dec: &mut D,
+    ) -> Result<usize> {
+        let eff0 = effs
+            .get(&group[0].0)
+            .ok_or_else(|| anyhow!("no effective cache for sequence {}", group[0].0))?;
+        let (l, dl, kvd) = (eff0.n_layer, eff0.ae_latent, eff0.kv_dim);
+        let g = group.len();
+
+        // pack: slot b's [L, 1, dl] latents at offset b * L * dl
+        self.k_lat.resize(g * l * dl, 0.0);
+        self.v_lat.resize(g * l * dl, 0.0);
+        let mut any_latent = false;
+        for (slot, &(id, from)) in group.iter().enumerate() {
+            any_latent |= gather_latent_rows(
+                cache,
+                id,
+                from,
+                from + 1,
+                l,
+                dl,
+                &mut self.k_lat[slot * l * dl..(slot + 1) * l * dl],
+                &mut self.v_lat[slot * l * dl..(slot + 1) * l * dl],
+            )?;
+        }
+
+        // one decoder launch for the whole round
+        self.k_rec.resize(g * l * kvd, 0.0);
+        self.v_rec.resize(g * l * kvd, 0.0);
+        if any_latent {
+            self.k_rec.fill(0.0);
+            self.v_rec.fill(0.0);
+            dec.decode_latents_batch_into(
+                &self.k_lat[..g * l * dl],
+                &self.v_lat[..g * l * dl],
+                g,
+                &mut self.k_rec[..g * l * kvd],
+                &mut self.v_rec[..g * l * kvd],
+            )?;
+            self.stats.batched_calls += 1;
+        }
+
+        // unpack: per-sequence assembly (aliases, head reuse) + watermark
+        for (slot, &(id, from)) in group.iter().enumerate() {
+            let eff = effs
+                .get_mut(&id)
+                .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
+            eff.assemble_range(
+                cache,
+                id,
+                from,
+                from + 1,
+                &self.k_rec[slot * l * kvd..(slot + 1) * l * kvd],
+                &self.v_rec[slot * l * kvd..(slot + 1) * l * kvd],
+            )?;
+            cache.mark_decoded(id, from + 1);
+            eff.stats.incremental_advances += 1;
+            eff.stats.rows_decoded += 1;
+        }
+        self.stats.batched_rows += g as u64;
+        Ok(g)
     }
 }
 

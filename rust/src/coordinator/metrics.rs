@@ -3,23 +3,28 @@
 use std::time::Duration;
 
 #[derive(Debug, Default, Clone)]
+/// Latency samples with mean/percentile reporting.
 pub struct Histogram {
     samples_ns: Vec<u64>,
 }
 
 impl Histogram {
+    /// Add one sample.
     pub fn record(&mut self, d: Duration) {
         self.samples_ns.push(d.as_nanos() as u64);
     }
 
+    /// Samples recorded.
     pub fn len(&self) -> usize {
         self.samples_ns.len()
     }
 
+    /// Whether no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.samples_ns.is_empty()
     }
 
+    /// Mean in milliseconds (0 when empty).
     pub fn mean_ms(&self) -> f64 {
         if self.samples_ns.is_empty() {
             return 0.0;
@@ -27,6 +32,7 @@ impl Histogram {
         self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64 / 1e6
     }
 
+    /// Nearest-rank percentile in milliseconds (0 when empty).
     pub fn percentile_ms(&self, p: f64) -> f64 {
         if self.samples_ns.is_empty() {
             return 0.0;
@@ -38,22 +44,35 @@ impl Histogram {
     }
 }
 
+/// Aggregate serving counters for one `ServingEngine::run` workload.
 #[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
+    /// requests fully generated and retired
     pub requests_completed: u64,
+    /// tokens sampled (prefill first-tokens included)
     pub tokens_generated: u64,
+    /// per-request prefill latency
     pub prefill_latency: Histogram,
     /// per decode round, per token
     pub decode_step_latency: Histogram,
+    /// enqueue-to-prefill wait
     pub queue_latency: Histogram,
     /// decode rounds executed and total rows (batch slots) used
     pub decode_rounds: u64,
+    /// batch slots that carried a live sequence
     pub decode_slots_used: u64,
+    /// batch slots paid for (live + padding)
     pub decode_slots_total: u64,
+    /// sequences parked by admission control under memory pressure
+    pub auto_parks: u64,
+    /// parked sequences brought back once memory freed
+    pub auto_resumes: u64,
+    /// wall-clock time of the whole run
     pub wall: Duration,
 }
 
 impl ServeMetrics {
+    /// Tokens per wall-clock second over the run.
     pub fn throughput_tok_per_sec(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
         if secs <= 0.0 {
@@ -70,6 +89,7 @@ impl ServeMetrics {
         self.decode_slots_used as f64 / self.decode_slots_total as f64
     }
 
+    /// Human-readable dump of every counter.
     pub fn print_summary(&self, label: &str) {
         println!("--- serve metrics: {label} ---");
         println!(
@@ -94,6 +114,12 @@ impl ServeMetrics {
             self.batch_efficiency() * 100.0,
             self.decode_rounds,
         );
+        if self.auto_parks + self.auto_resumes > 0 {
+            println!(
+                "  memory pressure: {} parks / {} resumes through the host tier",
+                self.auto_parks, self.auto_resumes,
+            );
+        }
     }
 }
 

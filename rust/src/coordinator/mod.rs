@@ -1,5 +1,6 @@
-//! L3 serving coordinator: request types, admission/batch planning, the
-//! prefill/decode scheduler, and metrics.
+//! L3 serving coordinator: request types, admission/batch planning
+//! (including park/resume under memory pressure), the prefill/decode
+//! scheduler with batch-first faithful reconstruction, and metrics.
 
 pub mod batcher;
 pub mod effective;
@@ -8,6 +9,8 @@ pub mod request;
 pub mod scheduler;
 pub mod trace;
 
-pub use effective::{EffStats, EffectiveCache, LatentDecoder};
+pub use effective::{
+    BatchLatentDecoder, BatchedAdvance, BatchedStats, EffStats, EffectiveCache, LatentDecoder,
+};
 pub use request::{GenRequest, GenResponse, Sampling};
 pub use scheduler::{ServeConfig, ServingEngine};

@@ -3,17 +3,24 @@
 use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// Token selection policy.
 pub enum Sampling {
+    /// argmax decoding (deterministic)
     Greedy,
     /// temperature > 0 softmax sampling (seeded, deterministic)
     Temperature(f32),
 }
 
 #[derive(Debug, Clone)]
+/// One generation request entering the scheduler.
 pub struct GenRequest {
+    /// caller-chosen id, echoed in the response
     pub id: u64,
+    /// byte-token prompt (clamped to max_seq - 1)
     pub prompt: Vec<u8>,
+    /// generation budget including the prefill token
     pub max_new_tokens: usize,
+    /// token selection policy
     pub sampling: Sampling,
     /// stop generation at this byte (e.g. b'.'), in addition to the
     /// max_new_tokens budget
@@ -21,6 +28,7 @@ pub struct GenRequest {
 }
 
 impl GenRequest {
+    /// Greedy request with no stop byte.
     pub fn greedy(id: u64, prompt: &[u8], max_new_tokens: usize) -> GenRequest {
         GenRequest {
             id,
@@ -33,19 +41,26 @@ impl GenRequest {
 }
 
 #[derive(Debug, Clone)]
+/// A completed request with its latency breakdown.
 pub struct GenResponse {
+    /// id from the originating request
     pub id: u64,
     /// generated continuation (prompt excluded)
     pub output: Vec<u8>,
+    /// prompt tokens actually consumed
     pub prompt_tokens: usize,
+    /// tokens produced (== output.len())
     pub generated_tokens: usize,
+    /// time in the prefill artifact
     pub prefill_latency: Duration,
+    /// summed decode-round time attributed to this request
     pub decode_latency: Duration,
     /// queueing delay before prefill started
     pub queue_latency: Duration,
 }
 
 impl GenResponse {
+    /// Decode throughput of this request alone.
     pub fn tokens_per_sec(&self) -> f64 {
         let secs = self.decode_latency.as_secs_f64();
         if secs <= 0.0 {

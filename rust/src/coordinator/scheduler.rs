@@ -21,13 +21,23 @@
 //!   only compressed rows.
 //! * `per_step_reconstruct` — the faithful-paper mode: effective rows
 //!   come from the compressed store through the decoder artifacts
-//!   (reconstruction on retrieval).  Maintained *incrementally*: each
-//!   round `EffectiveCache::advance` reconstructs only the rows past the
-//!   cache manager's `decoded_upto` watermark — the AE decoder runs on a
-//!   `[L, 1, dl]` slice per step (`{m}_decode_kv_t`), not `[L, max_seq,
-//!   dl]`.  `rebuild_full` remains for eviction-resume (tier.rs).
+//!   (reconstruction on retrieval).  Maintained *incrementally and
+//!   batch-first*: each round `BatchedAdvance` packs every live
+//!   sequence's pending watermark row into one `[B, L, 1, dl]` staging
+//!   tensor and reconstructs all of them with a single
+//!   `{m}_decode_kv_bt` call — O(1) decoder launches per round instead
+//!   of O(B) (fallback ladder: `decode_kv_t`, then padded `decode_kv`).
+//!   `rebuild_full` remains for eviction-resume (tier.rs).
+//!
+//! Under a `cache_budget` the run loop additionally executes the
+//! batcher's park/resume plans: over-budget rounds spill the
+//! lowest-priority sequences' encoded bytes to the host tier and bring
+//! them back (with a `rebuild_full`) once memory frees (DESIGN.md §4).
 
-use super::effective::{EffectiveCache, LatentDecoder};
+use super::batcher::{
+    plan_parking, plan_resume, plan_round, round_headroom_bytes, BatcherConfig,
+};
+use super::effective::{BatchLatentDecoder, BatchedAdvance, EffectiveCache, LatentDecoder};
 use super::metrics::ServeMetrics;
 use super::request::{GenRequest, GenResponse, Sampling};
 use crate::compress::planner::{to_masks, RuntimeMasks};
@@ -42,24 +52,37 @@ use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
 use std::time::{Duration, Instant};
 
+/// Serving engine configuration: the compression plan plus batching,
+/// reconstruction, and memory-pressure policy.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// compression plan every sequence's cache is stored under
     pub plan: CompressionPlan,
     /// concurrent decode sequences targeted by the batcher
     pub max_batch: usize,
+    /// sampling seed
     pub seed: u64,
     /// faithful-paper mode: rebuild the effective cache from the
     /// compressed store every decode round
     pub per_step_reconstruct: bool,
+    /// device-cache byte budget for admission control and automatic
+    /// park/resume: when the projected working set exceeds it, the
+    /// batcher parks the lowest-priority live sequences in the host
+    /// tier (their actual encoded bytes move; `CacheManager::
+    /// extract_sequence_bytes`) and resumes them when memory frees.
+    /// None = unlimited (no parking, admission by slots alone).
+    pub cache_budget: Option<usize>,
 }
 
 impl ServeConfig {
+    /// Uncompressed plan, slot-only admission, in-graph reconstruction.
     pub fn baseline(spec: &ModelSpec) -> ServeConfig {
         ServeConfig {
             plan: CompressionPlan::none(spec.n_layer, spec.n_kv_head),
             max_batch: 8,
             seed: 0,
             per_step_reconstruct: false,
+            cache_budget: None,
         }
     }
 }
@@ -77,23 +100,49 @@ struct ActiveSeq {
     prefill_end: Instant,
     decode_time: std::time::Duration,
     done: bool,
+    /// admission order (monotone): parking victims are chosen
+    /// latest-admitted-first, resumes oldest-first
+    admit_seq: u64,
+    /// spilled to the host tier by admission control; skipped by decode
+    /// rounds until resumed
+    parked: bool,
 }
 
+/// The prefill/decode scheduler: continuous batching over the
+/// compressed KV cache, batch-first faithful reconstruction, and
+/// automatic park/resume through the host tier under memory pressure.
 pub struct ServingEngine<'e> {
+    /// PJRT runtime executing the AOT artifacts
     pub engine: &'e mut Engine,
+    /// store threading parameters and staging tensors through calls
     pub store: Store,
+    /// runtime model dimensions (from the manifest)
     pub spec: ModelSpec,
+    /// model name prefix for artifact entry points
     pub model: String,
+    /// runtime mask tensors derived from the plan
     pub masks: RuntimeMasks,
+    /// compressed per-sequence block store
     pub cache: CacheManager,
+    /// serving configuration
     pub cfg: ServeConfig,
+    /// latency/throughput/parking counters for the current run
     pub metrics: ServeMetrics,
+    /// host tier holding parked sequences' encoded bytes
+    pub tier: HostTier,
+    /// batch-first faithful-advance planner (shared packing staging
+    /// + launch counters)
+    pub batched: BatchedAdvance,
     eff: HashMap<u64, EffectiveCache>,
     decode_batches: Vec<usize>,
+    admit_counter: u64,
     rng: Rng,
 }
 
 impl<'e> ServingEngine<'e> {
+    /// Build a serving engine for `model` over an initialized runtime
+    /// engine: loads parameters, validates the plan, and derives the
+    /// compiled decode batch sizes from the manifest.
     pub fn new(engine: &'e mut Engine, model: &str, cfg: ServeConfig) -> Result<Self> {
         let mut store = Store::new();
         engine.load_params(model, &mut store)?;
@@ -122,8 +171,11 @@ impl<'e> ServingEngine<'e> {
             cache,
             cfg,
             metrics: ServeMetrics::default(),
+            tier: HostTier::new(),
+            batched: BatchedAdvance::new(),
             eff: HashMap::new(),
             decode_batches,
+            admit_counter: 0,
             rng: Rng::new(seed ^ 0x5E47E),
         };
         s.apply_masks();
@@ -225,6 +277,7 @@ impl<'e> ServingEngine<'e> {
         self.metrics.prefill_latency.record(now - t0);
         self.metrics.queue_latency.record(t0 - enqueued);
         self.metrics.tokens_generated += 1; // prefill samples the first token
+        self.admit_counter += 1;
         let mut seq = ActiveSeq {
             cache_id,
             pos: plen,
@@ -235,6 +288,8 @@ impl<'e> ServingEngine<'e> {
             prefill_end: now,
             decode_time: std::time::Duration::ZERO,
             done: false,
+            admit_seq: self.admit_counter,
+            parked: false,
             req,
         };
         self.check_done(&mut seq);
@@ -271,38 +326,46 @@ impl<'e> ServingEngine<'e> {
         Ok(())
     }
 
-    /// Evict a sequence's working set: drop the effective-cache scratch,
-    /// invalidate the decode watermark, and park the compressed payload
-    /// in the host tier (modeled PCIe cost — the compressed bytes are
-    /// what moves, which is the paper's composition-with-offloading
-    /// claim).
-    pub fn park_sequence(&mut self, cache_id: u64, tier: &mut HostTier) -> Result<Duration> {
-        let len = self
-            .cache
-            .seq_len(cache_id)
-            .ok_or_else(|| anyhow!("unknown sequence {cache_id}"))?;
+    /// Evict a sequence's working set: drop the effective-cache scratch
+    /// and spill its **actual encoded block bytes** to the host tier
+    /// (`CacheManager::extract_sequence_bytes` — the device pool really
+    /// shrinks, and the transfer cost is paid on the real compressed
+    /// volume, which is the paper's composition-with-offloading claim).
+    pub fn park_sequence(&mut self, cache_id: u64) -> Result<Duration> {
         anyhow::ensure!(
-            !tier.is_parked(cache_id),
+            !self.tier.is_parked(cache_id),
             "sequence {cache_id} already parked (double-evict would corrupt tier accounting)"
         );
         self.eff.remove(&cache_id);
-        self.cache.reset_decoded(cache_id);
-        Ok(tier.evict(cache_id, self.cache.seq_stored_bytes(cache_id), len))
+        let bytes = self.cache.extract_sequence_bytes(cache_id)?;
+        Ok(self.tier.park(cache_id, bytes))
     }
 
-    /// Resume a parked sequence: pay the modeled transfer and rebuild
-    /// the effective cache in full from the compressed store.
-    pub fn resume_sequence(&mut self, cache_id: u64, tier: &mut HostTier) -> Result<Duration> {
-        let (_len, cost) = tier
-            .resume(cache_id)
+    /// Resume a parked sequence: pay the transfer on the real encoded
+    /// bytes, restore them bit-identically into fresh device blocks, and
+    /// rebuild the effective cache in full (`rebuild_full`) from the
+    /// compressed store.
+    pub fn resume_sequence(&mut self, cache_id: u64) -> Result<Duration> {
+        let (bytes, cost) = self
+            .tier
+            .unpark(cache_id)
             .ok_or_else(|| anyhow!("sequence {cache_id} not parked"))?;
+        if let Err(e) = self.cache.restore_sequence_bytes(cache_id, &bytes) {
+            // undo: payload survives and the tier stats are reversed, so
+            // the failed attempt leaves no phantom transfer accounting
+            self.tier.repark(cache_id, bytes);
+            return Err(e);
+        }
         self.rebuild_effective(cache_id)?;
         Ok(cost)
     }
 
-    /// One batched decode round over the given active sequences.
+    /// One batched decode round over the given active sequences (parked
+    /// sequences sit out until admission control resumes them).
     fn decode_round(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
-        let live: Vec<usize> = (0..active.len()).filter(|&i| !active[i].done).collect();
+        let live: Vec<usize> = (0..active.len())
+            .filter(|&i| !active[i].done && !active[i].parked)
+            .collect();
         if live.is_empty() {
             return Ok(());
         }
@@ -311,23 +374,21 @@ impl<'e> ServingEngine<'e> {
         // path optimizes (BENCH_decode_hotpath.json tracks this number)
         let t0 = Instant::now();
         if self.cfg.per_step_reconstruct {
-            // incremental faithful reconstruction: decode only the rows
-            // appended past each sequence's watermark (O(new rows) per
-            // round — the prompt once after prefill, then one row/step)
+            // batch-first incremental faithful reconstruction: every live
+            // sequence's pending watermark row is packed into one
+            // [B, L, 1, dl] staging tensor and decoded with a single
+            // decoder call per round (O(1) launches instead of O(B));
+            // bulk pending ranges (prompt after prefill, resume) fall
+            // back to the per-sequence ladder inside BatchedAdvance
+            let ids: Vec<u64> = live.iter().map(|&i| active[i].cache_id).collect();
             let mut dec = ArtifactDecoder {
                 engine: &mut *self.engine,
                 store: &mut self.store,
                 model: &self.model,
                 spec: &self.spec,
             };
-            for &i in &live {
-                let id = active[i].cache_id;
-                let eff = self
-                    .eff
-                    .get_mut(&id)
-                    .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
-                eff.advance(&mut self.cache, id, &mut dec)?;
-            }
+            self.batched
+                .advance_round(&mut self.cache, &mut self.eff, &ids, &mut dec)?;
         }
         let b = *self
             .decode_batches
@@ -446,25 +507,133 @@ impl<'e> ServingEngine<'e> {
         }
     }
 
+    /// Device bytes held by live (unparked) sequences.
+    fn live_cache_bytes(&self, active: &[ActiveSeq]) -> usize {
+        active
+            .iter()
+            .filter(|s| !s.parked)
+            .map(|s| self.cache.seq_stored_bytes(s.cache_id))
+            .sum()
+    }
+
+    fn headroom(&self) -> usize {
+        round_headroom_bytes(&self.spec, &self.cfg.plan, self.cache.cfg.block_size)
+    }
+
+    /// Resume parked sequences that fit under the budget again, oldest
+    /// first.  When nothing is running at all, the oldest parked
+    /// sequence resumes regardless — something must decode so memory
+    /// eventually frees.
+    fn resume_under_budget(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
+        let Some(budget) = self.cfg.cache_budget else {
+            return Ok(());
+        };
+        let mut parked: Vec<(u64, u64, usize)> = active
+            .iter()
+            .filter(|s| s.parked)
+            .map(|s| {
+                (
+                    s.admit_seq,
+                    s.cache_id,
+                    self.tier.parked_bytes(s.cache_id).unwrap_or(0),
+                )
+            })
+            .collect();
+        if parked.is_empty() {
+            return Ok(());
+        }
+        parked.sort_by_key(|p| p.0);
+        let list: Vec<(u64, usize)> = parked.iter().map(|p| (p.1, p.2)).collect();
+        let running = active.iter().filter(|s| !s.parked && !s.done).count();
+        let mut resume = plan_resume(
+            budget,
+            self.headroom(),
+            self.live_cache_bytes(active),
+            running,
+            &list,
+        );
+        if resume.is_empty() && running == 0 {
+            resume.push(list[0].0); // forced: guarantee progress
+        }
+        for id in resume {
+            self.resume_sequence(id)?;
+            active.iter_mut().find(|s| s.cache_id == id).unwrap().parked = false;
+            self.metrics.auto_resumes += 1;
+        }
+        Ok(())
+    }
+
+    /// Park the lowest-priority live sequences while the projected next
+    /// round exceeds the budget (never the oldest — rounds must keep
+    /// completing).  The victims' encoded bytes move to the host tier.
+    fn park_under_pressure(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
+        let Some(budget) = self.cfg.cache_budget else {
+            return Ok(());
+        };
+        let mut live: Vec<(u64, u64, usize)> = active
+            .iter()
+            .filter(|s| !s.parked && !s.done)
+            .map(|s| (s.admit_seq, s.cache_id, self.cache.seq_stored_bytes(s.cache_id)))
+            .collect();
+        live.sort_by_key(|l| l.0);
+        let list: Vec<(u64, usize)> = live.iter().map(|l| (l.1, l.2)).collect();
+        for id in plan_parking(budget, self.headroom(), &list) {
+            self.park_sequence(id)?;
+            active.iter_mut().find(|s| s.cache_id == id).unwrap().parked = true;
+            self.metrics.auto_parks += 1;
+        }
+        Ok(())
+    }
+
     /// Serve a workload to completion with continuous batching: admit new
-    /// prefills whenever a decode slot frees up.
+    /// prefills whenever a decode slot frees up, and under a cache budget
+    /// automatically park/resume sequences through the host tier.
     pub fn run(&mut self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
         let t0 = Instant::now();
         let enqueued = Instant::now();
         let mut waiting: VecDeque<GenRequest> = requests.into();
         let mut active: Vec<ActiveSeq> = Vec::new();
         let mut done: Vec<GenResponse> = Vec::new();
+        let bcfg = BatcherConfig {
+            max_batch: self.cfg.max_batch,
+            decode_batches: self.decode_batches.clone(),
+            cache_budget: self.cfg.cache_budget,
+        };
         loop {
-            while active.len() < self.cfg.max_batch {
-                match waiting.pop_front() {
-                    Some(req) => active.push(self.prefill(req, enqueued)?),
-                    None => break,
-                }
+            self.resume_under_budget(&mut active)?;
+            // admit through the batcher's tested admission planner
+            // (slots + worst-case budget projection); when nothing holds
+            // a slot the head request is admitted regardless so an
+            // over-budget request still runs
+            // plan_round only ever admits a prefix within max_batch, so
+            // metadata for the queue head suffices
+            let waiting_meta: Vec<(usize, usize)> = waiting
+                .iter()
+                .take(self.cfg.max_batch)
+                .map(|r| (r.prompt.len(), r.max_new_tokens))
+                .collect();
+            let plan = plan_round(
+                &bcfg,
+                &self.spec,
+                &self.cfg.plan,
+                active.len(),
+                self.live_cache_bytes(&active),
+                &waiting_meta,
+            );
+            let admit = if active.is_empty() && !waiting.is_empty() {
+                plan.admit.max(1)
+            } else {
+                plan.admit
+            };
+            for _ in 0..admit {
+                let req = waiting.pop_front().unwrap();
+                active.push(self.prefill(req, enqueued)?);
             }
             if active.is_empty() {
                 break;
             }
             self.decode_round(&mut active)?;
+            self.park_under_pressure(&mut active)?;
             let mut i = 0;
             while i < active.len() {
                 if active[i].done {
@@ -484,12 +653,23 @@ impl<'e> ServingEngine<'e> {
     }
 }
 
-/// `LatentDecoder` over the AOT decoder artifacts.  Prefers the
-/// token-granular `{m}_decode_kv_t` entry ([L, 1, dl] — constant work
-/// per step); falls back to zero-padding through the full-sequence
-/// `{m}_decode_kv` signature for bulk ranges (prompt reconstruction,
-/// eviction-resume) and for artifact sets built before the `_t` entry
-/// existed.
+/// `LatentDecoder`/`BatchLatentDecoder` over the AOT decoder artifacts.
+///
+/// Fallback ladder (most to least specific):
+///
+/// 1. `{m}_decode_kv_bt` — [B, L, 1, dl] cross-sequence batched decode:
+///    one launch reconstructs every live sequence's pending row
+///    (unused slots zero-padded up to the compiled B).
+/// 2. `{m}_decode_kv_t` — [L, 1, dl] token-granular single-sequence
+///    decode (constant work per step).
+/// 3. `{m}_decode_kv` — [L, S, dl] full-sequence signature, zero-padded:
+///    bulk ranges (prompt reconstruction, eviction-resume) and artifact
+///    sets built before the granular entries existed.
+///
+/// Every rung is staged through `Store::insert_view`, so per-round
+/// packing reuses the same resident buffers (no allocations on the hot
+/// path) and the engine's version-keyed device cache re-uploads only
+/// what changed.
 struct ArtifactDecoder<'a> {
     engine: &'a mut Engine,
     store: &'a mut Store,
@@ -553,6 +733,52 @@ impl LatentDecoder for ArtifactDecoder<'_> {
             v_rec[layer * n * kvd..(layer + 1) * n * kvd]
                 .copy_from_slice(&vr[layer * s * kvd..layer * s * kvd + n * kvd]);
         }
+        Ok(())
+    }
+}
+
+impl BatchLatentDecoder for ArtifactDecoder<'_> {
+    fn batch_capacity(&self) -> Option<usize> {
+        let entry = format!("{}_decode_kv_bt", self.model);
+        self.engine
+            .manifest
+            .entries
+            .get(&entry)
+            .and_then(|e| e.inputs.iter().find(|io| io.name == "k_lat"))
+            .and_then(|io| io.shape.first().copied())
+    }
+
+    fn decode_latents_batch_into(
+        &mut self,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        b: usize,
+        k_rec: &mut [f32],
+        v_rec: &mut [f32],
+    ) -> Result<()> {
+        let (l, dl, kvd) = (self.spec.n_layer, self.spec.ae_latent, self.spec.kv_dim());
+        let cap = self
+            .batch_capacity()
+            .ok_or_else(|| anyhow!("artifact set has no {}_decode_kv_bt entry", self.model))?;
+        anyhow::ensure!(b <= cap, "batch {b} exceeds compiled decoder capacity {cap}");
+        debug_assert_eq!(k_lat.len(), b * l * dl);
+        debug_assert_eq!(k_rec.len(), b * l * kvd);
+        // pack the live slots; zero-pad the unused tail up to the
+        // compiled B (same padding policy as decode_step_b{B})
+        {
+            let kd = self.store.insert_view("k_lat", vec![cap, l, 1, dl]);
+            kd[..b * l * dl].copy_from_slice(k_lat);
+            kd[b * l * dl..].fill(0.0);
+        }
+        {
+            let vd = self.store.insert_view("v_lat", vec![cap, l, 1, dl]);
+            vd[..b * l * dl].copy_from_slice(v_lat);
+            vd[b * l * dl..].fill(0.0);
+        }
+        let entry = format!("{}_decode_kv_bt", self.model);
+        let out = self.engine.execute(&entry, self.store)?;
+        k_rec.copy_from_slice(&out[0].1.as_f32()?[..b * l * kvd]);
+        v_rec.copy_from_slice(&out[1].1.as_f32()?[..b * l * kvd]);
         Ok(())
     }
 }

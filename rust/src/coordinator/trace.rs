@@ -16,6 +16,7 @@ use anyhow::{anyhow, Result};
 use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// Request arrival process for synthetic workloads.
 pub enum Arrival {
     /// exponential inter-arrival times at `rate` req/s
     Poisson { rate: f64 },
@@ -26,12 +27,19 @@ pub enum Arrival {
 }
 
 #[derive(Debug, Clone)]
+/// Parameters a synthetic trace is generated from.
 pub struct TraceConfig {
+    /// total requests to generate
     pub n_requests: usize,
+    /// arrival process
     pub arrival: Arrival,
+    /// inclusive prompt-length range
     pub prompt_len_range: (usize, usize),
+    /// inclusive generation-budget range
     pub max_new_range: (usize, usize),
+    /// None = greedy, Some(t) = temperature sampling
     pub temperature: Option<f32>,
+    /// trace rng seed (traces are reproducible)
     pub seed: u64,
 }
 
@@ -49,16 +57,23 @@ impl Default for TraceConfig {
 }
 
 #[derive(Debug, Clone)]
+/// One timed request of a trace.
 pub struct TraceItem {
+    /// arrival offset from trace start
     pub at: Duration,
+    /// the request itself
     pub request: GenRequest,
 }
 
 #[derive(Debug, Clone, Default)]
+/// A reproducible request trace (generate once, serve anywhere).
 pub struct Trace {
+    /// requests in arrival order
     pub items: Vec<TraceItem>,
 }
 
+/// Generate a trace from `cfg` with prompts drawn from `corpus`
+/// (deterministic per seed).
 pub fn generate(cfg: &TraceConfig, corpus: &mut Corpus) -> Trace {
     let mut rng = Rng::new(cfg.seed ^ 0x7ACE);
     let mut items = Vec::with_capacity(cfg.n_requests);
@@ -95,14 +110,17 @@ pub fn generate(cfg: &TraceConfig, corpus: &mut Corpus) -> Trace {
 }
 
 impl Trace {
+    /// Summed prompt lengths.
     pub fn total_prompt_tokens(&self) -> usize {
         self.items.iter().map(|i| i.request.prompt.len()).sum()
     }
 
+    /// Summed generation budgets.
     pub fn total_max_new(&self) -> usize {
         self.items.iter().map(|i| i.request.max_new_tokens).sum()
     }
 
+    /// Serialize for replay.
     pub fn to_json(&self) -> Json {
         json::arr(self.items.iter().map(|i| {
             json::obj(vec![
@@ -124,6 +142,7 @@ impl Trace {
         }))
     }
 
+    /// Parse a trace serialized by `to_json`.
     pub fn from_json(j: &Json) -> Result<Trace> {
         let arr = j.as_arr().ok_or_else(|| anyhow!("trace must be array"))?;
         let mut items = Vec::with_capacity(arr.len());

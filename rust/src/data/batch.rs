@@ -5,8 +5,11 @@ use super::corpus::Corpus;
 use super::tasks::ChoiceItem;
 
 #[derive(Debug, Clone)]
+/// A [batch, seq] block of byte tokens plus its length mask.
 pub struct TokenBatch {
+    /// rows in the batch
     pub batch: usize,
+    /// token capacity per row
     pub seq: usize,
     /// row-major [B, S]
     pub tokens: Vec<i32>,
@@ -15,6 +18,7 @@ pub struct TokenBatch {
 }
 
 impl TokenBatch {
+    /// Zeroed batch (mask all zero).
     pub fn new(batch: usize, seq: usize) -> Self {
         TokenBatch {
             batch,
@@ -38,6 +42,7 @@ impl TokenBatch {
         }
     }
 
+    /// Unmasked token count of row `b`.
     pub fn row_len(&self, b: usize) -> usize {
         self.mask[b * self.seq..(b + 1) * self.seq]
             .iter()

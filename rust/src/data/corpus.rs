@@ -16,18 +16,26 @@
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Semantic class a noun belongs to (drives adjective choice).
 pub enum NounClass {
+    /// living subjects (take animate adjectives)
     Animal,
+    /// inanimate subjects
     Object,
 }
 
 #[derive(Debug, Clone, Copy)]
+/// One vocabulary noun with its singular/plural surface forms.
 pub struct Noun {
+    /// semantic class
     pub class: NounClass,
+    /// singular form
     pub sing: &'static str,
+    /// plural form
     pub plur: &'static str,
 }
 
+/// The corpus noun vocabulary.
 pub const NOUNS: &[Noun] = &[
     Noun { class: NounClass::Animal, sing: "cat", plur: "cats" },
     Noun { class: NounClass::Animal, sing: "dog", plur: "dogs" },
@@ -45,6 +53,7 @@ pub const NOUNS: &[Noun] = &[
 
 /// Adjectives legal only for their class — the plausibility signal.
 pub const ADJ_ANIMAL: &[&str] = &["furry", "wild", "hungry", "quick", "sly"];
+/// Adjectives applicable to inanimate nouns.
 pub const ADJ_OBJECT: &[&str] = &["grey", "tall", "deep", "mossy", "flat"];
 
 /// Verbs as (singular, plural) agreeing forms; legal for both classes.
@@ -65,6 +74,7 @@ pub const VERBS_ANIMAL: &[(&str, &str)] = &[
     ("hunts", "hunt"),
 ];
 
+/// Adjectives compatible with a noun class.
 pub fn adjectives_for(class: NounClass) -> &'static [&'static str] {
     match class {
         NounClass::Animal => ADJ_ANIMAL,
@@ -73,13 +83,16 @@ pub fn adjectives_for(class: NounClass) -> &'static [&'static str] {
 }
 
 #[derive(Debug, Clone)]
+/// Deterministic synthetic text stream (seeded grammar sampler).
 pub struct Corpus {
+    /// corpus id ("wiki" / "c4")
     pub name: String,
     /// probability of injecting noise per sentence (0.0 for wiki-like)
     pub noise: f64,
     rng: Rng,
 }
 
+/// Wiki-flavored stream (declarative sentences).
 pub fn wiki(seed: u64) -> Corpus {
     Corpus {
         name: "wiki".into(),
@@ -88,6 +101,7 @@ pub fn wiki(seed: u64) -> Corpus {
     }
 }
 
+/// C4-flavored stream (noisier web-like text).
 pub fn c4(seed: u64) -> Corpus {
     Corpus {
         name: "c4".into(),
@@ -96,6 +110,7 @@ pub fn c4(seed: u64) -> Corpus {
     }
 }
 
+/// Corpus by id, None for unknown names.
 pub fn by_name(name: &str, seed: u64) -> Option<Corpus> {
     match name {
         "wiki" => Some(wiki(seed)),

@@ -17,19 +17,25 @@ use super::corpus::{adjectives_for, NounClass, NOUNS, VERBS, VERBS_ANIMAL};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
+/// One two-way multiple-choice item.
 pub struct ChoiceItem {
     /// full candidate sequences (prompt + continuation), bytes
     pub correct: Vec<u8>,
+    /// the distractor continuation
     pub wrong: Vec<u8>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Synthetic zero-shot eval task family.
 pub enum Task {
+    /// physical-commonsense-style continuation pairs
     Piqa,
+    /// winograd-style pronoun disambiguation pairs
     Wino,
 }
 
 impl Task {
+    /// Task by id, None for unknown names.
     pub fn by_name(name: &str) -> Option<Task> {
         match name {
             "piqa" => Some(Task::Piqa),
@@ -38,6 +44,7 @@ impl Task {
         }
     }
 
+    /// Stable task id.
     pub fn name(&self) -> &'static str {
         match self {
             Task::Piqa => "piqa",
@@ -46,6 +53,7 @@ impl Task {
     }
 }
 
+/// Generate `n` deterministic items of a task.
 pub fn generate(task: Task, n: usize, seed: u64) -> Vec<ChoiceItem> {
     let mut rng = Rng::new(seed ^ 0x7A5C);
     (0..n)

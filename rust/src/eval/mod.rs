@@ -15,6 +15,7 @@ use crate::model::ModelSpec;
 use crate::runtime::{Engine, Store, Tensor};
 use anyhow::Result;
 
+/// Rows per eval_loss artifact call.
 pub const EVAL_BATCH: usize = 8;
 
 fn apply_masks(store: &mut Store, spec: &ModelSpec, masks: &RuntimeMasks) {
@@ -51,13 +52,18 @@ pub fn perplexity(
 }
 
 #[derive(Debug, Clone)]
+/// Accuracy of one zero-shot task run.
 pub struct ZeroShotResult {
+    /// task id
     pub task: &'static str,
+    /// items scored
     pub items: usize,
+    /// items the model preferred the right continuation on
     pub correct: usize,
 }
 
 impl ZeroShotResult {
+    /// Fraction correct (0 when empty).
     pub fn accuracy(&self) -> f64 {
         self.correct as f64 / self.items.max(1) as f64
     }

@@ -6,19 +6,26 @@
 use crate::util::json::{self, Json};
 
 #[derive(Debug, Clone)]
+/// One table cell value.
 pub enum Cell {
+    /// verbatim text
     Str(String),
+    /// number with a fixed decimal count
     Num(f64, usize), // value, decimals
+    /// fraction rendered as a percentage
     Pct(f64),
 }
 
 impl Cell {
+    /// Text cell.
     pub fn s(v: impl Into<String>) -> Cell {
         Cell::Str(v.into())
     }
+    /// Number cell with `decimals` places.
     pub fn f(v: f64, decimals: usize) -> Cell {
         Cell::Num(v, decimals)
     }
+    /// Percentage cell from a fraction.
     pub fn pct(v: f64) -> Cell {
         Cell::Pct(v)
     }
@@ -41,13 +48,18 @@ impl Cell {
 }
 
 #[derive(Debug, Clone)]
+/// A titled results table renderable as text/markdown/JSON.
 pub struct Table {
+    /// table heading
     pub title: String,
+    /// column headers
     pub columns: Vec<String>,
+    /// row-major cells
     pub rows: Vec<Vec<Cell>>,
 }
 
 impl Table {
+    /// Empty table with headers.
     pub fn new(title: &str, columns: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -56,6 +68,7 @@ impl Table {
         }
     }
 
+    /// Append one row (chainable).
     pub fn row(&mut self, cells: Vec<Cell>) -> &mut Self {
         assert_eq!(cells.len(), self.columns.len(), "{}", self.title);
         self.rows.push(cells);
@@ -72,6 +85,7 @@ impl Table {
         w
     }
 
+    /// Fixed-width text rendering.
     pub fn to_text(&self) -> String {
         let w = self.widths();
         let mut out = format!("{}\n", self.title);
@@ -93,6 +107,7 @@ impl Table {
         out
     }
 
+    /// Markdown table rendering.
     pub fn to_markdown(&self) -> String {
         let mut out = format!("### {}\n\n", self.title);
         out.push_str(&format!("| {} |\n", self.columns.join(" | ")));
@@ -107,6 +122,7 @@ impl Table {
         out
     }
 
+    /// JSON rendering (EXPERIMENTS.md machine row).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("title", json::s(&self.title)),
@@ -125,6 +141,7 @@ impl Table {
         ])
     }
 
+    /// Print the text rendering to stdout.
     pub fn print(&self) {
         print!("{}", self.to_text());
     }

@@ -18,6 +18,7 @@ struct Class {
 }
 
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
+/// Byte/operation accounting for a `BlockPool`.
 pub struct PoolStats {
     /// bytes in blocks currently handed out
     pub live_bytes: usize,
@@ -25,12 +26,16 @@ pub struct PoolStats {
     pub free_bytes: usize,
     /// high-water mark of live_bytes
     pub peak_live_bytes: usize,
+    /// blocks newly allocated from the system
     pub allocations: u64,
+    /// blocks served from a free list
     pub recycles: u64,
+    /// blocks returned to the pool
     pub frees: u64,
 }
 
 #[derive(Debug, Default)]
+/// Recycling block allocator with optional byte budget (see module docs).
 pub struct BlockPool {
     free: HashMap<Class, Vec<Block>>,
     stats: PoolStats,
@@ -39,10 +44,12 @@ pub struct BlockPool {
 }
 
 impl BlockPool {
+    /// Unbounded pool.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Pool that refuses allocations past `budget_bytes` of live blocks.
     pub fn with_budget(budget_bytes: usize) -> Self {
         BlockPool {
             budget_bytes: Some(budget_bytes),
@@ -50,10 +57,12 @@ impl BlockPool {
         }
     }
 
+    /// Current accounting snapshot.
     pub fn stats(&self) -> PoolStats {
         self.stats
     }
 
+    /// Whether one more `capacity`-row block of this class fits the budget.
     pub fn would_fit(&self, format: Format, elements: usize, capacity: usize) -> bool {
         match self.budget_bytes {
             None => true,
@@ -87,6 +96,7 @@ impl BlockPool {
         Some(block)
     }
 
+    /// Return a block to its class free list (bytes move live -> free).
     pub fn free(&mut self, block: Block) {
         let class = Class {
             format: block.format,

@@ -15,12 +15,16 @@ use crate::compress::quant::{dequantize_codes_into, quantize_into, QUANT_HEADER_
 /// Element encoding for stored rows.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Format {
+    /// 4-byte little-endian IEEE 754 single precision (lossless)
     F32,
+    /// 2-byte IEEE 754 half precision (the paper's fp16 serving)
     F16,
+    /// Eq. 4 affine int8 codes + per-row (scale, zeropoint) header
     Int8,
 }
 
 impl Format {
+    /// Encoded bytes one `elements`-wide row occupies in this format.
     pub fn row_bytes(self, elements: usize) -> usize {
         match self {
             Format::F32 => elements * 4,
@@ -35,6 +39,7 @@ impl Format {
 
 // --- f16 (IEEE 754 binary16) conversion -----------------------------------
 
+/// Convert f32 to IEEE 754 binary16 bits (round-to-nearest-even).
 pub fn f32_to_f16_bits(x: f32) -> u16 {
     let bits = x.to_bits();
     let sign = ((bits >> 16) & 0x8000) as u16;
@@ -82,6 +87,7 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
     sign // underflow -> signed zero
 }
 
+/// Convert IEEE 754 binary16 bits to f32 (exact).
 pub fn f16_bits_to_f32(h: u16) -> f32 {
     let sign = ((h & 0x8000) as u32) << 16;
     let exp = ((h >> 10) & 0x1F) as u32;
@@ -160,8 +166,11 @@ fn decode_int8_row(src: &[u8], dst: &mut [f32]) {
 /// without cloning block data.
 #[derive(Debug, Clone, Copy)]
 pub struct RowsView<'a> {
+    /// encoding of the viewed rows
     pub format: Format,
+    /// f32 elements per decoded row
     pub elements_per_row: usize,
+    /// rows covered by this view
     pub rows: usize,
     data: &'a [u8],
 }
@@ -195,14 +204,20 @@ impl<'a> RowsView<'a> {
 /// One storage block: encoded bytes for up to `capacity` rows.
 #[derive(Debug, Clone)]
 pub struct Block {
+    /// element encoding of every row
     pub format: Format,
+    /// f32 elements per row
     pub elements_per_row: usize,
+    /// row capacity (block_size)
     pub capacity: usize,
+    /// rows currently encoded
     pub rows: usize,
+    /// encoded bytes, row-major ([capacity, row_bytes])
     pub data: Vec<u8>,
 }
 
 impl Block {
+    /// Fresh zeroed block for `capacity` rows of `elements_per_row` elements.
     pub fn new(format: Format, elements_per_row: usize, capacity: usize) -> Block {
         Block {
             format,
@@ -213,10 +228,12 @@ impl Block {
         }
     }
 
+    /// Whether every row slot is occupied.
     pub fn is_full(&self) -> bool {
         self.rows == self.capacity
     }
 
+    /// Allocated encoded bytes (capacity granularity — the accounting unit).
     pub fn stored_bytes(&self) -> usize {
         self.data.len()
     }
@@ -249,6 +266,25 @@ impl Block {
         n
     }
 
+    /// Push one already-encoded row range (raw wire bytes, as produced by
+    /// `RowsView::raw`) without a decode/encode round-trip — the tier
+    /// restore path.  `raw` must be whole rows in this block's format;
+    /// consumes as many as fit and returns the row count taken.  Because
+    /// the bytes are copied verbatim, a spill/fill cycle through the host
+    /// tier is bit-identical for every format (f32, f16, int8 headers).
+    pub fn push_raw_rows(&mut self, raw: &[u8]) -> usize {
+        let rb = self.format.row_bytes(self.elements_per_row);
+        assert_eq!(raw.len() % rb, 0, "partial encoded row");
+        let n = (raw.len() / rb).min(self.capacity - self.rows);
+        if n == 0 {
+            return 0;
+        }
+        self.data[self.rows * rb..(self.rows + n) * rb].copy_from_slice(&raw[..n * rb]);
+        self.rows += n;
+        n
+    }
+
+    /// Push exactly one row; panics when the block is full.
     pub fn push_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.elements_per_row);
         assert!(!self.is_full());
@@ -273,6 +309,7 @@ impl Block {
         self.rows_view(start, end).decode_into(out);
     }
 
+    /// Decode one row into `out`.
     pub fn read_row(&self, idx: usize, out: &mut [f32]) {
         self.decode_rows_into(idx, idx + 1, out);
     }
@@ -430,6 +467,40 @@ mod tests {
             prop_assert!(bulk.data == scalar.data, "encoded bytes diverge ({fmt:?})");
             Ok(())
         });
+    }
+
+    #[test]
+    fn push_raw_rows_roundtrips_encoded_bytes_bitwise() {
+        // the tier spill/fill contract: raw() bytes pushed back through
+        // push_raw_rows reproduce the block bit-for-bit in every format
+        check(40, |rng| {
+            let elements = rng.range(1, 48);
+            let fmt = *rng.choice(&[Format::F32, Format::F16, Format::Int8]);
+            let capacity = rng.range(2, 10);
+            let n = rng.range(1, capacity + 1);
+            let flat: Vec<f32> = (0..n * elements).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let mut src = Block::new(fmt, elements, capacity);
+            src.push_rows(&flat);
+            let wire = src.rows_view(0, n).raw().to_vec();
+            let mut dst = Block::new(fmt, elements, capacity);
+            let taken = dst.push_raw_rows(&wire);
+            prop_assert!(taken == n, "took {taken} of {n} raw rows");
+            prop_assert!(dst.rows == src.rows);
+            prop_assert!(
+                dst.rows_view(0, n).raw() == src.rows_view(0, n).raw(),
+                "restored encoded bytes diverge ({fmt:?})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn push_raw_rows_clamps_to_capacity() {
+        let mut b = Block::new(Format::F32, 2, 2);
+        let raw = vec![0u8; 3 * Format::F32.row_bytes(2)]; // 3 rows
+        assert_eq!(b.push_raw_rows(&raw), 2);
+        assert!(b.is_full());
+        assert_eq!(b.push_raw_rows(&raw), 0);
     }
 
     #[test]

@@ -23,14 +23,18 @@ use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
+/// What one (layer, K|V) stream persists under the plan.
 pub enum StoreKind {
+    /// every head reused from layer l-1: nothing stored
     FullAlias,
+    /// AE layer: `ae_latent` elements per token
     Latent,
     /// stored (non-reused) head indices, ascending
     Heads(Vec<usize>),
 }
 
 impl StoreKind {
+    /// Stored f32 elements per token row for this kind.
     pub fn elements(&self, spec: &ModelSpec) -> usize {
         match self {
             StoreKind::FullAlias => 0,
@@ -41,23 +45,32 @@ impl StoreKind {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Key or value half of a layer's cache.
 pub enum Side {
+    /// key stream
     K,
+    /// value stream
     V,
 }
 
 #[derive(Debug, Clone)]
+/// Storage policy: model dims, plan, row formats, block capacity.
 pub struct CacheConfig {
+    /// model dimensions the rows are sized for
     pub spec: ModelSpec,
+    /// which layers compress / which heads alias (induces store kinds)
     pub plan: CompressionPlan,
     /// encoding of raw (non-latent) rows
     pub raw_format: Format,
     /// encoding of latent rows (Int8 when the plan stacks Eq. 4)
     pub latent_format: Format,
+    /// token rows per pooled block
     pub block_size: usize,
 }
 
 impl CacheConfig {
+    /// Plan-derived defaults: f32 raw rows, int8 latents iff the plan
+    /// stacks Eq. 4, 16-row blocks.
     pub fn new(spec: ModelSpec, plan: CompressionPlan) -> Self {
         let latent_format = if plan.quant_int8 {
             Format::Int8
@@ -73,6 +86,7 @@ impl CacheConfig {
         }
     }
 
+    /// The store kind the plan induces for one (layer, side) stream.
     pub fn store_kind(&self, layer: usize, side: Side) -> StoreKind {
         let reuse = match side {
             Side::K => &self.plan.reuse_k[layer],
@@ -138,14 +152,17 @@ pub struct StreamView<'a> {
 }
 
 impl<'a> StreamView<'a> {
+    /// Token rows readable through this view.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the stream holds no rows yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Decoded f32 elements per row.
     pub fn elements_per_row(&self) -> usize {
         self.elements_per_row
     }
@@ -201,6 +218,26 @@ impl<'a> StreamView<'a> {
     }
 }
 
+/// A sequence's compressed payload extracted for a tier transfer: the
+/// *actual encoded block bytes*, not a modeled byte count.
+///
+/// Wire format (documented in `rust/DESIGN.md` §4): streams concatenated
+/// layer-ascending, K before V; each stored stream contributes exactly
+/// `len * format.row_bytes(elements_per_row)` bytes of back-to-back
+/// encoded rows (block padding is stripped — partial trailing blocks
+/// contribute only their filled rows).  Fully-aliased streams contribute
+/// nothing.  Formats and row widths are derived from the compression
+/// plan on restore, so the payload needs no per-stream header and
+/// round-trips bit-identically for f32, f16, and int8 (Eq. 4 headers
+/// included).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParkedBytes {
+    /// token rows the payload covers
+    pub len: usize,
+    /// concatenated encoded stream bytes (see wire format above)
+    pub payload: Vec<u8>,
+}
+
 struct Stream {
     kind: StoreKind,
     blocks: Vec<Block>,
@@ -211,11 +248,18 @@ struct SeqCache {
     /// decode watermark: rows [0, decoded_upto) are already materialized
     /// in some effective-cache scratch; retrieval asks for "rows since"
     decoded_upto: usize,
+    /// compressed payload currently lives in the host tier — the blocks
+    /// were freed back to the device pool and reads must fail until
+    /// `restore_sequence_bytes` brings the bytes back
+    parked: bool,
     /// [layer][side] streams, side 0 = K, 1 = V
     streams: Vec<[Stream; 2]>,
 }
 
+/// Per-sequence compressed block store: create/append/stream/park
+/// sequences under one `CacheConfig` and one recycling block pool.
 pub struct CacheManager {
+    /// storage policy this manager encodes rows under
     pub cfg: CacheConfig,
     pool: BlockPool,
     seqs: HashMap<u64, SeqCache>,
@@ -223,6 +267,7 @@ pub struct CacheManager {
 }
 
 impl CacheManager {
+    /// Manager with an unbounded block pool.
     pub fn new(cfg: CacheConfig) -> Self {
         cfg.plan.validate().expect("invalid compression plan");
         CacheManager {
@@ -233,20 +278,24 @@ impl CacheManager {
         }
     }
 
+    /// Manager whose pool refuses allocations past `budget_bytes`.
     pub fn with_budget(cfg: CacheConfig, budget_bytes: usize) -> Self {
         let mut m = Self::new(cfg);
         m.pool = BlockPool::with_budget(budget_bytes);
         m
     }
 
+    /// Block-pool accounting snapshot.
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
     }
 
+    /// Sequences currently tracked (parked ones included).
     pub fn n_sequences(&self) -> usize {
         self.seqs.len()
     }
 
+    /// Register an empty sequence; returns its id.
     pub fn create_sequence(&mut self) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
@@ -270,12 +319,14 @@ impl CacheManager {
             SeqCache {
                 len: 0,
                 decoded_upto: 0,
+                parked: false,
                 streams,
             },
         );
         id
     }
 
+    /// Drop a sequence and recycle all its blocks.
     pub fn free_sequence(&mut self, id: u64) {
         if let Some(seq) = self.seqs.remove(&id) {
             for mut pair in seq.streams {
@@ -288,6 +339,7 @@ impl CacheManager {
         }
     }
 
+    /// Token rows appended to a sequence (None if unknown).
     pub fn seq_len(&self, id: u64) -> Option<usize> {
         self.seqs.get(&id).map(|s| s.len)
     }
@@ -343,6 +395,7 @@ impl CacheManager {
             .seqs
             .get_mut(&id)
             .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        anyhow::ensure!(!seq.parked, "sequence {id} is parked in the host tier");
         anyhow::ensure!(seq.len + n <= spec.max_seq, "sequence at max_seq");
 
         let mut gather: Vec<f32> = Vec::new();
@@ -408,6 +461,10 @@ impl CacheManager {
             .seqs
             .get(&id)
             .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        anyhow::ensure!(
+            !seq.parked,
+            "sequence {id} is parked in the host tier (restore before reading)"
+        );
         let stream = &seq.streams[layer][side as usize];
         let view = StreamView {
             blocks: &stream.blocks,
@@ -442,6 +499,129 @@ impl CacheManager {
         }
     }
 
+    /// Whether a sequence's compressed payload currently lives in the
+    /// host tier (blocks freed; reads and appends fail until restored).
+    pub fn seq_parked(&self, id: u64) -> bool {
+        self.seqs.get(&id).map_or(false, |s| s.parked)
+    }
+
+    /// Spill a sequence to the host tier: copy the *actual encoded block
+    /// bytes* into the `ParkedBytes` wire format, free every device block
+    /// back to the pool (a real memory release, visible in `pool_stats`),
+    /// and mark the sequence parked.  The watermark is invalidated — the
+    /// effective-cache scratch is the caller's to drop, and resume goes
+    /// through a full rebuild.
+    pub fn extract_sequence_bytes(&mut self, id: u64) -> Result<ParkedBytes> {
+        let seq = self
+            .seqs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        anyhow::ensure!(
+            !seq.parked,
+            "sequence {id} already parked (double-evict would corrupt tier accounting)"
+        );
+        let mut payload = Vec::new();
+        for pair in seq.streams.iter_mut() {
+            for s in pair.iter_mut() {
+                for b in &s.blocks {
+                    payload.extend_from_slice(b.rows_view(0, b.rows).raw());
+                }
+                for b in s.blocks.drain(..) {
+                    self.pool.free(b);
+                }
+            }
+        }
+        seq.parked = true;
+        seq.decoded_upto = 0;
+        Ok(ParkedBytes {
+            len: seq.len,
+            payload,
+        })
+    }
+
+    /// Fill a parked sequence back from its `ParkedBytes` payload:
+    /// reallocate blocks from the pool (budget-checked) and copy the
+    /// encoded bytes in verbatim, so the restored store is bit-identical
+    /// to the pre-spill store.  On a budget failure nothing is committed
+    /// (staged blocks are returned to the pool and the sequence stays
+    /// parked).  The watermark stays at 0 — the next retrieval rebuilds
+    /// the effective cache in full.
+    pub fn restore_sequence_bytes(&mut self, id: u64, parked: &ParkedBytes) -> Result<()> {
+        let spec = self.cfg.spec.clone();
+        {
+            let seq = self
+                .seqs
+                .get(&id)
+                .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+            anyhow::ensure!(seq.parked, "sequence {id} is not parked");
+            anyhow::ensure!(
+                seq.len == parked.len,
+                "parked payload covers {} rows, sequence has {}",
+                parked.len,
+                seq.len
+            );
+        }
+        // derive the wire layout from the plan alone (no per-stream
+        // headers travel with the payload)
+        let mut layout = Vec::new();
+        for layer in 0..spec.n_layer {
+            for side in [Side::K, Side::V] {
+                let kind = self.cfg.store_kind(layer, side);
+                let epr = kind.elements(&spec);
+                let fmt = self.cfg.format_for(&kind);
+                let nbytes = if epr == 0 {
+                    0
+                } else {
+                    parked.len * fmt.row_bytes(epr)
+                };
+                layout.push((fmt, epr, nbytes));
+            }
+        }
+        let total: usize = layout.iter().map(|l| l.2).sum();
+        anyhow::ensure!(
+            parked.payload.len() == total,
+            "parked payload is {} bytes, wire format needs {total}",
+            parked.payload.len()
+        );
+        // stage every block before committing any, so a budget failure
+        // mid-way leaves the sequence cleanly parked
+        let mut staged: Vec<Vec<Block>> = Vec::with_capacity(layout.len());
+        let mut off = 0usize;
+        for &(fmt, epr, nbytes) in &layout {
+            let mut blocks = Vec::new();
+            if epr > 0 {
+                let rb = fmt.row_bytes(epr);
+                let mut rest = &parked.payload[off..off + nbytes];
+                off += nbytes;
+                while !rest.is_empty() {
+                    let Some(mut b) = self.pool.alloc(fmt, epr, self.cfg.block_size) else {
+                        for bs in staged {
+                            for b in bs {
+                                self.pool.free(b);
+                            }
+                        }
+                        for b in blocks {
+                            self.pool.free(b);
+                        }
+                        return Err(anyhow!("cache budget exceeded restoring sequence {id}"));
+                    };
+                    let taken = b.push_raw_rows(rest);
+                    debug_assert!(taken > 0);
+                    rest = &rest[taken * rb..];
+                    blocks.push(b);
+                }
+            }
+            staged.push(blocks);
+        }
+        let seq = self.seqs.get_mut(&id).unwrap();
+        for (i, blocks) in staged.into_iter().enumerate() {
+            seq.streams[i / 2][i % 2].blocks = blocks;
+        }
+        seq.parked = false;
+        seq.decoded_upto = 0;
+        Ok(())
+    }
+
     /// Measured stored bytes for a sequence (block capacity granularity).
     pub fn seq_stored_bytes(&self, id: u64) -> usize {
         self.seqs
@@ -469,6 +649,7 @@ impl CacheManager {
             * self.cfg.block_size
     }
 
+    /// The plan's per-(layer, head) K/V reuse masks (alias resolution).
     pub fn reuse_masks(&self) -> (&Vec<Vec<bool>>, &Vec<Vec<bool>>) {
         (&self.cfg.plan.reuse_k, &self.cfg.plan.reuse_v)
     }
@@ -880,6 +1061,105 @@ mod tests {
         m.reset_decoded(id);
         assert_eq!(m.decoded_upto(id), Some(0));
         assert_eq!(m.decoded_upto(12345), None);
+    }
+
+    #[test]
+    fn extract_restore_roundtrips_bitwise_and_releases_pool() {
+        // the encoded-byte tier transfer contract: spill moves the real
+        // block bytes out (freeing device pool budget), restore brings
+        // back a bit-identical store — across every plan kind and format
+        check(25, |rng| {
+            let spec = tiny_spec();
+            let plan = random_plan(rng, &spec);
+            let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+            let id = m.create_sequence();
+            let n = rng.range(1, 50);
+            append_n(&mut m, id, n, rng);
+            let before_bytes = m.seq_stored_bytes(id);
+            let mut before = Vec::new();
+            for layer in 0..spec.n_layer {
+                for side in [Side::K, Side::V] {
+                    before.push(format!("{:?}", m.stored_rows(id, layer, side).unwrap()));
+                }
+            }
+            let live_before = m.pool_stats().live_bytes;
+
+            let parked = m.extract_sequence_bytes(id).map_err(|e| e.to_string())?;
+            prop_assert!(m.seq_parked(id), "sequence must report parked");
+            prop_assert!(parked.len == n);
+            prop_assert!(
+                m.pool_stats().live_bytes + before_bytes == live_before,
+                "spill must free the sequence's device blocks"
+            );
+            // payload is pure encoded rows: no block padding travels
+            let expected: usize = (0..spec.n_layer)
+                .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+                .map(|(l, s)| {
+                    let kind = m.cfg.store_kind(l, s);
+                    let epr = kind.elements(&spec);
+                    if epr == 0 {
+                        0
+                    } else {
+                        n * m.cfg.format_for(&kind).row_bytes(epr)
+                    }
+                })
+                .sum();
+            prop_assert!(
+                parked.payload.len() == expected,
+                "wire payload {} != expected {expected}",
+                parked.payload.len()
+            );
+            // parked reads and appends fail loudly
+            prop_assert!(m.stored_rows(id, 0, Side::K).is_err(), "parked read must fail");
+            prop_assert!(m.seq_stored_bytes(id) == 0, "parked sequence holds no device bytes");
+            let zl = vec![0.0; spec.n_layer * spec.ae_latent];
+            let zr = vec![0.0; spec.n_layer * spec.kv_dim()];
+            prop_assert!(
+                m.append_token(id, &zl, &zl, &zr, &zr).is_err(),
+                "parked append must fail"
+            );
+            // double-extract rejected
+            prop_assert!(m.extract_sequence_bytes(id).is_err());
+
+            m.restore_sequence_bytes(id, &parked).map_err(|e| e.to_string())?;
+            prop_assert!(!m.seq_parked(id));
+            prop_assert!(m.restore_sequence_bytes(id, &parked).is_err(), "not parked anymore");
+            prop_assert!(
+                m.seq_stored_bytes(id) == before_bytes,
+                "restored block accounting diverges"
+            );
+            prop_assert!(m.decoded_upto(id) == Some(0), "restore must leave watermark at 0");
+            for (i, (layer, side)) in (0..spec.n_layer)
+                .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+                .enumerate()
+            {
+                let after = format!("{:?}", m.stored_rows(id, layer, side).unwrap());
+                prop_assert!(
+                    after == before[i],
+                    "stream ({layer}, {side:?}) diverges after tier round-trip"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn restore_rejects_corrupt_payload() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 2);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(21);
+        append_n(&mut m, id, 9, &mut rng);
+        let mut parked = m.extract_sequence_bytes(id).unwrap();
+        parked.payload.pop(); // wrong total length
+        assert!(m.restore_sequence_bytes(id, &parked).is_err());
+        parked.payload.push(0);
+        parked.len = 8; // wrong row count
+        assert!(m.restore_sequence_bytes(id, &parked).is_err());
+        parked.len = 9;
+        m.restore_sequence_bytes(id, &parked).unwrap();
+        assert_eq!(m.seq_len(id), Some(9));
     }
 
     #[test]

@@ -1,4 +1,7 @@
-//! Paged, compressed KV cache (the KV-CAR storage engine).
+//! Paged, compressed KV cache (the KV-CAR storage engine): pooled block
+//! storage with per-stream codecs (`block`, `allocator`), the
+//! per-sequence manager and zero-copy retrieval views (`manager`), and
+//! the host-offload tier that moves encoded bytes off-device (`tier`).
 
 pub mod allocator;
 pub mod block;
@@ -6,4 +9,6 @@ pub mod manager;
 pub mod tier;
 
 pub use block::{Format, RowsView};
-pub use manager::{CacheConfig, CacheManager, Side, StoreKind, StoredRows, StreamRows, StreamView};
+pub use manager::{
+    CacheConfig, CacheManager, ParkedBytes, Side, StoreKind, StoredRows, StreamRows, StreamView,
+};

@@ -1,14 +1,24 @@
-//! Host-offload tier simulation (paper §III "Memory Offloading"
-//! complement): sequences evicted from the device cache park their
-//! *compressed* blocks in a host tier and pay a modeled PCIe transfer
-//! cost on resume.
+//! Host-offload tier (paper §III "Memory Offloading" complement):
+//! sequences evicted from the device cache park their *compressed*
+//! payload in a host tier and pay a modeled PCIe transfer cost on
+//! resume.
+//!
+//! Two APIs coexist:
+//!
+//! * **`park` / `unpark`** — the serving path: the actual encoded block
+//!   bytes (`CacheManager::extract_sequence_bytes`, wire format in
+//!   DESIGN.md §4) move into the tier and come back bit-identical; the
+//!   transfer cost is computed from the payload's real length.
+//! * **`evict` / `resume`** — the modeling path (memsim, what-if
+//!   analysis): only a byte *count* is tracked, nothing moves.
 //!
 //! The paper argues KV-CAR composes with offloading because the
-//! embedding-dimension compression shrinks the transferred volume; this
-//! module quantifies exactly that — `resume_cost` scales with the
-//! plan's stored bytes, so an AE+int8 plan moves ~4x less data per
-//! evicted sequence than the baseline.
+//! embedding-dimension compression shrinks the transferred volume; both
+//! APIs quantify exactly that — the cost scales with the plan's stored
+//! bytes, so an AE+int8 plan moves ~4x less data per evicted sequence
+//! than the baseline.
 
+use super::manager::ParkedBytes;
 use std::collections::HashMap;
 use std::time::Duration;
 
@@ -17,9 +27,11 @@ pub const PCIE_BYTES_PER_SEC: f64 = 24e9;
 /// Fixed per-transfer latency (launch + sync).
 pub const TRANSFER_LATENCY_US: f64 = 30.0;
 
+/// The host-side store for parked sequences plus transfer accounting.
 #[derive(Debug, Default)]
 pub struct HostTier {
     parked: HashMap<u64, ParkedSeq>,
+    /// eviction/resume counters and modeled transfer time
     pub stats: TierStats,
 }
 
@@ -27,62 +39,160 @@ pub struct HostTier {
 struct ParkedSeq {
     bytes: usize,
     len: usize,
+    /// real encoded payload (`park`); None for modeled `evict` entries
+    payload: Option<ParkedBytes>,
 }
 
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
+/// Transfer accounting for one `HostTier`.
 pub struct TierStats {
+    /// sequences moved host-ward (park + evict)
     pub evictions: u64,
+    /// sequences brought back (unpark + resume)
     pub resumes: u64,
+    /// total bytes transferred to the host
     pub bytes_out: u64,
+    /// total bytes transferred back to the device
     pub bytes_in: u64,
+    /// bytes currently resident in the host tier
     pub host_bytes: usize,
+    /// high-water mark of `host_bytes`
     pub peak_host_bytes: usize,
     /// accumulated modeled transfer time
     pub transfer_time: Duration,
 }
 
+/// Modeled PCIe transfer time for `bytes` (fixed latency + bandwidth).
 pub fn transfer_cost(bytes: usize) -> Duration {
     Duration::from_secs_f64(TRANSFER_LATENCY_US * 1e-6 + bytes as f64 / PCIE_BYTES_PER_SEC)
 }
 
 impl HostTier {
+    /// Empty tier with zeroed stats.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Park a sequence's compressed payload on the host.
+    /// Park a sequence's *actual encoded bytes* on the host — the serving
+    /// spill path.  The transfer cost is computed from the payload's real
+    /// length (pure rows, no block padding), and `unpark` returns the
+    /// identical bytes.  Panics on a double-park: overwriting an entry
+    /// would leak the first payload's bytes into `host_bytes` forever.
+    pub fn park(&mut self, seq_id: u64, bytes: ParkedBytes) -> Duration {
+        assert!(
+            !self.parked.contains_key(&seq_id),
+            "sequence {seq_id} already parked (double-park corrupts tier accounting)"
+        );
+        let n = bytes.payload.len();
+        let cost = transfer_cost(n);
+        self.account_out(n);
+        self.parked.insert(
+            seq_id,
+            ParkedSeq {
+                bytes: n,
+                len: bytes.len,
+                payload: Some(bytes),
+            },
+        );
+        self.stats.transfer_time += cost;
+        cost
+    }
+
+    /// Undo a just-completed `unpark` whose device-side restore failed:
+    /// reinsert the payload and reverse the unpark's accounting, so a
+    /// failed resume leaves the stats exactly as if it was never
+    /// attempted (no phantom transfers).
+    pub fn repark(&mut self, seq_id: u64, bytes: ParkedBytes) {
+        assert!(
+            !self.parked.contains_key(&seq_id),
+            "sequence {seq_id} already parked (repark must follow its unpark)"
+        );
+        let n = bytes.payload.len();
+        self.stats.resumes -= 1;
+        self.stats.bytes_in -= n as u64;
+        self.stats.host_bytes += n;
+        self.stats.peak_host_bytes = self.stats.peak_host_bytes.max(self.stats.host_bytes);
+        self.stats.transfer_time -= transfer_cost(n);
+        self.parked.insert(
+            seq_id,
+            ParkedSeq {
+                bytes: n,
+                len: bytes.len,
+                payload: Some(bytes),
+            },
+        );
+    }
+
+    /// Bring a parked sequence's encoded bytes back; returns the payload
+    /// (ready for `CacheManager::restore_sequence_bytes`) and the modeled
+    /// transfer cost.  None when the sequence is not parked here or was
+    /// parked through the modeling-only `evict` API.
+    pub fn unpark(&mut self, seq_id: u64) -> Option<(ParkedBytes, Duration)> {
+        if self.parked.get(&seq_id)?.payload.is_none() {
+            return None; // modeled entry: resume() is the matching call
+        }
+        let p = self.parked.remove(&seq_id)?;
+        let cost = transfer_cost(p.bytes);
+        self.account_in(p.bytes);
+        self.stats.transfer_time += cost;
+        Some((p.payload.unwrap(), cost))
+    }
+
+    /// Park a sequence's compressed payload on the host (modeled: only
+    /// the byte count is tracked — memsim / what-if analysis).  Panics
+    /// on a double-evict, like `park`.
     pub fn evict(&mut self, seq_id: u64, stored_bytes: usize, len: usize) -> Duration {
+        assert!(
+            !self.parked.contains_key(&seq_id),
+            "sequence {seq_id} already parked (double-evict corrupts tier accounting)"
+        );
         let cost = transfer_cost(stored_bytes);
+        self.account_out(stored_bytes);
         self.parked.insert(
             seq_id,
             ParkedSeq {
                 bytes: stored_bytes,
                 len,
+                payload: None,
             },
         );
-        self.stats.evictions += 1;
-        self.stats.bytes_out += stored_bytes as u64;
-        self.stats.host_bytes += stored_bytes;
-        self.stats.peak_host_bytes = self.stats.peak_host_bytes.max(self.stats.host_bytes);
         self.stats.transfer_time += cost;
         cost
     }
 
-    /// Bring a sequence back; returns (cached length, modeled cost).
+    /// Bring a modeled sequence back; returns (cached length, modeled cost).
     pub fn resume(&mut self, seq_id: u64) -> Option<(usize, Duration)> {
         let p = self.parked.remove(&seq_id)?;
         let cost = transfer_cost(p.bytes);
-        self.stats.resumes += 1;
-        self.stats.bytes_in += p.bytes as u64;
-        self.stats.host_bytes -= p.bytes;
+        self.account_in(p.bytes);
         self.stats.transfer_time += cost;
         Some((p.len, cost))
     }
 
+    fn account_out(&mut self, bytes: usize) {
+        self.stats.evictions += 1;
+        self.stats.bytes_out += bytes as u64;
+        self.stats.host_bytes += bytes;
+        self.stats.peak_host_bytes = self.stats.peak_host_bytes.max(self.stats.host_bytes);
+    }
+
+    fn account_in(&mut self, bytes: usize) {
+        self.stats.resumes += 1;
+        self.stats.bytes_in += bytes as u64;
+        self.stats.host_bytes -= bytes;
+    }
+
+    /// Whether a sequence is currently parked in this tier.
     pub fn is_parked(&self, seq_id: u64) -> bool {
         self.parked.contains_key(&seq_id)
     }
 
+    /// Host bytes a parked sequence occupies (None if not parked).
+    pub fn parked_bytes(&self, seq_id: u64) -> Option<usize> {
+        self.parked.get(&seq_id).map(|p| p.bytes)
+    }
+
+    /// Number of sequences currently parked.
     pub fn parked_count(&self) -> usize {
         self.parked.len()
     }
@@ -107,6 +217,65 @@ mod tests {
         assert_eq!(tier.stats.bytes_in, tier.stats.bytes_out);
         assert_eq!(c1, c2);
         assert!(tier.resume(1).is_none());
+    }
+
+    #[test]
+    fn park_unpark_moves_real_bytes() {
+        let mut tier = HostTier::new();
+        let bytes = ParkedBytes {
+            len: 3,
+            payload: vec![7u8, 1, 2, 255, 0, 42],
+        };
+        let c1 = tier.park(5, bytes.clone());
+        assert!(tier.is_parked(5));
+        assert_eq!(tier.parked_bytes(5), Some(6));
+        assert_eq!(tier.stats.host_bytes, 6);
+        // a real park cannot be drained through the modeled resume path
+        // by accident — unpark returns the identical payload
+        let (back, c2) = tier.unpark(5).unwrap();
+        assert_eq!(back, bytes, "payload must round-trip bit-identically");
+        assert_eq!(c1, c2);
+        assert_eq!(tier.stats.host_bytes, 0);
+        assert_eq!(tier.stats.bytes_in, tier.stats.bytes_out);
+        assert!(tier.unpark(5).is_none());
+        // modeled entries are invisible to unpark
+        tier.evict(6, 100, 4);
+        assert!(tier.unpark(6).is_none());
+        assert!(tier.is_parked(6));
+        assert_eq!(tier.resume(6).unwrap().0, 4);
+    }
+
+    #[test]
+    fn repark_reverses_unpark_accounting() {
+        let mut tier = HostTier::new();
+        tier.park(
+            9,
+            ParkedBytes {
+                len: 2,
+                payload: vec![1, 2, 3, 4],
+            },
+        );
+        let after_park = tier.stats;
+        let (bytes, _) = tier.unpark(9).unwrap();
+        tier.repark(9, bytes);
+        // a failed resume must leave the stats as if never attempted
+        assert_eq!(tier.stats, after_park);
+        assert!(tier.is_parked(9));
+        // and the payload is still intact for the next resume
+        let (back, _) = tier.unpark(9).unwrap();
+        assert_eq!(back.payload, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-park")]
+    fn double_park_panics() {
+        let mut tier = HostTier::new();
+        let b = ParkedBytes {
+            len: 1,
+            payload: vec![0],
+        };
+        tier.park(1, b.clone());
+        tier.park(1, b);
     }
 
     #[test]

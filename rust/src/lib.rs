@@ -19,6 +19,11 @@
 //! Python never runs at serve time: the `runtime` module loads the HLO
 //! artifacts via PJRT and everything else is rust.
 
+// Every public item must carry rustdoc (enforced as -D warnings by the
+// `cargo doc` CI step) so the kvcache/coordinator API surface — the
+// L2<->L3 contract — can't grow undocumented.
+#![warn(missing_docs)]
+
 pub mod compress;
 pub mod coordinator;
 pub mod data;

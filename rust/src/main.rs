@@ -199,6 +199,7 @@ fn run(args: &Args) -> Result<()> {
                 max_batch: args.usize("batch", 8),
                 seed: args.u64("seed", 0),
                 per_step_reconstruct: args.bool("faithful"),
+                cache_budget: args.opt("cache-budget").and_then(|v| v.parse().ok()),
             };
             let mut serving = ServingEngine::new(&mut engine, &model, cfg)?;
             let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));

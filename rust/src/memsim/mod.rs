@@ -30,9 +30,13 @@ pub const A40_BYTES: u64 = 44_980_000_000;
 pub const FIXED_OVERHEAD_BYTES: u64 = 600_000_000;
 
 #[derive(Debug, Clone)]
+/// Device memory model the frontier sweep runs against.
 pub struct GpuModel {
+    /// device label (e.g. "A40-48G")
     pub name: String,
+    /// total device memory
     pub capacity_bytes: u64,
+    /// framework/runtime overhead reserved off the top
     pub fixed_bytes: u64,
     /// transient activation/workspace bytes retained per token of context
     /// at the peak of a decode step, per sequence (scales with d_model)
@@ -101,13 +105,18 @@ impl GpuModel {
 /// so the sweep hits the exact ratios the figure labels.
 #[derive(Debug, Clone, Copy)]
 pub enum FigureCompression {
+    /// uncompressed KV cache
     Baseline,
+    /// 25% of KV bytes removed
     Pct25,
+    /// half the KV bytes removed
     Pct50,
+    /// 75% of KV bytes removed
     Pct75,
 }
 
 impl FigureCompression {
+    /// Fraction of baseline KV bytes that remain.
     pub fn ratio(self) -> f64 {
         match self {
             FigureCompression::Baseline => 1.0,
@@ -117,6 +126,7 @@ impl FigureCompression {
         }
     }
 
+    /// Figure legend label.
     pub fn label(self) -> &'static str {
         match self {
             FigureCompression::Baseline => "baseline",
@@ -126,6 +136,7 @@ impl FigureCompression {
         }
     }
 
+    /// Every ratio, sweep order.
     pub fn all() -> [FigureCompression; 4] {
         [
             FigureCompression::Baseline,
@@ -153,7 +164,9 @@ impl FigureCompression {
 /// One row of a Fig. 2/3 sweep.
 #[derive(Debug, Clone)]
 pub struct FrontierPoint {
+    /// concurrent sequences
     pub batch: usize,
+    /// longest context that fits at this batch
     pub max_seq: usize,
 }
 
@@ -181,6 +194,7 @@ pub fn frontier(
         .collect()
 }
 
+/// Batch sizes the paper's Figs. 2-3 sweep.
 pub const FIGURE_BATCHES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
 
 #[cfg(test)]

@@ -33,6 +33,7 @@ pub struct CompressionPlan {
 pub use crate::compress::quant::QUANT_HEADER_BYTES;
 
 impl CompressionPlan {
+    /// Uncompressed baseline plan.
     pub fn none(n_layer: usize, n_kv_head: usize) -> Self {
         CompressionPlan {
             ae_layers: vec![false; n_layer],
@@ -51,6 +52,7 @@ impl CompressionPlan {
         p
     }
 
+    /// Stack Eq. 4 int8 on top of this plan.
     pub fn with_quant(mut self) -> Self {
         self.quant_int8 = true;
         self
@@ -91,6 +93,7 @@ impl CompressionPlan {
         Ok(())
     }
 
+    /// Total reused (layer, head) pairs across K and V.
     pub fn n_reused_heads(&self) -> usize {
         self.reuse_k
             .iter()
@@ -100,6 +103,7 @@ impl CompressionPlan {
             .count()
     }
 
+    /// Layers with the AE round-trip enabled.
     pub fn n_ae_layers(&self) -> usize {
         self.ae_layers.iter().filter(|&&a| a).count()
     }

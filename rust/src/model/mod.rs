@@ -15,19 +15,31 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 
 #[derive(Debug, Clone, PartialEq)]
+/// Model dimensions every layer of the system sizes itself from.
 pub struct ModelSpec {
+    /// model id
     pub name: String,
+    /// block architecture (GPT-2 or Llama style)
     pub arch: Arch,
+    /// vocabulary size
     pub vocab: usize,
+    /// transformer layers
     pub n_layer: usize,
+    /// residual width
     pub d_model: usize,
+    /// query heads
     pub n_head: usize,
+    /// KV heads (GQA when < n_head)
     pub n_kv_head: usize,
+    /// per-head width
     pub d_head: usize,
+    /// feed-forward hidden width
     pub ffn_dim: usize,
+    /// maximum context length
     pub max_seq: usize,
     /// KV-CAR autoencoder dims (kv_dim -> ae_hidden -> ae_latent)
     pub ae_hidden: usize,
+    /// AE bottleneck width (the stored latent)
     pub ae_latent: usize,
     /// bytes per stored element for this deployment (4 = f32 runtime,
     /// 2 = the paper's fp16 serving assumption)
@@ -35,8 +47,11 @@ pub struct ModelSpec {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Transformer block family.
 pub enum Arch {
+    /// GPT-2 style (LayerNorm, learned positions, fused QKV)
     Gpt2,
+    /// Llama style (RMSNorm, RoPE, gated FFN, GQA)
     Llama,
 }
 
@@ -46,10 +61,12 @@ impl ModelSpec {
         self.n_kv_head * self.d_head
     }
 
+    /// Width of the query projection.
     pub fn q_dim(&self) -> usize {
         self.n_head * self.d_head
     }
 
+    /// Query heads sharing one KV head (GQA group).
     pub fn group_size(&self) -> usize {
         self.n_head / self.n_kv_head
     }
@@ -72,6 +89,7 @@ impl ModelSpec {
         emb + l * per_layer + d
     }
 
+    /// Parameter bytes at this deployment's element width.
     pub fn weight_bytes(&self) -> u64 {
         self.param_count() * self.bytes_per_el as u64
     }
@@ -89,6 +107,8 @@ impl ModelSpec {
         2 * (enc + dec) * self.n_layer as u64
     }
 
+    /// Parse a runtime spec from `manifest.json` (rust and python can
+    /// never disagree on dimensions).
     pub fn from_manifest(man: &Json, name: &str) -> Result<ModelSpec> {
         let m = man
             .get("models")

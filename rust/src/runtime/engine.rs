@@ -17,7 +17,9 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
+/// Compile-once PJRT executor for the AOT HLO artifacts.
 pub struct Engine {
+    /// the L2<->L3 contract (entry points + flattened I/O)
     pub manifest: Manifest,
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -28,25 +30,35 @@ pub struct Engine {
     buffer_cache: HashMap<String, Vec<Option<(u64, xla::PjRtBuffer)>>>,
     /// disable to fall back to literal-per-call execution (perf A/B)
     pub use_buffer_cache: bool,
+    /// compile/execute/traffic counters
     pub stats: EngineStats,
 }
 
 #[derive(Debug, Default, Clone)]
+/// Launch and host<->device traffic counters.
 pub struct EngineStats {
+    /// entry points compiled (once each)
     pub compiles: u64,
+    /// artifact calls issued — the launch-count law the batched
+    /// faithful decode is asserted against
     pub executions: u64,
+    /// nanoseconds spent in XLA compilation
     pub compile_ns: u128,
+    /// nanoseconds spent executing
     pub execute_ns: u128,
     /// host<->device literal traffic in elements
     pub input_elements: u64,
+    /// elements fetched back per call
     pub output_elements: u64,
     /// buffered path: inputs re-uploaded because their store version
     /// changed (staging traffic) vs served from the device-resident cache
     pub input_uploads: u64,
+    /// inputs served from the device-resident cache
     pub input_cache_hits: u64,
 }
 
 impl Engine {
+    /// Load the manifest and open a CPU PJRT client.
     pub fn new(artifacts_dir: &Path) -> Result<Engine> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
@@ -200,6 +212,7 @@ impl Engine {
         Ok(())
     }
 
+    /// Manifest spec of one entry point.
     pub fn entry_spec(&self, entry: &str) -> Result<&EntrySpec> {
         self.manifest.entry(entry)
     }

@@ -8,37 +8,55 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 #[derive(Debug, Clone, PartialEq, Eq)]
+/// Element type of a manifest tensor.
 pub enum DType {
+    /// 32-bit float
     F32,
+    /// 32-bit signed integer
     I32,
 }
 
 #[derive(Debug, Clone)]
+/// One flattened input/output tensor of an entry point.
 pub struct IoSpec {
+    /// flattened name (e.g. "base/wq", "k_lat")
     pub name: String,
+    /// dense row-major shape
     pub shape: Vec<usize>,
+    /// element type
     pub dtype: DType,
 }
 
 impl IoSpec {
+    /// Element count of the shape.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
 #[derive(Debug, Clone)]
+/// One entry point: its HLO file plus I/O in call order.
 pub struct EntrySpec {
+    /// entry-point name
     pub name: String,
+    /// HLO text file path
     pub file: PathBuf,
+    /// inputs in call order
     pub inputs: Vec<IoSpec>,
+    /// outputs in tuple order
     pub outputs: Vec<IoSpec>,
 }
 
 #[derive(Debug, Clone)]
+/// Parsed artifacts/manifest.json.
 pub struct Manifest {
+    /// artifact directory
     pub dir: PathBuf,
+    /// model names present
     pub models: Vec<String>,
+    /// entry points by name
     pub entries: BTreeMap<String, EntrySpec>,
+    /// the raw JSON (model hyperparameters etc.)
     pub raw: Json,
 }
 
@@ -64,6 +82,7 @@ fn parse_io(j: &Json) -> Result<IoSpec> {
 }
 
 impl Manifest {
+    /// Parse `manifest.json` from an artifact directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -113,12 +132,14 @@ impl Manifest {
         })
     }
 
+    /// Entry spec by name (error names the missing entry).
     pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
         self.entries
             .get(name)
             .ok_or_else(|| anyhow!("entry '{name}' not in manifest"))
     }
 
+    /// Path of a model's parameter buffer file.
     pub fn params_bin(&self, model: &str) -> Result<PathBuf> {
         let f = self
             .raw
@@ -130,6 +151,7 @@ impl Manifest {
         Ok(self.dir.join(f))
     }
 
+    /// Path of a model's parameter index file.
     pub fn params_index(&self, model: &str) -> Result<PathBuf> {
         let f = self
             .raw

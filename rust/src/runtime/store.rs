@@ -15,6 +15,7 @@ use std::io::Write;
 use std::path::Path;
 
 #[derive(Debug, Clone, Default)]
+/// Versioned named-tensor map (parameters, optimizer state, staging).
 pub struct Store {
     map: BTreeMap<String, Tensor>,
     /// monotone per-tensor versions: the engine's device-buffer cache
@@ -25,10 +26,12 @@ pub struct Store {
 }
 
 impl Store {
+    /// Empty store.
     pub fn new() -> Store {
         Store::default()
     }
 
+    /// Insert or replace a tensor (version bumped).
     pub fn insert(&mut self, name: &str, t: Tensor) {
         self.counter += 1;
         self.versions.insert(name.to_string(), self.counter);
@@ -98,12 +101,14 @@ impl Store {
         self.versions.get(name).copied().unwrap_or(0)
     }
 
+    /// Tensor by name (error names the missing tensor).
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.map
             .get(name)
             .ok_or_else(|| anyhow!("store has no tensor '{name}'"))
     }
 
+    /// Mutable tensor by name (version bumped conservatively).
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
         // conservatively bump: the caller may mutate through this borrow
         self.counter += 1;
@@ -113,18 +118,22 @@ impl Store {
             .ok_or_else(|| anyhow!("store has no tensor '{name}'"))
     }
 
+    /// Whether a tensor exists.
     pub fn contains(&self, name: &str) -> bool {
         self.map.contains_key(name)
     }
 
+    /// Every tensor name, sorted.
     pub fn names(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }
 
+    /// Number of tensors.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the store holds nothing.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

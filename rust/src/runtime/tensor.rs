@@ -4,22 +4,28 @@ use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A host tensor in one of the two artifact dtypes.
 pub enum Tensor {
+    /// dense row-major f32
     F32 { shape: Vec<usize>, data: Vec<f32> },
+    /// dense row-major i32
     I32 { shape: Vec<usize>, data: Vec<i32> },
 }
 
 impl Tensor {
+    /// F32 tensor (shape must cover `data`).
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor::F32 { shape, data }
     }
 
+    /// I32 tensor (shape must cover `data`).
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Tensor::I32 { shape, data }
     }
 
+    /// Zeroed f32 tensor.
     pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
         Tensor::F32 {
@@ -28,6 +34,7 @@ impl Tensor {
         }
     }
 
+    /// Rank-0 f32 tensor.
     pub fn scalar_f32(v: f32) -> Tensor {
         Tensor::F32 {
             shape: vec![],
@@ -35,6 +42,7 @@ impl Tensor {
         }
     }
 
+    /// Rank-0 i32 tensor.
     pub fn scalar_i32(v: i32) -> Tensor {
         Tensor::I32 {
             shape: vec![],
@@ -42,12 +50,14 @@ impl Tensor {
         }
     }
 
+    /// The shape.
     pub fn shape(&self) -> &[usize] {
         match self {
             Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32 { data, .. } => data.len(),
@@ -55,10 +65,12 @@ impl Tensor {
         }
     }
 
+    /// Whether the tensor has zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// "f32" or "i32" (error messages).
     pub fn dtype_name(&self) -> &'static str {
         match self {
             Tensor::F32 { .. } => "float32",
@@ -66,6 +78,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow f32 data (error on dtype mismatch).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Tensor::F32 { data, .. } => Ok(data),
@@ -73,6 +86,7 @@ impl Tensor {
         }
     }
 
+    /// Mutably borrow f32 data (error on dtype mismatch).
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
             Tensor::F32 { data, .. } => Ok(data),
@@ -80,6 +94,7 @@ impl Tensor {
         }
     }
 
+    /// Borrow i32 data (error on dtype mismatch).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Tensor::I32 { data, .. } => Ok(data),
@@ -87,6 +102,7 @@ impl Tensor {
         }
     }
 
+    /// The single value of a rank-0 f32 tensor.
     pub fn scalar_f32_value(&self) -> Result<f32> {
         let d = self.as_f32()?;
         if d.len() != 1 {
@@ -95,6 +111,7 @@ impl Tensor {
         Ok(d[0])
     }
 
+    /// Convert to an XLA literal for execution.
     pub fn to_literal(&self) -> Result<Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -104,6 +121,7 @@ impl Tensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    /// Convert back from an XLA literal.
     pub fn from_literal(lit: &Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

@@ -21,11 +21,13 @@ enum Msg {
     Shutdown,
 }
 
+/// Owns the serving thread; create with `start`, stop with `shutdown`.
 pub struct Server {
     tx: Sender<Msg>,
     handle: Option<JoinHandle<()>>,
 }
 
+/// Cloneable client handle: submit requests from any thread.
 pub struct ServerHandle {
     tx: Sender<Msg>,
 }
@@ -50,6 +52,7 @@ impl ServerHandle {
             .map_err(|e| anyhow!(e))
     }
 
+    /// Snapshot of the engine's serving metrics.
     pub fn metrics(&self) -> Result<crate::coordinator::metrics::ServeMetrics> {
         let (tx, rx) = channel();
         self.tx
@@ -77,12 +80,14 @@ impl Server {
         })
     }
 
+    /// A new client handle.
     pub fn handle(&self) -> ServerHandle {
         ServerHandle {
             tx: self.tx.clone(),
         }
     }
 
+    /// Stop the serving thread and join it.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {

@@ -27,11 +27,15 @@ use anyhow::Result;
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
+/// Hyperparameters shared by every training stage.
 pub struct TrainConfig {
+    /// base learning rate
     pub lr: f32,
     /// aux-loss scale lambda (paper: "scaled by an empirical value")
     pub lam: f32,
+    /// steps between loss log lines
     pub log_every: usize,
+    /// print stage progress
     pub verbose: bool,
 }
 
@@ -47,31 +51,45 @@ impl Default for TrainConfig {
 }
 
 #[derive(Debug, Clone)]
+/// Loss trajectory of one training stage.
 pub struct StageLog {
+    /// stage label
     pub stage: String,
+    /// per-log-interval losses
     pub losses: Vec<f32>,
+    /// stage wall-clock milliseconds
     pub wall_ms: u128,
 }
 
 impl StageLog {
+    /// First logged loss (NaN when empty).
     pub fn first(&self) -> f32 {
         *self.losses.first().unwrap_or(&f32::NAN)
     }
+    /// Last logged loss (NaN when empty).
     pub fn last(&self) -> f32 {
         *self.losses.last().unwrap_or(&f32::NAN)
     }
 }
 
+/// Drives Algorithms 1-2 from rust over the AOT train-step artifacts.
 pub struct Trainer<'e> {
+    /// PJRT runtime
     pub engine: &'e mut Engine,
+    /// parameters + optimizer state threaded through steps
     pub store: Store,
+    /// model dimensions
     pub spec: ModelSpec,
+    /// model name prefix for artifact entries
     pub model: String,
+    /// hyperparameters
     pub cfg: TrainConfig,
+    /// completed stage logs
     pub logs: Vec<StageLog>,
 }
 
 impl<'e> Trainer<'e> {
+    /// Load parameters and set up optimizer state for `model`.
     pub fn new(engine: &'e mut Engine, model: &str, cfg: TrainConfig) -> Result<Self> {
         let mut store = Store::new();
         engine.load_params(model, &mut store)?;
@@ -225,6 +243,7 @@ impl<'e> Trainer<'e> {
         self.run_stage(&entry, "reuse_ft", corpus, steps, lr)
     }
 
+    /// Install the plan's runtime mask tensors into the store.
     pub fn apply_masks(&mut self, masks: &RuntimeMasks) {
         let (l, h) = (self.spec.n_layer, self.spec.n_kv_head);
         self.store
@@ -245,6 +264,7 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
+    /// Reload a checkpoint written by `checkpoint`.
     pub fn restore(&mut self, dir: &std::path::Path, tag: &str) -> Result<usize> {
         let bin = dir.join(format!("{}_{tag}.bin", self.model));
         let idx = dir.join(format!("{}_{tag}.json", self.model));

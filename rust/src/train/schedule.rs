@@ -6,24 +6,35 @@
 //! (short stages at small step counts — paper §IV-B keeps these simple).
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// Learning-rate schedule families used by the training stages.
 pub enum Schedule {
+    /// fixed rate
     Constant {
+        /// the fixed rate
         lr: f32,
     },
+    /// linear warmup then cosine decay to a floor
     WarmupCosine {
+        /// rate at the end of warmup
         peak_lr: f32,
         /// floor as a fraction of peak (e.g. 0.1)
         min_frac: f32,
+        /// linear warmup steps
         warmup_steps: usize,
+        /// steps the cosine decays over
         total_steps: usize,
     },
+    /// linear warmup then fixed rate
     WarmupConstant {
+        /// rate after warmup
         lr: f32,
+        /// warmup steps before the constant rate
         warmup_steps: usize,
     },
 }
 
 impl Schedule {
+    /// Learning rate at a global step.
     pub fn lr_at(&self, step: usize) -> f32 {
         match *self {
             Schedule::Constant { lr } => lr,

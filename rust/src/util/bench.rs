@@ -7,11 +7,14 @@
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
 
+/// Optimization barrier (std `black_box` re-export).
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
 }
 
+/// Warmup-then-measure micro-benchmark runner.
 pub struct Bench {
+    /// benchmark label
     pub name: String,
     warmup: Duration,
     measure: Duration,
@@ -19,16 +22,24 @@ pub struct Bench {
 }
 
 #[derive(Debug, Clone)]
+/// Timing summary of one benchmark.
 pub struct Report {
+    /// benchmark label
     pub name: String,
+    /// measured iterations
     pub iters: usize,
+    /// mean nanoseconds per iteration
     pub mean_ns: f64,
+    /// median nanoseconds
     pub p50_ns: f64,
+    /// 99th-percentile nanoseconds
     pub p99_ns: f64,
+    /// fastest iteration
     pub min_ns: f64,
 }
 
 impl Report {
+    /// Print the standard bench row.
     pub fn print(&self) {
         println!(
             "bench {:<44} iters={:<8} mean={:>12}  p50={:>12}  p99={:>12}  min={:>12}",
@@ -57,6 +68,7 @@ impl Report {
     }
 }
 
+/// Human-readable duration from nanoseconds.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -70,6 +82,7 @@ pub fn fmt_ns(ns: f64) -> String {
 }
 
 impl Bench {
+    /// Runner with env-tunable warmup/measure windows.
     pub fn new(name: &str) -> Self {
         // Env knobs let `make bench-fast` shrink runs during iteration.
         let ms = |k: &str, d: u64| {
@@ -83,6 +96,7 @@ impl Bench {
         }
     }
 
+    /// Override the measurement window.
     pub fn with_measure_ms(mut self, ms: u64) -> Self {
         self.measure = Duration::from_millis(ms);
         self

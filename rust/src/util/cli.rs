@@ -4,9 +4,13 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default, Clone)]
+/// Tiny `--key value` / `--flag` argv parser for bins and examples.
 pub struct Args {
+    /// first positional (subcommand)
     pub command: Option<String>,
+    /// --key value pairs (bare flags record "true")
     pub flags: BTreeMap<String, String>,
+    /// remaining positionals
     pub positional: Vec<String>,
 }
 
@@ -40,18 +44,22 @@ impl Args {
         out
     }
 
+    /// Parse the process argv.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// String flag with default.
     pub fn str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional string flag.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// usize flag with default.
     pub fn usize(&self, key: &str, default: usize) -> usize {
         self.flags
             .get(key)
@@ -59,6 +67,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// u64 flag with default.
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.flags
             .get(key)
@@ -66,6 +75,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// f64 flag with default.
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.flags
             .get(key)
@@ -73,6 +83,7 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Presence flag (--faithful).
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
     }

@@ -11,46 +11,60 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed JSON value (in-tree parser — no serde offline).
 pub enum Json {
+    /// null
     Null,
+    /// true / false
     Bool(bool),
+    /// number (f64 like JS)
     Num(f64),
+    /// string
     Str(String),
+    /// array
     Arr(Vec<Json>),
+    /// object with sorted keys
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Number value, if a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// Non-negative integer value, if representable.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// Integer value, if representable.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
+    /// String value, if a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Bool value, if a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array items, if an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Object map, if an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -66,6 +80,7 @@ impl Json {
         self.as_arr().and_then(|a| a.get(i))
     }
 
+    /// Parse a JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -82,8 +97,11 @@ impl Json {
 }
 
 #[derive(Debug)]
+/// Parse failure with byte position.
 pub struct JsonError {
+    /// byte offset of the failure
     pub pos: usize,
+    /// what was expected
     pub msg: String,
 }
 
@@ -373,14 +391,17 @@ pub fn obj(fields: Vec<(&str, Json)>) -> Json {
     Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Number value.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String value.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Array from an iterator.
 pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }

@@ -6,6 +6,7 @@
 //! bit-reproducible from its seed.
 
 #[derive(Debug, Clone)]
+/// Deterministic splitmix64-based RNG (reproducible tests/benches).
 pub struct Rng {
     state: u64,
     /// cached second normal from Box-Muller
@@ -13,6 +14,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator.
     pub fn new(seed: u64) -> Self {
         Rng {
             state: seed.wrapping_add(0x9E3779B97F4A7C15),
@@ -25,6 +27,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24BAED4963EE407))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
         let mut z = self.state;
@@ -38,6 +41,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Uniform in [0, 1).
     pub fn f32(&mut self) -> f32 {
         self.f64() as f32
     }
@@ -55,6 +59,7 @@ impl Rng {
         lo + self.below(hi - lo)
     }
 
+    /// True with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -74,14 +79,17 @@ impl Rng {
         r * th.cos()
     }
 
+    /// Gaussian draw (Box-Muller).
     pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
         mean + std * self.normal() as f32
     }
 
+    /// Uniform element of a non-empty slice.
     pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.below(items.len())]
     }
 
+    /// Fisher-Yates shuffle in place.
     pub fn shuffle<T>(&mut self, items: &mut [T]) {
         for i in (1..items.len()).rev() {
             items.swap(i, self.below(i + 1));

@@ -1,0 +1,327 @@
+//! Batch-first faithful decode + encoded-byte tier transfers, verified
+//! without artifacts (pure-rust mock decoder):
+//!
+//! * `BatchedAdvance` is **bitwise-identical** to per-sequence
+//!   `EffectiveCache::advance` across alias / latent / heads / int8
+//!   plans, and issues exactly **one** batched decoder call per round
+//!   for B > 1 live sequences.
+//! * Tier spill/fill moves the real encoded bytes
+//!   (`CacheManager::extract_sequence_bytes` / `restore_sequence_bytes`)
+//!   and round-trips bit-identically through `HostTier::park`/`unpark`.
+//! * Admission-control parking (`batcher::plan_parking`) under a tight
+//!   budget parks the lowest-priority sequence, the round still
+//!   completes, and resume reproduces bit-identical effective-cache
+//!   contents versus a never-parked run.
+
+use kvcar::coordinator::batcher::{plan_parking, round_headroom_bytes};
+use kvcar::coordinator::effective::RowWiseMockDecoder;
+use kvcar::coordinator::{BatchedAdvance, EffectiveCache};
+use kvcar::kvcache::tier::HostTier;
+use kvcar::kvcache::{CacheConfig, CacheManager};
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::{Arch, ModelSpec};
+use kvcar::prop_assert;
+use kvcar::util::prop::check;
+use kvcar::util::rng::Rng;
+use std::collections::HashMap;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec {
+        name: "batched".into(),
+        arch: Arch::Gpt2,
+        vocab: 256,
+        n_layer: 5,
+        d_model: 48,
+        n_head: 6,
+        n_kv_head: 6,
+        d_head: 8,
+        ffn_dim: 96,
+        max_seq: 64,
+        ae_hidden: 32,
+        ae_latent: 24,
+        bytes_per_el: 4,
+    }
+}
+
+/// One token's worth of random storage rows, identical across managers
+/// fed from the same rng stream.
+fn token_rows(rng: &mut Rng, spec: &ModelSpec) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mk = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    };
+    (
+        mk(rng, spec.n_layer * spec.ae_latent),
+        mk(rng, spec.n_layer * spec.ae_latent),
+        mk(rng, spec.n_layer * spec.kv_dim()),
+        mk(rng, spec.n_layer * spec.kv_dim()),
+    )
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+    prop_assert!(a.len() == b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: bit divergence at {i}: {x} vs {y}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn batched_advance_bitwise_matches_per_sequence_across_plans() {
+    check(25, |rng| {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head);
+        let b = rng.range(2, 7);
+        // two identical worlds fed the same token stream
+        let mut m_bat = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+        let mut m_seq = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs_bat: HashMap<u64, EffectiveCache> = HashMap::new();
+        let mut effs_seq: HashMap<u64, EffectiveCache> = HashMap::new();
+        let mut ids = Vec::new();
+        for _ in 0..b {
+            let id1 = m_bat.create_sequence();
+            let id2 = m_seq.create_sequence();
+            assert_eq!(id1, id2);
+            ids.push(id1);
+            effs_bat.insert(id1, EffectiveCache::new(&spec));
+            effs_seq.insert(id1, EffectiveCache::new(&spec));
+        }
+        let mut dec_bat = RowWiseMockDecoder::for_spec(&spec)
+            .with_capacity(Some(rng.range(2, 9)));
+        let mut dec_seq = RowWiseMockDecoder::for_spec(&spec).with_capacity(None);
+        let mut planner = BatchedAdvance::new();
+
+        // mixed prompt lengths so the first round exercises the bulk
+        // fallback while later rounds batch
+        for (i, &id) in ids.iter().enumerate() {
+            for _ in 0..(i % 3 + 1) {
+                let (kl, vl, kr, vr) = token_rows(rng, &spec);
+                m_bat.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+                m_seq.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+            }
+        }
+        let rounds = rng.range(3, 10);
+        for _ in 0..rounds {
+            planner
+                .advance_round(&mut m_bat, &mut effs_bat, &ids, &mut dec_bat)
+                .map_err(|e| e.to_string())?;
+            for &id in &ids {
+                effs_seq
+                    .get_mut(&id)
+                    .unwrap()
+                    .advance(&mut m_seq, id, &mut dec_seq)
+                    .map_err(|e| e.to_string())?;
+            }
+            for &id in &ids {
+                let (kl, vl, kr, vr) = token_rows(rng, &spec);
+                m_bat.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+                m_seq.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+            }
+        }
+        // drain the last appended row too
+        planner
+            .advance_round(&mut m_bat, &mut effs_bat, &ids, &mut dec_bat)
+            .map_err(|e| e.to_string())?;
+        for &id in &ids {
+            let eff_s = effs_seq.get_mut(&id).unwrap();
+            eff_s.advance(&mut m_seq, id, &mut dec_seq).map_err(|e| e.to_string())?;
+            let eff_b = &effs_bat[&id];
+            assert_bits_eq(&eff_b.k, &eff_s.k, "effective K")?;
+            assert_bits_eq(&eff_b.v, &eff_s.v, "effective V")?;
+            // per-sequence work accounting is identical on both paths
+            prop_assert!(
+                eff_b.stats.rows_decoded == eff_s.stats.rows_decoded,
+                "row accounting diverges"
+            );
+        }
+        prop_assert!(dec_seq.batch_calls == 0, "capacity None must never batch");
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_round_issues_exactly_one_decoder_call() {
+    let spec = tiny_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+    let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let mut effs: HashMap<u64, EffectiveCache> = HashMap::new();
+    let mut rng = Rng::new(3);
+    let b = 4;
+    let ids: Vec<u64> = (0..b)
+        .map(|_| {
+            let id = m.create_sequence();
+            effs.insert(id, EffectiveCache::new(&spec));
+            let (kl, vl, kr, vr) = token_rows(&mut rng, &spec);
+            m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+            id
+        })
+        .collect();
+    let mut dec = RowWiseMockDecoder::for_spec(&spec).with_capacity(Some(8));
+    let mut planner = BatchedAdvance::new();
+    // first advance: every sequence has exactly one pending row -> one call
+    let rounds = 5;
+    for _ in 0..rounds {
+        let n = planner.advance_round(&mut m, &mut effs, &ids, &mut dec).unwrap();
+        assert_eq!(n, b as usize);
+        for &id in &ids {
+            let (kl, vl, kr, vr) = token_rows(&mut rng, &spec);
+            m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+        }
+    }
+    assert_eq!(
+        dec.batch_calls, rounds,
+        "B > 1 live sequences must cost exactly one decoder call per round"
+    );
+    assert_eq!(dec.seq_calls, 0, "no per-sequence calls in steady state");
+    assert_eq!(planner.stats.batched_calls, rounds);
+    assert_eq!(planner.stats.batched_rows, rounds * b);
+    assert_eq!(planner.stats.fallback_advances, 0);
+    // a no-op round (nothing pending) issues nothing
+    let n = planner.advance_round(&mut m, &mut effs, &ids, &mut dec).unwrap();
+    assert_eq!(n, b as usize); // drains the tokens appended above
+    assert_eq!(planner.advance_round(&mut m, &mut effs, &ids, &mut dec).unwrap(), 0);
+    assert_eq!(dec.batch_calls, rounds + 1);
+}
+
+#[test]
+fn capacity_chunking_and_lone_rows_fall_back() {
+    let spec = tiny_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+    let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let mut effs: HashMap<u64, EffectiveCache> = HashMap::new();
+    let mut rng = Rng::new(4);
+    let ids: Vec<u64> = (0..5)
+        .map(|_| {
+            let id = m.create_sequence();
+            effs.insert(id, EffectiveCache::new(&spec));
+            let (kl, vl, kr, vr) = token_rows(&mut rng, &spec);
+            m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+            id
+        })
+        .collect();
+    // capacity 2 over 5 single-row sequences: groups of 2 + 2 + a lone
+    // remainder that goes through the cheaper per-sequence path
+    let mut dec = RowWiseMockDecoder::for_spec(&spec).with_capacity(Some(2));
+    let mut planner = BatchedAdvance::new();
+    planner.advance_round(&mut m, &mut effs, &ids, &mut dec).unwrap();
+    assert_eq!(dec.batch_calls, 2);
+    assert_eq!(dec.seq_calls, 1);
+    assert_eq!(planner.stats.fallback_advances, 1);
+    // capacity None: everything per-sequence
+    for &id in &ids {
+        let (kl, vl, kr, vr) = token_rows(&mut rng, &spec);
+        m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+    }
+    let mut dec_none = RowWiseMockDecoder::for_spec(&spec).with_capacity(None);
+    planner.advance_round(&mut m, &mut effs, &ids, &mut dec_none).unwrap();
+    assert_eq!(dec_none.batch_calls, 0);
+    assert_eq!(dec_none.seq_calls, 5);
+}
+
+#[test]
+fn tier_roundtrip_preserves_effective_cache_bitwise() {
+    // spill -> host tier -> fill -> rebuild must reproduce the exact
+    // effective cache of a sequence that was never parked
+    check(20, |rng| {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut dec = RowWiseMockDecoder::for_spec(&spec);
+        let mut eff = EffectiveCache::new(&spec);
+        let n = rng.range(2, 40);
+        for _ in 0..n {
+            let (kl, vl, kr, vr) = token_rows(rng, &spec);
+            m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+        }
+        eff.advance(&mut m, id, &mut dec).map_err(|e| e.to_string())?;
+
+        let mut tier = HostTier::new();
+        let parked = m.extract_sequence_bytes(id).map_err(|e| e.to_string())?;
+        let host_bytes = parked.payload.len();
+        tier.park(id, parked);
+        prop_assert!(tier.parked_bytes(id) == Some(host_bytes));
+        prop_assert!(m.seq_stored_bytes(id) == 0, "device must be empty while parked");
+
+        let (back, _cost) = tier.unpark(id).ok_or("unpark failed")?;
+        m.restore_sequence_bytes(id, &back).map_err(|e| e.to_string())?;
+        let mut resumed = EffectiveCache::new(&spec);
+        resumed.rebuild_full(&mut m, id, &mut dec).map_err(|e| e.to_string())?;
+        assert_bits_eq(&eff.k, &resumed.k, "resumed effective K")?;
+        assert_bits_eq(&eff.v, &resumed.v, "resumed effective V")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn admission_parking_under_tight_budget_completes_and_restores_bitwise() {
+    // the satellite scenario end-to-end at the cache/batcher level:
+    // two sequences under a budget with room for one -> the batcher
+    // parks the lowest-priority one, the survivor keeps appending and
+    // advancing (the round completes), and resume reproduces the parked
+    // sequence's effective cache bit-identically vs a never-parked run
+    let spec = tiny_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2);
+    let mut rng = Rng::new(11);
+
+    // control world: both sequences live forever, no budget
+    let mut ctl = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+    // pressured world: same stream of tokens
+    let mut mem = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+    let a = ctl.create_sequence();
+    let b = ctl.create_sequence();
+    assert_eq!(mem.create_sequence(), a);
+    assert_eq!(mem.create_sequence(), b);
+    for _ in 0..10 {
+        for id in [a, b] {
+            let t = token_rows(&mut rng, &spec);
+            ctl.append_token(id, &t.0, &t.1, &t.2, &t.3).unwrap();
+            mem.append_token(id, &t.0, &t.1, &t.2, &t.3).unwrap();
+        }
+    }
+
+    // budget fits one sequence + headroom but not two
+    let headroom = round_headroom_bytes(&spec, &plan, mem.cfg.block_size);
+    let one = mem.seq_stored_bytes(a);
+    let budget = one + 2 * headroom;
+    let live = [(a, mem.seq_stored_bytes(a)), (b, mem.seq_stored_bytes(b))];
+    let victims = plan_parking(budget, headroom, &live);
+    assert_eq!(victims, vec![b], "lowest-priority sequence must park");
+
+    let mut tier = HostTier::new();
+    let parked = mem.extract_sequence_bytes(b).unwrap();
+    tier.park(b, parked);
+    assert!(mem.seq_stored_bytes(a) + headroom <= budget, "pressure relieved");
+
+    // the round still completes: the survivor appends and advances
+    let mut dec = RowWiseMockDecoder::for_spec(&spec);
+    let mut eff_a = EffectiveCache::new(&spec);
+    for _ in 0..4 {
+        let t = token_rows(&mut rng, &spec);
+        ctl.append_token(a, &t.0, &t.1, &t.2, &t.3).unwrap();
+        mem.append_token(a, &t.0, &t.1, &t.2, &t.3).unwrap();
+        eff_a.advance(&mut mem, a, &mut dec).unwrap();
+    }
+    assert_eq!(mem.seq_len(a), Some(14));
+
+    // resume: bit-identical store and effective cache vs the control
+    let (back, _) = tier.unpark(b).unwrap();
+    mem.restore_sequence_bytes(b, &back).unwrap();
+    let mut dec2 = RowWiseMockDecoder::for_spec(&spec);
+    let mut eff_resumed = EffectiveCache::new(&spec);
+    eff_resumed.rebuild_full(&mut mem, b, &mut dec2).unwrap();
+    let mut eff_ctl = EffectiveCache::new(&spec);
+    eff_ctl.rebuild_full(&mut ctl, b, &mut dec2).unwrap();
+    assert_eq!(
+        eff_resumed.k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        eff_ctl.k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "resumed effective K diverges from the never-parked control"
+    );
+    assert_eq!(
+        eff_resumed.v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        eff_ctl.v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "resumed effective V diverges from the never-parked control"
+    );
+}

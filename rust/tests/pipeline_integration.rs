@@ -92,6 +92,7 @@ fn serve_baseline_and_compressed_produce_tokens() {
             max_batch: 4,
             seed: 1,
             per_step_reconstruct: false,
+            cache_budget: None,
         };
         let mut serving = ServingEngine::new(&mut engine, "tinyllama_t", cfg).unwrap();
         let reqs: Vec<GenRequest> = (0..3)
@@ -128,6 +129,7 @@ fn compressed_cache_measures_smaller() {
             max_batch: 2,
             seed: 2,
             per_step_reconstruct: false,
+            cache_budget: None,
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
         let reqs = vec![GenRequest::greedy(0, b"the grey rock stands .", 12)];
@@ -161,6 +163,7 @@ fn faithful_reconstruction_matches_incremental() {
             max_batch: 1,
             seed: 3,
             per_step_reconstruct: faithful,
+            cache_budget: None,
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
         let out = serving
@@ -175,6 +178,126 @@ fn faithful_reconstruction_matches_incremental() {
 }
 
 #[test]
+fn batched_faithful_decode_issues_one_decoder_call_per_round() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    let has_bt = engine.manifest.entries.contains_key("gpt2t_decode_kv_bt");
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2);
+    let prompt = b"the wild foxes hide and the mossy stones stand .";
+    let (b, max_new) = (3usize, 6usize);
+
+    // reference: the same workload through the in-graph path
+    let mut outs = Vec::new();
+    let mut faithful_execs = 0;
+    for faithful in [false, true] {
+        let cfg = ServeConfig {
+            plan: plan.clone(),
+            max_batch: b,
+            seed: 5,
+            per_step_reconstruct: faithful,
+            cache_budget: None,
+        };
+        let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
+        let exec0 = serving.engine.stats.executions;
+        let reqs: Vec<GenRequest> = (0..b as u64)
+            .map(|i| GenRequest::greedy(i, prompt, max_new))
+            .collect();
+        let out = serving.run(reqs).unwrap();
+        outs.push(out.iter().map(|r| r.output.clone()).collect::<Vec<_>>());
+        if faithful {
+            faithful_execs = serving.engine.stats.executions - exec0;
+            if has_bt {
+                // decode rounds after the first: ONE batched decoder call
+                // each (max_new - 1 rounds total, first is the bulk
+                // prompt reconstruction fallback)
+                let rounds = (max_new - 1) as u64;
+                assert_eq!(
+                    serving.batched.stats.batched_calls,
+                    rounds - 1,
+                    "steady-state rounds must issue exactly one decoder call"
+                );
+                assert_eq!(
+                    serving.batched.stats.batched_rows,
+                    (rounds - 1) * b as u64
+                );
+                // fallbacks: only the per-sequence prompt rebuilds
+                assert_eq!(serving.batched.stats.fallback_advances, b as u64);
+                // engine accounting: b prefills + round 1 (b bulk decode_kv
+                // + 1 decode_step) + (rounds-1) * (decode_kv_bt + decode_step)
+                assert_eq!(
+                    faithful_execs,
+                    (b + b + 1) as u64 + (rounds - 1) * 2,
+                    "faithful decode must scale in O(1) launches per round"
+                );
+            }
+        }
+    }
+    assert_eq!(outs[0], outs[1], "batched faithful diverges from in-graph");
+    // and strictly fewer launches than the per-sequence faithful law
+    // (b prefills + rounds * (b decoder calls + 1 step)) when batched
+    if has_bt {
+        let per_seq = (b + (max_new - 1) * (b + 1)) as u64;
+        assert!(
+            faithful_execs < per_seq,
+            "batched path must beat per-sequence launches: {faithful_execs} vs {per_seq}"
+        );
+    }
+}
+
+#[test]
+fn tight_budget_parks_resumes_and_completes() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    let plan = CompressionPlan::ae_first_layers(&spec, 2);
+    // 47-byte prompt: two admitted sequences fit the worst-case check
+    // (2 * 55U <= 110U) but outgrow the budget with round headroom
+    // (96U measured + 2*16U > 110U), so the batcher must park the
+    // lowest-priority one and bring it back.  Output equality vs a
+    // never-parked run is asserted bitwise at the cache level in
+    // tests/batched_faithful.rs (compiled decode_step graphs differ by
+    // batch size here, so token-level cross-run comparison would test
+    // XLA numerics, not the parking path)
+    let prompt = b"the grey rock stands and the small birds sing .";
+    let budget =
+        kvcar::coordinator::batcher::request_cache_bytes(&spec, &plan, prompt.len(), 8) * 2;
+    let reqs = |n: usize| -> Vec<GenRequest> {
+        (0..n as u64).map(|i| GenRequest::greedy(i, prompt, 8)).collect()
+    };
+    let cfg = ServeConfig {
+        plan: plan.clone(),
+        max_batch: 3,
+        seed: 7,
+        per_step_reconstruct: false,
+        cache_budget: Some(budget),
+    };
+    let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
+    let out = serving.run(reqs(3)).unwrap();
+    // every request completes in full despite the pressure
+    assert_eq!(out.len(), 3);
+    for r in &out {
+        assert_eq!(r.generated_tokens, 8);
+    }
+    assert!(
+        serving.metrics.auto_parks > 0,
+        "tight budget must trigger admission-control parking"
+    );
+    assert_eq!(
+        serving.metrics.auto_parks, serving.metrics.auto_resumes,
+        "every parked sequence must resume and finish"
+    );
+    assert!(serving.tier.stats.bytes_out > 0, "real bytes must have moved");
+    assert_eq!(serving.tier.stats.bytes_in, serving.tier.stats.bytes_out);
+    assert_eq!(serving.tier.parked_count(), 0);
+    assert_eq!(serving.cache.pool_stats().live_bytes, 0);
+}
+
+#[test]
 fn park_resume_rebuilds_effective_cache() {
     if !have_artifacts() {
         return;
@@ -186,6 +309,7 @@ fn park_resume_rebuilds_effective_cache() {
         max_batch: 1,
         seed: 9,
         per_step_reconstruct: false,
+        cache_budget: None,
     };
     let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
     // build a cached sequence directly through the public cache handle
@@ -198,19 +322,44 @@ fn park_resume_rebuilds_effective_cache() {
         let kr: Vec<f32> = (0..l * kvd).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         serving.cache.append_token(id, &kl, &kl, &kr, &kr).unwrap();
     }
-    let mut tier = kvcar::kvcache::tier::HostTier::new();
-    let park_cost = serving.park_sequence(id, &mut tier).unwrap();
-    assert!(tier.is_parked(id));
+    // snapshot the compressed store before the tier round-trip
+    let mut before = Vec::new();
+    for layer in 0..spec.n_layer {
+        for side in [kvcar::kvcache::Side::K, kvcar::kvcache::Side::V] {
+            before.push(format!(
+                "{:?}",
+                serving.cache.stored_rows(id, layer, side).unwrap()
+            ));
+        }
+    }
+    let device_bytes = serving.cache.seq_stored_bytes(id);
+    let park_cost = serving.park_sequence(id).unwrap();
+    assert!(serving.tier.is_parked(id));
     assert!(park_cost > std::time::Duration::ZERO);
     assert_eq!(serving.cache.decoded_upto(id), Some(0)); // watermark invalidated
+    // the spill is a real move: device blocks freed, host holds the bytes
+    assert_eq!(serving.cache.seq_stored_bytes(id), 0);
+    assert!(serving.tier.parked_bytes(id).unwrap() > 0);
     // double-park must be rejected, not silently double-counted
-    assert!(serving.park_sequence(id, &mut tier).is_err());
-    let resume_cost = serving.resume_sequence(id, &mut tier).unwrap();
-    assert!(!tier.is_parked(id));
+    assert!(serving.park_sequence(id).is_err());
+    let resume_cost = serving.resume_sequence(id).unwrap();
+    assert!(!serving.tier.is_parked(id));
     assert!(resume_cost > std::time::Duration::ZERO);
     // resume rebuilt the effective cache in full: watermark back at len
     assert_eq!(serving.cache.decoded_upto(id), Some(n));
-    assert!(serving.resume_sequence(id, &mut tier).is_err()); // not parked
+    assert!(serving.resume_sequence(id).is_err()); // not parked
+    // the restored compressed store is bit-identical
+    assert_eq!(serving.cache.seq_stored_bytes(id), device_bytes);
+    for (i, (layer, side)) in (0..spec.n_layer)
+        .flat_map(|l| [kvcar::kvcache::Side::K, kvcar::kvcache::Side::V].map(|s| (l, s)))
+        .enumerate()
+    {
+        assert_eq!(
+            format!("{:?}", serving.cache.stored_rows(id, layer, side).unwrap()),
+            before[i],
+            "stream ({layer}, {side:?}) diverges after the tier round-trip"
+        );
+    }
 }
 
 #[test]
@@ -232,6 +381,7 @@ fn server_thread_front_end() {
             max_batch: 4,
             seed: 4,
             per_step_reconstruct: false,
+            cache_budget: None,
         },
     )
     .unwrap();
