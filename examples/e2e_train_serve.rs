@@ -134,11 +134,8 @@ fn main() -> Result<()> {
         }),
     ] {
         let cfg = ServeConfig {
-            plan: plan.clone(),
             max_batch: 8,
-            seed: 0,
-            per_step_reconstruct: false,
-            cache_budget: None,
+            ..ServeConfig::new(plan.clone())
         };
         let mut serving = ServingEngine::new(&mut engine, MODEL, cfg)?;
         overlay(&mut serving.store, &trained);

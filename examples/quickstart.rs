@@ -55,11 +55,8 @@ fn main() -> anyhow::Result<()> {
         plan_savings(&spec, &plan) * 100.0
     );
     let cfg = ServeConfig {
-        plan,
         max_batch: 4,
-        seed: 0,
-        per_step_reconstruct: false,
-        cache_budget: None,
+        ..ServeConfig::new(plan)
     };
     let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg)?;
     serving.store = merge_params(serving.store, store);

@@ -48,11 +48,9 @@ fn main() -> Result<()> {
             artifacts_dir(),
             MODEL.into(),
             ServeConfig {
-                plan,
                 max_batch: 8,
                 seed: 9,
-                per_step_reconstruct: false,
-                cache_budget: None,
+                ..ServeConfig::new(plan)
             },
         )?;
         let handle = server.handle();

@@ -8,12 +8,17 @@
 //! perf trajectory — in particular the faithful-reconstruct round mean,
 //! the path the incremental effective-cache refactor targets — is
 //! tracked across PRs.  When a previous file exists its numbers are
-//! reported as deltas before being replaced.
+//! reported as deltas before being replaced.  Each case also reports
+//! `staged_bytes_per_round` (the k/v staging volume the store-resident
+//! effective cache shrinks ~S×; the `staging` section holds the
+//! resident-vs-copy ratio) and the `f16_raw` section the bytes/accuracy
+//! delta of the f16 raw-row default against f32.
 //!
 //! Skips (exit 0, file untouched) when artifacts are missing.
 
 use kvcar::coordinator::{GenRequest, ServeConfig, ServingEngine};
 use kvcar::data::corpus;
+use kvcar::kvcache::Format;
 use kvcar::model::memory::CompressionPlan;
 use kvcar::model::ModelSpec;
 use kvcar::runtime::{artifacts_dir, Engine};
@@ -26,35 +31,54 @@ struct CaseResult {
     label: String,
     batch: usize,
     faithful: bool,
+    resident: bool,
+    raw_format: &'static str,
     mean_ms: f64,
     p99_ms: f64,
     tok_s: f64,
+    /// steady-path k/v staging bytes per decode round (the quantity the
+    /// store-resident effective cache shrinks from O(B·L·S·kvd) to
+    /// O(B·L·kvd); regressions show up here before they show in latency)
+    staged_bytes_per_round: f64,
+    /// one-off slot-transition bytes over the whole run (fills + zeroing)
+    slot_rebuild_bytes: u64,
+    /// peak compressed device-cache bytes (raw-format comparisons)
+    peak_cache_bytes: usize,
+    /// generated tokens per request (accuracy comparisons across formats)
+    outputs: Vec<Vec<u8>>,
+}
+
+struct CaseCfg {
+    batch: usize,
+    faithful: bool,
+    resident: bool,
+    raw: Format,
 }
 
 fn run_case(
     engine: &mut Engine,
     label: &str,
     plan: CompressionPlan,
-    batch: usize,
-    faithful: bool,
+    c: CaseCfg,
     rounds: usize,
 ) -> CaseResult {
     let cfg = ServeConfig {
-        plan,
-        max_batch: batch,
+        max_batch: c.batch,
         seed: 3,
-        per_step_reconstruct: faithful,
-        cache_budget: None,
+        per_step_reconstruct: c.faithful,
+        resident_cache: c.resident,
+        raw_format: c.raw,
+        ..ServeConfig::new(plan)
     };
     let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
     let mut prompts = corpus::wiki(5);
     // warmup: pay XLA compilation outside the measured window
-    let warm: Vec<GenRequest> = (0..batch)
+    let warm: Vec<GenRequest> = (0..c.batch)
         .map(|i| GenRequest::greedy(i as u64, &prompts.tokens(8), 2))
         .collect();
     serving.run(warm).unwrap();
     serving.metrics = Default::default();
-    let reqs: Vec<GenRequest> = (0..batch)
+    let reqs: Vec<GenRequest> = (0..c.batch)
         .map(|i| GenRequest::greedy(i as u64, &prompts.tokens(16), rounds))
         .collect();
     let t0 = std::time::Instant::now();
@@ -64,20 +88,47 @@ fn run_case(
     let per_round = serving.metrics.decode_step_latency.mean_ms();
     let p99 = serving.metrics.decode_step_latency.percentile_ms(99.0);
     let tok_s = tokens as f64 / wall.as_secs_f64();
+    let staged = serving.metrics.staged_kv_bytes as f64
+        / serving.metrics.decode_rounds.max(1) as f64;
     println!(
-        "bench decode_hotpath/{label:<36} round mean={:>10} p99={:>10}  {:>8.1} tok/s (b={batch})",
+        "bench decode_hotpath/{label:<36} round mean={:>10} p99={:>10}  {:>8.1} tok/s (b={})  staged {:.1} KiB/round",
         fmt_ns(per_round * 1e6),
         fmt_ns(p99 * 1e6),
         tok_s,
+        c.batch,
+        staged / 1024.0,
     );
     CaseResult {
         label: label.to_string(),
-        batch,
-        faithful,
+        batch: c.batch,
+        faithful: c.faithful,
+        resident: c.resident,
+        raw_format: match c.raw {
+            Format::F32 => "f32",
+            Format::F16 => "f16",
+            Format::Int8 => "int8",
+        },
         mean_ms: per_round,
         p99_ms: p99,
         tok_s,
+        staged_bytes_per_round: staged,
+        slot_rebuild_bytes: serving.metrics.slot_rebuild_bytes,
+        peak_cache_bytes: serving.cache.pool_stats().peak_live_bytes,
+        outputs: out.into_iter().map(|r| r.output).collect(),
     }
+}
+
+/// Position-wise token agreement between two runs of the same workload.
+fn token_agreement(a: &[Vec<u8>], b: &[Vec<u8>]) -> f64 {
+    let (mut same, mut total) = (0usize, 0usize);
+    for (x, y) in a.iter().zip(b) {
+        total += x.len().max(y.len());
+        same += x.iter().zip(y).filter(|(p, q)| p == q).count();
+    }
+    if total == 0 {
+        return 1.0;
+    }
+    same as f64 / total as f64
 }
 
 fn json_path() -> String {
@@ -109,7 +160,14 @@ fn report_deltas(prev: &Json, cases: &[CaseResult]) {
     }
 }
 
-fn write_json(cases: &[CaseResult], prefill_mean_ms: f64, prefill_p99_ms: f64, rounds: usize) {
+fn write_json(
+    cases: &[CaseResult],
+    staging: Json,
+    f16_raw: Json,
+    prefill_mean_ms: f64,
+    prefill_p99_ms: f64,
+    rounds: usize,
+) {
     let path = json_path();
     match std::fs::read_to_string(&path) {
         Ok(text) => match Json::parse(&text) {
@@ -125,7 +183,7 @@ fn write_json(cases: &[CaseResult], prefill_mean_ms: f64, prefill_p99_ms: f64, r
         ),
     }
     let j = json::obj(vec![
-        ("version", json::num(1.0)),
+        ("version", json::num(2.0)),
         ("bench", json::s("decode_hotpath")),
         ("model", json::s(MODEL)),
         ("rounds", json::num(rounds as f64)),
@@ -136,12 +194,18 @@ fn write_json(cases: &[CaseResult], prefill_mean_ms: f64, prefill_p99_ms: f64, r
                     ("label", json::s(&c.label)),
                     ("batch", json::num(c.batch as f64)),
                     ("faithful", Json::Bool(c.faithful)),
+                    ("resident", Json::Bool(c.resident)),
+                    ("raw_format", json::s(c.raw_format)),
                     ("round_mean_ms", json::num(c.mean_ms)),
                     ("round_p99_ms", json::num(c.p99_ms)),
                     ("tok_per_s", json::num(c.tok_s)),
+                    ("staged_bytes_per_round", json::num(c.staged_bytes_per_round)),
+                    ("slot_rebuild_bytes", json::num(c.slot_rebuild_bytes as f64)),
                 ])
             })),
         ),
+        ("staging", staging),
+        ("f16_raw", f16_raw),
         (
             "prefill_64tok",
             json::obj(vec![
@@ -172,29 +236,102 @@ fn main() {
     let none = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
     let ae = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
     let aeq = CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant();
+    // serving defaults (store-resident staging, f16 raw rows)
+    let def = |batch, faithful| CaseCfg {
+        batch,
+        faithful,
+        resident: true,
+        raw: Format::F16,
+    };
 
     let mut cases = Vec::new();
     for b in [1usize, 8] {
-        cases.push(run_case(&mut engine, &format!("baseline/b{b}"), none.clone(), b, false, rounds));
-        cases.push(run_case(&mut engine, &format!("ae_all/b{b}"), ae.clone(), b, false, rounds));
-        cases.push(run_case(&mut engine, &format!("ae_int8/b{b}"), aeq.clone(), b, false, rounds));
+        cases.push(run_case(&mut engine, &format!("baseline/b{b}"), none.clone(), def(b, false), rounds));
+        cases.push(run_case(&mut engine, &format!("ae_all/b{b}"), ae.clone(), def(b, false), rounds));
+        cases.push(run_case(&mut engine, &format!("ae_int8/b{b}"), aeq.clone(), def(b, false), rounds));
     }
     // faithful per-step reconstruction — the decode-on-retrieval dataflow
     // the incremental effective-cache path optimizes; tracked across PRs.
     // b8 exercises the batch-first path: one {m}_decode_kv_bt launch per
     // round instead of one decode_kv_t launch per live sequence
-    cases.push(run_case(&mut engine, "ae_all_faithful/b1", ae.clone(), 1, true, rounds));
-    cases.push(run_case(&mut engine, "ae_int8_faithful/b1", aeq.clone(), 1, true, rounds));
-    cases.push(run_case(&mut engine, "ae_all_faithful/b8", ae.clone(), 8, true, rounds));
-    cases.push(run_case(&mut engine, "ae_int8_faithful/b8", aeq.clone(), 8, true, rounds));
+    cases.push(run_case(&mut engine, "ae_all_faithful/b1", ae.clone(), def(1, true), rounds));
+    cases.push(run_case(&mut engine, "ae_int8_faithful/b1", aeq.clone(), def(1, true), rounds));
+    cases.push(run_case(&mut engine, "ae_all_faithful/b8", ae.clone(), def(8, true), rounds));
+    cases.push(run_case(&mut engine, "ae_int8_faithful/b8", aeq.clone(), def(8, true), rounds));
+
+    // resident vs legacy copy staging, same workload: the staged-bytes
+    // ratio is the win of the store-resident effective cache (≈ S×)
+    cases.push(run_case(
+        &mut engine,
+        "ae_all_faithful_copy/b8",
+        ae.clone(),
+        CaseCfg { batch: 8, faithful: true, resident: false, raw: Format::F16 },
+        rounds,
+    ));
+    let staging = {
+        let res = cases.iter().find(|c| c.label == "ae_all_faithful/b8").unwrap();
+        let copy = cases.iter().find(|c| c.label == "ae_all_faithful_copy/b8").unwrap();
+        let ratio = if res.staged_bytes_per_round > 0.0 {
+            copy.staged_bytes_per_round / res.staged_bytes_per_round
+        } else {
+            0.0
+        };
+        println!(
+            "bench decode_hotpath/staging: resident {:.1} KiB/round vs copy {:.1} KiB/round ({ratio:.0}x fewer staged bytes)",
+            res.staged_bytes_per_round / 1024.0,
+            copy.staged_bytes_per_round / 1024.0,
+        );
+        json::obj(vec![
+            ("resident_bytes_per_round", json::num(res.staged_bytes_per_round)),
+            ("copy_bytes_per_round", json::num(copy.staged_bytes_per_round)),
+            ("copy_over_resident_ratio", json::num(ratio)),
+        ])
+    };
+
+    // f16 vs f32 raw rows under faithful reconstruction of an
+    // uncompressed plan (every stream stores raw rows, so the format
+    // delta is maximal): bytes halve, accuracy is the agreement rate
+    cases.push(run_case(
+        &mut engine,
+        "baseline_faithful_f16/b4",
+        none.clone(),
+        CaseCfg { batch: 4, faithful: true, resident: true, raw: Format::F16 },
+        rounds,
+    ));
+    cases.push(run_case(
+        &mut engine,
+        "baseline_faithful_f32/b4",
+        none.clone(),
+        CaseCfg { batch: 4, faithful: true, resident: true, raw: Format::F32 },
+        rounds,
+    ));
+    let f16_raw = {
+        let h = cases.iter().find(|c| c.label == "baseline_faithful_f16/b4").unwrap();
+        let f = cases.iter().find(|c| c.label == "baseline_faithful_f32/b4").unwrap();
+        let bytes_ratio = if f.peak_cache_bytes > 0 {
+            h.peak_cache_bytes as f64 / f.peak_cache_bytes as f64
+        } else {
+            0.0
+        };
+        let agreement = token_agreement(&h.outputs, &f.outputs);
+        println!(
+            "bench decode_hotpath/f16_raw: {:.2}x stored bytes vs f32, token agreement {:.1}%",
+            bytes_ratio,
+            agreement * 100.0,
+        );
+        json::obj(vec![
+            ("peak_cache_bytes_f16", json::num(h.peak_cache_bytes as f64)),
+            ("peak_cache_bytes_f32", json::num(f.peak_cache_bytes as f64)),
+            ("bytes_ratio", json::num(bytes_ratio)),
+            ("token_agreement", json::num(agreement)),
+        ])
+    };
 
     // prefill latency
     let cfg = ServeConfig {
-        plan: ae,
         max_batch: 1,
         seed: 1,
-        per_step_reconstruct: false,
-        cache_budget: None,
+        ..ServeConfig::new(ae)
     };
     let mut serving = ServingEngine::new(&mut engine, MODEL, cfg).unwrap();
     let mut prompts = corpus::wiki(6);
@@ -209,5 +346,5 @@ fn main() {
         fmt_ns(prefill_mean * 1e6),
         fmt_ns(prefill_p99 * 1e6),
     );
-    write_json(&cases, prefill_mean, prefill_p99, rounds);
+    write_json(&cases, staging, f16_raw, prefill_mean, prefill_p99, rounds);
 }

@@ -9,12 +9,18 @@
 //!
 //! Under memory pressure the same module plans the park/resume side:
 //! [`plan_parking`] picks which live sequences to spill to the host
-//! tier (lowest priority first, never all of them) and [`plan_resume`]
-//! picks which parked sequences fit again (oldest first).  The
-//! scheduler executes those decisions through
-//! `ServingEngine::park_sequence` / `resume_sequence`, which move the
-//! sequences' actual encoded bytes (`CacheManager::
+//! tier (cost-aware: largest stored bytes per remaining token first,
+//! never all of them) and [`plan_resume`] picks which parked sequences
+//! fit again (oldest first).  The scheduler executes those decisions
+//! through `ServingEngine::park_sequence` / `resume_sequence`, which
+//! move the sequences' actual encoded bytes (`CacheManager::
 //! extract_sequence_bytes`) and rebuild on resume via `rebuild_full`.
+//!
+//! [`plan_slots`] is the slot side of the store-resident effective
+//! cache (`coordinator::resident`): a stable sequence→decode-slot
+//! assignment, so admissions and retirements never shuffle unrelated
+//! sequences into different slots (each move costs a full slot
+//! rebuild).
 
 use crate::model::memory::{kv_bytes_per_token, CompressionPlan};
 use crate::model::ModelSpec;
@@ -91,32 +97,89 @@ pub fn plan_round(
 /// Worst-case device-cache growth of one live sequence across one decode
 /// round: each of its stored streams may start a fresh block when the
 /// appended token crosses a block boundary.
+///
+/// Priced by the Eq. 3 model (`spec.bytes_per_el` for every non-int8
+/// stream).  When the runtime stores raw rows in a narrower format
+/// (f16), prefer `CacheConfig::bytes_per_token() * block_size` — the
+/// scheduler does — so headroom stays in the same units as the measured
+/// `seq_stored_bytes` it is compared against.  Admission projections
+/// (`request_cache_bytes`) intentionally keep the conservative f32
+/// model: over-reserving at admit time is safe, under-reserving is not.
 pub fn round_headroom_bytes(spec: &ModelSpec, plan: &CompressionPlan, block_size: usize) -> usize {
     kv_bytes_per_token(spec, plan) * block_size
 }
 
 /// Which live sequences to park so the projected next round fits
-/// `budget`.
+/// `budget` — **cost-aware** victim selection.
 ///
-/// `live` is `(id, stored_bytes)` in admission order (oldest / highest
-/// priority first); `headroom` is the per-sequence worst-case growth of
-/// one round ([`round_headroom_bytes`]).  Victims are chosen lowest
-/// priority first (latest admitted), and the oldest sequence is never
-/// parked — at least one sequence must keep decoding so rounds complete
-/// and memory eventually frees.  Returns victim ids, park order.
-pub fn plan_parking(budget: usize, headroom: usize, live: &[(u64, usize)]) -> Vec<u64> {
+/// `live` is `(id, stored_bytes, remaining_tokens)` in admission order
+/// (oldest first); `headroom` is the per-sequence worst-case growth of
+/// one round ([`round_headroom_bytes`]).  Victims are chosen by
+/// descending *stored bytes per remaining token*: parking a sequence
+/// frees its bytes for the rest of its lifetime, so the best victim is
+/// the one paying the most device memory per token of work it still
+/// owes (a near-finished hog parks before a fresh cheap sequence).
+/// Ties park latest-admitted first (the old LIFO policy, so uniform
+/// workloads behave as before).  At least one sequence always stays
+/// live — rounds must keep completing so memory eventually frees.
+/// Returns victim ids in park order.
+pub fn plan_parking(budget: usize, headroom: usize, live: &[(u64, usize, usize)]) -> Vec<u64> {
     let mut total: usize = live.iter().map(|l| l.1).sum();
     let mut count = live.len();
+    // victim order: largest bytes-per-remaining-token first; ties latest
+    // admitted first (input is admission-ordered, so higher index =
+    // later admission)
+    let mut order: Vec<usize> = (0..live.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = live[a].1 as f64 / live[a].2.max(1) as f64;
+        let rb = live[b].1 as f64 / live[b].2.max(1) as f64;
+        rb.partial_cmp(&ra)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.cmp(&a))
+    });
     let mut park = Vec::new();
-    for &(id, bytes) in live.iter().skip(1).rev() {
-        if total + count * headroom <= budget {
+    for &i in &order {
+        if count <= 1 || total + count * headroom <= budget {
             break;
         }
-        park.push(id);
-        total -= bytes;
+        park.push(live[i].0);
+        total -= live[i].1;
         count -= 1;
     }
     park
+}
+
+/// Slot-stable assignment for the store-resident effective cache: map
+/// `live` sequences onto `b` decode slots, disturbing as few existing
+/// assignments as possible.
+///
+/// `current` is the present slot→sequence map (any length; slots past
+/// `b` are dropped).  Sequences keep their slot whenever it is still
+/// inside `[0, b)`; remaining live sequences take the lowest free slots
+/// in the order given.  Admissions and retirements therefore never move
+/// an unrelated sequence — each move would force a full slot rebuild
+/// (`O(L·S·kvd)` staged bytes), so stability is the point.  Requires
+/// `live.len() <= b`; sequences in `current` but not in `live` are
+/// dropped (their slot frees up).
+pub fn plan_slots(current: &[Option<u64>], live: &[u64], b: usize) -> Vec<Option<u64>> {
+    debug_assert!(live.len() <= b, "more live sequences than slots");
+    let mut next: Vec<Option<u64>> = vec![None; b];
+    for (slot, id) in current.iter().enumerate().take(b) {
+        if let Some(id) = id {
+            if live.contains(id) {
+                next[slot] = Some(*id);
+            }
+        }
+    }
+    for &id in live {
+        if next.iter().any(|x| *x == Some(id)) {
+            continue;
+        }
+        if let Some(slot) = (0..b).find(|&s| next[s].is_none()) {
+            next[slot] = Some(id);
+        }
+    }
+    next
 }
 
 /// Which parked sequences fit back on the device: oldest first, admitted
@@ -203,16 +266,61 @@ mod tests {
 
     #[test]
     fn parking_picks_lowest_priority_and_keeps_one_live() {
-        // three live sequences, admission order 1 < 2 < 3; only ~one fits
-        let live = vec![(1u64, 100usize), (2, 100), (3, 100)];
+        // uniform cost rates: ties fall back to LIFO, admission order
+        // 1 < 2 < 3; only ~one fits
+        let live = vec![(1u64, 100usize, 5usize), (2, 100, 5), (3, 100, 5)];
         let park = plan_parking(150, 10, &live);
-        assert_eq!(park, vec![3, 2], "latest admitted park first");
-        // budget below even one sequence: everything but the oldest parks
+        assert_eq!(park, vec![3, 2], "equal cost rates park latest first");
+        // budget below even one sequence: everything but one parks
         let park = plan_parking(10, 10, &live);
         assert_eq!(park, vec![3, 2]);
         // plenty of budget: nobody parks
         assert!(plan_parking(1 << 20, 10, &live).is_empty());
-        assert!(plan_parking(0, 0, &[(7, 500)]).is_empty(), "sole sequence never parks");
+        assert!(
+            plan_parking(0, 0, &[(7, 500, 1)]).is_empty(),
+            "sole sequence never parks"
+        );
+    }
+
+    #[test]
+    fn parking_prefers_largest_stored_bytes_per_remaining_token() {
+        // cost rates: id 1 = 100/1 = 100, id 2 = 100/10 = 10,
+        // id 3 = 90/2 = 45 — victims must come in rate order (1, then
+        // 3), keeping the cheapest-to-keep sequence (2) live even
+        // though it was admitted after 1
+        let live = vec![(1u64, 100usize, 1usize), (2, 100, 10), (3, 90, 2)];
+        let park = plan_parking(50, 0, &live);
+        assert_eq!(park, vec![1, 3], "must evict by bytes-per-remaining-token");
+        // a budget one park satisfies stops after the worst offender
+        let park = plan_parking(195, 0, &live);
+        assert_eq!(park, vec![1]);
+        // zero remaining tokens is clamped, not divided by
+        let live = vec![(1u64, 10usize, 0usize), (2, 500, 1)];
+        let park = plan_parking(15, 0, &live);
+        assert_eq!(park, vec![2], "rate uses max(remaining, 1)");
+    }
+
+    #[test]
+    fn slot_plan_is_stable_across_churn() {
+        // three held slots; seq 2 retires: nobody else moves
+        let cur = vec![Some(1u64), Some(2), Some(3), None];
+        let next = plan_slots(&cur, &[1, 3], 4);
+        assert_eq!(next, vec![Some(1), None, Some(3), None]);
+        // a new admission takes the lowest free slot, others unmoved
+        let next = plan_slots(&next, &[1, 3, 9], 4);
+        assert_eq!(next, vec![Some(1), Some(9), Some(3), None]);
+        // shrinking b drops out-of-range assignments; survivors that
+        // fit keep their slot, displaced ones take the free slots
+        let next = plan_slots(&[Some(1), Some(9), Some(3), None], &[1, 3], 2);
+        assert_eq!(next, vec![Some(1), Some(3)]);
+        // growing b moves nobody
+        let next = plan_slots(&[Some(1), Some(3)], &[1, 3], 4);
+        assert_eq!(next, vec![Some(1), Some(3), None, None]);
+        // from empty: live order fills ascending slots
+        assert_eq!(
+            plan_slots(&[], &[7, 8], 3),
+            vec![Some(7), Some(8), None]
+        );
     }
 
     #[test]
@@ -230,22 +338,32 @@ mod tests {
     fn park_resume_plans_compose() {
         check(50, |rng| {
             let n = rng.range(1, 10);
-            let live: Vec<(u64, usize)> =
-                (0..n).map(|i| (i as u64, rng.range(1, 5000))).collect();
+            let live: Vec<(u64, usize, usize)> = (0..n)
+                .map(|i| (i as u64, rng.range(1, 5000), rng.range(0, 60)))
+                .collect();
             let budget = rng.range(1, 20_000);
             let headroom = rng.range(0, 300);
             let park = plan_parking(budget, headroom, &live);
             prop_assert!(park.len() < live.len(), "must keep one sequence live");
-            // victims come from the tail of the admission order
             let ids: Vec<u64> = live.iter().map(|l| l.0).collect();
             let keep = live.len() - park.len();
-            for (i, id) in park.iter().enumerate() {
+            // victims come in non-increasing bytes-per-remaining-token
+            // order (ties resolved latest-admitted-first)
+            let rate = |id: &u64| {
+                let l = &live[ids.iter().position(|x| x == id).unwrap()];
+                l.1 as f64 / l.2.max(1) as f64
+            };
+            for w in park.windows(2) {
                 prop_assert!(
-                    *id == ids[live.len() - 1 - i],
-                    "park order must be strictly latest-first"
+                    rate(&w[0]) >= rate(&w[1]),
+                    "park order must be worst cost rate first"
                 );
             }
-            let kept_bytes: usize = live[..keep].iter().map(|l| l.1).sum();
+            let kept_bytes: usize = live
+                .iter()
+                .filter(|l| !park.contains(&l.0))
+                .map(|l| l.1)
+                .sum();
             // after parking, either we fit or nothing more could be parked
             prop_assert!(
                 kept_bytes + keep * headroom <= budget || keep == 1,
@@ -255,7 +373,10 @@ mod tests {
             let parked: Vec<(u64, usize)> = park
                 .iter()
                 .rev()
-                .map(|id| live[ids.iter().position(|x| x == id).unwrap()])
+                .map(|id| {
+                    let l = &live[ids.iter().position(|x| x == id).unwrap()];
+                    (l.0, l.1)
+                })
                 .collect();
             let resume = plan_resume(budget, headroom, kept_bytes, keep, &parked);
             let resumed_bytes: usize =

@@ -270,6 +270,32 @@ impl EffectiveCache {
         cache.mark_decoded(id, pos + 1);
     }
 
+    /// Write-through-slot path: copy rows `[from, to)` of every layer of
+    /// one side into `dst`, a `[L, max_seq, kvd]` slot view (the
+    /// sequence's region inside the store-resident `k_cache`/`v_cache`
+    /// staging — see `coordinator::resident::SlotArena`).  This is how
+    /// newly materialized effective rows reach the decode-step inputs
+    /// without the old per-round full-buffer copy: cost is
+    /// O(layers × (to - from) × kvd), independent of sequence length.
+    /// Returns the bytes copied.
+    pub fn sync_rows_into(&self, side: Side, dst: &mut [f32], from: usize, to: usize) -> usize {
+        let (s, kvd) = (self.max_seq, self.kv_dim);
+        debug_assert_eq!(dst.len(), self.n_layer * s * kvd);
+        debug_assert!(from <= to && to <= s);
+        if from >= to {
+            return 0;
+        }
+        let src = match side {
+            Side::K => &self.k,
+            Side::V => &self.v,
+        };
+        for layer in 0..self.n_layer {
+            let (a, b) = (layer * s * kvd + from * kvd, layer * s * kvd + to * kvd);
+            dst[a..b].copy_from_slice(&src[a..b]);
+        }
+        self.n_layer * (to - from) * kvd * 4
+    }
+
     /// Materialize rows past the watermark from the compressed store:
     /// O(layers × new-token rows), independent of sequence length.
     /// Returns the number of rows reconstructed.

@@ -67,6 +67,27 @@ pub struct ServeMetrics {
     pub auto_parks: u64,
     /// parked sequences brought back once memory freed
     pub auto_resumes: u64,
+    /// k/v cache bytes staged into the decode-step inputs on the steady
+    /// path: per-row syncs under the store-resident effective cache
+    /// (O(B·L·kvd) per round), or the full per-round buffer copies under
+    /// the legacy copy path (O(B·L·S·kvd) per round) — the ratio between
+    /// the two is the win the resident refactor is measured by.  This
+    /// counts the **host staging memcpy** only: the engine's
+    /// version-keyed device cache still re-uploads the whole tensor when
+    /// its version bumps, so the host→device transfer is unchanged until
+    /// the artifact side grows device residency / delta uploads (the
+    /// ROADMAP's donated-buffers item)
+    pub staged_kv_bytes: u64,
+    /// bytes written by slot transitions only: full slot fills after
+    /// (re)assignment / capacity-rung switches plus one-time zeroing of
+    /// vacated slots — amortized cost, not per-round cost
+    pub slot_rebuild_bytes: u64,
+    /// slots (re)built from scratch (admission, park/resume, rung switch)
+    pub slot_rebuilds: u64,
+    /// capacity-rung switches: the resident `[B, L, S, kvd]` regions were
+    /// reallocated for a different compiled batch size, invalidating
+    /// every slot
+    pub capacity_switches: u64,
     /// wall-clock time of the whole run
     pub wall: Duration,
 }
@@ -118,6 +139,15 @@ impl ServeMetrics {
             println!(
                 "  memory pressure: {} parks / {} resumes through the host tier",
                 self.auto_parks, self.auto_resumes,
+            );
+        }
+        if self.staged_kv_bytes + self.slot_rebuild_bytes > 0 {
+            println!(
+                "  kv staging: {:.1} KiB/round steady + {:.1} KiB in {} slot rebuilds ({} rung switches)",
+                self.staged_kv_bytes as f64 / self.decode_rounds.max(1) as f64 / 1024.0,
+                self.slot_rebuild_bytes as f64 / 1024.0,
+                self.slot_rebuilds,
+                self.capacity_switches,
             );
         }
     }

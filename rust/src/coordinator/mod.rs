@@ -1,16 +1,20 @@
 //! L3 serving coordinator: request types, admission/batch planning
 //! (including park/resume under memory pressure), the prefill/decode
-//! scheduler with batch-first faithful reconstruction, and metrics.
+//! scheduler with batch-first faithful reconstruction and store-resident
+//! decode staging (`resident`), and metrics.
 
 pub mod batcher;
 pub mod effective;
 pub mod metrics;
 pub mod request;
+pub mod resident;
 pub mod scheduler;
 pub mod trace;
 
 pub use effective::{
     BatchLatentDecoder, BatchedAdvance, BatchedStats, EffStats, EffectiveCache, LatentDecoder,
 };
+pub use metrics::ServeMetrics;
 pub use request::{GenRequest, GenResponse, Sampling};
+pub use resident::{stage_copy_round, SlotArena};
 pub use scheduler::{ServeConfig, ServingEngine};

@@ -1,0 +1,434 @@
+//! Store-resident effective KV cache — O(new rows) decode staging.
+//!
+//! Before this module, every decode round memcpy'd each live sequence's
+//! **entire** `[L, S, kvd]` effective cache into the `k_cache`/`v_cache`
+//! staging tensors (plus zero-fills of the dead slots): O(B·L·S·kvd)
+//! staged bytes per round, dominated by rows that had not changed since
+//! the previous round.  [`SlotArena`] instead keeps the slotted staging
+//! regions **resident in the [`Store`]** between rounds
+//! (`Store::resident_region` — allocation persists, contents persist,
+//! plain `insert_view` on the name panics instead of silently aliasing
+//! it) and maintains them as an incrementally synced mirror of each
+//! sequence's [`EffectiveCache`]:
+//!
+//! * **steady state** — per round only the rows past each sequence's
+//!   *sync watermark* are copied into its slot
+//!   (`EffectiveCache::sync_rows_into`): O(B·L·kvd) bytes, one row per
+//!   live sequence, independent of context length;
+//! * **slot transitions** — a slot is fully rebuilt (zero + copy rows
+//!   `[0, upto)`) only when its assignment changes: admission into a
+//!   previously-used slot, park/resume, retirement-then-reuse, or a
+//!   capacity-rung switch (the compiled decode batch `b` changed, which
+//!   reallocates the `[b, L, S, kvd]` regions and invalidates every
+//!   slot).  These are counted separately
+//!   (`ServeMetrics::slot_rebuild_bytes` / `slot_rebuilds` /
+//!   `capacity_switches`) because they are amortized costs, not
+//!   per-round costs;
+//! * **dead slots** — padding slots are zeroed **once per transition**
+//!   (a per-slot clean/dirty bit), not once per round.
+//!
+//! Slot assignment is stable (`batcher::plan_slots`): admissions and
+//! retirements never move an unrelated live sequence, since every move
+//! would cost a full O(L·S·kvd) rebuild.
+//!
+//! The legacy full-copy staging survives as [`stage_copy_round`]
+//! (selected by `ServeConfig::resident_cache = false`): it is the
+//! reference the resident path is asserted **bitwise identical** against
+//! (`tests/incremental_equivalence.rs` at the staged-tensor level,
+//! `tests/pipeline_integration.rs` at the logits level over real
+//! artifacts), and the baseline the staged-bytes ratio in
+//! `BENCH_decode_hotpath.json` is measured from.
+//!
+//! Invalidation rules (who calls what):
+//!
+//! | event                         | action                                   |
+//! |-------------------------------|------------------------------------------|
+//! | sequence retired              | `release` → slot freed, marked dirty     |
+//! | sequence parked (host tier)   | `release` → same                         |
+//! | sequence resumed              | nothing — next round assigns + rebuilds  |
+//! | compiled batch rung changed   | regions realloc'd, every slot rebuilt    |
+//! | region epoch changed          | same (allocation was replaced)           |
+
+use super::batcher::plan_slots;
+use super::effective::EffectiveCache;
+use super::metrics::ServeMetrics;
+use crate::kvcache::Side;
+use crate::runtime::Store;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Store name of the resident effective-K staging region.
+pub const K_CACHE: &str = "k_cache";
+/// Store name of the resident effective-V staging region.
+pub const V_CACHE: &str = "v_cache";
+
+/// What one slot needs this round (planned once, applied to both the K
+/// and the V region so the dirty/synced bookkeeping commits exactly
+/// once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotAction {
+    /// clean dead slot (already zero) or nothing pending
+    Keep,
+    /// vacated slot still holding a retired/parked sequence's rows:
+    /// write the zero padding once, then it is clean until reused
+    ZeroDead,
+    /// (re)assigned slot: zero (stale rows past `upto` must not leak)
+    /// and copy rows `[0, upto)` from the owning sequence's scratch
+    Rebuild {
+        /// owning sequence
+        id: u64,
+        /// rows materialized in the sequence's effective cache
+        upto: usize,
+    },
+    /// steady state: copy only rows `[from, upto)` — O(new rows)
+    Sync {
+        /// owning sequence
+        id: u64,
+        /// slot's sync watermark (rows `[0, from)` already mirrored)
+        from: usize,
+        /// rows materialized in the sequence's effective cache
+        upto: usize,
+    },
+}
+
+/// Owner of the slotted, store-resident `k_cache`/`v_cache` staging
+/// regions: slot assignment (stable), per-slot sync watermarks, and the
+/// clean/dirty padding bits.  One arena per serving engine; all byte
+/// movement is counted into [`ServeMetrics`].
+#[derive(Debug, Default)]
+pub struct SlotArena {
+    /// current capacity rung (compiled decode batch); 0 = uninitialized
+    b: usize,
+    /// elements of one slot: `L * S * kvd`
+    seq_elems: usize,
+    /// slot → owning sequence
+    assign: Vec<Option<u64>>,
+    /// slot holds stale rows (vacated or reassigned since last write)
+    dirty: Vec<bool>,
+    /// sequence → rows `[0, n)` of its slot that mirror its scratch
+    synced: HashMap<u64, usize>,
+    /// last-seen `(k, v)` region epochs: any change means the backing
+    /// allocations were replaced or re-registered after a lapse, so
+    /// every slot and watermark is invalid
+    epochs: (u64, u64),
+}
+
+impl SlotArena {
+    /// Empty arena; regions are registered on the first `stage_round`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Slot currently assigned to a sequence, if any.
+    pub fn slot_of(&self, id: u64) -> Option<usize> {
+        self.assign.iter().position(|x| *x == Some(id))
+    }
+
+    /// Current capacity rung (0 before the first round).
+    pub fn capacity(&self) -> usize {
+        self.b
+    }
+
+    /// Release a sequence's slot (retirement or park): the slot frees
+    /// up for reuse and is marked dirty, so the padding zero-fill is
+    /// paid once on the next round that includes it — not every round.
+    pub fn release(&mut self, id: u64) {
+        if let Some(slot) = self.slot_of(id) {
+            self.assign[slot] = None;
+            self.dirty[slot] = true;
+        }
+        self.synced.remove(&id);
+    }
+
+    /// Bring the resident regions up to date for one decode round.
+    ///
+    /// `live` is `(cache_id, rows_materialized)` for every sequence
+    /// taking a slot this round (`rows_materialized` = the cache
+    /// manager's `decoded_upto` watermark: rows `[0, n)` of the
+    /// sequence's [`EffectiveCache`] scratch are valid); `b` is the
+    /// compiled decode batch; `dims` is `(n_layer, max_seq, kv_dim)`.
+    ///
+    /// After this returns, the store's `k_cache`/`v_cache` tensors are
+    /// bitwise identical to what [`stage_copy_round`] would have
+    /// produced for the same per-slot contents, having moved only
+    /// O(new rows) bytes in steady state.
+    pub fn stage_round(
+        &mut self,
+        store: &mut Store,
+        live: &[(u64, usize)],
+        effs: &HashMap<u64, EffectiveCache>,
+        b: usize,
+        dims: (usize, usize, usize),
+        metrics: &mut ServeMetrics,
+    ) -> Result<()> {
+        let (l, s, kvd) = dims;
+        let seq_elems = l * s * kvd;
+        anyhow::ensure!(
+            live.len() <= b,
+            "{} live sequences exceed {b} decode slots",
+            live.len()
+        );
+        // open (or create) both regions up front so any reallocation —
+        // rung switch, first round, or an external release/re-register —
+        // surfaces as an epoch change *before* slot actions are planned
+        let mut fresh = [false; 2];
+        for (i, name) in [K_CACHE, V_CACHE].into_iter().enumerate() {
+            fresh[i] = store.resident_region(name, vec![b, l, s, kvd]).1;
+        }
+        let all_fresh = fresh[0] && fresh[1];
+        let epochs = (store.region_epoch(K_CACHE), store.region_epoch(V_CACHE));
+        // `fresh` is part of the condition because epochs are only
+        // unique within one Store: if the engine's store is swapped
+        // wholesale between rounds, the new store's epochs can collide
+        // with the recorded ones while the regions are brand new
+        if fresh[0] || fresh[1] || epochs != self.epochs || b != self.b
+            || seq_elems != self.seq_elems
+        {
+            // every slot and watermark is invalid: the regions were
+            // reallocated (rung switch — fresh, zeroed) or their
+            // protection lapsed (contents untrusted — mark dirty so
+            // stale rows are zeroed before reuse)
+            if self.b != 0 && (b != self.b || seq_elems != self.seq_elems) {
+                metrics.capacity_switches += 1;
+            }
+            self.b = b;
+            self.seq_elems = seq_elems;
+            self.assign = vec![None; b];
+            self.dirty = vec![!all_fresh; b];
+            self.synced.clear();
+            self.epochs = epochs;
+        }
+
+        // stable assignment: nobody moves unless they must
+        let ids: Vec<u64> = live.iter().map(|p| p.0).collect();
+        let next = plan_slots(&self.assign, &ids, b);
+        for slot in 0..b {
+            if self.assign[slot] != next[slot] {
+                if let Some(old) = self.assign[slot] {
+                    self.synced.remove(&old);
+                }
+                self.dirty[slot] = true;
+            }
+        }
+        self.assign = next;
+
+        // plan each slot once; apply identically to the K and V regions
+        let actions: Vec<SlotAction> = (0..b)
+            .map(|slot| match self.assign[slot] {
+                None if self.dirty[slot] => SlotAction::ZeroDead,
+                None => SlotAction::Keep,
+                Some(id) => {
+                    let upto = ids
+                        .iter()
+                        .position(|&x| x == id)
+                        .map(|i| live[i].1)
+                        .unwrap_or(0);
+                    match self.synced.get(&id) {
+                        // a watermark that ran backwards (external
+                        // reset_decoded) means rows past `upto` are
+                        // stale in the mirror: rebuild, never sync
+                        Some(&from) if !self.dirty[slot] && from <= upto => {
+                            SlotAction::Sync { id, from, upto }
+                        }
+                        _ => SlotAction::Rebuild { id, upto },
+                    }
+                }
+            })
+            .collect();
+        metrics.slot_rebuilds += actions
+            .iter()
+            .filter(|a| matches!(a, SlotAction::Rebuild { .. }))
+            .count() as u64;
+
+        for (i, (name, side)) in [(K_CACHE, Side::K), (V_CACHE, Side::V)]
+            .into_iter()
+            .enumerate()
+        {
+            // re-opened, not re-created: the probe above already sized
+            // both regions, so this cannot reallocate mid-round
+            let (region, _) = store.resident_region(name, vec![b, l, s, kvd]);
+            let region_fresh = fresh[i];
+            debug_assert_eq!(region.len(), b * seq_elems);
+            for (slot, act) in actions.iter().enumerate() {
+                let dst = &mut region[slot * seq_elems..(slot + 1) * seq_elems];
+                match *act {
+                    SlotAction::Keep => {}
+                    SlotAction::ZeroDead => {
+                        // a fresh region is already zeroed
+                        if !region_fresh {
+                            dst.fill(0.0);
+                            metrics.slot_rebuild_bytes += (seq_elems * 4) as u64;
+                        }
+                    }
+                    SlotAction::Rebuild { id, upto } => {
+                        if !region_fresh {
+                            dst.fill(0.0);
+                            metrics.slot_rebuild_bytes += (seq_elems * 4) as u64;
+                        }
+                        let eff = effs
+                            .get(&id)
+                            .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
+                        metrics.slot_rebuild_bytes +=
+                            eff.sync_rows_into(side, dst, 0, upto) as u64;
+                    }
+                    SlotAction::Sync { id, from, upto } => {
+                        let eff = effs
+                            .get(&id)
+                            .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
+                        metrics.staged_kv_bytes +=
+                            eff.sync_rows_into(side, dst, from, upto) as u64;
+                    }
+                }
+            }
+        }
+
+        // commit bookkeeping once, after both regions were written
+        for (slot, act) in actions.iter().enumerate() {
+            match *act {
+                SlotAction::Keep => {}
+                SlotAction::ZeroDead => self.dirty[slot] = false,
+                SlotAction::Rebuild { id, upto } | SlotAction::Sync { id, upto, .. } => {
+                    self.dirty[slot] = false;
+                    self.synced.insert(id, upto);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The legacy per-round copy staging — every live sequence's whole
+/// `[L, S, kvd]` effective cache memcpy'd into `Store::insert_view`
+/// staging plus zero-fills of the dead slots, O(B·L·S·kvd) bytes per
+/// round.  Kept as the reference implementation the resident path is
+/// asserted bitwise-identical against, and as the measured baseline for
+/// the staged-bytes ratio (`ServeConfig::resident_cache = false`).
+/// Sequence `i` of `ids` occupies slot `i`.
+pub fn stage_copy_round(
+    store: &mut Store,
+    effs: &HashMap<u64, EffectiveCache>,
+    ids: &[u64],
+    b: usize,
+    dims: (usize, usize, usize),
+    metrics: &mut ServeMetrics,
+) -> Result<()> {
+    let (l, s, kvd) = dims;
+    let seq_elems = l * s * kvd;
+    let rows = ids.len().min(b);
+    for (name, side) in [(K_CACHE, Side::K), (V_CACHE, Side::V)] {
+        let cache = store.insert_view(name, vec![b, l, s, kvd]);
+        for (slot, id) in ids.iter().take(rows).enumerate() {
+            let eff = effs
+                .get(id)
+                .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
+            let src = match side {
+                Side::K => &eff.k,
+                Side::V => &eff.v,
+            };
+            cache[slot * seq_elems..(slot + 1) * seq_elems].copy_from_slice(src);
+        }
+        for slot in rows..b {
+            cache[slot * seq_elems..(slot + 1) * seq_elems].fill(0.0);
+        }
+    }
+    // live copies + dead-slot zero fills: the full tensor pair moves
+    metrics.staged_kv_bytes += 2 * (b * seq_elems * 4) as u64;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Arch, ModelSpec};
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "arena".into(),
+            arch: Arch::Gpt2,
+            vocab: 256,
+            n_layer: 2,
+            d_model: 16,
+            n_head: 2,
+            n_kv_head: 2,
+            d_head: 4,
+            ffn_dim: 32,
+            max_seq: 8,
+            ae_hidden: 8,
+            ae_latent: 4,
+            bytes_per_el: 4,
+        }
+    }
+
+    fn dims(spec: &ModelSpec) -> (usize, usize, usize) {
+        (spec.n_layer, spec.max_seq, spec.kv_dim())
+    }
+
+    #[test]
+    fn release_frees_slot_and_marks_dirty_once() {
+        let spec = tiny_spec();
+        let (l, s, kvd) = dims(&spec);
+        let mut store = Store::new();
+        let mut m = ServeMetrics::default();
+        let mut arena = SlotArena::new();
+        let mut effs = HashMap::new();
+        let mut eff = EffectiveCache::new(&spec);
+        eff.k.fill(1.0);
+        eff.v.fill(2.0);
+        effs.insert(7u64, eff);
+        // round 1: assign + rebuild into a fresh region (no zero cost)
+        arena
+            .stage_round(&mut store, &[(7, 3)], &effs, 2, (l, s, kvd), &mut m)
+            .unwrap();
+        assert_eq!(arena.slot_of(7), Some(0));
+        assert_eq!(m.slot_rebuilds, 1);
+        let fill = 2 * l * 3 * kvd * 4; // K+V rows [0,3)
+        assert_eq!(m.slot_rebuild_bytes as usize, fill);
+        // round 2: one new row syncs, nothing rebuilds
+        arena
+            .stage_round(&mut store, &[(7, 4)], &effs, 2, (l, s, kvd), &mut m)
+            .unwrap();
+        assert_eq!(m.slot_rebuilds, 1);
+        assert_eq!(m.staged_kv_bytes as usize, 2 * l * kvd * 4);
+        // release: the vacated slot is zeroed exactly once, then clean
+        arena.release(7);
+        assert_eq!(arena.slot_of(7), None);
+        let before = m.slot_rebuild_bytes;
+        arena
+            .stage_round(&mut store, &[], &effs, 2, (l, s, kvd), &mut m)
+            .unwrap();
+        let zeroed = m.slot_rebuild_bytes - before;
+        assert_eq!(zeroed as usize, 2 * l * s * kvd * 4, "one-time zero of the slot");
+        let k = store.get(K_CACHE).unwrap().as_f32().unwrap();
+        assert!(k.iter().all(|&x| x == 0.0), "vacated slot must read as padding");
+        arena
+            .stage_round(&mut store, &[], &effs, 2, (l, s, kvd), &mut m)
+            .unwrap();
+        assert_eq!(m.slot_rebuild_bytes, before + zeroed, "no per-round re-zeroing");
+    }
+
+    #[test]
+    fn rung_switch_invalidates_every_slot() {
+        let spec = tiny_spec();
+        let d = dims(&spec);
+        let mut store = Store::new();
+        let mut m = ServeMetrics::default();
+        let mut arena = SlotArena::new();
+        let mut effs = HashMap::new();
+        effs.insert(1u64, EffectiveCache::new(&spec));
+        effs.insert(2u64, EffectiveCache::new(&spec));
+        arena
+            .stage_round(&mut store, &[(1, 2), (2, 2)], &effs, 4, d, &mut m)
+            .unwrap();
+        assert_eq!(m.capacity_switches, 0, "first registration is not a switch");
+        assert_eq!(m.slot_rebuilds, 2);
+        let epoch = store.region_epoch(K_CACHE);
+        // b 4 -> 1: region realloc, survivor rebuilt from row 0
+        arena
+            .stage_round(&mut store, &[(1, 2)], &effs, 1, d, &mut m)
+            .unwrap();
+        assert_eq!(m.capacity_switches, 1);
+        assert_eq!(m.slot_rebuilds, 3);
+        assert_eq!(arena.slot_of(1), Some(0));
+        assert!(store.region_epoch(K_CACHE) > epoch, "realloc must bump the epoch");
+    }
+}

@@ -29,20 +29,29 @@
 //!   of O(B) (fallback ladder: `decode_kv_t`, then padded `decode_kv`).
 //!   `rebuild_full` remains for eviction-resume (tier.rs).
 //!
+//! Decode-step staging is **store-resident** by default
+//! (`ServeConfig::resident_cache`, DESIGN.md §3.2): the slotted
+//! `k_cache`/`v_cache` regions persist in the `Store` between rounds
+//! and only the rows each sequence materialized since the previous
+//! round are written into its (stable) slot — O(B·L·kvd) staged bytes
+//! per round instead of the legacy full O(B·L·S·kvd) copy, with full
+//! slot rebuilds only on slot reassignment, park/resume, and
+//! capacity-rung switches (`coordinator::resident::SlotArena`).
+//!
 //! Under a `cache_budget` the run loop additionally executes the
-//! batcher's park/resume plans: over-budget rounds spill the
-//! lowest-priority sequences' encoded bytes to the host tier and bring
-//! them back (with a `rebuild_full`) once memory frees (DESIGN.md §4).
+//! batcher's park/resume plans: over-budget rounds spill the encoded
+//! bytes of the sequences with the worst stored-bytes-per-remaining-
+//! token ratio to the host tier and bring them back (with a
+//! `rebuild_full`) once memory frees (DESIGN.md §4).
 
-use super::batcher::{
-    plan_parking, plan_resume, plan_round, round_headroom_bytes, BatcherConfig,
-};
+use super::batcher::{plan_parking, plan_resume, plan_round, BatcherConfig};
 use super::effective::{BatchLatentDecoder, BatchedAdvance, EffectiveCache, LatentDecoder};
 use super::metrics::ServeMetrics;
 use super::request::{GenRequest, GenResponse, Sampling};
+use super::resident::{stage_copy_round, SlotArena};
 use crate::compress::planner::{to_masks, RuntimeMasks};
 use crate::kvcache::tier::HostTier;
-use crate::kvcache::{CacheConfig, CacheManager};
+use crate::kvcache::{CacheConfig, CacheManager, Format};
 use crate::model::memory::CompressionPlan;
 use crate::model::ModelSpec;
 use crate::runtime::{Engine, Store, Tensor};
@@ -72,18 +81,58 @@ pub struct ServeConfig {
     /// extract_sequence_bytes`) and resumes them when memory frees.
     /// None = unlimited (no parking, admission by slots alone).
     pub cache_budget: Option<usize>,
+    /// keep the effective k/v cache **store-resident** between decode
+    /// rounds (`coordinator::resident::SlotArena`): per round only each
+    /// live sequence's new rows are staged — O(B·L·kvd) bytes — instead
+    /// of the full O(B·L·S·kvd) per-round copy.  `false` selects the
+    /// legacy copy staging, kept as the bitwise reference
+    /// (`ServeMetrics::staged_kv_bytes` measures both).
+    pub resident_cache: bool,
+    /// block encoding for raw (non-latent) stored rows.  `F16` is the
+    /// default for new serving configs (the paper's fp16 serving
+    /// assumption — half the raw-row bytes).  **Interaction with
+    /// `per_step_reconstruct`:** faithful mode re-reads stored raw rows
+    /// every round, so f16 makes its outputs diverge from the in-graph
+    /// path by rounding; use [`ServeConfig::faithful`] (or set `F32`
+    /// here explicitly) when bit-exact faithful reconstruction is
+    /// required.  Enabling `per_step_reconstruct` by struct update on
+    /// [`ServeConfig::new`] keeps f16 — an intentional opt-in for
+    /// measuring the fp16 accuracy cost (the bench's `f16_raw` cases).
+    pub raw_format: Format,
 }
 
 impl ServeConfig {
-    /// Uncompressed plan, slot-only admission, in-graph reconstruction.
-    pub fn baseline(spec: &ModelSpec) -> ServeConfig {
+    /// Serving defaults for a plan: batch 8, in-graph reconstruction,
+    /// no budget, store-resident staging, f16 raw rows.
+    pub fn new(plan: CompressionPlan) -> ServeConfig {
         ServeConfig {
-            plan: CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+            plan,
             max_batch: 8,
             seed: 0,
             per_step_reconstruct: false,
             cache_budget: None,
+            resident_cache: true,
+            raw_format: Format::F16,
         }
+    }
+
+    /// Faithful-paper serving defaults: like [`ServeConfig::new`] but
+    /// with `per_step_reconstruct` on **and lossless f32 raw rows**, so
+    /// reconstruction from the store is bit-exact against the in-graph
+    /// path.  This is the constructor library callers should reach for
+    /// when enabling faithful mode — flipping `per_step_reconstruct` on
+    /// an f16 config silently trades exactness for bytes.
+    pub fn faithful(plan: CompressionPlan) -> ServeConfig {
+        ServeConfig {
+            per_step_reconstruct: true,
+            raw_format: Format::F32,
+            ..ServeConfig::new(plan)
+        }
+    }
+
+    /// Uncompressed plan, slot-only admission, in-graph reconstruction.
+    pub fn baseline(spec: &ModelSpec) -> ServeConfig {
+        ServeConfig::new(CompressionPlan::none(spec.n_layer, spec.n_kv_head))
     }
 }
 
@@ -133,6 +182,9 @@ pub struct ServingEngine<'e> {
     /// batch-first faithful-advance planner (shared packing staging
     /// + launch counters)
     pub batched: BatchedAdvance,
+    /// owner of the store-resident `k_cache`/`v_cache` staging regions:
+    /// stable slot assignment, sync watermarks, dirty-padding bits
+    pub arena: SlotArena,
     eff: HashMap<u64, EffectiveCache>,
     decode_batches: Vec<usize>,
     admit_counter: u64,
@@ -160,7 +212,9 @@ impl<'e> ServingEngine<'e> {
             .and_then(Json::as_arr)
             .map(|a| a.iter().filter_map(Json::as_usize).collect())
             .unwrap_or_else(|| vec![1, 8]);
-        let cache = CacheManager::new(CacheConfig::new(spec.clone(), cfg.plan.clone()));
+        let mut ccfg = CacheConfig::new(spec.clone(), cfg.plan.clone());
+        ccfg.raw_format = cfg.raw_format;
+        let cache = CacheManager::new(ccfg);
         let seed = cfg.seed;
         let mut s = ServingEngine {
             engine,
@@ -173,6 +227,7 @@ impl<'e> ServingEngine<'e> {
             metrics: ServeMetrics::default(),
             tier: HostTier::new(),
             batched: BatchedAdvance::new(),
+            arena: SlotArena::new(),
             eff: HashMap::new(),
             decode_batches,
             admit_counter: 0,
@@ -337,6 +392,7 @@ impl<'e> ServingEngine<'e> {
             "sequence {cache_id} already parked (double-evict would corrupt tier accounting)"
         );
         self.eff.remove(&cache_id);
+        self.arena.release(cache_id); // slot frees; padding zeroed once
         let bytes = self.cache.extract_sequence_bytes(cache_id)?;
         Ok(self.tier.park(cache_id, bytes))
     }
@@ -403,41 +459,67 @@ impl<'e> ServingEngine<'e> {
             self.spec.ae_latent,
             self.spec.vocab,
         );
-        // stage decode inputs into store-resident buffers: insert_view
-        // overwrites the previous round's allocations in place (no
-        // multi-MB Vec churn, no tensor re-creation)
+        // stage the effective k/v cache.  Resident path (default): the
+        // slotted [b, L, S, kvd] regions persist in the store between
+        // rounds, slot assignment is stable, and only each sequence's
+        // rows past its sync watermark move — O(new rows) staged bytes
+        // per round instead of the full O(B·L·S·kvd) copy.  The copy
+        // path remains as the bitwise reference.
+        let participants: Vec<u64> = live
+            .iter()
+            .take(rows)
+            .map(|&i| active[i].cache_id)
+            .collect();
+        if self.cfg.resident_cache {
+            let marks: Vec<(u64, usize)> = participants
+                .iter()
+                .map(|&id| (id, self.cache.decoded_upto(id).unwrap_or(0)))
+                .collect();
+            self.arena.stage_round(
+                &mut self.store,
+                &marks,
+                &self.eff,
+                b,
+                (l, s, kvd),
+                &mut self.metrics,
+            )?;
+        } else {
+            stage_copy_round(
+                &mut self.store,
+                &self.eff,
+                &participants,
+                b,
+                (l, s, kvd),
+                &mut self.metrics,
+            )?;
+        }
+        // each participant's batch slot: arena-assigned (stable across
+        // rounds) on the resident path, enumeration order on the copy
+        // path.  token/pos and the output unpack below index by slot.
+        let slots: Vec<usize> = if self.cfg.resident_cache {
+            participants
+                .iter()
+                .map(|&id| {
+                    self.arena
+                        .slot_of(id)
+                        .expect("staged sequence must hold a slot")
+                })
+                .collect()
+        } else {
+            (0..rows).collect()
+        };
         {
             let token = self.store.insert_view_i32("token", vec![b]);
             token.fill(0);
-            for (slot, &i) in live.iter().take(rows).enumerate() {
+            for (&slot, &i) in slots.iter().zip(&live[..rows]) {
                 token[slot] = active[i].next_token as i32;
             }
         }
         {
             let pos = self.store.insert_view_i32("pos", vec![b]);
             pos.fill(0);
-            for (slot, &i) in live.iter().take(rows).enumerate() {
+            for (&slot, &i) in slots.iter().zip(&live[..rows]) {
                 pos[slot] = active[i].pos as i32;
-            }
-        }
-        {
-            let k_cache = self.store.insert_view("k_cache", vec![b, l, s, kvd]);
-            for (slot, &i) in live.iter().take(rows).enumerate() {
-                let eff = &self.eff[&active[i].cache_id];
-                k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.k);
-            }
-            for slot in rows..b {
-                k_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
-            }
-        }
-        {
-            let v_cache = self.store.insert_view("v_cache", vec![b, l, s, kvd]);
-            for (slot, &i) in live.iter().take(rows).enumerate() {
-                let eff = &self.eff[&active[i].cache_id];
-                v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].copy_from_slice(&eff.v);
-            }
-            for slot in rows..b {
-                v_cache[slot * l * s * kvd..(slot + 1) * l * s * kvd].fill(0.0);
             }
         }
         let entry = format!("{}_decode_step_b{}", self.model, b);
@@ -456,7 +538,8 @@ impl<'e> ServingEngine<'e> {
         let k_eff = out[5].1.as_f32()?;
         let v_eff = out[6].1.as_f32()?;
 
-        for (slot, &i) in live.iter().take(rows).enumerate() {
+        for (idx, &i) in live.iter().take(rows).enumerate() {
+            let slot = slots[idx];
             let sampling = active[i].req.sampling;
             let next = self.sample(&logits[slot * v..(slot + 1) * v], sampling);
             let seq = &mut active[i];
@@ -495,6 +578,7 @@ impl<'e> ServingEngine<'e> {
     fn retire(&mut self, seq: ActiveSeq) -> GenResponse {
         self.cache.free_sequence(seq.cache_id);
         self.eff.remove(&seq.cache_id);
+        self.arena.release(seq.cache_id); // slot frees; padding zeroed once
         self.metrics.requests_completed += 1;
         GenResponse {
             id: seq.req.id,
@@ -516,8 +600,13 @@ impl<'e> ServingEngine<'e> {
             .sum()
     }
 
+    /// Worst-case device-cache growth of one sequence across one round,
+    /// priced at the cache's **actual block formats** — with f16 raw
+    /// rows the modeled `round_headroom_bytes` (Eq. 3, f32) would be 2×
+    /// the measured `seq_stored_bytes` it is compared against in the
+    /// park/resume plans, parking far earlier than the budget requires.
     fn headroom(&self) -> usize {
-        round_headroom_bytes(&self.spec, &self.cfg.plan, self.cache.cfg.block_size)
+        self.cache.cfg.bytes_per_token() * self.cache.cfg.block_size
     }
 
     /// Resume parked sequences that fit under the budget again, oldest
@@ -563,20 +652,28 @@ impl<'e> ServingEngine<'e> {
         Ok(())
     }
 
-    /// Park the lowest-priority live sequences while the projected next
-    /// round exceeds the budget (never the oldest — rounds must keep
-    /// completing).  The victims' encoded bytes move to the host tier.
+    /// Park live sequences while the projected next round exceeds the
+    /// budget — cost-aware victims (largest stored bytes per remaining
+    /// token first, never all of them; `batcher::plan_parking`).  The
+    /// victims' encoded bytes move to the host tier.
     fn park_under_pressure(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
         let Some(budget) = self.cfg.cache_budget else {
             return Ok(());
         };
-        let mut live: Vec<(u64, u64, usize)> = active
+        let mut live: Vec<(u64, u64, usize, usize)> = active
             .iter()
             .filter(|s| !s.parked && !s.done)
-            .map(|s| (s.admit_seq, s.cache_id, self.cache.seq_stored_bytes(s.cache_id)))
+            .map(|s| {
+                (
+                    s.admit_seq,
+                    s.cache_id,
+                    self.cache.seq_stored_bytes(s.cache_id),
+                    s.req.max_new_tokens.saturating_sub(s.output.len()).max(1),
+                )
+            })
             .collect();
         live.sort_by_key(|l| l.0);
-        let list: Vec<(u64, usize)> = live.iter().map(|l| (l.1, l.2)).collect();
+        let list: Vec<(u64, usize, usize)> = live.iter().map(|l| (l.1, l.2, l.3)).collect();
         for id in plan_parking(budget, self.headroom(), &list) {
             self.park_sequence(id)?;
             active.iter_mut().find(|s| s.cache_id == id).unwrap().parked = true;

@@ -117,6 +117,29 @@ impl CacheConfig {
             }
         }
     }
+
+    /// Exact encoded bytes one token row adds across every stream under
+    /// this config's **runtime block formats** — the measured
+    /// counterpart of the Eq. 3 `kv_bytes_per_token` model (which prices
+    /// every non-int8 stream at `spec.bytes_per_el` and therefore
+    /// overstates f16 raw rows 2×).  Block-capacity rounding excluded.
+    /// For an all-f32 config the two agree exactly
+    /// (`config_bytes_per_token_matches_eq3_for_f32` below), which is
+    /// what keeps this accounting and the model cross-checkable.
+    pub fn bytes_per_token(&self) -> usize {
+        (0..self.spec.n_layer)
+            .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+            .map(|(l, s)| {
+                let kind = self.store_kind(l, s);
+                let epr = kind.elements(&self.spec);
+                if epr == 0 {
+                    0
+                } else {
+                    self.format_for(&kind).row_bytes(epr)
+                }
+            })
+            .sum()
+    }
 }
 
 /// Rows of one stream read back from the store, decoded to f32 into
@@ -811,6 +834,32 @@ mod tests {
                 measured == modeled,
                 "measured {measured} != modeled {modeled} (plan {plan:?})"
             );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn config_bytes_per_token_matches_eq3_for_f32() {
+        check(20, |rng| {
+            let spec = tiny_spec();
+            let plan = CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head);
+            let cfg = CacheConfig::new(spec.clone(), plan.clone());
+            // f32 raw rows: the runtime accounting equals the Eq. 3 model
+            prop_assert!(
+                cfg.raw_format == Format::F32,
+                "CacheConfig::new must default to f32 raw rows"
+            );
+            let modeled = kv_bytes_per_token(&spec, &plan);
+            prop_assert!(
+                cfg.bytes_per_token() == modeled,
+                "runtime {} != modeled {modeled}",
+                cfg.bytes_per_token()
+            );
+            // f16 raw rows never cost more, and cost less whenever any
+            // non-int8 raw stream exists
+            let mut f16 = cfg.clone();
+            f16.raw_format = Format::F16;
+            prop_assert!(f16.bytes_per_token() <= modeled, "f16 must not grow rows");
             Ok(())
         });
     }

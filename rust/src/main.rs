@@ -194,12 +194,28 @@ fn run(args: &Args) -> Result<()> {
                 plan.quant_int8,
                 plan_savings(&spec, &plan) * 100.0
             );
+            // --faithful routes through ServeConfig::faithful, which
+            // pins lossless f32 raw rows (f16 rounding would silently
+            // break its bit-exactness vs the in-graph path); --raw-f32
+            // forces f32 for the in-graph mode too
+            let base = if args.bool("faithful") {
+                ServeConfig::faithful(plan)
+            } else {
+                ServeConfig::new(plan)
+            };
             let cfg = ServeConfig {
-                plan,
                 max_batch: args.usize("batch", 8),
                 seed: args.u64("seed", 0),
-                per_step_reconstruct: args.bool("faithful"),
                 cache_budget: args.opt("cache-budget").and_then(|v| v.parse().ok()),
+                // --copy-staging selects the legacy per-round full-copy
+                // k/v staging (perf A/B against the resident default)
+                resident_cache: !args.bool("copy-staging"),
+                raw_format: if args.bool("raw-f32") {
+                    kvcar::kvcache::Format::F32
+                } else {
+                    base.raw_format
+                },
+                ..base
             };
             let mut serving = ServingEngine::new(&mut engine, &model, cfg)?;
             let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));

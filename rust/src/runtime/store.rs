@@ -10,7 +10,7 @@
 use super::tensor::Tensor;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::path::Path;
 
@@ -22,6 +22,19 @@ pub struct Store {
     /// re-uploads an input only when its version changed since the last
     /// call (parameters stay resident across thousands of steps)
     versions: BTreeMap<String, u64>,
+    /// names currently registered as persistent regions
+    /// (`resident_region`).  While a name is registered the plain
+    /// staging entry points (`insert`, `insert_view`, `insert_view_i32`,
+    /// `get_mut`) refuse it — a per-round `insert_view` on a live
+    /// resident region would silently alias (or drop) the buffer that
+    /// slot-resident state lives in.
+    resident: BTreeSet<String>,
+    /// monotone per-region epochs: an epoch bumps when the region's
+    /// backing allocation is replaced **or** when the name is
+    /// re-registered after a `release_region` (the contents may have
+    /// been rewritten while unprotected).  Epochs survive release, so
+    /// owners can always detect invalidation as `epoch != last_seen`.
+    region_epochs: BTreeMap<String, u64>,
     counter: u64,
 }
 
@@ -31,8 +44,19 @@ impl Store {
         Store::default()
     }
 
-    /// Insert or replace a tensor (version bumped).
+    fn assert_not_resident(&self, name: &str, op: &str) {
+        assert!(
+            !self.resident.contains(name),
+            "store tensor '{name}' is a live resident region: `{op}` would silently \
+             alias or replace its slot-resident buffer — go through `resident_region` \
+             (or `release_region` first)"
+        );
+    }
+
+    /// Insert or replace a tensor (version bumped).  Panics on a live
+    /// resident region (see [`Store::resident_region`]).
     pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.assert_not_resident(name, "insert");
         self.counter += 1;
         self.versions.insert(name.to_string(), self.counter);
         self.map.insert(name.to_string(), t);
@@ -45,7 +69,9 @@ impl Store {
     /// tensor's mutable data sized to `shape`; contents are the previous
     /// values on reuse (callers overwrite) and zeros on (re)allocation.
     /// The version is bumped either way so the engine re-uploads.
+    /// Panics on a live resident region (see [`Store::resident_region`]).
     pub fn insert_view(&mut self, name: &str, shape: Vec<usize>) -> &mut [f32] {
+        self.assert_not_resident(name, "insert_view");
         let n: usize = shape.iter().product();
         self.counter += 1;
         self.versions.insert(name.to_string(), self.counter);
@@ -69,7 +95,9 @@ impl Store {
     }
 
     /// `insert_view` for i32 tensors (token/pos staging).
+    /// Panics on a live resident region (see [`Store::resident_region`]).
     pub fn insert_view_i32(&mut self, name: &str, shape: Vec<usize>) -> &mut [i32] {
+        self.assert_not_resident(name, "insert_view_i32");
         let n: usize = shape.iter().product();
         self.counter += 1;
         self.versions.insert(name.to_string(), self.counter);
@@ -96,6 +124,75 @@ impl Store {
         }
     }
 
+    /// Register (or re-open) a **persistent resident f32 region** and
+    /// return `(data, fresh)`.
+    ///
+    /// Unlike [`Store::insert_view`] — which is per-round staging that
+    /// callers fully overwrite — a resident region's *contents persist
+    /// between calls*: the decode loop keeps the effective k/v cache in
+    /// it and writes only the rows that changed.  Guarantees:
+    ///
+    /// * same element count → the backing allocation is **reused** and
+    ///   the previous contents are intact (`fresh == false`);
+    /// * count changed or the name is new → a zeroed allocation replaces
+    ///   it, the region **epoch** bumps (`fresh == true`), and the owner
+    ///   must rebuild everything it kept there;
+    /// * re-registering after `release_region` also bumps the epoch even
+    ///   when the allocation survived — the contents may have been
+    ///   rewritten while the name was unprotected, so owners must treat
+    ///   them as untrusted;
+    /// * the tensor version bumps on every call (the engine re-uploads —
+    ///   contents are presumed mutated through the returned slice);
+    /// * while registered, `insert`/`insert_view`/`insert_view_i32` on
+    ///   the same name panic instead of silently aliasing the region.
+    pub fn resident_region(&mut self, name: &str, shape: Vec<usize>) -> (&mut [f32], bool) {
+        let n: usize = shape.iter().product();
+        self.counter += 1;
+        self.versions.insert(name.to_string(), self.counter);
+        let fresh = !matches!(
+            self.map.get(name),
+            Some(Tensor::F32 { data, .. }) if data.len() == n
+        );
+        // newly registered = not in the protected set before this call:
+        // either brand new, or re-registered after a `release_region`
+        // (the contents may have been rewritten while unprotected) —
+        // both invalidate whatever an owner kept here, like a realloc
+        let newly_registered = self.resident.insert(name.to_string());
+        if fresh || newly_registered {
+            let epoch = self.region_epochs.entry(name.to_string()).or_insert(0);
+            *epoch += 1;
+        }
+        if fresh {
+            self.map.insert(name.to_string(), Tensor::zeros_f32(shape));
+            match self.map.get_mut(name).unwrap() {
+                Tensor::F32 { data, .. } => (data.as_mut_slice(), true),
+                _ => unreachable!(),
+            }
+        } else {
+            match self.map.get_mut(name).unwrap() {
+                Tensor::F32 { shape: sh, data } => {
+                    *sh = shape;
+                    (data.as_mut_slice(), false)
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    /// Epoch of a resident region (0 = never registered).  Monotone: it
+    /// bumps when the backing allocation is replaced or when the name is
+    /// re-registered after a release, and it survives `release_region` —
+    /// so `epoch != last_seen` is always a sound invalidation check.
+    pub fn region_epoch(&self, name: &str) -> u64 {
+        self.region_epochs.get(name).copied().unwrap_or(0)
+    }
+
+    /// Unregister a resident region: the tensor stays in the store but
+    /// loses its aliasing protection (plain inserts work again).
+    pub fn release_region(&mut self, name: &str) {
+        self.resident.remove(name);
+    }
+
     /// Version of a tensor (0 = absent). Bumped on every insert.
     pub fn version(&self, name: &str) -> u64 {
         self.versions.get(name).copied().unwrap_or(0)
@@ -108,8 +205,11 @@ impl Store {
             .ok_or_else(|| anyhow!("store has no tensor '{name}'"))
     }
 
-    /// Mutable tensor by name (version bumped conservatively).
+    /// Mutable tensor by name (version bumped conservatively).  Panics
+    /// on a live resident region — the returned `&mut Tensor` could
+    /// replace the region's backing allocation wholesale.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.assert_not_resident(name, "get_mut");
         // conservatively bump: the caller may mutate through this borrow
         self.counter += 1;
         self.versions.insert(name.to_string(), self.counter);
@@ -290,6 +390,65 @@ mod tests {
         // different element count: reallocates and zeroes
         let d = s.insert_view("stage", vec![4]);
         assert_eq!(d, [0.0; 4]);
+    }
+
+    #[test]
+    fn resident_region_persists_contents_and_tracks_epoch() {
+        let mut s = Store::new();
+        assert_eq!(s.region_epoch("r"), 0);
+        let ptr0 = {
+            let (d, fresh) = s.resident_region("r", vec![2, 3]);
+            assert!(fresh, "first registration allocates");
+            assert!(d.iter().all(|&x| x == 0.0));
+            d[4] = 7.5;
+            d.as_ptr()
+        };
+        let e1 = s.region_epoch("r");
+        assert_eq!(e1, 1);
+        let v1 = s.version("r");
+        // same element count: contents and allocation persist
+        let ptr1 = {
+            let (d, fresh) = s.resident_region("r", vec![6]);
+            assert!(!fresh, "same-size reopen must not reallocate");
+            assert_eq!(d[4], 7.5, "resident contents must persist");
+            d.as_ptr()
+        };
+        assert_eq!(ptr0, ptr1);
+        assert_eq!(s.region_epoch("r"), e1, "epoch stable across reuse");
+        assert!(s.version("r") > v1, "version must bump (engine re-upload)");
+        // size change: fresh zeroed allocation, epoch bumps
+        let (d, fresh) = s.resident_region("r", vec![4]);
+        assert!(fresh);
+        assert_eq!(d, [0.0; 4]);
+        assert_eq!(s.region_epoch("r"), e1 + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "live resident region")]
+    fn insert_view_on_resident_region_panics() {
+        let mut s = Store::new();
+        s.resident_region("k_cache", vec![4]);
+        s.insert_view("k_cache", vec![4]); // must panic, not alias
+    }
+
+    #[test]
+    fn release_region_restores_plain_staging_and_lapse_bumps_epoch() {
+        let mut s = Store::new();
+        s.resident_region("x", vec![2]);
+        assert_eq!(s.region_epoch("x"), 1);
+        s.release_region("x");
+        assert_eq!(s.region_epoch("x"), 1, "epoch must survive release");
+        let d = s.insert_view("x", vec![2]); // no panic after release
+        assert_eq!(d.len(), 2);
+        // re-registration after a lapse: same-size allocation survives
+        // (fresh == false) but the epoch must bump — the contents were
+        // writable while unprotected, so owners must invalidate
+        let (_, fresh) = s.resident_region("x", vec![2]);
+        assert!(!fresh, "same-size re-registration reuses the allocation");
+        assert_eq!(s.region_epoch("x"), 2, "lapsed re-registration must bump");
+        // steady re-opens while registered never bump
+        s.resident_region("x", vec![2]);
+        assert_eq!(s.region_epoch("x"), 2);
     }
 
     #[test]

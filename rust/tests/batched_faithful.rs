@@ -286,7 +286,12 @@ fn admission_parking_under_tight_budget_completes_and_restores_bitwise() {
     let headroom = round_headroom_bytes(&spec, &plan, mem.cfg.block_size);
     let one = mem.seq_stored_bytes(a);
     let budget = one + 2 * headroom;
-    let live = [(a, mem.seq_stored_bytes(a)), (b, mem.seq_stored_bytes(b))];
+    // equal stored bytes and equal remaining work: the cost-aware policy
+    // tie-breaks to LIFO, so the lowest-priority sequence parks
+    let live = [
+        (a, mem.seq_stored_bytes(a), 4usize),
+        (b, mem.seq_stored_bytes(b), 4usize),
+    ];
     let victims = plan_parking(budget, headroom, &live);
     assert_eq!(victims, vec![b], "lowest-priority sequence must park");
 

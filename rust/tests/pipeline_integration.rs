@@ -87,12 +87,12 @@ fn serve_baseline_and_compressed_produce_tokens() {
     let mut engine = Engine::new(&artifacts_dir()).unwrap();
     let spec = ModelSpec::from_manifest(&engine.manifest.raw, "tinyllama_t").unwrap();
     for ae_layers in [0, spec.n_layer] {
+        // serving defaults on purpose: resident staging + f16 raw rows
+        // must produce well-formed tokens end to end
         let cfg = ServeConfig {
-            plan: CompressionPlan::ae_first_layers(&spec, ae_layers),
             max_batch: 4,
             seed: 1,
-            per_step_reconstruct: false,
-            cache_budget: None,
+            ..ServeConfig::new(CompressionPlan::ae_first_layers(&spec, ae_layers))
         };
         let mut serving = ServingEngine::new(&mut engine, "tinyllama_t", cfg).unwrap();
         let reqs: Vec<GenRequest> = (0..3)
@@ -124,12 +124,13 @@ fn compressed_cache_measures_smaller() {
         CompressionPlan::ae_first_layers(&spec, spec.n_layer),
         CompressionPlan::ae_first_layers(&spec, spec.n_layer).with_quant(),
     ] {
+        // f32 raw rows pinned so the measured byte ratios isolate the
+        // compression plans (f16 would shrink the baseline itself)
         let cfg = ServeConfig {
-            plan,
             max_batch: 2,
             seed: 2,
-            per_step_reconstruct: false,
-            cache_budget: None,
+            raw_format: kvcar::kvcache::Format::F32,
+            ..ServeConfig::new(plan)
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
         let reqs = vec![GenRequest::greedy(0, b"the grey rock stands .", 12)];
@@ -158,12 +159,14 @@ fn faithful_reconstruction_matches_incremental() {
     let prompt = b"the wild foxes hide and the mossy stones stand .";
     let mut outs = Vec::new();
     for faithful in [false, true] {
+        // f32 raw rows: the faithful path re-reads stored head-subset
+        // rows, so bit-exact agreement with in-graph needs lossless raw
         let cfg = ServeConfig {
-            plan: plan.clone(),
             max_batch: 1,
             seed: 3,
             per_step_reconstruct: faithful,
-            cache_budget: None,
+            raw_format: kvcar::kvcache::Format::F32,
+            ..ServeConfig::new(plan.clone())
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
         let out = serving
@@ -175,6 +178,66 @@ fn faithful_reconstruction_matches_incremental() {
         outs[0], outs[1],
         "incremental vs per-step-reconstruct outputs diverge"
     );
+}
+
+#[test]
+fn resident_staging_matches_copy_path_and_stages_o_new_rows() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2);
+    let prompt = b"the wild foxes hide and the mossy stones stand .";
+    let (n_seq, max_new) = (3usize, 8usize);
+    let (l, kvd) = (spec.n_layer, spec.kv_dim());
+    for faithful in [false, true] {
+        let mut outs = Vec::new();
+        let mut staged = Vec::new();
+        for resident in [true, false] {
+            let cfg = ServeConfig {
+                max_batch: n_seq,
+                seed: 11,
+                per_step_reconstruct: faithful,
+                resident_cache: resident,
+                raw_format: kvcar::kvcache::Format::F32,
+                ..ServeConfig::new(plan.clone())
+            };
+            let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
+            let reqs: Vec<GenRequest> = (0..n_seq as u64)
+                .map(|i| GenRequest::greedy(i, prompt, max_new))
+                .collect();
+            let out = serving.run(reqs).unwrap();
+            outs.push(out.iter().map(|r| r.output.clone()).collect::<Vec<_>>());
+            let m = &serving.metrics;
+            staged.push(m.staged_kv_bytes);
+            if resident {
+                // the staged-bytes cost law: after each slot's initial
+                // fill, every steady round stages exactly one new row
+                // per live sequence per side — 2·B·L·kvd·4 bytes —
+                // regardless of context length or compiled batch width
+                let steady = (m.decode_rounds - 1) * (2 * n_seq * l * kvd * 4) as u64;
+                assert_eq!(
+                    m.staged_kv_bytes, steady,
+                    "resident path must stage O(B*L*kvd) per steady round (faithful={faithful})"
+                );
+                assert_eq!(m.slot_rebuilds, n_seq as u64, "one slot fill per admission");
+                assert_eq!(m.capacity_switches, 0, "steady workload must not flap rungs");
+            }
+        }
+        // identical greedy tokens: the resident mirror feeds the decode
+        // step bitwise-identical k/v inputs, so logits cannot diverge
+        assert_eq!(
+            outs[0], outs[1],
+            "resident staging diverges from the copy path (faithful={faithful})"
+        );
+        assert!(
+            staged[0] * 8 < staged[1],
+            "resident path must stage far fewer bytes: {} vs {}",
+            staged[0],
+            staged[1]
+        );
+    }
 }
 
 #[test]
@@ -194,11 +257,11 @@ fn batched_faithful_decode_issues_one_decoder_call_per_round() {
     let mut faithful_execs = 0;
     for faithful in [false, true] {
         let cfg = ServeConfig {
-            plan: plan.clone(),
             max_batch: b,
             seed: 5,
             per_step_reconstruct: faithful,
-            cache_budget: None,
+            raw_format: kvcar::kvcache::Format::F32,
+            ..ServeConfig::new(plan.clone())
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
         let exec0 = serving.engine.stats.executions;
@@ -269,12 +332,13 @@ fn tight_budget_parks_resumes_and_completes() {
     let reqs = |n: usize| -> Vec<GenRequest> {
         (0..n as u64).map(|i| GenRequest::greedy(i, prompt, 8)).collect()
     };
+    // f32 raw rows: the budget below is sized from the f32 modeled rate
     let cfg = ServeConfig {
-        plan: plan.clone(),
         max_batch: 3,
         seed: 7,
-        per_step_reconstruct: false,
         cache_budget: Some(budget),
+        raw_format: kvcar::kvcache::Format::F32,
+        ..ServeConfig::new(plan.clone())
     };
     let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
     let out = serving.run(reqs(3)).unwrap();
@@ -305,11 +369,9 @@ fn park_resume_rebuilds_effective_cache() {
     let mut engine = Engine::new(&artifacts_dir()).unwrap();
     let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
     let cfg = ServeConfig {
-        plan: CompressionPlan::ae_first_layers(&spec, 2),
         max_batch: 1,
         seed: 9,
-        per_step_reconstruct: false,
-        cache_budget: None,
+        ..ServeConfig::new(CompressionPlan::ae_first_layers(&spec, 2))
     };
     let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
     // build a cached sequence directly through the public cache handle
@@ -377,11 +439,9 @@ fn server_thread_front_end() {
         artifacts_dir(),
         "gpt2t".into(),
         ServeConfig {
-            plan: spec_plan,
             max_batch: 4,
             seed: 4,
-            per_step_reconstruct: false,
-            cache_budget: None,
+            ..ServeConfig::new(spec_plan)
         },
     )
     .unwrap();
