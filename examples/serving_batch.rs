@@ -68,11 +68,15 @@ fn main() -> Result<()> {
                 max_new_tokens: max_new,
                 sampling: Sampling::Temperature(0.8),
                 stop_byte: None,
+                arrival: std::time::Instant::now(),
             };
             let h = handle.clone();
             joins.push(std::thread::spawn(move || {
                 std::thread::sleep(delay);
-                h.generate(req)
+                // the sleep simulates the arrival process, so the real
+                // arrival is after it — restamp so queue_latency measures
+                // server-side wait, not the simulated client delay
+                h.generate(req.at(std::time::Instant::now()))
             }));
         }
         let mut total_tokens = 0usize;

@@ -198,6 +198,32 @@ def build_model(cfg: ModelConfig, outdir: str, manifest: dict, seed: int) -> Non
         name=f"{cfg.name}_prefill",
     )
 
+    # cross-request batched prefill: the serving engine packs one
+    # admission wave's prompts into [B, S] lanes and issues a single
+    # launch instead of B {m}_prefill calls.  B is the largest compiled
+    # decode batch (the wave the batcher can admit at once); smaller
+    # waves zero-pad unused lanes (an all-zero len_mask row is inert —
+    # see make_prefill_b).  Lane b is bit-identical to {m}_prefill on
+    # that request alone, so the wave path needs no accuracy caveats.
+    Bw = max(cfg.decode_batches)
+    pfw_fn = M.make_prefill_b(cfg, Bw)
+    pfw = lambda base, ae, tokens, len_mask, last, compress, quant, reuse_k, reuse_v: pfw_fn(
+        {"base": base, "ae": ae},
+        tokens,
+        len_mask,
+        last,
+        {"compress": compress, "quant": quant, "reuse_k": reuse_k, "reuse_v": reuse_v},
+    )
+    low(
+        pfw,
+        [("base", base), ("ae", ae), ("tokens", spec_tokens(Bw, S)),
+         ("len_mask", spec_mask(Bw, S)), ("last", jnp.zeros((Bw,), jnp.int32)),
+         ("compress", zl), ("quant", scalar), ("reuse_k", zlh),
+         ("reuse_v", zlh)],
+        ["logits", "k_raw", "v_raw", "k_lat", "v_lat", "k_eff", "v_eff"],
+        name=f"{cfg.name}_prefill_b",
+    )
+
     pfb_fn = M.make_prefill_base(cfg)
     low(
         pfb_fn,

@@ -315,6 +315,51 @@ def make_prefill(cfg: ModelConfig):
     return prefill
 
 
+def make_prefill_b(cfg: ModelConfig, batch: int):
+    """Cross-request batched prefill: one launch per admission wave.
+
+    (params, tokens [B,S], len_mask [B,S], last [B] i32, kvcfg) ->
+    (logits_last [B,V], k_raw/v_raw [B,L,S,kvd], k_lat/v_lat [B,L,S,dl],
+     k_eff/v_eff [B,L,S,kvd])
+
+    Each lane b is one request's prompt, padded to S with zeros and
+    masked by its row of ``len_mask`` (``last[b] = plen_b - 1``).  The
+    store transform, reuse resolution, and attention are all per-lane
+    maps — ``len_mask`` keeps padded rows out of every cross-position
+    reduction and ``_attn_eval`` keeps the diagonal attendable so dead
+    lanes (all-zero mask) stay NaN-free — so lane b of the batched call
+    is **bit-identical** to a ``{m}_prefill`` call on that request
+    alone (asserted in ``python/tests/test_decode_parity.py``).  That
+    is the contract that lets the rust scheduler admit a whole wave
+    through one launch and still match sequential prefill bitwise.
+    """
+    b = batch
+
+    def prefill_b(params, tokens, len_mask, last, kvcfg):
+        logits, ys = forward(
+            cfg,
+            params,
+            tokens,
+            len_mask,
+            kvcfg,
+            mode="eval",
+            collect=("kv_raw", "kv_lat", "kv_eff"),
+        )
+        # aux tensors stack as [L, B, S, *]; lanes want [B, L, S, *]
+        lanes = lambda a: jnp.transpose(a, (1, 0, 2, 3))
+        return (
+            logits[jnp.arange(b), last, :],
+            lanes(ys["k_raw"]),
+            lanes(ys["v_raw"]),
+            lanes(ys["k_lat"]),
+            lanes(ys["v_lat"]),
+            lanes(ys["k_eff"]),
+            lanes(ys["v_eff"]),
+        )
+
+    return prefill_b
+
+
 def make_prefill_base(cfg: ModelConfig):
     """Baseline (uncompressed) prefill on the Pallas causal-attention
     kernel — the serving fast path when no store transform is active.

@@ -1,0 +1,3 @@
+# Package marker so `pytest python/` collects from any rootdir: the
+# test modules import shared fixtures via `from .conftest import ...`,
+# which needs package context.

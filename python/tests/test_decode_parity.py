@@ -120,6 +120,61 @@ def test_encode_decode_kv_roundtrip_consistency(cfg):
 
 
 @BOTH
+def test_batched_prefill_bit_matches_single(cfg):
+    """prefill_b packs one admission wave's prompts into [B, S] lanes;
+    every live lane must be *bit-identical* (all seven outputs) to a
+    {m}_prefill call on that request alone — the contract the rust
+    scheduler's wave admission relies on for bitwise equivalence with
+    sequential prefill.  Dead lanes (all-zero len_mask, the padding the
+    rust side stages for short waves) must be inert."""
+    params = P.init_params(cfg, 0)
+    S, L = cfg.max_seq, cfg.n_layer
+    B = max(cfg.decode_batches)
+    rng = np.random.RandomState(7)
+    kv = _kvcfg(cfg)
+    # mixed prompt lengths, including the plen=1 edge; lane 2 is dead
+    plens = [(9, 1, 0, 17) + tuple(rng.randint(1, S) for _ in range(B))][0][:B]
+    toks = rng.randint(0, cfg.vocab, (B, S)).astype(np.int32)
+    mask = np.zeros((B, S), np.float32)
+    last = np.zeros((B,), np.int32)
+    for b, p in enumerate(plens):
+        if p == 0:  # dead lane: zero tokens, zero mask, last pinned to 0
+            toks[b] = 0
+        else:
+            mask[b, :p] = 1.0
+            last[b] = p - 1
+    outs_b = M.make_prefill_b(cfg, B)(
+        params,
+        jnp.asarray(toks),
+        jnp.asarray(mask),
+        jnp.asarray(last),
+        kv,
+    )
+    assert outs_b[0].shape == (B, cfg.vocab)
+    assert outs_b[1].shape == (B, L, S, cfg.kv_dim)
+    assert outs_b[3].shape == (B, L, S, cfg.ae_latent)
+    pf = M.make_prefill(cfg)
+    names = ("logits", "k_raw", "v_raw", "k_lat", "v_lat", "k_eff", "v_eff")
+    for b, p in enumerate(plens):
+        if p == 0:
+            continue
+        outs_1 = pf(
+            params,
+            jnp.asarray(toks[b : b + 1]),
+            jnp.asarray(mask[b : b + 1]),
+            jnp.int32(p - 1),
+            kv,
+        )
+        for name, got, want in zip(names, outs_b, outs_1):
+            got = np.asarray(got[b])
+            want = np.asarray(want)
+            assert got.shape == want.shape, (name, b)
+            assert (got.view(np.uint32) == want.view(np.uint32)).all(), (
+                f"{name} lane {b} (plen {p}) diverges from per-request prefill"
+            )
+
+
+@BOTH
 def test_batched_decode_kv_bit_matches_token_decode(cfg):
     """decode_kv_bt packs one watermark row per live sequence into
     [B, L, 1, dl]; every slot must be *bit-identical* to a decode_kv_t

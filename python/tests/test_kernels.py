@@ -8,6 +8,10 @@ artifact is built from exactly these kernels.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# property sweeps need hypothesis; environments without it (offline
+# containers) skip this module instead of failing collection
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import attention as attn_k

@@ -11,8 +11,10 @@
 //! reported as deltas before being replaced.  Each case also reports
 //! `staged_bytes_per_round` (the k/v staging volume the store-resident
 //! effective cache shrinks ~S×; the `staging` section holds the
-//! resident-vs-copy ratio) and the `f16_raw` section the bytes/accuracy
-//! delta of the f16 raw-row default against f32.
+//! resident-vs-copy ratio), the `f16_raw` section the bytes/accuracy
+//! delta of the f16 raw-row default against f32, and the
+//! `burst_admission` section the launch counts and amortized prefill
+//! cost of wave-based admission vs the per-request ladder.
 //!
 //! Skips (exit 0, file untouched) when artifacts are missing.
 
@@ -160,10 +162,67 @@ fn report_deltas(prev: &Json, cases: &[CaseResult]) {
     }
 }
 
+/// Burst admission: a backlog of requests admitted in max_batch-sized
+/// waves with max_new = 1, so the run is pure admission cost.  Run
+/// twice — batched wave prefill vs the forced per-request ladder — and
+/// report launches, amortized prefill ms/request, and the wave-size
+/// distribution (the one-launch-per-wave law made measurable).
+fn run_burst(engine: &mut Engine, plan: &CompressionPlan) -> Json {
+    let n_requests = 24usize;
+    let mut results = Vec::new();
+    for batched in [true, false] {
+        let cfg = ServeConfig {
+            max_batch: 8,
+            seed: 17,
+            batched_prefill: batched,
+            ..ServeConfig::new(plan.clone())
+        };
+        let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
+        let mut prompts = corpus::wiki(9);
+        // warmup compiles the prefill entries outside the measurement
+        serving
+            .run((0..8).map(|i| GenRequest::greedy(i, &prompts.tokens(16), 1)).collect())
+            .unwrap();
+        serving.metrics = Default::default();
+        let reqs: Vec<GenRequest> = (0..n_requests as u64)
+            .map(|i| GenRequest::greedy(i, &prompts.tokens(16), 1))
+            .collect();
+        let t0 = std::time::Instant::now();
+        serving.run(reqs).unwrap();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let m = &serving.metrics;
+        let amortized = wall_ms / n_requests as f64;
+        println!(
+            "bench decode_hotpath/burst_admission({}): {} waves / {} launches, {:.2} ms/request amortized (waves: {:?})",
+            if batched { "wave" } else { "per-request" },
+            m.prefill_waves,
+            m.prefill_launches,
+            amortized,
+            m.wave_admitted.samples(),
+        );
+        results.push(json::obj(vec![
+            ("batched", Json::Bool(batched)),
+            ("prefill_waves", json::num(m.prefill_waves as f64)),
+            ("prefill_launches", json::num(m.prefill_launches as f64)),
+            ("amortized_prefill_ms_per_request", json::num(amortized)),
+            (
+                "wave_sizes",
+                json::arr(m.wave_admitted.samples().iter().map(|&s| json::num(s as f64))),
+            ),
+            ("mean_wave_size", json::num(m.wave_admitted.mean())),
+        ]));
+    }
+    json::obj(vec![
+        ("requests", json::num(n_requests as f64)),
+        ("runs", Json::Arr(results)),
+    ])
+}
+
 fn write_json(
     cases: &[CaseResult],
     staging: Json,
     f16_raw: Json,
+    burst: Json,
     prefill_mean_ms: f64,
     prefill_p99_ms: f64,
     rounds: usize,
@@ -206,6 +265,7 @@ fn write_json(
         ),
         ("staging", staging),
         ("f16_raw", f16_raw),
+        ("burst_admission", burst),
         (
             "prefill_64tok",
             json::obj(vec![
@@ -327,6 +387,9 @@ fn main() {
         ])
     };
 
+    // burst admission: the one-launch-per-admission-wave law end to end
+    let burst = run_burst(&mut engine, &ae);
+
     // prefill latency
     let cfg = ServeConfig {
         max_batch: 1,
@@ -346,5 +409,5 @@ fn main() {
         fmt_ns(prefill_mean * 1e6),
         fmt_ns(prefill_p99 * 1e6),
     );
-    write_json(&cases, staging, f16_raw, prefill_mean, prefill_p99, rounds);
+    write_json(&cases, staging, f16_raw, burst, prefill_mean, prefill_p99, rounds);
 }

@@ -26,12 +26,23 @@ use crate::model::memory::{kv_bytes_per_token, CompressionPlan};
 use crate::model::ModelSpec;
 
 #[derive(Debug, Clone, PartialEq)]
-/// One round's admission decision.
+/// One round's admission decision: the wave of waiting requests to
+/// prefill together plus the shapes the round runs at.
 pub struct BatchPlan {
-    /// indices into the waiting queue to admit now (FIFO prefix)
+    /// indices into the waiting queue to admit now (FIFO prefix) — the
+    /// *admission wave*: all of them prefill through one batched
+    /// `{m}_prefill_b` launch when the artifact set has it
     pub admit: usize,
     /// compiled decode batch size to use for the next round
     pub decode_batch: usize,
+    /// padded prompt-length bucket of the whole wave ([`wave_bucket`];
+    /// 0 when nothing is admitted) — the admission-side counterpart of
+    /// `decode_batch`: the rows per lane the wave carries once its
+    /// prompts are padded to a shared length.  Planning metadata: the
+    /// compiled `[B, S]` entry always runs at S = max_seq, and
+    /// `PrefillWave` recomputes finer per-capacity-chunk buckets for
+    /// its padding accounting (`WaveStats::padded_rows`)
+    pub wave_s: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -56,6 +67,23 @@ pub fn request_cache_bytes(
 ) -> usize {
     let tokens = (prompt_len + max_new).min(spec.max_seq);
     kv_bytes_per_token(spec, plan) * tokens
+}
+
+/// Padded prompt-length bucket for one admission wave: the smallest
+/// power of two covering every (clamped) prompt in the wave, capped at
+/// `max_seq`.  Power-of-two buckets keep the set of distinct padded
+/// shapes small while bounding per-lane padding waste below 2× — the
+/// standard bucketing compromise for batched prompt processing.
+/// Returns 0 for an empty wave.
+pub fn wave_bucket(prompt_lens: impl IntoIterator<Item = usize>, max_seq: usize) -> usize {
+    let longest = prompt_lens
+        .into_iter()
+        .map(|p| p.clamp(1, max_seq.saturating_sub(1)))
+        .max();
+    match longest {
+        None => 0,
+        Some(l) => l.next_power_of_two().min(max_seq),
+    }
 }
 
 /// Plan one admission round: FIFO-admit while slots and the budget
@@ -91,6 +119,7 @@ pub fn plan_round(
     BatchPlan {
         admit,
         decode_batch,
+        wave_s: wave_bucket(waiting[..admit].iter().map(|w| w.0), spec.max_seq),
     }
 }
 
@@ -231,6 +260,37 @@ mod tests {
         let p = plan_round(&cfg(None), &spec, &plan, 3, 0, &waiting);
         assert_eq!(p.admit, 5); // 3 live + 5 = 8
         assert_eq!(p.decode_batch, 8);
+    }
+
+    #[test]
+    fn wave_bucket_covers_longest_prompt_power_of_two() {
+        assert_eq!(
+            wave_bucket(std::iter::empty::<usize>(), 128),
+            0,
+            "empty wave has no bucket"
+        );
+        assert_eq!(wave_bucket([1], 128), 1);
+        assert_eq!(wave_bucket([9, 1, 17], 128), 32);
+        assert_eq!(wave_bucket([33, 64], 128), 64);
+        // prompts at/over max_seq clamp to the compiled shape
+        assert_eq!(wave_bucket([500], 128), 128);
+        assert_eq!(wave_bucket([0], 128), 1, "plen clamps to >= 1");
+    }
+
+    #[test]
+    fn plan_round_reports_wave_bucket_of_admitted_prefix() {
+        let spec = gpt2_774m();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        // 3 live + 5 admitted; the long prompt is *not* admitted (slot
+        // limit) so it must not widen the wave bucket
+        let mut waiting = vec![(10, 20); 5];
+        waiting.push((spec.max_seq, 20));
+        let p = plan_round(&cfg(None), &spec, &plan, 3, 0, &waiting);
+        assert_eq!(p.admit, 5);
+        assert_eq!(p.wave_s, 16);
+        // nothing admitted -> no wave
+        let p = plan_round(&cfg(None), &spec, &plan, 8, 0, &waiting);
+        assert_eq!((p.admit, p.wave_s), (0, 0));
     }
 
     #[test]

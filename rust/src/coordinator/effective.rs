@@ -232,7 +232,10 @@ impl EffectiveCache {
 
     /// Seed rows [0, rows) from prefill's in-graph effective cache
     /// (`k_eff`/`v_eff`: [L, S, kvd]) and advance the manager watermark:
-    /// those rows need no reconstruction.
+    /// those rows need no reconstruction.  Under wave admission
+    /// (`coordinator::prefill::PrefillWave`) the buffers are one lane
+    /// of the batched `{m}_prefill_b` output — bit-identical to the
+    /// per-request prefill's, so seeding is path-independent.
     pub fn seed(
         &mut self,
         cache: &mut CacheManager,

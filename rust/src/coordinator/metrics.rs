@@ -1,6 +1,6 @@
 //! Serving metrics: latency distributions, throughput, cache savings.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Default, Clone)]
 /// Latency samples with mean/percentile reporting.
@@ -44,6 +44,53 @@ impl Histogram {
     }
 }
 
+#[derive(Debug, Default, Clone)]
+/// Integer-valued samples (wave sizes, counts) with mean/max reporting —
+/// the count-domain sibling of [`Histogram`].
+pub struct CountHistogram {
+    samples: Vec<u64>,
+}
+
+impl CountHistogram {
+    /// Add one sample.
+    pub fn record(&mut self, v: u64) {
+        self.samples.push(v);
+    }
+
+    /// Samples recorded.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Whether no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Mean sample value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Sum of all samples.
+    pub fn total(&self) -> u64 {
+        self.samples.iter().sum()
+    }
+
+    /// The raw samples, in record order (bench distributions).
+    pub fn samples(&self) -> &[u64] {
+        &self.samples
+    }
+}
+
 /// Aggregate serving counters for one `ServingEngine::run` workload.
 #[derive(Debug, Default, Clone)]
 pub struct ServeMetrics {
@@ -57,6 +104,16 @@ pub struct ServeMetrics {
     pub decode_step_latency: Histogram,
     /// enqueue-to-prefill wait
     pub queue_latency: Histogram,
+    /// admission waves processed (each admits >= 1 request; the
+    /// one-launch-per-wave law is `prefill_launches == prefill_waves`
+    /// when the artifact set has `{m}_prefill_b` and no wave exceeds
+    /// its compiled capacity)
+    pub prefill_waves: u64,
+    /// prefill artifact launches issued (batched waves count 1 each,
+    /// per-request fallbacks 1 per request)
+    pub prefill_launches: u64,
+    /// requests admitted per wave (batching quality of admission)
+    pub wave_admitted: CountHistogram,
     /// decode rounds executed and total rows (batch slots) used
     pub decode_rounds: u64,
     /// batch slots that carried a live sequence
@@ -102,6 +159,24 @@ impl ServeMetrics {
         self.tokens_generated as f64 / secs
     }
 
+    /// Record one admission wave: its size, the prefill launches it
+    /// cost, and — from each admitted request's own `arrival` stamp —
+    /// the real per-request queue wait to `start` (the moment the
+    /// wave's prefill began).  Staggered arrivals therefore record
+    /// distinct waits; `saturating_duration_since` guards the
+    /// degenerate case of an arrival stamped after the wave started.
+    pub fn record_wave(&mut self, start: Instant, arrivals: &[Instant], launches: u64) {
+        if arrivals.is_empty() {
+            return;
+        }
+        self.prefill_waves += 1;
+        self.prefill_launches += launches;
+        self.wave_admitted.record(arrivals.len() as u64);
+        for &at in arrivals {
+            self.queue_latency.record(start.saturating_duration_since(at));
+        }
+    }
+
     /// Fraction of decode batch slots doing useful work (batching quality).
     pub fn batch_efficiency(&self) -> f64 {
         if self.decode_slots_total == 0 {
@@ -135,6 +210,15 @@ impl ServeMetrics {
             self.batch_efficiency() * 100.0,
             self.decode_rounds,
         );
+        if self.prefill_waves > 0 {
+            println!(
+                "  admission: {} waves / {} prefill launches  (mean {:.1} max {} admitted per wave)",
+                self.prefill_waves,
+                self.prefill_launches,
+                self.wave_admitted.mean(),
+                self.wave_admitted.max(),
+            );
+        }
         if self.auto_parks + self.auto_resumes > 0 {
             println!(
                 "  memory pressure: {} parks / {} resumes through the host tier",
@@ -166,6 +250,38 @@ mod tests {
         assert!((h.percentile_ms(50.0) - 50.0).abs() <= 1.0);
         assert!((h.percentile_ms(99.0) - 99.0).abs() <= 1.0);
         assert!((h.mean_ms() - 50.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn staggered_arrivals_record_individual_queue_waits() {
+        // three requests arriving 30/20/10 ms before the wave starts:
+        // the old shared-enqueue stamp would have recorded one wait for
+        // all of them; per-request arrivals must record the real spread
+        let mut m = ServeMetrics::default();
+        let start = Instant::now();
+        let arrivals = [
+            start - Duration::from_millis(30),
+            start - Duration::from_millis(20),
+            start - Duration::from_millis(10),
+        ];
+        m.record_wave(start, &arrivals, 1);
+        assert_eq!(m.prefill_waves, 1);
+        assert_eq!(m.prefill_launches, 1);
+        assert_eq!(m.wave_admitted.total(), 3);
+        assert_eq!(m.queue_latency.len(), 3);
+        assert!((m.queue_latency.mean_ms() - 20.0).abs() < 0.5);
+        assert!((m.queue_latency.percentile_ms(99.0) - 30.0).abs() < 0.5);
+        // a second wave for the straggler arriving mid-run
+        let later = start + Duration::from_millis(5);
+        m.record_wave(later, &[start], 1);
+        assert_eq!(m.prefill_waves, 2);
+        assert!((m.wave_admitted.mean() - 2.0).abs() < 1e-9);
+        // arrivals stamped after the wave start clamp to zero wait
+        m.record_wave(start, &[start + Duration::from_millis(1)], 1);
+        assert_eq!(m.queue_latency.len(), 5);
+        // empty waves record nothing
+        m.record_wave(start, &[], 1);
+        assert_eq!(m.prefill_waves, 3);
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! L3 serving coordinator: request types, admission/batch planning
-//! (including park/resume under memory pressure), the prefill/decode
-//! scheduler with batch-first faithful reconstruction and store-resident
-//! decode staging (`resident`), and metrics.
+//! (including park/resume under memory pressure), wave-based admission
+//! prefill (`prefill`), the prefill/decode scheduler with batch-first
+//! faithful reconstruction and store-resident decode staging
+//! (`resident`), and metrics.
 
 pub mod batcher;
 pub mod effective;
 pub mod metrics;
+pub mod prefill;
 pub mod request;
 pub mod resident;
 pub mod scheduler;
@@ -14,7 +16,10 @@ pub mod trace;
 pub use effective::{
     BatchLatentDecoder, BatchedAdvance, BatchedStats, EffStats, EffectiveCache, LatentDecoder,
 };
-pub use metrics::ServeMetrics;
+pub use metrics::{CountHistogram, ServeMetrics};
+pub use prefill::{
+    AdmittedLane, LaneWiseMockPrefiller, PrefillWave, WaveOutput, WavePrefiller, WaveStats,
+};
 pub use request::{GenRequest, GenResponse, Sampling};
 pub use resident::{stage_copy_round, SlotArena};
 pub use scheduler::{ServeConfig, ServingEngine};

@@ -1,0 +1,570 @@
+//! Wave-based admission prefill — one launch per admission wave.
+//!
+//! Before this module, admission prefilled one request at a time
+//! through `{m}_prefill`: O(admitted) launches per wave, which
+//! dominates time-to-first-token under bursty load (exactly the
+//! serving regime the paper's batch/sequence-scaling measurements
+//! target).  [`PrefillWave`] is the admission-side twin of the decode
+//! path's `BatchedAdvance`: the batcher's admission wave is packed
+//! into the `[B, S]` lanes of the `{m}_prefill_b` artifact and
+//! prefilled with a **single** launch, then each lane seeds its own
+//! sequence — compressed rows into the [`CacheManager`], the in-graph
+//! effective rows into the sequence's [`EffectiveCache`], and (through
+//! the scheduler) its resident `SlotArena` slot.
+//!
+//! Contract of the batched entry: lane `b` of `{m}_prefill_b` is
+//! **bit-identical** to a `{m}_prefill` call on that request alone
+//! (per-lane length masking keeps padded rows and dead lanes inert;
+//! proven in `python/tests/test_decode_parity.py`).  That is what
+//! makes a batched wave bitwise-equivalent to sequential prefills —
+//! watermarks, stored streams, effective-cache contents, and sampled
+//! first tokens included — asserted without artifacts in
+//! `rust/tests/wave_prefill.rs` via [`LaneWiseMockPrefiller`], and
+//! over real artifacts in `tests/pipeline_integration.rs`.
+//!
+//! Fallback ladder, mirroring the decoder's (`DESIGN.md` §3.1):
+//!
+//! 1. `{m}_prefill_b` — `[B, S]` cross-request batched prefill; waves
+//!    larger than the compiled capacity chunk, unused lanes zero-pad.
+//! 2. `{m}_prefill` — per-request: lone admissions (padding the
+//!    batched entry would cost more than it saves) and artifact sets
+//!    that predate the batched entry (`wave_capacity() == None`).
+
+use super::batcher::wave_bucket;
+use super::effective::EffectiveCache;
+use crate::kvcache::CacheManager;
+use crate::model::ModelSpec;
+use crate::runtime::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Positional indices of the seven prefill outputs inside a
+/// [`WaveOutput`] — the order `{m}_prefill[_b]` emits them.
+pub mod lane_out {
+    /// `[cap, V]` last-position logits
+    pub const LOGITS: usize = 0;
+    /// `[cap, L, S, kvd]` raw K rows
+    pub const K_RAW: usize = 1;
+    /// `[cap, L, S, kvd]` raw V rows
+    pub const V_RAW: usize = 2;
+    /// `[cap, L, S, dl]` K latents
+    pub const K_LAT: usize = 3;
+    /// `[cap, L, S, dl]` V latents
+    pub const V_LAT: usize = 4;
+    /// `[cap, L, S, kvd]` store-transformed (effective) K rows
+    pub const K_EFF: usize = 5;
+    /// `[cap, L, S, kvd]` store-transformed (effective) V rows
+    pub const V_EFF: usize = 6;
+}
+
+/// Outputs of one prefill launch: the seven output tensors
+/// ([`lane_out`] order), each packed `[cap, ...]` lane-major, of which
+/// the first `lanes` lanes carry live requests.  Holds the executed
+/// tensors themselves — lane reads are borrows, so admission is
+/// zero-copy up to the cache-manager ingest.  A per-request launch is
+/// the `cap == lanes == 1` case; the ingestion path is identical on
+/// every ladder rung.
+pub struct WaveOutput {
+    tensors: Vec<(String, Tensor)>,
+    /// lane pitch of the packed tensors (the compiled B)
+    cap: usize,
+    /// leading lanes that carry live requests
+    lanes: usize,
+}
+
+impl WaveOutput {
+    /// Wrap one launch's outputs (exactly the seven prefill outputs,
+    /// in [`lane_out`] order); `cap` is the compiled lane count,
+    /// `lanes` how many leading lanes are live.
+    pub fn new(tensors: Vec<(String, Tensor)>, cap: usize, lanes: usize) -> Result<WaveOutput> {
+        anyhow::ensure!(
+            tensors.len() == 7,
+            "prefill must produce 7 outputs, got {}",
+            tensors.len()
+        );
+        anyhow::ensure!(
+            lanes >= 1 && lanes <= cap,
+            "{lanes} live lanes out of range for capacity {cap}"
+        );
+        Ok(WaveOutput { tensors, cap, lanes })
+    }
+
+    /// Live lanes carried.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Borrow one lane of output `out` (a [`lane_out`] index).
+    pub fn lane(&self, out: usize, lane: usize) -> Result<&[f32]> {
+        debug_assert!(lane < self.lanes);
+        let (name, t) = &self.tensors[out];
+        let d = t.as_f32()?;
+        anyhow::ensure!(
+            d.len() % self.cap == 0,
+            "prefill output {name} is not divisible into {} lanes",
+            self.cap
+        );
+        let n = d.len() / self.cap;
+        Ok(&d[lane * n..(lane + 1) * n])
+    }
+}
+
+/// Runs the prefill artifacts.  The serving engine implements this
+/// over `{m}_prefill_b` / `{m}_prefill`; tests use
+/// [`LaneWiseMockPrefiller`] so the wave dataflow is checkable without
+/// artifacts.
+///
+/// Implementations must be pure per-lane maps: lane `i` of
+/// `prefill_wave` must equal a `prefill_one` call on that prompt
+/// alone, **bitwise** — the property that makes wave admission
+/// equivalent to sequential prefill (the L2 `prefill_b` entry
+/// satisfies it by construction).
+pub trait WavePrefiller {
+    /// Lanes of the batched prefill entry, or `None` when only the
+    /// per-request entry exists (artifact sets that predate
+    /// `prefill_b`, or batched prefill disabled by config).
+    fn wave_capacity(&self) -> Option<usize>;
+
+    /// One launch covering every `(prompt, plen)` lane; called with
+    /// `2..=wave_capacity()` lanes.  `plen` is already clamped to
+    /// `[1, max_seq - 1]`.
+    fn prefill_wave(&mut self, prompts: &[(&[u8], usize)]) -> Result<WaveOutput>;
+
+    /// Per-request rung: one launch for one prompt.
+    fn prefill_one(&mut self, prompt: &[u8], plen: usize) -> Result<WaveOutput>;
+}
+
+/// Launch/padding accounting for the admission path: tests assert one
+/// launch per wave, and the bench reports amortized prefill cost.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WaveStats {
+    /// admission waves processed (>= 1 request each)
+    pub waves: u64,
+    /// prefill launches issued (batched chunks and per-request calls)
+    pub launches: u64,
+    /// requests admitted through a batched launch
+    pub batched_lanes: u64,
+    /// requests admitted through the per-request rung (lone
+    /// admissions, capacity chunk remainders, or no batched entry)
+    pub fallback_prefills: u64,
+    /// lane rows staged beyond each prompt's length, summed up to the
+    /// wave's padded bucket (`batcher::wave_bucket`) — the padding
+    /// cost of batching admission
+    pub padded_rows: u64,
+}
+
+/// One admitted request's handles out of a wave: the sequence created
+/// for it and the logits its first token is sampled from.
+pub struct AdmittedLane {
+    /// cache-manager sequence holding the prompt's compressed rows
+    pub cache_id: u64,
+    /// `[V]` last-position logits (the scheduler samples from these)
+    pub logits: Vec<f32>,
+}
+
+/// The admission-wave planner: packs a wave of prompts through the
+/// prefill ladder, ingests each lane's compressed rows, and seeds each
+/// sequence's effective cache.  Owns the launch accounting
+/// ([`WaveStats`]); one planner per serving engine.
+#[derive(Debug, Default)]
+pub struct PrefillWave {
+    /// launch/padding accounting for the admission path
+    pub stats: WaveStats,
+}
+
+impl PrefillWave {
+    /// Empty planner.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit one wave of prompts: prefill them (one launch per
+    /// capacity chunk when the runner has a batched entry), ingest
+    /// every lane's compressed rows into `cache`, and register each
+    /// sequence's [`EffectiveCache`] in `effs` — seeded from the
+    /// lane's in-graph effective rows when `seed_effective` (the
+    /// faithful mode instead leaves the watermark at 0 so the first
+    /// decode round reconstructs the prompt from the store).
+    ///
+    /// The wave is transactional: launches run first (they touch no
+    /// persistent state), and an ingestion failure frees every
+    /// sequence the wave already created — a half-admitted wave would
+    /// otherwise leak rows the scheduler can neither see nor retire.
+    ///
+    /// Returns one [`AdmittedLane`] per prompt, in order.
+    pub fn admit_wave<P: WavePrefiller>(
+        &mut self,
+        cache: &mut CacheManager,
+        effs: &mut HashMap<u64, EffectiveCache>,
+        spec: &ModelSpec,
+        seed_effective: bool,
+        prompts: &[&[u8]],
+        runner: &mut P,
+    ) -> Result<Vec<AdmittedLane>> {
+        if prompts.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.stats.waves += 1;
+        let s = spec.max_seq;
+        let lanes: Vec<(&[u8], usize)> = prompts
+            .iter()
+            .map(|p| (*p, p.len().clamp(1, s - 1)))
+            .collect();
+
+        // phase 1: launches.  Chunk by capacity; a lone chunk prefills
+        // cheaper through the unpadded per-request entry (same policy
+        // as the decoder ladder's lone-row rule), as does everything
+        // when no batched entry exists (capacity 1).
+        let cap = runner.wave_capacity().filter(|&c| c > 1).unwrap_or(1);
+        let mut outputs: Vec<(WaveOutput, &[(&[u8], usize)])> = Vec::new();
+        for group in lanes.chunks(cap) {
+            let w = if group.len() == 1 {
+                self.stats.fallback_prefills += 1;
+                runner.prefill_one(group[0].0, group[0].1)?
+            } else {
+                let w = runner.prefill_wave(group)?;
+                anyhow::ensure!(
+                    w.lanes() == group.len(),
+                    "prefill wave returned {} lanes for {} prompts",
+                    w.lanes(),
+                    group.len()
+                );
+                self.stats.batched_lanes += group.len() as u64;
+                let bucket = wave_bucket(group.iter().map(|g| g.1), s);
+                for &(_, plen) in group {
+                    self.stats.padded_rows += (bucket - plen.min(bucket)) as u64;
+                }
+                w
+            };
+            self.stats.launches += 1;
+            outputs.push((w, group));
+        }
+
+        // phase 2: ingestion, with rollback on failure
+        let mut admitted = Vec::with_capacity(lanes.len());
+        for (w, group) in &outputs {
+            for (lane, &(_, plen)) in group.iter().enumerate() {
+                match Self::ingest(cache, effs, spec, seed_effective, w, (lane, plen)) {
+                    Ok(a) => admitted.push(a),
+                    Err(e) => {
+                        for a in &admitted {
+                            cache.free_sequence(a.cache_id);
+                            effs.remove(&a.cache_id);
+                        }
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        Ok(admitted)
+    }
+
+    /// Seed one lane: create the sequence, bulk-ingest its compressed
+    /// prompt rows, and register its effective-cache scratch.  `lane`
+    /// is `(lane_index, plen)`.  Frees the sequence it created if the
+    /// ingest fails partway, so errors leave no orphaned state.
+    fn ingest(
+        cache: &mut CacheManager,
+        effs: &mut HashMap<u64, EffectiveCache>,
+        spec: &ModelSpec,
+        seed_effective: bool,
+        w: &WaveOutput,
+        lane: (usize, usize),
+    ) -> Result<AdmittedLane> {
+        let (lane, plen) = lane;
+        let (l, s, kvd, dl) = (spec.n_layer, spec.max_seq, spec.kv_dim(), spec.ae_latent);
+        // borrow every lane slice before touching persistent state
+        let logits = w.lane(lane_out::LOGITS, lane)?;
+        let k_raw = w.lane(lane_out::K_RAW, lane)?;
+        let v_raw = w.lane(lane_out::V_RAW, lane)?;
+        let k_lat = w.lane(lane_out::K_LAT, lane)?;
+        let v_lat = w.lane(lane_out::V_LAT, lane)?;
+        let k_eff = w.lane(lane_out::K_EFF, lane)?;
+        let v_eff = w.lane(lane_out::V_EFF, lane)?;
+        anyhow::ensure!(
+            k_raw.len() == l * s * kvd && k_lat.len() == l * s * dl,
+            "prefill lane shapes do not match the model spec"
+        );
+        let id = cache.create_sequence();
+        if let Err(e) = cache.append_rows(id, plen, s, k_lat, v_lat, k_raw, v_raw) {
+            cache.free_sequence(id); // e.g. pool budget exceeded
+            return Err(e);
+        }
+        let mut eff = EffectiveCache::new(spec);
+        if seed_effective {
+            eff.seed(cache, id, k_eff, v_eff, plen);
+        }
+        effs.insert(id, eff);
+        Ok(AdmittedLane {
+            cache_id: id,
+            logits: logits.to_vec(),
+        })
+    }
+}
+
+/// Deterministic lane-wise mock prefiller for tests and benches: every
+/// output element is a pure function of the lane's prompt bytes and
+/// position (like the real per-lane transformer), so a batched wave is
+/// bitwise-equal to per-request calls by construction — the one
+/// [`WavePrefiller`] contract the wave-equivalence tests rely on.
+/// Counts calls on both rungs so tests can assert launch laws.
+pub struct LaneWiseMockPrefiller {
+    n_layer: usize,
+    max_seq: usize,
+    kv_dim: usize,
+    ae_latent: usize,
+    vocab: usize,
+    /// capacity reported through [`WavePrefiller::wave_capacity`];
+    /// `None` simulates an artifact set without `prefill_b`
+    pub capacity: Option<usize>,
+    /// batched (`prefill_wave`) launches observed
+    pub wave_calls: u64,
+    /// per-request (`prefill_one`) launches observed
+    pub single_calls: u64,
+}
+
+impl LaneWiseMockPrefiller {
+    /// Mock sized for `spec`, batch-capable with a default capacity of 8.
+    pub fn for_spec(spec: &ModelSpec) -> Self {
+        LaneWiseMockPrefiller {
+            n_layer: spec.n_layer,
+            max_seq: spec.max_seq,
+            kv_dim: spec.kv_dim(),
+            ae_latent: spec.ae_latent,
+            vocab: spec.vocab,
+            capacity: Some(8),
+            wave_calls: 0,
+            single_calls: 0,
+        }
+    }
+
+    /// Override the reported capacity (None = no batched entry).
+    pub fn with_capacity(mut self, capacity: Option<usize>) -> Self {
+        self.capacity = capacity;
+        self
+    }
+
+    /// Pure per-element value: mixes prompt byte, stream tag, layer,
+    /// token, and element index so distinct prompts produce distinct
+    /// (but reproducible) tensors.
+    fn val(tag: u32, byte: u8, layer: usize, t: usize, j: usize) -> f32 {
+        let h = tag
+            .wrapping_mul(0x9E37)
+            .wrapping_add(byte as u32 * 131)
+            .wrapping_add(layer as u32 * 31)
+            .wrapping_add(t as u32 * 7)
+            .wrapping_add(j as u32);
+        ((h % 2003) as f32 - 1001.0) / 257.0
+    }
+
+    /// Fill one lane of the seven positional buffers ([`lane_out`]
+    /// order) with the pure per-lane map.
+    fn fill_lane(&self, prompt: &[u8], plen: usize, lane: usize, bufs: &mut [Vec<f32>; 7]) {
+        let (l, s, kvd, dl, v) = (
+            self.n_layer,
+            self.max_seq,
+            self.kv_dim,
+            self.ae_latent,
+            self.vocab,
+        );
+        // empty prompts still prefill one (zero) token row, matching
+        // the artifact path's zero-padded lane
+        let byte = |t: usize| {
+            if prompt.is_empty() {
+                0
+            } else {
+                prompt[t % prompt.len()]
+            }
+        };
+        for layer in 0..l {
+            for t in 0..plen {
+                for j in 0..kvd {
+                    let base = lane * l * s * kvd + layer * s * kvd + t * kvd + j;
+                    bufs[lane_out::K_RAW][base] = Self::val(1, byte(t), layer, t, j);
+                    bufs[lane_out::V_RAW][base] = Self::val(2, byte(t), layer, t, j);
+                    bufs[lane_out::K_EFF][base] = Self::val(5, byte(t), layer, t, j);
+                    bufs[lane_out::V_EFF][base] = Self::val(6, byte(t), layer, t, j);
+                }
+                for j in 0..dl {
+                    let base = lane * l * s * dl + layer * s * dl + t * dl + j;
+                    bufs[lane_out::K_LAT][base] = Self::val(3, byte(t), layer, t, j);
+                    bufs[lane_out::V_LAT][base] = Self::val(4, byte(t), layer, t, j);
+                }
+            }
+        }
+        for j in 0..v {
+            bufs[lane_out::LOGITS][lane * v + j] = Self::val(7, byte(plen - 1), plen, j, j);
+        }
+    }
+
+    /// Build one launch's output for the given lanes (pure per lane).
+    fn build(&self, prompts: &[(&[u8], usize)]) -> Result<WaveOutput> {
+        let (l, s, kvd, dl, v) = (
+            self.n_layer,
+            self.max_seq,
+            self.kv_dim,
+            self.ae_latent,
+            self.vocab,
+        );
+        let n = prompts.len();
+        let mut bufs: [Vec<f32>; 7] = [
+            vec![0.0; n * v],
+            vec![0.0; n * l * s * kvd],
+            vec![0.0; n * l * s * kvd],
+            vec![0.0; n * l * s * dl],
+            vec![0.0; n * l * s * dl],
+            vec![0.0; n * l * s * kvd],
+            vec![0.0; n * l * s * kvd],
+        ];
+        for (lane, &(p, plen)) in prompts.iter().enumerate() {
+            self.fill_lane(p, plen, lane, &mut bufs);
+        }
+        let names = ["logits", "k_raw", "v_raw", "k_lat", "v_lat", "k_eff", "v_eff"];
+        let shapes: [Vec<usize>; 7] = [
+            vec![n, v],
+            vec![n, l, s, kvd],
+            vec![n, l, s, kvd],
+            vec![n, l, s, dl],
+            vec![n, l, s, dl],
+            vec![n, l, s, kvd],
+            vec![n, l, s, kvd],
+        ];
+        let tensors = names
+            .iter()
+            .zip(shapes)
+            .zip(bufs)
+            .map(|((name, shape), data)| (name.to_string(), Tensor::f32(shape, data)))
+            .collect();
+        WaveOutput::new(tensors, n, n)
+    }
+}
+
+impl WavePrefiller for LaneWiseMockPrefiller {
+    fn wave_capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    fn prefill_wave(&mut self, prompts: &[(&[u8], usize)]) -> Result<WaveOutput> {
+        if let Some(cap) = self.capacity {
+            anyhow::ensure!(prompts.len() <= cap, "wave exceeds mock capacity");
+        } else {
+            return Err(anyhow!("mock has no batched prefill entry"));
+        }
+        self.wave_calls += 1;
+        self.build(prompts)
+    }
+
+    fn prefill_one(&mut self, prompt: &[u8], plen: usize) -> Result<WaveOutput> {
+        self.single_calls += 1;
+        self.build(&[(prompt, plen)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::CacheConfig;
+    use crate::model::memory::CompressionPlan;
+    use crate::model::Arch;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "wave".into(),
+            arch: Arch::Gpt2,
+            vocab: 64,
+            n_layer: 3,
+            d_model: 24,
+            n_head: 3,
+            n_kv_head: 3,
+            d_head: 8,
+            ffn_dim: 48,
+            max_seq: 32,
+            ae_hidden: 16,
+            ae_latent: 12,
+            bytes_per_el: 4,
+        }
+    }
+
+    #[test]
+    fn mock_wave_lane_equals_single_call_bitwise() {
+        let spec = tiny_spec();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+        let prompts: [&[u8]; 3] = [b"abc", b"defgh", b"z"];
+        let lanes: Vec<(&[u8], usize)> = prompts.iter().map(|p| (*p, p.len())).collect();
+        let wave = mock.prefill_wave(&lanes).unwrap();
+        for (i, &(p, plen)) in lanes.iter().enumerate() {
+            let one = mock.prefill_one(p, plen).unwrap();
+            for out in 0..7 {
+                let a = wave.lane(out, i).unwrap();
+                let b = one.lane(out, 0).unwrap();
+                assert!(
+                    a.len() == b.len()
+                        && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "mock lane {i} output {out} must be a pure per-lane map"
+                );
+            }
+        }
+        assert_eq!((mock.wave_calls, mock.single_calls), (1, 3));
+    }
+
+    #[test]
+    fn wave_chunks_by_capacity_and_lone_remainder_falls_back() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+        let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec).with_capacity(Some(2));
+        let mut wave = PrefillWave::new();
+        let prompts: Vec<&[u8]> = vec![b"aa", b"bb", b"cc", b"dd", b"ee"];
+        let admitted = wave
+            .admit_wave(&mut cache, &mut effs, &spec, true, &prompts, &mut mock)
+            .unwrap();
+        assert_eq!(admitted.len(), 5);
+        // 5 prompts at capacity 2: two batched chunks + a lone single
+        assert_eq!(mock.wave_calls, 2);
+        assert_eq!(mock.single_calls, 1);
+        assert_eq!(wave.stats.launches, 3);
+        assert_eq!(wave.stats.batched_lanes, 4);
+        assert_eq!(wave.stats.fallback_prefills, 1);
+        // every admission carries its prompt rows and a seeded watermark
+        for (lane, p) in admitted.iter().zip(&prompts) {
+            assert_eq!(cache.seq_len(lane.cache_id), Some(p.len()));
+            assert_eq!(cache.decoded_upto(lane.cache_id), Some(p.len()));
+            assert_eq!(lane.logits.len(), spec.vocab);
+        }
+    }
+
+    #[test]
+    fn faithful_mode_leaves_watermark_at_zero() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+        let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut wave = PrefillWave::new();
+        let prompts: Vec<&[u8]> = vec![b"abcd", b"efg"];
+        let admitted = wave
+            .admit_wave(&mut cache, &mut effs, &spec, false, &prompts, &mut mock)
+            .unwrap();
+        for lane in &admitted {
+            assert_eq!(cache.decoded_upto(lane.cache_id), Some(0));
+            let eff = &effs[&lane.cache_id];
+            assert!(eff.k.iter().all(|&x| x == 0.0), "faithful mode must not seed");
+        }
+    }
+
+    #[test]
+    fn padding_accounting_uses_wave_bucket() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut wave = PrefillWave::new();
+        // plens 3 and 7 -> bucket 8 -> padding (8-3) + (8-7) = 6
+        let prompts: Vec<&[u8]> = vec![b"abc", b"abcdefg"];
+        wave.admit_wave(&mut cache, &mut effs, &spec, true, &prompts, &mut mock)
+            .unwrap();
+        assert_eq!(wave.stats.padded_rows, 6);
+    }
+}

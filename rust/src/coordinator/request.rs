@@ -1,6 +1,6 @@
 //! Request/response types for the serving path.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 /// Token selection policy.
@@ -25,10 +25,17 @@ pub struct GenRequest {
     /// stop generation at this byte (e.g. b'.'), in addition to the
     /// max_new_tokens budget
     pub stop_byte: Option<u8>,
+    /// when the request entered the system (defaults to construction
+    /// time).  The scheduler measures `queue_latency` from here to the
+    /// start of the request's prefill wave, so staggered arrivals get
+    /// their real individual waits — not one shared run-start stamp.
+    /// Replays of archived traces should restamp with [`GenRequest::at`]
+    /// at submission time.
+    pub arrival: Instant,
 }
 
 impl GenRequest {
-    /// Greedy request with no stop byte.
+    /// Greedy request with no stop byte, arriving now.
     pub fn greedy(id: u64, prompt: &[u8], max_new_tokens: usize) -> GenRequest {
         GenRequest {
             id,
@@ -36,7 +43,14 @@ impl GenRequest {
             max_new_tokens,
             sampling: Sampling::Greedy,
             stop_byte: None,
+            arrival: Instant::now(),
         }
+    }
+
+    /// Same request with an explicit arrival time (trace replay, tests).
+    pub fn at(mut self, arrival: Instant) -> GenRequest {
+        self.arrival = arrival;
+        self
     }
 }
 

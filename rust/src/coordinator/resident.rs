@@ -140,34 +140,20 @@ impl SlotArena {
         self.synced.remove(&id);
     }
 
-    /// Bring the resident regions up to date for one decode round.
-    ///
-    /// `live` is `(cache_id, rows_materialized)` for every sequence
-    /// taking a slot this round (`rows_materialized` = the cache
-    /// manager's `decoded_upto` watermark: rows `[0, n)` of the
-    /// sequence's [`EffectiveCache`] scratch are valid); `b` is the
-    /// compiled decode batch; `dims` is `(n_layer, max_seq, kv_dim)`.
-    ///
-    /// After this returns, the store's `k_cache`/`v_cache` tensors are
-    /// bitwise identical to what [`stage_copy_round`] would have
-    /// produced for the same per-slot contents, having moved only
-    /// O(new rows) bytes in steady state.
-    pub fn stage_round(
+    /// Open both regions at capacity rung `b` and invalidate all slot
+    /// state if anything about the backing allocations changed (rung
+    /// switch, first registration, epoch bump from an external
+    /// release/re-register).  Returns the per-side `fresh` flags —
+    /// a fresh region is already zeroed, so zero-fills are skipped.
+    fn ensure_rung(
         &mut self,
         store: &mut Store,
-        live: &[(u64, usize)],
-        effs: &HashMap<u64, EffectiveCache>,
         b: usize,
         dims: (usize, usize, usize),
         metrics: &mut ServeMetrics,
-    ) -> Result<()> {
+    ) -> [bool; 2] {
         let (l, s, kvd) = dims;
         let seq_elems = l * s * kvd;
-        anyhow::ensure!(
-            live.len() <= b,
-            "{} live sequences exceed {b} decode slots",
-            live.len()
-        );
         // open (or create) both regions up front so any reallocation —
         // rung switch, first round, or an external release/re-register —
         // surfaces as an epoch change *before* slot actions are planned
@@ -198,6 +184,95 @@ impl SlotArena {
             self.synced.clear();
             self.epochs = epochs;
         }
+        fresh
+    }
+
+    /// Seed one freshly-admitted sequence's slot straight from its
+    /// prefill lane: assign the lowest free slot at rung `b` and fill
+    /// rows `[0, upto)` from the sequence's [`EffectiveCache`] scratch
+    /// (which the admission wave just seeded).  The next decode round
+    /// then finds the slot synced and stages **zero** bytes for this
+    /// sequence instead of paying the full `Rebuild` there — the slot
+    /// fill moves to admission, where the wave's data is hot.
+    ///
+    /// Counted as a slot rebuild (`ServeMetrics::slot_rebuild_bytes` /
+    /// `slot_rebuilds`), exactly like the fill `stage_round` would
+    /// otherwise have performed — the one-fill-per-admission law is
+    /// unchanged, only its timing moves.  Returns `false` (no state
+    /// touched) when every slot at rung `b` is taken; `stage_round`
+    /// rebuilds as before in that case.
+    ///
+    /// `seq` is `(cache_id, rows_materialized)`, the same pair shape
+    /// `stage_round`'s `live` entries use.
+    pub fn seed_slot(
+        &mut self,
+        store: &mut Store,
+        seq: (u64, usize),
+        eff: &EffectiveCache,
+        b: usize,
+        dims: (usize, usize, usize),
+        metrics: &mut ServeMetrics,
+    ) -> Result<bool> {
+        let (id, upto) = seq;
+        let (l, s, kvd) = dims;
+        let seq_elems = l * s * kvd;
+        let fresh = self.ensure_rung(store, b, dims, metrics);
+        anyhow::ensure!(
+            self.slot_of(id).is_none(),
+            "sequence {id} already holds a slot (seed is for fresh admissions)"
+        );
+        let Some(slot) = (0..self.b).find(|&sl| self.assign[sl].is_none()) else {
+            return Ok(false);
+        };
+        self.assign[slot] = Some(id);
+        for (i, (name, side)) in [(K_CACHE, Side::K), (V_CACHE, Side::V)]
+            .into_iter()
+            .enumerate()
+        {
+            // re-opened, not re-created: ensure_rung already sized both
+            let (region, _) = store.resident_region(name, vec![b, l, s, kvd]);
+            let dst = &mut region[slot * seq_elems..(slot + 1) * seq_elems];
+            if self.dirty[slot] && !fresh[i] {
+                dst.fill(0.0);
+                metrics.slot_rebuild_bytes += (seq_elems * 4) as u64;
+            }
+            metrics.slot_rebuild_bytes += eff.sync_rows_into(side, dst, 0, upto) as u64;
+        }
+        self.dirty[slot] = false;
+        self.synced.insert(id, upto);
+        metrics.slot_rebuilds += 1;
+        Ok(true)
+    }
+
+    /// Bring the resident regions up to date for one decode round.
+    ///
+    /// `live` is `(cache_id, rows_materialized)` for every sequence
+    /// taking a slot this round (`rows_materialized` = the cache
+    /// manager's `decoded_upto` watermark: rows `[0, n)` of the
+    /// sequence's [`EffectiveCache`] scratch are valid); `b` is the
+    /// compiled decode batch; `dims` is `(n_layer, max_seq, kv_dim)`.
+    ///
+    /// After this returns, the store's `k_cache`/`v_cache` tensors are
+    /// bitwise identical to what [`stage_copy_round`] would have
+    /// produced for the same per-slot contents, having moved only
+    /// O(new rows) bytes in steady state.
+    pub fn stage_round(
+        &mut self,
+        store: &mut Store,
+        live: &[(u64, usize)],
+        effs: &HashMap<u64, EffectiveCache>,
+        b: usize,
+        dims: (usize, usize, usize),
+        metrics: &mut ServeMetrics,
+    ) -> Result<()> {
+        let (l, s, kvd) = dims;
+        let seq_elems = l * s * kvd;
+        anyhow::ensure!(
+            live.len() <= b,
+            "{} live sequences exceed {b} decode slots",
+            live.len()
+        );
+        let fresh = self.ensure_rung(store, b, dims, metrics);
 
         // stable assignment: nobody moves unless they must
         let ids: Vec<u64> = live.iter().map(|p| p.0).collect();
@@ -404,6 +479,51 @@ mod tests {
             .stage_round(&mut store, &[], &effs, 2, (l, s, kvd), &mut m)
             .unwrap();
         assert_eq!(m.slot_rebuild_bytes, before + zeroed, "no per-round re-zeroing");
+    }
+
+    #[test]
+    fn seeded_slot_syncs_zero_bytes_on_first_round() {
+        let spec = tiny_spec();
+        let (l, s, kvd) = dims(&spec);
+        let mut store = Store::new();
+        let mut m = ServeMetrics::default();
+        let mut arena = SlotArena::new();
+        let mut effs = HashMap::new();
+        let mut eff = EffectiveCache::new(&spec);
+        eff.k.fill(3.0);
+        eff.v.fill(4.0);
+        effs.insert(9u64, eff);
+        // admission-time seed: slot assigned + filled, one rebuild
+        assert!(arena
+            .seed_slot(&mut store, (9, 5), &effs[&9], 2, (l, s, kvd), &mut m)
+            .unwrap());
+        assert_eq!(arena.slot_of(9), Some(0));
+        assert_eq!(m.slot_rebuilds, 1);
+        assert_eq!(m.slot_rebuild_bytes as usize, 2 * l * 5 * kvd * 4);
+        // the first decode round finds the slot synced: zero staged bytes
+        arena
+            .stage_round(&mut store, &[(9, 5)], &effs, 2, (l, s, kvd), &mut m)
+            .unwrap();
+        assert_eq!(m.slot_rebuilds, 1, "seeded slot must not rebuild again");
+        assert_eq!(m.staged_kv_bytes, 0);
+        let k = store.get(K_CACHE).unwrap().as_f32().unwrap();
+        assert_eq!(k[0], 3.0, "seeded rows must be resident");
+        // a second admission takes the next free slot
+        effs.insert(11u64, EffectiveCache::new(&spec));
+        assert!(arena
+            .seed_slot(&mut store, (11, 2), &effs[&11], 2, (l, s, kvd), &mut m)
+            .unwrap());
+        assert_eq!(arena.slot_of(11), Some(1));
+        // a third admission finds no free slot: nothing changes
+        effs.insert(12u64, EffectiveCache::new(&spec));
+        assert!(!arena
+            .seed_slot(&mut store, (12, 1), &effs[&12], 2, (l, s, kvd), &mut m)
+            .unwrap());
+        assert_eq!(arena.slot_of(12), None);
+        // double-seeding an already-slotted sequence is a logic error
+        assert!(arena
+            .seed_slot(&mut store, (9, 5), &effs[&9], 2, (l, s, kvd), &mut m)
+            .is_err());
     }
 
     #[test]

@@ -3,10 +3,18 @@
 //!
 //! Dataflow per the paper's Fig. 1:
 //!
-//! * **prefill** — one request at a time through the `{m}_prefill`
-//!   artifact (store-transform semantics), then the prompt's compressed
-//!   rows enter the cache manager (latents for AE layers, raw or
-//!   head-subset rows otherwise; int8-packed when the plan stacks Eq. 4).
+//! * **prefill** — admission is *wave-based*: each round's admitted
+//!   requests prefill together through the `[B, S]` `{m}_prefill_b`
+//!   artifact — **one launch per admission wave** instead of one per
+//!   request (`coordinator::prefill::PrefillWave`; ladder down to the
+//!   per-request `{m}_prefill` for lone admissions and artifact sets
+//!   that predate the batched entry).  Every lane is bit-identical to a
+//!   per-request prefill, so wave admission changes launch counts, not
+//!   outputs.  Each lane's compressed rows then enter the cache manager
+//!   (latents for AE layers, raw or head-subset rows otherwise;
+//!   int8-packed when the plan stacks Eq. 4), and — on the resident
+//!   path — the lane seeds its decode slot up front
+//!   (`SlotArena::seed_slot`).
 //! * **decode** — active sequences are batched each round through
 //!   `{m}_decode_step_b{B}`; the artifact receives the *effective*
 //!   (decoded + reuse-resolved) cache, appends the new token's raw row
@@ -47,6 +55,7 @@
 use super::batcher::{plan_parking, plan_resume, plan_round, BatcherConfig};
 use super::effective::{BatchLatentDecoder, BatchedAdvance, EffectiveCache, LatentDecoder};
 use super::metrics::ServeMetrics;
+use super::prefill::{PrefillWave, WaveOutput, WavePrefiller};
 use super::request::{GenRequest, GenResponse, Sampling};
 use super::resident::{stage_copy_round, SlotArena};
 use crate::compress::planner::{to_masks, RuntimeMasks};
@@ -88,6 +97,13 @@ pub struct ServeConfig {
     /// legacy copy staging, kept as the bitwise reference
     /// (`ServeMetrics::staged_kv_bytes` measures both).
     pub resident_cache: bool,
+    /// admit each round's wave of requests through one batched
+    /// `{m}_prefill_b` launch (when the artifact set has the entry)
+    /// instead of one `{m}_prefill` launch per request.  `false` forces
+    /// the per-request ladder rung — kept as the launch-count baseline
+    /// and bitwise reference (every lane of the batched entry is
+    /// bit-identical to a per-request call, so outputs never differ).
+    pub batched_prefill: bool,
     /// block encoding for raw (non-latent) stored rows.  `F16` is the
     /// default for new serving configs (the paper's fp16 serving
     /// assumption — half the raw-row bytes).  **Interaction with
@@ -103,7 +119,8 @@ pub struct ServeConfig {
 
 impl ServeConfig {
     /// Serving defaults for a plan: batch 8, in-graph reconstruction,
-    /// no budget, store-resident staging, f16 raw rows.
+    /// no budget, store-resident staging, batched admission prefill,
+    /// f16 raw rows.
     pub fn new(plan: CompressionPlan) -> ServeConfig {
         ServeConfig {
             plan,
@@ -112,6 +129,7 @@ impl ServeConfig {
             per_step_reconstruct: false,
             cache_budget: None,
             resident_cache: true,
+            batched_prefill: true,
             raw_format: Format::F16,
         }
     }
@@ -144,7 +162,6 @@ struct ActiveSeq {
     pos: usize,
     next_token: u8,
     output: Vec<u8>,
-    enqueued: Instant,
     prefill_start: Instant,
     prefill_end: Instant,
     decode_time: std::time::Duration,
@@ -182,6 +199,8 @@ pub struct ServingEngine<'e> {
     /// batch-first faithful-advance planner (shared packing staging
     /// + launch counters)
     pub batched: BatchedAdvance,
+    /// wave-based admission planner (prefill ladder + launch counters)
+    pub waves: PrefillWave,
     /// owner of the store-resident `k_cache`/`v_cache` staging regions:
     /// stable slot assignment, sync watermarks, dirty-padding bits
     pub arena: SlotArena,
@@ -227,6 +246,7 @@ impl<'e> ServingEngine<'e> {
             metrics: ServeMetrics::default(),
             tier: HostTier::new(),
             batched: BatchedAdvance::new(),
+            waves: PrefillWave::new(),
             arena: SlotArena::new(),
             eff: HashMap::new(),
             decode_batches,
@@ -273,92 +293,108 @@ impl<'e> ServingEngine<'e> {
         }
     }
 
-    /// Run prefill for one request; returns the active sequence handle.
-    fn prefill(&mut self, req: GenRequest, enqueued: Instant) -> Result<ActiveSeq> {
-        let t0 = Instant::now();
-        let (l, s, kvd, dl, v) = (
-            self.spec.n_layer,
-            self.spec.max_seq,
-            self.spec.kv_dim(),
-            self.spec.ae_latent,
-            self.spec.vocab,
-        );
-        let plen = req.prompt.len().clamp(1, s - 1);
-        {
-            let tokens = self.store.insert_view_i32("tokens", vec![1, s]);
-            tokens.fill(0);
-            for t in 0..plen {
-                tokens[t] = req.prompt[t] as i32;
-            }
-        }
-        {
-            let mask = self.store.insert_view("len_mask", vec![1, s]);
-            mask.fill(0.0);
-            mask[..plen].fill(1.0);
-        }
-        self.store
-            .insert("last", Tensor::scalar_i32((plen - 1) as i32));
-        let entry = format!("{}_prefill", self.model);
-        let out = self.engine.execute(&entry, &self.store)?;
-        let logits = out[0].1.as_f32()?;
-        debug_assert_eq!(logits.len(), v);
-        let k_raw = out[1].1.as_f32()?;
-        let v_raw = out[2].1.as_f32()?;
-        let k_lat = out[3].1.as_f32()?;
-        let v_lat = out[4].1.as_f32()?;
-        let k_eff = out[5].1.as_f32()?;
-        let v_eff = out[6].1.as_f32()?;
-        debug_assert_eq!(k_lat.len(), l * s * dl);
-        debug_assert_eq!(k_raw.len(), l * s * kvd);
-
-        // bulk-ingest the prompt's compressed rows (the artifact outputs
-        // are already [L, S, *] prefill-shaped — no per-token staging)
-        let cache_id = self.cache.create_sequence();
-        self.cache
-            .append_rows(cache_id, plen, s, k_lat, v_lat, k_raw, v_raw)?;
-
-        // effective-cache scratch.  In-graph mode seeds from the
-        // prefill's exact k_eff/v_eff (and advances the watermark); the
-        // faithful mode leaves the watermark at 0 so the first decode
-        // round reconstructs the prompt from the compressed store.
-        let mut eff = EffectiveCache::new(&self.spec);
-        if !self.cfg.per_step_reconstruct {
-            eff.seed(&mut self.cache, cache_id, k_eff, v_eff, plen);
-        }
-        self.eff.insert(cache_id, eff);
-
-        let first = self.sample(logits, req.sampling);
-        let now = Instant::now();
-        self.metrics.prefill_latency.record(now - t0);
-        self.metrics.queue_latency.record(t0 - enqueued);
-        self.metrics.tokens_generated += 1; // prefill samples the first token
-        self.admit_counter += 1;
-        let mut seq = ActiveSeq {
-            cache_id,
-            pos: plen,
-            next_token: first,
-            output: vec![first],
-            enqueued,
-            prefill_start: t0,
-            prefill_end: now,
-            decode_time: std::time::Duration::ZERO,
-            done: false,
-            admit_seq: self.admit_counter,
-            parked: false,
-            req,
-        };
-        self.check_done(&mut seq);
-        Ok(seq)
+    /// Smallest compiled decode batch covering `live` concurrent
+    /// sequences (the rung `decode_round` runs at and `seed_slot`
+    /// seeds at — both must agree or seeded slots rebuild).
+    fn decode_rung(&self, live: usize) -> usize {
+        *self
+            .decode_batches
+            .iter()
+            .find(|&&b| b >= live)
+            .unwrap_or(self.decode_batches.last().unwrap())
     }
 
-    fn check_done(&self, seq: &mut ActiveSeq) {
-        let last = *seq.output.last().unwrap();
-        if seq.output.len() >= seq.req.max_new_tokens
-            || seq.pos >= self.spec.max_seq
-            || seq.req.stop_byte == Some(last)
-        {
-            seq.done = true;
+    /// Admit one wave of requests: prefill them together (one
+    /// `{m}_prefill_b` launch per capacity chunk when available —
+    /// `coordinator::prefill`), sample each lane's first token, and on
+    /// the resident path seed each new sequence's decode slot from its
+    /// lane.  `live_before` is the pre-wave live-set size, from which
+    /// the next decode round's capacity rung is projected so slot
+    /// seeding lands on the rung the round will actually run at.
+    fn admit_wave(
+        &mut self,
+        reqs: Vec<GenRequest>,
+        live_before: usize,
+    ) -> Result<Vec<ActiveSeq>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
         }
+        let t0 = Instant::now();
+        let launches_before = self.waves.stats.launches;
+        let prompts: Vec<&[u8]> = reqs.iter().map(|r| r.prompt.as_slice()).collect();
+        let mut runner = ArtifactPrefiller {
+            engine: &mut *self.engine,
+            store: &mut self.store,
+            model: &self.model,
+            spec: &self.spec,
+            batched: self.cfg.batched_prefill,
+        };
+        let admitted = self.waves.admit_wave(
+            &mut self.cache,
+            &mut self.eff,
+            &self.spec,
+            !self.cfg.per_step_reconstruct,
+            &prompts,
+            &mut runner,
+        )?;
+        let now = Instant::now();
+        let arrivals: Vec<Instant> = reqs.iter().map(|r| r.arrival).collect();
+        self.metrics.record_wave(
+            t0,
+            &arrivals,
+            self.waves.stats.launches - launches_before,
+        );
+        let mut out = Vec::with_capacity(reqs.len());
+        for (req, lane) in reqs.into_iter().zip(admitted) {
+            let plen = req.prompt.len().clamp(1, self.spec.max_seq - 1);
+            let first = self.sample(&lane.logits, req.sampling);
+            self.metrics.prefill_latency.record(now - t0);
+            self.metrics.tokens_generated += 1; // prefill samples the first token
+            self.admit_counter += 1;
+            let mut seq = ActiveSeq {
+                cache_id: lane.cache_id,
+                pos: plen,
+                next_token: first,
+                output: vec![first],
+                prefill_start: t0,
+                prefill_end: now,
+                decode_time: std::time::Duration::ZERO,
+                done: false,
+                admit_seq: self.admit_counter,
+                parked: false,
+                req,
+            };
+            seq.generated_check(self.spec.max_seq);
+            out.push(seq);
+        }
+        // resident path, in-graph mode: seed each surviving lane's
+        // decode slot now, while its effective rows are hot — the next
+        // round then syncs zero bytes for it instead of a full rebuild.
+        // (Faithful mode has nothing to seed: the watermark is 0 and
+        // the first round reconstructs the prompt from the store.)
+        if self.cfg.resident_cache && !self.cfg.per_step_reconstruct {
+            let live_after = live_before + out.iter().filter(|s| !s.done).count();
+            if live_after > 0 {
+                let b = self.decode_rung(live_after);
+                let dims = (self.spec.n_layer, self.spec.max_seq, self.spec.kv_dim());
+                for seq in out.iter().filter(|s| !s.done) {
+                    let eff = self
+                        .eff
+                        .get(&seq.cache_id)
+                        .expect("admitted sequence must have an effective cache");
+                    let upto = self.cache.decoded_upto(seq.cache_id).unwrap_or(0);
+                    self.arena.seed_slot(
+                        &mut self.store,
+                        (seq.cache_id, upto),
+                        eff,
+                        b,
+                        dims,
+                        &mut self.metrics,
+                    )?;
+                }
+            }
+        }
+        Ok(out)
     }
 
     /// Faithful full reconstruction of one sequence's effective cache
@@ -446,11 +482,7 @@ impl<'e> ServingEngine<'e> {
             self.batched
                 .advance_round(&mut self.cache, &mut self.eff, &ids, &mut dec)?;
         }
-        let b = *self
-            .decode_batches
-            .iter()
-            .find(|&&b| b >= live.len())
-            .unwrap_or(self.decode_batches.last().unwrap());
+        let b = self.decode_rung(live.len());
         let rows = live.len().min(b);
         let (l, s, kvd, dl, v) = (
             self.spec.n_layer,
@@ -587,7 +619,11 @@ impl<'e> ServingEngine<'e> {
             output: seq.output,
             prefill_latency: seq.prefill_end - seq.prefill_start,
             decode_latency: seq.decode_time,
-            queue_latency: seq.prefill_start - seq.enqueued,
+            // the request's own arrival stamp: staggered arrivals get
+            // their real waits, not a shared run-start timestamp
+            queue_latency: seq
+                .prefill_start
+                .saturating_duration_since(seq.req.arrival),
         }
     }
 
@@ -682,12 +718,12 @@ impl<'e> ServingEngine<'e> {
         Ok(())
     }
 
-    /// Serve a workload to completion with continuous batching: admit new
-    /// prefills whenever a decode slot frees up, and under a cache budget
+    /// Serve a workload to completion with continuous batching: admit
+    /// each round's wave of new requests through one batched prefill
+    /// launch whenever decode slots free up, and under a cache budget
     /// automatically park/resume sequences through the host tier.
     pub fn run(&mut self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
         let t0 = Instant::now();
-        let enqueued = Instant::now();
         let mut waiting: VecDeque<GenRequest> = requests.into();
         let mut active: Vec<ActiveSeq> = Vec::new();
         let mut done: Vec<GenResponse> = Vec::new();
@@ -722,10 +758,10 @@ impl<'e> ServingEngine<'e> {
             } else {
                 plan.admit
             };
-            for _ in 0..admit {
-                let req = waiting.pop_front().unwrap();
-                active.push(self.prefill(req, enqueued)?);
-            }
+            // the whole wave prefills through one launch (prefill_b)
+            let wave: Vec<GenRequest> = waiting.drain(..admit).collect();
+            let live_before = active.iter().filter(|s| !s.done && !s.parked).count();
+            active.extend(self.admit_wave(wave, live_before)?);
             if active.is_empty() {
                 break;
             }
@@ -877,6 +913,104 @@ impl BatchLatentDecoder for ArtifactDecoder<'_> {
         k_rec.copy_from_slice(&out[0].1.as_f32()?[..b * l * kvd]);
         v_rec.copy_from_slice(&out[1].1.as_f32()?[..b * l * kvd]);
         Ok(())
+    }
+}
+
+/// [`WavePrefiller`] over the AOT prefill artifacts.
+///
+/// Fallback ladder (most to least specific):
+///
+/// 1. `{m}_prefill_b` — `[B, S]` cross-request batched prefill: one
+///    launch admits a whole wave (unused lanes zero-padded up to the
+///    compiled B; an all-zero `len_mask` lane is inert by
+///    construction, see `python/compile/model.py::make_prefill_b`).
+/// 2. `{m}_prefill` — `[1, S]` per-request prefill: lone admissions
+///    and artifact sets built before the batched entry existed (or
+///    `ServeConfig::batched_prefill = false`).
+///
+/// Both rungs stage through `Store::insert_view*`, so wave packing
+/// reuses the same resident buffers across admissions, and the
+/// executed output tensors are handed to the planner as-is
+/// (`WaveOutput` borrows lanes out of them — no per-lane copies).
+struct ArtifactPrefiller<'a> {
+    engine: &'a mut Engine,
+    store: &'a mut Store,
+    model: &'a str,
+    spec: &'a ModelSpec,
+    /// `ServeConfig::batched_prefill`: `false` reports no capacity,
+    /// forcing the per-request rung (the launch-count baseline)
+    batched: bool,
+}
+
+impl WavePrefiller for ArtifactPrefiller<'_> {
+    fn wave_capacity(&self) -> Option<usize> {
+        if !self.batched {
+            return None;
+        }
+        let entry = format!("{}_prefill_b", self.model);
+        self.engine
+            .manifest
+            .entries
+            .get(&entry)
+            .and_then(|e| e.inputs.iter().find(|io| io.name == "tokens"))
+            .and_then(|io| io.shape.first().copied())
+    }
+
+    fn prefill_wave(&mut self, prompts: &[(&[u8], usize)]) -> Result<WaveOutput> {
+        let s = self.spec.max_seq;
+        let cap = self
+            .wave_capacity()
+            .ok_or_else(|| anyhow!("artifact set has no {}_prefill_b entry", self.model))?;
+        anyhow::ensure!(
+            prompts.len() <= cap,
+            "wave of {} exceeds compiled prefill capacity {cap}",
+            prompts.len()
+        );
+        // pack the wave's lanes; dead lanes keep zero tokens and an
+        // all-zero mask (inert — the compiled graph's diagonal guard
+        // keeps them NaN-free and they touch no live lane)
+        {
+            let tokens = self.store.insert_view_i32_zeroed("tokens", vec![cap, s]);
+            for (lane, &(p, plen)) in prompts.iter().enumerate() {
+                for t in 0..plen.min(p.len()) {
+                    tokens[lane * s + t] = p[t] as i32;
+                }
+            }
+        }
+        {
+            let mask = self.store.insert_view_zeroed("len_mask", vec![cap, s]);
+            for (lane, &(_, plen)) in prompts.iter().enumerate() {
+                mask[lane * s..lane * s + plen].fill(1.0);
+            }
+        }
+        {
+            let last = self.store.insert_view_i32_zeroed("last", vec![cap]);
+            for (lane, &(_, plen)) in prompts.iter().enumerate() {
+                last[lane] = (plen - 1) as i32;
+            }
+        }
+        let entry = format!("{}_prefill_b", self.model);
+        let out = self.engine.execute(&entry, self.store)?;
+        WaveOutput::new(out, cap, prompts.len())
+    }
+
+    fn prefill_one(&mut self, prompt: &[u8], plen: usize) -> Result<WaveOutput> {
+        let s = self.spec.max_seq;
+        {
+            let tokens = self.store.insert_view_i32_zeroed("tokens", vec![1, s]);
+            for t in 0..plen.min(prompt.len()) {
+                tokens[t] = prompt[t] as i32;
+            }
+        }
+        {
+            let mask = self.store.insert_view_zeroed("len_mask", vec![1, s]);
+            mask[..plen].fill(1.0);
+        }
+        self.store
+            .insert("last", Tensor::scalar_i32((plen - 1) as i32));
+        let entry = format!("{}_prefill", self.model);
+        let out = self.engine.execute(&entry, self.store)?;
+        WaveOutput::new(out, 1, 1)
     }
 }
 

@@ -13,7 +13,7 @@ use crate::data::corpus::Corpus;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 /// Request arrival process for synthetic workloads.
@@ -103,6 +103,9 @@ pub fn generate(cfg: &TraceConfig, corpus: &mut Corpus) -> Trace {
                     None => Sampling::Greedy,
                 },
                 stop_byte: None,
+                // replays restamp at submission (GenRequest::at); the
+                // generation-time stamp only covers direct `run` calls
+                arrival: Instant::now(),
             },
         });
     }
@@ -170,6 +173,7 @@ impl Trace {
                         .ok_or_else(|| anyhow!("trace item missing max_new"))?,
                     sampling,
                     stop_byte: None,
+                    arrival: Instant::now(),
                 },
             });
         }

@@ -210,6 +210,10 @@ fn run(args: &Args) -> Result<()> {
                 // --copy-staging selects the legacy per-round full-copy
                 // k/v staging (perf A/B against the resident default)
                 resident_cache: !args.bool("copy-staging"),
+                // --per-request-prefill forces one prefill launch per
+                // admitted request (launch-count A/B against the
+                // batched admission-wave default)
+                batched_prefill: !args.bool("per-request-prefill"),
                 raw_format: if args.bool("raw-f32") {
                     kvcar::kvcache::Format::F32
                 } else {
@@ -236,6 +240,7 @@ fn run(args: &Args) -> Result<()> {
                         max_new_tokens: args.usize("max-new", 32),
                         sampling: Sampling::Greedy,
                         stop_byte: None,
+                        arrival: std::time::Instant::now(),
                     }
                 })
                 .collect();

@@ -124,6 +124,23 @@ impl Store {
         }
     }
 
+    /// [`Store::insert_view`] with guaranteed-zero contents: reused
+    /// allocations are memset before being returned, so callers that
+    /// write a sparse subset (wave packing, padded staging) never leak
+    /// a previous round's values into the padding.
+    pub fn insert_view_zeroed(&mut self, name: &str, shape: Vec<usize>) -> &mut [f32] {
+        let d = self.insert_view(name, shape);
+        d.fill(0.0);
+        d
+    }
+
+    /// [`Store::insert_view_i32`] with guaranteed-zero contents.
+    pub fn insert_view_i32_zeroed(&mut self, name: &str, shape: Vec<usize>) -> &mut [i32] {
+        let d = self.insert_view_i32(name, shape);
+        d.fill(0);
+        d
+    }
+
     /// Register (or re-open) a **persistent resident f32 region** and
     /// return `(data, fresh)`.
     ///
@@ -390,6 +407,17 @@ mod tests {
         // different element count: reallocates and zeroes
         let d = s.insert_view("stage", vec![4]);
         assert_eq!(d, [0.0; 4]);
+    }
+
+    #[test]
+    fn insert_view_zeroed_clears_reused_allocations() {
+        let mut s = Store::new();
+        s.insert_view("stage", vec![4]).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let d = s.insert_view_zeroed("stage", vec![4]);
+        assert_eq!(d, [0.0; 4], "reuse must not leak previous contents");
+        s.insert_view_i32("toks", vec![3]).copy_from_slice(&[7, 8, 9]);
+        let d = s.insert_view_i32_zeroed("toks", vec![3]);
+        assert_eq!(d, [0i32; 3]);
     }
 
     #[test]

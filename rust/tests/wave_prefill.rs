@@ -1,0 +1,258 @@
+//! Wave-based admission prefill, verified without artifacts (pure-rust
+//! mock prefiller):
+//!
+//! * a batched admission wave is **bitwise-identical** to sequential
+//!   per-request prefills — stored compressed streams, decode
+//!   watermarks, effective-cache contents, and greedy first tokens —
+//!   across random compression plans;
+//! * a wave of B <= capacity requests costs exactly **one** prefill
+//!   launch (the one-launch-per-wave law, via mock call counters);
+//! * the fallback ladder: a mock without the batched entry
+//!   (`wave_capacity() == None`) admits through the per-request rung
+//!   and still produces bit-identical results;
+//! * the over-budget head-of-line case: when the batcher admits
+//!   nothing and nothing is live, the scheduler's `admit.max(1)`
+//!   forces the head request through, which the wave planner serves as
+//!   a lone per-request prefill.
+
+use kvcar::coordinator::batcher::{plan_round, request_cache_bytes, BatcherConfig};
+use kvcar::coordinator::prefill::{LaneWiseMockPrefiller, PrefillWave};
+use kvcar::coordinator::EffectiveCache;
+use kvcar::kvcache::{CacheConfig, CacheManager, Side};
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::{Arch, ModelSpec};
+use kvcar::prop_assert;
+use kvcar::util::prop::check;
+use std::collections::HashMap;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec {
+        name: "wave".into(),
+        arch: Arch::Gpt2,
+        vocab: 96,
+        n_layer: 4,
+        d_model: 32,
+        n_head: 4,
+        n_kv_head: 4,
+        d_head: 8,
+        ffn_dim: 64,
+        max_seq: 48,
+        ae_hidden: 24,
+        ae_latent: 16,
+        bytes_per_el: 4,
+    }
+}
+
+fn greedy(logits: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) -> Result<(), String> {
+    prop_assert!(a.len() == b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        prop_assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: bit divergence at {i}: {x} vs {y}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn wave_admission_bitwise_matches_sequential_across_plans() {
+    check(25, |rng| {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head);
+        let n = rng.range(2, 7);
+        let prompts: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                let len = rng.range(1, spec.max_seq - 1);
+                (0..len).map(|_| rng.below(256) as u8).collect()
+            })
+            .collect();
+        let lanes: Vec<&[u8]> = prompts.iter().map(|p| p.as_slice()).collect();
+
+        // two identical worlds: one admits the wave batched, the other
+        // forces the per-request ladder rung (capacity None)
+        let mut m_wav = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+        let mut m_seq = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs_wav: HashMap<u64, EffectiveCache> = HashMap::new();
+        let mut effs_seq: HashMap<u64, EffectiveCache> = HashMap::new();
+        let mut mock_wav = LaneWiseMockPrefiller::for_spec(&spec)
+            .with_capacity(Some(rng.range(2, 9)));
+        let mut mock_seq = LaneWiseMockPrefiller::for_spec(&spec).with_capacity(None);
+        let mut pw_wav = PrefillWave::new();
+        let mut pw_seq = PrefillWave::new();
+        let seed = rng.bool(0.5); // in-graph seeding and faithful both hold
+        let adm_wav = pw_wav
+            .admit_wave(&mut m_wav, &mut effs_wav, &spec, seed, &lanes, &mut mock_wav)
+            .map_err(|e| e.to_string())?;
+        let adm_seq = pw_seq
+            .admit_wave(&mut m_seq, &mut effs_seq, &spec, seed, &lanes, &mut mock_seq)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(mock_seq.wave_calls == 0, "capacity None must never batch");
+        prop_assert!(
+            pw_seq.stats.launches == n as u64,
+            "per-request rung costs one launch per request"
+        );
+
+        for ((w, s), prompt) in adm_wav.iter().zip(&adm_seq).zip(&prompts) {
+            prop_assert!(w.cache_id == s.cache_id, "admission order must match");
+            let id = w.cache_id;
+            // sampled first tokens: greedy over bit-identical logits
+            assert_bits_eq(&w.logits, &s.logits, "lane logits")?;
+            prop_assert!(
+                greedy(&w.logits) == greedy(&s.logits),
+                "greedy first tokens diverge"
+            );
+            // watermarks
+            prop_assert!(
+                m_wav.decoded_upto(id) == m_seq.decoded_upto(id),
+                "decode watermarks diverge"
+            );
+            prop_assert!(
+                m_wav.seq_len(id) == Some(prompt.len()) && m_seq.seq_len(id) == Some(prompt.len()),
+                "prompt rows must be ingested"
+            );
+            // stored compressed streams, stream by stream
+            prop_assert!(
+                m_wav.seq_stored_bytes(id) == m_seq.seq_stored_bytes(id),
+                "stored bytes diverge"
+            );
+            for layer in 0..spec.n_layer {
+                for side in [Side::K, Side::V] {
+                    let a = format!("{:?}", m_wav.stored_rows(id, layer, side));
+                    let b = format!("{:?}", m_seq.stored_rows(id, layer, side));
+                    prop_assert!(a == b, "stream ({layer}, {side:?}) diverges");
+                }
+            }
+            // effective-cache scratch (seeded rows or all-zero faithful)
+            let ew = &effs_wav[&id];
+            let es = &effs_seq[&id];
+            assert_bits_eq(&ew.k, &es.k, "effective K")?;
+            assert_bits_eq(&ew.v, &es.v, "effective V")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wave_of_b_requests_costs_one_launch() {
+    let spec = tiny_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+    let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let mut effs = HashMap::new();
+    let mut mock = LaneWiseMockPrefiller::for_spec(&spec).with_capacity(Some(8));
+    let mut pw = PrefillWave::new();
+    let prompts: Vec<&[u8]> = vec![b"aaaa", b"bb", b"cccccc", b"dd", b"e"];
+    let admitted = pw
+        .admit_wave(&mut cache, &mut effs, &spec, true, &prompts, &mut mock)
+        .unwrap();
+    assert_eq!(admitted.len(), 5);
+    assert_eq!(mock.wave_calls, 1, "one wave, one launch");
+    assert_eq!(mock.single_calls, 0);
+    assert_eq!(pw.stats.waves, 1);
+    assert_eq!(pw.stats.launches, 1);
+    assert_eq!(pw.stats.batched_lanes, 5);
+    assert_eq!(pw.stats.fallback_prefills, 0);
+    // a second wave of one request takes the cheaper per-request rung
+    let lone: Vec<&[u8]> = vec![b"zz"];
+    pw.admit_wave(&mut cache, &mut effs, &spec, true, &lone, &mut mock)
+        .unwrap();
+    assert_eq!(mock.wave_calls, 1);
+    assert_eq!(mock.single_calls, 1);
+    assert_eq!(pw.stats.launches, 2);
+    assert_eq!(pw.stats.fallback_prefills, 1);
+    // an empty wave costs nothing
+    pw.admit_wave(&mut cache, &mut effs, &spec, true, &[], &mut mock)
+        .unwrap();
+    assert_eq!(pw.stats.waves, 2);
+    assert_eq!(pw.stats.launches, 2);
+}
+
+#[test]
+fn over_budget_head_of_line_forces_one_admission_through_wave_planner() {
+    // the scheduler's `admit.max(1)` rule at the planner level: a
+    // budget too small for even one request admits 0, but when nothing
+    // is live the head request must run anyway — as a lone per-request
+    // prefill, not a padded batched launch
+    let spec = tiny_spec();
+    let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+    let one = request_cache_bytes(&spec, &plan, 16, 16);
+    let bcfg = BatcherConfig {
+        max_batch: 8,
+        decode_batches: vec![1, 8],
+        cache_budget: Some(one / 2),
+    };
+    let waiting = vec![(16usize, 16usize); 4];
+    let p = plan_round(&bcfg, &spec, &plan, 0, 0, &waiting);
+    assert_eq!(p.admit, 0, "budget below one request must admit none");
+    assert_eq!(p.wave_s, 0, "no admissions, no wave bucket");
+    let admit = if p.admit == 0 { p.admit.max(1) } else { p.admit };
+
+    let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+    let mut effs = HashMap::new();
+    let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+    let mut pw = PrefillWave::new();
+    let prompt: &[u8] = b"head of line must run";
+    let wave: Vec<&[u8]> = vec![prompt; admit];
+    let admitted = pw
+        .admit_wave(&mut cache, &mut effs, &spec, true, &wave, &mut mock)
+        .unwrap();
+    assert_eq!(admitted.len(), 1, "forced head-of-line admission");
+    assert_eq!(mock.single_calls, 1, "lone admission takes the per-request rung");
+    assert_eq!(mock.wave_calls, 0);
+    assert_eq!(cache.seq_len(admitted[0].cache_id), Some(prompt.len()));
+    assert_eq!(cache.decoded_upto(admitted[0].cache_id), Some(prompt.len()));
+}
+
+#[test]
+fn capacity_chunking_matches_unchunked_results_bitwise() {
+    // 7 prompts at capacity 3: chunks of 3 + 3 + a lone remainder —
+    // the chunked path must still be bitwise-equal to capacity-8 one-shot
+    let spec = tiny_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, 2);
+    let prompts: Vec<Vec<u8>> = (0..7u8)
+        .map(|i| (0..=i).map(|j| j * 17 + i).collect())
+        .collect();
+    let lanes: Vec<&[u8]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let mut worlds = Vec::new();
+    for cap in [Some(3), Some(8)] {
+        let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+        let mut effs = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec).with_capacity(cap);
+        let mut pw = PrefillWave::new();
+        pw.admit_wave(&mut cache, &mut effs, &spec, true, &lanes, &mut mock)
+            .unwrap();
+        worlds.push((cache, effs, mock.wave_calls, mock.single_calls, pw.stats));
+    }
+    assert_eq!((worlds[0].2, worlds[0].3), (2, 1), "3+3+lone remainder");
+    assert_eq!((worlds[1].2, worlds[1].3), (1, 0), "one-shot at cap 8");
+    assert_eq!(worlds[0].4.launches, 3);
+    assert_eq!(worlds[1].4.launches, 1);
+    for id in worlds[0].1.keys() {
+        let (a, b) = (&worlds[0].1[id], &worlds[1].1[id]);
+        assert_eq!(
+            a.k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.k.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "chunked effective K diverges from one-shot"
+        );
+        for layer in 0..spec.n_layer {
+            for side in [Side::K, Side::V] {
+                assert_eq!(
+                    format!("{:?}", worlds[0].0.stored_rows(*id, layer, side)),
+                    format!("{:?}", worlds[1].0.stored_rows(*id, layer, side)),
+                    "chunked stream diverges from one-shot"
+                );
+            }
+        }
+    }
+}
