@@ -198,3 +198,42 @@ def test_batched_decode_kv_bit_matches_token_decode(cfg):
         assert (
             np.asarray(vr_b[b]).view(np.uint32) == np.asarray(vr_t).view(np.uint32)
         ).all(), f"V slot {b} diverges from decode_kv_t"
+
+
+@BOTH
+def test_prefill_prefix_rows_bit_stable_across_prompts(cfg):
+    """Prefix purity — the contract behind cross-request KV sharing
+    (rust DESIGN.md §6): a causal transformer's prefill row t is a pure
+    function of tokens [0, t], so two prompts agreeing on their first k
+    tokens must produce *bit-identical* KV rows [0, k) in every output
+    stream.  That is what lets the rust CacheManager's prefix trie
+    reference one stored copy of a shared system prompt instead of
+    re-storing it per request."""
+    params = P.init_params(cfg, 0)
+    S = cfg.max_seq
+    rng = np.random.RandomState(17)
+    k = 12  # shared prefix tokens
+    prefix = rng.randint(0, cfg.vocab, (k,))
+    kv = _kvcfg(cfg)
+    pf = M.make_prefill(cfg)
+    outs = []
+    for tail_len in (5, 9):
+        tail = rng.randint(0, cfg.vocab, (tail_len,))
+        plen = k + tail_len
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :plen] = np.concatenate([prefix, tail])
+        mask = np.zeros((1, S), np.float32)
+        mask[0, :plen] = 1.0
+        outs.append(
+            [
+                np.asarray(o)
+                for o in pf(params, jnp.asarray(toks), jnp.asarray(mask), jnp.int32(plen - 1), kv)
+            ]
+        )
+    names = ("k_raw", "v_raw", "k_lat", "v_lat", "k_eff", "v_eff")
+    for name, a, b in zip(names, outs[0][1:], outs[1][1:]):
+        assert (
+            a[:, :k, :].view(np.uint32) == b[:, :k, :].view(np.uint32)
+        ).all(), f"{name}: shared prefix rows diverge across prompts"
+    # sanity: the divergent tails really diverge, so the probe bites
+    assert not (outs[0][1][:, k : k + 5, :] == outs[1][1][:, k : k + 5, :]).all()

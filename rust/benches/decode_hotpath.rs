@@ -12,9 +12,11 @@
 //! `staged_bytes_per_round` (the k/v staging volume the store-resident
 //! effective cache shrinks ~S×; the `staging` section holds the
 //! resident-vs-copy ratio), the `f16_raw` section the bytes/accuracy
-//! delta of the f16 raw-row default against f32, and the
-//! `burst_admission` section the launch counts and amortized prefill
-//! cost of wave-based admission vs the per-request ladder.
+//! delta of the f16 raw-row default against f32, the `burst_admission`
+//! section the launch counts and amortized prefill cost of wave-based
+//! admission vs the per-request ladder, and the `shared_prefix` section
+//! the distinct-prompts law of cross-request prefix sharing (launches
+//! saved, shared-once vs private cache bytes, chunk hit rate).
 //!
 //! Skips (exit 0, file untouched) when artifacts are missing.
 
@@ -70,6 +72,10 @@ fn run_case(
         per_step_reconstruct: c.faithful,
         resident_cache: c.resident,
         raw_format: c.raw,
+        // sharing off so each case keeps its historical meaning (the
+        // corpus can repeat windows; zero-launch admissions would skew
+        // prefill numbers) — the shared_prefix section measures sharing
+        prefix_sharing: false,
         ..ServeConfig::new(plan)
     };
     let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
@@ -162,6 +168,26 @@ fn report_deltas(prev: &Json, cases: &[CaseResult]) {
     }
 }
 
+/// Delta the shared-prefix section against the previous run's file —
+/// launches saved collapsing toward 0 is the sharing regression canary.
+fn report_shared_prefix_delta(prev: &Json, cur: &Json) {
+    let saved = |j: &Json| {
+        j.get("shared_prefix")
+            .or(Some(j))
+            .and_then(|s| s.get("launches_saved"))
+            .and_then(Json::as_f64)
+    };
+    let (Some(old), Some(new)) = (saved(prev), cur.get("launches_saved").and_then(Json::as_f64))
+    else {
+        println!("bench decode_hotpath/shared_prefix: no previous section; deltas start next run");
+        return;
+    };
+    println!(
+        "bench decode_hotpath/shared_prefix vs previous: launches saved {old:.0} -> {new:.0} ({:+.0})",
+        new - old,
+    );
+}
+
 /// Burst admission: a backlog of requests admitted in max_batch-sized
 /// waves with max_new = 1, so the run is pure admission cost.  Run
 /// twice — batched wave prefill vs the forced per-request ladder — and
@@ -175,6 +201,9 @@ fn run_burst(engine: &mut Engine, plan: &CompressionPlan) -> Json {
             max_batch: 8,
             seed: 17,
             batched_prefill: batched,
+            // isolate the wave-vs-per-request launch law from prompt
+            // dedup (shared_prefix measures that axis separately)
+            prefix_sharing: false,
             ..ServeConfig::new(plan.clone())
         };
         let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
@@ -218,11 +247,108 @@ fn run_burst(engine: &mut Engine, plan: &CompressionPlan) -> Json {
     ])
 }
 
+/// Shared-prefix burst: 24 requests over 4 distinct prompts that share
+/// a 32-token prefix, max_new = 1 (pure admission cost), run with
+/// prefix sharing on and off.  The section reports the distinct-prompts
+/// law end to end: prefill launches, zero-launch admissions, the chunk
+/// hit rate, and shared-once vs private (per-sequence) cache bytes.
+fn run_shared_prefix(engine: &mut Engine, plan: &CompressionPlan) -> Json {
+    let (n_requests, n_distinct) = (24usize, 4usize);
+    // one synthetic template family: shared 32-token system prefix +
+    // 8-token distinct suffix per "user"
+    let prefix: Vec<u8> = (0..32u32).map(|i| ((i * 37 + 11) % 251) as u8).collect();
+    let prompts: Vec<Vec<u8>> = (0..n_distinct as u8)
+        .map(|d| {
+            let mut p = prefix.clone();
+            p.extend((0..8u8).map(|t| d.wrapping_mul(31).wrapping_add(t * 7 + 3)));
+            p
+        })
+        .collect();
+    // warmup on a throwaway engine: XLA compilation lives in `engine`
+    // and carries over, while the measured engines below start with
+    // clean prefix/template state — their cumulative prefix_stats and
+    // peak bytes describe only the burst
+    {
+        let cfg = ServeConfig {
+            max_batch: 8,
+            seed: 29,
+            ..ServeConfig::new(plan.clone())
+        };
+        let mut warmup = ServingEngine::new(engine, MODEL, cfg).unwrap();
+        let mut warm = corpus::wiki(13);
+        warmup
+            .run((0..8).map(|i| GenRequest::greedy(i, &warm.tokens(16), 1)).collect())
+            .unwrap();
+    }
+    let mut results = Vec::new();
+    for sharing in [true, false] {
+        let cfg = ServeConfig {
+            max_batch: 8,
+            seed: 29,
+            prefix_sharing: sharing,
+            ..ServeConfig::new(plan.clone())
+        };
+        let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
+        let reqs: Vec<GenRequest> = (0..n_requests as u64)
+            .map(|i| GenRequest::greedy(i, &prompts[i as usize % n_distinct], 1))
+            .collect();
+        let t0 = std::time::Instant::now();
+        serving.run(reqs).unwrap();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let m = &serving.metrics;
+        let p = serving.cache.prefix_stats();
+        let lookups = p.chunk_hits + p.chunk_misses;
+        let hit_rate = if lookups > 0 {
+            p.chunk_hits as f64 / lookups as f64
+        } else {
+            0.0
+        };
+        println!(
+            "bench decode_hotpath/shared_prefix({}): {} launches / {} zero-launch admissions, chunk hit rate {:.0}%, shared {:.1} KiB held once, {:.2} ms/request",
+            if sharing { "on" } else { "off" },
+            m.prefill_launches,
+            m.shared_admissions,
+            hit_rate * 100.0,
+            p.shared_bytes as f64 / 1024.0,
+            wall_ms / n_requests as f64,
+        );
+        results.push(json::obj(vec![
+            ("sharing", Json::Bool(sharing)),
+            ("prefill_launches", json::num(m.prefill_launches as f64)),
+            ("shared_admissions", json::num(m.shared_admissions as f64)),
+            ("shared_prefix_rows", json::num(m.shared_prefix_rows as f64)),
+            ("chunk_hit_rate", json::num(hit_rate)),
+            ("shared_cache_bytes", json::num(p.shared_bytes as f64)),
+            (
+                "peak_cache_bytes",
+                json::num(serving.cache.pool_stats().peak_live_bytes as f64),
+            ),
+            ("amortized_prefill_ms_per_request", json::num(wall_ms / n_requests as f64)),
+        ]));
+    }
+    let launches = |r: &Json| {
+        r.get("prefill_launches").and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    let saved = launches(&results[1]) - launches(&results[0]);
+    println!(
+        "bench decode_hotpath/shared_prefix: {saved:.0} prefill launches saved by sharing ({} requests, {} distinct prompts)",
+        n_requests, n_distinct,
+    );
+    json::obj(vec![
+        ("requests", json::num(n_requests as f64)),
+        ("distinct_prompts", json::num(n_distinct as f64)),
+        ("launches_saved", json::num(saved)),
+        ("runs", Json::Arr(results)),
+    ])
+}
+
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     cases: &[CaseResult],
     staging: Json,
     f16_raw: Json,
     burst: Json,
+    shared_prefix: Json,
     prefill_mean_ms: f64,
     prefill_p99_ms: f64,
     rounds: usize,
@@ -230,7 +356,10 @@ fn write_json(
     let path = json_path();
     match std::fs::read_to_string(&path) {
         Ok(text) => match Json::parse(&text) {
-            Ok(prev) => report_deltas(&prev, cases),
+            Ok(prev) => {
+                report_deltas(&prev, cases);
+                report_shared_prefix_delta(&prev, &shared_prefix);
+            }
             Err(e) => println!(
                 "bench decode_hotpath: previous {path} unreadable ({e}); skipping deltas"
             ),
@@ -266,6 +395,7 @@ fn write_json(
         ("staging", staging),
         ("f16_raw", f16_raw),
         ("burst_admission", burst),
+        ("shared_prefix", shared_prefix),
         (
             "prefill_64tok",
             json::obj(vec![
@@ -390,10 +520,14 @@ fn main() {
     // burst admission: the one-launch-per-admission-wave law end to end
     let burst = run_burst(&mut engine, &ae);
 
-    // prefill latency
+    // shared-prefix burst: launches/bytes ∝ distinct prompts, not N
+    let shared_prefix = run_shared_prefix(&mut engine, &ae);
+
+    // prefill latency (sharing off: every run must really prefill)
     let cfg = ServeConfig {
         max_batch: 1,
         seed: 1,
+        prefix_sharing: false,
         ..ServeConfig::new(ae)
     };
     let mut serving = ServingEngine::new(&mut engine, MODEL, cfg).unwrap();
@@ -409,5 +543,14 @@ fn main() {
         fmt_ns(prefill_mean * 1e6),
         fmt_ns(prefill_p99 * 1e6),
     );
-    write_json(&cases, staging, f16_raw, burst, prefill_mean, prefill_p99, rounds);
+    write_json(
+        &cases,
+        staging,
+        f16_raw,
+        burst,
+        shared_prefix,
+        prefill_mean,
+        prefill_p99,
+        rounds,
+    );
 }

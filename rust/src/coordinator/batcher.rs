@@ -86,6 +86,27 @@ pub fn wave_bucket(prompt_lens: impl IntoIterator<Item = usize>, max_seq: usize)
     }
 }
 
+/// Map each admission-wave lane to the earliest earlier lane carrying
+/// an identical clamped prompt, or `None` for the first occurrence —
+/// the within-wave half of cross-request prefix sharing: prefill only
+/// ever sees the clamped tokens, so equal keys are the *same*
+/// computation and every duplicate lane can be admitted from the first
+/// lane's outputs with zero launches (launches ∝ distinct prompts).
+pub fn plan_dedup(keys: &[&[u8]]) -> Vec<Option<usize>> {
+    use std::collections::hash_map::Entry;
+    let mut seen: std::collections::HashMap<&[u8], usize> = std::collections::HashMap::new();
+    keys.iter()
+        .enumerate()
+        .map(|(i, &k)| match seen.entry(k) {
+            Entry::Occupied(e) => Some(*e.get()),
+            Entry::Vacant(v) => {
+                v.insert(i);
+                None
+            }
+        })
+        .collect()
+}
+
 /// Plan one admission round: FIFO-admit while slots and the budget
 /// allow, then pick the smallest compiled batch covering the live set.
 pub fn plan_round(
@@ -291,6 +312,19 @@ mod tests {
         // nothing admitted -> no wave
         let p = plan_round(&cfg(None), &spec, &plan, 8, 0, &waiting);
         assert_eq!((p.admit, p.wave_s), (0, 0));
+    }
+
+    #[test]
+    fn dedup_maps_duplicates_to_earliest_lane() {
+        let keys: Vec<&[u8]> = vec![b"sys+a", b"sys+b", b"sys+a", b"sys+a", b"sys+b", b"c"];
+        assert_eq!(
+            plan_dedup(&keys),
+            vec![None, None, Some(0), Some(0), Some(1), None]
+        );
+        assert_eq!(plan_dedup(&[]), Vec::<Option<usize>>::new());
+        // distinct prompts never alias
+        let distinct: Vec<&[u8]> = vec![b"a", b"b", b"ab"];
+        assert!(plan_dedup(&distinct).iter().all(Option::is_none));
     }
 
     #[test]

@@ -36,6 +36,26 @@ use crate::kvcache::{CacheManager, Side, StreamRows};
 use crate::model::ModelSpec;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Immutable effective-row template for one distinct prompt — the
+/// copy-on-write seed behind cross-request prefix sharing (DESIGN.md
+/// §6).  Holds the prompt's in-graph effective K/V rows packed
+/// `[L, rows, kvd]`; every sharer's [`EffectiveCache`] references the
+/// same `Arc` instead of copying the rows at admission, and sources
+/// reads of rows `[0, rows)` from it (`sync_rows_into`) until a write
+/// into that range forces materialization — which steady-state decode
+/// never does (appends land past the prompt), so N sharers hold the
+/// prompt rows once.
+#[derive(Debug, Clone)]
+pub struct EffTemplate {
+    /// prompt rows the template covers
+    pub rows: usize,
+    /// `[L, rows, kvd]` effective K rows
+    pub k: Vec<f32>,
+    /// `[L, rows, kvd]` effective V rows
+    pub v: Vec<f32>,
+}
 
 /// Runs the AE decoder over latent rows.  The serving engine implements
 /// this with the `{model}_decode_kv[_t]` artifacts; tests use pure-rust
@@ -205,6 +225,11 @@ pub struct EffectiveCache {
     k_rec_stage: Vec<f32>,
     v_rec_stage: Vec<f32>,
     head_stage: Vec<f32>,
+    /// copy-on-write prompt seed shared with every other sequence
+    /// admitted from the same template (see [`EffTemplate`]); reads of
+    /// rows `[0, shared.rows)` source it, the first overlapping write
+    /// materializes it into the owned buffers and drops the reference
+    shared: Option<Arc<EffTemplate>>,
     /// per-sequence work counters (cost-law assertions)
     pub stats: EffStats,
 }
@@ -226,7 +251,43 @@ impl EffectiveCache {
             k_rec_stage: Vec::new(),
             v_rec_stage: Vec::new(),
             head_stage: Vec::new(),
+            shared: None,
             stats: EffStats::default(),
+        }
+    }
+
+    /// Seed rows `[0, tmpl.rows)` **by reference** from a shared prompt
+    /// template and advance the manager watermark — the zero-copy
+    /// admission path for a sequence whose prompt another admission
+    /// already computed.  No rows are copied here: reads source the
+    /// template through [`EffectiveCache::sync_rows_into`], and the
+    /// template materializes into the owned buffers only if something
+    /// later writes into the seeded range (decode appends never do).
+    pub fn seed_shared(&mut self, cache: &mut CacheManager, id: u64, tmpl: Arc<EffTemplate>) {
+        debug_assert_eq!(tmpl.k.len(), self.n_layer * tmpl.rows * self.kv_dim);
+        debug_assert!(tmpl.rows <= self.max_seq);
+        let rows = tmpl.rows;
+        self.shared = Some(tmpl);
+        cache.mark_decoded(id, rows);
+    }
+
+    /// Rows currently seeded by reference from a shared template (0
+    /// once materialized or when the sequence was never shared).
+    pub fn shared_rows(&self) -> usize {
+        self.shared.as_ref().map_or(0, |t| t.rows)
+    }
+
+    /// Copy-on-write fault: copy the shared template's rows into the
+    /// owned buffers and drop the reference.  Idempotent; called
+    /// automatically before any write overlapping the seeded range.
+    pub fn materialize_shared(&mut self) {
+        let Some(t) = self.shared.take() else { return };
+        let (s, kvd, rows) = (self.max_seq, self.kv_dim, t.rows);
+        for layer in 0..self.n_layer {
+            let dst = layer * s * kvd;
+            let src = layer * rows * kvd;
+            self.k[dst..dst + rows * kvd].copy_from_slice(&t.k[src..src + rows * kvd]);
+            self.v[dst..dst + rows * kvd].copy_from_slice(&t.v[src..src + rows * kvd]);
         }
     }
 
@@ -244,6 +305,7 @@ impl EffectiveCache {
         v_eff: &[f32],
         rows: usize,
     ) {
+        self.shared = None; // owned seed supersedes any template
         let (s, kvd) = (self.max_seq, self.kv_dim);
         for layer in 0..self.n_layer {
             let base = layer * s * kvd;
@@ -264,6 +326,12 @@ impl EffectiveCache {
         k_rows: &[f32],
         v_rows: &[f32],
     ) {
+        if pos < self.shared_rows() {
+            // write into the template-seeded range: copy-on-write fault
+            // (steady-state appends land past the prompt, so this never
+            // fires outside watermark resets)
+            self.materialize_shared();
+        }
         let (s, kvd) = (self.max_seq, self.kv_dim);
         for layer in 0..self.n_layer {
             let dst = layer * s * kvd + pos * kvd;
@@ -292,9 +360,35 @@ impl EffectiveCache {
             Side::K => &self.k,
             Side::V => &self.v,
         };
-        for layer in 0..self.n_layer {
-            let (a, b) = (layer * s * kvd + from * kvd, layer * s * kvd + to * kvd);
-            dst[a..b].copy_from_slice(&src[a..b]);
+        // rows still seeded by reference come from the shared template
+        // (copy-on-write: the owned buffers hold zeros there until a
+        // write faults the template in); everything else from owned rows
+        let mut owned_from = from;
+        if let Some(t) = &self.shared {
+            let p = t.rows.min(to);
+            if from < p {
+                let tsrc = match side {
+                    Side::K => &t.k,
+                    Side::V => &t.v,
+                };
+                for layer in 0..self.n_layer {
+                    let a = layer * s * kvd + from * kvd;
+                    let b = layer * s * kvd + p * kvd;
+                    let ta = layer * t.rows * kvd + from * kvd;
+                    let tb = layer * t.rows * kvd + p * kvd;
+                    dst[a..b].copy_from_slice(&tsrc[ta..tb]);
+                }
+                owned_from = p;
+            }
+        }
+        if owned_from < to {
+            for layer in 0..self.n_layer {
+                let (a, b) = (
+                    layer * s * kvd + owned_from * kvd,
+                    layer * s * kvd + to * kvd,
+                );
+                dst[a..b].copy_from_slice(&src[a..b]);
+            }
         }
         self.n_layer * (to - from) * kvd * 4
     }
@@ -336,6 +430,7 @@ impl EffectiveCache {
         let len = cache
             .seq_len(id)
             .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        self.shared = None; // full rebuild overwrites any template seed
         self.k.fill(0.0);
         self.v.fill(0.0);
         if len > 0 {
@@ -411,6 +506,11 @@ impl EffectiveCache {
         k_rec: &[f32],
         v_rec: &[f32],
     ) -> Result<()> {
+        if from < self.shared_rows() {
+            // reconstruction writing into the template-seeded range:
+            // copy-on-write fault before the owned buffers are written
+            self.materialize_shared();
+        }
         let (l, s, kvd, dh) = (self.n_layer, self.max_seq, self.kv_dim, self.d_head);
         let n = to - from;
         debug_assert_eq!(k_rec.len(), l * n * kvd);
@@ -743,6 +843,58 @@ mod tests {
         // advancing with nothing new is free
         assert_eq!(eff.advance(&mut m, id, &mut dec).unwrap(), 0);
         assert_eq!(eff.stats.rows_decoded, steps as u64);
+    }
+
+    #[test]
+    fn shared_seed_is_copy_on_write() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(23);
+        let rows = 5usize;
+        for _ in 0..rows {
+            append_random_token(&mut m, id, &mut rng);
+        }
+        let (l, s, kvd) = (spec.n_layer, spec.max_seq, spec.kv_dim());
+        let tmpl = std::sync::Arc::new(EffTemplate {
+            rows,
+            k: (0..l * rows * kvd).map(|i| i as f32).collect(),
+            v: (0..l * rows * kvd).map(|i| -(i as f32)).collect(),
+        });
+        let mut eff = EffectiveCache::new(&spec);
+        eff.seed_shared(&mut m, id, tmpl.clone());
+        assert_eq!(eff.shared_rows(), rows);
+        assert_eq!(m.decoded_upto(id), Some(rows), "shared seed moves the watermark");
+        // reads source the template (owned buffers still zero)
+        let mut staged = vec![0.0f32; l * s * kvd];
+        eff.sync_rows_into(Side::K, &mut staged, 0, s);
+        assert_eq!(staged[kvd], tmpl.k[kvd], "row 1 comes from the template");
+        assert_eq!(staged[(rows - 1) * kvd], tmpl.k[(rows - 1) * kvd]);
+        assert!(eff.k.iter().all(|&x| x == 0.0), "no copy happened yet");
+        // a write past the seeded range keeps the template referenced
+        let zk = vec![1.5; l * kvd];
+        eff.push_step_row(&mut m, id, rows, &zk, &zk);
+        assert_eq!(eff.shared_rows(), rows, "append must not fault the template");
+        let mut synced = vec![0.0f32; l * s * kvd];
+        eff.sync_rows_into(Side::K, &mut synced, 0, s);
+        assert_eq!(synced[rows * kvd], 1.5, "owned rows layer on top");
+        assert_eq!(synced[0], tmpl.k[0], "template rows still sourced");
+        // materialization copies the rows and drops the reference; the
+        // staged view is bitwise unchanged
+        eff.materialize_shared();
+        assert_eq!(eff.shared_rows(), 0);
+        let mut after = vec![0.0f32; l * s * kvd];
+        eff.sync_rows_into(Side::K, &mut after, 0, s);
+        for (a, b) in synced.iter().zip(&after) {
+            assert_eq!(a.to_bits(), b.to_bits(), "materialization must be invisible");
+        }
+        // rebuild_full drops any template seed before refilling
+        let mut eff2 = EffectiveCache::new(&spec);
+        eff2.seed_shared(&mut m, id, tmpl);
+        let mut dec = RowWiseMockDecoder::for_spec(&spec);
+        eff2.rebuild_full(&mut m, id, &mut dec).unwrap();
+        assert_eq!(eff2.shared_rows(), 0);
     }
 
     #[test]

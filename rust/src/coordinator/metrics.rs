@@ -114,6 +114,16 @@ pub struct ServeMetrics {
     pub prefill_launches: u64,
     /// requests admitted per wave (batching quality of admission)
     pub wave_admitted: CountHistogram,
+    /// requests admitted with **zero** prefill launches because their
+    /// clamped prompt was already computed (within-wave dedup or the
+    /// admission planner's prompt-template cache) — under
+    /// `ServeConfig::prefix_sharing`, prefill launches are ∝ distinct
+    /// prompts, and this counter is the difference
+    pub shared_admissions: u64,
+    /// prompt rows served from the shared prefix store instead of a
+    /// fresh prefill's output (whole prompts of zero-launch admissions
+    /// plus block-aligned chunks launched lanes reused)
+    pub shared_prefix_rows: u64,
     /// decode rounds executed and total rows (batch slots) used
     pub decode_rounds: u64,
     /// batch slots that carried a live sequence
@@ -217,6 +227,12 @@ impl ServeMetrics {
                 self.prefill_launches,
                 self.wave_admitted.mean(),
                 self.wave_admitted.max(),
+            );
+        }
+        if self.shared_admissions + self.shared_prefix_rows > 0 {
+            println!(
+                "  prefix sharing: {} zero-launch admissions, {} prompt rows reused",
+                self.shared_admissions, self.shared_prefix_rows,
             );
         }
         if self.auto_parks + self.auto_resumes > 0 {

@@ -1,8 +1,9 @@
 //! L3 serving coordinator: request types, admission/batch planning
 //! (including park/resume under memory pressure), wave-based admission
-//! prefill (`prefill`), the prefill/decode scheduler with batch-first
-//! faithful reconstruction and store-resident decode staging
-//! (`resident`), and metrics.
+//! prefill with cross-request prefix sharing and zero-launch
+//! re-admission (`prefill`), the prefill/decode scheduler with
+//! batch-first faithful reconstruction and store-resident decode
+//! staging (`resident`), and metrics.
 
 pub mod batcher;
 pub mod effective;
@@ -14,11 +15,13 @@ pub mod scheduler;
 pub mod trace;
 
 pub use effective::{
-    BatchLatentDecoder, BatchedAdvance, BatchedStats, EffStats, EffectiveCache, LatentDecoder,
+    BatchLatentDecoder, BatchedAdvance, BatchedStats, EffStats, EffTemplate, EffectiveCache,
+    LatentDecoder,
 };
 pub use metrics::{CountHistogram, ServeMetrics};
 pub use prefill::{
-    AdmittedLane, LaneWiseMockPrefiller, PrefillWave, WaveOutput, WavePrefiller, WaveStats,
+    AdmittedLane, LaneWiseMockPrefiller, PrefillWave, PromptTemplate, TemplateCache, WaveOutput,
+    WavePrefiller, WaveStats,
 };
 pub use request::{GenRequest, GenResponse, Sampling};
 pub use resident::{stage_copy_round, SlotArena};

@@ -29,14 +29,30 @@
 //! 2. `{m}_prefill` — per-request: lone admissions (padding the
 //!    batched entry would cost more than it saves) and artifact sets
 //!    that predate the batched entry (`wave_capacity() == None`).
+//!
+//! **Cross-request prefix sharing** (DESIGN.md §6) sits in front of the
+//! ladder: prefill is a pure function of the clamped prompt tokens, so
+//! a lane whose clamped prompt was already computed — by an earlier
+//! lane in the same wave (`batcher::plan_dedup`) or by a previous
+//! admission whose [`PromptTemplate`] is still cached — admits with
+//! **zero launches**: its block-aligned prefix rows attach to the
+//! refcounted shared chain inside the [`CacheManager`]
+//! (`attach_prefix`), its tail rows and first-token logits replay from
+//! the template, and its effective rows seed by reference
+//! (`EffectiveCache::seed_shared`, copy-on-write).  Launched lanes
+//! still share storage: `CacheManager::ingest_prompt_shared` references
+//! any leading chunk another admission already stored instead of
+//! re-storing it.  Prefill launches and prefix cache bytes are
+//! therefore ∝ distinct prompts, not requests.
 
-use super::batcher::wave_bucket;
-use super::effective::EffectiveCache;
-use crate::kvcache::CacheManager;
+use super::batcher::{plan_dedup, wave_bucket};
+use super::effective::{EffTemplate, EffectiveCache};
+use crate::kvcache::{CacheManager, SharedIngest};
 use crate::model::ModelSpec;
 use crate::runtime::Tensor;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Positional indices of the seven prefill outputs inside a
 /// [`WaveOutput`] — the order `{m}_prefill[_b]` emits them.
@@ -151,6 +167,182 @@ pub struct WaveStats {
     /// wave's padded bucket (`batcher::wave_bucket`) — the padding
     /// cost of batching admission
     pub padded_rows: u64,
+    /// requests admitted with **zero** prefill launches: their clamped
+    /// prompt was already computed by an earlier lane of the same wave
+    /// or a cached [`PromptTemplate`] (launches ∝ distinct prompts)
+    pub shared_admissions: u64,
+    /// prompt rows served from the shared prefix store instead of a
+    /// fresh prefill's output: whole prompts of zero-launch admissions
+    /// plus reused leading chunks of launched lanes
+    pub shared_rows: u64,
+}
+
+/// Everything needed to admit one more request with an identical
+/// clamped prompt at **zero prefill launches**: the prompt's
+/// block-aligned prefix lives refcounted in the cache manager's shared
+/// chain (`leaf`, pinned while this template is cached), the unshared
+/// tail rows and last-position logits are replayed from here, and the
+/// effective rows seed by reference through the shared [`EffTemplate`].
+#[derive(Debug)]
+pub struct PromptTemplate {
+    /// clamped prompt rows the template covers
+    pub plen: usize,
+    /// leaf of the shared prefix chain covering the block-aligned
+    /// leading rows (`None` when the prompt is shorter than one block)
+    pub leaf: Option<u32>,
+    /// rows covered by the shared chain
+    pub prefix_rows: usize,
+    /// `[V]` last-position logits the first token is sampled from
+    pub logits: Vec<f32>,
+    /// `[L, tail, dl]` K latents of the unshared tail rows
+    pub k_lat_tail: Vec<f32>,
+    /// `[L, tail, dl]` V latents of the unshared tail rows
+    pub v_lat_tail: Vec<f32>,
+    /// `[L, tail, kvd]` raw K rows of the unshared tail
+    pub k_raw_tail: Vec<f32>,
+    /// `[L, tail, kvd]` raw V rows of the unshared tail
+    pub v_raw_tail: Vec<f32>,
+    /// shared effective-row seed (`None` when registered under faithful
+    /// mode, which reconstructs from the store instead of seeding)
+    pub eff: Option<Arc<EffTemplate>>,
+}
+
+impl PromptTemplate {
+    /// Host bytes this template holds (tail rows, logits, and the
+    /// shared effective seed — the dominant term at real model sizes).
+    pub fn host_bytes(&self) -> usize {
+        let eff = self.eff.as_ref().map_or(0, |e| (e.k.len() + e.v.len()) * 4);
+        (self.logits.len()
+            + self.k_lat_tail.len()
+            + self.v_lat_tail.len()
+            + self.k_raw_tail.len()
+            + self.v_raw_tail.len())
+            * 4
+            + eff
+    }
+}
+
+/// Default host-byte budget for cached templates (64 MiB): effective
+/// seeds are `2·L·plen·kvd` f32 each, so an entry-count cap alone would
+/// let long prompts at real model sizes pin gigabytes of host RAM.
+pub const TEMPLATE_BYTE_BUDGET: usize = 64 << 20;
+
+/// Bounded FIFO cache of [`PromptTemplate`]s keyed by clamped prompt —
+/// the cross-wave half of zero-launch admission.  Bounded twice: by
+/// distinct-prompt count and by **host bytes**
+/// ([`TEMPLATE_BYTE_BUDGET`]; templates carry the prompt's effective
+/// rows, which dominate at real model sizes and are invisible to the
+/// device-side `cache_budget`).  Each cached template pins its prefix
+/// chain in the [`CacheManager`] (`prefix_ref`), and eviction or
+/// [`TemplateCache::clear`] releases the pin, so template lifetime and
+/// chain lifetime can never drift apart.
+#[derive(Debug)]
+pub struct TemplateCache {
+    map: HashMap<Vec<u8>, Arc<PromptTemplate>>,
+    order: VecDeque<Vec<u8>>,
+    cap: usize,
+    byte_budget: usize,
+    bytes: usize,
+}
+
+impl Default for TemplateCache {
+    fn default() -> Self {
+        TemplateCache::new(32)
+    }
+}
+
+impl TemplateCache {
+    /// Cache holding at most `cap` distinct prompts and at most
+    /// [`TEMPLATE_BYTE_BUDGET`] host bytes (FIFO eviction on both).
+    pub fn new(cap: usize) -> Self {
+        TemplateCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+            byte_budget: TEMPLATE_BYTE_BUDGET,
+            bytes: 0,
+        }
+    }
+
+    /// Distinct prompts currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether no template is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Host bytes currently held by cached templates.
+    pub fn host_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    fn get(&self, key: &[u8]) -> Option<Arc<PromptTemplate>> {
+        self.map.get(key).cloned()
+    }
+
+    fn drop_entry(&mut self, cache: &mut CacheManager, key: &[u8]) {
+        if let Some(old) = self.map.remove(key) {
+            self.bytes -= old.host_bytes();
+            if let Some(leaf) = old.leaf {
+                cache.prefix_unref(leaf);
+            }
+        }
+    }
+
+    fn insert(&mut self, cache: &mut CacheManager, key: Vec<u8>, t: Arc<PromptTemplate>) {
+        self.bytes += t.host_bytes();
+        if let Some(old) = self.map.insert(key.clone(), t) {
+            // re-registration (e.g. the serving mode flipped): swap the
+            // chain pin and accounting, the FIFO slot stays
+            self.bytes -= old.host_bytes();
+            if let Some(leaf) = old.leaf {
+                cache.prefix_unref(leaf);
+            }
+        } else {
+            self.order.push_back(key);
+        }
+        // count bound, then byte bound — enforced on re-registrations
+        // too (a swapped-in template can be bigger than the one it
+        // replaced), always keeping at least one entry so an oversized
+        // prompt degrades to a cache-of-one instead of thrashing to zero
+        while self.order.len() > self.cap
+            || (self.bytes > self.byte_budget && self.order.len() > 1)
+        {
+            let evict = self.order.pop_front().expect("non-empty order");
+            self.drop_entry(cache, &evict);
+        }
+    }
+
+    /// Evict the oldest template (releasing its chain pin); `false`
+    /// when nothing is cached.  The scheduler's memory-pressure valve:
+    /// a pinned chain with no live sharers holds device bytes only a
+    /// template eviction can free.
+    pub fn shed_oldest(&mut self, cache: &mut CacheManager) -> bool {
+        let Some(evict) = self.order.pop_front() else {
+            return false;
+        };
+        self.drop_entry(cache, &evict);
+        true
+    }
+
+    /// Leaves currently pinned by cached templates (refcount audits).
+    pub fn pinned_leaves(&self) -> Vec<u32> {
+        self.map.values().filter_map(|t| t.leaf).collect()
+    }
+
+    /// Drop every template and release its chain pin.
+    pub fn clear(&mut self, cache: &mut CacheManager) {
+        for (_, t) in self.map.drain() {
+            if let Some(leaf) = t.leaf {
+                cache.prefix_unref(leaf);
+            }
+        }
+        self.order.clear();
+        self.bytes = 0;
+    }
 }
 
 /// One admitted request's handles out of a wave: the sequence created
@@ -162,42 +354,153 @@ pub struct AdmittedLane {
     pub logits: Vec<f32>,
 }
 
-/// The admission-wave planner: packs a wave of prompts through the
-/// prefill ladder, ingests each lane's compressed rows, and seeds each
-/// sequence's effective cache.  Owns the launch accounting
-/// ([`WaveStats`]); one planner per serving engine.
+/// Bounded FIFO memory of clamped prompts seen at least once: a
+/// [`PromptTemplate`] (which copies the lane's full effective rows) is
+/// only worth building for prompts that actually repeat, so the first
+/// occurrence just records the key here and the *second* occurrence
+/// builds and caches the template — unique-prompt traffic then pays no
+/// template memcpys and never churns the template cache.
+#[derive(Debug)]
+struct SeenKeys {
+    set: std::collections::HashSet<Vec<u8>>,
+    order: VecDeque<Vec<u8>>,
+    cap: usize,
+}
+
+impl SeenKeys {
+    fn new(cap: usize) -> Self {
+        SeenKeys {
+            set: std::collections::HashSet::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Whether `key` was seen before; records it either way.
+    fn check_and_record(&mut self, key: &[u8]) -> bool {
+        if self.set.contains(key) {
+            return true;
+        }
+        self.set.insert(key.to_vec());
+        self.order.push_back(key.to_vec());
+        while self.order.len() > self.cap {
+            let evict = self.order.pop_front().expect("non-empty order");
+            self.set.remove(&evict);
+        }
+        false
+    }
+}
+
+impl Default for SeenKeys {
+    fn default() -> Self {
+        SeenKeys::new(128)
+    }
+}
+
+/// The admission-wave planner: dedups the wave against itself and the
+/// cached [`PromptTemplate`]s (zero-launch admissions), packs the
+/// remaining distinct prompts through the prefill ladder, ingests each
+/// lane's compressed rows — sharing block-aligned prefixes through the
+/// cache manager's refcounted trie — and seeds each sequence's
+/// effective cache.  Owns the launch accounting ([`WaveStats`]) and the
+/// template cache; one planner per serving engine.
 #[derive(Debug, Default)]
 pub struct PrefillWave {
-    /// launch/padding accounting for the admission path
+    /// launch/padding/sharing accounting for the admission path
     pub stats: WaveStats,
+    templates: TemplateCache,
+    seen: SeenKeys,
+}
+
+/// How one wave lane is admitted (planned before any launch).
+enum LanePlan {
+    /// zero-launch: replay a cached template from a previous wave
+    Cached(Arc<PromptTemplate>),
+    /// zero-launch: duplicate of an earlier lane in this wave (always a
+    /// `Launch` lane — template hits dedup through `Cached` instead)
+    Dup(usize),
+    /// real prefill; index into the wave's deduplicated launch list
+    Launch(usize),
 }
 
 impl PrefillWave {
-    /// Empty planner.
+    /// Empty planner with the default template capacity.
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Admit one wave of prompts: prefill them (one launch per
-    /// capacity chunk when the runner has a batched entry), ingest
-    /// every lane's compressed rows into `cache`, and register each
-    /// sequence's [`EffectiveCache`] in `effs` — seeded from the
-    /// lane's in-graph effective rows when `seed_effective` (the
-    /// faithful mode instead leaves the watermark at 0 so the first
-    /// decode round reconstructs the prompt from the store).
+    /// Planner whose template cache holds at most `cap` distinct
+    /// prompts (FIFO eviction; evicted templates unpin their chains).
+    pub fn with_template_capacity(cap: usize) -> Self {
+        PrefillWave {
+            stats: WaveStats::default(),
+            templates: TemplateCache::new(cap),
+            seen: SeenKeys::default(),
+        }
+    }
+
+    /// Distinct prompts whose templates are cached for zero-launch
+    /// re-admission.
+    pub fn cached_prompts(&self) -> usize {
+        self.templates.len()
+    }
+
+    /// Host bytes the cached templates hold (bounded by
+    /// [`TEMPLATE_BYTE_BUDGET`]).
+    pub fn template_bytes(&self) -> usize {
+        self.templates.host_bytes()
+    }
+
+    /// Prefix-chain leaves pinned by cached templates (refcount audits:
+    /// pass to `CacheManager::prefix_integrity`).
+    pub fn pinned_leaves(&self) -> Vec<u32> {
+        self.templates.pinned_leaves()
+    }
+
+    /// Drop every cached template and release its chain pin (the
+    /// template cache's contribution to `prefix_stats` goes to zero
+    /// once no sequence references the chains either).
+    pub fn clear_templates(&mut self, cache: &mut CacheManager) {
+        self.templates.clear(cache);
+    }
+
+    /// Evict the oldest cached template (see
+    /// [`TemplateCache::shed_oldest`]); `false` when none is cached.
+    pub fn shed_oldest_template(&mut self, cache: &mut CacheManager) -> bool {
+        self.templates.shed_oldest(cache)
+    }
+
+    /// Admit one wave of prompts: dedup identical clamped prompts
+    /// (within the wave via `batcher::plan_dedup`, across waves via the
+    /// template cache) into zero-launch admissions, prefill the
+    /// remaining distinct prompts (one launch per capacity chunk when
+    /// the runner has a batched entry), ingest every lane's compressed
+    /// rows into `cache` — block-aligned prefixes shared through the
+    /// refcounted trie when `share_prefixes` — and register each
+    /// sequence's [`EffectiveCache`] in `effs`: seeded from the lane's
+    /// in-graph effective rows when `seed_effective` (zero-launch lanes
+    /// seed by reference, copy-on-write), while the faithful mode
+    /// leaves the watermark at 0 so the first decode round reconstructs
+    /// the prompt from the (possibly shared) store.
     ///
     /// The wave is transactional: launches run first (they touch no
-    /// persistent state), and an ingestion failure frees every
-    /// sequence the wave already created — a half-admitted wave would
-    /// otherwise leak rows the scheduler can neither see nor retire.
+    /// persistent state), an ingestion failure frees every sequence the
+    /// wave already created *and* unpins the templates it built — a
+    /// half-admitted wave would otherwise leak rows the scheduler can
+    /// neither see nor retire — and the wave's new templates enter the
+    /// bounded cache only after every lane ingested (a mid-wave
+    /// eviction could otherwise free a chain a planned `Cached` lane
+    /// still needs).
     ///
     /// Returns one [`AdmittedLane`] per prompt, in order.
+    #[allow(clippy::too_many_arguments)]
     pub fn admit_wave<P: WavePrefiller>(
         &mut self,
         cache: &mut CacheManager,
         effs: &mut HashMap<u64, EffectiveCache>,
         spec: &ModelSpec,
         seed_effective: bool,
+        share_prefixes: bool,
         prompts: &[&[u8]],
         runner: &mut P,
     ) -> Result<Vec<AdmittedLane>> {
@@ -206,18 +509,87 @@ impl PrefillWave {
         }
         self.stats.waves += 1;
         let s = spec.max_seq;
-        let lanes: Vec<(&[u8], usize)> = prompts
-            .iter()
-            .map(|p| (*p, p.len().clamp(1, s - 1)))
-            .collect();
+        let plens: Vec<usize> = prompts.iter().map(|p| p.len().clamp(1, s - 1)).collect();
+        // clamped token keys: prefill only ever sees rows [0, plen), so
+        // equal keys are the same computation (short prompts pad with
+        // zero tokens, matching the artifact's zero-padded lanes).
+        // Built only when sharing needs them — the sharing-off baseline
+        // keeps borrowing the prompt slices as before.
+        let toks: Vec<Vec<u8>> = if share_prefixes {
+            prompts
+                .iter()
+                .zip(&plens)
+                .map(|(p, &plen)| (0..plen).map(|t| p.get(t).copied().unwrap_or(0)).collect())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let keys: Vec<&[u8]> = toks.iter().map(|t| t.as_slice()).collect();
 
-        // phase 1: launches.  Chunk by capacity; a lone chunk prefills
-        // cheaper through the unpadded per-request entry (same policy
-        // as the decoder ladder's lone-row rule), as does everything
-        // when no batched entry exists (capacity 1).
+        // plan each lane; only distinct, uncached prompts launch
+        let dup = if share_prefixes {
+            plan_dedup(&keys)
+        } else {
+            vec![None; prompts.len()]
+        };
+        let mut plans: Vec<LanePlan> = Vec::with_capacity(prompts.len());
+        let mut launches: Vec<(&[u8], usize)> = Vec::new();
+        // launch lanes worth a template: the key repeats within this
+        // wave (a Dup lane will replay it) or was seen in an earlier
+        // wave — templates copy the lane's full effective rows, so
+        // unique-prompt traffic should not pay for them
+        let mut wants_template: Vec<bool> = Vec::new();
+        for i in 0..prompts.len() {
+            if share_prefixes {
+                let key = keys[i];
+                if let Some(t) = self.templates.get(key) {
+                    // faithful and in-graph templates don't interchange
+                    if t.eff.is_some() == seed_effective {
+                        plans.push(LanePlan::Cached(t));
+                        continue;
+                    }
+                }
+                if let Some(j) = dup[i] {
+                    match &plans[j] {
+                        LanePlan::Launch(li) => {
+                            wants_template[*li] = true;
+                            plans.push(LanePlan::Dup(j));
+                            continue;
+                        }
+                        LanePlan::Cached(t) => {
+                            plans.push(LanePlan::Cached(t.clone()));
+                            continue;
+                        }
+                        // j is the earliest occurrence of the key, so it
+                        // cannot itself be a duplicate
+                        LanePlan::Dup(_) => unreachable!("dedup target is a duplicate"),
+                    }
+                }
+            }
+            plans.push(LanePlan::Launch(launches.len()));
+            wants_template.push(share_prefixes && self.seen.check_and_record(keys[i]));
+            // the runner sees the clamped tokens when sharing (the key
+            // IS the computation) and the raw prompt otherwise —
+            // bitwise the same lane either way, since prefill reads
+            // only tokens [0, plen)
+            launches.push(if share_prefixes {
+                (keys[i], plens[i])
+            } else {
+                (prompts[i], plens[i])
+            });
+        }
+
+        // phase 1: launches over the deduplicated lanes.  Chunk by
+        // capacity; a lone chunk prefills cheaper through the unpadded
+        // per-request entry (same policy as the decoder ladder's
+        // lone-row rule), as does everything when no batched entry
+        // exists (capacity 1).
         let cap = runner.wave_capacity().filter(|&c| c > 1).unwrap_or(1);
-        let mut outputs: Vec<(WaveOutput, &[(&[u8], usize)])> = Vec::new();
-        for group in lanes.chunks(cap) {
+        let mut outputs: Vec<WaveOutput> = Vec::new();
+        let mut launch_loc: Vec<(usize, usize)> = Vec::with_capacity(launches.len());
+        let mut start = 0usize;
+        while start < launches.len() {
+            let group = &launches[start..(start + cap).min(launches.len())];
             let w = if group.len() == 1 {
                 self.stats.fallback_prefills += 1;
                 runner.prefill_one(group[0].0, group[0].1)?
@@ -237,41 +609,144 @@ impl PrefillWave {
                 w
             };
             self.stats.launches += 1;
-            outputs.push((w, group));
+            for lane in 0..group.len() {
+                launch_loc.push((outputs.len(), lane));
+            }
+            outputs.push(w);
+            start += group.len();
         }
 
-        // phase 2: ingestion, with rollback on failure
-        let mut admitted = Vec::with_capacity(lanes.len());
-        for (w, group) in &outputs {
-            for (lane, &(_, plen)) in group.iter().enumerate() {
-                match Self::ingest(cache, effs, spec, seed_effective, w, (lane, plen)) {
-                    Ok(a) => admitted.push(a),
-                    Err(e) => {
-                        for a in &admitted {
-                            cache.free_sequence(a.cache_id);
-                            effs.remove(&a.cache_id);
+        // phase 2: ingestion in request order, with rollback on failure.
+        // Launched lanes flagged `wants_template` build one for their
+        // duplicates (this wave via `wave_templates`, future waves via
+        // the cache) — but registration into the bounded cache is
+        // DEFERRED to the end of the wave: an insert can evict an older
+        // template, and evicting mid-wave could free (and let the trie
+        // recycle the node ids of) a chain that a later `Cached` lane
+        // of this same wave was planned against.  Until the wave
+        // completes, planned chains stay alive through the cache's
+        // existing pins.
+        let mut admitted: Vec<AdmittedLane> = Vec::with_capacity(prompts.len());
+        let mut wave_templates: HashMap<usize, Arc<PromptTemplate>> = HashMap::new();
+        let mut to_register: Vec<(Vec<u8>, Arc<PromptTemplate>)> = Vec::new();
+        for (i, plan) in plans.iter().enumerate() {
+            let res = match plan {
+                LanePlan::Launch(li) => {
+                    let (oi, lane) = launch_loc[*li];
+                    let w = &outputs[oi];
+                    let toks_i: &[u8] = if share_prefixes { keys[i] } else { &[] };
+                    match Self::ingest(
+                        cache,
+                        effs,
+                        spec,
+                        seed_effective,
+                        share_prefixes,
+                        w,
+                        (lane, toks_i, plens[i]),
+                    ) {
+                        Ok((a, info)) => {
+                            self.stats.shared_rows += info.reused_rows as u64;
+                            let mut reg_err = None;
+                            if share_prefixes && wants_template[*li] {
+                                match Self::build_template(
+                                    cache,
+                                    spec,
+                                    seed_effective,
+                                    w,
+                                    lane,
+                                    keys[i],
+                                    &a.logits,
+                                    &info,
+                                ) {
+                                    Ok(t) => {
+                                        wave_templates.insert(*li, t.clone());
+                                        to_register.push((keys[i].to_vec(), t));
+                                    }
+                                    Err(e) => reg_err = Some(e),
+                                }
+                            }
+                            match reg_err {
+                                None => Ok(a),
+                                Some(e) => {
+                                    cache.free_sequence(a.cache_id);
+                                    effs.remove(&a.cache_id);
+                                    Err(e)
+                                }
+                            }
                         }
-                        return Err(e);
+                        Err(e) => Err(e),
                     }
                 }
+                LanePlan::Dup(j) => {
+                    let li = match &plans[*j] {
+                        LanePlan::Launch(li) => *li,
+                        _ => unreachable!("duplicates target launch lanes"),
+                    };
+                    let t = wave_templates
+                        .get(&li)
+                        .expect("launched lane registered its template")
+                        .clone();
+                    Self::ingest_template(cache, effs, spec, seed_effective, &t).map(|a| {
+                        self.stats.shared_admissions += 1;
+                        self.stats.shared_rows += t.plen as u64;
+                        a
+                    })
+                }
+                LanePlan::Cached(t) => {
+                    Self::ingest_template(cache, effs, spec, seed_effective, t).map(|a| {
+                        self.stats.shared_admissions += 1;
+                        self.stats.shared_rows += t.plen as u64;
+                        a
+                    })
+                }
+            };
+            match res {
+                Ok(a) => admitted.push(a),
+                Err(e) => {
+                    // free every admitted sequence and release the pins
+                    // build_template took for not-yet-registered
+                    // templates, so a failed wave leaves no state behind
+                    for a in &admitted {
+                        cache.free_sequence(a.cache_id);
+                        effs.remove(&a.cache_id);
+                    }
+                    for (_, t) in &to_register {
+                        if let Some(leaf) = t.leaf {
+                            cache.prefix_unref(leaf);
+                        }
+                    }
+                    return Err(e);
+                }
             }
+        }
+        // the wave is committed: register its templates (evictions are
+        // now safe — every planned lane has attached its chain, so
+        // freed templates can no longer strand an admission in flight)
+        for (key, t) in to_register {
+            self.templates.insert(cache, key, t);
         }
         Ok(admitted)
     }
 
-    /// Seed one lane: create the sequence, bulk-ingest its compressed
-    /// prompt rows, and register its effective-cache scratch.  `lane`
-    /// is `(lane_index, plen)`.  Frees the sequence it created if the
-    /// ingest fails partway, so errors leave no orphaned state.
+    /// Seed one launched lane: create the sequence, ingest its
+    /// compressed prompt rows (prefix-shared when `share` — leading
+    /// chunks another admission stored are referenced, not re-stored),
+    /// and register its effective-cache scratch.  `lane` is
+    /// `(lane_index, clamped_tokens, plen)`; the tokens are only
+    /// consulted on the shared path (empty otherwise).  Frees the
+    /// sequence it created if the ingest fails partway, so errors leave
+    /// no orphaned state.
     fn ingest(
         cache: &mut CacheManager,
         effs: &mut HashMap<u64, EffectiveCache>,
         spec: &ModelSpec,
         seed_effective: bool,
+        share: bool,
         w: &WaveOutput,
-        lane: (usize, usize),
-    ) -> Result<AdmittedLane> {
-        let (lane, plen) = lane;
+        lane: (usize, &[u8], usize),
+    ) -> Result<(AdmittedLane, SharedIngest)> {
+        let (lane, toks, plen) = lane;
+        debug_assert!(!share || toks.len() == plen);
         let (l, s, kvd, dl) = (spec.n_layer, spec.max_seq, spec.kv_dim(), spec.ae_latent);
         // borrow every lane slice before touching persistent state
         let logits = w.lane(lane_out::LOGITS, lane)?;
@@ -286,19 +761,153 @@ impl PrefillWave {
             "prefill lane shapes do not match the model spec"
         );
         let id = cache.create_sequence();
-        if let Err(e) = cache.append_rows(id, plen, s, k_lat, v_lat, k_raw, v_raw) {
-            cache.free_sequence(id); // e.g. pool budget exceeded
-            return Err(e);
-        }
+        let info = if share {
+            match cache.ingest_prompt_shared(id, toks, s, k_lat, v_lat, k_raw, v_raw) {
+                Ok(info) => info,
+                Err(e) => {
+                    cache.free_sequence(id); // e.g. pool budget exceeded
+                    return Err(e);
+                }
+            }
+        } else {
+            if let Err(e) = cache.append_rows(id, plen, s, k_lat, v_lat, k_raw, v_raw) {
+                cache.free_sequence(id); // e.g. pool budget exceeded
+                return Err(e);
+            }
+            SharedIngest {
+                prefix_rows: 0,
+                reused_rows: 0,
+                leaf: None,
+            }
+        };
         let mut eff = EffectiveCache::new(spec);
         if seed_effective {
             eff.seed(cache, id, k_eff, v_eff, plen);
         }
         effs.insert(id, eff);
+        Ok((
+            AdmittedLane {
+                cache_id: id,
+                logits: logits.to_vec(),
+            },
+            info,
+        ))
+    }
+
+    /// Admit one request entirely from a [`PromptTemplate`] — **zero
+    /// launches**: attach the shared chain, replay the unshared tail
+    /// rows, seed the effective cache by reference (copy-on-write), and
+    /// hand back the template's logits.  Bitwise-identical to what a
+    /// fresh prefill of the same clamped prompt would have produced,
+    /// because prefill is a pure function of those tokens.
+    fn ingest_template(
+        cache: &mut CacheManager,
+        effs: &mut HashMap<u64, EffectiveCache>,
+        spec: &ModelSpec,
+        seed_effective: bool,
+        t: &PromptTemplate,
+    ) -> Result<AdmittedLane> {
+        let id = cache.create_sequence();
+        let tail = t.plen - t.prefix_rows;
+        let staged = (|| -> Result<()> {
+            if let Some(leaf) = t.leaf {
+                cache.attach_prefix(id, leaf)?;
+            }
+            cache.append_rows(
+                id,
+                tail,
+                tail,
+                &t.k_lat_tail,
+                &t.v_lat_tail,
+                &t.k_raw_tail,
+                &t.v_raw_tail,
+            )
+        })();
+        if let Err(e) = staged {
+            cache.free_sequence(id);
+            return Err(e);
+        }
+        let mut eff = EffectiveCache::new(spec);
+        if seed_effective {
+            let tmpl = t
+                .eff
+                .as_ref()
+                .expect("in-graph admission needs a seeded template")
+                .clone();
+            eff.seed_shared(cache, id, tmpl);
+        }
+        effs.insert(id, eff);
         Ok(AdmittedLane {
             cache_id: id,
-            logits: logits.to_vec(),
+            logits: t.logits.clone(),
         })
+    }
+
+    /// Build the zero-launch admission template for one launched lane:
+    /// pin its prefix chain, copy its unshared tail rows and logits,
+    /// and (in-graph mode) pack its effective rows into a shared
+    /// [`EffTemplate`] every future sharer seeds by reference.
+    #[allow(clippy::too_many_arguments)]
+    fn build_template(
+        cache: &mut CacheManager,
+        spec: &ModelSpec,
+        seed_effective: bool,
+        w: &WaveOutput,
+        lane: usize,
+        toks: &[u8],
+        logits: &[f32],
+        info: &SharedIngest,
+    ) -> Result<Arc<PromptTemplate>> {
+        let (l, s, kvd, dl) = (spec.n_layer, spec.max_seq, spec.kv_dim(), spec.ae_latent);
+        let plen = toks.len();
+        let tail = plen - info.prefix_rows;
+        let slice_tail = |buf: &[f32], width: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; l * tail * width];
+            for layer in 0..l {
+                let src = layer * s * width + info.prefix_rows * width;
+                out[layer * tail * width..(layer + 1) * tail * width]
+                    .copy_from_slice(&buf[src..src + tail * width]);
+            }
+            out
+        };
+        let pack_rows = |buf: &[f32]| -> Vec<f32> {
+            let mut out = vec![0.0f32; l * plen * kvd];
+            for layer in 0..l {
+                let src = layer * s * kvd;
+                out[layer * plen * kvd..(layer + 1) * plen * kvd]
+                    .copy_from_slice(&buf[src..src + plen * kvd]);
+            }
+            out
+        };
+        let k_lat = w.lane(lane_out::K_LAT, lane)?;
+        let v_lat = w.lane(lane_out::V_LAT, lane)?;
+        let k_raw = w.lane(lane_out::K_RAW, lane)?;
+        let v_raw = w.lane(lane_out::V_RAW, lane)?;
+        let eff = if seed_effective {
+            let k_eff = w.lane(lane_out::K_EFF, lane)?;
+            let v_eff = w.lane(lane_out::V_EFF, lane)?;
+            Some(Arc::new(EffTemplate {
+                rows: plen,
+                k: pack_rows(k_eff),
+                v: pack_rows(v_eff),
+            }))
+        } else {
+            None
+        };
+        if let Some(leaf) = info.leaf {
+            cache.prefix_ref(leaf)?;
+        }
+        Ok(Arc::new(PromptTemplate {
+            plen,
+            leaf: info.leaf,
+            prefix_rows: info.prefix_rows,
+            logits: logits.to_vec(),
+            k_lat_tail: slice_tail(k_lat, dl),
+            v_lat_tail: slice_tail(v_lat, dl),
+            k_raw_tail: slice_tail(k_raw, kvd),
+            v_raw_tail: slice_tail(v_raw, kvd),
+            eff,
+        }))
     }
 }
 
@@ -517,7 +1126,7 @@ mod tests {
         let mut wave = PrefillWave::new();
         let prompts: Vec<&[u8]> = vec![b"aa", b"bb", b"cc", b"dd", b"ee"];
         let admitted = wave
-            .admit_wave(&mut cache, &mut effs, &spec, true, &prompts, &mut mock)
+            .admit_wave(&mut cache, &mut effs, &spec, true, true, &prompts, &mut mock)
             .unwrap();
         assert_eq!(admitted.len(), 5);
         // 5 prompts at capacity 2: two batched chunks + a lone single
@@ -544,7 +1153,7 @@ mod tests {
         let mut wave = PrefillWave::new();
         let prompts: Vec<&[u8]> = vec![b"abcd", b"efg"];
         let admitted = wave
-            .admit_wave(&mut cache, &mut effs, &spec, false, &prompts, &mut mock)
+            .admit_wave(&mut cache, &mut effs, &spec, false, true, &prompts, &mut mock)
             .unwrap();
         for lane in &admitted {
             assert_eq!(cache.decoded_upto(lane.cache_id), Some(0));
@@ -563,8 +1172,119 @@ mod tests {
         let mut wave = PrefillWave::new();
         // plens 3 and 7 -> bucket 8 -> padding (8-3) + (8-7) = 6
         let prompts: Vec<&[u8]> = vec![b"abc", b"abcdefg"];
-        wave.admit_wave(&mut cache, &mut effs, &spec, true, &prompts, &mut mock)
+        wave.admit_wave(&mut cache, &mut effs, &spec, true, false, &prompts, &mut mock)
             .unwrap();
         assert_eq!(wave.stats.padded_rows, 6);
+    }
+
+    #[test]
+    fn identical_prompts_admit_with_zero_launches() {
+        // launches ∝ distinct prompts: a wave of 4 requests over 2
+        // distinct prompts costs one batched launch; the duplicates and
+        // every later wave of the same prompts cost zero
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+        let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut wave = PrefillWave::new();
+        // >= one block (16 tokens) so the prefix chain is exercised too
+        let p: &[u8] = b"system prompt + few-shot body";
+        let q: &[u8] = b"another distinct long prompt!";
+        let prompts: Vec<&[u8]> = vec![p, p, q, p];
+        let admitted = wave
+            .admit_wave(&mut cache, &mut effs, &spec, true, true, &prompts, &mut mock)
+            .unwrap();
+        assert_eq!(admitted.len(), 4);
+        assert_eq!(mock.wave_calls, 1, "only the 2 distinct prompts launch");
+        assert_eq!(mock.single_calls, 0);
+        assert_eq!(wave.stats.launches, 1);
+        assert_eq!(wave.stats.shared_admissions, 2);
+        // zero-launch lanes are byte-replays of the launched lane
+        for (i, j) in [(1usize, 0usize), (3, 0)] {
+            assert_eq!(
+                admitted[i].logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                admitted[j].logits.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "duplicate lane logits must replay the launched lane"
+            );
+            assert_eq!(cache.seq_len(admitted[i].cache_id), Some(p.len()));
+            assert_eq!(cache.decoded_upto(admitted[i].cache_id), Some(p.len()));
+        }
+        // sharers reference one stored prefix: bytes held once
+        assert!(cache.seq_prefix_rows(admitted[1].cache_id) >= 16);
+        assert_eq!(
+            cache.seq_shared_bytes(admitted[0].cache_id),
+            cache.seq_shared_bytes(admitted[1].cache_id)
+        );
+        // a later wave of an already-cached prompt costs zero launches
+        let again = wave
+            .admit_wave(&mut cache, &mut effs, &spec, true, true, &[p], &mut mock)
+            .unwrap();
+        assert_eq!(wave.stats.launches, 1, "cached prompt must not launch");
+        assert_eq!(wave.stats.shared_admissions, 3);
+        assert_eq!(cache.seq_len(again[0].cache_id), Some(p.len()));
+        cache.prefix_integrity(&wave.pinned_leaves()).unwrap();
+        // retiring everything + clearing templates releases every byte
+        for a in admitted.iter().chain(again.iter()) {
+            cache.free_sequence(a.cache_id);
+        }
+        wave.clear_templates(&mut cache);
+        cache.prefix_integrity(&[]).unwrap();
+        assert_eq!(cache.prefix_stats().nodes_live, 0);
+        assert_eq!(cache.pool_stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn templates_are_lazy_evictable_and_mode_aware() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 1);
+        let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut wave = PrefillWave::with_template_capacity(1);
+        let p: &[u8] = b"sixteen-plus token prompt p";
+        let q: &[u8] = b"sixteen-plus token prompt q";
+        // lazy templates: a never-repeated prompt builds none...
+        wave.admit_wave(&mut cache, &mut effs, &spec, true, true, &[q], &mut mock)
+            .unwrap();
+        assert_eq!(wave.cached_prompts(), 0, "unique prompts pay no template");
+        // ...a within-wave duplicate does
+        wave.admit_wave(&mut cache, &mut effs, &spec, true, true, &[p, p], &mut mock)
+            .unwrap();
+        assert_eq!(wave.cached_prompts(), 1);
+        assert_eq!(wave.stats.launches, 2);
+        assert_eq!(wave.stats.shared_admissions, 1);
+        // a faithful admission never replays an in-graph template: it
+        // relaunches and (p repeated before) re-registers faithful
+        wave.admit_wave(&mut cache, &mut effs, &spec, false, true, &[p], &mut mock)
+            .unwrap();
+        assert_eq!(wave.stats.launches, 3, "mode mismatch must relaunch");
+        // q repeats: no template (capacity 1 holds p's), but it was
+        // seen, so this launch registers one and evicts p's — whose
+        // chain now survives only through its live sequences
+        let hits_before = cache.prefix_stats().chunk_hits;
+        wave.admit_wave(&mut cache, &mut effs, &spec, false, true, &[q], &mut mock)
+            .unwrap();
+        assert_eq!(wave.stats.launches, 4, "evicted template must relaunch");
+        assert!(
+            cache.prefix_stats().chunk_hits > hits_before,
+            "the relaunch still reuses the stored chunks byte-free"
+        );
+        assert_eq!(wave.cached_prompts(), 1);
+        assert_eq!(wave.pinned_leaves().len(), 1);
+        cache.prefix_integrity(&wave.pinned_leaves()).unwrap();
+        // the memory-pressure valve: shedding the oldest template
+        // unpins its chain; with the sequences retired too, the chain's
+        // bytes are actually freed
+        let ids: Vec<u64> = effs.keys().copied().collect();
+        for id in ids {
+            cache.free_sequence(id);
+        }
+        assert!(wave.shed_oldest_template(&mut cache));
+        assert_eq!(wave.cached_prompts(), 0);
+        assert!(!wave.shed_oldest_template(&mut cache), "nothing left to shed");
+        cache.prefix_integrity(&[]).unwrap();
+        assert_eq!(cache.prefix_stats().nodes_live, 0);
+        assert_eq!(cache.pool_stats().live_bytes, 0);
     }
 }

@@ -396,11 +396,11 @@ pub fn stage_copy_round(
             let eff = effs
                 .get(id)
                 .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
-            let src = match side {
-                Side::K => &eff.k,
-                Side::V => &eff.v,
-            };
-            cache[slot * seq_elems..(slot + 1) * seq_elems].copy_from_slice(src);
+            // full-range sync (rows [0, S) of every layer) == the old
+            // whole-buffer memcpy, and it sources template-seeded rows
+            // from their shared `EffTemplate` (copy-on-write admission)
+            // instead of the owned zeros behind them
+            eff.sync_rows_into(side, &mut cache[slot * seq_elems..(slot + 1) * seq_elems], 0, s);
         }
         for slot in rows..b {
             cache[slot * seq_elems..(slot + 1) * seq_elems].fill(0.0);

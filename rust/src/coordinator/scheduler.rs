@@ -14,7 +14,12 @@
 //!   (latents for AE layers, raw or head-subset rows otherwise;
 //!   int8-packed when the plan stacks Eq. 4), and — on the resident
 //!   path — the lane seeds its decode slot up front
-//!   (`SlotArena::seed_slot`).
+//!   (`SlotArena::seed_slot`).  Under `ServeConfig::prefix_sharing`
+//!   (default), admission additionally dedups across requests: a lane
+//!   whose clamped prompt was already computed admits with **zero**
+//!   launches (template replay + refcounted prefix chain, DESIGN.md
+//!   §6), and launched lanes store each block-aligned leading chunk at
+//!   most once — launches and prefix cache bytes ∝ distinct prompts.
 //! * **decode** — active sequences are batched each round through
 //!   `{m}_decode_step_b{B}`; the artifact receives the *effective*
 //!   (decoded + reuse-resolved) cache, appends the new token's raw row
@@ -104,6 +109,15 @@ pub struct ServeConfig {
     /// and bitwise reference (every lane of the batched entry is
     /// bit-identical to a per-request call, so outputs never differ).
     pub batched_prefill: bool,
+    /// share prefill work and prefix cache bytes **across requests**
+    /// (DESIGN.md §6): requests whose clamped prompt was already
+    /// computed admit with zero prefill launches (within-wave dedup +
+    /// the planner's prompt-template cache), and launched prompts store
+    /// each block-aligned leading chunk at most once in the cache
+    /// manager's refcounted prefix trie.  Outputs never differ —
+    /// prefill is a pure function of the clamped prompt — so `false`
+    /// only serves as the O(requests) launch/byte baseline.
+    pub prefix_sharing: bool,
     /// block encoding for raw (non-latent) stored rows.  `F16` is the
     /// default for new serving configs (the paper's fp16 serving
     /// assumption — half the raw-row bytes).  **Interaction with
@@ -120,7 +134,26 @@ pub struct ServeConfig {
 impl ServeConfig {
     /// Serving defaults for a plan: batch 8, in-graph reconstruction,
     /// no budget, store-resident staging, batched admission prefill,
-    /// f16 raw rows.
+    /// cross-request prefix sharing, f16 raw rows.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use kvcar::coordinator::ServeConfig;
+    /// use kvcar::model::gpt2_774m;
+    /// use kvcar::model::memory::CompressionPlan;
+    ///
+    /// let spec = gpt2_774m();
+    /// let cfg = ServeConfig::new(CompressionPlan::ae_first_layers(&spec, 4));
+    /// assert!(cfg.resident_cache && cfg.batched_prefill && cfg.prefix_sharing);
+    /// // the faithful constructor flips reconstruction on *and* pins
+    /// // lossless f32 raw rows, so store reads stay bit-exact
+    /// let faithful = ServeConfig::faithful(
+    ///     CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+    /// );
+    /// assert!(faithful.per_step_reconstruct);
+    /// assert_eq!(faithful.raw_format, kvcar::kvcache::Format::F32);
+    /// ```
     pub fn new(plan: CompressionPlan) -> ServeConfig {
         ServeConfig {
             plan,
@@ -130,6 +163,7 @@ impl ServeConfig {
             cache_budget: None,
             resident_cache: true,
             batched_prefill: true,
+            prefix_sharing: true,
             raw_format: Format::F16,
         }
     }
@@ -321,6 +355,10 @@ impl<'e> ServingEngine<'e> {
         }
         let t0 = Instant::now();
         let launches_before = self.waves.stats.launches;
+        let shared_before = (
+            self.waves.stats.shared_admissions,
+            self.waves.stats.shared_rows,
+        );
         let prompts: Vec<&[u8]> = reqs.iter().map(|r| r.prompt.as_slice()).collect();
         let mut runner = ArtifactPrefiller {
             engine: &mut *self.engine,
@@ -334,9 +372,13 @@ impl<'e> ServingEngine<'e> {
             &mut self.eff,
             &self.spec,
             !self.cfg.per_step_reconstruct,
+            self.cfg.prefix_sharing,
             &prompts,
             &mut runner,
         )?;
+        self.metrics.shared_admissions +=
+            self.waves.stats.shared_admissions - shared_before.0;
+        self.metrics.shared_prefix_rows += self.waves.stats.shared_rows - shared_before.1;
         let now = Instant::now();
         let arrivals: Vec<Instant> = reqs.iter().map(|r| r.arrival).collect();
         self.metrics.record_wave(
@@ -627,13 +669,18 @@ impl<'e> ServingEngine<'e> {
         }
     }
 
-    /// Device bytes held by live (unparked) sequences.
+    /// Device bytes held by live (unparked) sequences, plus the shared
+    /// prefix store counted **once** (its chunks are refcounted across
+    /// sequences, so summing them per sequence would overstate the
+    /// budget; per-sequence park victims still free only their own
+    /// suffix bytes, which is what `seq_stored_bytes` measures).
     fn live_cache_bytes(&self, active: &[ActiveSeq]) -> usize {
         active
             .iter()
             .filter(|s| !s.parked)
             .map(|s| self.cache.seq_stored_bytes(s.cache_id))
-            .sum()
+            .sum::<usize>()
+            + self.cache.prefix_stats().shared_bytes
     }
 
     /// Worst-case device-cache growth of one sequence across one round,
@@ -691,11 +738,36 @@ impl<'e> ServingEngine<'e> {
     /// Park live sequences while the projected next round exceeds the
     /// budget — cost-aware victims (largest stored bytes per remaining
     /// token first, never all of them; `batcher::plan_parking`).  The
-    /// victims' encoded bytes move to the host tier.
+    /// victims' encoded bytes move to the host tier.  The shared prefix
+    /// store lives in the same budgeted pool but parking cannot shrink
+    /// it (chunks stay resident for their other sharers and pinned
+    /// templates), so the plan runs against the budget *minus* the
+    /// shared bytes — otherwise private rows would be allowed to grow
+    /// until shared + private overshoots the operator's budget.
     fn park_under_pressure(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
         let Some(budget) = self.cfg.cache_budget else {
             return Ok(());
         };
+        // pressure valve: chains pinned only by cached admission
+        // templates (no live sharers) hold device bytes parking cannot
+        // reclaim — without this, a template-heavy history could leave
+        // the shared store owning the whole budget and park private
+        // sequences forever.  Shed oldest templates until the shared
+        // store leaves at least half the budget for private rows, and
+        // stop as soon as a shed frees nothing: chains kept alive by
+        // live sharers survive the unpin (their bytes are genuinely in
+        // use), so draining the rest of the cache would only disable
+        // zero-launch admission without recovering a byte.
+        loop {
+            let before = self.cache.prefix_stats().shared_bytes;
+            if before <= budget / 2 || !self.waves.shed_oldest_template(&mut self.cache) {
+                break;
+            }
+            if self.cache.prefix_stats().shared_bytes >= before {
+                break;
+            }
+        }
+        let budget = budget.saturating_sub(self.cache.prefix_stats().shared_bytes);
         let mut live: Vec<(u64, u64, usize, usize)> = active
             .iter()
             .filter(|s| !s.parked && !s.done)

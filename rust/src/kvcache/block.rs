@@ -25,6 +25,16 @@ pub enum Format {
 
 impl Format {
     /// Encoded bytes one `elements`-wide row occupies in this format.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use kvcar::kvcache::Format;
+    /// assert_eq!(Format::F32.row_bytes(64), 256);
+    /// assert_eq!(Format::F16.row_bytes(64), 128);
+    /// // int8 rows carry an 8-byte (scale, zeropoint) header
+    /// assert_eq!(Format::Int8.row_bytes(64), 72);
+    /// ```
     pub fn row_bytes(self, elements: usize) -> usize {
         match self {
             Format::F32 => elements * 4,

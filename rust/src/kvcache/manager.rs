@@ -17,6 +17,7 @@
 
 use super::allocator::{BlockPool, PoolStats};
 use super::block::{Block, Format, RowsView};
+use super::prefix::{PrefixIndex, PrefixStats};
 use crate::model::memory::CompressionPlan;
 use crate::model::ModelSpec;
 use anyhow::{anyhow, Result};
@@ -166,10 +167,63 @@ pub enum StreamRows<'a> {
     Heads(StreamView<'a>, &'a [usize]),
 }
 
+/// Block list behind a [`StreamView`].  `stream()` sits on the
+/// per-round decode path, so neither case allocates: the common
+/// (unshared) case borrows the sequence's contiguous private block run,
+/// and a prefix-shared sequence resolves chain blocks through the trie
+/// on demand (an O(1) arena index per access) before falling through to
+/// its private suffix blocks.
+enum ViewBlocks<'a> {
+    /// the sequence's own blocks, borrowed as-is (no shared prefix)
+    Contiguous(&'a [Block]),
+    /// shared prefix chain followed by private suffix blocks
+    Chained {
+        /// trie holding the chain's blocks
+        index: &'a PrefixIndex,
+        /// the sequence's chain, root→leaf (block `i < path.len()`)
+        path: &'a [u32],
+        /// stream coordinates inside each chain node
+        layer: usize,
+        /// K or V half of the stream
+        side: Side,
+        /// private suffix blocks (block `i - path.len()`)
+        own: &'a [Block],
+    },
+}
+
+impl<'a> ViewBlocks<'a> {
+    fn get(&self, i: usize) -> &'a Block {
+        match self {
+            ViewBlocks::Contiguous(s) => &s[i],
+            ViewBlocks::Chained {
+                index,
+                path,
+                layer,
+                side,
+                own,
+            } => {
+                if i < path.len() {
+                    index
+                        .block(path[i], *layer, *side)
+                        .expect("stored stream must have a block in every prefix chunk")
+                } else {
+                    &own[i - path.len()]
+                }
+            }
+        }
+    }
+}
+
 /// Block-spanning, borrowed row-range access for one (seq, layer, K|V)
 /// stream: no owned copies of block data, decode on demand.
+///
+/// The block list chains the sequence's shared-prefix blocks (if it was
+/// admitted against a [`PrefixIndex`] chain — all full, block-aligned)
+/// before its own suffix blocks, so readers never see the ownership
+/// split: row indexing, range decodes, and raw views are identical for
+/// shared and private sequences.
 pub struct StreamView<'a> {
-    blocks: &'a [Block],
+    blocks: ViewBlocks<'a>,
     len: usize,
     elements_per_row: usize,
 }
@@ -203,12 +257,14 @@ impl<'a> StreamView<'a> {
         if start == end {
             return;
         }
-        let cap = self.blocks[0].capacity;
+        let cap = self.blocks.get(0).capacity;
         let (mut row, mut off) = (start, 0usize);
         while row < end {
             let (b, i) = (row / cap, row % cap);
             let take = (cap - i).min(end - row);
-            self.blocks[b].decode_rows_into(i, i + take, &mut out[off..off + take * epr]);
+            self.blocks
+                .get(b)
+                .decode_rows_into(i, i + take, &mut out[off..off + take * epr]);
             row += take;
             off += take * epr;
         }
@@ -229,12 +285,12 @@ impl<'a> StreamView<'a> {
         if start == end {
             return views;
         }
-        let cap = self.blocks[0].capacity;
+        let cap = self.blocks.get(0).capacity;
         let mut row = start;
         while row < end {
             let (b, i) = (row / cap, row % cap);
             let take = (cap - i).min(end - row);
-            views.push(self.blocks[b].rows_view(i, i + take));
+            views.push(self.blocks.get(b).rows_view(i, i + take));
             row += take;
         }
         views
@@ -246,18 +302,28 @@ impl<'a> StreamView<'a> {
 ///
 /// Wire format (documented in `rust/DESIGN.md` §4): streams concatenated
 /// layer-ascending, K before V; each stored stream contributes exactly
-/// `len * format.row_bytes(elements_per_row)` bytes of back-to-back
-/// encoded rows (block padding is stripped — partial trailing blocks
-/// contribute only their filled rows).  Fully-aliased streams contribute
-/// nothing.  Formats and row widths are derived from the compression
-/// plan on restore, so the payload needs no per-stream header and
-/// round-trips bit-identically for f32, f16, and int8 (Eq. 4 headers
-/// included).
+/// `(len - prefix_rows) * format.row_bytes(elements_per_row)` bytes of
+/// back-to-back encoded rows (block padding is stripped — partial
+/// trailing blocks contribute only their filled rows).  Fully-aliased
+/// streams contribute nothing.  Formats and row widths are derived from
+/// the compression plan on restore, so the payload needs no per-stream
+/// header and round-trips bit-identically for f32, f16, and int8 (Eq. 4
+/// headers included).
+///
+/// `prefix_rows` is the park/resume side of cross-request prefix
+/// sharing (DESIGN.md §6): a sequence admitted against a shared prefix
+/// chain spills only its **own suffix rows** — the shared prefix stays
+/// device-resident and refcounted for its other sharers, so parking a
+/// sharer moves fewer bytes and can never strand or double-free prefix
+/// blocks.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParkedBytes {
-    /// token rows the payload covers
+    /// token rows the sequence covers in total (prefix + suffix)
     pub len: usize,
-    /// concatenated encoded stream bytes (see wire format above)
+    /// leading rows resident in the shared prefix store (not in the
+    /// payload; 0 for unshared sequences)
+    pub prefix_rows: usize,
+    /// concatenated encoded suffix stream bytes (see wire format above)
     pub payload: Vec<u8>,
 }
 
@@ -273,19 +339,56 @@ struct SeqCache {
     decoded_upto: usize,
     /// compressed payload currently lives in the host tier — the blocks
     /// were freed back to the device pool and reads must fail until
-    /// `restore_sequence_bytes` brings the bytes back
+    /// `restore_sequence_bytes` brings the bytes back.  A parked sharer
+    /// keeps its `prefix_path` references: only suffix bytes move.
     parked: bool,
-    /// [layer][side] streams, side 0 = K, 1 = V
+    /// shared prefix chain (root→leaf `PrefixIndex` nodes) this sequence
+    /// references; empty for unshared sequences.  The chain's blocks
+    /// cover rows [0, prefix_rows) of every stored stream; the
+    /// sequence's own `streams` blocks cover [prefix_rows, len).
+    prefix_path: Vec<u32>,
+    /// rows covered by the shared chain (block-aligned; 0 = unshared)
+    prefix_rows: usize,
+    /// [layer][side] streams, side 0 = K, 1 = V — suffix rows only
     streams: Vec<[Stream; 2]>,
 }
 
 /// Per-sequence compressed block store: create/append/stream/park
-/// sequences under one `CacheConfig` and one recycling block pool.
+/// sequences under one `CacheConfig` and one recycling block pool, plus
+/// the cross-request shared-prefix trie ([`PrefixIndex`], DESIGN.md §6)
+/// whose refcounted chunk blocks sharers read through the same
+/// [`StreamView`] API as private rows.
+///
+/// # Examples
+///
+/// Append one token's storage rows and stream them back zero-copy:
+///
+/// ```
+/// use kvcar::kvcache::{CacheConfig, CacheManager, Side, StreamRows};
+/// use kvcar::model::gpt2_774m;
+/// use kvcar::model::memory::CompressionPlan;
+///
+/// let spec = gpt2_774m();
+/// let plan = CompressionPlan::ae_first_layers(&spec, 4);
+/// let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+/// let id = m.create_sequence();
+/// let lat = vec![0.25f32; spec.n_layer * spec.ae_latent];
+/// let raw = vec![0.5f32; spec.n_layer * spec.kv_dim()];
+/// m.append_token(id, &lat, &lat, &raw, &raw)?;
+/// assert_eq!(m.seq_len(id), Some(1));
+/// // layer 0 is AE-compressed under this plan: the stream holds latents
+/// match m.stream(id, 0, Side::K)? {
+///     StreamRows::Latent(view) => assert_eq!(view.len(), 1),
+///     _ => panic!("expected a latent stream"),
+/// }
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct CacheManager {
     /// storage policy this manager encodes rows under
     pub cfg: CacheConfig,
     pool: BlockPool,
     seqs: HashMap<u64, SeqCache>,
+    prefix: PrefixIndex,
     next_id: u64,
 }
 
@@ -297,6 +400,7 @@ impl CacheManager {
             cfg,
             pool: BlockPool::new(),
             seqs: HashMap::new(),
+            prefix: PrefixIndex::new(),
             next_id: 1,
         }
     }
@@ -343,13 +447,20 @@ impl CacheManager {
                 len: 0,
                 decoded_upto: 0,
                 parked: false,
+                prefix_path: Vec::new(),
+                prefix_rows: 0,
                 streams,
             },
         );
         id
     }
 
-    /// Drop a sequence and recycle all its blocks.
+    /// Drop a sequence: recycle its own suffix blocks and release its
+    /// shared-prefix references (chunks nothing references any more are
+    /// recycled too — a sharer's retirement can never strand prefix
+    /// bytes, and a double-free would trip the refcount assertions).
+    /// Safe on parked sequences: they hold no suffix blocks, only the
+    /// prefix references this releases.
     pub fn free_sequence(&mut self, id: u64) {
         if let Some(seq) = self.seqs.remove(&id) {
             for mut pair in seq.streams {
@@ -358,6 +469,9 @@ impl CacheManager {
                         self.pool.free(b);
                     }
                 }
+            }
+            if let Some(&leaf) = seq.prefix_path.last() {
+                self.prefix.detach(leaf, &mut self.pool);
             }
         }
     }
@@ -400,12 +514,32 @@ impl CacheManager {
         k_raw: &[f32],
         v_raw: &[f32],
     ) -> Result<()> {
-        if n == 0 {
+        self.append_range(id, 0, n, stride, k_lat, v_lat, k_raw, v_raw)
+    }
+
+    /// Append buffer rows `[from, to)` — the range-offset core of
+    /// `append_rows`, also used by the shared-prefix ingest to append
+    /// only the unshared suffix of a prefill lane's buffers (token `t`
+    /// of layer `l` sits at `l * stride * width + t * width`).
+    #[allow(clippy::too_many_arguments)]
+    fn append_range(
+        &mut self,
+        id: u64,
+        from: usize,
+        to: usize,
+        stride: usize,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        k_raw: &[f32],
+        v_raw: &[f32],
+    ) -> Result<()> {
+        if from >= to {
             return Ok(());
         }
+        let n = to - from;
         let spec = self.cfg.spec.clone();
         let (l, dl, kvd, dh) = (spec.n_layer, spec.ae_latent, spec.kv_dim(), spec.d_head);
-        anyhow::ensure!(n <= stride, "n exceeds buffer stride");
+        anyhow::ensure!(to <= stride, "row range exceeds buffer stride");
         anyhow::ensure!(
             k_lat.len() == l * stride * dl && v_lat.len() == l * stride * dl,
             "latent shape"
@@ -426,24 +560,17 @@ impl CacheManager {
             for (side, lat, raw) in [(0usize, k_lat, k_raw), (1, v_lat, v_raw)] {
                 // borrow dance: assemble the rows before touching the stream
                 let kind = seq.streams[layer][side].kind.clone();
-                let rows: Option<&[f32]> = match &kind {
-                    StoreKind::FullAlias => None,
-                    StoreKind::Latent => {
-                        let base = layer * stride * dl;
-                        Some(&lat[base..base + n * dl])
-                    }
-                    StoreKind::Heads(heads) => {
-                        gather.clear();
-                        gather.reserve(n * heads.len() * dh);
-                        for t in 0..n {
-                            for &h in heads {
-                                let base = layer * stride * kvd + t * kvd + h * dh;
-                                gather.extend_from_slice(&raw[base..base + dh]);
-                            }
-                        }
-                        Some(&gather)
-                    }
-                };
+                let rows = gather_stream_rows(
+                    &kind,
+                    layer,
+                    from,
+                    to,
+                    stride,
+                    (dl, kvd, dh),
+                    lat,
+                    raw,
+                    &mut gather,
+                );
                 if let Some(mut rows) = rows {
                     let fmt = self.cfg.format_for(&kind);
                     let epr = kind.elements(&spec);
@@ -478,7 +605,10 @@ impl CacheManager {
     }
 
     /// Borrowed view of one stream — the zero-copy retrieval API (see
-    /// `StreamRows`).
+    /// `StreamRows`).  For sequences admitted against a shared prefix
+    /// chain the view chains the (full, refcounted) prefix blocks before
+    /// the sequence's own suffix blocks, so shared reads are bitwise
+    /// identical to what an unshared ingest of the same rows would read.
     pub fn stream(&self, id: u64, layer: usize, side: Side) -> Result<StreamRows<'_>> {
         let seq = self
             .seqs
@@ -489,10 +619,22 @@ impl CacheManager {
             "sequence {id} is parked in the host tier (restore before reading)"
         );
         let stream = &seq.streams[layer][side as usize];
+        let epr = stream.kind.elements(&self.cfg.spec);
+        let blocks = if epr == 0 || seq.prefix_path.is_empty() {
+            ViewBlocks::Contiguous(&stream.blocks)
+        } else {
+            ViewBlocks::Chained {
+                index: &self.prefix,
+                path: &seq.prefix_path,
+                layer,
+                side,
+                own: &stream.blocks,
+            }
+        };
         let view = StreamView {
-            blocks: &stream.blocks,
+            blocks,
             len: seq.len,
-            elements_per_row: stream.kind.elements(&self.cfg.spec),
+            elements_per_row: epr,
         };
         Ok(match &stream.kind {
             StoreKind::FullAlias => StreamRows::Alias,
@@ -534,6 +676,11 @@ impl CacheManager {
     /// and mark the sequence parked.  The watermark is invalidated — the
     /// effective-cache scratch is the caller's to drop, and resume goes
     /// through a full rebuild.
+    ///
+    /// Refcount-aware: only the sequence's **own suffix blocks** spill.
+    /// A shared prefix chain stays device-resident and referenced (its
+    /// other sharers keep reading it), so a parked sharer neither moves
+    /// prefix bytes nor risks the chain being freed under it.
     pub fn extract_sequence_bytes(&mut self, id: u64) -> Result<ParkedBytes> {
         let seq = self
             .seqs
@@ -558,6 +705,7 @@ impl CacheManager {
         seq.decoded_upto = 0;
         Ok(ParkedBytes {
             len: seq.len,
+            prefix_rows: seq.prefix_rows,
             payload,
         })
     }
@@ -583,20 +731,24 @@ impl CacheManager {
                 parked.len,
                 seq.len
             );
+            anyhow::ensure!(
+                seq.prefix_rows == parked.prefix_rows,
+                "parked payload assumes {} shared prefix rows, sequence holds {}",
+                parked.prefix_rows,
+                seq.prefix_rows
+            );
         }
         // derive the wire layout from the plan alone (no per-stream
-        // headers travel with the payload)
+        // headers travel with the payload); only the suffix rows past
+        // the still-resident shared prefix travel
+        let own = parked.len - parked.prefix_rows;
         let mut layout = Vec::new();
         for layer in 0..spec.n_layer {
             for side in [Side::K, Side::V] {
                 let kind = self.cfg.store_kind(layer, side);
                 let epr = kind.elements(&spec);
                 let fmt = self.cfg.format_for(&kind);
-                let nbytes = if epr == 0 {
-                    0
-                } else {
-                    parked.len * fmt.row_bytes(epr)
-                };
+                let nbytes = if epr == 0 { 0 } else { own * fmt.row_bytes(epr) };
                 layout.push((fmt, epr, nbytes));
             }
         }
@@ -676,6 +828,316 @@ impl CacheManager {
     pub fn reuse_masks(&self) -> (&Vec<Vec<bool>>, &Vec<Vec<bool>>) {
         (&self.cfg.plan.reuse_k, &self.cfg.plan.reuse_v)
     }
+
+    // --- cross-request shared-prefix reuse (DESIGN.md §6) -----------------
+
+    /// Reference an empty, freshly-created sequence onto the shared
+    /// chain ending at `leaf`: the sequence starts at the chain's
+    /// block-aligned row count with **zero own bytes** — its reads chain
+    /// through the shared blocks, its appends go to private suffix
+    /// blocks.  Fails (without touching refcounts) unless the sequence
+    /// is empty, unparked, and unshared.
+    pub fn attach_prefix(&mut self, id: u64, leaf: u32) -> Result<()> {
+        let bs = self.cfg.block_size;
+        let max_seq = self.cfg.spec.max_seq;
+        {
+            let seq = self
+                .seqs
+                .get(&id)
+                .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+            anyhow::ensure!(!seq.parked, "sequence {id} is parked in the host tier");
+            anyhow::ensure!(
+                seq.len == 0 && seq.prefix_path.is_empty(),
+                "prefix attaches only to empty, unshared sequences"
+            );
+        }
+        let path = self.prefix.attach(leaf)?;
+        let rows = path.len() * bs;
+        debug_assert!(rows <= max_seq, "prefix chain exceeds max_seq");
+        let seq = self.seqs.get_mut(&id).unwrap();
+        seq.prefix_path = path;
+        seq.prefix_rows = rows;
+        seq.len = rows;
+        Ok(())
+    }
+
+    /// Ingest one prefill lane's prompt rows into an empty sequence,
+    /// sharing every block-aligned leading chunk through the prefix
+    /// trie: chunks another admission already stored are **referenced,
+    /// not re-stored** (`reused_rows`), new chunks are encoded once into
+    /// immutable shared blocks, and the unshared tail rows
+    /// `[prefix_rows, plen)` append to the sequence's private blocks.
+    ///
+    /// `toks` is the clamped prompt (`plen = toks.len()` rows); the
+    /// buffers are prefill-lane shaped (`[L, stride, *]`, absolute token
+    /// indexing) exactly as `append_rows` takes them.  Shared chunk
+    /// blocks are encoded through the same codecs as a private append,
+    /// so a sharer's stream reads are bitwise identical to an unshared
+    /// ingest of the same lane.  On any failure (e.g. pool budget) every
+    /// chunk this call created is rolled back and the sequence is left
+    /// empty or partially appended for the caller to free.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ingest_prompt_shared(
+        &mut self,
+        id: u64,
+        toks: &[u8],
+        stride: usize,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        k_raw: &[f32],
+        v_raw: &[f32],
+    ) -> Result<SharedIngest> {
+        let plen = toks.len();
+        let bs = self.cfg.block_size;
+        {
+            let seq = self
+                .seqs
+                .get(&id)
+                .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+            anyhow::ensure!(!seq.parked, "sequence {id} is parked in the host tier");
+            anyhow::ensure!(
+                seq.len == 0 && seq.prefix_path.is_empty(),
+                "shared ingest needs an empty, unshared sequence"
+            );
+        }
+        anyhow::ensure!(plen <= stride, "prompt exceeds buffer stride");
+        anyhow::ensure!(plen <= self.cfg.spec.max_seq, "prompt exceeds max_seq");
+        {
+            let (l, dl, kvd) = (
+                self.cfg.spec.n_layer,
+                self.cfg.spec.ae_latent,
+                self.cfg.spec.kv_dim(),
+            );
+            anyhow::ensure!(
+                k_lat.len() == l * stride * dl && v_lat.len() == l * stride * dl,
+                "latent shape"
+            );
+            anyhow::ensure!(
+                k_raw.len() == l * stride * kvd && v_raw.len() == l * stride * kvd,
+                "raw shape"
+            );
+        }
+
+        let n_chunks = plen / bs;
+        let mut parent: Option<u32> = None;
+        let mut reused_rows = 0usize;
+        let mut created: Vec<u32> = Vec::new();
+        for i in 0..n_chunks {
+            let key = &toks[i * bs..(i + 1) * bs];
+            if let Some(child) = self.prefix.child(parent, key) {
+                self.prefix.stats.chunk_hits += 1;
+                reused_rows += bs;
+                parent = Some(child);
+                continue;
+            }
+            match self.build_chunk_blocks(i * bs, bs, stride, k_lat, v_lat, k_raw, v_raw) {
+                Ok((blocks, bytes)) => {
+                    self.prefix.stats.chunk_misses += 1;
+                    let node = self.prefix.add_child(parent, key.to_vec(), blocks, bytes);
+                    created.push(node);
+                    parent = Some(node);
+                }
+                Err(e) => {
+                    // roll the new chunks back leaf-first; chunks that
+                    // pre-existed keep their other references untouched
+                    for &node in created.iter().rev() {
+                        self.prefix.remove_unreferenced(node, &mut self.pool);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let prefix_rows = n_chunks * bs;
+        if let Some(leaf) = parent {
+            self.attach_prefix(id, leaf)?;
+        }
+        self.append_range(id, prefix_rows, plen, stride, k_lat, v_lat, k_raw, v_raw)?;
+        self.prefix.stats.reused_rows += reused_rows as u64;
+        Ok(SharedIngest {
+            prefix_rows,
+            reused_rows,
+            leaf: parent,
+        })
+    }
+
+    /// Encode rows `[from, from + n)` of a prefill lane's buffers into
+    /// one full block per stored stream — the payload of one shared
+    /// prefix chunk.  Uses exactly the `append_range` gather + codec
+    /// path, which is what keeps shared reads bitwise equal to private
+    /// ones.  Frees everything staged if the pool budget runs out.
+    #[allow(clippy::too_many_arguments)]
+    fn build_chunk_blocks(
+        &mut self,
+        from: usize,
+        n: usize,
+        stride: usize,
+        k_lat: &[f32],
+        v_lat: &[f32],
+        k_raw: &[f32],
+        v_raw: &[f32],
+    ) -> Result<(Vec<[Option<Block>; 2]>, usize)> {
+        let spec = self.cfg.spec.clone();
+        let (l, dl, kvd, dh) = (spec.n_layer, spec.ae_latent, spec.kv_dim(), spec.d_head);
+        let mut out: Vec<[Option<Block>; 2]> = Vec::with_capacity(l);
+        let mut bytes = 0usize;
+        let mut gather: Vec<f32> = Vec::new();
+        for layer in 0..l {
+            let mut pair: [Option<Block>; 2] = [None, None];
+            for (side_idx, side, lat, raw) in [
+                (0usize, Side::K, k_lat, k_raw),
+                (1, Side::V, v_lat, v_raw),
+            ] {
+                let kind = self.cfg.store_kind(layer, side);
+                let epr = kind.elements(&spec);
+                if epr == 0 {
+                    continue;
+                }
+                let fmt = self.cfg.format_for(&kind);
+                let rows = gather_stream_rows(
+                    &kind,
+                    layer,
+                    from,
+                    from + n,
+                    stride,
+                    (dl, kvd, dh),
+                    lat,
+                    raw,
+                    &mut gather,
+                )
+                .expect("stored stream gathers rows");
+                let Some(mut b) = self.pool.alloc(fmt, epr, self.cfg.block_size) else {
+                    for mut p in out {
+                        for blk in p.iter_mut() {
+                            if let Some(blk) = blk.take() {
+                                self.pool.free(blk);
+                            }
+                        }
+                    }
+                    for blk in pair.iter_mut() {
+                        if let Some(blk) = blk.take() {
+                            self.pool.free(blk);
+                        }
+                    }
+                    return Err(anyhow!("cache budget exceeded storing a shared prefix chunk"));
+                };
+                let pushed = b.push_rows(rows);
+                debug_assert_eq!(pushed, n, "chunk block must fill exactly");
+                bytes += b.stored_bytes();
+                pair[side_idx] = Some(b);
+            }
+            out.push(pair);
+        }
+        Ok((out, bytes))
+    }
+
+    /// Pin the chain ending at `leaf` (admission-template hold): the
+    /// chain stays warm for zero-launch re-admission even while no
+    /// sequence references it.  Balanced by [`CacheManager::prefix_unref`].
+    pub fn prefix_ref(&mut self, leaf: u32) -> Result<()> {
+        self.prefix.pin(leaf)
+    }
+
+    /// Release a pin taken with [`CacheManager::prefix_ref`], recycling
+    /// any chunk nothing references any more.
+    pub fn prefix_unref(&mut self, leaf: u32) {
+        self.prefix.unpin(leaf, &mut self.pool);
+    }
+
+    /// Rows a sequence serves from the shared prefix store (0 = unshared).
+    pub fn seq_prefix_rows(&self, id: u64) -> usize {
+        self.seqs.get(&id).map_or(0, |s| s.prefix_rows)
+    }
+
+    /// Shared-chain bytes a sequence reads through (held once in the
+    /// prefix store no matter how many sequences share them; the
+    /// private counterpart is `seq_stored_bytes`).
+    pub fn seq_shared_bytes(&self, id: u64) -> usize {
+        self.seqs
+            .get(&id)
+            .map(|s| {
+                s.prefix_path
+                    .iter()
+                    .map(|&n| self.prefix.node_bytes(n))
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Shared-prefix store accounting snapshot (nodes, hit/miss
+    /// counters, bytes held once).
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.prefix.stats
+    }
+
+    /// Re-derive every prefix refcount from the live sequences plus the
+    /// caller's pinned leaves and cross-check the trie — the invariant
+    /// the admit/park/resume/retire property test asserts after every
+    /// step (leak or double-free ⇒ `Err`).
+    pub fn prefix_integrity(&self, pinned_leaves: &[u32]) -> Result<(), String> {
+        let paths: Vec<&[u32]> = self
+            .seqs
+            .values()
+            .filter(|s| !s.prefix_path.is_empty())
+            .map(|s| s.prefix_path.as_slice())
+            .collect();
+        self.prefix.integrity(&paths, pinned_leaves)
+    }
+}
+
+/// Gather the encodable rows of one (layer, side) stream for buffer
+/// rows `[from, to)` out of prefill-shaped `[L, stride, *]` buffers.
+/// This is the **one** gather path both private appends
+/// (`append_range`) and shared prefix chunks (`build_chunk_blocks`)
+/// encode through — sharing it is what keeps shared-chunk reads
+/// bitwise-equal to private ones by construction, not by parallel
+/// maintenance.  Returns `None` for fully-aliased streams; `Heads`
+/// rows are gathered into `scratch`.  `dims` is `(dl, kvd, dh)`.
+#[allow(clippy::too_many_arguments)]
+fn gather_stream_rows<'a>(
+    kind: &StoreKind,
+    layer: usize,
+    from: usize,
+    to: usize,
+    stride: usize,
+    dims: (usize, usize, usize),
+    lat: &'a [f32],
+    raw: &'a [f32],
+    scratch: &'a mut Vec<f32>,
+) -> Option<&'a [f32]> {
+    let (dl, kvd, dh) = dims;
+    let n = to - from;
+    match kind {
+        StoreKind::FullAlias => None,
+        StoreKind::Latent => {
+            let base = layer * stride * dl + from * dl;
+            Some(&lat[base..base + n * dl])
+        }
+        StoreKind::Heads(heads) => {
+            scratch.clear();
+            scratch.reserve(n * heads.len() * dh);
+            for t in from..to {
+                for &h in heads {
+                    let base = layer * stride * kvd + t * kvd + h * dh;
+                    scratch.extend_from_slice(&raw[base..base + dh]);
+                }
+            }
+            Some(scratch.as_slice())
+        }
+    }
+}
+
+/// What one shared-prefix ingest did (see
+/// [`CacheManager::ingest_prompt_shared`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SharedIngest {
+    /// leading rows now served through the shared chain (block-aligned)
+    pub prefix_rows: usize,
+    /// of those, rows that already existed in the store (referenced
+    /// instead of re-stored — the cross-request byte dedup)
+    pub reused_rows: usize,
+    /// leaf node of the chain (None when the prompt is shorter than one
+    /// block — nothing to share at block granularity)
+    pub leaf: Option<u32>,
 }
 
 #[cfg(test)]
@@ -1209,6 +1671,171 @@ mod tests {
         parked.len = 9;
         m.restore_sequence_bytes(id, &parked).unwrap();
         assert_eq!(m.seq_len(id), Some(9));
+    }
+
+    /// Prefill-lane-shaped buffers ([L, n, *]) for `n` prompt rows.
+    fn lane_bufs(rng: &mut Rng, spec: &ModelSpec, n: usize) -> [Vec<f32>; 4] {
+        [
+            rand_rows(rng, spec.n_layer * n * spec.ae_latent),
+            rand_rows(rng, spec.n_layer * n * spec.ae_latent),
+            rand_rows(rng, spec.n_layer * n * spec.kv_dim()),
+            rand_rows(rng, spec.n_layer * n * spec.kv_dim()),
+        ]
+    }
+
+    #[test]
+    fn shared_ingest_matches_private_ingest_bitwise() {
+        // the core sharing contract: a sequence admitted through the
+        // shared-prefix trie reads every stream bitwise-identical to a
+        // plain append of the same lane, across random plans
+        check(20, |rng| {
+            let spec = tiny_spec();
+            let plan = random_plan(rng, &spec);
+            let mut shared = CacheManager::new(CacheConfig::new(spec.clone(), plan.clone()));
+            let mut plain = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+            let plen = rng.range(1, spec.max_seq);
+            let toks: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+            let [kl, vl, kr, vr] = lane_bufs(rng, &spec, plen);
+            let sid = shared.create_sequence();
+            let si = shared
+                .ingest_prompt_shared(sid, &toks, plen, &kl, &vl, &kr, &vr)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                si.prefix_rows == (plen / shared.cfg.block_size) * shared.cfg.block_size,
+                "prefix must cover exactly the full leading chunks"
+            );
+            prop_assert!(si.reused_rows == 0, "first ingest has nothing to reuse");
+            let pid = plain.create_sequence();
+            plain
+                .append_rows(pid, plen, plen, &kl, &vl, &kr, &vr)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(shared.seq_len(sid) == plain.seq_len(pid));
+            for layer in 0..spec.n_layer {
+                for side in [Side::K, Side::V] {
+                    let a = format!("{:?}", shared.stored_rows(sid, layer, side));
+                    let b = format!("{:?}", plain.stored_rows(pid, layer, side));
+                    prop_assert!(a == b, "shared stream ({layer}, {side:?}) diverges");
+                }
+            }
+            // a second sharer of the same prompt stores zero new prefix
+            // bytes: only its (identical) tail is private
+            let live_before = shared.pool_stats().live_bytes;
+            let sid2 = shared.create_sequence();
+            let si2 = shared
+                .ingest_prompt_shared(sid2, &toks, plen, &kl, &vl, &kr, &vr)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                si2.reused_rows == si.prefix_rows,
+                "second sharer must reuse every chunk"
+            );
+            prop_assert!(
+                shared.pool_stats().live_bytes - live_before
+                    == shared.seq_stored_bytes(sid2),
+                "second sharer may only add its private tail bytes"
+            );
+            prop_assert!(
+                shared.seq_shared_bytes(sid2) == shared.seq_shared_bytes(sid),
+                "sharers read the same chain"
+            );
+            // releasing one sharer keeps the chain; releasing both frees
+            // everything (no leak, no double-free)
+            shared.free_sequence(sid);
+            shared.prefix_integrity(&[]).map_err(|e| e.to_string())?;
+            if si.prefix_rows > 0 {
+                prop_assert!(shared.prefix_stats().nodes_live > 0, "chain must survive a sharer");
+            }
+            shared.free_sequence(sid2);
+            shared.prefix_integrity(&[]).map_err(|e| e.to_string())?;
+            prop_assert!(shared.prefix_stats().nodes_live == 0, "last release frees the chain");
+            prop_assert!(shared.pool_stats().live_bytes == 0, "no bytes may leak");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parked_sharer_spills_suffix_only_and_roundtrips() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 2);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut rng = Rng::new(31);
+        let plen = m.cfg.block_size * 2 + 5; // two shared chunks + tail
+        let toks: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        let [kl, vl, kr, vr] = lane_bufs(&mut rng, &spec, plen);
+        let a = m.create_sequence();
+        m.ingest_prompt_shared(a, &toks, plen, &kl, &vl, &kr, &vr).unwrap();
+        let b = m.create_sequence();
+        m.ingest_prompt_shared(b, &toks, plen, &kl, &vl, &kr, &vr).unwrap();
+        let before: Vec<String> = (0..spec.n_layer)
+            .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+            .map(|(l, s)| format!("{:?}", m.stored_rows(a, l, s).unwrap()))
+            .collect();
+        let shared_bytes = m.prefix_stats().shared_bytes;
+
+        let parked = m.extract_sequence_bytes(a).unwrap();
+        assert_eq!(parked.prefix_rows, m.cfg.block_size * 2);
+        assert_eq!(parked.len, plen);
+        // only suffix bytes travel: strictly less than an unshared park
+        let own_rows = plen - parked.prefix_rows;
+        let expected: usize = (0..spec.n_layer)
+            .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+            .map(|(l, s)| {
+                let kind = m.cfg.store_kind(l, s);
+                let epr = kind.elements(&spec);
+                if epr == 0 { 0 } else { own_rows * m.cfg.format_for(&kind).row_bytes(epr) }
+            })
+            .sum();
+        assert_eq!(parked.payload.len(), expected, "only the suffix spills");
+        // the shared chain stayed resident for sharer b
+        assert_eq!(m.prefix_stats().shared_bytes, shared_bytes);
+        assert!(m.stored_rows(b, 0, Side::K).is_ok(), "sharer b unaffected");
+        m.prefix_integrity(&[]).unwrap();
+
+        m.restore_sequence_bytes(a, &parked).unwrap();
+        for (i, (l, s)) in (0..spec.n_layer)
+            .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+            .enumerate()
+        {
+            assert_eq!(
+                format!("{:?}", m.stored_rows(a, l, s).unwrap()),
+                before[i],
+                "stream ({l}, {s:?}) diverges after a shared tier round-trip"
+            );
+        }
+        // retiring a *parked* sharer releases its chain reference too
+        let parked_b = m.extract_sequence_bytes(b).unwrap();
+        assert_eq!(parked_b.prefix_rows, m.cfg.block_size * 2);
+        m.free_sequence(b);
+        m.free_sequence(a);
+        m.prefix_integrity(&[]).unwrap();
+        assert_eq!(m.prefix_stats().nodes_live, 0);
+        assert_eq!(m.pool_stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn prefix_pins_survive_sequence_churn() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut rng = Rng::new(33);
+        let plen = m.cfg.block_size; // exactly one shared chunk, no tail
+        let toks: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        let [kl, vl, kr, vr] = lane_bufs(&mut rng, &spec, plen);
+        let id = m.create_sequence();
+        let si = m.ingest_prompt_shared(id, &toks, plen, &kl, &vl, &kr, &vr).unwrap();
+        let leaf = si.leaf.expect("one full chunk");
+        m.prefix_ref(leaf).unwrap(); // template-style pin
+        m.free_sequence(id);
+        m.prefix_integrity(&[leaf]).unwrap();
+        assert_eq!(m.prefix_stats().nodes_live, 1, "pin keeps the chain warm");
+        // a later admission re-attaches with zero new prefix bytes
+        let id2 = m.create_sequence();
+        let si2 = m.ingest_prompt_shared(id2, &toks, plen, &kl, &vl, &kr, &vr).unwrap();
+        assert_eq!(si2.reused_rows, plen);
+        m.free_sequence(id2);
+        m.prefix_unref(leaf);
+        m.prefix_integrity(&[]).unwrap();
+        assert_eq!(m.prefix_stats().nodes_live, 0);
+        assert_eq!(m.pool_stats().live_bytes, 0);
     }
 
     #[test]

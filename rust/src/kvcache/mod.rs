@@ -1,14 +1,20 @@
 //! Paged, compressed KV cache (the KV-CAR storage engine): pooled block
 //! storage with per-stream codecs (`block`, `allocator`), the
-//! per-sequence manager and zero-copy retrieval views (`manager`), and
-//! the host-offload tier that moves encoded bytes off-device (`tier`).
+//! per-sequence manager and zero-copy retrieval views (`manager`), the
+//! cross-request shared-prefix trie whose refcounted chunk blocks turn
+//! prefix cache bytes from O(requests) into O(distinct prompts)
+//! (`prefix`), and the host-offload tier that moves encoded bytes
+//! off-device (`tier`).
 
 pub mod allocator;
 pub mod block;
 pub mod manager;
+pub mod prefix;
 pub mod tier;
 
 pub use block::{Format, RowsView};
 pub use manager::{
-    CacheConfig, CacheManager, ParkedBytes, Side, StoreKind, StoredRows, StreamRows, StreamView,
+    CacheConfig, CacheManager, ParkedBytes, SharedIngest, Side, StoreKind, StoredRows, StreamRows,
+    StreamView,
 };
+pub use prefix::{PrefixIndex, PrefixStats};

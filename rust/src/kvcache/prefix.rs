@@ -1,0 +1,433 @@
+//! Cross-request shared-prefix index: a refcounted trie of immutable,
+//! encoded KV block chunks (the storage half of KV-CAR's reuse pillar
+//! applied *across* requests — DESIGN.md §6).
+//!
+//! Production traffic shares system prompts and few-shot templates, so
+//! the prefill KV rows of those shared prefixes are byte-identical
+//! across requests (a causal transformer's row `t` depends only on
+//! tokens `[0, t]` — the same per-position purity the `{m}_prefill_b`
+//! lane contract rests on).  Storing them once turns prefix cache bytes
+//! from O(requests) into O(distinct prompts).
+//!
+//! Structure: a trie keyed by `block_size`-token chunks of the clamped
+//! prompt.  Each node owns one **full, immutable** [`Block`] per stored
+//! (layer, K|V) stream — encoded exactly as a private append would have
+//! encoded the same rows, which is what makes a shared read bitwise
+//! equal to an unshared one.  A sequence references the chain root→leaf
+//! covering its block-aligned prefix; its own blocks hold only the
+//! suffix.  Two reference kinds keep a chain alive:
+//!
+//! * **`seq_refs`** — live (or parked) sequences whose prefix path
+//!   includes the node; bumped by `CacheManager::attach_prefix`,
+//!   dropped by `free_sequence`.  A parked sequence keeps its refs —
+//!   its suffix bytes move to the host tier, the shared prefix stays
+//!   device-resident for the other sharers.
+//! * **`pins`** — admission-template holds (`CacheManager::prefix_ref`
+//!   / `prefix_unref`): the coordinator's prompt-template cache pins
+//!   the chains it can re-admit from with zero launches.
+//!
+//! A node is freed (blocks recycled to the pool) exactly when both
+//! counts reach zero and no child survives — checked leaf-upward on
+//! every release, so interior nodes outlive their referenced
+//! descendants and a double-release is structurally impossible
+//! (`integrity` re-derives every count for the property tests).
+
+use super::allocator::BlockPool;
+use super::block::Block;
+use super::manager::Side;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Accounting for one [`PrefixIndex`]: trie size, hit/miss counters,
+/// and the bytes the shared store holds exactly once.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// trie nodes currently alive (each holds one block per stored stream)
+    pub nodes_live: usize,
+    /// chunk lookups that found an existing node (bytes not re-stored)
+    pub chunk_hits: u64,
+    /// chunk lookups that created a new node (bytes stored once)
+    pub chunk_misses: u64,
+    /// token rows attached from already-stored chunks, summed across
+    /// admissions — the byte-dedup counterpart of launch savings
+    pub reused_rows: u64,
+    /// encoded block bytes held by live nodes (each counted once, no
+    /// matter how many sequences share it)
+    pub shared_bytes: usize,
+}
+
+struct Node {
+    parent: Option<u32>,
+    /// this node's chunk key inside its parent's (or the root) map
+    key: Vec<u8>,
+    children: HashMap<Vec<u8>, u32>,
+    /// chunks on the path root..=self (rows = depth * block_size)
+    depth: usize,
+    /// sequences whose prefix path includes this node
+    seq_refs: usize,
+    /// external pins (admission-template cache) keeping the chain warm
+    pins: usize,
+    /// one full encoded block per (layer, K|V); `None` for
+    /// fully-aliased streams, which store nothing anywhere
+    blocks: Vec<[Option<Block>; 2]>,
+    /// encoded bytes across this node's blocks
+    bytes: usize,
+}
+
+/// The trie of refcounted shared-prefix chunks.  Owned by
+/// `CacheManager`, which builds the blocks (it knows the store kinds
+/// and formats) and allocates them from the same budgeted pool as
+/// private sequence blocks.
+#[derive(Default)]
+pub struct PrefixIndex {
+    nodes: Vec<Option<Node>>,
+    free: Vec<u32>,
+    roots: HashMap<Vec<u8>, u32>,
+    /// hit/miss/byte accounting (see [`PrefixStats`])
+    pub stats: PrefixStats,
+}
+
+impl PrefixIndex {
+    /// Empty index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn node(&self, id: u32) -> Result<&Node> {
+        self.nodes
+            .get(id as usize)
+            .and_then(Option::as_ref)
+            .ok_or_else(|| anyhow!("unknown prefix node {id}"))
+    }
+
+    /// Child of `parent` (the root set when `None`) under `key`.
+    pub fn child(&self, parent: Option<u32>, key: &[u8]) -> Option<u32> {
+        match parent {
+            None => self.roots.get(key).copied(),
+            Some(p) => self
+                .nodes
+                .get(p as usize)
+                .and_then(Option::as_ref)
+                .and_then(|n| n.children.get(key).copied()),
+        }
+    }
+
+    /// Chunks on the path root..=`node` (rows = `depth * block_size`).
+    pub fn depth(&self, node: u32) -> Result<usize> {
+        Ok(self.node(node)?.depth)
+    }
+
+    /// Encoded bytes the node's blocks hold.
+    pub fn node_bytes(&self, node: u32) -> usize {
+        self.node(node).map(|n| n.bytes).unwrap_or(0)
+    }
+
+    /// The stored block of one (layer, side) stream of a node (`None`
+    /// for fully-aliased streams).
+    pub fn block(&self, node: u32, layer: usize, side: Side) -> Option<&Block> {
+        self.node(node)
+            .ok()
+            .and_then(|n| n.blocks.get(layer))
+            .and_then(|pair| pair[side as usize].as_ref())
+    }
+
+    /// Insert a freshly-built chunk node under `parent` with zero
+    /// references; the caller attaches or rolls back.  `blocks` is one
+    /// `[K, V]` pair per layer, every stored stream a **full** block.
+    pub fn add_child(
+        &mut self,
+        parent: Option<u32>,
+        key: Vec<u8>,
+        blocks: Vec<[Option<Block>; 2]>,
+        bytes: usize,
+    ) -> u32 {
+        debug_assert!(self.child(parent, &key).is_none(), "duplicate prefix chunk");
+        let depth = parent
+            .and_then(|p| self.depth(p).ok())
+            .map_or(1, |d| d + 1);
+        let node = Node {
+            parent,
+            key: key.clone(),
+            children: HashMap::new(),
+            depth,
+            seq_refs: 0,
+            pins: 0,
+            blocks,
+            bytes,
+        };
+        let id = match self.free.pop() {
+            Some(id) => {
+                self.nodes[id as usize] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        match parent {
+            None => self.roots.insert(key, id),
+            Some(p) => self.nodes[p as usize]
+                .as_mut()
+                .expect("live parent")
+                .children
+                .insert(key, id),
+        };
+        self.stats.nodes_live += 1;
+        self.stats.shared_bytes += bytes;
+        id
+    }
+
+    /// The chain root→`leaf`.
+    pub fn path(&self, leaf: u32) -> Result<Vec<u32>> {
+        let mut path = Vec::new();
+        let mut cur = Some(leaf);
+        while let Some(id) = cur {
+            path.push(id);
+            cur = self.node(id)?.parent;
+        }
+        path.reverse();
+        Ok(path)
+    }
+
+    fn bump_path(&mut self, leaf: u32, pin: bool) -> Result<Vec<u32>> {
+        let path = self.path(leaf)?;
+        for &id in &path {
+            let n = self.nodes[id as usize].as_mut().expect("live path node");
+            if pin {
+                n.pins += 1;
+            } else {
+                n.seq_refs += 1;
+            }
+        }
+        Ok(path)
+    }
+
+    /// Reference the chain root→`leaf` for a sequence; returns the path.
+    pub fn attach(&mut self, leaf: u32) -> Result<Vec<u32>> {
+        self.bump_path(leaf, false)
+    }
+
+    /// Pin the chain root→`leaf` (admission-template hold).
+    pub fn pin(&mut self, leaf: u32) -> Result<()> {
+        self.bump_path(leaf, true).map(|_| ())
+    }
+
+    fn drop_path(&mut self, leaf: u32, pin: bool, pool: &mut BlockPool) {
+        let Ok(path) = self.path(leaf) else { return };
+        for &id in &path {
+            let n = self.nodes[id as usize].as_mut().expect("live path node");
+            if pin {
+                assert!(n.pins > 0, "prefix unpin without a matching pin");
+                n.pins -= 1;
+            } else {
+                assert!(n.seq_refs > 0, "prefix detach without a matching attach");
+                n.seq_refs -= 1;
+            }
+        }
+        // sweep leaf-upward: free exactly the nodes nothing references
+        // any more (a freed child may make its parent freeable)
+        for &id in path.iter().rev() {
+            let n = self.nodes[id as usize].as_ref().expect("live path node");
+            if n.seq_refs + n.pins > 0 || !n.children.is_empty() {
+                break;
+            }
+            self.remove_node(id, pool);
+        }
+    }
+
+    /// Release a sequence's reference on the chain root→`leaf`,
+    /// recycling any chunk nothing references any more.
+    pub fn detach(&mut self, leaf: u32, pool: &mut BlockPool) {
+        self.drop_path(leaf, false, pool);
+    }
+
+    /// Release a pin taken with [`PrefixIndex::pin`].
+    pub fn unpin(&mut self, leaf: u32, pool: &mut BlockPool) {
+        self.drop_path(leaf, true, pool);
+    }
+
+    /// Free one unreferenced, childless node (rollback of a chunk
+    /// created by an admission that failed before attaching).
+    pub fn remove_unreferenced(&mut self, id: u32, pool: &mut BlockPool) {
+        let Ok(n) = self.node(id) else { return };
+        assert!(
+            n.seq_refs + n.pins == 0 && n.children.is_empty(),
+            "prefix node {id} still referenced"
+        );
+        self.remove_node(id, pool);
+    }
+
+    fn remove_node(&mut self, id: u32, pool: &mut BlockPool) {
+        let node = self.nodes[id as usize].take().expect("live node");
+        match node.parent {
+            None => {
+                self.roots.remove(&node.key);
+            }
+            Some(p) => {
+                if let Some(parent) = self.nodes[p as usize].as_mut() {
+                    parent.children.remove(&node.key);
+                }
+            }
+        }
+        for pair in node.blocks {
+            for b in pair.into_iter().flatten() {
+                pool.free(b);
+            }
+        }
+        self.stats.nodes_live -= 1;
+        self.stats.shared_bytes -= node.bytes;
+        self.free.push(id);
+    }
+
+    /// Re-derive every refcount from first principles and compare — the
+    /// invariant the admit/park/resume/retire property test checks after
+    /// every step.  `seq_paths` is each live sequence's prefix path,
+    /// `pinned` each externally pinned leaf.
+    pub fn integrity(&self, seq_paths: &[&[u32]], pinned: &[u32]) -> Result<(), String> {
+        let mut want_seq: HashMap<u32, usize> = HashMap::new();
+        let mut want_pin: HashMap<u32, usize> = HashMap::new();
+        for path in seq_paths {
+            for &id in *path {
+                *want_seq.entry(id).or_default() += 1;
+            }
+        }
+        for &leaf in pinned {
+            let path = self.path(leaf).map_err(|e| e.to_string())?;
+            for id in path {
+                *want_pin.entry(id).or_default() += 1;
+            }
+        }
+        let mut live = 0usize;
+        let mut bytes = 0usize;
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            let id = id as u32;
+            live += 1;
+            bytes += n.bytes;
+            let ws = want_seq.get(&id).copied().unwrap_or(0);
+            let wp = want_pin.get(&id).copied().unwrap_or(0);
+            if n.seq_refs != ws {
+                return Err(format!("node {id}: seq_refs {} != derived {ws}", n.seq_refs));
+            }
+            if n.pins != wp {
+                return Err(format!("node {id}: pins {} != derived {wp}", n.pins));
+            }
+            if n.seq_refs + n.pins == 0 && n.children.is_empty() {
+                return Err(format!("node {id}: unreferenced childless node leaked"));
+            }
+            // parent/child links are mutual
+            match n.parent {
+                None => {
+                    if self.roots.get(&n.key) != Some(&id) {
+                        return Err(format!("node {id}: root link broken"));
+                    }
+                }
+                Some(p) => {
+                    let parent = self
+                        .nodes
+                        .get(p as usize)
+                        .and_then(Option::as_ref)
+                        .ok_or_else(|| format!("node {id}: parent {p} is dead"))?;
+                    if parent.children.get(&n.key) != Some(&id) {
+                        return Err(format!("node {id}: parent {p} child link broken"));
+                    }
+                    if parent.depth + 1 != n.depth {
+                        return Err(format!("node {id}: depth chain broken"));
+                    }
+                }
+            }
+        }
+        if live != self.stats.nodes_live {
+            return Err(format!(
+                "nodes_live {} != counted {live}",
+                self.stats.nodes_live
+            ));
+        }
+        if bytes != self.stats.shared_bytes {
+            return Err(format!(
+                "shared_bytes {} != counted {bytes}",
+                self.stats.shared_bytes
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::block::Format;
+
+    fn one_block_chunk(pool: &mut BlockPool, rows: usize) -> (Vec<[Option<Block>; 2]>, usize) {
+        let mut b = pool.alloc(Format::F32, 2, rows).unwrap();
+        let flat: Vec<f32> = (0..rows * 2).map(|i| i as f32).collect();
+        b.push_rows(&flat);
+        let bytes = b.stored_bytes();
+        (vec![[Some(b), None]], bytes)
+    }
+
+    #[test]
+    fn trie_child_walk_finds_chains() {
+        // the chunk walk ingest_prompt_shared performs: child() hits
+        // along the stored chain, misses off it; path/depth consistent
+        let mut pool = BlockPool::new();
+        let mut ix = PrefixIndex::new();
+        let (b1, n1) = one_block_chunk(&mut pool, 4);
+        let a = ix.add_child(None, vec![1, 2, 3, 4], b1, n1);
+        let (b2, n2) = one_block_chunk(&mut pool, 4);
+        let b = ix.add_child(Some(a), vec![5, 6, 7, 8], b2, n2);
+        assert_eq!(ix.child(None, &[1, 2, 3, 4]), Some(a));
+        assert_eq!(ix.child(Some(a), &[5, 6, 7, 8]), Some(b));
+        assert_eq!(ix.child(Some(a), &[9, 9, 9, 9]), None);
+        assert_eq!(ix.child(None, &[9, 9, 9, 9]), None);
+        assert_eq!(ix.path(b).unwrap(), vec![a, b]);
+        assert_eq!(ix.depth(b).unwrap(), 2);
+        assert_eq!(ix.depth(a).unwrap(), 1);
+    }
+
+    #[test]
+    fn refcounts_free_leaf_up_and_keep_shared_interior() {
+        let mut pool = BlockPool::new();
+        let mut ix = PrefixIndex::new();
+        let (b1, n1) = one_block_chunk(&mut pool, 4);
+        let a = ix.add_child(None, vec![0; 4], b1, n1);
+        let (b2, n2) = one_block_chunk(&mut pool, 4);
+        let b = ix.add_child(Some(a), vec![1; 4], b2, n2);
+        let (b3, n3) = one_block_chunk(&mut pool, 4);
+        let c = ix.add_child(Some(a), vec![2; 4], b3, n3);
+        // two sequences share a; one goes deeper to b, one to c
+        ix.attach(b).unwrap();
+        ix.attach(c).unwrap();
+        let (path_b, path_c): (&[u32], &[u32]) = (&[a, b], &[a, c]);
+        ix.integrity(&[path_b, path_c], &[]).unwrap();
+        let live_before = pool.stats().live_bytes;
+        // releasing the b-chain frees b only (a still shared via c)
+        ix.detach(b, &mut pool);
+        assert_eq!(ix.stats.nodes_live, 2);
+        assert!(pool.stats().live_bytes < live_before);
+        ix.integrity(&[path_c], &[]).unwrap();
+        // releasing the last chain frees everything
+        ix.detach(c, &mut pool);
+        assert_eq!(ix.stats.nodes_live, 0);
+        assert_eq!(ix.stats.shared_bytes, 0);
+        assert_eq!(pool.stats().live_bytes, 0);
+        ix.integrity(&[], &[]).unwrap();
+    }
+
+    #[test]
+    fn pins_keep_chains_alive_without_sequences() {
+        let mut pool = BlockPool::new();
+        let mut ix = PrefixIndex::new();
+        let (b1, n1) = one_block_chunk(&mut pool, 4);
+        let a = ix.add_child(None, vec![0; 4], b1, n1);
+        ix.pin(a).unwrap();
+        ix.attach(a).unwrap();
+        ix.detach(a, &mut pool); // sequence gone, template pin remains
+        assert_eq!(ix.stats.nodes_live, 1);
+        ix.integrity(&[], &[a]).unwrap();
+        ix.unpin(a, &mut pool);
+        assert_eq!(ix.stats.nodes_live, 0);
+        assert_eq!(pool.stats().live_bytes, 0);
+    }
+}

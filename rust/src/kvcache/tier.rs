@@ -224,6 +224,7 @@ mod tests {
         let mut tier = HostTier::new();
         let bytes = ParkedBytes {
             len: 3,
+            prefix_rows: 0,
             payload: vec![7u8, 1, 2, 255, 0, 42],
         };
         let c1 = tier.park(5, bytes.clone());
@@ -252,6 +253,7 @@ mod tests {
             9,
             ParkedBytes {
                 len: 2,
+                prefix_rows: 0,
                 payload: vec![1, 2, 3, 4],
             },
         );
@@ -272,6 +274,7 @@ mod tests {
         let mut tier = HostTier::new();
         let b = ParkedBytes {
             len: 1,
+            prefix_rows: 0,
             payload: vec![0],
         };
         tier.park(1, b.clone());

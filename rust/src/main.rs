@@ -214,6 +214,10 @@ fn run(args: &Args) -> Result<()> {
                 // admitted request (launch-count A/B against the
                 // batched admission-wave default)
                 batched_prefill: !args.bool("per-request-prefill"),
+                // --no-prefix-sharing disables cross-request prompt
+                // dedup and prefix-chunk reuse (the O(requests)
+                // launch/byte baseline; outputs are identical)
+                prefix_sharing: !args.bool("no-prefix-sharing"),
                 raw_format: if args.bool("raw-f32") {
                     kvcar::kvcache::Format::F32
                 } else {

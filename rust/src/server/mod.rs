@@ -6,6 +6,18 @@
 //! over a per-request channel.  Requests arriving while a wave is in
 //! flight accumulate and are admitted by the scheduler's continuous
 //! batcher on the next wave.
+//!
+//! Concurrently queued requests dedup automatically: the gather window
+//! below batches whatever is in flight into one scheduler run, and
+//! under `ServeConfig::prefix_sharing` (default) the admission planner
+//! admits every request whose clamped prompt equals an earlier one —
+//! in the same wave or any previous wave whose template is still
+//! cached — with **zero** prefill launches, sharing the prompt's KV
+//! prefix bytes through the cache manager's refcounted trie (DESIGN.md
+//! §6).  Template-heavy client traffic (shared system prompts,
+//! few-shot headers) therefore pays prefill launches and prefix cache
+//! bytes per *distinct* prompt, not per request; each client still
+//! gets its own sequence, decode stream, and response.
 
 use crate::coordinator::{GenRequest, GenResponse, ServeConfig, ServingEngine};
 use crate::runtime::Engine;

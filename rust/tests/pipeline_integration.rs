@@ -262,6 +262,11 @@ fn batched_faithful_decode_issues_one_decoder_call_per_round() {
             seed: 5,
             per_step_reconstruct: faithful,
             raw_format: kvcar::kvcache::Format::F32,
+            // identical prompts + sharing would dedup admission to one
+            // launch and break the exact execution-count law below;
+            // this test pins the pre-sharing baseline (sharing has its
+            // own laws in tests/prefix_sharing.rs)
+            prefix_sharing: false,
             ..ServeConfig::new(plan.clone())
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
@@ -383,6 +388,58 @@ fn wave_admission_single_launch_and_identical_outputs() {
 }
 
 #[test]
+fn prefix_sharing_saves_launches_with_identical_outputs() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let spec = ModelSpec::from_manifest(&engine.manifest.raw, "gpt2t").unwrap();
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer / 2);
+    // a template-heavy burst: 6 requests over 2 distinct prompts
+    let prompts: [&[u8]; 2] = [
+        b"the wild foxes hide and wait by the mossy stones .",
+        b"the wild foxes hide and wait by the open river .",
+    ];
+    let mut outs = Vec::new();
+    let mut launches = Vec::new();
+    for sharing in [true, false] {
+        let cfg = ServeConfig {
+            max_batch: 6,
+            seed: 31,
+            prefix_sharing: sharing,
+            raw_format: kvcar::kvcache::Format::F32,
+            ..ServeConfig::new(plan.clone())
+        };
+        let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
+        let reqs: Vec<GenRequest> = (0..6u64)
+            .map(|i| GenRequest::greedy(i, prompts[i as usize % 2], 5))
+            .collect();
+        let out = serving.run(reqs).unwrap();
+        outs.push(out.iter().map(|r| r.output.clone()).collect::<Vec<_>>());
+        launches.push(serving.metrics.prefill_launches);
+        if sharing {
+            // 4 of the 6 requests replay an identical clamped prompt
+            assert_eq!(serving.metrics.shared_admissions, 4);
+            // the two distinct prompts share their leading chunks once
+            assert!(serving.cache.prefix_stats().chunk_hits > 0);
+            assert!(serving.cache.prefix_stats().shared_bytes > 0);
+        }
+        // every sequence retired cleanly; only pinned template chains
+        // may keep shared bytes warm
+        assert_eq!(serving.tier.parked_count(), 0);
+    }
+    assert!(
+        launches[0] < launches[1],
+        "sharing must save prefill launches: {} vs {}",
+        launches[0],
+        launches[1]
+    );
+    // prefill is a pure function of the clamped prompt: outputs are
+    // bitwise independent of the sharing axis
+    assert_eq!(outs[0], outs[1], "prefix sharing changed generated tokens");
+}
+
+#[test]
 fn tight_budget_parks_resumes_and_completes() {
     if !have_artifacts() {
         return;
@@ -404,12 +461,16 @@ fn tight_budget_parks_resumes_and_completes() {
     let reqs = |n: usize| -> Vec<GenRequest> {
         (0..n as u64).map(|i| GenRequest::greedy(i, prompt, 8)).collect()
     };
-    // f32 raw rows: the budget below is sized from the f32 modeled rate
+    // f32 raw rows: the budget below is sized from the f32 modeled rate.
+    // Sharing off: the identical prompts would otherwise dedup their
+    // prefix bytes, shrinking the working set below the pressure point
+    // this test is tuned to hit
     let cfg = ServeConfig {
         max_batch: 3,
         seed: 7,
         cache_budget: Some(budget),
         raw_format: kvcar::kvcache::Format::F32,
+        prefix_sharing: false,
         ..ServeConfig::new(plan.clone())
     };
     let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();

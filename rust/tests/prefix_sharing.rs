@@ -1,0 +1,349 @@
+//! Cross-request shared-prefix reuse, verified without artifacts (pure
+//! rust mock prefiller/decoder — DESIGN.md §6):
+//!
+//! * **bitwise equivalence** — a prefix-shared admission (template
+//!   replays, refcounted chunk chains, copy-on-write effective seeds)
+//!   produces byte-identical state to the unshared baseline: stored
+//!   streams, decode watermarks, staged effective rows, and
+//!   first-token logits, across random compression plans;
+//! * **the distinct-prompts law** — a burst of N requests over D
+//!   distinct prompts costs prefill launches and prefix cache bytes
+//!   proportional to D, not N;
+//! * **refcount safety** — randomly interleaved admit / park / resume /
+//!   retire over randomly shared prompts never leaks or double-frees a
+//!   prefix chunk (the trie's refcounts are re-derived from first
+//!   principles after every step);
+//! * **tier composition** — a parked-and-resumed sharer rebuilds an
+//!   effective cache bitwise identical to a never-parked sharer's.
+
+use kvcar::coordinator::effective::RowWiseMockDecoder;
+use kvcar::coordinator::prefill::{LaneWiseMockPrefiller, PrefillWave};
+use kvcar::coordinator::EffectiveCache;
+use kvcar::kvcache::{CacheConfig, CacheManager, ParkedBytes, Side};
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::{Arch, ModelSpec};
+use kvcar::prop_assert;
+use kvcar::util::prop::check;
+use kvcar::util::rng::Rng;
+use std::collections::HashMap;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec {
+        name: "prefix".into(),
+        arch: Arch::Gpt2,
+        vocab: 96,
+        n_layer: 3,
+        d_model: 24,
+        n_head: 3,
+        n_kv_head: 3,
+        d_head: 8,
+        ffn_dim: 48,
+        max_seq: 48,
+        ae_hidden: 16,
+        ae_latent: 12,
+        bytes_per_el: 4,
+    }
+}
+
+/// Manager with a small block size so multi-chunk chains are exercised.
+fn manager(spec: &ModelSpec, plan: CompressionPlan) -> CacheManager {
+    let mut cfg = CacheConfig::new(spec.clone(), plan);
+    cfg.block_size = 8;
+    CacheManager::new(cfg)
+}
+
+/// A pool of prompts over two shared prefixes plus unshared stragglers.
+fn prompt_pool(rng: &mut Rng, spec: &ModelSpec) -> Vec<Vec<u8>> {
+    let mut pool = Vec::new();
+    for _ in 0..2 {
+        let plen = rng.range(8, 20); // 1..2 shared chunks at block 8
+        let prefix: Vec<u8> = (0..plen).map(|_| rng.below(256) as u8).collect();
+        for _ in 0..2 {
+            let mut p = prefix.clone();
+            let tail = rng.range(1, spec.max_seq - 1 - p.len());
+            p.extend((0..tail).map(|_| rng.below(256) as u8));
+            pool.push(p);
+        }
+    }
+    pool.push((0..rng.range(1, 12)).map(|_| rng.below(256) as u8).collect());
+    pool
+}
+
+fn staged_rows(eff: &EffectiveCache, spec: &ModelSpec, side: Side) -> Vec<u32> {
+    let n = spec.n_layer * spec.max_seq * spec.kv_dim();
+    let mut buf = vec![0.0f32; n];
+    eff.sync_rows_into(side, &mut buf, 0, spec.max_seq);
+    buf.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn shared_admissions_bitwise_match_unshared_baseline() {
+    // the acceptance-criterion equivalence: sharing changes launch and
+    // byte counts, never bytes of state — across random plans, random
+    // prompt families (shared prefixes + exact duplicates), random wave
+    // splits, and both serving modes
+    check(20, |rng| {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head);
+        let pool = prompt_pool(rng, &spec);
+        // request stream: sample from the pool with replacement so
+        // exact duplicates occur alongside prefix-only overlaps
+        let n = rng.range(4, 10);
+        let reqs: Vec<&[u8]> = (0..n).map(|_| pool[rng.below(pool.len())].as_slice()).collect();
+        let seed = rng.bool(0.5); // in-graph seeding and faithful both hold
+
+        let mut m_sh = manager(&spec, plan.clone());
+        let mut m_un = manager(&spec, plan);
+        let mut effs_sh: HashMap<u64, EffectiveCache> = HashMap::new();
+        let mut effs_un: HashMap<u64, EffectiveCache> = HashMap::new();
+        let mut mock_sh = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut mock_un = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut pw_sh = PrefillWave::new();
+        let mut pw_un = PrefillWave::new();
+
+        // same random wave split for both worlds
+        let mut adm_sh = Vec::new();
+        let mut adm_un = Vec::new();
+        let mut at = 0;
+        while at < reqs.len() {
+            let to = rng.range(at, reqs.len()) + 1;
+            let wave = &reqs[at..to];
+            adm_sh.extend(
+                pw_sh
+                    .admit_wave(&mut m_sh, &mut effs_sh, &spec, seed, true, wave, &mut mock_sh)
+                    .map_err(|e| e.to_string())?,
+            );
+            adm_un.extend(
+                pw_un
+                    .admit_wave(&mut m_un, &mut effs_un, &spec, seed, false, wave, &mut mock_un)
+                    .map_err(|e| e.to_string())?,
+            );
+            at = to;
+        }
+        prop_assert!(adm_sh.len() == n && adm_un.len() == n);
+        prop_assert!(
+            pw_sh.stats.launches <= pw_un.stats.launches,
+            "sharing must never launch more"
+        );
+
+        for (k, (a, b)) in adm_sh.iter().zip(&adm_un).enumerate() {
+            // first-token logits replay bitwise
+            prop_assert!(
+                a.logits.iter().zip(&b.logits).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "request {k}: logits diverge under sharing"
+            );
+            let plen = reqs[k].len().clamp(1, spec.max_seq - 1);
+            prop_assert!(
+                m_sh.seq_len(a.cache_id) == Some(plen)
+                    && m_un.seq_len(b.cache_id) == Some(plen),
+                "request {k}: ingested rows diverge"
+            );
+            prop_assert!(
+                m_sh.decoded_upto(a.cache_id) == m_un.decoded_upto(b.cache_id),
+                "request {k}: watermarks diverge"
+            );
+            // stored streams, chain-spanning reads included
+            for layer in 0..spec.n_layer {
+                for side in [Side::K, Side::V] {
+                    let x = format!("{:?}", m_sh.stored_rows(a.cache_id, layer, side));
+                    let y = format!("{:?}", m_un.stored_rows(b.cache_id, layer, side));
+                    prop_assert!(x == y, "request {k}: stream ({layer}, {side:?}) diverges");
+                }
+            }
+            // effective rows as the decode step would stage them
+            // (copy-on-write templates source through sync_rows_into)
+            for side in [Side::K, Side::V] {
+                prop_assert!(
+                    staged_rows(&effs_sh[&a.cache_id], &spec, side)
+                        == staged_rows(&effs_un[&b.cache_id], &spec, side),
+                    "request {k}: staged effective rows diverge ({side:?})"
+                );
+            }
+        }
+
+        // byte law: the shared world stores every distinct chunk once
+        // (pool bytes include the refcounted chunk blocks), so it can
+        // never hold more than the duplicate-everything baseline
+        prop_assert!(
+            m_sh.pool_stats().live_bytes <= m_un.pool_stats().live_bytes,
+            "sharing must never store more bytes"
+        );
+        // cleanup is leak-free
+        for a in &adm_sh {
+            m_sh.free_sequence(a.cache_id);
+        }
+        pw_sh.clear_templates(&mut m_sh);
+        m_sh.prefix_integrity(&[]).map_err(|e| e.to_string())?;
+        prop_assert!(m_sh.pool_stats().live_bytes == 0, "bytes leaked");
+        Ok(())
+    });
+}
+
+#[test]
+fn burst_launches_and_prefix_bytes_scale_with_distinct_prompts() {
+    // the headline law: 12 requests over 3 distinct prompts sharing a
+    // 2-chunk prefix cost one launch (3 lanes <= capacity) and store
+    // the shared prefix exactly once
+    let spec = tiny_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, spec.n_layer);
+    let mut rng = Rng::new(41);
+    let prefix: Vec<u8> = (0..16).map(|_| rng.below(256) as u8).collect();
+    let distinct: Vec<Vec<u8>> = (0..3u8)
+        .map(|d| {
+            let mut p = prefix.clone();
+            p.extend_from_slice(&[d + 1, d * 3 + 7, 200 - d]);
+            p
+        })
+        .collect();
+    let reqs: Vec<&[u8]> = (0..12).map(|i| distinct[i % 3].as_slice()).collect();
+
+    let mut shared = manager(&spec, plan.clone());
+    let mut unshared = manager(&spec, plan);
+    let (mut effs_a, mut effs_b) = (HashMap::new(), HashMap::new());
+    let mut mock_a = LaneWiseMockPrefiller::for_spec(&spec);
+    let mut mock_b = LaneWiseMockPrefiller::for_spec(&spec);
+    let mut pw_a = PrefillWave::new();
+    let mut pw_b = PrefillWave::new();
+    let adm = pw_a
+        .admit_wave(&mut shared, &mut effs_a, &spec, true, true, &reqs, &mut mock_a)
+        .unwrap();
+    pw_b.admit_wave(&mut unshared, &mut effs_b, &spec, true, false, &reqs, &mut mock_b)
+        .unwrap();
+
+    // launches ∝ distinct prompts: 3 lanes -> one batched launch; the
+    // unshared baseline pays 12 lanes -> 8 + 4 -> two launches of 12
+    assert_eq!(pw_a.stats.launches, 1);
+    assert_eq!(pw_a.stats.shared_admissions, 9);
+    assert_eq!(mock_a.wave_calls, 1);
+    assert_eq!(pw_b.stats.launches, 2);
+    assert_eq!(pw_b.stats.batched_lanes, 12);
+
+    // prefix bytes ∝ distinct prompts: the 2-chunk prefix is stored
+    // once; each distinct prompt's tail is stored once and shared by
+    // its 4 copies... (copies attach, they do not re-store)
+    let stats = shared.prefix_stats();
+    assert!(stats.shared_bytes > 0);
+    // 19-token prompts at block 8: the 16-token shared prefix is the
+    // two full chunks, stored once by the first launched lane; the
+    // other two distinct prompts hit both (their 3-token tails differ
+    // past the aligned boundary and stay private)
+    assert_eq!(stats.chunk_misses, 2, "the shared prefix stores once");
+    assert_eq!(stats.chunk_hits, 4, "the other distinct prompts reuse it");
+    let tail_bytes: usize = adm.iter().map(|a| shared.seq_stored_bytes(a.cache_id)).sum();
+    assert!(
+        stats.shared_bytes + tail_bytes < unshared.pool_stats().live_bytes / 2,
+        "shared world must hold far fewer bytes than O(N) storage"
+    );
+    // every copy of a prompt reads the same chain
+    assert_eq!(
+        shared.seq_shared_bytes(adm[0].cache_id),
+        shared.seq_shared_bytes(adm[3].cache_id)
+    );
+}
+
+#[test]
+fn interleaved_admit_park_resume_retire_never_leaks_or_double_frees() {
+    // the refcount property test: after every step the trie's counts
+    // must re-derive exactly from the live sequences + template pins,
+    // and the terminal state must hold zero bytes
+    check(15, |rng| {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::random(rng, spec.n_layer, spec.n_kv_head);
+        let pool = prompt_pool(rng, &spec);
+        let seed = rng.bool(0.5);
+        let mut m = manager(&spec, plan);
+        let mut effs: HashMap<u64, EffectiveCache> = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut pw = PrefillWave::with_template_capacity(3); // force evictions
+        let mut live: Vec<u64> = Vec::new();
+        let mut parked: Vec<(u64, ParkedBytes)> = Vec::new();
+
+        for _ in 0..30 {
+            match rng.below(4) {
+                0 => {
+                    let k = rng.range(1, 4);
+                    let wave: Vec<&[u8]> =
+                        (0..k).map(|_| pool[rng.below(pool.len())].as_slice()).collect();
+                    let adm = pw
+                        .admit_wave(&mut m, &mut effs, &spec, seed, true, &wave, &mut mock)
+                        .map_err(|e| e.to_string())?;
+                    live.extend(adm.iter().map(|a| a.cache_id));
+                }
+                1 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    let bytes = m.extract_sequence_bytes(id).map_err(|e| e.to_string())?;
+                    parked.push((id, bytes));
+                }
+                2 if !parked.is_empty() => {
+                    let (id, bytes) = parked.swap_remove(rng.below(parked.len()));
+                    m.restore_sequence_bytes(id, &bytes).map_err(|e| e.to_string())?;
+                    live.push(id);
+                }
+                _ => {
+                    // retire a live or parked sequence (retiring while
+                    // parked must release the prefix refs too)
+                    if !live.is_empty() && (parked.is_empty() || rng.bool(0.5)) {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        m.free_sequence(id);
+                        effs.remove(&id);
+                    } else if !parked.is_empty() {
+                        let (id, _) = parked.swap_remove(rng.below(parked.len()));
+                        m.free_sequence(id);
+                        effs.remove(&id);
+                    }
+                }
+            }
+            m.prefix_integrity(&pw.pinned_leaves()).map_err(|e| e.to_string())?;
+        }
+        // drain everything: no chunk and no block may survive
+        for id in live.drain(..) {
+            m.free_sequence(id);
+        }
+        for (id, _) in parked.drain(..) {
+            m.free_sequence(id);
+        }
+        pw.clear_templates(&mut m);
+        m.prefix_integrity(&[]).map_err(|e| e.to_string())?;
+        prop_assert!(m.prefix_stats().nodes_live == 0, "prefix chunks leaked");
+        prop_assert!(m.pool_stats().live_bytes == 0, "block bytes leaked");
+        Ok(())
+    });
+}
+
+#[test]
+fn parked_sharer_rebuilds_bitwise_identical_effective_cache() {
+    // tier composition: park + resume of one sharer, then a faithful
+    // rebuild, must equal the never-parked sharer's rebuild bitwise —
+    // the shared chain fed both
+    let spec = tiny_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, 2);
+    let mut m = manager(&spec, plan);
+    let mut effs = HashMap::new();
+    let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+    let mut pw = PrefillWave::new();
+    let mut rng = Rng::new(57);
+    let prompt: Vec<u8> = (0..21).map(|_| rng.below(256) as u8).collect();
+    let reqs: Vec<&[u8]> = vec![&prompt, &prompt];
+    let adm = pw
+        .admit_wave(&mut m, &mut effs, &spec, false, true, &reqs, &mut mock)
+        .unwrap();
+    let (a, b) = (adm[0].cache_id, adm[1].cache_id);
+    assert!(m.seq_prefix_rows(b) > 0, "sharers must share the chain");
+
+    let bytes = m.extract_sequence_bytes(a).unwrap();
+    assert_eq!(bytes.prefix_rows, m.seq_prefix_rows(a));
+    m.restore_sequence_bytes(a, &bytes).unwrap();
+
+    let mut dec = RowWiseMockDecoder::for_spec(&spec);
+    let mut eff_a = EffectiveCache::new(&spec);
+    let mut eff_b = EffectiveCache::new(&spec);
+    eff_a.rebuild_full(&mut m, a, &mut dec).unwrap();
+    eff_b.rebuild_full(&mut m, b, &mut dec).unwrap();
+    for side in [Side::K, Side::V] {
+        assert_eq!(
+            staged_rows(&eff_a, &spec, side),
+            staged_rows(&eff_b, &spec, side),
+            "resumed sharer diverges from never-parked sharer ({side:?})"
+        );
+    }
+}

@@ -93,10 +93,10 @@ fn wave_admission_bitwise_matches_sequential_across_plans() {
         let mut pw_seq = PrefillWave::new();
         let seed = rng.bool(0.5); // in-graph seeding and faithful both hold
         let adm_wav = pw_wav
-            .admit_wave(&mut m_wav, &mut effs_wav, &spec, seed, &lanes, &mut mock_wav)
+            .admit_wave(&mut m_wav, &mut effs_wav, &spec, seed, false, &lanes, &mut mock_wav)
             .map_err(|e| e.to_string())?;
         let adm_seq = pw_seq
-            .admit_wave(&mut m_seq, &mut effs_seq, &spec, seed, &lanes, &mut mock_seq)
+            .admit_wave(&mut m_seq, &mut effs_seq, &spec, seed, false, &lanes, &mut mock_seq)
             .map_err(|e| e.to_string())?;
         prop_assert!(mock_seq.wave_calls == 0, "capacity None must never batch");
         prop_assert!(
@@ -154,7 +154,7 @@ fn wave_of_b_requests_costs_one_launch() {
     let mut pw = PrefillWave::new();
     let prompts: Vec<&[u8]> = vec![b"aaaa", b"bb", b"cccccc", b"dd", b"e"];
     let admitted = pw
-        .admit_wave(&mut cache, &mut effs, &spec, true, &prompts, &mut mock)
+        .admit_wave(&mut cache, &mut effs, &spec, true, false, &prompts, &mut mock)
         .unwrap();
     assert_eq!(admitted.len(), 5);
     assert_eq!(mock.wave_calls, 1, "one wave, one launch");
@@ -165,14 +165,14 @@ fn wave_of_b_requests_costs_one_launch() {
     assert_eq!(pw.stats.fallback_prefills, 0);
     // a second wave of one request takes the cheaper per-request rung
     let lone: Vec<&[u8]> = vec![b"zz"];
-    pw.admit_wave(&mut cache, &mut effs, &spec, true, &lone, &mut mock)
+    pw.admit_wave(&mut cache, &mut effs, &spec, true, false, &lone, &mut mock)
         .unwrap();
     assert_eq!(mock.wave_calls, 1);
     assert_eq!(mock.single_calls, 1);
     assert_eq!(pw.stats.launches, 2);
     assert_eq!(pw.stats.fallback_prefills, 1);
     // an empty wave costs nothing
-    pw.admit_wave(&mut cache, &mut effs, &spec, true, &[], &mut mock)
+    pw.admit_wave(&mut cache, &mut effs, &spec, true, false, &[], &mut mock)
         .unwrap();
     assert_eq!(pw.stats.waves, 2);
     assert_eq!(pw.stats.launches, 2);
@@ -205,7 +205,7 @@ fn over_budget_head_of_line_forces_one_admission_through_wave_planner() {
     let prompt: &[u8] = b"head of line must run";
     let wave: Vec<&[u8]> = vec![prompt; admit];
     let admitted = pw
-        .admit_wave(&mut cache, &mut effs, &spec, true, &wave, &mut mock)
+        .admit_wave(&mut cache, &mut effs, &spec, true, false, &wave, &mut mock)
         .unwrap();
     assert_eq!(admitted.len(), 1, "forced head-of-line admission");
     assert_eq!(mock.single_calls, 1, "lone admission takes the per-request rung");
@@ -230,7 +230,7 @@ fn capacity_chunking_matches_unchunked_results_bitwise() {
         let mut effs = HashMap::new();
         let mut mock = LaneWiseMockPrefiller::for_spec(&spec).with_capacity(cap);
         let mut pw = PrefillWave::new();
-        pw.admit_wave(&mut cache, &mut effs, &spec, true, &lanes, &mut mock)
+        pw.admit_wave(&mut cache, &mut effs, &spec, true, false, &lanes, &mut mock)
             .unwrap();
         worlds.push((cache, effs, mock.wave_calls, mock.single_calls, pw.stats));
     }
