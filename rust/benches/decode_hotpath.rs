@@ -16,7 +16,12 @@
 //! section the launch counts and amortized prefill cost of wave-based
 //! admission vs the per-request ladder, and the `shared_prefix` section
 //! the distinct-prompts law of cross-request prefix sharing (launches
-//! saved, shared-once vs private cache bytes, chunk hit rate).
+//! saved, shared-once vs private cache bytes, chunk hit rate), and the
+//! `device_residency` section the host→device traffic of keeping the
+//! resident k/v regions on device between rounds (uploaded bytes/round
+//! and skip ratio with delta uploads on vs off, plus a simulated
+//! patch-capable device pinning the O(B·L·kvd) steady-round law the
+//! PJRT binding cannot realize in place yet).
 //!
 //! Skips (exit 0, file untouched) when artifacts are missing.
 
@@ -25,7 +30,9 @@ use kvcar::data::corpus;
 use kvcar::kvcache::Format;
 use kvcar::model::memory::CompressionPlan;
 use kvcar::model::ModelSpec;
-use kvcar::runtime::{artifacts_dir, Engine};
+use kvcar::runtime::{
+    artifacts_dir, BufferCache, DType, Engine, EngineStats, IoSpec, MirrorBackend, Store,
+};
 use kvcar::util::bench::fmt_ns;
 use kvcar::util::json::{self, Json};
 
@@ -342,6 +349,157 @@ fn run_shared_prefix(engine: &mut Engine, plan: &CompressionPlan) -> Json {
     ])
 }
 
+/// Device residency: the same decode workload with delta uploads on vs
+/// off, reporting the run's host→device traffic from the engine's byte
+/// meters, plus a store-level simulation against a patch-capable mirror
+/// device that pins the steady-round O(B·L·kvd) upload law (the real
+/// PJRT binding cannot patch buffers in place, so its on/off figures
+/// converge until the binding grows a sub-buffer or
+/// dynamic-update-slice upload).
+fn run_device_residency(engine: &mut Engine, plan: &CompressionPlan) -> Json {
+    let (batch, rounds) = (4usize, 16usize);
+    let mut results = Vec::new();
+    for residency in [true, false] {
+        let cfg = ServeConfig {
+            max_batch: batch,
+            seed: 23,
+            device_residency: residency,
+            prefix_sharing: false,
+            ..ServeConfig::new(plan.clone())
+        };
+        let mut serving = ServingEngine::new(engine, MODEL, cfg).unwrap();
+        let mut prompts = corpus::wiki(15);
+        serving
+            .run((0..4u64).map(|i| GenRequest::greedy(i, &prompts.tokens(8), 2)).collect())
+            .unwrap();
+        serving.metrics = Default::default();
+        let reqs: Vec<GenRequest> = (0..batch as u64)
+            .map(|i| GenRequest::greedy(i, &prompts.tokens(16), rounds))
+            .collect();
+        serving.run(reqs).unwrap();
+        let m = &serving.metrics;
+        let uploaded = m.resident_bytes_uploaded as f64 / m.decode_rounds.max(1) as f64;
+        let total = (m.resident_bytes_uploaded + m.resident_bytes_skipped) as f64;
+        let skip = if total > 0.0 {
+            m.resident_bytes_skipped as f64 / total
+        } else {
+            0.0
+        };
+        println!(
+            "bench decode_hotpath/device_residency({}): {:.1} KiB/round uploaded, {:.0}% skipped, {} full uploads, in {:.1} KiB out {:.1} KiB",
+            if residency { "on" } else { "off" },
+            uploaded / 1024.0,
+            skip * 100.0,
+            m.full_uploads,
+            m.input_bytes as f64 / 1024.0,
+            m.output_bytes as f64 / 1024.0,
+        );
+        results.push(json::obj(vec![
+            ("device_residency", Json::Bool(residency)),
+            ("uploaded_bytes_per_round", json::num(uploaded)),
+            ("skip_ratio", json::num(skip)),
+            ("full_uploads", json::num(m.full_uploads as f64)),
+            ("input_bytes", json::num(m.input_bytes as f64)),
+            ("output_bytes", json::num(m.output_bytes as f64)),
+            ("buffers_evicted", json::num(m.buffers_evicted as f64)),
+        ]));
+    }
+    json::obj(vec![
+        ("runs", Json::Arr(results)),
+        ("simulated_patch_capable", simulate_patch_capable(batch, rounds)),
+    ])
+}
+
+/// Store-level simulation of a patch-capable device: resident
+/// `[B, L, S, kvd]` regions, one new row per slot per round declared via
+/// the dirty-span log, synced through [`BufferCache`] into a patching
+/// [`MirrorBackend`].  Steady rounds must upload exactly 2·B·L·kvd·4
+/// bytes — the figure the `device_residency` config would realize with
+/// an in-place binding.
+fn simulate_patch_capable(b: usize, rounds: usize) -> Json {
+    let (l, s, kvd) = (4usize, 128usize, 64usize);
+    let rounds = rounds.min(s);
+    let seq = l * s * kvd;
+    let mut store = Store::new();
+    let mut cache = BufferCache::new();
+    cache.ensure_entry("decode", 2);
+    let mut dev = MirrorBackend::patching();
+    let mut stats = EngineStats::default();
+    let mut first_round = 0u64;
+    for round in 0..rounds {
+        for (i, name) in ["k_sim", "v_sim"].into_iter().enumerate() {
+            let (region, _) = store.resident_region(name, vec![b, l, s, kvd]);
+            let mut spans = Vec::new();
+            for slot in 0..b {
+                for layer in 0..l {
+                    let at = slot * seq + layer * s * kvd + round * kvd;
+                    region[at..at + kvd].fill((round + 1) as f32);
+                    spans.push((at, at + kvd));
+                }
+            }
+            store.note_region_writes(name, &spans);
+            let io = IoSpec {
+                name: name.to_string(),
+                shape: vec![b, l, s, kvd],
+                dtype: DType::F32,
+            };
+            let t = store.get(name).unwrap().clone();
+            cache
+                .sync_input(&mut dev, "decode", i, &io, &t, &store, true, 1, &mut stats)
+                .unwrap();
+        }
+        if round == 0 {
+            first_round = stats.resident_bytes_uploaded;
+        }
+    }
+    let steady = (stats.resident_bytes_uploaded - first_round) as f64 / (rounds - 1) as f64;
+    let full = (2 * b * seq * 4) as f64;
+    let total = (stats.resident_bytes_uploaded + stats.resident_bytes_skipped) as f64;
+    println!(
+        "bench decode_hotpath/device_residency(simulated): steady {:.1} KiB/round vs {:.1} KiB full upload ({:.0}x fewer uploaded bytes)",
+        steady / 1024.0,
+        full / 1024.0,
+        full / steady,
+    );
+    json::obj(vec![
+        ("steady_uploaded_bytes_per_round", json::num(steady)),
+        ("full_upload_bytes", json::num(full)),
+        ("full_over_steady_ratio", json::num(full / steady)),
+        ("skip_ratio", json::num(stats.resident_bytes_skipped as f64 / total)),
+        ("patches", json::num(dev.patches as f64)),
+    ])
+}
+
+/// Delta the device-residency section against the previous run's file —
+/// the residency-on uploaded bytes/round creeping toward the full-upload
+/// figure is the delta-path regression canary.
+fn report_device_residency_delta(prev: &Json, cur: &Json) {
+    let on_uploaded = |j: &Json| {
+        j.get("device_residency")
+            .or(Some(j))
+            .and_then(|s| s.get("runs"))
+            .and_then(Json::as_arr)
+            .and_then(|runs| {
+                runs.iter()
+                    .find(|r| matches!(r.get("device_residency"), Some(Json::Bool(true))))
+                    .and_then(|r| r.get("uploaded_bytes_per_round"))
+                    .and_then(Json::as_f64)
+            })
+    };
+    let (Some(old), Some(new)) = (on_uploaded(prev), on_uploaded(cur)) else {
+        println!(
+            "bench decode_hotpath/device_residency: no previous section; deltas start next run"
+        );
+        return;
+    };
+    println!(
+        "bench decode_hotpath/device_residency vs previous: uploaded {:.1} -> {:.1} KiB/round ({:+.1}%)",
+        old / 1024.0,
+        new / 1024.0,
+        if old > 0.0 { 100.0 * (new - old) / old } else { 0.0 },
+    );
+}
+
 #[allow(clippy::too_many_arguments)]
 fn write_json(
     cases: &[CaseResult],
@@ -349,6 +507,7 @@ fn write_json(
     f16_raw: Json,
     burst: Json,
     shared_prefix: Json,
+    device_residency: Json,
     prefill_mean_ms: f64,
     prefill_p99_ms: f64,
     rounds: usize,
@@ -359,6 +518,7 @@ fn write_json(
             Ok(prev) => {
                 report_deltas(&prev, cases);
                 report_shared_prefix_delta(&prev, &shared_prefix);
+                report_device_residency_delta(&prev, &device_residency);
             }
             Err(e) => println!(
                 "bench decode_hotpath: previous {path} unreadable ({e}); skipping deltas"
@@ -396,6 +556,7 @@ fn write_json(
         ("f16_raw", f16_raw),
         ("burst_admission", burst),
         ("shared_prefix", shared_prefix),
+        ("device_residency", device_residency),
         (
             "prefill_64tok",
             json::obj(vec![
@@ -523,6 +684,10 @@ fn main() {
     // shared-prefix burst: launches/bytes ∝ distinct prompts, not N
     let shared_prefix = run_shared_prefix(&mut engine, &ae);
 
+    // device residency: uploaded bytes/round with delta uploads on vs
+    // off + the simulated patch-capable steady-round law
+    let device_residency = run_device_residency(&mut engine, &ae);
+
     // prefill latency (sharing off: every run must really prefill)
     let cfg = ServeConfig {
         max_batch: 1,
@@ -549,6 +714,7 @@ fn main() {
         f16_raw,
         burst,
         shared_prefix,
+        device_residency,
         prefill_mean,
         prefill_p99,
         rounds,

@@ -393,6 +393,26 @@ impl EffectiveCache {
         self.n_layer * (to - from) * kvd * 4
     }
 
+    /// The element spans [`EffectiveCache::sync_rows_into`] writes for
+    /// rows `[from, to)`: one `(start, end)` per layer inside the
+    /// `[L, max_seq, kvd]` slot view, shifted by `base` elements (the
+    /// slot's offset within the whole `[b, L, max_seq, kvd]` region).
+    /// Sorted and disjoint — exactly what
+    /// `Store::note_region_writes` wants, so the engine's device
+    /// residency can re-upload only these rows (DESIGN.md §7).
+    pub fn row_spans(&self, base: usize, from: usize, to: usize) -> Vec<(usize, usize)> {
+        let (s, kvd) = (self.max_seq, self.kv_dim);
+        if from >= to {
+            return Vec::new();
+        }
+        (0..self.n_layer)
+            .map(|layer| {
+                let at = base + layer * s * kvd;
+                (at + from * kvd, at + to * kvd)
+            })
+            .collect()
+    }
+
     /// Materialize rows past the watermark from the compressed store:
     /// O(layers × new-token rows), independent of sequence length.
     /// Returns the number of rows reconstructed.

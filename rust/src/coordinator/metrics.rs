@@ -139,11 +139,10 @@ pub struct ServeMetrics {
     /// (O(B·L·kvd) per round), or the full per-round buffer copies under
     /// the legacy copy path (O(B·L·S·kvd) per round) — the ratio between
     /// the two is the win the resident refactor is measured by.  This
-    /// counts the **host staging memcpy** only: the engine's
-    /// version-keyed device cache still re-uploads the whole tensor when
-    /// its version bumps, so the host→device transfer is unchanged until
-    /// the artifact side grows device residency / delta uploads (the
-    /// ROADMAP's donated-buffers item)
+    /// counts the **host staging memcpy** only; the host→device side of
+    /// the same rows is tracked by `resident_bytes_uploaded` /
+    /// `resident_bytes_skipped` below (delta uploads under device
+    /// residency, full re-uploads on the reference path)
     pub staged_kv_bytes: u64,
     /// bytes written by slot transitions only: full slot fills after
     /// (re)assignment / capacity-rung switches plus one-time zeroing of
@@ -155,6 +154,26 @@ pub struct ServeMetrics {
     /// reallocated for a different compiled batch size, invalidating
     /// every slot
     pub capacity_switches: u64,
+    /// host→device bytes moved for artifact inputs over the run
+    /// (delta patches count only the rows they patch)
+    pub input_bytes: u64,
+    /// device→host bytes fetched for artifact outputs over the run
+    pub output_bytes: u64,
+    /// host→device bytes spent keeping resident k/v regions current
+    /// (delta patches + full re-uploads of region inputs)
+    pub resident_bytes_uploaded: u64,
+    /// resident-region bytes the device already held and did **not**
+    /// travel again — the savings of the dirty-span delta path; the
+    /// steady-state law is uploaded ≈ O(B·L·kvd) per round while
+    /// skipped ≈ O(B·L·S·kvd)
+    pub resident_bytes_skipped: u64,
+    /// resident-region syncs that fell back to a whole-tensor upload
+    /// (no span log, undeclared writes, or the device binding cannot
+    /// patch buffers in place)
+    pub full_uploads: u64,
+    /// stale device buffers dropped when their region was released or
+    /// reallocated (capacity-rung switches)
+    pub buffers_evicted: u64,
     /// wall-clock time of the whole run
     pub wall: Duration,
 }
@@ -248,6 +267,23 @@ impl ServeMetrics {
                 self.slot_rebuild_bytes as f64 / 1024.0,
                 self.slot_rebuilds,
                 self.capacity_switches,
+            );
+        }
+        if self.input_bytes + self.output_bytes > 0 {
+            println!(
+                "  device traffic: {:.1} KiB in / {:.1} KiB out  ({} stale buffers evicted)",
+                self.input_bytes as f64 / 1024.0,
+                self.output_bytes as f64 / 1024.0,
+                self.buffers_evicted,
+            );
+        }
+        if self.resident_bytes_uploaded + self.resident_bytes_skipped > 0 {
+            let total = (self.resident_bytes_uploaded + self.resident_bytes_skipped) as f64;
+            println!(
+                "  device residency: {:.1} KiB/round uploaded, {:.0}% skipped ({} full uploads)",
+                self.resident_bytes_uploaded as f64 / self.decode_rounds.max(1) as f64 / 1024.0,
+                self.resident_bytes_skipped as f64 / total * 100.0,
+                self.full_uploads,
             );
         }
     }

@@ -232,11 +232,21 @@ impl SlotArena {
             // re-opened, not re-created: ensure_rung already sized both
             let (region, _) = store.resident_region(name, vec![b, l, s, kvd]);
             let dst = &mut region[slot * seq_elems..(slot + 1) * seq_elems];
-            if self.dirty[slot] && !fresh[i] {
+            let zeroed = self.dirty[slot] && !fresh[i];
+            if zeroed {
                 dst.fill(0.0);
                 metrics.slot_rebuild_bytes += (seq_elems * 4) as u64;
             }
             metrics.slot_rebuild_bytes += eff.sync_rows_into(side, dst, 0, upto) as u64;
+            // declare the dirty spans so the engine can delta-upload:
+            // a zeroed slot is dirty end to end, a plain fill only in
+            // the rows actually written
+            let spans = if zeroed {
+                vec![(slot * seq_elems, (slot + 1) * seq_elems)]
+            } else {
+                eff.row_spans(slot * seq_elems, 0, upto)
+            };
+            store.note_region_writes(name, &spans);
         }
         self.dirty[slot] = false;
         self.synced.insert(id, upto);
@@ -324,8 +334,13 @@ impl SlotArena {
             let (region, _) = store.resident_region(name, vec![b, l, s, kvd]);
             let region_fresh = fresh[i];
             debug_assert_eq!(region.len(), b * seq_elems);
+            // dirty spans this side writes, declared to the store after
+            // the pass so the engine re-uploads only these (the region
+            // borrow must end before `note_region_writes`)
+            let mut spans: Vec<(usize, usize)> = Vec::new();
             for (slot, act) in actions.iter().enumerate() {
-                let dst = &mut region[slot * seq_elems..(slot + 1) * seq_elems];
+                let base = slot * seq_elems;
+                let dst = &mut region[base..base + seq_elems];
                 match *act {
                     SlotAction::Keep => {}
                     SlotAction::ZeroDead => {
@@ -333,6 +348,7 @@ impl SlotArena {
                         if !region_fresh {
                             dst.fill(0.0);
                             metrics.slot_rebuild_bytes += (seq_elems * 4) as u64;
+                            spans.push((base, base + seq_elems));
                         }
                     }
                     SlotAction::Rebuild { id, upto } => {
@@ -345,6 +361,8 @@ impl SlotArena {
                             .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
                         metrics.slot_rebuild_bytes +=
                             eff.sync_rows_into(side, dst, 0, upto) as u64;
+                        // zero + row fill: the whole slot changed
+                        spans.push((base, base + seq_elems));
                     }
                     SlotAction::Sync { id, from, upto } => {
                         let eff = effs
@@ -352,9 +370,11 @@ impl SlotArena {
                             .ok_or_else(|| anyhow!("no effective cache for sequence {id}"))?;
                         metrics.staged_kv_bytes +=
                             eff.sync_rows_into(side, dst, from, upto) as u64;
+                        spans.extend(eff.row_spans(base, from, upto));
                     }
                 }
             }
+            store.note_region_writes(name, &spans);
         }
 
         // commit bookkeeping once, after both regions were written

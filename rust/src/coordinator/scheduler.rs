@@ -102,6 +102,16 @@ pub struct ServeConfig {
     /// legacy copy staging, kept as the bitwise reference
     /// (`ServeMetrics::staged_kv_bytes` measures both).
     pub resident_cache: bool,
+    /// keep the resident k/v regions **device-resident** between decode
+    /// rounds (`runtime::residency`): the engine holds persistent device
+    /// buffers for them and each round re-uploads only the dirty row
+    /// spans the arena declared — O(B·L·kvd) host→device bytes — instead
+    /// of the whole O(B·L·S·kvd) tensor.  `false` forces a full upload
+    /// whenever a region's version bumps, kept as the bitwise reference
+    /// (`KVCAR_NO_DEVICE_RESIDENCY` forces it process-wide).  Moot when
+    /// `resident_cache` is off — copy staging re-inserts whole tensors,
+    /// which invalidates the span log every round anyway.
+    pub device_residency: bool,
     /// admit each round's wave of requests through one batched
     /// `{m}_prefill_b` launch (when the artifact set has the entry)
     /// instead of one `{m}_prefill` launch per request.  `false` forces
@@ -133,8 +143,9 @@ pub struct ServeConfig {
 
 impl ServeConfig {
     /// Serving defaults for a plan: batch 8, in-graph reconstruction,
-    /// no budget, store-resident staging, batched admission prefill,
-    /// cross-request prefix sharing, f16 raw rows.
+    /// no budget, store-resident staging with device-resident delta
+    /// uploads, batched admission prefill, cross-request prefix
+    /// sharing, f16 raw rows.
     ///
     /// # Examples
     ///
@@ -145,7 +156,8 @@ impl ServeConfig {
     ///
     /// let spec = gpt2_774m();
     /// let cfg = ServeConfig::new(CompressionPlan::ae_first_layers(&spec, 4));
-    /// assert!(cfg.resident_cache && cfg.batched_prefill && cfg.prefix_sharing);
+    /// assert!(cfg.resident_cache && cfg.device_residency);
+    /// assert!(cfg.batched_prefill && cfg.prefix_sharing);
     /// // the faithful constructor flips reconstruction on *and* pins
     /// // lossless f32 raw rows, so store reads stay bit-exact
     /// let faithful = ServeConfig::faithful(
@@ -162,6 +174,7 @@ impl ServeConfig {
             per_step_reconstruct: false,
             cache_budget: None,
             resident_cache: true,
+            device_residency: true,
             batched_prefill: true,
             prefix_sharing: true,
             raw_format: Format::F16,
@@ -269,6 +282,10 @@ impl<'e> ServingEngine<'e> {
         ccfg.raw_format = cfg.raw_format;
         let cache = CacheManager::new(ccfg);
         let seed = cfg.seed;
+        // re-derived per construction (not &&= — engines are reused
+        // across serving configs); the env kill-switch stays authoritative
+        engine.use_device_residency =
+            cfg.device_residency && std::env::var("KVCAR_NO_DEVICE_RESIDENCY").is_err();
         let mut s = ServingEngine {
             engine,
             store,
@@ -796,6 +813,7 @@ impl<'e> ServingEngine<'e> {
     /// automatically park/resume sequences through the host tier.
     pub fn run(&mut self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
         let t0 = Instant::now();
+        let dev0 = self.device_traffic();
         let mut waiting: VecDeque<GenRequest> = requests.into();
         let mut active: Vec<ActiveSeq> = Vec::new();
         let mut done: Vec<GenResponse> = Vec::new();
@@ -853,8 +871,35 @@ impl<'e> ServingEngine<'e> {
             }
         }
         self.metrics.wall += t0.elapsed();
+        let dev1 = self.device_traffic();
+        let m = &mut self.metrics;
+        for (total, at0, at1) in [
+            (&mut m.input_bytes, dev0.0, dev1.0),
+            (&mut m.output_bytes, dev0.1, dev1.1),
+            (&mut m.resident_bytes_uploaded, dev0.2, dev1.2),
+            (&mut m.resident_bytes_skipped, dev0.3, dev1.3),
+            (&mut m.full_uploads, dev0.4, dev1.4),
+            (&mut m.buffers_evicted, dev0.5, dev1.5),
+        ] {
+            *total += at1 - at0;
+        }
         done.sort_by_key(|r| r.id);
         Ok(done)
+    }
+
+    /// The engine's cumulative device-traffic counters, snapshotted at
+    /// the ends of [`ServingEngine::run`] so the run's delta lands in
+    /// [`ServeMetrics`] (the engine may be shared across runs).
+    fn device_traffic(&self) -> (u64, u64, u64, u64, u64, u64) {
+        let s = &self.engine.stats;
+        (
+            s.input_bytes,
+            s.output_bytes,
+            s.resident_bytes_uploaded,
+            s.resident_bytes_skipped,
+            s.full_uploads,
+            s.buffers_evicted,
+        )
     }
 }
 

@@ -210,6 +210,11 @@ fn run(args: &Args) -> Result<()> {
                 // --copy-staging selects the legacy per-round full-copy
                 // k/v staging (perf A/B against the resident default)
                 resident_cache: !args.bool("copy-staging"),
+                // --no-device-residency forces a full device upload of
+                // the resident k/v regions every round instead of
+                // dirty-span delta patches (host→device byte A/B;
+                // outputs are identical)
+                device_residency: !args.bool("no-device-residency"),
                 // --per-request-prefill forces one prefill launch per
                 // admitted request (launch-count A/B against the
                 // batched admission-wave default)

@@ -10,10 +10,11 @@
 //! manifest's output names.
 
 use super::manifest::{DType, EntrySpec, Manifest};
+use super::residency::{chunk_rows_from_env, BufferCache, DeviceBackend};
 use super::store::Store;
 use super::tensor::Tensor;
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::time::Instant;
 
@@ -26,10 +27,20 @@ pub struct Engine {
     /// per-entry device-resident input buffers keyed by store version:
     /// an input is re-uploaded only when its tensor changed since the
     /// previous call, so parameters (the bulk of every signature) stay
-    /// on device across thousands of steps.  EXPERIMENTS.md §Perf L3.
-    buffer_cache: HashMap<String, Vec<Option<(u64, xla::PjRtBuffer)>>>,
+    /// on device across thousands of steps; store-resident regions
+    /// additionally delta-upload only their dirty chunks (residency.rs,
+    /// DESIGN.md §7).  EXPERIMENTS.md §Perf L3.
+    buffer_cache: BufferCache<xla::PjRtBuffer>,
     /// disable to fall back to literal-per-call execution (perf A/B)
     pub use_buffer_cache: bool,
+    /// keep store-resident regions device-resident between rounds,
+    /// consuming the store's dirty-span log to upload only changed
+    /// chunks.  Disable (`KVCAR_NO_DEVICE_RESIDENCY`, or
+    /// `ServeConfig::device_residency = false`) to force the legacy
+    /// whole-buffer re-upload every round — the bitwise reference path.
+    pub use_device_residency: bool,
+    /// rows per delta-upload chunk (`KVCAR_RESIDENT_CHUNK_ROWS`)
+    pub chunk_rows: usize,
     /// compile/execute/traffic counters
     pub stats: EngineStats,
 }
@@ -46,7 +57,8 @@ pub struct EngineStats {
     pub compile_ns: u128,
     /// nanoseconds spent executing
     pub execute_ns: u128,
-    /// host<->device literal traffic in elements
+    /// host->device traffic in elements actually moved (delta uploads
+    /// count only the elements they patch)
     pub input_elements: u64,
     /// elements fetched back per call
     pub output_elements: u64,
@@ -55,6 +67,81 @@ pub struct EngineStats {
     pub input_uploads: u64,
     /// inputs served from the device-resident cache
     pub input_cache_hits: u64,
+    /// exact host->device bytes moved (f32/i32 aware; delta uploads
+    /// count only patched chunks)
+    pub input_bytes: u64,
+    /// exact device->host bytes fetched back
+    pub output_bytes: u64,
+    /// bytes moved for store-resident region inputs (delta or full)
+    pub resident_bytes_uploaded: u64,
+    /// resident-region bytes that did NOT move: cache hits plus the
+    /// clean remainder of delta rounds — the savings the device-resident
+    /// cache exists for
+    pub resident_bytes_skipped: u64,
+    /// resident-region inputs that fell back to a whole-buffer upload
+    /// (no prior buffer, span log couldn't vouch, or the binding can't
+    /// patch in place)
+    pub full_uploads: u64,
+    /// stale device buffers dropped because their region realloc'd or
+    /// was released (buffer-cache lifetime sweep)
+    pub buffers_evicted: u64,
+    /// per-entry traffic breakdown (keyed by entry-point name)
+    pub per_entry: BTreeMap<String, EntryTraffic>,
+}
+
+#[derive(Debug, Default, Clone)]
+/// Per-entry-point slice of the traffic counters.
+pub struct EntryTraffic {
+    /// calls of this entry
+    pub executions: u64,
+    /// host->device bytes moved for this entry's inputs
+    pub input_bytes: u64,
+    /// device->host bytes fetched from this entry's outputs
+    pub output_bytes: u64,
+    /// resident-region bytes moved (delta or full) for this entry
+    pub resident_bytes_uploaded: u64,
+    /// resident-region bytes this entry avoided moving
+    pub resident_bytes_skipped: u64,
+    /// whole-buffer fallback uploads of resident regions
+    pub full_uploads: u64,
+}
+
+impl EngineStats {
+    /// Per-entry traffic row (created on first touch).
+    pub fn entry_mut(&mut self, entry: &str) -> &mut EntryTraffic {
+        self.per_entry.entry(entry.to_string()).or_default()
+    }
+}
+
+/// [`DeviceBackend`] over the PJRT client: whole-tensor uploads via
+/// `buffer_from_host_buffer`.  The xla binding exposes no host->device
+/// sub-buffer write, so `patch_f32` reports unsupported and resident
+/// regions fall back to full uploads (counted in
+/// [`EngineStats::full_uploads`]); a device-side dynamic-update-slice
+/// patch kernel is the ROADMAP path to honoring deltas here.
+struct PjrtBackend<'a> {
+    client: &'a xla::PjRtClient,
+}
+
+impl DeviceBackend for PjrtBackend<'_> {
+    type Buf = xla::PjRtBuffer;
+
+    fn upload(&mut self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        match t {
+            Tensor::F32 { shape, data } => self.client.buffer_from_host_buffer(data, shape, None),
+            Tensor::I32 { shape, data } => self.client.buffer_from_host_buffer(data, shape, None),
+        }
+        .map_err(|e| anyhow!("uploading buffer: {e:?}"))
+    }
+
+    fn patch_f32(
+        &mut self,
+        _buf: &mut xla::PjRtBuffer,
+        _at: usize,
+        _data: &[f32],
+    ) -> Result<bool> {
+        Ok(false)
+    }
 }
 
 impl Engine {
@@ -66,8 +153,10 @@ impl Engine {
             manifest,
             client,
             executables: HashMap::new(),
-            buffer_cache: HashMap::new(),
+            buffer_cache: BufferCache::new(),
             use_buffer_cache: std::env::var("KVCAR_NO_BUFFER_CACHE").is_err(),
+            use_device_residency: std::env::var("KVCAR_NO_DEVICE_RESIDENCY").is_err(),
+            chunk_rows: chunk_rows_from_env(),
             stats: EngineStats::default(),
         })
     }
@@ -119,6 +208,8 @@ impl Engine {
                     .with_context(|| format!("assembling inputs for {entry}"))?;
                 check_io(io, t).with_context(|| format!("input {} of {entry}", io.name))?;
                 self.stats.input_elements += t.len() as u64;
+                self.stats.input_bytes += t.byte_len() as u64;
+                self.stats.entry_mut(entry).input_bytes += t.byte_len() as u64;
                 literals.push(t.to_literal()?);
             }
             let exe = self.executables.get(entry).unwrap();
@@ -133,6 +224,7 @@ impl Engine {
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching result of {entry}: {e:?}"))?;
         self.stats.executions += 1;
+        self.stats.entry_mut(entry).executions += 1;
         let parts = tuple
             .to_tuple()
             .map_err(|e| anyhow!("decomposing result of {entry}: {e:?}"))?;
@@ -148,52 +240,50 @@ impl Engine {
                 .with_context(|| format!("output {} of {entry}", io.name))?;
             check_io(io, &t).with_context(|| format!("output {} of {entry}", io.name))?;
             self.stats.output_elements += t.len() as u64;
+            self.stats.output_bytes += t.byte_len() as u64;
+            self.stats.entry_mut(entry).output_bytes += t.byte_len() as u64;
             out.push((io.name.clone(), t));
         }
         Ok(out)
     }
 
-    /// Buffered execution: inputs become device-resident PjRtBuffers,
-    /// re-uploaded only when the store version changed.
+    /// Buffered execution: inputs become persistent device-resident
+    /// PjRtBuffers, re-uploaded only when the store version changed;
+    /// store-resident regions (the effective k/v cache) delta-upload
+    /// only their dirty chunks when the backend supports patching.
     fn execute_buffered(
         &mut self,
         entry: &str,
         spec: &EntrySpec,
         store: &Store,
     ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
-        let cache = self
-            .buffer_cache
-            .entry(entry.to_string())
-            .or_insert_with(|| {
-                let mut v = Vec::new();
-                v.resize_with(spec.inputs.len(), || None);
-                v
-            });
+        // drop buffers whose region realloc'd or was released before
+        // they can pin dead device allocations through this call
+        self.stats.buffers_evicted += self.buffer_cache.sweep_stale(store);
+        self.buffer_cache.ensure_entry(entry, spec.inputs.len());
+        let mut dev = PjrtBackend {
+            client: &self.client,
+        };
         for (i, io) in spec.inputs.iter().enumerate() {
-            let ver = store.version(&io.name);
-            if matches!(cache[i], Some((v, _)) if v == ver) {
-                self.stats.input_cache_hits += 1;
-                continue;
-            }
-            self.stats.input_uploads += 1;
             let t = store
                 .get(&io.name)
                 .with_context(|| format!("assembling inputs for {entry}"))?;
             check_io(io, t).with_context(|| format!("input {} of {entry}", io.name))?;
-            self.stats.input_elements += t.len() as u64;
-            let buf = match t {
-                Tensor::F32 { shape, data } => self
-                    .client
-                    .buffer_from_host_buffer(data, shape, None),
-                Tensor::I32 { shape, data } => self
-                    .client
-                    .buffer_from_host_buffer(data, shape, None),
-            }
-            .map_err(|e| anyhow!("uploading {} for {entry}: {e:?}", io.name))?;
-            cache[i] = Some((ver, buf));
+            self.buffer_cache
+                .sync_input(
+                    &mut dev,
+                    entry,
+                    i,
+                    io,
+                    t,
+                    store,
+                    self.use_device_residency,
+                    self.chunk_rows,
+                    &mut self.stats,
+                )
+                .with_context(|| format!("uploading {} for {entry}", io.name))?;
         }
-        let bufs: Vec<&xla::PjRtBuffer> =
-            cache.iter().map(|e| &e.as_ref().unwrap().1).collect();
+        let bufs = self.buffer_cache.buffers(entry)?;
         let exe = self.executables.get(entry).unwrap();
         let t0 = Instant::now();
         let r = exe

@@ -3,11 +3,13 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod residency;
 pub mod store;
 pub mod tensor;
 
-pub use engine::Engine;
+pub use engine::{Engine, EngineStats, EntryTraffic};
 pub use manifest::{DType, EntrySpec, IoSpec, Manifest};
+pub use residency::{BufferCache, DeviceBackend, MirrorBackend};
 pub use store::Store;
 pub use tensor::Tensor;
 

@@ -1,0 +1,590 @@
+//! Device residency for the buffered execution path: persistent
+//! per-input device buffers with chunk-aligned **delta uploads** of
+//! store-resident regions (DESIGN.md §7).
+//!
+//! The decode loop keeps the effective k/v cache in `Store` resident
+//! regions and declares the rows it wrote each round
+//! ([`crate::runtime::Store::note_region_writes`]).  [`BufferCache`]
+//! consumes those spans and re-uploads only the dirty chunks into the
+//! existing device buffer — steady-state host→device traffic becomes
+//! O(B·L·kvd) per round instead of O(B·L·S·kvd).  Everything degrades
+//! to a whole-buffer upload (always correct, never faster) when the
+//! backend cannot patch in place, the span log cannot vouch for
+//! coverage, or the region's allocation changed.
+//!
+//! The cache is generic over a [`DeviceBackend`] so planning, chunk
+//! alignment, eviction, and byte accounting are unit-testable without a
+//! PJRT device ([`MirrorBackend`]); the engine plugs in its PJRT client.
+
+use super::engine::EngineStats;
+use super::manifest::IoSpec;
+use super::store::Store;
+use super::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Default rows per delta-upload chunk (`KVCAR_RESIDENT_CHUNK_ROWS`
+/// overrides).  Chunks quantize patch calls: a dirty span re-uploads
+/// every chunk it touches, trading a little extra traffic for fewer,
+/// larger transfers.
+pub const DEFAULT_CHUNK_ROWS: usize = 8;
+
+/// Rows per chunk from the environment (`KVCAR_RESIDENT_CHUNK_ROWS`,
+/// default [`DEFAULT_CHUNK_ROWS`]; zero and garbage fall back too).
+pub fn chunk_rows_from_env() -> usize {
+    std::env::var("KVCAR_RESIDENT_CHUNK_ROWS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_CHUNK_ROWS)
+}
+
+/// Quantize sorted disjoint element `spans` to `chunk`-element
+/// boundaries, clamped to `total`, merging ranges that touch.  The
+/// result is sorted, disjoint, and covers every input span.
+pub fn chunk_align(spans: &[(usize, usize)], chunk: usize, total: usize) -> Vec<(usize, usize)> {
+    let chunk = chunk.max(1);
+    let mut out: Vec<(usize, usize)> = Vec::new();
+    for &(a, b) in spans {
+        let b = b.min(total);
+        if a >= b {
+            continue;
+        }
+        let lo = (a / chunk) * chunk;
+        let hi = (b.div_ceil(chunk) * chunk).min(total);
+        match out.last_mut() {
+            Some(last) if lo <= last.1 => last.1 = last.1.max(hi),
+            _ => out.push((lo, hi)),
+        }
+    }
+    out
+}
+
+/// Host→device transfer surface [`BufferCache`] drives.  `upload` must
+/// always work; `patch_f32` may report itself unsupported (`Ok(false)`,
+/// without writing), in which case the cache falls back to `upload`.
+pub trait DeviceBackend {
+    /// Device buffer handle.
+    type Buf;
+
+    /// Upload a whole host tensor into a fresh device buffer.
+    fn upload(&mut self, t: &Tensor) -> Result<Self::Buf>;
+
+    /// Overwrite `data.len()` f32 elements of `buf` starting at element
+    /// offset `at`.  Returns `Ok(false)` — having written nothing —
+    /// when the backend cannot patch device memory in place.
+    fn patch_f32(&mut self, buf: &mut Self::Buf, at: usize, data: &[f32]) -> Result<bool>;
+}
+
+/// One cached device buffer and the host state it mirrors.
+struct CachedInput<B> {
+    /// store tensor name (eviction checks the region it came from)
+    name: String,
+    /// store version the device copy is current with
+    version: u64,
+    /// region epoch at upload time; `Some` iff the tensor was a live
+    /// resident region — an epoch change means the backing allocation
+    /// was replaced and the device copy is garbage
+    epoch: Option<u64>,
+    buf: B,
+}
+
+/// Per-entry persistent device input buffers with region-aware delta
+/// uploads.  Plain tensors get the classic version-keyed treatment
+/// (re-upload on change, hit otherwise); resident regions additionally
+/// try to consume the store's dirty-span log and patch only the
+/// touched chunks.
+pub struct BufferCache<B> {
+    entries: HashMap<String, Vec<Option<CachedInput<B>>>>,
+}
+
+impl<B> Default for BufferCache<B> {
+    fn default() -> BufferCache<B> {
+        BufferCache::new()
+    }
+}
+
+impl<B> BufferCache<B> {
+    /// Empty cache.
+    pub fn new() -> BufferCache<B> {
+        BufferCache {
+            entries: HashMap::new(),
+        }
+    }
+
+    /// Make sure `entry` has one buffer slot per input.
+    pub fn ensure_entry(&mut self, entry: &str, n_inputs: usize) {
+        let slots = self.entries.entry(entry.to_string()).or_default();
+        if slots.len() != n_inputs {
+            slots.clear();
+            slots.resize_with(n_inputs, || None);
+        }
+    }
+
+    /// Live (cached) device buffers across all entries.
+    pub fn live_buffers(&self) -> usize {
+        self.entries
+            .values()
+            .map(|v| v.iter().filter(|s| s.is_some()).count())
+            .sum()
+    }
+
+    /// Borrow one cached buffer (tests compare device mirrors bitwise).
+    pub fn buffer(&self, entry: &str, idx: usize) -> Option<&B> {
+        self.entries.get(entry)?.get(idx)?.as_ref().map(|c| &c.buf)
+    }
+
+    /// Drop every buffer whose source region was invalidated: the
+    /// region's epoch changed (realloc / lapsed re-registration) or the
+    /// name is no longer registered at all (release).  Without this
+    /// sweep a dead `[b, l, s, kvd]` allocation stays pinned on device
+    /// until the entry happens to run again — across a rung switch the
+    /// old entry never runs again.  Returns the number dropped.
+    pub fn sweep_stale(&mut self, store: &Store) -> u64 {
+        let mut dropped = 0;
+        for slots in self.entries.values_mut() {
+            for s in slots.iter_mut() {
+                let stale = matches!(
+                    s,
+                    Some(c) if c.epoch.is_some_and(|e| {
+                        !store.is_resident_region(&c.name) || store.region_epoch(&c.name) != e
+                    })
+                );
+                if stale {
+                    *s = None;
+                    dropped += 1;
+                }
+            }
+        }
+        dropped
+    }
+
+    /// Bring input `idx` of `entry` up to date with the store, moving
+    /// as few bytes as the span log allows:
+    ///
+    /// 1. version+epoch unchanged → nothing moves (cache hit);
+    /// 2. resident region with a surviving buffer and a consumable span
+    ///    log → patch only the chunk-aligned dirty ranges;
+    /// 3. otherwise → whole-buffer upload (the always-sound fallback;
+    ///    counted in [`EngineStats::full_uploads`] for regions).
+    #[allow(clippy::too_many_arguments)]
+    pub fn sync_input<D: DeviceBackend<Buf = B>>(
+        &mut self,
+        dev: &mut D,
+        entry: &str,
+        idx: usize,
+        io: &IoSpec,
+        t: &Tensor,
+        store: &Store,
+        residency: bool,
+        chunk_rows: usize,
+        stats: &mut EngineStats,
+    ) -> Result<()> {
+        let slot = self
+            .entries
+            .get_mut(entry)
+            .and_then(|v| v.get_mut(idx))
+            .ok_or_else(|| anyhow!("buffer cache: entry '{entry}' input {idx} not sized"))?;
+        let ver = store.version(&io.name);
+        let bytes = t.byte_len() as u64;
+        let region = store.is_resident_region(&io.name);
+        let epoch = region.then(|| store.region_epoch(&io.name));
+        if let Some(c) = slot.as_ref() {
+            if c.version == ver && c.epoch == epoch {
+                stats.input_cache_hits += 1;
+                if region {
+                    stats.resident_bytes_skipped += bytes;
+                    stats.entry_mut(entry).resident_bytes_skipped += bytes;
+                }
+                return Ok(());
+            }
+        }
+        stats.input_uploads += 1;
+        if residency && region {
+            if let Some(c) = slot.as_mut() {
+                if c.epoch == epoch {
+                    if let Some(spans) = store.take_region_writes(&io.name, c.version) {
+                        let data = t.as_f32()?;
+                        let row = io.shape.last().copied().unwrap_or(1).max(1);
+                        let chunk = chunk_rows * row;
+                        let ranges = chunk_align(&spans, chunk, data.len());
+                        let mut patched = true;
+                        let mut moved = 0u64;
+                        for &(a, b) in &ranges {
+                            if dev.patch_f32(&mut c.buf, a, &data[a..b])? {
+                                moved += ((b - a) * 4) as u64;
+                            } else {
+                                // backend can't patch: abandon the delta;
+                                // the full upload below replaces the
+                                // (possibly part-patched) buffer whole
+                                patched = false;
+                                break;
+                            }
+                        }
+                        if patched {
+                            c.version = ver;
+                            stats.input_elements += moved / 4;
+                            stats.input_bytes += moved;
+                            stats.resident_bytes_uploaded += moved;
+                            stats.resident_bytes_skipped += bytes.saturating_sub(moved);
+                            let e = stats.entry_mut(entry);
+                            e.input_bytes += moved;
+                            e.resident_bytes_uploaded += moved;
+                            e.resident_bytes_skipped += bytes.saturating_sub(moved);
+                            return Ok(());
+                        }
+                    }
+                }
+            }
+        }
+        if region {
+            // the whole region is about to be device-current: drain the
+            // span log so next round's delta starts from here instead of
+            // re-uploading rows this full upload already covered
+            let _ = store.take_region_writes(&io.name, u64::MAX);
+        }
+        let buf = dev.upload(t)?;
+        stats.input_elements += t.len() as u64;
+        stats.input_bytes += bytes;
+        stats.entry_mut(entry).input_bytes += bytes;
+        if region {
+            stats.full_uploads += 1;
+            stats.resident_bytes_uploaded += bytes;
+            let e = stats.entry_mut(entry);
+            e.full_uploads += 1;
+            e.resident_bytes_uploaded += bytes;
+        }
+        *slot = Some(CachedInput {
+            name: io.name.clone(),
+            version: ver,
+            epoch,
+            buf,
+        });
+        Ok(())
+    }
+
+    /// Every input buffer of `entry` in call order (errors if any input
+    /// was never synced).
+    pub fn buffers(&self, entry: &str) -> Result<Vec<&B>> {
+        self.entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("buffer cache: entry '{entry}' missing"))?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.as_ref()
+                    .map(|c| &c.buf)
+                    .ok_or_else(|| anyhow!("buffer cache: input {i} of '{entry}' not synced"))
+            })
+            .collect()
+    }
+}
+
+/// Test/bench backend: "device" buffers are little-endian byte mirrors
+/// on the host, with switchable patch support.  `patch_supported =
+/// false` models today's PJRT binding (whole-buffer uploads only);
+/// `true` measures what a patch-capable device would move.  Mirrors
+/// stay bitwise-identical to what a real device would hold, so tests
+/// can assert both the cost law and content equality.
+#[derive(Debug, Default)]
+pub struct MirrorBackend {
+    /// honor `patch_f32` (false = full-upload fallback, like PJRT today)
+    pub patch_supported: bool,
+    /// whole-buffer uploads issued
+    pub uploads: u64,
+    /// patch calls honored
+    pub patches: u64,
+    /// bytes moved host→device (uploads + patches)
+    pub bytes_moved: u64,
+}
+
+impl MirrorBackend {
+    /// Backend with in-place patching enabled.
+    pub fn patching() -> MirrorBackend {
+        MirrorBackend {
+            patch_supported: true,
+            ..MirrorBackend::default()
+        }
+    }
+}
+
+impl DeviceBackend for MirrorBackend {
+    type Buf = Vec<u8>;
+
+    fn upload(&mut self, t: &Tensor) -> Result<Vec<u8>> {
+        let bytes = t.to_le_bytes();
+        self.uploads += 1;
+        self.bytes_moved += bytes.len() as u64;
+        Ok(bytes)
+    }
+
+    fn patch_f32(&mut self, buf: &mut Vec<u8>, at: usize, data: &[f32]) -> Result<bool> {
+        if !self.patch_supported {
+            return Ok(false);
+        }
+        anyhow::ensure!(
+            (at + data.len()) * 4 <= buf.len(),
+            "patch [{at}, {}) out of range for {}-byte buffer",
+            at + data.len(),
+            buf.len()
+        );
+        for (i, v) in data.iter().enumerate() {
+            buf[(at + i) * 4..(at + i + 1) * 4].copy_from_slice(&v.to_le_bytes());
+        }
+        self.patches += 1;
+        self.bytes_moved += (data.len() * 4) as u64;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::DType;
+
+    fn io(name: &str, shape: Vec<usize>) -> IoSpec {
+        IoSpec {
+            name: name.to_string(),
+            shape,
+            dtype: DType::F32,
+        }
+    }
+
+    fn region_tensor(store: &Store, name: &str) -> Tensor {
+        store.get(name).unwrap().clone()
+    }
+
+    #[test]
+    fn chunk_align_quantizes_and_merges() {
+        // spans inside one chunk expand to it; touching chunks merge
+        assert_eq!(chunk_align(&[(3, 5)], 4, 16), vec![(0, 8)]);
+        assert_eq!(chunk_align(&[(0, 2), (5, 6)], 4, 16), vec![(0, 8)]);
+        assert_eq!(chunk_align(&[(0, 2), (9, 10)], 4, 16), vec![(0, 4), (8, 12)]);
+        // clamped to the buffer end, empty spans dropped
+        assert_eq!(chunk_align(&[(13, 14), (14, 14)], 4, 14), vec![(12, 14)]);
+        assert_eq!(chunk_align(&[], 4, 16), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn delta_patches_only_dirty_chunks_and_mirrors_bitwise() {
+        let mut store = Store::new();
+        let mut cache: BufferCache<Vec<u8>> = BufferCache::new();
+        let mut dev = MirrorBackend::patching();
+        let mut stats = EngineStats::default();
+        let spec = io("r", vec![4, 8]); // 4 rows of 8 elements
+        {
+            let (d, _) = store.resident_region("r", vec![4, 8]);
+            d.iter_mut().enumerate().for_each(|(i, v)| *v = i as f32);
+        }
+        store.note_region_writes("r", &[(0, 32)]);
+        cache.ensure_entry("e", 1);
+        let t = region_tensor(&store, "r");
+        cache
+            .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 1, &mut stats)
+            .unwrap();
+        // first sight: whole-buffer upload
+        assert_eq!(dev.uploads, 1);
+        assert_eq!(stats.full_uploads, 1);
+        assert_eq!(stats.input_bytes, 32 * 4);
+        assert_eq!(cache.buffer("e", 0).unwrap(), &t.to_le_bytes());
+
+        // round 2: touch one row → exactly one row moves
+        {
+            let (d, _) = store.resident_region("r", vec![4, 8]);
+            for v in &mut d[16..24] {
+                *v = -1.0;
+            }
+        }
+        store.note_region_writes("r", &[(16, 24)]);
+        let t = region_tensor(&store, "r");
+        cache
+            .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 1, &mut stats)
+            .unwrap();
+        assert_eq!(dev.uploads, 1, "no second full upload");
+        assert_eq!(dev.patches, 1);
+        assert_eq!(stats.resident_bytes_uploaded, (32 + 8) * 4);
+        assert_eq!(stats.resident_bytes_skipped, 24 * 4);
+        assert_eq!(stats.full_uploads, 1);
+        assert_eq!(cache.buffer("e", 0).unwrap(), &t.to_le_bytes(), "mirror stays bitwise");
+
+        // round 3: nothing written → declared-clean reopen moves 0 bytes
+        store.resident_region("r", vec![4, 8]);
+        store.note_region_writes("r", &[]);
+        let t = region_tensor(&store, "r");
+        cache
+            .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 1, &mut stats)
+            .unwrap();
+        assert_eq!(dev.bytes_moved, (32 + 8) * 4, "clean round is free");
+        assert_eq!(cache.buffer("e", 0).unwrap(), &t.to_le_bytes());
+    }
+
+    #[test]
+    fn chunk_rounding_uploads_whole_chunks() {
+        let mut store = Store::new();
+        let mut cache: BufferCache<Vec<u8>> = BufferCache::new();
+        let mut dev = MirrorBackend::patching();
+        let mut stats = EngineStats::default();
+        let spec = io("r", vec![8, 4]); // 8 rows of 4 elements
+        store.resident_region("r", vec![8, 4]);
+        store.note_region_writes("r", &[(0, 32)]);
+        cache.ensure_entry("e", 1);
+        let t = region_tensor(&store, "r");
+        cache
+            .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 2, &mut stats)
+            .unwrap();
+        // one dirty element → its whole 2-row chunk (8 elements) moves
+        store.resident_region("r", vec![8, 4]);
+        store.note_region_writes("r", &[(13, 14)]);
+        let t = region_tensor(&store, "r");
+        cache
+            .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 2, &mut stats)
+            .unwrap();
+        assert_eq!(dev.bytes_moved, (32 + 8) * 4);
+    }
+
+    #[test]
+    fn patch_unsupported_falls_back_to_full_upload() {
+        let mut store = Store::new();
+        let mut cache: BufferCache<Vec<u8>> = BufferCache::new();
+        let mut dev = MirrorBackend::default(); // patch_supported = false
+        let mut stats = EngineStats::default();
+        let spec = io("r", vec![2, 4]);
+        store.resident_region("r", vec![2, 4]);
+        store.note_region_writes("r", &[(0, 8)]);
+        cache.ensure_entry("e", 1);
+        for round in 0..3 {
+            {
+                let (d, _) = store.resident_region("r", vec![2, 4]);
+                d[0] = round as f32;
+            }
+            store.note_region_writes("r", &[(0, 1)]);
+            let t = region_tensor(&store, "r");
+            cache
+                .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 1, &mut stats)
+                .unwrap();
+            assert_eq!(cache.buffer("e", 0).unwrap(), &t.to_le_bytes());
+        }
+        assert_eq!(dev.uploads, 3, "every round re-uploads whole");
+        assert_eq!(dev.patches, 0);
+        assert_eq!(stats.full_uploads, 3);
+        assert_eq!(stats.resident_bytes_uploaded, 3 * 8 * 4);
+    }
+
+    #[test]
+    fn residency_disabled_always_uploads_whole() {
+        let mut store = Store::new();
+        let mut cache: BufferCache<Vec<u8>> = BufferCache::new();
+        let mut dev = MirrorBackend::patching();
+        let mut stats = EngineStats::default();
+        let spec = io("r", vec![2, 4]);
+        cache.ensure_entry("e", 1);
+        for round in 0..2 {
+            {
+                let (d, _) = store.resident_region("r", vec![2, 4]);
+                d[0] = round as f32;
+            }
+            store.note_region_writes("r", &[(0, 1)]);
+            let t = region_tensor(&store, "r");
+            cache
+                .sync_input(&mut dev, "e", 0, &spec, &t, &store, false, 1, &mut stats)
+                .unwrap();
+        }
+        assert_eq!(dev.uploads, 2, "legacy reference path: no deltas");
+        assert_eq!(dev.patches, 0);
+    }
+
+    #[test]
+    fn undeclared_write_forces_full_upload_not_stale_data() {
+        let mut store = Store::new();
+        let mut cache: BufferCache<Vec<u8>> = BufferCache::new();
+        let mut dev = MirrorBackend::patching();
+        let mut stats = EngineStats::default();
+        let spec = io("r", vec![2, 4]);
+        store.resident_region("r", vec![2, 4]);
+        store.note_region_writes("r", &[(0, 8)]);
+        cache.ensure_entry("e", 1);
+        let t = region_tensor(&store, "r");
+        cache
+            .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 1, &mut stats)
+            .unwrap();
+        // open + write WITHOUT declaring: the log refuses to vouch and
+        // the engine must move the whole buffer, never serve stale chunks
+        {
+            let (d, _) = store.resident_region("r", vec![2, 4]);
+            d[5] = 99.0;
+        }
+        let t = region_tensor(&store, "r");
+        cache
+            .sync_input(&mut dev, "e", 0, &spec, &t, &store, true, 1, &mut stats)
+            .unwrap();
+        assert_eq!(dev.uploads, 2, "undeclared open → full upload");
+        assert_eq!(cache.buffer("e", 0).unwrap(), &t.to_le_bytes());
+    }
+
+    #[test]
+    fn sweep_drops_buffers_on_epoch_bump_and_release() {
+        let mut store = Store::new();
+        let mut cache: BufferCache<Vec<u8>> = BufferCache::new();
+        let mut dev = MirrorBackend::patching();
+        let mut stats = EngineStats::default();
+        store.resident_region("k", vec![4]);
+        store.note_region_writes("k", &[(0, 4)]);
+        store.resident_region("v", vec![4]);
+        store.note_region_writes("v", &[(0, 4)]);
+        store.insert("w", Tensor::f32(vec![2], vec![1.0, 2.0])); // plain param
+        cache.ensure_entry("e", 3);
+        for (i, name) in ["k", "v", "w"].iter().enumerate() {
+            let t = region_tensor(&store, name);
+            let spec = io(name, t.shape().to_vec());
+            cache
+                .sync_input(&mut dev, "e", i, &spec, &t, &store, true, 1, &mut stats)
+                .unwrap();
+        }
+        assert_eq!(cache.live_buffers(), 3);
+        assert_eq!(cache.sweep_stale(&store), 0, "nothing stale yet");
+
+        // realloc k (epoch bump): its buffer is garbage and must go
+        store.resident_region("k", vec![8]);
+        assert_eq!(cache.sweep_stale(&store), 1);
+        assert_eq!(cache.live_buffers(), 2);
+        assert!(cache.buffer("e", 0).is_none());
+
+        // release v: the dead region must not stay pinned either
+        store.release_region("v");
+        assert_eq!(cache.sweep_stale(&store), 1);
+        assert_eq!(cache.live_buffers(), 1, "only the plain param survives");
+        assert!(cache.buffer("e", 2).is_some(), "plain tensors are never swept");
+    }
+
+    #[test]
+    fn rung_switch_evicts_the_old_entrys_buffers() {
+        // the leak the sweep exists for: a rung switch changes the entry
+        // name, so the old entry never executes again — without the
+        // sweep its big k/v buffers stay pinned forever
+        let mut store = Store::new();
+        let mut cache: BufferCache<Vec<u8>> = BufferCache::new();
+        let mut dev = MirrorBackend::patching();
+        let mut stats = EngineStats::default();
+        store.resident_region("k", vec![8, 4]);
+        store.note_region_writes("k", &[(0, 32)]);
+        cache.ensure_entry("decode_b8", 1);
+        let t = region_tensor(&store, "k");
+        let spec = io("k", vec![8, 4]);
+        cache
+            .sync_input(&mut dev, "decode_b8", 0, &spec, &t, &store, true, 1, &mut stats)
+            .unwrap();
+        assert_eq!(cache.live_buffers(), 1);
+        // rung switch: the region reallocs for the new batch capacity
+        store.resident_region("k", vec![2, 4]);
+        store.note_region_writes("k", &[(0, 8)]);
+        let dropped = cache.sweep_stale(&store);
+        assert_eq!(dropped, 1, "old rung's buffer evicted without running it");
+        cache.ensure_entry("decode_b2", 1);
+        let t = region_tensor(&store, "k");
+        let spec = io("k", vec![2, 4]);
+        cache
+            .sync_input(&mut dev, "decode_b2", 0, &spec, &t, &store, true, 1, &mut stats)
+            .unwrap();
+        assert_eq!(cache.live_buffers(), 1, "exactly the new rung's buffer");
+    }
+}

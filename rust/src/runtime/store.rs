@@ -10,9 +10,64 @@
 use super::tensor::Tensor;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::path::Path;
+
+/// Cap on tracked spans per region: one slot's writes are a handful of
+/// contiguous runs, so a log this deep means something unusual — rather
+/// than grow unboundedly, the log collapses to its bounding span (a
+/// sound over-approximation; the engine just uploads more).
+const MAX_DIRTY_SPANS: usize = 512;
+
+#[derive(Debug, Clone, Default)]
+/// Dirty-write log of one resident region (the `DirtyRanges` record
+/// behind [`Store::note_region_writes`] / [`Store::take_region_writes`]).
+struct DirtyLog {
+    /// store version up to which `spans` is a complete cover of writes;
+    /// a consumer whose last-seen version predates this cannot trust the
+    /// log and must re-upload the whole region
+    base: u64,
+    /// sorted, disjoint element spans written since `base`
+    spans: Vec<(usize, usize)>,
+    /// the region was opened raw (`resident_region`) and no write has
+    /// been declared since — the slice may have been mutated anywhere,
+    /// so the log is untrusted until `note_region_writes` runs
+    pending: bool,
+}
+
+impl DirtyLog {
+    /// Forget everything: spans are complete-and-empty as of `version`.
+    fn invalidate(&mut self, version: u64) {
+        self.base = version;
+        self.spans.clear();
+        self.pending = false;
+    }
+
+    /// Record one element span, keeping `spans` sorted and disjoint
+    /// (overlapping/adjacent spans merge).
+    fn push(&mut self, start: usize, end: usize) {
+        if start >= end {
+            return;
+        }
+        let i = self.spans.partition_point(|s| s.1 < start);
+        let mut j = i;
+        let (mut a, mut b) = (start, end);
+        while j < self.spans.len() && self.spans[j].0 <= b {
+            a = a.min(self.spans[j].0);
+            b = b.max(self.spans[j].1);
+            j += 1;
+        }
+        self.spans.splice(i..j, [(a, b)]);
+        if self.spans.len() > MAX_DIRTY_SPANS {
+            let lo = self.spans[0].0;
+            let hi = self.spans[self.spans.len() - 1].1;
+            self.spans.clear();
+            self.spans.push((lo, hi));
+        }
+    }
+}
 
 #[derive(Debug, Clone, Default)]
 /// Versioned named-tensor map (parameters, optimizer state, staging).
@@ -35,6 +90,11 @@ pub struct Store {
     /// been rewritten while unprotected).  Epochs survive release, so
     /// owners can always detect invalidation as `epoch != last_seen`.
     region_epochs: BTreeMap<String, u64>,
+    /// per-region dirty-span logs backing the engine's delta uploads.
+    /// In a `RefCell` because the engine consumes spans through the
+    /// shared `&Store` it executes against (single-threaded; the store
+    /// is not `Sync` and is never shared across threads).
+    region_writes: RefCell<BTreeMap<String, DirtyLog>>,
     counter: u64,
 }
 
@@ -53,12 +113,29 @@ impl Store {
         );
     }
 
+    /// Bump the tensor's version and return the new value.
+    fn bump(&mut self, name: &str) -> u64 {
+        self.counter += 1;
+        self.versions.insert(name.to_string(), self.counter);
+        self.counter
+    }
+
+    /// Version bump for the *untracked* write paths (plain inserts,
+    /// `get_mut`): any lingering dirty log — the name may have been a
+    /// resident region before a `release_region` — can no longer cover
+    /// this write, so it is invalidated wholesale.
+    fn bump_invalidate(&mut self, name: &str) {
+        let v = self.bump(name);
+        if let Some(log) = self.region_writes.get_mut().get_mut(name) {
+            log.invalidate(v);
+        }
+    }
+
     /// Insert or replace a tensor (version bumped).  Panics on a live
     /// resident region (see [`Store::resident_region`]).
     pub fn insert(&mut self, name: &str, t: Tensor) {
         self.assert_not_resident(name, "insert");
-        self.counter += 1;
-        self.versions.insert(name.to_string(), self.counter);
+        self.bump_invalidate(name);
         self.map.insert(name.to_string(), t);
     }
 
@@ -73,8 +150,7 @@ impl Store {
     pub fn insert_view(&mut self, name: &str, shape: Vec<usize>) -> &mut [f32] {
         self.assert_not_resident(name, "insert_view");
         let n: usize = shape.iter().product();
-        self.counter += 1;
-        self.versions.insert(name.to_string(), self.counter);
+        self.bump_invalidate(name);
         let t = self
             .map
             .entry(name.to_string())
@@ -99,8 +175,7 @@ impl Store {
     pub fn insert_view_i32(&mut self, name: &str, shape: Vec<usize>) -> &mut [i32] {
         self.assert_not_resident(name, "insert_view_i32");
         let n: usize = shape.iter().product();
-        self.counter += 1;
-        self.versions.insert(name.to_string(), self.counter);
+        self.bump_invalidate(name);
         let make = |shape: Vec<usize>| Tensor::I32 {
             data: vec![0; shape.iter().product()],
             shape,
@@ -158,14 +233,20 @@ impl Store {
     ///   when the allocation survived — the contents may have been
     ///   rewritten while the name was unprotected, so owners must treat
     ///   them as untrusted;
-    /// * the tensor version bumps on every call (the engine re-uploads —
-    ///   contents are presumed mutated through the returned slice);
+    /// * the tensor version bumps on every call (the engine must look at
+    ///   the region again — contents are presumed mutated through the
+    ///   returned slice);
+    /// * writes through the returned slice **should be declared** with
+    ///   [`Store::note_region_writes`] afterwards: the store cannot see
+    ///   raw slice writes, so declared spans are what lets the engine
+    ///   upload only dirty chunks.  An open with no declaration is safe
+    ///   but slow — the dirty log is marked untrusted and the engine
+    ///   falls back to re-uploading the whole region;
     /// * while registered, `insert`/`insert_view`/`insert_view_i32` on
     ///   the same name panic instead of silently aliasing the region.
     pub fn resident_region(&mut self, name: &str, shape: Vec<usize>) -> (&mut [f32], bool) {
         let n: usize = shape.iter().product();
-        self.counter += 1;
-        self.versions.insert(name.to_string(), self.counter);
+        let v = self.bump(name);
         let fresh = !matches!(
             self.map.get(name),
             Some(Tensor::F32 { data, .. }) if data.len() == n
@@ -178,6 +259,15 @@ impl Store {
         if fresh || newly_registered {
             let epoch = self.region_epochs.entry(name.to_string()).or_insert(0);
             *epoch += 1;
+        }
+        {
+            let logs = self.region_writes.get_mut();
+            let log = logs.entry(name.to_string()).or_default();
+            if fresh || newly_registered {
+                log.invalidate(v);
+            }
+            // untrusted until the caller declares its writes
+            log.pending = true;
         }
         if fresh {
             self.map.insert(name.to_string(), Tensor::zeros_f32(shape));
@@ -205,9 +295,73 @@ impl Store {
     }
 
     /// Unregister a resident region: the tensor stays in the store but
-    /// loses its aliasing protection (plain inserts work again).
+    /// loses its aliasing protection (plain inserts work again).  The
+    /// dirty log is marked untrusted — anything can write the tensor
+    /// while unprotected, so consumers fall back to a full upload.
     pub fn release_region(&mut self, name: &str) {
         self.resident.remove(name);
+        let v = self.version(name);
+        if let Some(log) = self.region_writes.get_mut().get_mut(name) {
+            log.invalidate(v);
+            log.pending = true;
+        }
+    }
+
+    /// Whether `name` is currently registered as a resident region.
+    pub fn is_resident_region(&self, name: &str) -> bool {
+        self.resident.contains(name)
+    }
+
+    /// Declare the element spans written through the slice returned by
+    /// [`Store::resident_region`] since it was last opened.  Spans may
+    /// over-approximate (extra elements just get re-uploaded) but must
+    /// *cover* every write — the store cannot observe raw slice writes,
+    /// and an uncovered write would leave the engine's device copy
+    /// stale.  Declaring (even an empty span list) marks the open as
+    /// accounted for; opens that are never declared degrade the next
+    /// [`Store::take_region_writes`] to `None` (full upload).
+    ///
+    /// Panics when `name` is not a live resident region.
+    pub fn note_region_writes(&mut self, name: &str, spans: &[(usize, usize)]) {
+        assert!(
+            self.resident.contains(name),
+            "note_region_writes('{name}'): not a live resident region"
+        );
+        let log = self
+            .region_writes
+            .get_mut()
+            .get_mut(name)
+            .expect("live resident region always has a dirty log");
+        for &(a, b) in spans {
+            log.push(a, b);
+        }
+        log.pending = false;
+    }
+
+    /// Consume the dirty element spans of a resident region accumulated
+    /// since `since_version` (the consumer's last-seen [`Store::version`]
+    /// of the tensor).  Returns `None` when the log cannot prove
+    /// coverage — the consumer lapsed past an invalidation (epoch bump,
+    /// release, untracked insert) or the region was opened without a
+    /// [`Store::note_region_writes`] declaration — in which case the
+    /// caller must re-upload the whole region.  Either way the log
+    /// resets to "complete and empty as of the current version", so a
+    /// single engine consuming every round sees exactly the writes of
+    /// that round.  Spans are sorted and disjoint.
+    pub fn take_region_writes(
+        &self,
+        name: &str,
+        since_version: u64,
+    ) -> Option<Vec<(usize, usize)>> {
+        let cur = self.version(name);
+        let mut logs = self.region_writes.borrow_mut();
+        let log = logs.get_mut(name)?;
+        if log.pending || since_version < log.base {
+            log.invalidate(cur);
+            return None;
+        }
+        log.base = cur;
+        Some(std::mem::take(&mut log.spans))
     }
 
     /// Version of a tensor (0 = absent). Bumped on every insert.
@@ -228,8 +382,7 @@ impl Store {
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
         self.assert_not_resident(name, "get_mut");
         // conservatively bump: the caller may mutate through this borrow
-        self.counter += 1;
-        self.versions.insert(name.to_string(), self.counter);
+        self.bump_invalidate(name);
         self.map
             .get_mut(name)
             .ok_or_else(|| anyhow!("store has no tensor '{name}'"))
@@ -477,6 +630,97 @@ mod tests {
         // steady re-opens while registered never bump
         s.resident_region("x", vec![2]);
         assert_eq!(s.region_epoch("x"), 2);
+    }
+
+    #[test]
+    fn declared_writes_flow_to_consumer_once() {
+        let mut s = Store::new();
+        s.resident_region("r", vec![16]);
+        // a consumer that never saw the region must full-upload first
+        assert_eq!(s.take_region_writes("r", 0), None, "never-synced consumer");
+        s.resident_region("r", vec![16]);
+        let v1 = s.version("r");
+        s.note_region_writes("r", &[(2, 5), (4, 9), (12, 14)]);
+        // overlapping declarations merge, sorted and disjoint
+        assert_eq!(s.take_region_writes("r", v1), Some(vec![(2, 9), (12, 14)]));
+        // consumed: a consumer current at `v1` now sees an empty delta
+        assert_eq!(s.take_region_writes("r", v1), Some(vec![]));
+        // next round: reopen + declare, only the new spans come back
+        s.resident_region("r", vec![16]);
+        s.note_region_writes("r", &[(0, 2)]);
+        assert_eq!(s.take_region_writes("r", v1), Some(vec![(0, 2)]));
+    }
+
+    #[test]
+    fn undeclared_open_degrades_to_full_upload() {
+        let mut s = Store::new();
+        s.resident_region("r", vec![8]);
+        let v = s.version("r");
+        s.note_region_writes("r", &[(0, 8)]);
+        assert!(s.take_region_writes("r", v).is_some());
+        // open without declaring: raw slice writes are invisible, so the
+        // log must refuse to vouch for the delta
+        s.resident_region("r", vec![8]);
+        assert_eq!(s.take_region_writes("r", v), None, "undeclared open");
+        // the refusal resets the log; a disciplined round works again
+        let v = s.version("r");
+        s.resident_region("r", vec![8]);
+        s.note_region_writes("r", &[(1, 3)]);
+        assert_eq!(s.take_region_writes("r", v), Some(vec![(1, 3)]));
+    }
+
+    #[test]
+    fn realloc_release_and_plain_inserts_invalidate_the_log() {
+        let mut s = Store::new();
+        s.resident_region("r", vec![8]);
+        let v = s.version("r");
+        s.note_region_writes("r", &[(0, 8)]);
+        assert!(s.take_region_writes("r", v).is_some());
+        // realloc (size change, epoch bump) wipes the spans
+        s.resident_region("r", vec![12]);
+        s.note_region_writes("r", &[(0, 1)]);
+        assert_eq!(s.take_region_writes("r", v), None, "epoch bump");
+        // release marks the log untrusted even before any write
+        let v = s.version("r");
+        s.release_region("r");
+        assert_eq!(s.take_region_writes("r", v), None, "released region");
+        // a plain insert_view while unprotected stays invalidated after
+        // re-registration (epoch bump) — no stale span can survive
+        s.insert_view("r", vec![12]);
+        let v = s.version("r");
+        s.resident_region("r", vec![12]);
+        s.note_region_writes("r", &[(3, 4)]);
+        assert_eq!(s.take_region_writes("r", v), None, "lapsed consumer");
+    }
+
+    #[test]
+    fn multi_round_spans_accumulate_for_a_slow_consumer() {
+        let mut s = Store::new();
+        s.resident_region("r", vec![8]);
+        let v0 = s.version("r");
+        s.note_region_writes("r", &[(0, 8)]);
+        assert!(s.take_region_writes("r", v0).is_some());
+        // an unknown name has no log at all
+        assert_eq!(s.take_region_writes("never", 0), None, "unknown name");
+        // two rounds of declared writes, no consumption in between
+        s.resident_region("r", vec![8]);
+        s.note_region_writes("r", &[(1, 2)]);
+        s.resident_region("r", vec![8]);
+        s.note_region_writes("r", &[(5, 6)]);
+        // consumer current at v0 gets both rounds' spans in one delta
+        assert_eq!(s.take_region_writes("r", v0), Some(vec![(1, 2), (5, 6)]));
+    }
+
+    #[test]
+    fn span_log_caps_to_bounding_box() {
+        let mut s = Store::new();
+        s.resident_region("r", vec![4096]);
+        let v = s.version("r");
+        let spans: Vec<(usize, usize)> =
+            (0..MAX_DIRTY_SPANS + 1).map(|i| (3 * i, 3 * i + 1)).collect();
+        s.note_region_writes("r", &spans);
+        let got = s.take_region_writes("r", v).unwrap();
+        assert_eq!(got, vec![(0, 3 * MAX_DIRTY_SPANS + 1)], "collapsed, still covering");
     }
 
     #[test]

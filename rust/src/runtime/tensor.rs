@@ -70,6 +70,30 @@ impl Tensor {
         self.len() == 0
     }
 
+    /// Bytes per element of this tensor's dtype.
+    pub fn dtype_bytes(&self) -> usize {
+        match self {
+            // both artifact dtypes are 32-bit today; keep the seam so
+            // traffic accounting stays byte-accurate if f16 lands
+            Tensor::F32 { .. } | Tensor::I32 { .. } => 4,
+        }
+    }
+
+    /// Exact host-memory payload size in bytes (traffic accounting).
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype_bytes()
+    }
+
+    /// Serialize the payload as little-endian bytes (the on-device
+    /// layout PJRT uploads; test/bench device mirrors compare against
+    /// this for bitwise equality).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        match self {
+            Tensor::F32 { data, .. } => data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            Tensor::I32 { data, .. } => data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+        }
+    }
+
     /// "f32" or "i32" (error messages).
     pub fn dtype_name(&self) -> &'static str {
         match self {
@@ -157,6 +181,19 @@ mod tests {
         let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
         assert_eq!(back.shape(), &[] as &[usize]);
         assert_eq!(back.as_i32().unwrap(), &[42]);
+    }
+
+    #[test]
+    fn byte_len_and_le_bytes_are_exact() {
+        let t = Tensor::f32(vec![2, 2], vec![1.0, -2.0, 0.5, 3.0]);
+        assert_eq!(t.byte_len(), 16);
+        let bytes = t.to_le_bytes();
+        assert_eq!(bytes.len(), 16);
+        assert_eq!(&bytes[0..4], &1.0f32.to_le_bytes());
+        assert_eq!(&bytes[4..8], &(-2.0f32).to_le_bytes());
+        let t = Tensor::i32(vec![3], vec![7, -1, 0]);
+        assert_eq!(t.byte_len(), 12);
+        assert_eq!(&t.to_le_bytes()[4..8], &(-1i32).to_le_bytes());
     }
 
     #[test]
