@@ -68,15 +68,15 @@ fn main() -> Result<()> {
                 max_new_tokens: max_new,
                 sampling: Sampling::Temperature(0.8),
                 stop_byte: None,
-                arrival: std::time::Instant::now(),
+                // None = "stamp on receipt": the worker stamps the
+                // request when it arrives after the simulated client
+                // delay, so queue_latency measures server-side wait
+                arrival: None,
             };
             let h = handle.clone();
             joins.push(std::thread::spawn(move || {
                 std::thread::sleep(delay);
-                // the sleep simulates the arrival process, so the real
-                // arrival is after it — restamp so queue_latency measures
-                // server-side wait, not the simulated client delay
-                h.generate(req.at(std::time::Instant::now()))
+                h.generate(req)
             }));
         }
         let mut total_tokens = 0usize;

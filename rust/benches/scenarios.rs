@@ -1,0 +1,149 @@
+//! Scenario-matrix bench: serves the five standard scenario workloads
+//! (DESIGN.md §8) through the deterministic mock backend and emits
+//! machine-readable `BENCH_scenarios.json` (override with
+//! `KVCAR_BENCH_JSON`) with per-scenario TTFT and tok/s p50/p99 —
+//! every figure on the **virtual clock**, so the numbers are a pure
+//! function of the scenario and run-over-run deltas measure scheduler
+//! policy changes, not machine noise.  When a previous file exists its
+//! numbers are reported as deltas before being replaced, mirroring
+//! `BENCH_decode_hotpath.json`.
+//!
+//! When AOT artifacts are present the same matrix additionally runs
+//! against the real engine (reported as `gpt2t/...` rows and the
+//! `engine_scenarios` section); without artifacts the mock leg alone
+//! runs, so the bench never skips entirely.
+
+use kvcar::coordinator::{run_scenario, scenario_spec, standard_matrix, Scenario, ScenarioReport};
+use kvcar::runtime::{artifacts_dir, Engine, ExecBackend, MockEngine};
+use kvcar::util::json::{self, Json};
+
+fn json_path() -> String {
+    std::env::var("KVCAR_BENCH_JSON").unwrap_or_else(|_| "BENCH_scenarios.json".into())
+}
+
+/// Run one scenario and print its human-readable row.
+fn run_one(engine: &mut dyn ExecBackend, model: &str, sc: &Scenario, tag: &str) -> ScenarioReport {
+    let r = run_scenario(engine, model, sc).expect("scenario must pass its invariants");
+    println!(
+        "bench scenarios/{tag}{:<28} ttft p50 {:>7.2} p99 {:>7.2} ms  tok/s p50 {:>7.1} p99 {:>7.1}  \
+         ({} rounds, {} faults, {} rejected, {:.1} virtual ms)",
+        r.name,
+        r.ttft_p50_ms,
+        r.ttft_p99_ms,
+        r.tok_s_p50,
+        r.tok_s_p99,
+        r.rounds,
+        r.faults_injected,
+        r.rejected.len(),
+        r.virtual_ms,
+    );
+    r
+}
+
+fn scenario_json(r: &ScenarioReport) -> Json {
+    json::obj(vec![
+        ("name", json::s(&r.name)),
+        ("completed", json::num(r.completed as f64)),
+        ("rejected", json::num(r.rejected.len() as f64)),
+        ("rounds", json::num(r.rounds as f64)),
+        ("invariant_checks", json::num(r.invariant_checks as f64)),
+        ("faults_injected", json::num(r.faults_injected as f64)),
+        ("ttft_p50_ms", json::num(r.ttft_p50_ms)),
+        ("ttft_p99_ms", json::num(r.ttft_p99_ms)),
+        ("tok_s_p50", json::num(r.tok_s_p50)),
+        ("tok_s_p99", json::num(r.tok_s_p99)),
+        ("throughput_tok_s", json::num(r.throughput_tok_s)),
+        ("virtual_ms", json::num(r.virtual_ms)),
+        ("parks", json::num(r.parks as f64)),
+        ("resumes", json::num(r.resumes as f64)),
+        ("shared_admissions", json::num(r.shared_admissions as f64)),
+        // digests as hex strings: u64 does not round-trip through the
+        // f64-backed Json number type
+        ("tokens_digest", json::s(&format!("{:016x}", r.tokens_digest))),
+        (
+            "invariant_digest",
+            json::s(&format!("{:016x}", r.invariant_digest)),
+        ),
+    ])
+}
+
+/// Compare against the previous run's file (the cross-PR trajectory).
+/// Virtual-clock figures only move when scheduler policy or the cost
+/// model changes, so any delta here is a real behavior change.
+fn report_deltas(prev: &Json, reports: &[ScenarioReport]) {
+    let Some(prev_rows) = prev.get("scenarios").and_then(Json::as_arr) else {
+        return;
+    };
+    for r in reports {
+        let Some(old) = prev_rows
+            .iter()
+            .find(|p| p.get("name").and_then(Json::as_str) == Some(r.name.as_str()))
+        else {
+            continue;
+        };
+        for (field, new_v) in [
+            ("ttft_p99_ms", r.ttft_p99_ms),
+            ("tok_s_p50", r.tok_s_p50),
+            ("throughput_tok_s", r.throughput_tok_s),
+        ] {
+            if let Some(old_v) = old.get(field).and_then(Json::as_f64) {
+                if old_v > 0.0 && (old_v - new_v).abs() > 1e-9 {
+                    println!(
+                        "bench scenarios/{:<28} vs previous: {field} {:+.1}% ({:.3} -> {:.3})",
+                        r.name,
+                        100.0 * (new_v - old_v) / old_v,
+                        old_v,
+                        new_v,
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn main() {
+    let matrix = standard_matrix();
+    let mut reports = Vec::new();
+    for sc in &matrix {
+        let mut engine = MockEngine::new(scenario_spec());
+        reports.push(run_one(&mut engine, "mock", sc, ""));
+    }
+
+    // artifact-gated real-engine leg: identical harness and virtual
+    // clock over the PJRT artifact backend (launch faults are a mock
+    // capability; tier/budget faults still fire)
+    let mut engine_reports = Vec::new();
+    let dir = artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let mut engine = Engine::new(&dir).expect("artifact engine must load");
+        for sc in &matrix {
+            engine_reports.push(run_one(&mut engine, "gpt2t", sc, "gpt2t/"));
+        }
+    } else {
+        println!("bench scenarios: artifacts absent; real-engine leg skipped (mock leg above)");
+    }
+
+    let path = json_path();
+    match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(prev) => report_deltas(&prev, &reports),
+            Err(e) => println!("bench scenarios: previous {path} unreadable ({e}); no deltas"),
+        },
+        // absent baseline is the normal first-run case, not an error
+        Err(_) => println!("bench scenarios: no previous run ({path}); deltas start next run"),
+    }
+    let j = json::obj(vec![
+        ("version", json::num(1.0)),
+        ("bench", json::s("scenarios")),
+        ("backend", json::s("mock")),
+        ("scenarios", json::arr(reports.iter().map(scenario_json))),
+        (
+            "engine_scenarios",
+            json::arr(engine_reports.iter().map(scenario_json)),
+        ),
+    ]);
+    match std::fs::write(&path, j.to_string()) {
+        Ok(()) => println!("bench scenarios: wrote {path}"),
+        Err(e) => eprintln!("bench scenarios: could not write {path}: {e}"),
+    }
+}

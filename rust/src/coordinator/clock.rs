@@ -1,0 +1,254 @@
+//! Virtual/wall clock abstraction for the serving loop.
+//!
+//! Every timing consumer in the coordinator (`scheduler`, `metrics`,
+//! `trace`, the server front-end) reads time as a [`Stamp`] from a
+//! [`Clock`] instead of calling `Instant::now()` directly.  Under
+//! [`Clock::Wall`] a stamp is real elapsed time since the clock's epoch,
+//! so production serving behaves exactly as before.  Under
+//! [`Clock::Virtual`] time only moves when the scheduler *charges* it —
+//! a deterministic [`CostModel`] prices each prefill launch, decode
+//! round, and tier transfer — so a scenario replayed from the same seed
+//! produces bit-identical TTFT/latency numbers, timing fields included
+//! (DESIGN.md §8).
+//!
+//! The rule that keeps one code path serving both modes: measure
+//! elapsed work as `clock.now() - t0` and advance virtual time with
+//! `clock.charge(cost)` *between* the two reads.  Under a wall clock the
+//! charge is a no-op and the subtraction measures real time; under a
+//! virtual clock the subtraction yields exactly the charged cost.
+
+use std::ops::Add;
+use std::time::{Duration, Instant};
+
+/// A point in time relative to a [`Clock`]'s epoch.
+///
+/// Stamps are plain durations-since-epoch, so they are `Copy`, totally
+/// ordered, and serialize as integers — unlike `Instant`, which cannot
+/// leave the process and therefore cannot appear in a replayable trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Stamp(Duration);
+
+impl Stamp {
+    /// The clock epoch itself.
+    pub const ZERO: Stamp = Stamp(Duration::ZERO);
+
+    /// Stamp at `d` past the epoch.
+    pub fn from_duration(d: Duration) -> Stamp {
+        Stamp(d)
+    }
+
+    /// Stamp at `ms` milliseconds past the epoch (test/scenario helper).
+    pub fn from_ms(ms: u64) -> Stamp {
+        Stamp(Duration::from_millis(ms))
+    }
+
+    /// Offset from the epoch.
+    pub fn as_duration(self) -> Duration {
+        self.0
+    }
+
+    /// Elapsed time since `earlier`, clamped to zero when `earlier` is
+    /// actually later (mirrors `Instant::saturating_duration_since`).
+    pub fn saturating_since(self, earlier: Stamp) -> Duration {
+        self.0.saturating_sub(earlier.0)
+    }
+}
+
+impl Add<Duration> for Stamp {
+    type Output = Stamp;
+
+    fn add(self, rhs: Duration) -> Stamp {
+        Stamp(self.0 + rhs)
+    }
+}
+
+/// Deterministic price list for scheduler work under a virtual clock.
+///
+/// The magnitudes are loosely calibrated to the real-artifact numbers in
+/// `BENCH_decode_hotpath.json` (a prefill launch costs a couple of ms, a
+/// decode round ~1.5 ms plus per-row work) so virtual TTFT/throughput
+/// figures land in a realistic range, but their only hard requirement is
+/// determinism: integer nanoseconds, no floating point, no environment
+/// dependence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Fixed cost of one prefill launch (compile-cache hit assumed).
+    pub prefill_launch: Duration,
+    /// Per prompt-row cost within a prefill launch.
+    pub prefill_row: Duration,
+    /// Fixed cost of one decode round (a single batched launch).
+    pub decode_launch: Duration,
+    /// Per live-sequence cost within a decode round.
+    pub decode_row: Duration,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            prefill_launch: Duration::from_micros(3000),
+            prefill_row: Duration::from_micros(40),
+            decode_launch: Duration::from_micros(1500),
+            decode_row: Duration::from_micros(25),
+        }
+    }
+}
+
+impl CostModel {
+    /// Price of an admission wave: `launches` prefill launches staging
+    /// `rows` prompt rows in total (shared-prefix rows that launched no
+    /// work are excluded by the caller).
+    pub fn prefill_cost(&self, launches: u64, rows: usize) -> Duration {
+        self.prefill_launch * launches as u32 + self.prefill_row * rows as u32
+    }
+
+    /// Price of one decode round advancing `rows` live sequences.
+    pub fn decode_cost(&self, rows: usize) -> Duration {
+        self.decode_launch + self.decode_row * rows as u32
+    }
+}
+
+/// Time source for the serving loop: real (`Wall`) or charged
+/// (`Virtual`).
+#[derive(Debug, Clone)]
+pub enum Clock {
+    /// Real time; stamps measure elapsed wall time since `epoch`.
+    Wall {
+        /// Process instant all stamps are measured from.
+        epoch: Instant,
+    },
+    /// Deterministic time; only [`Clock::charge`] and
+    /// [`Clock::advance_to`] move it.
+    Virtual {
+        /// Current offset from the epoch.
+        now: Duration,
+        /// Price list used by the scheduler's charge sites.
+        costs: CostModel,
+    },
+}
+
+impl Clock {
+    /// Wall clock with its epoch at the moment of the call.
+    pub fn wall() -> Clock {
+        Clock::Wall {
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Virtual clock starting at the epoch with the given price list.
+    pub fn virtual_with(costs: CostModel) -> Clock {
+        Clock::Virtual {
+            now: Duration::ZERO,
+            costs,
+        }
+    }
+
+    /// Virtual clock with the default [`CostModel`].
+    pub fn virtual_default() -> Clock {
+        Clock::virtual_with(CostModel::default())
+    }
+
+    /// True when time only moves via `charge`/`advance_to`.
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual { .. })
+    }
+
+    /// Current time as a stamp past the epoch.
+    pub fn now(&self) -> Stamp {
+        match self {
+            Clock::Wall { epoch } => Stamp(epoch.elapsed()),
+            Clock::Virtual { now, .. } => Stamp(*now),
+        }
+    }
+
+    /// Advance virtual time by `cost`; no-op under a wall clock (the
+    /// real work being priced took real time there).
+    pub fn charge(&mut self, cost: Duration) {
+        if let Clock::Virtual { now, .. } = self {
+            *now += cost;
+        }
+    }
+
+    /// Jump virtual time forward to `t` (never backward); no-op under a
+    /// wall clock.  Used to skip idle gaps until the next trace arrival.
+    pub fn advance_to(&mut self, t: Stamp) {
+        if let Clock::Virtual { now, .. } = self {
+            *now = (*now).max(t.0);
+        }
+    }
+
+    /// Price list for charge sites (the default model under a wall
+    /// clock, where charges are no-ops anyway).
+    pub fn costs(&self) -> CostModel {
+        match self {
+            Clock::Wall { .. } => CostModel::default(),
+            Clock::Virtual { costs, .. } => *costs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamp_ordering_and_arith() {
+        let a = Stamp::from_ms(10);
+        let b = Stamp::from_ms(25);
+        assert!(a < b);
+        assert_eq!(b.saturating_since(a), Duration::from_millis(15));
+        assert_eq!(a.saturating_since(b), Duration::ZERO);
+        assert_eq!(a + Duration::from_millis(15), b);
+        assert_eq!(Stamp::ZERO.as_duration(), Duration::ZERO);
+    }
+
+    #[test]
+    fn virtual_clock_moves_only_when_charged() {
+        let mut c = Clock::virtual_default();
+        assert!(c.is_virtual());
+        let t0 = c.now();
+        assert_eq!(t0, Stamp::ZERO);
+        c.charge(Duration::from_millis(3));
+        assert_eq!(c.now().saturating_since(t0), Duration::from_millis(3));
+        // advance_to never moves backward
+        c.advance_to(Stamp::from_ms(1));
+        assert_eq!(c.now(), Stamp::from_ms(3));
+        c.advance_to(Stamp::from_ms(10));
+        assert_eq!(c.now(), Stamp::from_ms(10));
+    }
+
+    #[test]
+    fn wall_clock_ignores_charges() {
+        let mut c = Clock::wall();
+        assert!(!c.is_virtual());
+        let t0 = c.now();
+        c.charge(Duration::from_secs(100));
+        c.advance_to(Stamp::from_ms(1_000_000));
+        // real elapsed time is tiny, not the charged 100 s
+        assert!(c.now().saturating_since(t0) < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn cost_model_prices_are_linear() {
+        let m = CostModel::default();
+        assert_eq!(
+            m.prefill_cost(2, 10),
+            m.prefill_launch * 2 + m.prefill_row * 10
+        );
+        assert_eq!(m.decode_cost(8), m.decode_launch + m.decode_row * 8);
+        assert!(m.decode_cost(0) > Duration::ZERO);
+    }
+
+    #[test]
+    fn identical_charge_sequences_are_bit_identical() {
+        let run = || {
+            let mut c = Clock::virtual_default();
+            let costs = c.costs();
+            c.charge(costs.prefill_cost(1, 24));
+            for b in [4usize, 8, 8, 6] {
+                c.charge(costs.decode_cost(b));
+            }
+            c.now()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,307 @@
+//! Whole-stack invariant checks for the scenario harness (DESIGN.md §8).
+//!
+//! [`check_round`] audits every cross-layer consistency law the serving
+//! stack promises, against the scheduler's own live set: the prefix
+//! trie's refcounts, sequence leaks between the scheduler and the cache
+//! manager, the soft cache budget, slot/region coherence of the
+//! store-resident staging path, dirty-span well-formedness, host-tier
+//! accounting, and metrics conservation.  The harness runs it after
+//! every scheduler round — including rounds that *failed* with an
+//! injected fault, which is where transactional bugs hide.
+//!
+//! On success the checker returns a fingerprint of the audited state,
+//! which the scenario folds into its invariant digest: two runs that
+//! pass the same checks *in different states* still produce different
+//! digests, so the determinism assertion covers the trajectory, not
+//! just the absence of violations.
+
+use super::scheduler::{RunState, ServingEngine};
+
+/// The store-resident staging regions audited for slot/span coherence.
+const REGIONS: [&str; 2] = ["k_cache", "v_cache"];
+
+/// Audit every whole-stack invariant after one scheduler round.
+///
+/// `strict_budget` enables the soft-budget law; pass `false` for the
+/// check immediately after a round that returned an error — a fault
+/// injected between admission and parking legitimately leaves the
+/// round over budget (the next successful round must repair it), while
+/// every *structural* invariant must hold even then.
+///
+/// Returns an FNV-1a fingerprint of the audited counters on success,
+/// or all violations (newline-joined) on failure.  The conservation
+/// laws assume the engine serves one run, as the scenario harness does.
+pub fn check_round(
+    s: &ServingEngine<'_>,
+    state: &RunState,
+    strict_budget: bool,
+) -> Result<u64, String> {
+    let mut errs: Vec<String> = Vec::new();
+    let active = state.active_seqs();
+
+    // -- prefix trie: refcounts re-derivable from live sequences + pins
+    if let Err(e) = s.cache.prefix_integrity(&s.waves.pinned_leaves()) {
+        errs.push(format!("prefix integrity: {e}"));
+    }
+
+    // -- sequence leaks: the cache manager must track exactly the
+    //    scheduler's active set (a failed wave that left sequences
+    //    behind shows up here)
+    let cache_ids = s.cache.sequence_ids();
+    let mut active_ids: Vec<u64> = active.iter().map(|a| a.cache_id).collect();
+    active_ids.sort_unstable();
+    if active_ids.windows(2).any(|w| w[0] == w[1]) {
+        errs.push(format!("duplicate cache_id in active set: {active_ids:?}"));
+    }
+    if cache_ids != active_ids {
+        errs.push(format!(
+            "sequence leak: cache manager tracks {cache_ids:?}, scheduler owns {active_ids:?}"
+        ));
+    }
+
+    // -- soft budget law: after parking ran, the unparked working set
+    //    plus one round of worst-case growth fits the budget net of the
+    //    shared prefix store, or parking is already maximal (one
+    //    survivor — rounds must keep completing)
+    if strict_budget {
+        if let Some(budget) = s.cfg.cache_budget {
+            let shared = s.cache.prefix_stats().shared_bytes;
+            let unparked: Vec<&_> = active.iter().filter(|a| !a.parked).collect();
+            let bytes: usize = unparked
+                .iter()
+                .map(|a| s.cache.seq_stored_bytes(a.cache_id))
+                .sum();
+            let projected = bytes + unparked.len() * s.cache.cfg.bytes_per_token()
+                * s.cache.cfg.block_size;
+            if unparked.len() > 1 && projected > budget.saturating_sub(shared) {
+                errs.push(format!(
+                    "budget law: {} unparked sequences project {projected} B \
+                     over budget {budget} B (shared {shared} B)",
+                    unparked.len()
+                ));
+            }
+        }
+    }
+
+    // -- slot coherence: every assigned slot has a unique, live,
+    //    unparked owner whose sync watermark never outruns its decoded
+    //    rows
+    let assigned: Vec<(usize, u64)> = s
+        .arena
+        .assignments()
+        .iter()
+        .enumerate()
+        .filter_map(|(slot, id)| id.map(|id| (slot, id)))
+        .collect();
+    for (slot, id) in &assigned {
+        if assigned.iter().any(|(s2, id2)| id2 == id && s2 != slot) {
+            errs.push(format!("sequence {id} owns more than one slot"));
+        }
+        match active.iter().find(|a| a.cache_id == *id) {
+            None => errs.push(format!("slot {slot} owned by retired sequence {id}")),
+            Some(a) if a.parked => {
+                errs.push(format!("slot {slot} owned by parked sequence {id}"))
+            }
+            Some(_) => {}
+        }
+        if let (Some(synced), Some(decoded)) =
+            (s.arena.synced_upto(*id), s.cache.decoded_upto(*id))
+        {
+            if synced > decoded {
+                errs.push(format!(
+                    "slot {slot}: sequence {id} synced {synced} rows but decoded only {decoded}"
+                ));
+            }
+        }
+    }
+
+    // -- region/epoch coherence and dirty-span well-formedness
+    if s.arena.capacity() > 0 && REGIONS.iter().all(|r| s.store.is_resident_region(r)) {
+        let store_epochs = (s.store.region_epoch(REGIONS[0]), s.store.region_epoch(REGIONS[1]));
+        if s.arena.region_epochs() != store_epochs {
+            errs.push(format!(
+                "region epochs diverged: arena {:?} vs store {store_epochs:?}",
+                s.arena.region_epochs()
+            ));
+        }
+    }
+    for name in REGIONS {
+        let Some(spans) = s.store.region_spans(name) else {
+            continue;
+        };
+        let elems = s.store.get(name).map(|t| t.len()).unwrap_or(0);
+        for w in spans.windows(2) {
+            if w[0].1 > w[1].0 {
+                errs.push(format!("{name}: dirty spans unsorted/overlapping: {spans:?}"));
+                break;
+            }
+        }
+        for &(a, b) in &spans {
+            if a >= b || b > elems {
+                errs.push(format!(
+                    "{name}: dirty span ({a}, {b}) malformed for region of {elems} elements"
+                ));
+                break;
+            }
+        }
+    }
+
+    // -- tier coherence: the scheduler's parked flags, the cache
+    //    manager's parked state, and the host tier's ledger must agree
+    let parked_flags = active.iter().filter(|a| a.parked).count();
+    if parked_flags != s.tier.parked_count() {
+        errs.push(format!(
+            "tier ledger holds {} sequences, scheduler flags {parked_flags} as parked",
+            s.tier.parked_count()
+        ));
+    }
+    for a in active {
+        if a.parked != s.tier.is_parked(a.cache_id) {
+            errs.push(format!(
+                "sequence {}: scheduler parked={} but tier says {}",
+                a.cache_id,
+                a.parked,
+                s.tier.is_parked(a.cache_id)
+            ));
+        }
+        if a.parked != s.cache.seq_parked(a.cache_id) {
+            errs.push(format!(
+                "sequence {}: scheduler parked={} but cache manager says {}",
+                a.cache_id,
+                a.parked,
+                s.cache.seq_parked(a.cache_id)
+            ));
+        }
+        if a.pos > s.spec.max_seq {
+            errs.push(format!(
+                "sequence {} position {} exceeds max_seq {}",
+                a.cache_id, a.pos, s.spec.max_seq
+            ));
+        }
+    }
+
+    // -- effective-cache scratch: exactly the live unparked sequences
+    //    hold one (parked/retired scratch that lingers is a working-set
+    //    leak; a missing one would crash the next decode round)
+    let mut eff_ids: Vec<u64> = s.eff.keys().copied().collect();
+    eff_ids.sort_unstable();
+    let mut unparked_ids: Vec<u64> = active
+        .iter()
+        .filter(|a| !a.parked)
+        .map(|a| a.cache_id)
+        .collect();
+    unparked_ids.sort_unstable();
+    if eff_ids != unparked_ids {
+        errs.push(format!(
+            "effective-cache scratch for {eff_ids:?} but live unparked set is {unparked_ids:?}"
+        ));
+    }
+
+    // -- metrics conservation
+    let m = &s.metrics;
+    let emitted: u64 = active.iter().map(|a| a.output.len() as u64).sum::<u64>()
+        + state
+            .done_responses()
+            .iter()
+            .map(|r| r.generated_tokens as u64)
+            .sum::<u64>();
+    if m.tokens_generated != emitted {
+        errs.push(format!(
+            "token conservation: metrics count {} but sequences hold {emitted}",
+            m.tokens_generated
+        ));
+    }
+    if m.requests_completed != state.done_responses().len() as u64 {
+        errs.push(format!(
+            "completion conservation: metrics count {} but {} responses exist",
+            m.requests_completed,
+            state.done_responses().len()
+        ));
+    }
+    let admitted_total = m.wave_admitted.total() as usize;
+    if m.queue_latency.len() != admitted_total || m.ttft.len() != admitted_total {
+        errs.push(format!(
+            "latency-sample conservation: {} queue / {} ttft samples for {admitted_total} admissions",
+            m.queue_latency.len(),
+            m.ttft.len()
+        ));
+    }
+    if m.decode_slots_used > m.decode_slots_total {
+        errs.push(format!(
+            "slot accounting: {} slots used out of {} paid for",
+            m.decode_slots_used, m.decode_slots_total
+        ));
+    }
+    if m.auto_resumes > m.auto_parks {
+        errs.push(format!(
+            "park/resume accounting: {} resumes exceed {} parks",
+            m.auto_resumes, m.auto_parks
+        ));
+    }
+
+    if !errs.is_empty() {
+        return Err(errs.join("\n"));
+    }
+    let mut fp = Fnv::new();
+    fp.push(active_ids.len() as u64);
+    for id in &active_ids {
+        fp.push(*id);
+    }
+    fp.push(state.n_waiting() as u64);
+    fp.push(state.n_done() as u64);
+    fp.push(m.tokens_generated);
+    fp.push(m.prefill_launches);
+    fp.push(m.shared_admissions);
+    fp.push(m.auto_parks);
+    fp.push(m.auto_resumes);
+    fp.push(parked_flags as u64);
+    fp.push(s.cache.prefix_stats().shared_bytes as u64);
+    fp.push(s.live_cache_bytes(active) as u64);
+    // the clock itself is part of the audited state: timing must be as
+    // reproducible as the token streams
+    fp.push(s.clock.now().as_duration().as_nanos() as u64);
+    Ok(fp.finish())
+}
+
+/// Minimal FNV-1a accumulator over `u64` words (the digest primitive
+/// every scenario fingerprint uses — no hasher state beyond one word,
+/// so digests are identical across platforms and runs).
+pub(crate) struct Fnv(u64);
+
+impl Fnv {
+    /// Fresh accumulator at the FNV offset basis.
+    pub(crate) fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold one word in.
+    pub(crate) fn push(&mut self, v: u64) {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+
+    /// Current digest.
+    pub(crate) fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_order_sensitive_and_stable() {
+        let mut a = Fnv::new();
+        a.push(1);
+        a.push(2);
+        let mut b = Fnv::new();
+        b.push(2);
+        b.push(1);
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Fnv::new();
+        c.push(1);
+        c.push(2);
+        assert_eq!(a.finish(), c.finish());
+    }
+}

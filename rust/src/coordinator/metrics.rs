@@ -1,6 +1,11 @@
 //! Serving metrics: latency distributions, throughput, cache savings.
+//!
+//! All stamps are [`Stamp`]s on the scheduler's clock (wall or virtual),
+//! so under a virtual clock every latency figure here — TTFT included —
+//! is bit-reproducible from the workload seed.
 
-use std::time::{Duration, Instant};
+use super::clock::Stamp;
+use std::time::Duration;
 
 #[derive(Debug, Default, Clone)]
 /// Latency samples with mean/percentile reporting.
@@ -104,6 +109,10 @@ pub struct ServeMetrics {
     pub decode_step_latency: Histogram,
     /// enqueue-to-prefill wait
     pub queue_latency: Histogram,
+    /// true time-to-first-token: request arrival → first emitted token
+    /// (the first token is sampled from the prefill logits, so this is
+    /// queue wait + the request's share of its admission wave)
+    pub ttft: Histogram,
     /// admission waves processed (each admits >= 1 request; the
     /// one-launch-per-wave law is `prefill_launches == prefill_waves`
     /// when the artifact set has `{m}_prefill_b` and no wave exceeds
@@ -191,10 +200,18 @@ impl ServeMetrics {
     /// Record one admission wave: its size, the prefill launches it
     /// cost, and — from each admitted request's own `arrival` stamp —
     /// the real per-request queue wait to `start` (the moment the
-    /// wave's prefill began).  Staggered arrivals therefore record
-    /// distinct waits; `saturating_duration_since` guards the
-    /// degenerate case of an arrival stamped after the wave started.
-    pub fn record_wave(&mut self, start: Instant, arrivals: &[Instant], launches: u64) {
+    /// wave's prefill began) plus the true TTFT to `first_token` (the
+    /// moment the wave's prefill finished and its first tokens were
+    /// sampled).  Staggered arrivals therefore record distinct waits;
+    /// `saturating_since` guards the degenerate case of an arrival
+    /// stamped after the wave started.
+    pub fn record_wave(
+        &mut self,
+        start: Stamp,
+        first_token: Stamp,
+        arrivals: &[Stamp],
+        launches: u64,
+    ) {
         if arrivals.is_empty() {
             return;
         }
@@ -202,7 +219,8 @@ impl ServeMetrics {
         self.prefill_launches += launches;
         self.wave_admitted.record(arrivals.len() as u64);
         for &at in arrivals {
-            self.queue_latency.record(start.saturating_duration_since(at));
+            self.queue_latency.record(start.saturating_since(at));
+            self.ttft.record(first_token.saturating_since(at));
         }
     }
 
@@ -239,6 +257,14 @@ impl ServeMetrics {
             self.batch_efficiency() * 100.0,
             self.decode_rounds,
         );
+        if !self.ttft.is_empty() {
+            println!(
+                "  ttft ms: mean {:.1} p50 {:.1} p99 {:.1}",
+                self.ttft.mean_ms(),
+                self.ttft.percentile_ms(50.0),
+                self.ttft.percentile_ms(99.0),
+            );
+        }
         if self.prefill_waves > 0 {
             println!(
                 "  admission: {} waves / {} prefill launches  (mean {:.1} max {} admitted per wave)",
@@ -310,30 +336,49 @@ mod tests {
         // the old shared-enqueue stamp would have recorded one wait for
         // all of them; per-request arrivals must record the real spread
         let mut m = ServeMetrics::default();
-        let start = Instant::now();
-        let arrivals = [
-            start - Duration::from_millis(30),
-            start - Duration::from_millis(20),
-            start - Duration::from_millis(10),
-        ];
-        m.record_wave(start, &arrivals, 1);
+        let start = Stamp::from_ms(30);
+        let first_token = start + Duration::from_millis(4);
+        let arrivals = [Stamp::from_ms(0), Stamp::from_ms(10), Stamp::from_ms(20)];
+        m.record_wave(start, first_token, &arrivals, 1);
         assert_eq!(m.prefill_waves, 1);
         assert_eq!(m.prefill_launches, 1);
         assert_eq!(m.wave_admitted.total(), 3);
         assert_eq!(m.queue_latency.len(), 3);
-        assert!((m.queue_latency.mean_ms() - 20.0).abs() < 0.5);
-        assert!((m.queue_latency.percentile_ms(99.0) - 30.0).abs() < 0.5);
+        assert!((m.queue_latency.mean_ms() - 20.0).abs() < 1e-9);
+        assert!((m.queue_latency.percentile_ms(99.0) - 30.0).abs() < 1e-9);
         // a second wave for the straggler arriving mid-run
         let later = start + Duration::from_millis(5);
-        m.record_wave(later, &[start], 1);
+        m.record_wave(later, later, &[start], 1);
         assert_eq!(m.prefill_waves, 2);
         assert!((m.wave_admitted.mean() - 2.0).abs() < 1e-9);
         // arrivals stamped after the wave start clamp to zero wait
-        m.record_wave(start, &[start + Duration::from_millis(1)], 1);
+        m.record_wave(start, start, &[start + Duration::from_millis(1)], 1);
         assert_eq!(m.queue_latency.len(), 5);
         // empty waves record nothing
-        m.record_wave(start, &[], 1);
+        m.record_wave(start, start, &[], 1);
         assert_eq!(m.prefill_waves, 3);
+    }
+
+    #[test]
+    fn ttft_measures_arrival_to_first_token() {
+        // staggered trace: arrivals at 0/10/20 ms, wave prefill starts
+        // at 30 ms and its first tokens emerge at 34 ms — TTFT must be
+        // queue wait *plus* the wave's prefill time (34/24/14 ms), not
+        // the queue_latency figures (30/20/10 ms)
+        let mut m = ServeMetrics::default();
+        let start = Stamp::from_ms(30);
+        let first_token = Stamp::from_ms(34);
+        let arrivals = [Stamp::from_ms(0), Stamp::from_ms(10), Stamp::from_ms(20)];
+        m.record_wave(start, first_token, &arrivals, 1);
+        assert_eq!(m.ttft.len(), 3);
+        assert!((m.ttft.mean_ms() - 24.0).abs() < 1e-9);
+        assert!((m.ttft.percentile_ms(99.0) - 34.0).abs() < 1e-9);
+        assert!((m.ttft.percentile_ms(0.0) - 14.0).abs() < 1e-9);
+        // every TTFT sample strictly exceeds its queue wait by prefill
+        assert!(
+            (m.ttft.mean_ms() - m.queue_latency.mean_ms() - 4.0).abs() < 1e-9,
+            "ttft must exceed queue wait by exactly the wave prefill time"
+        );
     }
 
     #[test]

@@ -6,18 +6,23 @@
 //! staging (`resident`), and metrics.
 
 pub mod batcher;
+pub mod clock;
 pub mod effective;
+pub mod invariants;
 pub mod metrics;
 pub mod prefill;
 pub mod request;
 pub mod resident;
+pub mod scenario;
 pub mod scheduler;
 pub mod trace;
 
+pub use clock::{Clock, CostModel, Stamp};
 pub use effective::{
     BatchLatentDecoder, BatchedAdvance, BatchedStats, EffStats, EffTemplate, EffectiveCache,
     LatentDecoder,
 };
+pub use invariants::check_round;
 pub use metrics::{CountHistogram, ServeMetrics};
 pub use prefill::{
     AdmittedLane, LaneWiseMockPrefiller, PrefillWave, PromptTemplate, TemplateCache, WaveOutput,
@@ -25,4 +30,7 @@ pub use prefill::{
 };
 pub use request::{GenRequest, GenResponse, Sampling};
 pub use resident::{stage_copy_round, SlotArena};
-pub use scheduler::{ServeConfig, ServingEngine};
+pub use scenario::{
+    run_scenario, scenario_spec, standard_matrix, FaultPlan, Scenario, ScenarioReport,
+};
+pub use scheduler::{RunState, ServeConfig, ServingEngine};

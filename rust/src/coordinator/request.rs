@@ -1,6 +1,7 @@
 //! Request/response types for the serving path.
 
-use std::time::{Duration, Instant};
+use super::clock::Stamp;
+use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 /// Token selection policy.
@@ -25,17 +26,18 @@ pub struct GenRequest {
     /// stop generation at this byte (e.g. b'.'), in addition to the
     /// max_new_tokens budget
     pub stop_byte: Option<u8>,
-    /// when the request entered the system (defaults to construction
-    /// time).  The scheduler measures `queue_latency` from here to the
-    /// start of the request's prefill wave, so staggered arrivals get
-    /// their real individual waits — not one shared run-start stamp.
-    /// Replays of archived traces should restamp with [`GenRequest::at`]
-    /// at submission time.
-    pub arrival: Instant,
+    /// When the request entered the system, as a [`Stamp`] on the
+    /// serving clock.  `None` means "stamp me on receipt": the
+    /// scheduler/server fills it in with `clock.now()` the moment the
+    /// request is first seen.  Trace replay sets an explicit stamp so
+    /// `queue_latency`/TTFT reproduce bit-identically under a virtual
+    /// clock; under a virtual clock a future stamp also *gates*
+    /// admission — the request is not schedulable before its arrival.
+    pub arrival: Option<Stamp>,
 }
 
 impl GenRequest {
-    /// Greedy request with no stop byte, arriving now.
+    /// Greedy request with no stop byte, stamped on receipt.
     pub fn greedy(id: u64, prompt: &[u8], max_new_tokens: usize) -> GenRequest {
         GenRequest {
             id,
@@ -43,13 +45,13 @@ impl GenRequest {
             max_new_tokens,
             sampling: Sampling::Greedy,
             stop_byte: None,
-            arrival: Instant::now(),
+            arrival: None,
         }
     }
 
-    /// Same request with an explicit arrival time (trace replay, tests).
-    pub fn at(mut self, arrival: Instant) -> GenRequest {
-        self.arrival = arrival;
+    /// Same request with an explicit arrival stamp (trace replay, tests).
+    pub fn at(mut self, arrival: Stamp) -> GenRequest {
+        self.arrival = Some(arrival);
         self
     }
 }

@@ -129,6 +129,28 @@ impl SlotArena {
         self.b
     }
 
+    /// Slot → owning sequence, verbatim.  Inspection hook for the
+    /// scenario harness's coherence checks (owners must be live and
+    /// unparked, no sequence may own two slots).
+    pub fn assignments(&self) -> &[Option<u64>] {
+        &self.assign
+    }
+
+    /// Rows `[0, n)` of its slot that mirror a sequence's scratch, or
+    /// `None` when the sequence holds no watermark.  Inspection hook:
+    /// a watermark past the sequence's decoded rows means the mirror
+    /// claims data that was never produced.
+    pub fn synced_upto(&self, id: u64) -> Option<usize> {
+        self.synced.get(&id).copied()
+    }
+
+    /// Last-seen `(k, v)` region epochs.  Inspection hook: while the
+    /// regions are resident these must match the store's epochs, or the
+    /// arena is mirroring allocations that no longer exist.
+    pub fn region_epochs(&self) -> (u64, u64) {
+        self.epochs
+    }
+
     /// Release a sequence's slot (retirement or park): the slot frees
     /// up for reuse and is marked dirty, so the padding zero-fill is
     /// paid once on the next round that includes it — not every round.

@@ -1,0 +1,458 @@
+//! Deterministic scenario harness: named workloads, fault injection,
+//! and whole-stack invariant checking under a virtual clock
+//! (DESIGN.md §8).
+//!
+//! A [`Scenario`] names a workload shape (trace config + serving
+//! policy + [`FaultPlan`]); [`run_scenario`] serves it round by round
+//! through [`ServingEngine::begin`]/[`step`](ServingEngine::step),
+//! running [`check_round`] after **every** round — the ones that failed
+//! with an injected fault included — and folds the per-round state
+//! fingerprints into an invariant digest.  Everything runs on a
+//! [`Clock::virtual_with`] clock, so the resulting [`ScenarioReport`]
+//! (TTFT percentiles, throughput, digests — timing included) is a pure
+//! function of the scenario: the determinism contract is simply
+//! `run_scenario(a) == run_scenario(b)` for equal inputs, which the
+//! scenario test suite asserts via `PartialEq`.
+//!
+//! The harness is backend-agnostic: CI drives it with the deterministic
+//! [`crate::runtime::MockEngine`]; the same entry point accepts the
+//! real artifact [`crate::runtime::Engine`] when artifacts are present
+//! (`benches/scenarios.rs`).
+
+use super::clock::Clock;
+use super::invariants::{check_round, Fnv};
+use super::prefill::PrefillWave;
+use super::scheduler::{ServeConfig, ServingEngine};
+use super::trace::{generate, Arrival, TraceConfig};
+use crate::data::corpus::wiki;
+use crate::kvcache::CacheConfig;
+use crate::model::memory::CompressionPlan;
+use crate::model::{Arch, ModelSpec};
+use crate::runtime::backend::ExecBackend;
+use anyhow::{bail, Result};
+
+/// Faults to inject while a scenario runs.  All counters are one-shot
+/// ladders: each fault fires once at its scheduled occurrence, then
+/// clears — the scheduler must absorb the error transactionally and
+/// complete the workload anyway.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// fail the nth (1-based) prefill launch mid-wave
+    pub prefill_launch: Option<u64>,
+    /// fail the nth (1-based) decode-step launch mid-round
+    pub decode_launch: Option<u64>,
+    /// fail this many park attempts (before any state moves)
+    pub park: u32,
+    /// fail this many resume attempts (after unpark, exercising the
+    /// repark rollback)
+    pub resume: u32,
+    /// hard block-pool ceiling in **tokens** (priced at the plan's
+    /// `bytes_per_token` when the scenario runs): admission waves that
+    /// would allocate past it fail and must roll back — the
+    /// budget-exhaustion-at-admission lane
+    pub admission_budget_tokens: Option<usize>,
+}
+
+impl FaultPlan {
+    /// No faults.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+}
+
+/// One named scenario: a workload shape plus the serving policy and
+/// fault plan it runs under.  Budgets are in tokens so scenarios stay
+/// independent of the plan's byte sizes.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// scenario name (report key; bench JSON case label)
+    pub name: &'static str,
+    /// synthetic workload the scenario serves
+    pub trace: TraceConfig,
+    /// scheduler's target concurrent batch
+    pub max_batch: usize,
+    /// soft cache budget in tokens (× `bytes_per_token` at run time):
+    /// the park/resume watermark; `None` = unlimited
+    pub cache_budget_tokens: Option<usize>,
+    /// admission template-cache capacity override (template-pressure
+    /// scenarios); `None` keeps the default
+    pub template_capacity: Option<usize>,
+    /// serve in faithful per-step-reconstruct mode
+    pub faithful: bool,
+    /// cross-request prefix sharing (feature-off legs set `false`)
+    pub prefix_sharing: bool,
+    /// store-resident decode staging (feature-off legs set `false`)
+    pub resident_cache: bool,
+    /// batched admission prefill (feature-off legs set `false`)
+    pub batched_prefill: bool,
+    /// faults to inject
+    pub faults: FaultPlan,
+}
+
+impl Scenario {
+    /// A scenario over `trace` with default policy (batch 8, no
+    /// budgets, all features on, no faults).
+    pub fn new(name: &'static str, trace: TraceConfig) -> Scenario {
+        Scenario {
+            name,
+            trace,
+            max_batch: 8,
+            cache_budget_tokens: None,
+            template_capacity: None,
+            faithful: false,
+            prefix_sharing: true,
+            resident_cache: true,
+            batched_prefill: true,
+            faults: FaultPlan::none(),
+        }
+    }
+}
+
+/// Everything a scenario run reports.  Derives `PartialEq` because the
+/// determinism contract is literal equality: same scenario, same seed,
+/// same backend ⇒ the same report **bit for bit**, timing fields
+/// included (virtual clock).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioReport {
+    /// scenario name, echoed
+    pub name: String,
+    /// requests that completed with a response
+    pub completed: usize,
+    /// request ids rejected by the forward-progress valve (persistent
+    /// admission failure, e.g. budget exhaustion)
+    pub rejected: Vec<u64>,
+    /// scheduler rounds executed (failed rounds included)
+    pub rounds: u64,
+    /// invariant audits that ran (one per round)
+    pub invariant_checks: u64,
+    /// injected faults that actually surfaced as round errors
+    pub faults_injected: u64,
+    /// true time-to-first-token, median (virtual ms)
+    pub ttft_p50_ms: f64,
+    /// true time-to-first-token, p99 (virtual ms)
+    pub ttft_p99_ms: f64,
+    /// per-request decode throughput, median (tok/s, virtual time)
+    pub tok_s_p50: f64,
+    /// per-request decode throughput, p99 (tok/s, virtual time)
+    pub tok_s_p99: f64,
+    /// whole-run throughput (tok/s, virtual time)
+    pub throughput_tok_s: f64,
+    /// sequences parked under memory pressure
+    pub parks: u64,
+    /// parked sequences resumed
+    pub resumes: u64,
+    /// zero-launch admissions served from shared prefixes
+    pub shared_admissions: u64,
+    /// virtual wall-clock of the run in ms
+    pub virtual_ms: f64,
+    /// FNV digest over every response's id and token stream
+    pub tokens_digest: u64,
+    /// FNV digest folding every round's invariant-state fingerprint
+    pub invariant_digest: u64,
+}
+
+/// Model dimensions the mock-backed scenario matrix runs at: small
+/// enough that 24-request storms finish in milliseconds, large enough
+/// (3 layers, 48 positions, AE latents) that every subsystem — prefix
+/// trie, slot arena, host tier, batched prefill — does real work.
+pub fn scenario_spec() -> ModelSpec {
+    ModelSpec {
+        name: "mock".into(),
+        arch: Arch::Gpt2,
+        vocab: 64,
+        n_layer: 3,
+        d_model: 24,
+        n_head: 3,
+        n_kv_head: 3,
+        d_head: 8,
+        ffn_dim: 48,
+        max_seq: 48,
+        ae_hidden: 16,
+        ae_latent: 12,
+        bytes_per_el: 4,
+    }
+}
+
+/// The five named scenario workloads of the standard matrix (ISSUE
+/// archetypes: admission storm, template stress, budget-bound long
+/// tail, duplicate storm, mixed steady state), each with its fault
+/// plan.
+pub fn standard_matrix() -> Vec<Scenario> {
+    let mut bursty = Scenario::new(
+        "bursty_admission_storm",
+        TraceConfig {
+            n_requests: 24,
+            arrival: Arrival::Bursty {
+                size: 8,
+                period_ms: 50,
+            },
+            prompt_len_range: (8, 16),
+            max_new_range: (6, 12),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 11,
+        },
+    );
+    bursty.faults = FaultPlan {
+        prefill_launch: Some(2),
+        admission_budget_tokens: Some(320),
+        ..FaultPlan::none()
+    };
+
+    let mut template = Scenario::new(
+        "template_storm",
+        TraceConfig {
+            n_requests: 24,
+            arrival: Arrival::Poisson { rate: 200.0 },
+            prompt_len_range: (10, 20),
+            max_new_range: (4, 10),
+            temperature: None,
+            distinct_prompts: Some(3),
+            seed: 23,
+        },
+    );
+    template.template_capacity = Some(2);
+    template.faults = FaultPlan {
+        prefill_launch: Some(1),
+        decode_launch: Some(4),
+        ..FaultPlan::none()
+    };
+
+    let mut tail = Scenario::new(
+        "long_context_tail",
+        TraceConfig {
+            n_requests: 8,
+            arrival: Arrival::Batch,
+            prompt_len_range: (18, 24),
+            max_new_range: (12, 16),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 37,
+        },
+    );
+    tail.max_batch = 4;
+    tail.cache_budget_tokens = Some(120);
+    tail.faithful = true;
+    tail.faults = FaultPlan {
+        park: 1,
+        resume: 1,
+        ..FaultPlan::none()
+    };
+
+    let mut dup = Scenario::new(
+        "adversarial_duplicate_storm",
+        TraceConfig {
+            n_requests: 24,
+            arrival: Arrival::Bursty {
+                size: 6,
+                period_ms: 20,
+            },
+            prompt_len_range: (12, 18),
+            max_new_range: (4, 8),
+            temperature: None,
+            distinct_prompts: Some(1),
+            seed: 41,
+        },
+    );
+    dup.faults = FaultPlan {
+        prefill_launch: Some(1),
+        decode_launch: Some(2),
+        ..FaultPlan::none()
+    };
+
+    let mut steady = Scenario::new(
+        "mixed_steady_state",
+        TraceConfig {
+            n_requests: 20,
+            arrival: Arrival::Poisson { rate: 30.0 },
+            prompt_len_range: (8, 24),
+            max_new_range: (4, 14),
+            temperature: Some(0.8),
+            distinct_prompts: None,
+            seed: 53,
+        },
+    );
+    steady.faults = FaultPlan {
+        decode_launch: Some(6),
+        ..FaultPlan::none()
+    };
+
+    vec![bursty, template, tail, dup, steady]
+}
+
+/// Hard cap on scheduler rounds per scenario — a convergence guard,
+/// not a tuning knob (the standard matrix finishes in well under 200).
+const MAX_ROUNDS: u64 = 10_000;
+
+/// Serve one scenario to completion on `engine` and return its report.
+///
+/// The run is fully deterministic: a virtual clock is installed (so
+/// every latency figure is charged, not measured), faults are armed up
+/// front, and [`check_round`] audits the whole stack after every round
+/// — a fault that corrupts state fails the scenario with the full
+/// violation list rather than a skewed number.  A request whose
+/// admission fails twice consecutively (persistent budget exhaustion)
+/// is rejected and reported, so faults bound tail latency instead of
+/// hanging the run.
+pub fn run_scenario(
+    engine: &mut dyn ExecBackend,
+    model: &str,
+    sc: &Scenario,
+) -> Result<ScenarioReport> {
+    let spec = engine.model_spec(model)?;
+    let plan = CompressionPlan::ae_first_layers(&spec, (spec.n_layer / 2).max(1));
+    let bytes_per_token = {
+        let ccfg = CacheConfig::new(spec.clone(), plan.clone());
+        ccfg.bytes_per_token()
+    };
+    if let Some(n) = sc.faults.prefill_launch {
+        engine.inject_launch_fault("prefill", n);
+    }
+    if let Some(n) = sc.faults.decode_launch {
+        engine.inject_launch_fault("decode", n);
+    }
+    let mut cfg = if sc.faithful {
+        ServeConfig::faithful(plan)
+    } else {
+        ServeConfig::new(plan)
+    };
+    cfg.max_batch = sc.max_batch;
+    cfg.seed = sc.trace.seed;
+    cfg.cache_budget = sc.cache_budget_tokens.map(|t| t * bytes_per_token);
+    cfg.pool_budget = sc
+        .faults
+        .admission_budget_tokens
+        .map(|t| t * bytes_per_token);
+    cfg.prefix_sharing = sc.prefix_sharing;
+    cfg.resident_cache = sc.resident_cache;
+    cfg.batched_prefill = sc.batched_prefill;
+    let mut serving = ServingEngine::new(engine, model, cfg)?;
+    if let Some(cap) = sc.template_capacity {
+        serving.waves = PrefillWave::with_template_capacity(cap);
+    }
+    serving.set_clock(Clock::virtual_default());
+    serving.inject_tier_faults(sc.faults.park, sc.faults.resume);
+
+    let trace = generate(&sc.trace, &mut wiki(sc.trace.seed));
+    let requests: Vec<_> = trace.items.into_iter().map(|i| i.request).collect();
+    let mut state = serving.begin(requests);
+
+    let mut inv = Fnv::new();
+    let mut rounds = 0u64;
+    let mut invariant_checks = 0u64;
+    let mut faults_injected = 0u64;
+    let mut rejected: Vec<u64> = Vec::new();
+    let mut consecutive_errors = 0u32;
+    loop {
+        rounds += 1;
+        if rounds > MAX_ROUNDS {
+            bail!("scenario '{}' did not converge in {MAX_ROUNDS} rounds", sc.name);
+        }
+        let stepped = serving.step(&mut state);
+        // the audit runs after EVERY round — the transactional claim is
+        // precisely that a failed round leaves the stack coherent
+        let strict = stepped.is_ok();
+        let fp = check_round(&serving, &state, strict).map_err(|v| {
+            anyhow::anyhow!("scenario '{}' round {rounds} violated invariants:\n{v}", sc.name)
+        })?;
+        invariant_checks += 1;
+        inv.push(fp);
+        match stepped {
+            Ok(true) => consecutive_errors = 0,
+            Ok(false) => break,
+            Err(_) => {
+                faults_injected += 1;
+                consecutive_errors += 1;
+                // forward-progress valve: a request whose admission
+                // keeps failing (hard budget exhaustion) is rejected
+                // rather than retried forever; the threshold is above
+                // the worst back-to-back one-shot fault chain so only
+                // *persistent* failures reject
+                if consecutive_errors >= 3 {
+                    if let Some(id) = state.reject_head() {
+                        rejected.push(id);
+                    }
+                    consecutive_errors = 0;
+                }
+                if state.is_finished() {
+                    break;
+                }
+            }
+        }
+    }
+    let responses = serving.finish(state);
+
+    let mut tokens = Fnv::new();
+    tokens.push(responses.len() as u64);
+    for r in &responses {
+        tokens.push(r.id);
+        tokens.push(r.output.len() as u64);
+        for &b in &r.output {
+            tokens.push(b as u64);
+        }
+    }
+    let mut tok_s: Vec<f64> = responses.iter().map(|r| r.tokens_per_sec()).collect();
+    tok_s.sort_by(|a, b| a.partial_cmp(b).expect("throughputs are finite"));
+    let pct = |v: &[f64], p: f64| -> f64 {
+        if v.is_empty() {
+            return 0.0;
+        }
+        v[((v.len() - 1) as f64 * p / 100.0).round() as usize]
+    };
+    let m = &serving.metrics;
+    Ok(ScenarioReport {
+        name: sc.name.to_string(),
+        completed: responses.len(),
+        rejected,
+        rounds,
+        invariant_checks,
+        faults_injected,
+        ttft_p50_ms: m.ttft.percentile_ms(50.0),
+        ttft_p99_ms: m.ttft.percentile_ms(99.0),
+        tok_s_p50: pct(&tok_s, 50.0),
+        tok_s_p99: pct(&tok_s, 99.0),
+        throughput_tok_s: m.throughput_tok_per_sec(),
+        parks: m.auto_parks,
+        resumes: m.auto_resumes,
+        shared_admissions: m.shared_admissions,
+        virtual_ms: m.wall.as_secs_f64() * 1e3,
+        tokens_digest: tokens.finish(),
+        invariant_digest: inv.finish(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_names_are_distinct_and_stable() {
+        let names: Vec<&str> = standard_matrix().iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            [
+                "bursty_admission_storm",
+                "template_storm",
+                "long_context_tail",
+                "adversarial_duplicate_storm",
+                "mixed_steady_state",
+            ]
+        );
+    }
+
+    #[test]
+    fn every_matrix_scenario_injects_at_least_one_fault() {
+        for sc in standard_matrix() {
+            let f = &sc.faults;
+            assert!(
+                f.prefill_launch.is_some()
+                    || f.decode_launch.is_some()
+                    || f.park > 0
+                    || f.resume > 0
+                    || f.admission_budget_tokens.is_some(),
+                "scenario '{}' has no fault plan",
+                sc.name
+            );
+        }
+    }
+}

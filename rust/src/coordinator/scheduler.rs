@@ -58,6 +58,7 @@
 //! `rebuild_full`) once memory frees (DESIGN.md §4).
 
 use super::batcher::{plan_parking, plan_resume, plan_round, BatcherConfig};
+use super::clock::{Clock, Stamp};
 use super::effective::{BatchLatentDecoder, BatchedAdvance, EffectiveCache, LatentDecoder};
 use super::metrics::ServeMetrics;
 use super::prefill::{PrefillWave, WaveOutput, WavePrefiller};
@@ -68,12 +69,12 @@ use crate::kvcache::tier::HostTier;
 use crate::kvcache::{CacheConfig, CacheManager, Format};
 use crate::model::memory::CompressionPlan;
 use crate::model::ModelSpec;
-use crate::runtime::{Engine, Store, Tensor};
-use crate::util::json::Json;
+use crate::runtime::backend::ExecBackend;
+use crate::runtime::{Store, Tensor};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Serving engine configuration: the compression plan plus batching,
 /// reconstruction, and memory-pressure policy.
@@ -128,6 +129,14 @@ pub struct ServeConfig {
     /// prefill is a pure function of the clamped prompt — so `false`
     /// only serves as the O(requests) launch/byte baseline.
     pub prefix_sharing: bool,
+    /// hard byte ceiling on the cache manager's block pool
+    /// ([`CacheManager::with_budget`]): allocations past it **fail**,
+    /// surfacing at admission as a failed — and transactionally rolled
+    /// back — wave.  Distinct from `cache_budget`, the *soft* watermark
+    /// that parks sequences through the host tier; the scenario
+    /// harness uses this to prove admission-time budget exhaustion
+    /// leaks nothing.  `None` = unbounded pool.
+    pub pool_budget: Option<usize>,
     /// block encoding for raw (non-latent) stored rows.  `F16` is the
     /// default for new serving configs (the paper's fp16 serving
     /// assumption — half the raw-row bytes).  **Interaction with
@@ -177,6 +186,7 @@ impl ServeConfig {
             device_residency: true,
             batched_prefill: true,
             prefix_sharing: true,
+            pool_budget: None,
             raw_format: Format::F16,
         }
     }
@@ -201,32 +211,37 @@ impl ServeConfig {
     }
 }
 
-struct ActiveSeq {
-    req: GenRequest,
-    cache_id: u64,
+/// One in-flight sequence in the scheduler's active set (crate-visible
+/// so the invariant checker can audit the live set against the cache
+/// manager, slot arena, and host tier).
+pub(crate) struct ActiveSeq {
+    pub(crate) req: GenRequest,
+    pub(crate) cache_id: u64,
     /// position the next decode step writes (prompt_len + generated - 1
     /// is the last written; see step accounting in decode_round)
-    pos: usize,
-    next_token: u8,
-    output: Vec<u8>,
-    prefill_start: Instant,
-    prefill_end: Instant,
-    decode_time: std::time::Duration,
-    done: bool,
+    pub(crate) pos: usize,
+    pub(crate) next_token: u8,
+    pub(crate) output: Vec<u8>,
+    pub(crate) prefill_start: Stamp,
+    pub(crate) prefill_end: Stamp,
+    pub(crate) decode_time: Duration,
+    pub(crate) done: bool,
     /// admission order (monotone): parking victims are chosen
     /// latest-admitted-first, resumes oldest-first
-    admit_seq: u64,
+    pub(crate) admit_seq: u64,
     /// spilled to the host tier by admission control; skipped by decode
     /// rounds until resumed
-    parked: bool,
+    pub(crate) parked: bool,
 }
 
 /// The prefill/decode scheduler: continuous batching over the
 /// compressed KV cache, batch-first faithful reconstruction, and
 /// automatic park/resume through the host tier under memory pressure.
 pub struct ServingEngine<'e> {
-    /// PJRT runtime executing the AOT artifacts
-    pub engine: &'e mut Engine,
+    /// execution backend: the PJRT artifact runtime in production, the
+    /// deterministic [`crate::runtime::MockEngine`] in the scenario
+    /// harness and server tests
+    pub engine: &'e mut dyn ExecBackend,
     /// store threading parameters and staging tensors through calls
     pub store: Store,
     /// runtime model dimensions (from the manifest)
@@ -251,41 +266,43 @@ pub struct ServingEngine<'e> {
     /// owner of the store-resident `k_cache`/`v_cache` staging regions:
     /// stable slot assignment, sync watermarks, dirty-padding bits
     pub arena: SlotArena,
-    eff: HashMap<u64, EffectiveCache>,
+    /// serving clock: wall time by default, virtual (charge-driven,
+    /// bit-reproducible) under [`ServingEngine::set_clock`]
+    pub(crate) clock: Clock,
+    pub(crate) eff: HashMap<u64, EffectiveCache>,
     decode_batches: Vec<usize>,
     admit_counter: u64,
     rng: Rng,
+    /// one-shot injected tier faults (scenario harness)
+    park_faults: u32,
+    resume_faults: u32,
 }
 
 impl<'e> ServingEngine<'e> {
     /// Build a serving engine for `model` over an initialized runtime
     /// engine: loads parameters, validates the plan, and derives the
     /// compiled decode batch sizes from the manifest.
-    pub fn new(engine: &'e mut Engine, model: &str, cfg: ServeConfig) -> Result<Self> {
+    pub fn new(engine: &'e mut dyn ExecBackend, model: &str, cfg: ServeConfig) -> Result<Self> {
         let mut store = Store::new();
         engine.load_params(model, &mut store)?;
-        let spec = ModelSpec::from_manifest(&engine.manifest.raw, model)?;
+        let spec = engine.model_spec(model)?;
         cfg.plan
             .validate()
             .map_err(|e| anyhow!("invalid plan: {e}"))?;
         let masks = to_masks(&cfg.plan);
-        let decode_batches: Vec<usize> = engine
-            .manifest
-            .raw
-            .get("models")
-            .and_then(|m| m.get(model))
-            .and_then(|m| m.get("decode_batches"))
-            .and_then(Json::as_arr)
-            .map(|a| a.iter().filter_map(Json::as_usize).collect())
-            .unwrap_or_else(|| vec![1, 8]);
+        let decode_batches = engine.decode_batches(model);
         let mut ccfg = CacheConfig::new(spec.clone(), cfg.plan.clone());
         ccfg.raw_format = cfg.raw_format;
-        let cache = CacheManager::new(ccfg);
+        let cache = match cfg.pool_budget {
+            Some(b) => CacheManager::with_budget(ccfg, b),
+            None => CacheManager::new(ccfg),
+        };
         let seed = cfg.seed;
         // re-derived per construction (not &&= — engines are reused
         // across serving configs); the env kill-switch stays authoritative
-        engine.use_device_residency =
-            cfg.device_residency && std::env::var("KVCAR_NO_DEVICE_RESIDENCY").is_err();
+        engine.set_device_residency(
+            cfg.device_residency && std::env::var("KVCAR_NO_DEVICE_RESIDENCY").is_err(),
+        );
         let mut s = ServingEngine {
             engine,
             store,
@@ -299,13 +316,39 @@ impl<'e> ServingEngine<'e> {
             batched: BatchedAdvance::new(),
             waves: PrefillWave::new(),
             arena: SlotArena::new(),
+            clock: Clock::wall(),
             eff: HashMap::new(),
             decode_batches,
             admit_counter: 0,
             rng: Rng::new(seed ^ 0x5E47E),
+            park_faults: 0,
+            resume_faults: 0,
         };
         s.apply_masks();
         Ok(s)
+    }
+
+    /// Replace the serving clock.  With a virtual clock every latency,
+    /// TTFT, and throughput figure becomes a pure function of the
+    /// workload and the clock's [`super::clock::CostModel`] —
+    /// bit-reproducible run over run (the scenario harness's
+    /// determinism contract).  Arrival stamps on waiting requests then
+    /// also *gate* admission: a request is not schedulable before its
+    /// trace arrival.
+    pub fn set_clock(&mut self, clock: Clock) {
+        self.clock = clock;
+    }
+
+    /// Arm one-shot tier faults: the next `park` park attempts and the
+    /// next `resume` resume attempts fail with an injected error (then
+    /// the counters drain).  A park fault fires *before* any state
+    /// moves; a resume fault fires after the tier handed its bytes back
+    /// and exercises the repark rollback — either way the scheduler's
+    /// accounting must stay coherent, which the invariant checker
+    /// asserts after the error surfaces.
+    pub fn inject_tier_faults(&mut self, park: u32, resume: u32) {
+        self.park_faults = park;
+        self.resume_faults = resume;
     }
 
     fn apply_masks(&mut self) {
@@ -370,12 +413,16 @@ impl<'e> ServingEngine<'e> {
         if reqs.is_empty() {
             return Ok(Vec::new());
         }
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         let launches_before = self.waves.stats.launches;
         let shared_before = (
             self.waves.stats.shared_admissions,
             self.waves.stats.shared_rows,
         );
+        let rows_total: usize = reqs
+            .iter()
+            .map(|r| r.prompt.len().clamp(1, self.spec.max_seq - 1))
+            .sum();
         let prompts: Vec<&[u8]> = reqs.iter().map(|r| r.prompt.as_slice()).collect();
         let mut runner = ArtifactPrefiller {
             engine: &mut *self.engine,
@@ -395,19 +442,25 @@ impl<'e> ServingEngine<'e> {
         )?;
         self.metrics.shared_admissions +=
             self.waves.stats.shared_admissions - shared_before.0;
-        self.metrics.shared_prefix_rows += self.waves.stats.shared_rows - shared_before.1;
-        let now = Instant::now();
-        let arrivals: Vec<Instant> = reqs.iter().map(|r| r.arrival).collect();
-        self.metrics.record_wave(
-            t0,
-            &arrivals,
-            self.waves.stats.launches - launches_before,
-        );
+        let shared_rows = self.waves.stats.shared_rows - shared_before.1;
+        self.metrics.shared_prefix_rows += shared_rows;
+        let launches = self.waves.stats.launches - launches_before;
+        // virtual clock: price the wave by what actually launched —
+        // shared-prefix rows cost no prefill work (that IS the sharing
+        // win, and it must show up in virtual TTFT too)
+        let costs = self.clock.costs();
+        self.clock.charge(costs.prefill_cost(
+            launches,
+            rows_total.saturating_sub(shared_rows as usize),
+        ));
+        let now = self.clock.now();
+        let arrivals: Vec<Stamp> = reqs.iter().map(|r| r.arrival.unwrap_or(t0)).collect();
+        self.metrics.record_wave(t0, now, &arrivals, launches);
         let mut out = Vec::with_capacity(reqs.len());
         for (req, lane) in reqs.into_iter().zip(admitted) {
             let plen = req.prompt.len().clamp(1, self.spec.max_seq - 1);
             let first = self.sample(&lane.logits, req.sampling);
-            self.metrics.prefill_latency.record(now - t0);
+            self.metrics.prefill_latency.record(now.saturating_since(t0));
             self.metrics.tokens_generated += 1; // prefill samples the first token
             self.admit_counter += 1;
             let mut seq = ActiveSeq {
@@ -417,7 +470,7 @@ impl<'e> ServingEngine<'e> {
                 output: vec![first],
                 prefill_start: t0,
                 prefill_end: now,
-                decode_time: std::time::Duration::ZERO,
+                decode_time: Duration::ZERO,
                 done: false,
                 admit_seq: self.admit_counter,
                 parked: false,
@@ -482,6 +535,12 @@ impl<'e> ServingEngine<'e> {
     /// shrinks, and the transfer cost is paid on the real compressed
     /// volume, which is the paper's composition-with-offloading claim).
     pub fn park_sequence(&mut self, cache_id: u64) -> Result<Duration> {
+        if self.park_faults > 0 {
+            // injected before any state moves: a failed park must leave
+            // the sequence fully live (scenario-harness fault lane)
+            self.park_faults -= 1;
+            return Err(anyhow!("injected park fault for sequence {cache_id}"));
+        }
         anyhow::ensure!(
             !self.tier.is_parked(cache_id),
             "sequence {cache_id} already parked (double-evict would corrupt tier accounting)"
@@ -501,6 +560,14 @@ impl<'e> ServingEngine<'e> {
             .tier
             .unpark(cache_id)
             .ok_or_else(|| anyhow!("sequence {cache_id} not parked"))?;
+        if self.resume_faults > 0 {
+            // injected between unpark and restore: exercises the repark
+            // rollback, after which the tier must account the sequence
+            // exactly as before the attempt
+            self.resume_faults -= 1;
+            self.tier.repark(cache_id, bytes);
+            return Err(anyhow!("injected resume fault for sequence {cache_id}"));
+        }
         if let Err(e) = self.cache.restore_sequence_bytes(cache_id, &bytes) {
             // undo: payload survives and the tier stats are reversed, so
             // the failed attempt leaves no phantom transfer accounting
@@ -523,7 +590,7 @@ impl<'e> ServingEngine<'e> {
         // the round timer starts before reconstruction so the measured
         // decode_step_latency includes the retrieval work the incremental
         // path optimizes (BENCH_decode_hotpath.json tracks this number)
-        let t0 = Instant::now();
+        let t0 = self.clock.now();
         if self.cfg.per_step_reconstruct {
             // batch-first incremental faithful reconstruction: every live
             // sequence's pending watermark row is packed into one
@@ -615,7 +682,9 @@ impl<'e> ServingEngine<'e> {
         }
         let entry = format!("{}_decode_step_b{}", self.model, b);
         let out = self.engine.execute(&entry, &self.store)?;
-        let round = t0.elapsed();
+        let costs = self.clock.costs();
+        self.clock.charge(costs.decode_cost(rows));
+        let round = self.clock.now().saturating_since(t0);
         self.metrics.decode_rounds += 1;
         self.metrics.decode_slots_used += rows as u64;
         self.metrics.decode_slots_total += b as u64;
@@ -682,7 +751,7 @@ impl<'e> ServingEngine<'e> {
             // their real waits, not a shared run-start timestamp
             queue_latency: seq
                 .prefill_start
-                .saturating_duration_since(seq.req.arrival),
+                .saturating_since(seq.req.arrival.unwrap_or(seq.prefill_start)),
         }
     }
 
@@ -691,7 +760,7 @@ impl<'e> ServingEngine<'e> {
     /// sequences, so summing them per sequence would overstate the
     /// budget; per-sequence park victims still free only their own
     /// suffix bytes, which is what `seq_stored_bytes` measures).
-    fn live_cache_bytes(&self, active: &[ActiveSeq]) -> usize {
+    pub(crate) fn live_cache_bytes(&self, active: &[ActiveSeq]) -> usize {
         active
             .iter()
             .filter(|s| !s.parked)
@@ -745,7 +814,8 @@ impl<'e> ServingEngine<'e> {
             resume.push(list[0].0); // forced: guarantee progress
         }
         for id in resume {
-            self.resume_sequence(id)?;
+            let cost = self.resume_sequence(id)?;
+            self.clock.charge(cost);
             active.iter_mut().find(|s| s.cache_id == id).unwrap().parked = false;
             self.metrics.auto_resumes += 1;
         }
@@ -800,7 +870,8 @@ impl<'e> ServingEngine<'e> {
         live.sort_by_key(|l| l.0);
         let list: Vec<(u64, usize, usize)> = live.iter().map(|l| (l.1, l.2, l.3)).collect();
         for id in plan_parking(budget, self.headroom(), &list) {
-            self.park_sequence(id)?;
+            let cost = self.park_sequence(id)?;
+            self.clock.charge(cost);
             active.iter_mut().find(|s| s.cache_id == id).unwrap().parked = true;
             self.metrics.auto_parks += 1;
         }
@@ -811,87 +882,167 @@ impl<'e> ServingEngine<'e> {
     /// each round's wave of new requests through one batched prefill
     /// launch whenever decode slots free up, and under a cache budget
     /// automatically park/resume sequences through the host tier.
+    ///
+    /// Convenience wrapper over the resumable loop:
+    /// [`ServingEngine::begin`] → [`ServingEngine::step`] until drained
+    /// → [`ServingEngine::finish`].  The scenario harness drives the
+    /// three pieces itself so it can run invariant checks between
+    /// rounds and keep going past injected faults.
     pub fn run(&mut self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
-        let t0 = Instant::now();
-        let dev0 = self.device_traffic();
+        let mut state = self.begin(requests);
+        while self.step(&mut state)? {}
+        Ok(self.finish(state))
+    }
+
+    /// Start a serving run: stamp unstamped requests with the current
+    /// clock (trace-replayed requests keep their explicit arrivals) and
+    /// snapshot the clock/device-traffic baselines the run's metrics
+    /// are deltas against.
+    pub fn begin(&mut self, requests: Vec<GenRequest>) -> RunState {
+        let t0 = self.clock.now();
         let mut waiting: VecDeque<GenRequest> = requests.into();
-        let mut active: Vec<ActiveSeq> = Vec::new();
-        let mut done: Vec<GenResponse> = Vec::new();
+        for r in waiting.iter_mut() {
+            r.arrival.get_or_insert(t0);
+        }
         let bcfg = BatcherConfig {
             max_batch: self.cfg.max_batch,
             decode_batches: self.decode_batches.clone(),
             cache_budget: self.cfg.cache_budget,
         };
-        loop {
-            self.resume_under_budget(&mut active)?;
-            // admit through the batcher's tested admission planner
-            // (slots + worst-case budget projection); when nothing holds
-            // a slot the head request is admitted regardless so an
-            // over-budget request still runs
-            // plan_round only ever admits a prefix within max_batch, so
-            // metadata for the queue head suffices
-            let waiting_meta: Vec<(usize, usize)> = waiting
-                .iter()
-                .take(self.cfg.max_batch)
-                .map(|r| (r.prompt.len(), r.max_new_tokens))
-                .collect();
-            let plan = plan_round(
-                &bcfg,
-                &self.spec,
-                &self.cfg.plan,
-                active.len(),
-                self.live_cache_bytes(&active),
-                &waiting_meta,
-            );
-            let admit = if active.is_empty() && !waiting.is_empty() {
-                plan.admit.max(1)
-            } else {
-                plan.admit
+        RunState {
+            waiting,
+            active: Vec::new(),
+            done: Vec::new(),
+            bcfg,
+            t0,
+            dev0: self.device_traffic(),
+        }
+    }
+
+    /// Execute one scheduler round: resume parked work under the
+    /// budget, admit the due wave through one batched prefill launch,
+    /// decode every live sequence once, park under pressure, and retire
+    /// finished sequences.  Returns whether work remains.
+    ///
+    /// **Transactional on error:** a failed admission wave pushes its
+    /// requests back to the front of the queue (the wave itself already
+    /// rolled back its cache state — `PrefillWave::admit_wave` frees
+    /// every sequence it created), and failed decode/park/resume rounds
+    /// mutate nothing a later round cannot retry — which is exactly
+    /// what the scenario harness's invariant checks assert after every
+    /// injected fault.
+    pub fn step(&mut self, state: &mut RunState) -> Result<bool> {
+        self.resume_under_budget(&mut state.active)?;
+        // under a virtual clock, trace arrivals gate admission: only
+        // the FIFO prefix that has actually arrived is schedulable, and
+        // an idle scheduler jumps straight to the next arrival (wall
+        // clocks keep the old behavior — everything handed in is due)
+        let due = if self.clock.is_virtual() {
+            let now = self.clock.now();
+            let due_prefix = |q: &VecDeque<GenRequest>, at: Stamp| {
+                q.iter()
+                    .take_while(|r| r.arrival.unwrap_or(at) <= at)
+                    .count()
             };
-            // the whole wave prefills through one launch (prefill_b)
-            let wave: Vec<GenRequest> = waiting.drain(..admit).collect();
-            let live_before = active.iter().filter(|s| !s.done && !s.parked).count();
-            active.extend(self.admit_wave(wave, live_before)?);
-            if active.is_empty() {
-                break;
+            let mut due = due_prefix(&state.waiting, now);
+            if due == 0 && state.active.is_empty() && !state.waiting.is_empty() {
+                let next = state.waiting[0].arrival.unwrap_or(now);
+                self.clock.advance_to(next);
+                due = due_prefix(&state.waiting, self.clock.now());
             }
-            self.decode_round(&mut active)?;
-            self.park_under_pressure(&mut active)?;
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].done {
-                    let seq = active.swap_remove(i);
-                    done.push(self.retire(seq));
-                } else {
-                    i += 1;
+            due
+        } else {
+            state.waiting.len()
+        };
+        // admit through the batcher's tested admission planner
+        // (slots + worst-case budget projection); when nothing holds
+        // a slot the head request is admitted regardless so an
+        // over-budget request still runs
+        // plan_round only ever admits a prefix within max_batch, so
+        // metadata for the queue head suffices
+        let waiting_meta: Vec<(usize, usize)> = state
+            .waiting
+            .iter()
+            .take(due.min(self.cfg.max_batch))
+            .map(|r| (r.prompt.len(), r.max_new_tokens))
+            .collect();
+        let plan = plan_round(
+            &state.bcfg,
+            &self.spec,
+            &self.cfg.plan,
+            state.active.len(),
+            self.live_cache_bytes(&state.active),
+            &waiting_meta,
+        );
+        let admit = if state.active.is_empty() && due > 0 {
+            plan.admit.max(1)
+        } else {
+            plan.admit
+        };
+        // the whole wave prefills through one launch (prefill_b)
+        let wave: Vec<GenRequest> = state.waiting.drain(..admit).collect();
+        let live_before = state
+            .active
+            .iter()
+            .filter(|s| !s.done && !s.parked)
+            .count();
+        let backup = wave.clone();
+        match self.admit_wave(wave, live_before) {
+            Ok(admitted) => state.active.extend(admitted),
+            Err(e) => {
+                // requeue in original order so the failed wave is
+                // invisible to scheduling except for the error itself
+                for r in backup.into_iter().rev() {
+                    state.waiting.push_front(r);
                 }
-            }
-            if active.is_empty() && waiting.is_empty() {
-                break;
+                return Err(e);
             }
         }
-        self.metrics.wall += t0.elapsed();
+        if state.active.is_empty() {
+            return Ok(!state.waiting.is_empty());
+        }
+        self.decode_round(&mut state.active)?;
+        self.park_under_pressure(&mut state.active)?;
+        let mut i = 0;
+        while i < state.active.len() {
+            if state.active[i].done {
+                let seq = state.active.swap_remove(i);
+                let resp = self.retire(seq);
+                state.done.push(resp);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(!(state.active.is_empty() && state.waiting.is_empty()))
+    }
+
+    /// Close out a run: fold the run's clock and device-traffic deltas
+    /// into [`ServeMetrics`] and return the completed responses sorted
+    /// by request id.
+    pub fn finish(&mut self, state: RunState) -> Vec<GenResponse> {
+        self.metrics.wall += self.clock.now().saturating_since(state.t0);
         let dev1 = self.device_traffic();
         let m = &mut self.metrics;
         for (total, at0, at1) in [
-            (&mut m.input_bytes, dev0.0, dev1.0),
-            (&mut m.output_bytes, dev0.1, dev1.1),
-            (&mut m.resident_bytes_uploaded, dev0.2, dev1.2),
-            (&mut m.resident_bytes_skipped, dev0.3, dev1.3),
-            (&mut m.full_uploads, dev0.4, dev1.4),
-            (&mut m.buffers_evicted, dev0.5, dev1.5),
+            (&mut m.input_bytes, state.dev0.0, dev1.0),
+            (&mut m.output_bytes, state.dev0.1, dev1.1),
+            (&mut m.resident_bytes_uploaded, state.dev0.2, dev1.2),
+            (&mut m.resident_bytes_skipped, state.dev0.3, dev1.3),
+            (&mut m.full_uploads, state.dev0.4, dev1.4),
+            (&mut m.buffers_evicted, state.dev0.5, dev1.5),
         ] {
             *total += at1 - at0;
         }
+        let mut done = state.done;
         done.sort_by_key(|r| r.id);
-        Ok(done)
+        done
     }
 
     /// The engine's cumulative device-traffic counters, snapshotted at
     /// the ends of [`ServingEngine::run`] so the run's delta lands in
     /// [`ServeMetrics`] (the engine may be shared across runs).
     fn device_traffic(&self) -> (u64, u64, u64, u64, u64, u64) {
-        let s = &self.engine.stats;
+        let s = self.engine.stats();
         (
             s.input_bytes,
             s.output_bytes,
@@ -900,6 +1051,62 @@ impl<'e> ServingEngine<'e> {
             s.full_uploads,
             s.buffers_evicted,
         )
+    }
+}
+
+/// In-flight state of one serving run, produced by
+/// [`ServingEngine::begin`] and advanced one scheduler round at a time
+/// by [`ServingEngine::step`].  Owning this separately from the engine
+/// is what lets the scenario harness interleave whole-stack invariant
+/// checks (and keep stepping past injected faults) between rounds.
+pub struct RunState {
+    waiting: VecDeque<GenRequest>,
+    active: Vec<ActiveSeq>,
+    done: Vec<GenResponse>,
+    bcfg: BatcherConfig,
+    t0: Stamp,
+    dev0: (u64, u64, u64, u64, u64, u64),
+}
+
+impl RunState {
+    /// Requests still queued for admission.
+    pub fn n_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Sequences currently admitted (parked ones included).
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Responses completed so far.
+    pub fn n_done(&self) -> usize {
+        self.done.len()
+    }
+
+    /// Whether the run has fully drained.
+    pub fn is_finished(&self) -> bool {
+        self.active.is_empty() && self.waiting.is_empty()
+    }
+
+    /// Drop the queue-head request (the one a persistent admission
+    /// fault keeps failing on) and return its id; `None` when the
+    /// queue is empty.  The scenario harness's forward-progress valve:
+    /// after repeated wave failures the head is rejected rather than
+    /// retried forever.
+    pub fn reject_head(&mut self) -> Option<u64> {
+        self.waiting.pop_front().map(|r| r.id)
+    }
+
+    /// The live set, for the invariant checker.
+    pub(crate) fn active_seqs(&self) -> &[ActiveSeq] {
+        &self.active
+    }
+
+    /// Completed responses so far, for the invariant checker's
+    /// conservation laws.
+    pub(crate) fn done_responses(&self) -> &[GenResponse] {
+        &self.done
     }
 }
 
@@ -921,7 +1128,7 @@ impl<'e> ServingEngine<'e> {
 /// path) and the engine's version-keyed device cache re-uploads only
 /// what changed.
 struct ArtifactDecoder<'a> {
-    engine: &'a mut Engine,
+    engine: &'a mut dyn ExecBackend,
     store: &'a mut Store,
     model: &'a str,
     spec: &'a ModelSpec,
@@ -945,7 +1152,7 @@ impl LatentDecoder for ArtifactDecoder<'_> {
         debug_assert_eq!(k_lat.len(), l * n * dl);
         debug_assert_eq!(k_rec.len(), l * n * kvd);
         let entry_t = format!("{}_decode_kv_t", self.model);
-        if n == 1 && self.engine.manifest.entries.contains_key(&entry_t) {
+        if n == 1 && self.engine.has_entry(&entry_t) {
             self.store
                 .insert_view("k_lat", vec![l, 1, dl])
                 .copy_from_slice(k_lat);
@@ -990,12 +1197,7 @@ impl LatentDecoder for ArtifactDecoder<'_> {
 impl BatchLatentDecoder for ArtifactDecoder<'_> {
     fn batch_capacity(&self) -> Option<usize> {
         let entry = format!("{}_decode_kv_bt", self.model);
-        self.engine
-            .manifest
-            .entries
-            .get(&entry)
-            .and_then(|e| e.inputs.iter().find(|io| io.name == "k_lat"))
-            .and_then(|io| io.shape.first().copied())
+        self.engine.entry_lanes(&entry, "k_lat")
     }
 
     fn decode_latents_batch_into(
@@ -1050,7 +1252,7 @@ impl BatchLatentDecoder for ArtifactDecoder<'_> {
 /// executed output tensors are handed to the planner as-is
 /// (`WaveOutput` borrows lanes out of them — no per-lane copies).
 struct ArtifactPrefiller<'a> {
-    engine: &'a mut Engine,
+    engine: &'a mut dyn ExecBackend,
     store: &'a mut Store,
     model: &'a str,
     spec: &'a ModelSpec,
@@ -1065,12 +1267,7 @@ impl WavePrefiller for ArtifactPrefiller<'_> {
             return None;
         }
         let entry = format!("{}_prefill_b", self.model);
-        self.engine
-            .manifest
-            .entries
-            .get(&entry)
-            .and_then(|e| e.inputs.iter().find(|io| io.name == "tokens"))
-            .and_then(|io| io.shape.first().copied())
+        self.engine.entry_lanes(&entry, "tokens")
     }
 
     fn prefill_wave(&mut self, prompts: &[(&[u8], usize)]) -> Result<WaveOutput> {

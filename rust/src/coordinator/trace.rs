@@ -8,12 +8,13 @@
 //! Traces serialize to JSON so a run can be archived in EXPERIMENTS.md
 //! and replayed bit-identically.
 
+use super::clock::Stamp;
 use super::request::{GenRequest, Sampling};
 use crate::data::corpus::Corpus;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 /// Request arrival process for synthetic workloads.
@@ -39,6 +40,10 @@ pub struct TraceConfig {
     pub max_new_range: (usize, usize),
     /// None = greedy, Some(t) = temperature sampling
     pub temperature: Option<f32>,
+    /// Some(n): draw every prompt from a pre-generated pool of `n`
+    /// distinct prompts (template/duplicate-storm workloads exercising
+    /// the prefix trie); None: every prompt is fresh
+    pub distinct_prompts: Option<usize>,
     /// trace rng seed (traces are reproducible)
     pub seed: u64,
 }
@@ -51,6 +56,7 @@ impl Default for TraceConfig {
             prompt_len_range: (12, 32),
             max_new_range: (16, 48),
             temperature: None,
+            distinct_prompts: None,
             seed: 0,
         }
     }
@@ -76,6 +82,17 @@ pub struct Trace {
 /// (deterministic per seed).
 pub fn generate(cfg: &TraceConfig, corpus: &mut Corpus) -> Trace {
     let mut rng = Rng::new(cfg.seed ^ 0x7ACE);
+    // Template workloads draw from a fixed prompt pool so the prefix
+    // trie sees genuine duplicates.
+    let pool: Vec<Vec<u8>> = match cfg.distinct_prompts {
+        Some(n) if n > 0 => (0..n)
+            .map(|_| {
+                let plen = rng.range(cfg.prompt_len_range.0, cfg.prompt_len_range.1 + 1);
+                corpus.tokens(plen)
+            })
+            .collect(),
+        _ => Vec::new(),
+    };
     let mut items = Vec::with_capacity(cfg.n_requests);
     let mut t = Duration::ZERO;
     for i in 0..cfg.n_requests {
@@ -90,22 +107,31 @@ pub fn generate(cfg: &TraceConfig, corpus: &mut Corpus) -> Trace {
             }
             Arrival::Batch => {}
         }
-        let plen = rng.range(cfg.prompt_len_range.0, cfg.prompt_len_range.1 + 1);
+        let prompt = if pool.is_empty() {
+            let plen = rng.range(cfg.prompt_len_range.0, cfg.prompt_len_range.1 + 1);
+            corpus.tokens(plen)
+        } else {
+            pool[rng.below(pool.len())].clone()
+        };
         let max_new = rng.range(cfg.max_new_range.0, cfg.max_new_range.1 + 1);
+        // quantize to the whole microseconds to_json stores, so a
+        // serialized trace replays with bit-identical arrival stamps
+        let at = Duration::from_micros(t.as_micros() as u64);
         items.push(TraceItem {
-            at: t,
+            at,
             request: GenRequest {
                 id: i as u64,
-                prompt: corpus.tokens(plen),
+                prompt,
                 max_new_tokens: max_new,
                 sampling: match cfg.temperature {
                     Some(temp) => Sampling::Temperature(temp),
                     None => Sampling::Greedy,
                 },
                 stop_byte: None,
-                // replays restamp at submission (GenRequest::at); the
-                // generation-time stamp only covers direct `run` calls
-                arrival: Instant::now(),
+                // the trace offset IS the arrival: under a virtual
+                // clock the scheduler gates admission on it, so replay
+                // reproduces identical queue_latency/TTFT numbers
+                arrival: Some(Stamp::from_duration(at)),
             },
         });
     }
@@ -173,7 +199,7 @@ impl Trace {
                         .ok_or_else(|| anyhow!("trace item missing max_new"))?,
                     sampling,
                     stop_byte: None,
-                    arrival: Instant::now(),
+                    arrival: Some(Stamp::from_duration(at)),
                 },
             });
         }
@@ -185,6 +211,7 @@ impl Trace {
 mod tests {
     use super::*;
     use crate::data::corpus::wiki;
+    use crate::prop_assert;
 
     #[test]
     fn deterministic_generation() {
@@ -258,5 +285,66 @@ mod tests {
             assert_eq!(a.request.max_new_tokens, b.request.max_new_tokens);
             assert_eq!(a.at.as_micros(), b.at.as_micros());
         }
+    }
+
+    #[test]
+    fn json_roundtrip_property() {
+        // random TraceConfig -> generate -> serialize -> parse -> equal,
+        // arrival stamps included (the replay-determinism contract)
+        crate::util::prop::check(40, |rng| {
+            let arrival = match rng.below(3) {
+                0 => Arrival::Poisson {
+                    rate: 1.0 + rng.f64() * 200.0,
+                },
+                1 => Arrival::Bursty {
+                    size: rng.range(1, 6),
+                    period_ms: rng.range(1, 250) as u64,
+                },
+                _ => Arrival::Batch,
+            };
+            let plo = rng.range(1, 12);
+            let mlo = rng.range(1, 8);
+            let cfg = TraceConfig {
+                n_requests: rng.below(12),
+                arrival,
+                prompt_len_range: (plo, plo + rng.below(12)),
+                max_new_range: (mlo, mlo + rng.below(8)),
+                temperature: if rng.bool(0.5) {
+                    Some(rng.f32() * 1.5 + 0.05)
+                } else {
+                    None
+                },
+                distinct_prompts: if rng.bool(0.3) {
+                    Some(rng.range(1, 4))
+                } else {
+                    None
+                },
+                seed: rng.next_u64(),
+            };
+            let t = generate(&cfg, &mut wiki(cfg.seed));
+            let t2 = Trace::from_json(&Json::parse(&t.to_json().to_string()).unwrap())
+                .map_err(|e| format!("parse failed: {e}"))?;
+            prop_assert!(t.items.len() == t2.items.len(), "length changed");
+            for (a, b) in t.items.iter().zip(&t2.items) {
+                prop_assert!(a.at == b.at, "at drifted: {:?} vs {:?}", a.at, b.at);
+                prop_assert!(a.request.id == b.request.id, "id changed");
+                prop_assert!(a.request.prompt == b.request.prompt, "prompt changed");
+                prop_assert!(
+                    a.request.max_new_tokens == b.request.max_new_tokens,
+                    "max_new changed"
+                );
+                prop_assert!(
+                    a.request.sampling == b.request.sampling,
+                    "sampling drifted: {:?} vs {:?}",
+                    a.request.sampling,
+                    b.request.sampling
+                );
+                prop_assert!(
+                    a.request.arrival == b.request.arrival,
+                    "arrival stamp drifted"
+                );
+            }
+            Ok(())
+        });
     }
 }

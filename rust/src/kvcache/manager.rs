@@ -422,6 +422,17 @@ impl CacheManager {
         self.seqs.len()
     }
 
+    /// Ids of every tracked sequence, sorted.  Inspection hook for the
+    /// scenario harness's leak checks: after any (possibly failed)
+    /// scheduler round, this set must equal the scheduler's own active
+    /// set — a sequence here with no owner is a leak, one missing is a
+    /// dangling handle.
+    pub fn sequence_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.seqs.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Register an empty sequence; returns its id.
     pub fn create_sequence(&mut self) -> u64 {
         let id = self.next_id;

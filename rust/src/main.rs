@@ -249,7 +249,7 @@ fn run(args: &Args) -> Result<()> {
                         max_new_tokens: args.usize("max-new", 32),
                         sampling: Sampling::Greedy,
                         stop_byte: None,
-                        arrival: std::time::Instant::now(),
+                        arrival: None,
                     }
                 })
                 .collect();

@@ -1,0 +1,105 @@
+//! Execution-backend abstraction over the AOT artifact runtime.
+//!
+//! The coordinator's scheduler drives everything through this trait so
+//! the same serving loop runs against the real PJRT [`Engine`] or the
+//! deterministic [`crate::runtime::MockEngine`] (scenario harness,
+//! server tests, CI without artifacts).  The trait is deliberately
+//! narrow: entry execution, parameter loading, and the handful of
+//! manifest lookups the scheduler performs (model dimensions, compiled
+//! decode batch rungs, entry presence and lane capacity).
+
+use super::engine::{Engine, EngineStats};
+use super::store::Store;
+use super::tensor::Tensor;
+use crate::model::ModelSpec;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// What the scheduler needs from an execution runtime.
+pub trait ExecBackend {
+    /// Execute one compiled entry point against the store's staged
+    /// inputs, returning its named outputs in the entry's positional
+    /// order.
+    fn execute(&mut self, entry: &str, store: &Store) -> Result<Vec<(String, Tensor)>>;
+
+    /// Load the model's parameter tensors into `store`; returns the
+    /// number of tensors loaded.
+    fn load_params(&mut self, model: &str, store: &mut Store) -> Result<usize>;
+
+    /// Runtime model dimensions for `model`.
+    fn model_spec(&self, model: &str) -> Result<ModelSpec>;
+
+    /// Compiled decode batch rungs for `model`, smallest first.
+    fn decode_batches(&self, model: &str) -> Vec<usize>;
+
+    /// Whether the artifact set has a compiled entry of this name.
+    fn has_entry(&self, entry: &str) -> bool;
+
+    /// First-dimension capacity of `input` on `entry` (the compiled
+    /// lane/batch capacity of `{m}_prefill_b` / `{m}_decode_kv_bt`);
+    /// `None` when the entry or input is absent.
+    fn entry_lanes(&self, entry: &str, input: &str) -> Option<usize>;
+
+    /// Toggle device residency for resident store regions (delta
+    /// uploads on, full re-uploads off).
+    fn set_device_residency(&mut self, on: bool);
+
+    /// Cumulative execution/traffic counters.
+    fn stats(&self) -> &EngineStats;
+
+    /// Arm a one-shot launch fault: the `nth` (1-based) subsequent
+    /// execution of the given kind (`"prefill"` / `"decode"`) fails
+    /// with an injected error, then the fault clears.  Returns whether
+    /// the backend supports injection (the real engine does not — its
+    /// failures are real).  The scenario harness uses this to prove the
+    /// scheduler's transactional guarantees hold mid-wave and mid-round.
+    fn inject_launch_fault(&mut self, kind: &str, nth: u64) -> bool {
+        let _ = (kind, nth);
+        false
+    }
+}
+
+impl ExecBackend for Engine {
+    fn execute(&mut self, entry: &str, store: &Store) -> Result<Vec<(String, Tensor)>> {
+        Engine::execute(self, entry, store)
+    }
+
+    fn load_params(&mut self, model: &str, store: &mut Store) -> Result<usize> {
+        Engine::load_params(self, model, store)
+    }
+
+    fn model_spec(&self, model: &str) -> Result<ModelSpec> {
+        ModelSpec::from_manifest(&self.manifest.raw, model)
+    }
+
+    fn decode_batches(&self, model: &str) -> Vec<usize> {
+        self.manifest
+            .raw
+            .get("models")
+            .and_then(|m| m.get(model))
+            .and_then(|m| m.get("decode_batches"))
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_else(|| vec![1, 8])
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        self.manifest.entries.contains_key(entry)
+    }
+
+    fn entry_lanes(&self, entry: &str, input: &str) -> Option<usize> {
+        self.manifest
+            .entries
+            .get(entry)
+            .and_then(|e| e.inputs.iter().find(|io| io.name == input))
+            .and_then(|io| io.shape.first().copied())
+    }
+
+    fn set_device_residency(&mut self, on: bool) {
+        self.use_device_residency = on;
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+}

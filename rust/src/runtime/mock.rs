@@ -1,0 +1,540 @@
+//! Deterministic in-process mock of the artifact runtime.
+//!
+//! [`MockEngine`] implements [`ExecBackend`] with closed-form tensors —
+//! no artifacts, no device, no wall clock — so the whole serving stack
+//! (wave admission, prefix sharing, resident staging, faithful
+//! reconstruction, park/resume) runs end-to-end in unit tests and the
+//! scenario harness.  The numeric recipes deliberately mirror the
+//! coordinator's existing pure mocks:
+//!
+//! * prefill entries reproduce `LaneWiseMockPrefiller` bitwise (same
+//!   `val` hash per element), so a mock-backed `ServingEngine` produces
+//!   exactly the tensors the wave-prefill tests pin;
+//! * `{m}_decode_kv*` entries reproduce `RowWiseMockDecoder` bitwise;
+//! * `{m}_decode_step_b{B}` derives each slot's new rows from the same
+//!   `val` hash keyed on (token, position), and perturbs its logits
+//!   with a digest of the slot's *staged* `k_cache`/`v_cache` rows —
+//!   a staging bug (wrong slot, missed sync, stale epoch) changes the
+//!   sampled token stream instead of passing silently.
+//!
+//! The mock also honors the store's resident-region protocol: it drains
+//! dirty-span logs for `k_cache`/`v_cache` like the real engine and
+//! accounts uploaded/skipped bytes, so device-residency metrics and the
+//! `KVCAR_NO_DEVICE_RESIDENCY` leg behave the same way under test.
+
+use super::backend::ExecBackend;
+use super::engine::EngineStats;
+use super::store::Store;
+use super::tensor::Tensor;
+use crate::model::ModelSpec;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Deterministic artifact-free execution backend (see module docs).
+pub struct MockEngine {
+    spec: ModelSpec,
+    decode_batches: Vec<usize>,
+    /// compiled lane capacity of `{m}_prefill_b`; `None` simulates an
+    /// artifact set without the batched entry
+    prefill_capacity: Option<usize>,
+    /// compiled batch capacity of `{m}_decode_kv_bt`
+    kv_bt_capacity: Option<usize>,
+    /// whether the token-granular `{m}_decode_kv_t` entry exists
+    granular_decode_kv: bool,
+    device_residency: bool,
+    stats: EngineStats,
+    /// one-shot prefill-launch fault: fails the nth next prefill call
+    fail_prefill_in: Option<u64>,
+    /// one-shot decode-launch fault: fails the nth next decode_step call
+    fail_decode_in: Option<u64>,
+    /// last-seen store versions of resident regions (dirty-span drain)
+    last_versions: BTreeMap<String, u64>,
+}
+
+impl MockEngine {
+    /// Mock runtime for `spec` with the full entry ladder: batched
+    /// prefill (capacity 8), decode rungs `[1, 2, 4, 8]`, and all three
+    /// latent-decoder entries.
+    pub fn new(spec: ModelSpec) -> MockEngine {
+        MockEngine {
+            spec,
+            decode_batches: vec![1, 2, 4, 8],
+            prefill_capacity: Some(8),
+            kv_bt_capacity: Some(8),
+            granular_decode_kv: true,
+            device_residency: true,
+            stats: EngineStats::default(),
+            fail_prefill_in: None,
+            fail_decode_in: None,
+            last_versions: BTreeMap::new(),
+        }
+    }
+
+    /// Same per-element hash as `LaneWiseMockPrefiller::val` — the two
+    /// must agree bitwise (pinned by a unit test below) so mock-backed
+    /// serving and the wave-prefill tests pin identical tensors.
+    fn val(tag: u32, byte: u8, layer: usize, t: usize, j: usize) -> f32 {
+        let h = tag
+            .wrapping_mul(0x9E37)
+            .wrapping_add(byte as u32 * 131)
+            .wrapping_add(layer as u32 * 31)
+            .wrapping_add(t as u32 * 7)
+            .wrapping_add(j as u32);
+        ((h % 2003) as f32 - 1001.0) / 257.0
+    }
+
+    /// Same per-row map as `RowWiseMockDecoder::decode_rows`.
+    fn decode_rows(&self, lat: &[f32], rec: &mut [f32]) {
+        let dl = self.spec.ae_latent;
+        for (row_lat, row_rec) in lat
+            .chunks_exact(dl)
+            .zip(rec.chunks_exact_mut(self.spec.kv_dim()))
+        {
+            for (j, o) in row_rec.iter_mut().enumerate() {
+                *o = row_lat[j % dl] * 0.5 + row_lat[(j * 7 + 1) % dl] * 0.25;
+            }
+        }
+    }
+
+    /// FNV-1a over a sparse sample of one slot's staged cache rows
+    /// (layers × {first, last} row × {first, middle} element).  Folded
+    /// into the slot's logits so any staging corruption shifts argmax.
+    fn slot_digest(cache: &[f32], slot: usize, l: usize, s: usize, kvd: usize, p: usize) -> u32 {
+        let mut h: u32 = 0x811C_9DC5;
+        for layer in 0..l {
+            for t in [0usize, p.saturating_sub(1)] {
+                for j in [0usize, kvd / 2] {
+                    let v = cache[slot * l * s * kvd + layer * s * kvd + t * kvd + j];
+                    h = (h ^ v.to_bits()).wrapping_mul(0x0100_0193);
+                }
+            }
+        }
+        h
+    }
+
+    /// Decrement a one-shot fault counter; `Err` exactly when it hits
+    /// its armed call.
+    fn tick_fault(counter: &mut Option<u64>, what: &str) -> Result<()> {
+        if let Some(n) = *counter {
+            if n <= 1 {
+                *counter = None;
+                bail!("injected {what} launch fault");
+            }
+            *counter = Some(n - 1);
+        }
+        Ok(())
+    }
+
+    fn prefill(&mut self, store: &Store, cap: usize) -> Result<Vec<(String, Tensor)>> {
+        Self::tick_fault(&mut self.fail_prefill_in, "prefill")?;
+        let (l, s, kvd, dl, v) = (
+            self.spec.n_layer,
+            self.spec.max_seq,
+            self.spec.kv_dim(),
+            self.spec.ae_latent,
+            self.spec.vocab,
+        );
+        let tokens = store.get("tokens")?.as_i32()?;
+        let mask = store.get("len_mask")?.as_f32()?;
+        anyhow::ensure!(
+            tokens.len() == cap * s && mask.len() == cap * s,
+            "prefill inputs must be [{cap}, {s}]"
+        );
+        let mut bufs: [Vec<f32>; 7] = [
+            vec![0.0; cap * v],
+            vec![0.0; cap * l * s * kvd],
+            vec![0.0; cap * l * s * kvd],
+            vec![0.0; cap * l * s * dl],
+            vec![0.0; cap * l * s * dl],
+            vec![0.0; cap * l * s * kvd],
+            vec![0.0; cap * l * s * kvd],
+        ];
+        for lane in 0..cap {
+            // a lane's prompt length is its mask's support; dead lanes
+            // (all-zero mask) stay zero, like the compiled graph
+            let plen = mask[lane * s..(lane + 1) * s]
+                .iter()
+                .filter(|&&m| m != 0.0)
+                .count();
+            if plen == 0 {
+                continue;
+            }
+            let byte = |t: usize| tokens[lane * s + t] as u8;
+            for layer in 0..l {
+                for t in 0..plen {
+                    for j in 0..kvd {
+                        let base = lane * l * s * kvd + layer * s * kvd + t * kvd + j;
+                        bufs[1][base] = Self::val(1, byte(t), layer, t, j);
+                        bufs[2][base] = Self::val(2, byte(t), layer, t, j);
+                        bufs[5][base] = Self::val(5, byte(t), layer, t, j);
+                        bufs[6][base] = Self::val(6, byte(t), layer, t, j);
+                    }
+                    for j in 0..dl {
+                        let base = lane * l * s * dl + layer * s * dl + t * dl + j;
+                        bufs[3][base] = Self::val(3, byte(t), layer, t, j);
+                        bufs[4][base] = Self::val(4, byte(t), layer, t, j);
+                    }
+                }
+            }
+            for j in 0..v {
+                bufs[0][lane * v + j] = Self::val(7, byte(plen - 1), plen, j, j);
+            }
+        }
+        let names = ["logits", "k_raw", "v_raw", "k_lat", "v_lat", "k_eff", "v_eff"];
+        let shapes: [Vec<usize>; 7] = [
+            vec![cap, v],
+            vec![cap, l, s, kvd],
+            vec![cap, l, s, kvd],
+            vec![cap, l, s, dl],
+            vec![cap, l, s, dl],
+            vec![cap, l, s, kvd],
+            vec![cap, l, s, kvd],
+        ];
+        Ok(names
+            .iter()
+            .zip(shapes)
+            .zip(bufs)
+            .map(|((n, shape), data)| (n.to_string(), Tensor::f32(shape, data)))
+            .collect())
+    }
+
+    fn decode_step(&mut self, store: &Store, b: usize) -> Result<Vec<(String, Tensor)>> {
+        Self::tick_fault(&mut self.fail_decode_in, "decode")?;
+        let (l, s, kvd, dl, v) = (
+            self.spec.n_layer,
+            self.spec.max_seq,
+            self.spec.kv_dim(),
+            self.spec.ae_latent,
+            self.spec.vocab,
+        );
+        let token = store.get("token")?.as_i32()?;
+        let pos = store.get("pos")?.as_i32()?;
+        let k_cache = store.get("k_cache")?.as_f32()?;
+        let v_cache = store.get("v_cache")?.as_f32()?;
+        anyhow::ensure!(
+            token.len() == b && pos.len() == b && k_cache.len() == b * l * s * kvd,
+            "decode_step inputs must be shaped for batch {b}"
+        );
+        self.drain_region_writes(store, b * l * s * kvd);
+        let mut logits = vec![0.0f32; b * v];
+        let mut k_lat = vec![0.0f32; b * l * dl];
+        let mut v_lat = vec![0.0f32; b * l * dl];
+        let mut k_raw = vec![0.0f32; b * l * kvd];
+        let mut v_raw = vec![0.0f32; b * l * kvd];
+        let mut k_eff = vec![0.0f32; b * l * kvd];
+        let mut v_eff = vec![0.0f32; b * l * kvd];
+        for slot in 0..b {
+            let (tok, p) = (token[slot] as u8, pos[slot] as usize);
+            if p == 0 {
+                continue; // padding slot
+            }
+            // the new token's rows: same hash as a prefill of a prompt
+            // whose byte at position p is `tok`
+            for layer in 0..l {
+                for j in 0..kvd {
+                    let base = slot * l * kvd + layer * kvd + j;
+                    k_raw[base] = Self::val(1, tok, layer, p, j);
+                    v_raw[base] = Self::val(2, tok, layer, p, j);
+                    k_eff[base] = Self::val(5, tok, layer, p, j);
+                    v_eff[base] = Self::val(6, tok, layer, p, j);
+                }
+                for j in 0..dl {
+                    let base = slot * l * dl + layer * dl + j;
+                    k_lat[base] = Self::val(3, tok, layer, p, j);
+                    v_lat[base] = Self::val(4, tok, layer, p, j);
+                }
+            }
+            // fold the staged cache into the logits so a staging bug
+            // anywhere upstream changes the sampled token stream
+            let dk = Self::slot_digest(k_cache, slot, l, s, kvd, p);
+            let dv = Self::slot_digest(v_cache, slot, l, s, kvd, p);
+            let h = dk ^ dv.rotate_left(16);
+            for j in 0..v {
+                logits[slot * v + j] =
+                    Self::val(7, tok, p, j, j) + ((h >> (j % 25)) & 0x7) as f32 * 2e-3;
+            }
+        }
+        Ok(vec![
+            ("logits".into(), Tensor::f32(vec![b, v], logits)),
+            ("k_lat".into(), Tensor::f32(vec![b, l, dl], k_lat)),
+            ("v_lat".into(), Tensor::f32(vec![b, l, dl], v_lat)),
+            ("k_raw".into(), Tensor::f32(vec![b, l, kvd], k_raw)),
+            ("v_raw".into(), Tensor::f32(vec![b, l, kvd], v_raw)),
+            ("k_eff".into(), Tensor::f32(vec![b, l, kvd], k_eff)),
+            ("v_eff".into(), Tensor::f32(vec![b, l, kvd], v_eff)),
+        ])
+    }
+
+    /// Consume the resident k/v regions' dirty-span logs exactly like
+    /// the real engine's upload path, and account the delta-vs-full
+    /// traffic so residency metrics are meaningful under test.
+    fn drain_region_writes(&mut self, store: &Store, region_elems: usize) {
+        for name in ["k_cache", "v_cache"] {
+            if !store.is_resident_region(name) {
+                continue;
+            }
+            let cur = store.version(name);
+            let since = self.last_versions.get(name).copied().unwrap_or(0);
+            let full_bytes = (region_elems * 4) as u64;
+            if self.device_residency {
+                match store.take_region_writes(name, since) {
+                    Some(spans) => {
+                        let moved: u64 =
+                            spans.iter().map(|&(a, b)| ((b - a) * 4) as u64).sum();
+                        self.stats.resident_bytes_uploaded += moved;
+                        self.stats.resident_bytes_skipped += full_bytes.saturating_sub(moved);
+                    }
+                    None => {
+                        self.stats.resident_bytes_uploaded += full_bytes;
+                        self.stats.full_uploads += 1;
+                    }
+                }
+            } else if cur != since {
+                self.stats.resident_bytes_uploaded += full_bytes;
+                self.stats.full_uploads += 1;
+            } else {
+                self.stats.resident_bytes_skipped += full_bytes;
+            }
+            self.last_versions.insert(name.to_string(), cur);
+        }
+    }
+
+    fn decode_kv(&mut self, store: &Store, shape: &[usize]) -> Result<Vec<(String, Tensor)>> {
+        let kvd = self.spec.kv_dim();
+        let k_lat = store.get("k_lat")?.as_f32()?;
+        let v_lat = store.get("v_lat")?.as_f32()?;
+        let elems: usize = shape.iter().product();
+        anyhow::ensure!(
+            k_lat.len() == elems && v_lat.len() == elems,
+            "decode_kv latent inputs must be {shape:?}"
+        );
+        let rows = elems / self.spec.ae_latent;
+        let mut out_shape: Vec<usize> = shape.to_vec();
+        *out_shape.last_mut().unwrap() = kvd;
+        let mut k_rec = vec![0.0f32; rows * kvd];
+        let mut v_rec = vec![0.0f32; rows * kvd];
+        self.decode_rows(k_lat, &mut k_rec);
+        self.decode_rows(v_lat, &mut v_rec);
+        Ok(vec![
+            ("k_rec".into(), Tensor::f32(out_shape.clone(), k_rec)),
+            ("v_rec".into(), Tensor::f32(out_shape, v_rec)),
+        ])
+    }
+}
+
+impl ExecBackend for MockEngine {
+    fn execute(&mut self, entry: &str, store: &Store) -> Result<Vec<(String, Tensor)>> {
+        let suffix = entry
+            .strip_prefix(&format!("{}_", self.spec.name))
+            .ok_or_else(|| anyhow!("mock has no entry '{entry}'"))?
+            .to_string();
+        let (l, s, dl) = (self.spec.n_layer, self.spec.max_seq, self.spec.ae_latent);
+        let out = match suffix.as_str() {
+            "prefill" => self.prefill(store, 1),
+            "prefill_b" => {
+                let cap = self
+                    .prefill_capacity
+                    .ok_or_else(|| anyhow!("mock has no entry '{entry}'"))?;
+                self.prefill(store, cap)
+            }
+            "decode_kv" => self.decode_kv(store, &[l, s, dl]),
+            "decode_kv_t" if self.granular_decode_kv => self.decode_kv(store, &[l, 1, dl]),
+            "decode_kv_bt" => {
+                let cap = self
+                    .kv_bt_capacity
+                    .ok_or_else(|| anyhow!("mock has no entry '{entry}'"))?;
+                self.decode_kv(store, &[cap, l, 1, dl])
+            }
+            _ => match suffix
+                .strip_prefix("decode_step_b")
+                .and_then(|n| n.parse::<usize>().ok())
+                .filter(|b| self.decode_batches.contains(b))
+            {
+                Some(b) => self.decode_step(store, b),
+                None => Err(anyhow!("mock has no entry '{entry}'")),
+            },
+        }?;
+        self.stats.executions += 1;
+        let out_bytes: u64 = out.iter().map(|(_, t)| t.byte_len() as u64).sum();
+        self.stats.output_bytes += out_bytes;
+        let e = self.stats.entry_mut(entry);
+        e.executions += 1;
+        e.output_bytes += out_bytes;
+        Ok(out)
+    }
+
+    fn load_params(&mut self, _model: &str, _store: &mut Store) -> Result<usize> {
+        Ok(0) // the closed-form entries consume no parameters
+    }
+
+    fn model_spec(&self, model: &str) -> Result<ModelSpec> {
+        anyhow::ensure!(
+            model == self.spec.name,
+            "mock serves '{}', not '{model}'",
+            self.spec.name
+        );
+        Ok(self.spec.clone())
+    }
+
+    fn decode_batches(&self, _model: &str) -> Vec<usize> {
+        self.decode_batches.clone()
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        let Some(suffix) = entry.strip_prefix(&format!("{}_", self.spec.name)) else {
+            return false;
+        };
+        match suffix {
+            "prefill" | "decode_kv" => true,
+            "prefill_b" => self.prefill_capacity.is_some(),
+            "decode_kv_t" => self.granular_decode_kv,
+            "decode_kv_bt" => self.kv_bt_capacity.is_some(),
+            _ => suffix
+                .strip_prefix("decode_step_b")
+                .and_then(|n| n.parse::<usize>().ok())
+                .is_some_and(|b| self.decode_batches.contains(&b)),
+        }
+    }
+
+    fn entry_lanes(&self, entry: &str, input: &str) -> Option<usize> {
+        if !self.has_entry(entry) {
+            return None;
+        }
+        let suffix = entry.strip_prefix(&format!("{}_", self.spec.name))?;
+        match (suffix, input) {
+            ("prefill_b", "tokens" | "len_mask" | "last") => self.prefill_capacity,
+            ("prefill", "tokens" | "len_mask") => Some(1),
+            ("decode_kv_bt", "k_lat" | "v_lat") => self.kv_bt_capacity,
+            _ => suffix
+                .strip_prefix("decode_step_b")
+                .and_then(|n| n.parse::<usize>().ok()),
+        }
+    }
+
+    fn set_device_residency(&mut self, on: bool) {
+        self.device_residency = on;
+    }
+
+    fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    fn inject_launch_fault(&mut self, kind: &str, nth: u64) -> bool {
+        match kind {
+            "prefill" => {
+                self.fail_prefill_in = Some(nth.max(1));
+                true
+            }
+            "decode" => {
+                self.fail_decode_in = Some(nth.max(1));
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::prefill::{LaneWiseMockPrefiller, WavePrefiller};
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "mock".into(),
+            arch: crate::model::Arch::Gpt2,
+            vocab: 64,
+            n_layer: 3,
+            d_model: 24,
+            n_head: 3,
+            n_kv_head: 3,
+            d_head: 8,
+            ffn_dim: 48,
+            max_seq: 32,
+            ae_hidden: 16,
+            ae_latent: 12,
+            bytes_per_el: 4,
+        }
+    }
+
+    #[test]
+    fn prefill_matches_lane_wise_mock_bitwise() {
+        let spec = tiny_spec();
+        let mut engine = MockEngine::new(spec.clone());
+        let mut store = Store::new();
+        let prompt: &[u8] = b"hello world";
+        let s = spec.max_seq;
+        {
+            let tokens = store.insert_view_i32_zeroed("tokens", vec![1, s]);
+            for (t, &b) in prompt.iter().enumerate() {
+                tokens[t] = b as i32;
+            }
+        }
+        {
+            let mask = store.insert_view_zeroed("len_mask", vec![1, s]);
+            mask[..prompt.len()].fill(1.0);
+        }
+        store.insert("last", Tensor::scalar_i32(prompt.len() as i32 - 1));
+        let out = engine.execute("mock_prefill", &store).unwrap();
+        let mut reference = LaneWiseMockPrefiller::for_spec(&spec);
+        let wave = reference.prefill_one(prompt, prompt.len()).unwrap();
+        for (i, (name, t)) in out.iter().enumerate() {
+            let lane = wave.lane(i, 0).unwrap();
+            let got = t.as_f32().unwrap();
+            assert!(
+                got.len() == lane.len()
+                    && got.iter().zip(lane).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "output {i} ({name}) must match LaneWiseMockPrefiller bitwise"
+            );
+        }
+    }
+
+    #[test]
+    fn decode_kv_matches_row_wise_mock_bitwise() {
+        let spec = tiny_spec();
+        let (l, dl, kvd) = (spec.n_layer, spec.ae_latent, spec.kv_dim());
+        let mut engine = MockEngine::new(spec.clone());
+        let mut store = Store::new();
+        let lat: Vec<f32> = (0..l * dl).map(|i| (i as f32) * 0.03 - 1.0).collect();
+        store
+            .insert_view("k_lat", vec![l, 1, dl])
+            .copy_from_slice(&lat);
+        store
+            .insert_view("v_lat", vec![l, 1, dl])
+            .copy_from_slice(&lat);
+        let out = engine.execute("mock_decode_kv_t", &store).unwrap();
+        let reference = crate::coordinator::effective::RowWiseMockDecoder::for_spec(&spec);
+        let mut k_rec = vec![0.0f32; l * kvd];
+        let mut v_rec = vec![0.0f32; l * kvd];
+        use crate::coordinator::effective::LatentDecoder;
+        let mut r = reference;
+        r.decode_latents_into(&lat, &lat, l, &mut k_rec, &mut v_rec)
+            .unwrap();
+        // decode_latents_into treats n as rows-per-layer; with one row
+        // per layer the layouts coincide
+        assert_eq!(out[0].1.as_f32().unwrap().len(), l * kvd);
+        for (a, b) in out[0].1.as_f32().unwrap().iter().zip(&k_rec) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn launch_faults_fire_once_then_clear() {
+        let spec = tiny_spec();
+        let mut engine = MockEngine::new(spec.clone());
+        assert!(engine.inject_launch_fault("prefill", 2));
+        assert!(!engine.inject_launch_fault("compile", 1));
+        let mut store = Store::new();
+        store.insert_view_i32_zeroed("tokens", vec![1, spec.max_seq]);
+        let mask = store.insert_view_zeroed("len_mask", vec![1, spec.max_seq]);
+        mask[..4].fill(1.0);
+        store.insert("last", Tensor::scalar_i32(3));
+        assert!(engine.execute("mock_prefill", &store).is_ok());
+        let err = engine.execute("mock_prefill", &store);
+        assert!(err.is_err(), "second prefill must hit the armed fault");
+        assert!(
+            engine.execute("mock_prefill", &store).is_ok(),
+            "fault is one-shot"
+        );
+    }
+}

@@ -1,14 +1,18 @@
 //! PJRT runtime: manifest + params loading, HLO-text compilation, and
 //! named-tensor execution of the AOT artifacts.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod mock;
 pub mod residency;
 pub mod store;
 pub mod tensor;
 
+pub use backend::ExecBackend;
 pub use engine::{Engine, EngineStats, EntryTraffic};
 pub use manifest::{DType, EntrySpec, IoSpec, Manifest};
+pub use mock::MockEngine;
 pub use residency::{BufferCache, DeviceBackend, MirrorBackend};
 pub use store::Store;
 pub use tensor::Tensor;

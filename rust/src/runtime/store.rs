@@ -364,6 +364,21 @@ impl Store {
         Some(std::mem::take(&mut log.spans))
     }
 
+    /// Read-only peek at a resident region's pending dirty spans
+    /// without consuming the log (the consumer's `take_region_writes`
+    /// cursor is unaffected).  `None` when the region has no
+    /// coverage-complete log.  Inspection hook for the scenario
+    /// harness: pending spans must always be sorted, disjoint, and
+    /// in-bounds for the region.
+    pub fn region_spans(&self, name: &str) -> Option<Vec<(usize, usize)>> {
+        let logs = self.region_writes.borrow();
+        let log = logs.get(name)?;
+        if log.pending {
+            return None;
+        }
+        Some(log.spans.clone())
+    }
+
     /// Version of a tensor (0 = absent). Bumped on every insert.
     pub fn version(&self, name: &str) -> u64 {
         self.versions.get(name).copied().unwrap_or(0)

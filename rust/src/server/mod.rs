@@ -20,6 +20,7 @@
 //! gets its own sequence, decode stream, and response.
 
 use crate::coordinator::{GenRequest, GenResponse, ServeConfig, ServingEngine};
+use crate::runtime::backend::ExecBackend;
 use crate::runtime::Engine;
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
@@ -77,11 +78,25 @@ impl ServerHandle {
 impl Server {
     /// Start the worker; compiles the model's serving artifacts eagerly.
     pub fn start(artifacts: PathBuf, model: String, cfg: ServeConfig) -> Result<Server> {
+        Server::start_with(model, cfg, move || {
+            Ok(Box::new(Engine::new(&artifacts)?) as Box<dyn ExecBackend>)
+        })
+    }
+
+    /// Start the worker over whatever backend `factory` builds **on the
+    /// serving thread** (the factory runs there, so the backend never
+    /// needs to be `Send` after construction): the deterministic
+    /// [`crate::runtime::MockEngine`] in tests, the PJRT artifact
+    /// engine in production (`start` is this with an `Engine` factory).
+    pub fn start_with<F>(model: String, cfg: ServeConfig, factory: F) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
+    {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let handle = std::thread::Builder::new()
             .name("kvcar-serve".into())
-            .spawn(move || worker(artifacts, model, cfg, rx, ready_tx))?;
+            .spawn(move || worker(factory, model, cfg, rx, ready_tx))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow!("server thread died during startup"))?
@@ -117,21 +132,23 @@ impl Drop for Server {
     }
 }
 
-fn worker(
-    artifacts: PathBuf,
+fn worker<F>(
+    factory: F,
     model: String,
     cfg: ServeConfig,
     rx: Receiver<Msg>,
     ready: Sender<Result<(), String>>,
-) {
-    let mut engine = match Engine::new(&artifacts) {
-        Ok(e) => e,
+) where
+    F: FnOnce() -> Result<Box<dyn ExecBackend>>,
+{
+    let mut backend = match factory() {
+        Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
             return;
         }
     };
-    let mut serving = match ServingEngine::new(&mut engine, &model, cfg) {
+    let mut serving = match ServingEngine::new(backend.as_mut(), &model, cfg) {
         Ok(s) => s,
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
@@ -147,22 +164,38 @@ fn worker(
             Err(_) => return,
         };
         let mut wave: Vec<(GenRequest, Sender<Result<GenResponse, String>>)> = Vec::new();
+        // requests are stamped the moment the worker sees them, so
+        // queue_latency/TTFT include the gather window they sat in
+        let stamp = |mut req: GenRequest| {
+            req.arrival.get_or_insert(serving.clock.now());
+            req
+        };
         match first {
             Msg::Shutdown => return,
             Msg::Metrics(tx) => {
                 let _ = tx.send(serving.metrics.clone());
                 continue;
             }
-            Msg::Generate(req, tx) => wave.push((req, tx)),
+            Msg::Generate(req, tx) => wave.push((stamp(req), tx)),
         }
+        // A Shutdown observed during the gather window must not be
+        // dropped: finish serving the wave already gathered (every
+        // accepted request gets its response — the drain guarantee),
+        // then exit, which closes the channel so later submits fail
+        // fast at the client.
+        let mut shutting_down = false;
         let window = Duration::from_millis(2);
         while wave.len() < serving.cfg.max_batch {
             match rx.recv_timeout(window) {
-                Ok(Msg::Generate(req, tx)) => wave.push((req, tx)),
+                Ok(Msg::Generate(req, tx)) => wave.push((stamp(req), tx)),
                 Ok(Msg::Metrics(tx)) => {
                     let _ = tx.send(serving.metrics.clone());
                 }
-                Ok(Msg::Shutdown) | Err(_) => break,
+                Ok(Msg::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
+                Err(_) => break,
             }
         }
         let reqs: Vec<GenRequest> = wave.iter().map(|(r, _)| r.clone()).collect();
@@ -183,6 +216,9 @@ fn worker(
                     let _ = tx.send(Err(msg.clone()));
                 }
             }
+        }
+        if shutting_down {
+            return;
         }
     }
 }

@@ -336,14 +336,14 @@ fn batched_faithful_decode_issues_one_decoder_call_per_round() {
             ..ServeConfig::new(plan.clone())
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
-        let exec0 = serving.engine.stats.executions;
+        let exec0 = serving.engine.stats().executions;
         let reqs: Vec<GenRequest> = (0..b as u64)
             .map(|i| GenRequest::greedy(i, prompt, max_new))
             .collect();
         let out = serving.run(reqs).unwrap();
         outs.push(out.iter().map(|r| r.output.clone()).collect::<Vec<_>>());
         if faithful {
-            faithful_execs = serving.engine.stats.executions - exec0;
+            faithful_execs = serving.engine.stats().executions - exec0;
             if has_bt {
                 // decode rounds after the first: ONE batched decoder call
                 // each (max_new - 1 rounds total, first is the bulk
@@ -413,7 +413,7 @@ fn wave_admission_single_launch_and_identical_outputs() {
             ..ServeConfig::new(plan.clone())
         };
         let mut serving = ServingEngine::new(&mut engine, "gpt2t", cfg).unwrap();
-        let exec0 = serving.engine.stats.executions;
+        let exec0 = serving.engine.stats().executions;
         let reqs: Vec<GenRequest> = prompts
             .iter()
             .enumerate()
@@ -421,7 +421,7 @@ fn wave_admission_single_launch_and_identical_outputs() {
             .collect();
         let out = serving.run(reqs).unwrap();
         outs.push(out.iter().map(|r| r.output.clone()).collect::<Vec<_>>());
-        execs.push(serving.engine.stats.executions - exec0);
+        execs.push(serving.engine.stats().executions - exec0);
         launches.push((
             serving.metrics.prefill_waves,
             serving.metrics.prefill_launches,
@@ -655,7 +655,7 @@ fn server_thread_front_end() {
                 max_new_tokens: 6,
                 sampling: Sampling::Greedy,
                 stop_byte: None,
-                arrival: std::time::Instant::now(),
+                arrival: None,
             })
             .unwrap()
         }));

@@ -1,0 +1,231 @@
+//! Scenario-harness tests over the deterministic mock backend
+//! (DESIGN.md §8): the bit-identical determinism contract of the
+//! standard matrix, feature-off legs, transactional fault handling
+//! (mid-wave prefill failure, budget exhaustion at admission), and the
+//! template-cache pressure valve — all audited round-by-round by the
+//! whole-stack invariant checker.
+//!
+//! Everything here runs the `MockEngine`, so the suite is green with no
+//! artifacts present and exercises the identical scheduler code paths
+//! the artifact engine drives.
+
+use kvcar::coordinator::trace::{Arrival, TraceConfig};
+use kvcar::coordinator::{
+    check_round, run_scenario, scenario_spec, standard_matrix, FaultPlan, GenRequest, Scenario,
+    ScenarioReport, ServeConfig, ServingEngine,
+};
+use kvcar::model::memory::CompressionPlan;
+use kvcar::runtime::MockEngine;
+
+fn run(sc: &Scenario) -> ScenarioReport {
+    let mut engine = MockEngine::new(scenario_spec());
+    run_scenario(&mut engine, "mock", sc).expect("scenario must pass its invariants")
+}
+
+#[test]
+fn standard_matrix_is_bit_reproducible() {
+    for sc in standard_matrix() {
+        let a = run(&sc);
+        let b = run(&sc);
+        // the whole report — token digests, invariant trajectory, and
+        // every virtual-clock timing figure — must be bit-identical
+        assert_eq!(a, b, "scenario '{}' is not deterministic", sc.name);
+        assert_eq!(
+            a.completed + a.rejected.len(),
+            sc.trace.n_requests,
+            "scenario '{}' lost requests",
+            sc.name
+        );
+        assert_eq!(
+            a.invariant_checks, a.rounds,
+            "scenario '{}' skipped an invariant audit",
+            sc.name
+        );
+        assert!(
+            a.faults_injected >= 1,
+            "scenario '{}' never fired its fault plan",
+            sc.name
+        );
+        assert!(a.virtual_ms > 0.0 && a.throughput_tok_s > 0.0);
+        assert!(a.ttft_p99_ms >= a.ttft_p50_ms);
+    }
+}
+
+#[test]
+fn long_context_tail_thrashes_the_host_tier() {
+    let sc = standard_matrix()
+        .into_iter()
+        .find(|s| s.name == "long_context_tail")
+        .unwrap();
+    let r = run(&sc);
+    assert!(
+        r.parks >= 1 && r.resumes >= 1,
+        "tight budget must force park/resume traffic, got {} parks / {} resumes",
+        r.parks,
+        r.resumes
+    );
+}
+
+#[test]
+fn duplicate_storm_admits_by_sharing() {
+    let sc = standard_matrix()
+        .into_iter()
+        .find(|s| s.name == "adversarial_duplicate_storm")
+        .unwrap();
+    let r = run(&sc);
+    // one distinct prompt: all but the first admission of each wave
+    // must ride the prefix trie with zero launches
+    assert!(
+        r.shared_admissions >= sc.trace.n_requests as u64 / 2,
+        "duplicate storm shared only {} of {} admissions",
+        r.shared_admissions,
+        sc.trace.n_requests
+    );
+}
+
+#[test]
+fn feature_off_legs_hold_invariants_and_are_reproducible() {
+    for leg in ["prefix_sharing", "resident_cache", "batched_prefill"] {
+        for mut sc in standard_matrix() {
+            match leg {
+                "prefix_sharing" => sc.prefix_sharing = false,
+                "resident_cache" => sc.resident_cache = false,
+                _ => sc.batched_prefill = false,
+            }
+            let a = run(&sc);
+            let b = run(&sc);
+            assert_eq!(a, b, "scenario '{}' with {leg} off drifted", sc.name);
+            assert_eq!(
+                a.completed + a.rejected.len(),
+                sc.trace.n_requests,
+                "scenario '{}' with {leg} off lost requests",
+                sc.name
+            );
+        }
+    }
+}
+
+#[test]
+fn feature_off_legs_preserve_token_streams() {
+    // with faults stripped (fault position depends on launch counts,
+    // which the legs legitimately change), every feature-off leg must
+    // produce bit-identical token streams — the flags are perf knobs,
+    // never semantics
+    for mut sc in standard_matrix() {
+        sc.faults = FaultPlan::none();
+        let base = run(&sc);
+        for leg in ["prefix_sharing", "resident_cache", "batched_prefill"] {
+            let mut off = sc.clone();
+            match leg {
+                "prefix_sharing" => off.prefix_sharing = false,
+                "resident_cache" => off.resident_cache = false,
+                _ => off.batched_prefill = false,
+            }
+            let r = run(&off);
+            assert_eq!(
+                r.tokens_digest, base.tokens_digest,
+                "scenario '{}' token streams drifted with {leg} off",
+                sc.name
+            );
+            assert_eq!(r.completed, base.completed);
+        }
+    }
+}
+
+#[test]
+fn budget_exhaustion_rejects_all_and_leaks_nothing() {
+    // a pool ceiling below a single request's first block: every
+    // admission wave must fail, roll back without leaking a sequence
+    // (the per-round invariant audit inside run_scenario proves it),
+    // and the forward-progress valve must reject every request instead
+    // of hanging
+    let mut sc = Scenario::new(
+        "budget_exhaustion",
+        TraceConfig {
+            n_requests: 4,
+            arrival: Arrival::Batch,
+            prompt_len_range: (8, 12),
+            max_new_range: (2, 4),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 7,
+        },
+    );
+    sc.faults.admission_budget_tokens = Some(1);
+    let r = run(&sc);
+    assert_eq!(r.completed, 0);
+    assert_eq!(r.rejected, vec![0, 1, 2, 3]);
+    assert!(r.faults_injected >= 4);
+    let again = run(&sc);
+    assert_eq!(r, again);
+}
+
+#[test]
+fn midwave_prefill_fault_rolls_back_ingest_and_retries_identically() {
+    let spec = scenario_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, 1);
+    let reqs = || -> Vec<GenRequest> {
+        [
+            b"the fox ran over ice".as_slice(),
+            b"a stone in the river",
+            b"cold wind in the pines",
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest::greedy(i as u64, p, 5))
+        .collect()
+    };
+    // reference outputs from a fault-free engine
+    let want: Vec<Vec<u8>> = {
+        let mut engine = MockEngine::new(spec.clone());
+        let mut serving =
+            ServingEngine::new(&mut engine, "mock", ServeConfig::new(plan.clone())).unwrap();
+        let mut out = serving.run(reqs()).unwrap();
+        out.sort_by_key(|r| r.id);
+        out.into_iter().map(|r| r.output).collect()
+    };
+    // same workload, first prefill launch fails mid-wave
+    let mut engine = MockEngine::new(spec);
+    assert!(engine.inject_launch_fault("prefill", 1));
+    let mut serving = ServingEngine::new(&mut engine, "mock", ServeConfig::new(plan)).unwrap();
+    let mut state = serving.begin(reqs());
+    assert!(serving.step(&mut state).is_err(), "armed fault must surface");
+    // transactional rollback: no sequence ingested, nothing pinned or
+    // parked, the full wave back in the queue — and the whole-stack
+    // audit agrees
+    assert_eq!(serving.cache.n_sequences(), 0, "failed wave leaked sequences");
+    assert_eq!(state.n_waiting(), 3);
+    assert_eq!(state.n_active(), 0);
+    serving
+        .cache
+        .prefix_integrity(&serving.waves.pinned_leaves())
+        .expect("failed wave corrupted prefix refcounts");
+    check_round(&serving, &state, true).expect("failed wave broke a whole-stack invariant");
+    // the retry (fault is one-shot) must complete with outputs
+    // bit-identical to the fault-free run
+    while serving.step(&mut state).unwrap() {}
+    let mut got = serving.finish(state);
+    got.sort_by_key(|r| r.id);
+    let got: Vec<Vec<u8>> = got.into_iter().map(|r| r.output).collect();
+    assert_eq!(got, want, "post-rollback retry diverged from the clean run");
+}
+
+#[test]
+fn template_pressure_valve_survives_capacity_one() {
+    // capacity-one template cache under a 3-distinct-prompt storm: the
+    // valve sheds templates every wave, but may never free a prefix
+    // chain a planned Cached lane still references — prefix_integrity
+    // runs inside run_scenario after every round and would catch it
+    let mut sc = standard_matrix()
+        .into_iter()
+        .find(|s| s.name == "template_storm")
+        .unwrap();
+    sc.template_capacity = Some(1);
+    let r = run(&sc);
+    assert_eq!(r.completed + r.rejected.len(), sc.trace.n_requests);
+    assert!(
+        r.shared_admissions > 0,
+        "even a capacity-one cache must share within-wave duplicates"
+    );
+    assert_eq!(r, run(&sc));
+}
