@@ -1,5 +1,6 @@
-//! Scenario-matrix bench: serves the five standard scenario workloads
-//! (DESIGN.md §8) through the deterministic mock backend and emits
+//! Scenario-matrix bench: serves the standard scenario matrix
+//! (DESIGN.md §8 — admission/template/budget workloads plus the §9
+//! chaos trio) through the deterministic mock backend and emits
 //! machine-readable `BENCH_scenarios.json` (override with
 //! `KVCAR_BENCH_JSON`) with per-scenario TTFT and tok/s p50/p99 —
 //! every figure on the **virtual clock**, so the numbers are a pure
@@ -26,7 +27,7 @@ fn run_one(engine: &mut dyn ExecBackend, model: &str, sc: &Scenario, tag: &str) 
     let r = run_scenario(engine, model, sc).expect("scenario must pass its invariants");
     println!(
         "bench scenarios/{tag}{:<28} ttft p50 {:>7.2} p99 {:>7.2} ms  tok/s p50 {:>7.1} p99 {:>7.1}  \
-         ({} rounds, {} faults, {} rejected, {:.1} virtual ms)",
+         ({} rounds, {} faults, {} retries, {} rejected, {} quarantined, {:.1} virtual ms)",
         r.name,
         r.ttft_p50_ms,
         r.ttft_p99_ms,
@@ -34,7 +35,9 @@ fn run_one(engine: &mut dyn ExecBackend, model: &str, sc: &Scenario, tag: &str) 
         r.tok_s_p99,
         r.rounds,
         r.faults_injected,
+        r.retries,
         r.rejected.len(),
+        r.quarantined.len(),
         r.virtual_ms,
     );
     r
@@ -57,6 +60,13 @@ fn scenario_json(r: &ScenarioReport) -> Json {
         ("parks", json::num(r.parks as f64)),
         ("resumes", json::num(r.resumes as f64)),
         ("shared_admissions", json::num(r.shared_admissions as f64)),
+        // supervisor recovery counters (DESIGN.md §9)
+        ("retries", json::num(r.retries as f64)),
+        ("backoff_ms", json::num(r.backoff_ms)),
+        ("quarantines", json::num(r.quarantined.len() as f64)),
+        ("demotions", json::num(r.demotions as f64)),
+        ("checksum_failures", json::num(r.checksum_failures as f64)),
+        ("template_sheds", json::num(r.template_sheds as f64)),
         // digests as hex strings: u64 does not round-trip through the
         // f64-backed Json number type
         ("tokens_digest", json::s(&format!("{:016x}", r.tokens_digest))),
@@ -85,6 +95,9 @@ fn report_deltas(prev: &Json, reports: &[ScenarioReport]) {
             ("ttft_p99_ms", r.ttft_p99_ms),
             ("tok_s_p50", r.tok_s_p50),
             ("throughput_tok_s", r.throughput_tok_s),
+            ("retries", r.retries as f64),
+            ("backoff_ms", r.backoff_ms),
+            ("quarantines", r.quarantined.len() as f64),
         ] {
             if let Some(old_v) = old.get(field).and_then(Json::as_f64) {
                 if old_v > 0.0 && (old_v - new_v).abs() > 1e-9 {
@@ -110,8 +123,9 @@ fn main() {
     }
 
     // artifact-gated real-engine leg: identical harness and virtual
-    // clock over the PJRT artifact backend (launch faults are a mock
-    // capability; tier/budget faults still fire)
+    // clock over the PJRT artifact backend — launch faults included
+    // (the engine arms them through the same `ExecBackend` contract
+    // and fails the launch before compiling or uploading anything)
     let mut engine_reports = Vec::new();
     let dir = artifacts_dir();
     if dir.join("manifest.json").exists() {

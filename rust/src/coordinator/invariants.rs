@@ -211,11 +211,28 @@ pub fn check_round(
             m.tokens_generated
         ));
     }
-    if m.requests_completed != state.done_responses().len() as u64 {
+    // every response is exactly one of: clean completion, quarantined
+    // sequence, rejected request — nothing double-counted, none lost
+    if m.requests_completed + m.quarantines + m.rejects != state.done_responses().len() as u64 {
         errs.push(format!(
-            "completion conservation: metrics count {} but {} responses exist",
+            "completion conservation: {} clean + {} quarantined + {} rejected \
+             but {} responses exist",
             m.requests_completed,
+            m.quarantines,
+            m.rejects,
             state.done_responses().len()
+        ));
+    }
+    let errored = state
+        .done_responses()
+        .iter()
+        .filter(|r| r.error.is_some())
+        .count() as u64;
+    if errored != m.quarantines + m.rejects {
+        errs.push(format!(
+            "error conservation: {errored} errored responses but {} quarantines \
+             + {} rejects recorded",
+            m.quarantines, m.rejects
         ));
     }
     let admitted_total = m.wave_admitted.total() as usize;
@@ -254,6 +271,16 @@ pub fn check_round(
     fp.push(m.shared_admissions);
     fp.push(m.auto_parks);
     fp.push(m.auto_resumes);
+    // recovery trajectory: retry timing, quarantines, and the ladder
+    // rung are part of the determinism contract (DESIGN.md §9)
+    fp.push(m.retries);
+    fp.push(m.backoff.as_nanos() as u64);
+    fp.push(m.quarantines);
+    fp.push(m.rejects);
+    fp.push(m.demotions);
+    fp.push(m.template_sheds);
+    fp.push(s.tier.stats.checksum_failures);
+    fp.push(s.pressure() as u64);
     fp.push(parked_flags as u64);
     fp.push(s.cache.prefix_stats().shared_bytes as u64);
     fp.push(s.live_cache_bytes(active) as u64);

@@ -183,6 +183,24 @@ pub struct ServeMetrics {
     /// stale device buffers dropped when their region was released or
     /// reallocated (capacity-rung switches)
     pub buffers_evicted: u64,
+    /// supervised retries of failed rounds (Transient / ResourceExhausted
+    /// faults re-attempted under the deterministic RetryPolicy)
+    pub retries: u64,
+    /// total retry backoff charged on the serving clock (virtual-clock
+    /// runs reproduce this bit-identically from the seed)
+    pub backoff: Duration,
+    /// live sequences evicted with a typed error after recovery failed
+    pub quarantines: u64,
+    /// not-yet-admitted requests rejected with a typed error + retry hint
+    pub rejects: u64,
+    /// sequences re-encoded to a cheaper storage rung by the pressure
+    /// ladder (demotion frees bytes without evicting anyone)
+    pub demotions: u64,
+    /// tier payloads that failed CRC verification on unpark (each one
+    /// quarantines its sequence instead of propagating garbage rows)
+    pub checksum_failures: u64,
+    /// cached prompt templates shed by the pressure ladder
+    pub template_sheds: u64,
     /// wall-clock time of the whole run
     pub wall: Duration,
 }
@@ -284,6 +302,20 @@ impl ServeMetrics {
             println!(
                 "  memory pressure: {} parks / {} resumes through the host tier",
                 self.auto_parks, self.auto_resumes,
+            );
+        }
+        if self.retries + self.quarantines + self.rejects + self.demotions + self.template_sheds > 0
+        {
+            println!(
+                "  recovery: {} retries ({:.1} ms backoff), {} quarantined / {} rejected, \
+                 {} demotions, {} template sheds, {} checksum failures",
+                self.retries,
+                self.backoff.as_secs_f64() * 1e3,
+                self.quarantines,
+                self.rejects,
+                self.demotions,
+                self.template_sheds,
+                self.checksum_failures,
             );
         }
         if self.staged_kv_bytes + self.slot_rebuild_bytes > 0 {

@@ -15,6 +15,7 @@ pub mod request;
 pub mod resident;
 pub mod scenario;
 pub mod scheduler;
+pub mod supervisor;
 pub mod trace;
 
 pub use clock::{Clock, CostModel, Stamp};
@@ -34,3 +35,4 @@ pub use scenario::{
     run_scenario, scenario_spec, standard_matrix, FaultPlan, Scenario, ScenarioReport,
 };
 pub use scheduler::{RunState, ServeConfig, ServingEngine};
+pub use supervisor::{ErrorClass, RecoveryAction, RetryPolicy, ServeError, StepReport};

@@ -1,6 +1,7 @@
 //! Request/response types for the serving path.
 
 use super::clock::Stamp;
+use super::supervisor::ServeError;
 use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -73,6 +74,11 @@ pub struct GenResponse {
     pub decode_latency: Duration,
     /// queueing delay before prefill started
     pub queue_latency: Duration,
+    /// why the request did not complete normally: `None` for a clean
+    /// completion; `Some` when the supervisor quarantined the sequence
+    /// (partial `output` retained) or rejected the request before
+    /// admission (empty `output`, message carries a retry hint)
+    pub error: Option<ServeError>,
 }
 
 impl GenResponse {
@@ -100,6 +106,7 @@ mod tests {
             prefill_latency: Duration::from_millis(100),
             decode_latency: Duration::from_millis(500),
             queue_latency: Duration::ZERO,
+            error: None,
         };
         assert!((r.tokens_per_sec() - 20.0).abs() < 1e-9);
     }

@@ -49,6 +49,10 @@
 //! | compiled batch rung changed   | regions realloc'd, every slot rebuilt    |
 //! | region epoch changed          | same (allocation was replaced)           |
 
+// serving hot path: faults travel as typed errors to the supervisor
+// (DESIGN.md §9), never as panics
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use super::batcher::plan_slots;
 use super::effective::EffectiveCache;
 use super::metrics::ServeMetrics;

@@ -4,10 +4,13 @@
 //!
 //! A [`Scenario`] names a workload shape (trace config + serving
 //! policy + [`FaultPlan`]); [`run_scenario`] serves it round by round
-//! through [`ServingEngine::begin`]/[`step`](ServingEngine::step),
-//! running [`check_round`] after **every** round — the ones that failed
-//! with an injected fault included — and folds the per-round state
-//! fingerprints into an invariant digest.  Everything runs on a
+//! through [`ServingEngine::begin`] and
+//! [`step_supervised`](ServingEngine::step_supervised) — faults are
+//! classified and recovered by the serving supervisor (retry/backoff,
+//! degradation ladder, quarantine; DESIGN.md §9) — running
+//! [`check_round`] after **every** round, the ones that failed with an
+//! injected fault included, and folds the per-round state fingerprints
+//! into an invariant digest.  Everything runs on a
 //! [`Clock::virtual_with`] clock, so the resulting [`ScenarioReport`]
 //! (TTFT percentiles, throughput, digests — timing included) is a pure
 //! function of the scenario: the determinism contract is simply
@@ -23,6 +26,7 @@ use super::clock::Clock;
 use super::invariants::{check_round, Fnv};
 use super::prefill::PrefillWave;
 use super::scheduler::{ServeConfig, ServingEngine};
+use super::supervisor::RecoveryAction;
 use super::trace::{generate, Arrival, TraceConfig};
 use crate::data::corpus::wiki;
 use crate::kvcache::CacheConfig;
@@ -31,21 +35,33 @@ use crate::model::{Arch, ModelSpec};
 use crate::runtime::backend::ExecBackend;
 use anyhow::{bail, Result};
 
-/// Faults to inject while a scenario runs.  All counters are one-shot
-/// ladders: each fault fires once at its scheduled occurrence, then
-/// clears — the scheduler must absorb the error transactionally and
-/// complete the workload anyway.
+/// Faults to inject while a scenario runs.  Launch faults default to
+/// one-shot — each fires once at its scheduled occurrence, then clears
+/// — and a non-zero burst re-arms them for consecutive launches
+/// (flapping backend), which is what drives a target past its retry
+/// budget into quarantine.  The supervisor must absorb every error and
+/// complete (or typed-error-complete) the workload anyway.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct FaultPlan {
     /// fail the nth (1-based) prefill launch mid-wave
     pub prefill_launch: Option<u64>,
     /// fail the nth (1-based) decode-step launch mid-round
     pub decode_launch: Option<u64>,
+    /// after the prefill fault fires, re-arm it for the next prefill
+    /// launch this many more times (flapping backend)
+    pub prefill_burst: u64,
+    /// after the decode fault fires, re-arm it for the next decode
+    /// launch this many more times (flapping backend)
+    pub decode_burst: u64,
     /// fail this many park attempts (before any state moves)
     pub park: u32,
     /// fail this many resume attempts (after unpark, exercising the
     /// repark rollback)
     pub resume: u32,
+    /// flip one bit in this many parked payloads in the host tier —
+    /// the unpark checksum must catch each one and the supervisor must
+    /// quarantine exactly the corrupted sequence
+    pub corrupt_park: u32,
     /// hard block-pool ceiling in **tokens** (priced at the plan's
     /// `bytes_per_token` when the scenario runs): admission waves that
     /// would allocate past it fail and must roll back — the
@@ -116,11 +132,14 @@ impl Scenario {
 pub struct ScenarioReport {
     /// scenario name, echoed
     pub name: String,
-    /// requests that completed with a response
+    /// requests that completed cleanly (no error on their response)
     pub completed: usize,
-    /// request ids rejected by the forward-progress valve (persistent
-    /// admission failure, e.g. budget exhaustion)
+    /// request ids the supervisor rejected pre-admission with a typed
+    /// error response (persistent admission failure, budget exhaustion)
     pub rejected: Vec<u64>,
+    /// request ids the supervisor quarantined mid-flight with a typed
+    /// error response (retries exhausted, corruption, permanent fault)
+    pub quarantined: Vec<u64>,
     /// scheduler rounds executed (failed rounds included)
     pub rounds: u64,
     /// invariant audits that ran (one per round)
@@ -143,12 +162,27 @@ pub struct ScenarioReport {
     pub resumes: u64,
     /// zero-launch admissions served from shared prefixes
     pub shared_admissions: u64,
+    /// deterministic retries the supervisor charged
+    pub retries: u64,
+    /// total retry backoff charged on the virtual clock, in ms
+    pub backoff_ms: f64,
+    /// sequences demoted to the cheaper storage rung under pressure
+    pub demotions: u64,
+    /// tier transfers that failed checksum verification on unpark
+    pub checksum_failures: u64,
+    /// admission templates shed by the degradation ladder
+    pub template_sheds: u64,
     /// virtual wall-clock of the run in ms
     pub virtual_ms: f64,
     /// FNV digest over every response's id and token stream
     pub tokens_digest: u64,
     /// FNV digest folding every round's invariant-state fingerprint
     pub invariant_digest: u64,
+    /// per-response (request id, FNV digest of its token stream),
+    /// sorted by id — the per-sequence half of the blast-radius
+    /// contract: a quarantined sequence must not perturb any survivor's
+    /// digest relative to the fault-free run
+    pub output_digests: Vec<(u64, u64)>,
 }
 
 /// Model dimensions the mock-backed scenario matrix runs at: small
@@ -173,10 +207,10 @@ pub fn scenario_spec() -> ModelSpec {
     }
 }
 
-/// The five named scenario workloads of the standard matrix (ISSUE
-/// archetypes: admission storm, template stress, budget-bound long
-/// tail, duplicate storm, mixed steady state), each with its fault
-/// plan.
+/// The named scenario workloads of the standard matrix (admission
+/// storm, template stress, budget-bound long tail, duplicate storm,
+/// mixed steady state, plus the chaos trio: flapping backend, corrupted
+/// unpark, sustained pressure), each with its fault plan.
 pub fn standard_matrix() -> Vec<Scenario> {
     let mut bursty = Scenario::new(
         "bursty_admission_storm",
@@ -277,7 +311,75 @@ pub fn standard_matrix() -> Vec<Scenario> {
         ..FaultPlan::none()
     };
 
-    vec![bursty, template, tail, dup, steady]
+    // chaos trio (DESIGN.md §9): a decode launch that keeps failing
+    // until the attributed sequence exhausts its retry budget and is
+    // quarantined — every survivor must finish bitwise identical
+    let mut flap = Scenario::new(
+        "flapping_backend",
+        TraceConfig {
+            n_requests: 12,
+            arrival: Arrival::Bursty {
+                size: 4,
+                period_ms: 30,
+            },
+            prompt_len_range: (8, 16),
+            max_new_range: (6, 10),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 61,
+        },
+    );
+    flap.faults = FaultPlan {
+        decode_launch: Some(2),
+        decode_burst: 5,
+        ..FaultPlan::none()
+    };
+
+    // a parked payload corrupted in the host tier: the unpark checksum
+    // must catch it and quarantine exactly the corrupted sequence
+    let mut corrupt = Scenario::new(
+        "corrupted_unpark",
+        TraceConfig {
+            n_requests: 8,
+            arrival: Arrival::Batch,
+            prompt_len_range: (18, 24),
+            max_new_range: (12, 16),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 67,
+        },
+    );
+    corrupt.max_batch = 4;
+    corrupt.cache_budget_tokens = Some(120);
+    corrupt.faults = FaultPlan {
+        corrupt_park: 1,
+        ..FaultPlan::none()
+    };
+
+    // a pool budget the storm keeps slamming into: the degradation
+    // ladder (shed → demote → park → reject) must keep the run moving
+    let mut pressure = Scenario::new(
+        "sustained_pressure",
+        TraceConfig {
+            n_requests: 16,
+            arrival: Arrival::Bursty {
+                size: 8,
+                period_ms: 10,
+            },
+            prompt_len_range: (12, 20),
+            max_new_range: (8, 14),
+            temperature: None,
+            distinct_prompts: Some(2),
+            seed: 71,
+        },
+    );
+    pressure.template_capacity = Some(2);
+    pressure.faults = FaultPlan {
+        admission_budget_tokens: Some(240),
+        ..FaultPlan::none()
+    };
+
+    vec![bursty, template, tail, dup, steady, flap, corrupt, pressure]
 }
 
 /// Hard cap on scheduler rounds per scenario — a convergence guard,
@@ -287,13 +389,14 @@ const MAX_ROUNDS: u64 = 10_000;
 /// Serve one scenario to completion on `engine` and return its report.
 ///
 /// The run is fully deterministic: a virtual clock is installed (so
-/// every latency figure is charged, not measured), faults are armed up
-/// front, and [`check_round`] audits the whole stack after every round
-/// — a fault that corrupts state fails the scenario with the full
-/// violation list rather than a skewed number.  A request whose
-/// admission fails twice consecutively (persistent budget exhaustion)
-/// is rejected and reported, so faults bound tail latency instead of
-/// hanging the run.
+/// every latency figure — retry backoff included — is charged, not
+/// measured), faults are armed up front, and [`check_round`] audits the
+/// whole stack after every round — a fault that corrupts state fails
+/// the scenario with the full violation list rather than a skewed
+/// number.  Recovery is the supervisor's: transient faults retry under
+/// the deterministic backoff policy, exhaustion walks the degradation
+/// ladder, corruption quarantines — and every quarantine/rejection is
+/// reported with its typed error response.
 pub fn run_scenario(
     engine: &mut dyn ExecBackend,
     model: &str,
@@ -306,10 +409,10 @@ pub fn run_scenario(
         ccfg.bytes_per_token()
     };
     if let Some(n) = sc.faults.prefill_launch {
-        engine.inject_launch_fault("prefill", n);
+        engine.inject_launch_fault_burst("prefill", n, sc.faults.prefill_burst);
     }
     if let Some(n) = sc.faults.decode_launch {
-        engine.inject_launch_fault("decode", n);
+        engine.inject_launch_fault_burst("decode", n, sc.faults.decode_burst);
     }
     let mut cfg = if sc.faithful {
         ServeConfig::faithful(plan)
@@ -332,6 +435,7 @@ pub fn run_scenario(
     }
     serving.set_clock(Clock::virtual_default());
     serving.inject_tier_faults(sc.faults.park, sc.faults.resume);
+    serving.tier.inject_corruption(sc.faults.corrupt_park);
 
     let trace = generate(&sc.trace, &mut wiki(sc.trace.seed));
     let requests: Vec<_> = trace.items.into_iter().map(|i| i.request).collect();
@@ -342,42 +446,47 @@ pub fn run_scenario(
     let mut invariant_checks = 0u64;
     let mut faults_injected = 0u64;
     let mut rejected: Vec<u64> = Vec::new();
-    let mut consecutive_errors = 0u32;
+    let mut quarantined: Vec<u64> = Vec::new();
+    let mut stalled = 0u32;
     loop {
         rounds += 1;
         if rounds > MAX_ROUNDS {
             bail!("scenario '{}' did not converge in {MAX_ROUNDS} rounds", sc.name);
         }
-        let stepped = serving.step(&mut state);
-        // the audit runs after EVERY round — the transactional claim is
-        // precisely that a failed round leaves the stack coherent
-        let strict = stepped.is_ok();
+        let rep = serving.step_supervised(&mut state);
+        // the audit runs after EVERY round — the recovery claim is
+        // precisely that a failed round *plus its recovery action*
+        // leaves the stack coherent
+        let strict = rep.fault.is_none();
         let fp = check_round(&serving, &state, strict).map_err(|v| {
             anyhow::anyhow!("scenario '{}' round {rounds} violated invariants:\n{v}", sc.name)
         })?;
         invariant_checks += 1;
         inv.push(fp);
-        match stepped {
-            Ok(true) => consecutive_errors = 0,
-            Ok(false) => break,
-            Err(_) => {
-                faults_injected += 1;
-                consecutive_errors += 1;
-                // forward-progress valve: a request whose admission
-                // keeps failing (hard budget exhaustion) is rejected
-                // rather than retried forever; the threshold is above
-                // the worst back-to-back one-shot fault chain so only
-                // *persistent* failures reject
-                if consecutive_errors >= 3 {
-                    if let Some(id) = state.reject_head() {
-                        rejected.push(id);
-                    }
-                    consecutive_errors = 0;
-                }
-                if state.is_finished() {
-                    break;
-                }
-            }
+        if rep.fault.is_some() {
+            faults_injected += 1;
+        }
+        match rep.action {
+            RecoveryAction::Quarantine(id) => quarantined.push(id),
+            RecoveryAction::Reject(id) => rejected.push(id),
+            _ => {}
+        }
+        // forward-progress valve: a fault the supervisor could take no
+        // action on, repeated round after round, fails the scenario
+        // loudly instead of spinning to the round cap
+        match (&rep.fault, rep.action) {
+            (Some(_), RecoveryAction::None) => stalled += 1,
+            _ => stalled = 0,
+        }
+        if stalled > 8 {
+            bail!(
+                "scenario '{}' stalled on an unrecoverable fault: {}",
+                sc.name,
+                rep.fault.map(|f| f.to_string()).unwrap_or_default()
+            );
+        }
+        if !rep.more {
+            break;
         }
     }
     let responses = serving.finish(state);
@@ -399,11 +508,22 @@ pub fn run_scenario(
         }
         v[((v.len() - 1) as f64 * p / 100.0).round() as usize]
     };
+    let output_digests: Vec<(u64, u64)> = responses
+        .iter()
+        .map(|r| {
+            let mut d = Fnv::new();
+            for &b in &r.output {
+                d.push(b as u64);
+            }
+            (r.id, d.finish())
+        })
+        .collect();
     let m = &serving.metrics;
     Ok(ScenarioReport {
         name: sc.name.to_string(),
-        completed: responses.len(),
+        completed: responses.iter().filter(|r| r.error.is_none()).count(),
         rejected,
+        quarantined,
         rounds,
         invariant_checks,
         faults_injected,
@@ -415,9 +535,15 @@ pub fn run_scenario(
         parks: m.auto_parks,
         resumes: m.auto_resumes,
         shared_admissions: m.shared_admissions,
+        retries: m.retries,
+        backoff_ms: m.backoff.as_secs_f64() * 1e3,
+        demotions: m.demotions,
+        checksum_failures: serving.tier.stats.checksum_failures,
+        template_sheds: m.template_sheds,
         virtual_ms: m.wall.as_secs_f64() * 1e3,
         tokens_digest: tokens.finish(),
         invariant_digest: inv.finish(),
+        output_digests,
     })
 }
 
@@ -436,6 +562,9 @@ mod tests {
                 "long_context_tail",
                 "adversarial_duplicate_storm",
                 "mixed_steady_state",
+                "flapping_backend",
+                "corrupted_unpark",
+                "sustained_pressure",
             ]
         );
     }
@@ -449,6 +578,7 @@ mod tests {
                     || f.decode_launch.is_some()
                     || f.park > 0
                     || f.resume > 0
+                    || f.corrupt_park > 0
                     || f.admission_budget_tokens.is_some(),
                 "scenario '{}' has no fault plan",
                 sc.name

@@ -56,6 +56,13 @@
 //! bytes of the sequences with the worst stored-bytes-per-remaining-
 //! token ratio to the host tier and bring them back (with a
 //! `rebuild_full`) once memory frees (DESIGN.md §4).
+//!
+//! Failures on any of these paths surface as typed
+//! [`ServeError`](super::supervisor::ServeError)s with blast-radius
+//! attribution; [`ServingEngine::step_supervised`] retries, degrades,
+//! quarantines, or rejects per the taxonomy (DESIGN.md §9).
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 use super::batcher::{plan_parking, plan_resume, plan_round, BatcherConfig};
 use super::clock::{Clock, Stamp};
@@ -64,6 +71,10 @@ use super::metrics::ServeMetrics;
 use super::prefill::{PrefillWave, WaveOutput, WavePrefiller};
 use super::request::{GenRequest, GenResponse, Sampling};
 use super::resident::{stage_copy_round, SlotArena};
+use super::supervisor::{
+    seq_err, wave_err, ErrorClass, RecoveryAction, RetryPolicy, ServeError, StepReport,
+    SupervisorState,
+};
 use crate::compress::planner::{to_masks, RuntimeMasks};
 use crate::kvcache::tier::HostTier;
 use crate::kvcache::{CacheConfig, CacheManager, Format};
@@ -148,6 +159,11 @@ pub struct ServeConfig {
     /// [`ServeConfig::new`] keeps f16 — an intentional opt-in for
     /// measuring the fp16 accuracy cost (the bench's `f16_raw` cases).
     pub raw_format: Format,
+    /// deterministic retry/backoff + pressure-ladder hysteresis policy
+    /// the supervisor ([`ServingEngine::step_supervised`]) recovers
+    /// under.  Backoffs are charged on the serving clock, so under a
+    /// virtual clock retry timing is bit-reproducible.
+    pub retry: RetryPolicy,
 }
 
 impl ServeConfig {
@@ -188,6 +204,7 @@ impl ServeConfig {
             prefix_sharing: true,
             pool_budget: None,
             raw_format: Format::F16,
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -270,6 +287,9 @@ pub struct ServingEngine<'e> {
     /// bit-reproducible) under [`ServingEngine::set_clock`]
     pub(crate) clock: Clock,
     pub(crate) eff: HashMap<u64, EffectiveCache>,
+    /// supervisor bookkeeping: per-target retry attempts, pressure
+    /// rung, calm streak (DESIGN.md §9)
+    sup: SupervisorState,
     decode_batches: Vec<usize>,
     admit_counter: u64,
     rng: Rng,
@@ -318,6 +338,7 @@ impl<'e> ServingEngine<'e> {
             arena: SlotArena::new(),
             clock: Clock::wall(),
             eff: HashMap::new(),
+            sup: SupervisorState::default(),
             decode_batches,
             admit_counter: 0,
             rng: Rng::new(seed ^ 0x5E47E),
@@ -395,7 +416,11 @@ impl<'e> ServingEngine<'e> {
             .decode_batches
             .iter()
             .find(|&&b| b >= live)
-            .unwrap_or(self.decode_batches.last().unwrap())
+            .unwrap_or_else(|| {
+                self.decode_batches
+                    .last()
+                    .expect("manifest provides at least one decode batch")
+            })
     }
 
     /// Admit one wave of requests: prefill them together (one
@@ -552,29 +577,42 @@ impl<'e> ServingEngine<'e> {
     }
 
     /// Resume a parked sequence: pay the transfer on the real encoded
-    /// bytes, restore them bit-identically into fresh device blocks, and
-    /// rebuild the effective cache in full (`rebuild_full`) from the
-    /// compressed store.
+    /// bytes, **verify their park-time checksum** (a mismatch is a typed
+    /// [`ErrorClass::Corruption`] error — the entry is dropped, the
+    /// supervisor quarantines the sequence; corrupted bytes never reach
+    /// the device cache), restore them bit-identically into fresh device
+    /// blocks, and rebuild the effective cache in full (`rebuild_full`)
+    /// from the compressed store.
     pub fn resume_sequence(&mut self, cache_id: u64) -> Result<Duration> {
-        let (bytes, cost) = self
-            .tier
-            .unpark(cache_id)
-            .ok_or_else(|| anyhow!("sequence {cache_id} not parked"))?;
+        let (bytes, cost) = match self.tier.unpark_verified(cache_id) {
+            Ok(Some(x)) => x,
+            Ok(None) => return Err(anyhow!("sequence {cache_id} not parked")),
+            // checksum mismatch: classified Corruption by message, and
+            // sequence-attributed so recovery evicts exactly this one
+            Err(e) => {
+                self.metrics.checksum_failures = self.tier.stats.checksum_failures;
+                return Err(seq_err(e, cache_id));
+            }
+        };
         if self.resume_faults > 0 {
             // injected between unpark and restore: exercises the repark
             // rollback, after which the tier must account the sequence
             // exactly as before the attempt
             self.resume_faults -= 1;
             self.tier.repark(cache_id, bytes);
-            return Err(anyhow!("injected resume fault for sequence {cache_id}"));
+            return Err(seq_err(
+                anyhow!("injected resume fault for sequence {cache_id}"),
+                cache_id,
+            ));
         }
         if let Err(e) = self.cache.restore_sequence_bytes(cache_id, &bytes) {
             // undo: payload survives and the tier stats are reversed, so
             // the failed attempt leaves no phantom transfer accounting
             self.tier.repark(cache_id, bytes);
-            return Err(e);
+            return Err(seq_err(e, cache_id));
         }
-        self.rebuild_effective(cache_id)?;
+        self.rebuild_effective(cache_id)
+            .map_err(|e| seq_err(e, cache_id))?;
         Ok(cost)
     }
 
@@ -681,7 +719,14 @@ impl<'e> ServingEngine<'e> {
             }
         }
         let entry = format!("{}_decode_step_b{}", self.model, b);
-        let out = self.engine.execute(&entry, &self.store)?;
+        // attribute a failed batch launch to its lead participant: the
+        // supervisor retries the round, and once retries run out evicts
+        // one deterministic victim instead of the whole batch
+        let lead = participants.first().copied().unwrap_or(0);
+        let out = self
+            .engine
+            .execute(&entry, &self.store)
+            .map_err(|e| seq_err(e, lead))?;
         let costs = self.clock.costs();
         self.clock.charge(costs.decode_cost(rows));
         let round = self.clock.now().saturating_since(t0);
@@ -703,20 +748,25 @@ impl<'e> ServingEngine<'e> {
             let sampling = active[i].req.sampling;
             let next = self.sample(&logits[slot * v..(slot + 1) * v], sampling);
             let seq = &mut active[i];
-            self.cache.append_token(
-                seq.cache_id,
-                &k_lat[slot * l * dl..(slot + 1) * l * dl],
-                &v_lat[slot * l * dl..(slot + 1) * l * dl],
-                &k_raw[slot * l * kvd..(slot + 1) * l * kvd],
-                &v_raw[slot * l * kvd..(slot + 1) * l * kvd],
-            )?;
+            let cid = seq.cache_id;
+            self.cache
+                .append_token(
+                    cid,
+                    &k_lat[slot * l * dl..(slot + 1) * l * dl],
+                    &v_lat[slot * l * dl..(slot + 1) * l * dl],
+                    &k_raw[slot * l * kvd..(slot + 1) * l * kvd],
+                    &v_raw[slot * l * kvd..(slot + 1) * l * kvd],
+                )
+                .map_err(|e| seq_err(e, cid))?;
             if !self.cfg.per_step_reconstruct {
                 // in-graph mode: the artifact returned the new token's
                 // exact effective rows; append them and move the
                 // watermark.  Faithful mode leaves the watermark behind
                 // so the next round's advance() reconstructs this row
                 // from the compressed store instead.
-                let eff = self.eff.get_mut(&seq.cache_id).unwrap();
+                let eff = self.eff.get_mut(&cid).ok_or_else(|| {
+                    seq_err(anyhow!("effective cache missing for sequence {cid}"), cid)
+                })?;
                 eff.push_step_row(
                     &mut self.cache,
                     seq.cache_id,
@@ -752,6 +802,7 @@ impl<'e> ServingEngine<'e> {
             queue_latency: seq
                 .prefill_start
                 .saturating_since(seq.req.arrival.unwrap_or(seq.prefill_start)),
+            error: None,
         }
     }
 
@@ -784,6 +835,28 @@ impl<'e> ServingEngine<'e> {
     /// eventually frees.
     fn resume_under_budget(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
         let Some(budget) = self.cfg.cache_budget else {
+            // no cache budget: a parked sequence can only have been
+            // force-parked by the pressure ladder.  Resume the oldest
+            // once the rung has decayed back to calm (hysteresis keeps
+            // this from flapping against the very pressure that parked
+            // it), or nothing would ever finish it.
+            if self.sup.pressure() == 0 {
+                let oldest = active
+                    .iter()
+                    .filter(|s| s.parked)
+                    .min_by_key(|s| s.admit_seq)
+                    .map(|s| s.cache_id);
+                if let Some(id) = oldest {
+                    let cost = self.resume_sequence(id)?;
+                    self.clock.charge(cost);
+                    active
+                        .iter_mut()
+                        .find(|s| s.cache_id == id)
+                        .expect("resume id comes from the active set")
+                        .parked = false;
+                    self.metrics.auto_resumes += 1;
+                }
+            }
             return Ok(());
         };
         let mut parked: Vec<(u64, u64, usize)> = active
@@ -816,7 +889,11 @@ impl<'e> ServingEngine<'e> {
         for id in resume {
             let cost = self.resume_sequence(id)?;
             self.clock.charge(cost);
-            active.iter_mut().find(|s| s.cache_id == id).unwrap().parked = false;
+            active
+                .iter_mut()
+                .find(|s| s.cache_id == id)
+                .expect("planned resume id comes from the active set")
+                .parked = false;
             self.metrics.auto_resumes += 1;
         }
         Ok(())
@@ -870,9 +947,13 @@ impl<'e> ServingEngine<'e> {
         live.sort_by_key(|l| l.0);
         let list: Vec<(u64, usize, usize)> = live.iter().map(|l| (l.1, l.2, l.3)).collect();
         for id in plan_parking(budget, self.headroom(), &list) {
-            let cost = self.park_sequence(id)?;
+            let cost = self.park_sequence(id).map_err(|e| seq_err(e, id))?;
             self.clock.charge(cost);
-            active.iter_mut().find(|s| s.cache_id == id).unwrap().parked = true;
+            active
+                .iter_mut()
+                .find(|s| s.cache_id == id)
+                .expect("planned park id comes from the active set")
+                .parked = true;
             self.metrics.auto_parks += 1;
         }
         Ok(())
@@ -884,13 +965,32 @@ impl<'e> ServingEngine<'e> {
     /// automatically park/resume sequences through the host tier.
     ///
     /// Convenience wrapper over the resumable loop:
-    /// [`ServingEngine::begin`] → [`ServingEngine::step`] until drained
-    /// → [`ServingEngine::finish`].  The scenario harness drives the
-    /// three pieces itself so it can run invariant checks between
-    /// rounds and keep going past injected faults.
+    /// [`ServingEngine::begin`] → [`ServingEngine::step_supervised`]
+    /// until drained → [`ServingEngine::finish`] — faults are classified
+    /// and recovered (retry/ladder/quarantine) instead of aborting the
+    /// run.  The scenario harness drives the pieces itself so it can run
+    /// invariant checks between rounds.
     pub fn run(&mut self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
         let mut state = self.begin(requests);
-        while self.step(&mut state)? {}
+        let mut stalled = 0u32;
+        loop {
+            let rep = self.step_supervised(&mut state);
+            // forward-progress valve: a fault the supervisor could not
+            // act on (no attribution, nothing to evict) repeated
+            // past the retry budget surfaces as a hard error instead of
+            // spinning forever
+            match (&rep.fault, rep.action) {
+                (Some(_), RecoveryAction::None) => stalled += 1,
+                _ => stalled = 0,
+            }
+            if stalled > self.cfg.retry.max_retries {
+                let fault = rep.fault.expect("stall counter only advances on faults");
+                return Err(fault.into_anyhow());
+            }
+            if !rep.more {
+                break;
+            }
+        }
         Ok(self.finish(state))
     }
 
@@ -991,11 +1091,15 @@ impl<'e> ServingEngine<'e> {
             Ok(admitted) => state.active.extend(admitted),
             Err(e) => {
                 // requeue in original order so the failed wave is
-                // invisible to scheduling except for the error itself
+                // invisible to scheduling except for the error itself;
+                // the error carries the wave ordinal and the lead
+                // request id so recovery can reject exactly that one
+                // if the fault proves persistent
+                let lead = backup.first().map(|r| r.id).unwrap_or(0);
                 for r in backup.into_iter().rev() {
                     state.waiting.push_front(r);
                 }
-                return Err(e);
+                return Err(wave_err(e, self.metrics.prefill_waves + 1, lead));
             }
         }
         if state.active.is_empty() {
@@ -1051,6 +1155,295 @@ impl<'e> ServingEngine<'e> {
             s.full_uploads,
             s.buffers_evicted,
         )
+    }
+
+    // ------------------------------------------------------------------
+    // fault-tolerant supervisor (DESIGN.md §9)
+    // ------------------------------------------------------------------
+
+    /// Current pressure-ladder rung (0 = calm), for the invariant
+    /// checker's fingerprints and operator dashboards.
+    pub fn pressure(&self) -> u32 {
+        self.sup.pressure()
+    }
+
+    /// One supervised scheduler round: [`ServingEngine::step`], and on
+    /// failure classify the error ([`ServeError::classify`]) and apply
+    /// the matching recovery — deterministic retry/backoff for transient
+    /// faults, the pressure-degradation ladder for exhaustion, immediate
+    /// quarantine for corruption and permanent faults.  Never returns an
+    /// error: every failure is absorbed into a [`StepReport`] so the
+    /// caller (and the scenario harness) can keep stepping and audit
+    /// invariants between rounds.
+    pub fn step_supervised(&mut self, state: &mut RunState) -> StepReport {
+        match self.step(state) {
+            Ok(more) => {
+                self.sup.note_clean(&self.cfg.retry);
+                StepReport {
+                    more,
+                    fault: None,
+                    action: RecoveryAction::None,
+                }
+            }
+            Err(e) => {
+                let fault = ServeError::classify(&e);
+                let action = self.recover(state, &fault);
+                StepReport {
+                    more: !state.is_finished(),
+                    fault: Some(fault),
+                    action,
+                }
+            }
+        }
+    }
+
+    /// Pick and apply the recovery for one classified fault.
+    fn recover(&mut self, state: &mut RunState, fault: &ServeError) -> RecoveryAction {
+        match fault.class {
+            ErrorClass::Transient => self.retry_or_quarantine(state, fault),
+            ErrorClass::ResourceExhausted => self.escalate(state, fault),
+            // retrying corrupted bytes or a structural failure cannot
+            // help: evict the attributed target immediately
+            ErrorClass::Corruption | ErrorClass::Permanent => {
+                self.quarantine_target(state, fault)
+            }
+        }
+    }
+
+    /// The retry-budget key of a fault: sequence attribution wins over
+    /// request attribution (a live sequence is the more specific blast
+    /// radius); `None` for a fully unattributed fault.
+    fn fault_key(fault: &ServeError) -> Option<(bool, u64)> {
+        fault
+            .seq
+            .map(|s| (false, s))
+            .or(fault.req.map(|r| (true, r)))
+    }
+
+    /// Transient recovery: charge a deterministic backoff and let the
+    /// next round retry, until the target's budget runs out — then
+    /// quarantine exactly the attributed target.
+    fn retry_or_quarantine(
+        &mut self,
+        state: &mut RunState,
+        fault: &ServeError,
+    ) -> RecoveryAction {
+        let Some(key) = Self::fault_key(fault) else {
+            return RecoveryAction::None;
+        };
+        let attempt = self.sup.bump(key);
+        if attempt <= self.cfg.retry.max_retries {
+            let wait = self.cfg.retry.backoff(self.cfg.seed, key.1, attempt);
+            self.clock.charge(wait);
+            self.metrics.retries += 1;
+            self.metrics.backoff += wait;
+            return RecoveryAction::Retry {
+                attempt,
+                backoff: wait,
+            };
+        }
+        self.sup.clear(key);
+        self.quarantine_target(state, fault)
+    }
+
+    /// Exhaustion recovery: retry under backoff first (pressure is often
+    /// transient — a resume burst, one oversized wave), then walk the
+    /// degradation ladder one rung at a time: shed a cached prompt
+    /// template → demote the fattest sequence to a cheaper storage rung
+    /// → force-park a victim → reject/quarantine the attributed target.
+    /// Each escalation ratchets [`SupervisorState::pressure`]; the rung
+    /// decays only after [`RetryPolicy::calm_rounds`] clean rounds
+    /// (hysteresis), so repeated pressure skips straight to the deeper
+    /// remedies instead of flapping on the cheap ones.
+    fn escalate(&mut self, state: &mut RunState, fault: &ServeError) -> RecoveryAction {
+        let key = Self::fault_key(fault).unwrap_or((true, u64::MAX));
+        let attempt = self.sup.bump(key);
+        if attempt <= self.cfg.retry.max_retries {
+            let wait = self.cfg.retry.backoff(self.cfg.seed, key.1, attempt);
+            self.clock.charge(wait);
+            self.metrics.retries += 1;
+            self.metrics.backoff += wait;
+            return RecoveryAction::Retry {
+                attempt,
+                backoff: wait,
+            };
+        }
+        self.sup.clear(key);
+        let mut rung = self.sup.pressure().max(1);
+        while rung <= 3 {
+            self.sup.ratchet(rung);
+            match rung {
+                1 => {
+                    if self.waves.shed_oldest_template(&mut self.cache) {
+                        self.metrics.template_sheds += 1;
+                        return RecoveryAction::Shed;
+                    }
+                }
+                2 => {
+                    if let Some(id) = self.demote_victim(state) {
+                        return RecoveryAction::Demote(id);
+                    }
+                }
+                _ => {
+                    if let Some(id) = self.park_victim(state) {
+                        return RecoveryAction::Park(id);
+                    }
+                }
+            }
+            rung += 1;
+        }
+        self.quarantine_target(state, fault)
+    }
+
+    /// Evict the fault's attributed target: quarantine its live
+    /// sequence, or reject its not-yet-admitted request; unattributed
+    /// faults fall back to the queue head, then the oldest live
+    /// sequence, so eviction always relieves *something*.
+    fn quarantine_target(&mut self, state: &mut RunState, fault: &ServeError) -> RecoveryAction {
+        if let Some(cid) = fault.seq {
+            if let Some(i) = state.active.iter().position(|s| s.cache_id == cid) {
+                let seq = state.active.swap_remove(i);
+                return self.quarantine(state, seq, fault);
+            }
+        }
+        if let Some(rid) = fault.req {
+            if let Some(pos) = state.waiting.iter().position(|r| r.id == rid) {
+                return self.reject(state, pos, fault);
+            }
+        }
+        if !state.waiting.is_empty() {
+            return self.reject(state, 0, fault);
+        }
+        if !state.active.is_empty() {
+            let seq = state.active.swap_remove(0);
+            return self.quarantine(state, seq, fault);
+        }
+        RecoveryAction::None
+    }
+
+    /// Quarantine one live sequence: roll its state back across every
+    /// layer (host tier, effective cache, slot arena, cache manager,
+    /// supervisor bookkeeping) and complete its request with a typed
+    /// error response retaining whatever output it produced.  Every
+    /// other sequence is untouched — their token streams stay bitwise
+    /// identical to the fault-free run.
+    fn quarantine(
+        &mut self,
+        state: &mut RunState,
+        seq: ActiveSeq,
+        fault: &ServeError,
+    ) -> RecoveryAction {
+        let cache_id = seq.cache_id;
+        self.tier.discard(cache_id);
+        self.eff.remove(&cache_id);
+        self.arena.release(cache_id);
+        self.cache.free_sequence(cache_id);
+        self.sup.clear_id(cache_id);
+        self.sup.clear_id(seq.req.id);
+        self.metrics.quarantines += 1;
+        let resp = GenResponse {
+            id: seq.req.id,
+            prompt_tokens: seq.req.prompt.len().min(self.spec.max_seq - 1),
+            generated_tokens: seq.output.len(),
+            output: seq.output,
+            prefill_latency: seq.prefill_end - seq.prefill_start,
+            decode_latency: seq.decode_time,
+            queue_latency: seq
+                .prefill_start
+                .saturating_since(seq.req.arrival.unwrap_or(seq.prefill_start)),
+            error: Some(fault.clone().with_seq(cache_id)),
+        };
+        let req_id = resp.id;
+        state.done.push(resp);
+        RecoveryAction::Quarantine(req_id)
+    }
+
+    /// Reject a queued (not-yet-admitted) request with a typed error
+    /// response carrying a retry hint — no sequence state exists yet, so
+    /// nothing to roll back.
+    fn reject(&mut self, state: &mut RunState, pos: usize, fault: &ServeError) -> RecoveryAction {
+        let Some(req) = state.waiting.remove(pos) else {
+            return RecoveryAction::None;
+        };
+        self.sup.clear_id(req.id);
+        self.metrics.rejects += 1;
+        let now = self.clock.now();
+        let mut err = fault.clone().with_req(req.id);
+        err.msg
+            .push_str(" (rejected pre-admission; safe to retry after backoff)");
+        state.done.push(GenResponse {
+            id: req.id,
+            output: Vec::new(),
+            prompt_tokens: 0,
+            generated_tokens: 0,
+            prefill_latency: Duration::ZERO,
+            decode_latency: Duration::ZERO,
+            queue_latency: now.saturating_since(req.arrival.unwrap_or(now)),
+            error: Some(err),
+        });
+        RecoveryAction::Reject(req.id)
+    }
+
+    /// Degradation rung 2: re-encode the fattest live sequence's stored
+    /// blocks to the Int8 rung (`CacheManager::demote_sequence`).  In
+    /// in-graph mode the exact effective rows stay resident in the
+    /// scratch/arena, so the watermark the demotion reset is restored
+    /// and decode keeps consuming the identical rows — stored bytes get
+    /// cheaper, outputs stay bitwise unchanged.  Faithful mode leaves
+    /// the watermark at 0 by contract: the next round reconstructs from
+    /// the demoted store.
+    fn demote_victim(&mut self, state: &mut RunState) -> Option<u64> {
+        let victim = state
+            .active
+            .iter()
+            .filter(|s| !s.parked && !s.done && !self.cache.seq_demoted(s.cache_id))
+            .max_by_key(|s| (self.cache.seq_stored_bytes(s.cache_id), s.cache_id))
+            .map(|s| s.cache_id)?;
+        match self.cache.demote_sequence(victim) {
+            Ok(freed) if freed > 0 => {
+                self.metrics.demotions += 1;
+                if !self.cfg.per_step_reconstruct {
+                    let len = self.cache.seq_len(victim).unwrap_or(0);
+                    self.cache.mark_decoded(victim, len);
+                }
+                Some(victim)
+            }
+            _ => None,
+        }
+    }
+
+    /// Degradation rung 3: force-park the fattest live sequence through
+    /// the host tier.  Requires at least two live sequences — something
+    /// must keep decoding or parked memory never frees.
+    fn park_victim(&mut self, state: &mut RunState) -> Option<u64> {
+        let live = state
+            .active
+            .iter()
+            .filter(|s| !s.parked && !s.done)
+            .count();
+        if live < 2 {
+            return None;
+        }
+        let victim = state
+            .active
+            .iter()
+            .filter(|s| !s.parked && !s.done)
+            .max_by_key(|s| (self.cache.seq_stored_bytes(s.cache_id), s.cache_id))
+            .map(|s| s.cache_id)?;
+        match self.park_sequence(victim) {
+            Ok(cost) => {
+                self.clock.charge(cost);
+                state
+                    .active
+                    .iter_mut()
+                    .find(|s| s.cache_id == victim)
+                    .expect("victim chosen from the active set")
+                    .parked = true;
+                self.metrics.auto_parks += 1;
+                Some(victim)
+            }
+            Err(_) => None,
+        }
     }
 }
 
@@ -1330,10 +1723,10 @@ impl WavePrefiller for ArtifactPrefiller<'_> {
 
 impl ActiveSeq {
     fn generated_check(&mut self, max_seq: usize) {
-        let last = *self.output.last().unwrap();
+        let last = self.output.last().copied();
         if self.output.len() >= self.req.max_new_tokens
             || self.pos >= max_seq
-            || self.req.stop_byte == Some(last)
+            || (last.is_some() && self.req.stop_byte == last)
         {
             self.done = true;
         }

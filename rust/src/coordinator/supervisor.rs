@@ -1,0 +1,408 @@
+//! Fault-tolerant serving supervisor (DESIGN.md §9).
+//!
+//! The scheduler raises every serving-path failure as a typed
+//! [`ServeError`] carrying its blast radius (an attributed live
+//! sequence, a not-yet-admitted request, or a whole admission wave).
+//! [`ServingEngine::step_supervised`] classifies the error and picks a
+//! [`RecoveryAction`]:
+//!
+//! * `Transient` faults are retried under the deterministic
+//!   [`RetryPolicy`] — exponential backoff with seeded jitter *charged
+//!   on the serving clock*, so retry timing is bit-reproducible under a
+//!   virtual clock — and quarantine the attributed target once retries
+//!   are exhausted.
+//! * `ResourceExhausted` faults walk a pressure-degradation ladder with
+//!   hysteresis: shed prompt templates → demote the fattest sequence to
+//!   a cheaper storage rung → force-park a victim → reject the
+//!   attributed request with a retry hint.  The rung ratchets up under
+//!   sustained pressure and decays one step per
+//!   [`RetryPolicy::calm_rounds`] consecutive clean rounds.
+//! * `Corruption` / `Permanent` faults skip retries and quarantine the
+//!   attributed target immediately — a corrupted tier payload or a
+//!   broken artifact can only get worse by retrying.
+//!
+//! Quarantine evicts exactly the attributed sequence: its state is
+//! rolled back across every layer (scheduler, slot arena, cache
+//! manager, host tier) and its caller receives a [`GenResponse`] with
+//! [`GenResponse::error`] set, while every other sequence finishes with
+//! a token stream bitwise identical to the fault-free run.
+//!
+//! [`ServingEngine::step_supervised`]: super::scheduler::ServingEngine::step_supervised
+//! [`GenResponse`]: super::request::GenResponse
+//! [`GenResponse::error`]: super::request::GenResponse::error
+
+use super::invariants::Fnv;
+use std::collections::HashMap;
+use std::fmt;
+use std::time::Duration;
+
+/// Failure taxonomy of the serving path.  The class decides the
+/// recovery strategy, not the message text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// retry is expected to succeed (flaky launch, injected fault)
+    Transient,
+    /// memory/budget pressure: retry after shedding load
+    ResourceExhausted,
+    /// data integrity violation (checksum mismatch): never retry on
+    /// the same bytes — quarantine or rebuild
+    Corruption,
+    /// structural failure (missing entry, shape mismatch): retrying
+    /// cannot help
+    Permanent,
+}
+
+/// A typed serving-path error with blast-radius attribution.
+///
+/// At most one of `seq` / `req` is meaningful for recovery: `seq` names
+/// a live sequence (cache id) to quarantine, `req` a not-yet-admitted
+/// request (caller id) to reject.  `wave` records which admission wave
+/// the failure interrupted, for diagnostics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    /// recovery class
+    pub class: ErrorClass,
+    /// attributed live sequence (cache id), if any
+    pub seq: Option<u64>,
+    /// attributed not-yet-admitted request (caller id), if any
+    pub req: Option<u64>,
+    /// admission wave ordinal the failure interrupted, if wave-scoped
+    pub wave: Option<u64>,
+    /// human-readable cause (the full anyhow context chain)
+    pub msg: String,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}", self.class)?;
+        if let Some(s) = self.seq {
+            write!(f, "[seq {s}]")?;
+        }
+        if let Some(r) = self.req {
+            write!(f, "[req {r}]")?;
+        }
+        if let Some(w) = self.wave {
+            write!(f, "[wave {w}]")?;
+        }
+        write!(f, ": {}", self.msg)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// Unattributed error of the given class.
+    pub fn new(class: ErrorClass, msg: impl Into<String>) -> ServeError {
+        ServeError {
+            class,
+            seq: None,
+            req: None,
+            wave: None,
+            msg: msg.into(),
+        }
+    }
+
+    /// Attribute a live sequence (kept if already attributed).
+    pub fn with_seq(mut self, seq: u64) -> ServeError {
+        self.seq.get_or_insert(seq);
+        self
+    }
+
+    /// Attribute a not-yet-admitted request (kept if already attributed).
+    pub fn with_req(mut self, req: u64) -> ServeError {
+        self.req.get_or_insert(req);
+        self
+    }
+
+    /// Attribute an admission wave (kept if already attributed).
+    pub fn with_wave(mut self, wave: u64) -> ServeError {
+        self.wave.get_or_insert(wave);
+        self
+    }
+
+    /// Classify an `anyhow` error from the serving path.  A
+    /// [`ServeError`] anywhere in the context chain passes through
+    /// unchanged (raise sites attribute close to the failure); bare
+    /// errors fall back to message heuristics so pre-taxonomy raise
+    /// sites still land in the right class.
+    pub fn classify(err: &anyhow::Error) -> ServeError {
+        if let Some(se) = err.downcast_ref::<ServeError>() {
+            return se.clone();
+        }
+        let msg = format!("{err:#}");
+        let lower = msg.to_lowercase();
+        let class = if lower.contains("checksum") || lower.contains("corrupt") {
+            ErrorClass::Corruption
+        } else if lower.contains("budget") || lower.contains("pool") {
+            ErrorClass::ResourceExhausted
+        } else if lower.contains("injected") && lower.contains("fault") {
+            ErrorClass::Transient
+        } else {
+            ErrorClass::Permanent
+        };
+        ServeError::new(class, msg)
+    }
+
+    /// Wrap into an `anyhow::Error` (the serving path's transport).
+    pub fn into_anyhow(self) -> anyhow::Error {
+        anyhow::Error::new(self)
+    }
+}
+
+/// Classify + attribute a sequence-scoped failure in one step (raise
+/// sites on the decode/park/resume paths).
+pub(crate) fn seq_err(e: anyhow::Error, seq: u64) -> anyhow::Error {
+    ServeError::classify(&e).with_seq(seq).into_anyhow()
+}
+
+/// Classify + attribute a wave-scoped failure: the wave ordinal plus
+/// its lead request (the quarantine/reject target when retries run out).
+pub(crate) fn wave_err(e: anyhow::Error, wave: u64, req: u64) -> anyhow::Error {
+    ServeError::classify(&e)
+        .with_wave(wave)
+        .with_req(req)
+        .into_anyhow()
+}
+
+/// Deterministic retry/backoff policy.  All waits are charged on the
+/// serving [`Clock`](super::clock::Clock), so under a virtual clock
+/// every retry timing — jitter included — is a pure function of the
+/// config seed and the failure's attribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// failed attempts per target before the supervisor gives up and
+    /// quarantines/escalates
+    pub max_retries: u32,
+    /// backoff before the first retry
+    pub base: Duration,
+    /// multiplier per further attempt (exponential)
+    pub factor: u32,
+    /// backoff ceiling (pre-jitter)
+    pub max_backoff: Duration,
+    /// consecutive clean rounds before the pressure ladder decays one
+    /// rung (the hysteresis half of the degradation ladder)
+    pub calm_rounds: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_millis(2),
+            factor: 2,
+            max_backoff: Duration::from_millis(40),
+            calm_rounds: 4,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based) of `target`, with
+    /// seeded jitter: `min(base * factor^(attempt-1), max_backoff)`
+    /// plus an FNV-derived jitter in `[0, base)`.  Deterministic in
+    /// `(seed, target, attempt)` — two runs of the same scenario charge
+    /// bit-identical waits.
+    pub fn backoff(&self, seed: u64, target: u64, attempt: u32) -> Duration {
+        let base_ns = self.base.as_nanos() as u64;
+        let exp = attempt.saturating_sub(1).min(16);
+        let raw = base_ns.saturating_mul((self.factor as u64).saturating_pow(exp));
+        let capped = raw.min(self.max_backoff.as_nanos() as u64);
+        let mut h = Fnv::new();
+        h.push(seed);
+        h.push(target);
+        h.push(attempt as u64);
+        let jitter = if base_ns == 0 { 0 } else { h.finish() % base_ns };
+        Duration::from_nanos(capped + jitter)
+    }
+}
+
+/// What the supervisor did about one failed round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryAction {
+    /// nothing to do (clean round, or an unattributed fault the caller
+    /// must decide on)
+    None,
+    /// the round will be re-attempted after the charged backoff
+    Retry {
+        /// 1-based attempt counter for the attributed target
+        attempt: u32,
+        /// wait charged on the serving clock before the retry
+        backoff: Duration,
+    },
+    /// degradation rung 1: a cached prompt template was shed
+    Shed,
+    /// degradation rung 2: this sequence (cache id) was re-encoded to a
+    /// cheaper storage rung
+    Demote(u64),
+    /// degradation rung 3: this sequence (cache id) was force-parked
+    Park(u64),
+    /// this request (caller id) was evicted with a typed error response
+    Quarantine(u64),
+    /// this not-yet-admitted request (caller id) was rejected with a
+    /// typed error response carrying a retry hint
+    Reject(u64),
+}
+
+/// One supervised scheduler round: whether work remains, the classified
+/// fault (if the round failed), and the recovery taken.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// more rounds remain (mirrors `step`'s `Ok(bool)`)
+    pub more: bool,
+    /// the round's classified failure, `None` for a clean round
+    pub fault: Option<ServeError>,
+    /// what the supervisor did about it
+    pub action: RecoveryAction,
+}
+
+/// Supervisor bookkeeping: per-target consecutive failed attempts, the
+/// current pressure-ladder rung, and the clean-round streak that decays
+/// it (hysteresis).
+#[derive(Debug, Default)]
+pub struct SupervisorState {
+    /// (is_request, id) -> consecutive failed attempts
+    attempts: HashMap<(bool, u64), u32>,
+    /// current degradation rung: 0 = none, 1 = shed, 2 = demote,
+    /// 3 = park, 4 = reject
+    pressure: u32,
+    /// consecutive clean rounds since the last escalation
+    calm: u32,
+}
+
+impl SupervisorState {
+    /// Record one failed attempt for a target; returns the new count.
+    pub(crate) fn bump(&mut self, key: (bool, u64)) -> u32 {
+        let n = self.attempts.entry(key).or_insert(0);
+        *n += 1;
+        *n
+    }
+
+    /// Forget a target (it recovered, or it was evicted).
+    pub(crate) fn clear(&mut self, key: (bool, u64)) {
+        self.attempts.remove(&key);
+    }
+
+    /// Forget both attributions of an id (sequence and request scoped).
+    pub(crate) fn clear_id(&mut self, id: u64) {
+        self.attempts.remove(&(false, id));
+        self.attempts.remove(&(true, id));
+    }
+
+    /// Current degradation rung (0 = no pressure).
+    pub fn pressure(&self) -> u32 {
+        self.pressure
+    }
+
+    /// Ratchet the pressure rung up to at least `rung` (escalation
+    /// resets the calm streak — decay starts over).
+    pub(crate) fn ratchet(&mut self, rung: u32) {
+        self.pressure = self.pressure.max(rung);
+        self.calm = 0;
+    }
+
+    /// Record a clean round; after `calm_rounds` in a row the pressure
+    /// rung decays one step (hysteresis: recovery is gradual, so a
+    /// single quiet round cannot flap the ladder).
+    pub(crate) fn note_clean(&mut self, policy: &RetryPolicy) {
+        if self.pressure == 0 {
+            return;
+        }
+        self.calm += 1;
+        if self.calm >= policy.calm_rounds.max(1) {
+            self.pressure -= 1;
+            self.calm = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn backoff_is_deterministic_exponential_and_capped() {
+        let p = RetryPolicy::default();
+        let a1 = p.backoff(7, 42, 1);
+        let a1b = p.backoff(7, 42, 1);
+        assert_eq!(a1, a1b, "same (seed, target, attempt) must reproduce");
+        assert_ne!(
+            p.backoff(7, 42, 1),
+            p.backoff(7, 43, 1),
+            "jitter must separate targets"
+        );
+        // pre-jitter schedule doubles: attempt n+1 >= attempt n floor
+        let floor = |n: u32| p.base.as_nanos() as u64 * 2u64.pow(n - 1);
+        for n in 1..=4 {
+            let b = p.backoff(7, 42, n).as_nanos() as u64;
+            assert!(b >= floor(n), "attempt {n} under its exponential floor");
+            assert!(
+                b < floor(n) + p.base.as_nanos() as u64,
+                "attempt {n} jitter exceeds base"
+            );
+        }
+        // deep attempts cap at max_backoff + jitter
+        let deep = p.backoff(7, 42, 30);
+        assert!(deep <= p.max_backoff + p.base);
+    }
+
+    #[test]
+    fn classify_heuristics_cover_untyped_errors() {
+        let cases = [
+            ("injected decode launch fault", ErrorClass::Transient),
+            ("cache budget exceeded", ErrorClass::ResourceExhausted),
+            ("checksum mismatch on unpark", ErrorClass::Corruption),
+            ("mock has no entry 'x'", ErrorClass::Permanent),
+        ];
+        for (msg, class) in cases {
+            assert_eq!(
+                ServeError::classify(&anyhow!("{msg}")).class,
+                class,
+                "{msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn typed_errors_survive_the_anyhow_round_trip() {
+        let e = ServeError::new(ErrorClass::Corruption, "bad bytes")
+            .with_seq(9)
+            .with_wave(2);
+        let any = e.clone().into_anyhow().context("resuming sequence 9");
+        let back = ServeError::classify(&any);
+        assert_eq!(back, e, "context wrapping must not strip the taxonomy");
+        // attribution is first-writer-wins
+        assert_eq!(back.with_seq(4).seq, Some(9));
+    }
+
+    #[test]
+    fn pressure_ladder_ratchets_and_decays_with_hysteresis() {
+        let p = RetryPolicy {
+            calm_rounds: 2,
+            ..RetryPolicy::default()
+        };
+        let mut s = SupervisorState::default();
+        s.ratchet(2);
+        s.ratchet(1); // never down
+        assert_eq!(s.pressure(), 2);
+        s.note_clean(&p);
+        assert_eq!(s.pressure(), 2, "one quiet round must not decay");
+        s.note_clean(&p);
+        assert_eq!(s.pressure(), 1, "calm_rounds quiet rounds decay one rung");
+        s.note_clean(&p);
+        s.note_clean(&p);
+        assert_eq!(s.pressure(), 0);
+        s.note_clean(&p);
+        assert_eq!(s.pressure(), 0);
+    }
+
+    #[test]
+    fn attempts_track_targets_independently() {
+        let mut s = SupervisorState::default();
+        assert_eq!(s.bump((false, 1)), 1);
+        assert_eq!(s.bump((false, 1)), 2);
+        assert_eq!(s.bump((true, 1)), 1, "request scope is separate");
+        s.clear_id(1);
+        assert_eq!(s.bump((false, 1)), 1);
+    }
+}

@@ -15,6 +15,8 @@
 //! measured counterpart of the Eq. 3 analysis in `model::memory` and the
 //! two are cross-checked in tests.
 
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use super::allocator::{BlockPool, PoolStats};
 use super::block::{Block, Format, RowsView};
 use super::prefix::{PrefixIndex, PrefixStats};
@@ -323,6 +325,10 @@ pub struct ParkedBytes {
     /// leading rows resident in the shared prefix store (not in the
     /// payload; 0 for unshared sequences)
     pub prefix_rows: usize,
+    /// the sequence was demoted to the int8 rung before parking: every
+    /// stored stream in the payload is int8-encoded regardless of the
+    /// plan's formats, and restore must derive the layout accordingly
+    pub demoted: bool,
     /// concatenated encoded suffix stream bytes (see wire format above)
     pub payload: Vec<u8>,
 }
@@ -349,6 +355,10 @@ struct SeqCache {
     prefix_path: Vec<u32>,
     /// rows covered by the shared chain (block-aligned; 0 = unshared)
     prefix_rows: usize,
+    /// the pressure ladder demoted this sequence's own blocks to the
+    /// int8 rung: existing rows were re-encoded, future appends and
+    /// park/restore layouts use int8 for every stored stream
+    demoted: bool,
     /// [layer][side] streams, side 0 = K, 1 = V — suffix rows only
     streams: Vec<[Stream; 2]>,
 }
@@ -460,6 +470,7 @@ impl CacheManager {
                 parked: false,
                 prefix_path: Vec::new(),
                 prefix_rows: 0,
+                demoted: false,
                 streams,
             },
         );
@@ -583,7 +594,13 @@ impl CacheManager {
                     &mut gather,
                 );
                 if let Some(mut rows) = rows {
-                    let fmt = self.cfg.format_for(&kind);
+                    // a demoted sequence keeps every stored stream on
+                    // the int8 rung, whatever the plan would encode
+                    let fmt = if seq.demoted {
+                        Format::Int8
+                    } else {
+                        self.cfg.format_for(&kind)
+                    };
                     let epr = kind.elements(&spec);
                     let stream = &mut seq.streams[layer][side];
                     while !rows.is_empty() {
@@ -594,7 +611,11 @@ impl CacheManager {
                                 .ok_or_else(|| anyhow!("cache budget exceeded"))?;
                             stream.blocks.push(b);
                         }
-                        let pushed = stream.blocks.last_mut().unwrap().push_rows(rows);
+                        let pushed = stream
+                            .blocks
+                            .last_mut()
+                            .expect("a block was just ensured above")
+                            .push_rows(rows);
                         rows = &rows[pushed * epr..];
                     }
                 }
@@ -717,6 +738,7 @@ impl CacheManager {
         Ok(ParkedBytes {
             len: seq.len,
             prefix_rows: seq.prefix_rows,
+            demoted: seq.demoted,
             payload,
         })
     }
@@ -758,7 +780,12 @@ impl CacheManager {
             for side in [Side::K, Side::V] {
                 let kind = self.cfg.store_kind(layer, side);
                 let epr = kind.elements(&spec);
-                let fmt = self.cfg.format_for(&kind);
+                // a demoted payload is int8 in every stored stream
+                let fmt = if parked.demoted && epr > 0 {
+                    Format::Int8
+                } else {
+                    self.cfg.format_for(&kind)
+                };
                 let nbytes = if epr == 0 { 0 } else { own * fmt.row_bytes(epr) };
                 layout.push((fmt, epr, nbytes));
             }
@@ -799,13 +826,117 @@ impl CacheManager {
             }
             staged.push(blocks);
         }
-        let seq = self.seqs.get_mut(&id).unwrap();
+        let seq = self
+            .seqs
+            .get_mut(&id)
+            .expect("sequence existence checked above");
         for (i, blocks) in staged.into_iter().enumerate() {
             seq.streams[i / 2][i % 2].blocks = blocks;
         }
         seq.parked = false;
+        seq.demoted = parked.demoted;
         seq.decoded_upto = 0;
         Ok(())
+    }
+
+    /// Whether the pressure ladder has demoted this sequence to the int8
+    /// rung (false for unknown sequences).
+    pub fn seq_demoted(&self, id: u64) -> bool {
+        self.seqs.get(&id).map_or(false, |s| s.demoted)
+    }
+
+    /// Demote a sequence's own blocks to the cheapest storage rung: every
+    /// stored stream not already int8 is decoded and re-encoded as int8
+    /// (Eq. 4 per-row quantization), freeing the difference back to the
+    /// pool.  The pressure ladder's middle step — lossy (quantization
+    /// error on the re-encoded rows) but the sequence stays resident and
+    /// decodable, unlike a park.  Shared prefix blocks are untouched:
+    /// other sharers read them, so only private suffix bytes get cheaper.
+    ///
+    /// Staging is all-or-nothing: replacement blocks for every stream are
+    /// allocated before any original is freed, so a budget failure
+    /// mid-way leaves the sequence exactly as it was (the transient
+    /// double-residency is why a demotion can fail under the very
+    /// pressure it relieves — the ladder then moves to the park rung).
+    /// Idempotent: a demoted sequence returns `Ok(0)`.  The decode
+    /// watermark is invalidated — re-encoded rows decode to slightly
+    /// different f32s, so stale scratch must not survive the demotion.
+    ///
+    /// Returns the stored bytes freed (block-capacity granularity).
+    pub fn demote_sequence(&mut self, id: u64) -> Result<usize> {
+        let spec = self.cfg.spec.clone();
+        let bs = self.cfg.block_size;
+        let seq = self
+            .seqs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        anyhow::ensure!(!seq.parked, "sequence {id} is parked in the host tier");
+        if seq.demoted {
+            return Ok(0);
+        }
+        let mut staged: Vec<Option<Vec<Block>>> = Vec::with_capacity(2 * spec.n_layer);
+        let mut scratch: Vec<f32> = Vec::new();
+        for layer in 0..spec.n_layer {
+            for side in 0..2usize {
+                let stream = &seq.streams[layer][side];
+                let epr = stream.kind.elements(&spec);
+                if epr == 0
+                    || stream.blocks.is_empty()
+                    || stream
+                        .blocks
+                        .iter()
+                        .all(|b| matches!(b.format, Format::Int8))
+                {
+                    staged.push(None);
+                    continue;
+                }
+                let mut new_blocks: Vec<Block> = Vec::new();
+                for b in &stream.blocks {
+                    scratch.resize(b.rows * epr, 0.0);
+                    b.decode_rows_into(0, b.rows, &mut scratch[..b.rows * epr]);
+                    let mut rows: &[f32] = &scratch[..b.rows * epr];
+                    while !rows.is_empty() {
+                        if new_blocks.last().map_or(true, Block::is_full) {
+                            let Some(nb) = self.pool.alloc(Format::Int8, epr, bs) else {
+                                for blk in new_blocks {
+                                    self.pool.free(blk);
+                                }
+                                for s in staged.into_iter().flatten() {
+                                    for blk in s {
+                                        self.pool.free(blk);
+                                    }
+                                }
+                                return Err(anyhow!(
+                                    "cache budget exceeded demoting sequence {id}"
+                                ));
+                            };
+                            new_blocks.push(nb);
+                        }
+                        let pushed = new_blocks
+                            .last_mut()
+                            .expect("a block was just ensured above")
+                            .push_rows(rows);
+                        rows = &rows[pushed * epr..];
+                    }
+                }
+                staged.push(Some(new_blocks));
+            }
+        }
+        let mut before = 0usize;
+        let mut after = 0usize;
+        for (i, slot) in staged.into_iter().enumerate() {
+            if let Some(new_blocks) = slot {
+                after += new_blocks.iter().map(Block::stored_bytes).sum::<usize>();
+                let old = std::mem::replace(&mut seq.streams[i / 2][i % 2].blocks, new_blocks);
+                for b in old {
+                    before += b.stored_bytes();
+                    self.pool.free(b);
+                }
+            }
+        }
+        seq.demoted = true;
+        seq.decoded_upto = 0;
+        Ok(before.saturating_sub(after))
     }
 
     /// Measured stored bytes for a sequence (block capacity granularity).
@@ -865,7 +996,10 @@ impl CacheManager {
         let path = self.prefix.attach(leaf)?;
         let rows = path.len() * bs;
         debug_assert!(rows <= max_seq, "prefix chain exceeds max_seq");
-        let seq = self.seqs.get_mut(&id).unwrap();
+        let seq = self
+            .seqs
+            .get_mut(&id)
+            .expect("sequence existence checked above");
         seq.prefix_path = path;
         seq.prefix_rows = rows;
         seq.len = rows;
@@ -1682,6 +1816,62 @@ mod tests {
         parked.len = 9;
         m.restore_sequence_bytes(id, &parked).unwrap();
         assert_eq!(m.seq_len(id), Some(9));
+    }
+
+    #[test]
+    fn demotion_re_encodes_to_int8_and_survives_a_tier_round_trip() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 2); // f32 streams
+        let mut m = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let id = m.create_sequence();
+        let mut rng = Rng::new(41);
+        append_n(&mut m, id, 20, &mut rng);
+        let before_bytes = m.seq_stored_bytes(id);
+        let before_rows = match m.stored_rows(id, 0, Side::K).unwrap() {
+            StoredRows::Latent(rows) => rows,
+            other => panic!("{other:?}"),
+        };
+
+        let freed = m.demote_sequence(id).unwrap();
+        assert!(freed > 0, "f32 -> int8 must free bytes");
+        assert!(m.seq_demoted(id));
+        assert_eq!(m.seq_stored_bytes(id), before_bytes - freed);
+        assert_eq!(m.decoded_upto(id), Some(0), "stale scratch must not survive");
+        // lossy but close: one quantization of the original rows
+        match m.stored_rows(id, 0, Side::K).unwrap() {
+            StoredRows::Latent(rows) => {
+                assert_eq!(rows.len(), before_rows.len());
+                for (a, b) in rows.iter().zip(&before_rows) {
+                    assert!((a - b).abs() < 0.05, "{a} vs {b}");
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        // idempotent
+        assert_eq!(m.demote_sequence(id).unwrap(), 0);
+        // appends stay on the int8 rung
+        append_n(&mut m, id, 1, &mut rng);
+        let streams: Vec<String> = (0..spec.n_layer)
+            .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+            .map(|(l, s)| format!("{:?}", m.stored_rows(id, l, s).unwrap()))
+            .collect();
+        // the parked flag drives an int8 wire layout on restore
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        assert!(parked.demoted);
+        m.restore_sequence_bytes(id, &parked).unwrap();
+        assert!(m.seq_demoted(id));
+        for (i, (l, s)) in (0..spec.n_layer)
+            .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+            .enumerate()
+        {
+            assert_eq!(
+                format!("{:?}", m.stored_rows(id, l, s).unwrap()),
+                streams[i],
+                "stream ({l}, {s:?}) diverges after a demoted tier round-trip"
+            );
+        }
+        m.free_sequence(id);
+        assert_eq!(m.pool_stats().live_bytes, 0);
     }
 
     /// Prefill-lane-shaped buffers ([L, n, *]) for `n` prompt rows.

@@ -19,6 +19,7 @@
 //! than the baseline.
 
 use super::manager::ParkedBytes;
+use anyhow::Result;
 use std::collections::HashMap;
 use std::time::Duration;
 
@@ -31,6 +32,10 @@ pub const TRANSFER_LATENCY_US: f64 = 30.0;
 #[derive(Debug, Default)]
 pub struct HostTier {
     parked: HashMap<u64, ParkedSeq>,
+    /// fault injection: corrupt the payload of this many upcoming parks
+    /// *after* their checksum is taken (models an in-flight bit flip;
+    /// `unpark_verified` must trip on them)
+    corrupt_next: u32,
     /// eviction/resume counters and modeled transfer time
     pub stats: TierStats,
 }
@@ -39,6 +44,9 @@ pub struct HostTier {
 struct ParkedSeq {
     bytes: usize,
     len: usize,
+    /// CRC32 over the wire payload, taken at park time —
+    /// `unpark_verified` re-checks it before the bytes are trusted
+    crc: u32,
     /// real encoded payload (`park`); None for modeled `evict` entries
     payload: Option<ParkedBytes>,
 }
@@ -58,8 +66,27 @@ pub struct TierStats {
     pub host_bytes: usize,
     /// high-water mark of `host_bytes`
     pub peak_host_bytes: usize,
+    /// unpark payloads that failed CRC verification (each drops its
+    /// entry — corrupted bytes never reach the device cache)
+    pub checksum_failures: u64,
     /// accumulated modeled transfer time
     pub transfer_time: Duration,
+}
+
+/// CRC32 (IEEE 802.3, reflected polynomial `0xEDB8_8320`) over the
+/// headerless tier wire format — the integrity check every real park
+/// records and every verified unpark re-derives.  Bitwise (no table):
+/// tier payloads are spilled cold paths, not per-round hot paths.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
 }
 
 /// Modeled PCIe transfer time for `bytes` (fixed latency + bandwidth).
@@ -86,16 +113,33 @@ impl HostTier {
         let n = bytes.payload.len();
         let cost = transfer_cost(n);
         self.account_out(n);
-        self.parked.insert(
-            seq_id,
-            ParkedSeq {
-                bytes: n,
-                len: bytes.len,
-                payload: Some(bytes),
-            },
-        );
+        // checksum the sender's bytes *before* any injected corruption:
+        // the fault models a bit flip in flight, after the CRC was taken
+        let crc = crc32(&bytes.payload);
+        let mut entry = ParkedSeq {
+            bytes: n,
+            len: bytes.len,
+            crc,
+            payload: Some(bytes),
+        };
+        if self.corrupt_next > 0 && n > 0 {
+            self.corrupt_next -= 1;
+            if let Some(p) = entry.payload.as_mut() {
+                let at = n / 2;
+                p.payload[at] ^= 1 << (at % 8);
+            }
+        }
+        self.parked.insert(seq_id, entry);
         self.stats.transfer_time += cost;
         cost
+    }
+
+    /// Arm corruption of the next `n` real parks: a single deterministic
+    /// bit flip is applied to each stored payload *after* its CRC is
+    /// recorded, so the matching `unpark_verified` must fail.  Fault
+    /// injection for the corrupted-transfer scenario legs.
+    pub fn inject_corruption(&mut self, n: u32) {
+        self.corrupt_next = n;
     }
 
     /// Undo a just-completed `unpark` whose device-side restore failed:
@@ -113,11 +157,13 @@ impl HostTier {
         self.stats.host_bytes += n;
         self.stats.peak_host_bytes = self.stats.peak_host_bytes.max(self.stats.host_bytes);
         self.stats.transfer_time -= transfer_cost(n);
+        let crc = crc32(&bytes.payload);
         self.parked.insert(
             seq_id,
             ParkedSeq {
                 bytes: n,
                 len: bytes.len,
+                crc,
                 payload: Some(bytes),
             },
         );
@@ -138,6 +184,47 @@ impl HostTier {
         Some((p.payload.unwrap(), cost))
     }
 
+    /// `unpark` plus CRC verification — the serving resume path.  On a
+    /// checksum mismatch the entry is dropped (the transfer already
+    /// happened; corrupted bytes must not be retried or restored),
+    /// `stats.checksum_failures` is bumped, and the caller gets a typed
+    /// corruption error to quarantine the sequence with.  `Ok(None)`
+    /// mirrors `unpark`'s None: not parked here, or a modeled entry.
+    pub fn unpark_verified(&mut self, seq_id: u64) -> Result<Option<(ParkedBytes, Duration)>> {
+        let want = match self.parked.get(&seq_id) {
+            Some(p) if p.payload.is_some() => p.crc,
+            _ => return Ok(None),
+        };
+        let (bytes, cost) = self
+            .unpark(seq_id)
+            .expect("entry with payload checked above");
+        let got = crc32(&bytes.payload);
+        if got != want {
+            self.stats.checksum_failures += 1;
+            anyhow::bail!(
+                "checksum mismatch unparking sequence {seq_id}: \
+                 payload of {} bytes corrupted in the host tier \
+                 (crc {got:#010x} != {want:#010x})",
+                bytes.payload.len()
+            );
+        }
+        Ok(Some((bytes, cost)))
+    }
+
+    /// Drop a parked entry without transferring it back — quarantine
+    /// cleanup for a sequence that died while parked.  Host bytes are
+    /// released; no resume or transfer time is charged.  Returns whether
+    /// an entry existed.
+    pub fn discard(&mut self, seq_id: u64) -> bool {
+        match self.parked.remove(&seq_id) {
+            Some(p) => {
+                self.stats.host_bytes -= p.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Park a sequence's compressed payload on the host (modeled: only
     /// the byte count is tracked — memsim / what-if analysis).  Panics
     /// on a double-evict, like `park`.
@@ -153,6 +240,7 @@ impl HostTier {
             ParkedSeq {
                 bytes: stored_bytes,
                 len,
+                crc: 0,
                 payload: None,
             },
         );
@@ -225,6 +313,7 @@ mod tests {
         let bytes = ParkedBytes {
             len: 3,
             prefix_rows: 0,
+            demoted: false,
             payload: vec![7u8, 1, 2, 255, 0, 42],
         };
         let c1 = tier.park(5, bytes.clone());
@@ -254,6 +343,7 @@ mod tests {
             ParkedBytes {
                 len: 2,
                 prefix_rows: 0,
+                demoted: false,
                 payload: vec![1, 2, 3, 4],
             },
         );
@@ -275,6 +365,7 @@ mod tests {
         let b = ParkedBytes {
             len: 1,
             prefix_rows: 0,
+            demoted: false,
             payload: vec![0],
         };
         tier.park(1, b.clone());
@@ -308,6 +399,93 @@ mod tests {
         let ratio = t_base.stats.transfer_time.as_secs_f64()
             / t_comp.stats.transfer_time.as_secs_f64();
         assert!(ratio > 3.0, "expected ~4x transfer saving, got {ratio:.2}x");
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // the standard CRC-32/IEEE check vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // a single flipped bit changes the checksum
+        assert_ne!(crc32(&[7, 1, 2, 255, 0, 42]), crc32(&[7, 1, 3, 255, 0, 42]));
+    }
+
+    #[test]
+    fn verified_unpark_round_trips_clean_payloads() {
+        let mut tier = HostTier::new();
+        let bytes = ParkedBytes {
+            len: 3,
+            prefix_rows: 1,
+            demoted: false,
+            payload: vec![9u8, 8, 7, 6, 5, 4],
+        };
+        let c1 = tier.park(2, bytes.clone());
+        let (back, c2) = tier.unpark_verified(2).unwrap().unwrap();
+        assert_eq!(back, bytes);
+        assert_eq!(c1, c2);
+        assert_eq!(tier.stats.checksum_failures, 0);
+        // absent and modeled entries come back as Ok(None), like unpark
+        assert!(tier.unpark_verified(2).unwrap().is_none());
+        tier.evict(3, 100, 4);
+        assert!(tier.unpark_verified(3).unwrap().is_none());
+    }
+
+    #[test]
+    fn injected_corruption_trips_verification_and_drops_the_entry() {
+        let mut tier = HostTier::new();
+        tier.inject_corruption(1);
+        tier.park(
+            4,
+            ParkedBytes {
+                len: 2,
+                prefix_rows: 0,
+                demoted: false,
+                payload: vec![1, 2, 3, 4],
+            },
+        );
+        let err = tier.unpark_verified(4).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"));
+        assert_eq!(tier.stats.checksum_failures, 1);
+        // the entry is gone and its bytes have left the host tier — the
+        // transfer happened, it just delivered garbage
+        assert!(!tier.is_parked(4));
+        assert_eq!(tier.stats.host_bytes, 0);
+        assert_eq!(tier.stats.bytes_in, tier.stats.bytes_out);
+        // only the armed park was corrupted; the next one is clean
+        tier.park(
+            5,
+            ParkedBytes {
+                len: 1,
+                prefix_rows: 0,
+                demoted: false,
+                payload: vec![42, 43],
+            },
+        );
+        assert!(tier.unpark_verified(5).unwrap().is_some());
+        assert_eq!(tier.stats.checksum_failures, 1);
+    }
+
+    #[test]
+    fn discard_releases_host_bytes_without_a_transfer() {
+        let mut tier = HostTier::new();
+        tier.park(
+            7,
+            ParkedBytes {
+                len: 2,
+                prefix_rows: 0,
+                demoted: false,
+                payload: vec![1, 2, 3, 4],
+            },
+        );
+        let before = tier.stats;
+        assert!(tier.discard(7));
+        assert!(!tier.is_parked(7));
+        assert_eq!(tier.stats.host_bytes, 0);
+        // no resume / bytes_in / transfer_time charged
+        assert_eq!(tier.stats.resumes, before.resumes);
+        assert_eq!(tier.stats.bytes_in, before.bytes_in);
+        assert_eq!(tier.stats.transfer_time, before.transfer_time);
+        assert!(!tier.discard(7));
     }
 
     #[test]

@@ -50,12 +50,24 @@ pub trait ExecBackend {
     /// Arm a one-shot launch fault: the `nth` (1-based) subsequent
     /// execution of the given kind (`"prefill"` / `"decode"`) fails
     /// with an injected error, then the fault clears.  Returns whether
-    /// the backend supports injection (the real engine does not — its
-    /// failures are real).  The scenario harness uses this to prove the
-    /// scheduler's transactional guarantees hold mid-wave and mid-round.
+    /// the backend supports injection (both the mock and the real
+    /// engine do — the engine fails the launch before compiling or
+    /// uploading anything).  The scenario harness uses this to prove
+    /// the scheduler's transactional guarantees hold mid-wave and
+    /// mid-round.
     fn inject_launch_fault(&mut self, kind: &str, nth: u64) -> bool {
         let _ = (kind, nth);
         false
+    }
+
+    /// Like [`ExecBackend::inject_launch_fault`], but after firing the
+    /// fault re-arms for the next launch of the same kind `burst` more
+    /// times — a flapping backend whose retries keep failing, which is
+    /// what drives a target past its retry budget into quarantine.
+    /// `burst = 0` is exactly the one-shot contract.
+    fn inject_launch_fault_burst(&mut self, kind: &str, nth: u64, burst: u64) -> bool {
+        let _ = burst;
+        self.inject_launch_fault(kind, nth)
     }
 }
 
@@ -101,5 +113,13 @@ impl ExecBackend for Engine {
 
     fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    fn inject_launch_fault(&mut self, kind: &str, nth: u64) -> bool {
+        Engine::arm_launch_fault(self, kind, nth, 0)
+    }
+
+    fn inject_launch_fault_burst(&mut self, kind: &str, nth: u64, burst: u64) -> bool {
+        Engine::arm_launch_fault(self, kind, nth, burst)
     }
 }

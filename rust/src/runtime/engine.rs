@@ -41,6 +41,13 @@ pub struct Engine {
     pub use_device_residency: bool,
     /// rows per delta-upload chunk (`KVCAR_RESIDENT_CHUNK_ROWS`)
     pub chunk_rows: usize,
+    /// armed launch faults, keyed by kind (`"prefill"` / `"decode"`):
+    /// (launches until it fires, re-arms left after firing).  The real
+    /// engine honors the same `inject_launch_fault` contract as the
+    /// mock, so fault drills and the chaos scenario matrix run against
+    /// live artifacts too; a fault fires *before* anything is compiled
+    /// or uploaded, leaving device state untouched.
+    launch_faults: HashMap<String, (u64, u64)>,
     /// compile/execute/traffic counters
     pub stats: EngineStats,
 }
@@ -157,8 +164,51 @@ impl Engine {
             use_buffer_cache: std::env::var("KVCAR_NO_BUFFER_CACHE").is_err(),
             use_device_residency: std::env::var("KVCAR_NO_DEVICE_RESIDENCY").is_err(),
             chunk_rows: chunk_rows_from_env(),
+            launch_faults: HashMap::new(),
             stats: EngineStats::default(),
         })
+    }
+
+    /// Arm a launch fault: the `nth` (1-based) next prefill /
+    /// decode-step launch fails before compilation or upload, then
+    /// re-arms `burst` more times.  Returns whether `kind` is one the
+    /// engine can fault (`"prefill"` / `"decode"`).
+    pub fn arm_launch_fault(&mut self, kind: &str, nth: u64, burst: u64) -> bool {
+        if kind != "prefill" && kind != "decode" {
+            return false;
+        }
+        self.launch_faults
+            .insert(kind.to_string(), (nth.max(1), burst));
+        true
+    }
+
+    /// Fire an armed launch fault if `entry` is its kind's due launch.
+    /// Checked before [`Engine::load`] so a faulted launch costs no
+    /// compile and moves no bytes — the same pre-execution contract the
+    /// mock implements, which the scheduler's transactional rollback
+    /// relies on.
+    fn tick_launch_fault(&mut self, entry: &str) -> Result<()> {
+        let kind = if entry.contains("_prefill") {
+            "prefill"
+        } else if entry.contains("_decode_step") {
+            "decode"
+        } else {
+            return Ok(());
+        };
+        let Some((n, burst)) = self.launch_faults.get_mut(kind) else {
+            return Ok(());
+        };
+        if *n > 1 {
+            *n -= 1;
+            return Ok(());
+        }
+        if *burst > 0 {
+            *burst -= 1;
+            *n = 1;
+        } else {
+            self.launch_faults.remove(kind);
+        }
+        anyhow::bail!("injected {kind} launch fault before launching {entry}")
     }
 
     /// Compile (or fetch the cached) executable for an entry point.
@@ -196,6 +246,7 @@ impl Engine {
     /// Execute `entry` reading inputs by name from the store; returns
     /// outputs keyed by the manifest's output names.
     pub fn execute(&mut self, entry: &str, store: &Store) -> Result<Vec<(String, Tensor)>> {
+        self.tick_launch_fault(entry)?;
         self.load(entry)?;
         let spec = self.manifest.entry(entry)?.clone();
         let result = if self.use_buffer_cache {

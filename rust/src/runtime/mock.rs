@@ -47,6 +47,10 @@ pub struct MockEngine {
     fail_prefill_in: Option<u64>,
     /// one-shot decode-launch fault: fails the nth next decode_step call
     fail_decode_in: Option<u64>,
+    /// re-arms left on the prefill fault after it fires (flapping lane)
+    burst_prefill: u64,
+    /// re-arms left on the decode fault after it fires (flapping lane)
+    burst_decode: u64,
     /// last-seen store versions of resident regions (dirty-span drain)
     last_versions: BTreeMap<String, u64>,
 }
@@ -66,6 +70,8 @@ impl MockEngine {
             stats: EngineStats::default(),
             fail_prefill_in: None,
             fail_decode_in: None,
+            burst_prefill: 0,
+            burst_decode: 0,
             last_versions: BTreeMap::new(),
         }
     }
@@ -113,11 +119,18 @@ impl MockEngine {
     }
 
     /// Decrement a one-shot fault counter; `Err` exactly when it hits
-    /// its armed call.
-    fn tick_fault(counter: &mut Option<u64>, what: &str) -> Result<()> {
+    /// its armed call.  A non-zero burst re-arms the fault for the next
+    /// launch of the same kind after each firing, so retries of the
+    /// failed launch keep failing until the burst drains.
+    fn tick_fault(counter: &mut Option<u64>, burst: &mut u64, what: &str) -> Result<()> {
         if let Some(n) = *counter {
             if n <= 1 {
-                *counter = None;
+                if *burst > 0 {
+                    *burst -= 1;
+                    *counter = Some(1);
+                } else {
+                    *counter = None;
+                }
                 bail!("injected {what} launch fault");
             }
             *counter = Some(n - 1);
@@ -126,7 +139,7 @@ impl MockEngine {
     }
 
     fn prefill(&mut self, store: &Store, cap: usize) -> Result<Vec<(String, Tensor)>> {
-        Self::tick_fault(&mut self.fail_prefill_in, "prefill")?;
+        Self::tick_fault(&mut self.fail_prefill_in, &mut self.burst_prefill, "prefill")?;
         let (l, s, kvd, dl, v) = (
             self.spec.n_layer,
             self.spec.max_seq,
@@ -199,7 +212,7 @@ impl MockEngine {
     }
 
     fn decode_step(&mut self, store: &Store, b: usize) -> Result<Vec<(String, Tensor)>> {
-        Self::tick_fault(&mut self.fail_decode_in, "decode")?;
+        Self::tick_fault(&mut self.fail_decode_in, &mut self.burst_decode, "decode")?;
         let (l, s, kvd, dl, v) = (
             self.spec.n_layer,
             self.spec.max_seq,
@@ -420,13 +433,19 @@ impl ExecBackend for MockEngine {
     }
 
     fn inject_launch_fault(&mut self, kind: &str, nth: u64) -> bool {
+        self.inject_launch_fault_burst(kind, nth, 0)
+    }
+
+    fn inject_launch_fault_burst(&mut self, kind: &str, nth: u64, burst: u64) -> bool {
         match kind {
             "prefill" => {
                 self.fail_prefill_in = Some(nth.max(1));
+                self.burst_prefill = burst;
                 true
             }
             "decode" => {
                 self.fail_decode_in = Some(nth.max(1));
+                self.burst_decode = burst;
                 true
             }
             _ => false,
@@ -535,6 +554,28 @@ mod tests {
         assert!(
             engine.execute("mock_prefill", &store).is_ok(),
             "fault is one-shot"
+        );
+    }
+
+    #[test]
+    fn burst_faults_rearm_for_consecutive_launches() {
+        let spec = tiny_spec();
+        let mut engine = MockEngine::new(spec.clone());
+        assert!(engine.inject_launch_fault_burst("prefill", 1, 2));
+        let mut store = Store::new();
+        store.insert_view_i32_zeroed("tokens", vec![1, spec.max_seq]);
+        let mask = store.insert_view_zeroed("len_mask", vec![1, spec.max_seq]);
+        mask[..4].fill(1.0);
+        store.insert("last", Tensor::scalar_i32(3));
+        for firing in 0..3 {
+            assert!(
+                engine.execute("mock_prefill", &store).is_err(),
+                "firing {firing} of a burst-2 fault must fail"
+            );
+        }
+        assert!(
+            engine.execute("mock_prefill", &store).is_ok(),
+            "fault clears once the burst drains"
         );
     }
 }

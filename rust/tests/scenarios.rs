@@ -31,7 +31,7 @@ fn standard_matrix_is_bit_reproducible() {
         // every virtual-clock timing figure — must be bit-identical
         assert_eq!(a, b, "scenario '{}' is not deterministic", sc.name);
         assert_eq!(
-            a.completed + a.rejected.len(),
+            a.completed + a.rejected.len() + a.quarantined.len(),
             sc.trace.n_requests,
             "scenario '{}' lost requests",
             sc.name
@@ -96,7 +96,7 @@ fn feature_off_legs_hold_invariants_and_are_reproducible() {
             let b = run(&sc);
             assert_eq!(a, b, "scenario '{}' with {leg} off drifted", sc.name);
             assert_eq!(
-                a.completed + a.rejected.len(),
+                a.completed + a.rejected.len() + a.quarantined.len(),
                 sc.trace.n_requests,
                 "scenario '{}' with {leg} off lost requests",
                 sc.name
@@ -137,8 +137,9 @@ fn budget_exhaustion_rejects_all_and_leaks_nothing() {
     // a pool ceiling below a single request's first block: every
     // admission wave must fail, roll back without leaking a sequence
     // (the per-round invariant audit inside run_scenario proves it),
-    // and the forward-progress valve must reject every request instead
-    // of hanging
+    // and the supervisor must retry under backoff, exhaust the ladder
+    // (nothing to shed/demote/park), and reject every request with a
+    // typed error instead of hanging
     let mut sc = Scenario::new(
         "budget_exhaustion",
         TraceConfig {
@@ -211,6 +212,117 @@ fn midwave_prefill_fault_rolls_back_ingest_and_retries_identically() {
 }
 
 #[test]
+fn persistent_fault_quarantines_one_sequence_and_spares_survivors() {
+    // the ISSUE acceptance bar: a backend that keeps failing the same
+    // decode launch past the retry budget must cost exactly the
+    // attributed sequence — quarantined with a typed error — while
+    // every survivor's token stream stays bitwise identical to the
+    // fault-free run, and the retry/backoff timeline is bit-reproducible
+    let sc = standard_matrix()
+        .into_iter()
+        .find(|s| s.name == "flapping_backend")
+        .unwrap();
+    let faulty = run(&sc);
+    let mut twin = sc.clone();
+    twin.faults = FaultPlan::none();
+    let clean = run(&twin);
+
+    assert_eq!(
+        faulty.quarantined.len(),
+        1,
+        "a 6-failure flap against a 3-retry budget must quarantine exactly one sequence, got {:?}",
+        faulty.quarantined
+    );
+    assert!(
+        faulty.retries >= 3,
+        "the quarantined sequence must have burned its full retry budget first, got {} retries",
+        faulty.retries
+    );
+    assert!(
+        faulty.backoff_ms > 0.0,
+        "retries must charge backoff on the virtual clock"
+    );
+    assert_eq!(
+        faulty.completed + faulty.quarantined.len(),
+        sc.trace.n_requests,
+        "every non-quarantined request must still finish"
+    );
+
+    // blast radius: survivors' outputs are bitwise equal to the clean run
+    let clean_digests: std::collections::HashMap<u64, u64> =
+        clean.output_digests.iter().copied().collect();
+    let victim = faulty.quarantined[0];
+    for (id, digest) in &faulty.output_digests {
+        if *id == victim {
+            continue;
+        }
+        assert_eq!(
+            clean_digests.get(id),
+            Some(digest),
+            "survivor {id} diverged from the fault-free run"
+        );
+    }
+
+    // retry/backoff timings (virtual_ms, backoff_ms, every digest) are
+    // bit-reproducible across seeded runs
+    assert_eq!(faulty, run(&sc), "faulted run is not bit-reproducible");
+}
+
+#[test]
+fn corrupted_unpark_is_caught_by_checksum_and_quarantined() {
+    // a bit flipped in a parked payload must never reach the decode
+    // path: the CRC gate on unpark catches it, the sequence is
+    // quarantined with a Corruption error, and nothing leaks
+    let sc = standard_matrix()
+        .into_iter()
+        .find(|s| s.name == "corrupted_unpark")
+        .unwrap();
+    let r = run(&sc);
+    assert!(
+        r.checksum_failures >= 1,
+        "the armed corruption never tripped the CRC gate"
+    );
+    assert_eq!(
+        r.quarantined.len() as u64,
+        r.checksum_failures,
+        "every checksum failure must map to exactly one quarantine"
+    );
+    assert_eq!(
+        r.completed + r.rejected.len() + r.quarantined.len(),
+        sc.trace.n_requests
+    );
+    assert_eq!(r, run(&sc));
+}
+
+#[test]
+fn sustained_pressure_walks_the_degradation_ladder() {
+    // admission pressure beyond the pool budget must degrade gracefully
+    // — shed templates, demote cold rows, park, reject with a retry
+    // hint — rather than panic or spin; the ladder's actions are
+    // metered and the whole trajectory is deterministic
+    let sc = standard_matrix()
+        .into_iter()
+        .find(|s| s.name == "sustained_pressure")
+        .unwrap();
+    let r = run(&sc);
+    assert!(
+        r.retries >= 1,
+        "pressure must first be absorbed by the retry budget"
+    );
+    let ladder_actions =
+        r.template_sheds + r.demotions + r.parks + r.rejected.len() as u64 + r.quarantined.len() as u64;
+    assert!(
+        ladder_actions >= 1,
+        "sustained exhaustion must climb the degradation ladder"
+    );
+    assert_eq!(
+        r.completed + r.rejected.len() + r.quarantined.len(),
+        sc.trace.n_requests
+    );
+    assert_eq!(r, run(&sc));
+}
+
+#[test]
 fn template_pressure_valve_survives_capacity_one() {
     // capacity-one template cache under a 3-distinct-prompt storm: the
     // valve sheds templates every wave, but may never free a prefix
@@ -222,7 +334,10 @@ fn template_pressure_valve_survives_capacity_one() {
         .unwrap();
     sc.template_capacity = Some(1);
     let r = run(&sc);
-    assert_eq!(r.completed + r.rejected.len(), sc.trace.n_requests);
+    assert_eq!(
+        r.completed + r.rejected.len() + r.quarantined.len(),
+        sc.trace.n_requests
+    );
     assert!(
         r.shared_admissions > 0,
         "even a capacity-one cache must share within-wave duplicates"
