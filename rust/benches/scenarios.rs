@@ -13,8 +13,18 @@
 //! against the real engine (reported as `gpt2t/...` rows and the
 //! `engine_scenarios` section); without artifacts the mock leg alone
 //! runs, so the bench never skips entirely.
+//!
+//! The sharded matrix (DESIGN.md §10) runs the same harness over an
+//! N-worker router with forced mid-generation migrations: its rows
+//! report committed migrations by initiator, the delta law on the wire
+//! (payload bytes shipped vs bytes the destinations' replica bases
+//! supplied), shared-prefix chunk traffic, and per-worker TTFT
+//! percentiles — the `sharded_scenarios` section of the JSON.
 
-use kvcar::coordinator::{run_scenario, scenario_spec, standard_matrix, Scenario, ScenarioReport};
+use kvcar::coordinator::{
+    run_scenario, run_sharded, scenario_spec, sharded_matrix, standard_matrix, Scenario,
+    ScenarioReport, ShardedReport, ShardedScenario,
+};
 use kvcar::runtime::{artifacts_dir, Engine, ExecBackend, MockEngine};
 use kvcar::util::json::{self, Json};
 
@@ -39,6 +49,44 @@ fn run_one(engine: &mut dyn ExecBackend, model: &str, sc: &Scenario, tag: &str) 
         r.rejected.len(),
         r.quarantined.len(),
         r.virtual_ms,
+    );
+    r
+}
+
+/// Run one sharded scenario across fresh mock workers and print its
+/// human-readable rows (one summary line, one wire line).
+fn run_one_sharded(sc: &ShardedScenario) -> ShardedReport {
+    let mut engines: Vec<MockEngine> =
+        (0..sc.n_workers).map(|_| MockEngine::new(scenario_spec())).collect();
+    let backends: Vec<&mut dyn ExecBackend> =
+        engines.iter_mut().map(|e| e as &mut dyn ExecBackend).collect();
+    let r = run_sharded(backends, "mock", sc).expect("sharded scenario must pass its audits");
+    let kib = |b: u64| b as f64 / 1024.0;
+    println!(
+        "bench scenarios/{:<28} {} workers  {:>3} migrations ({} forced, {} rebalance, {} drain, \
+         {} rolled back)  ({} rounds, {:.1} virtual ms)",
+        r.name,
+        r.n_workers,
+        r.migrations,
+        r.forced_migrations,
+        r.rebalance_migrations,
+        r.drain_migrations,
+        r.corruption_rollbacks,
+        r.rounds,
+        r.virtual_ms,
+    );
+    let worst = r.worker_ttft_ms.iter().map(|&(_, p99)| p99).fold(0.0f64, f64::max);
+    println!(
+        "bench scenarios/{:<28} wire: {:.1} KiB delta shipped vs {:.1} KiB basis-resident \
+         ({:.1} KiB full), {:.1} KiB chunks ({} in, {} deduped)  worst worker ttft p99 {:.2} ms",
+        r.name,
+        kib(r.delta_bytes),
+        kib(r.bytes_saved),
+        kib(r.full_bytes),
+        kib(r.chunk_bytes),
+        r.chunks_in,
+        r.chunks_deduped,
+        worst,
     );
     r
 }
@@ -69,6 +117,50 @@ fn scenario_json(r: &ScenarioReport) -> Json {
         ("template_sheds", json::num(r.template_sheds as f64)),
         // digests as hex strings: u64 does not round-trip through the
         // f64-backed Json number type
+        ("tokens_digest", json::s(&format!("{:016x}", r.tokens_digest))),
+        (
+            "invariant_digest",
+            json::s(&format!("{:016x}", r.invariant_digest)),
+        ),
+    ])
+}
+
+fn sharded_json(r: &ShardedReport) -> Json {
+    json::obj(vec![
+        ("name", json::s(&r.name)),
+        ("n_workers", json::num(r.n_workers as f64)),
+        ("completed", json::num(r.completed as f64)),
+        ("rounds", json::num(r.rounds as f64)),
+        ("invariant_checks", json::num(r.invariant_checks as f64)),
+        ("migrations", json::num(r.migrations as f64)),
+        ("forced_migrations", json::num(r.forced_migrations as f64)),
+        (
+            "rebalance_migrations",
+            json::num(r.rebalance_migrations as f64),
+        ),
+        ("drain_migrations", json::num(r.drain_migrations as f64)),
+        (
+            "corruption_rollbacks",
+            json::num(r.corruption_rollbacks as f64),
+        ),
+        // the delta law on the wire: shipped + saved == full
+        ("delta_bytes", json::num(r.delta_bytes as f64)),
+        ("bytes_saved", json::num(r.bytes_saved as f64)),
+        ("full_bytes", json::num(r.full_bytes as f64)),
+        ("chunk_bytes", json::num(r.chunk_bytes as f64)),
+        ("chunks_in", json::num(r.chunks_in as f64)),
+        ("chunks_deduped", json::num(r.chunks_deduped as f64)),
+        ("throughput_tok_s", json::num(r.throughput_tok_s)),
+        ("virtual_ms", json::num(r.virtual_ms)),
+        (
+            "worker_ttft_ms",
+            json::arr(r.worker_ttft_ms.iter().map(|&(p50, p99)| {
+                json::obj(vec![
+                    ("p50_ms", json::num(p50)),
+                    ("p99_ms", json::num(p99)),
+                ])
+            })),
+        ),
         ("tokens_digest", json::s(&format!("{:016x}", r.tokens_digest))),
         (
             "invariant_digest",
@@ -114,6 +206,43 @@ fn report_deltas(prev: &Json, reports: &[ScenarioReport]) {
     }
 }
 
+/// Run-over-run deltas for the sharded rows: the wire figures
+/// (delta/saved/chunk bytes) and migration counts move only when the
+/// migration protocol or the placement policy changes.
+fn report_sharded_deltas(prev: &Json, reports: &[ShardedReport]) {
+    let Some(prev_rows) = prev.get("sharded_scenarios").and_then(Json::as_arr) else {
+        return;
+    };
+    for r in reports {
+        let Some(old) = prev_rows
+            .iter()
+            .find(|p| p.get("name").and_then(Json::as_str) == Some(r.name.as_str()))
+        else {
+            continue;
+        };
+        for (field, new_v) in [
+            ("migrations", r.migrations as f64),
+            ("delta_bytes", r.delta_bytes as f64),
+            ("bytes_saved", r.bytes_saved as f64),
+            ("chunk_bytes", r.chunk_bytes as f64),
+            ("throughput_tok_s", r.throughput_tok_s),
+            ("virtual_ms", r.virtual_ms),
+        ] {
+            if let Some(old_v) = old.get(field).and_then(Json::as_f64) {
+                if old_v > 0.0 && (old_v - new_v).abs() > 1e-9 {
+                    println!(
+                        "bench scenarios/{:<28} vs previous: {field} {:+.1}% ({:.3} -> {:.3})",
+                        r.name,
+                        100.0 * (new_v - old_v) / old_v,
+                        old_v,
+                        new_v,
+                    );
+                }
+            }
+        }
+    }
+}
+
 fn main() {
     let matrix = standard_matrix();
     let mut reports = Vec::new();
@@ -121,6 +250,9 @@ fn main() {
         let mut engine = MockEngine::new(scenario_spec());
         reports.push(run_one(&mut engine, "mock", sc, ""));
     }
+
+    // sharded leg: fresh mock workers per scenario, same virtual clock
+    let sharded: Vec<ShardedReport> = sharded_matrix().iter().map(run_one_sharded).collect();
 
     // artifact-gated real-engine leg: identical harness and virtual
     // clock over the PJRT artifact backend — launch faults included
@@ -140,7 +272,10 @@ fn main() {
     let path = json_path();
     match std::fs::read_to_string(&path) {
         Ok(text) => match Json::parse(&text) {
-            Ok(prev) => report_deltas(&prev, &reports),
+            Ok(prev) => {
+                report_deltas(&prev, &reports);
+                report_sharded_deltas(&prev, &sharded);
+            }
             Err(e) => println!("bench scenarios: previous {path} unreadable ({e}); no deltas"),
         },
         // absent baseline is the normal first-run case, not an error
@@ -154,6 +289,10 @@ fn main() {
         (
             "engine_scenarios",
             json::arr(engine_reports.iter().map(scenario_json)),
+        ),
+        (
+            "sharded_scenarios",
+            json::arr(sharded.iter().map(sharded_json)),
         ),
     ]);
     match std::fs::write(&path, j.to_string()) {

@@ -40,7 +40,12 @@ pub fn check_round(
     let active = state.active_seqs();
 
     // -- prefix trie: refcounts re-derivable from live sequences + pins
-    if let Err(e) = s.cache.prefix_integrity(&s.waves.pinned_leaves()) {
+    //    (admission-template pins plus the chains a router delivered to
+    //    this worker — migration pins hold delivered chunks resident so
+    //    "ships at most once per worker" stays sound)
+    let mut pinned = s.waves.pinned_leaves();
+    pinned.extend_from_slice(&s.migration_pins);
+    if let Err(e) = s.cache.prefix_integrity(&pinned) {
         errs.push(format!("prefix integrity: {e}"));
     }
 
@@ -205,10 +210,13 @@ pub fn check_round(
             .iter()
             .map(|r| r.generated_tokens as u64)
             .sum::<u64>();
-    if m.tokens_generated != emitted {
+    // migration nets out: tokens a sequence carried away still count as
+    // generated *here*, tokens it brought along were generated elsewhere
+    if m.tokens_generated + m.tokens_migrated_in != emitted + m.tokens_migrated_out {
         errs.push(format!(
-            "token conservation: metrics count {} but sequences hold {emitted}",
-            m.tokens_generated
+            "token conservation: metrics count {} generated + {} migrated in \
+             but sequences hold {emitted} + {} migrated out",
+            m.tokens_generated, m.tokens_migrated_in, m.tokens_migrated_out
         ));
     }
     // every response is exactly one of: clean completion, quarantined
@@ -279,6 +287,14 @@ pub fn check_round(
     fp.push(m.rejects);
     fp.push(m.demotions);
     fp.push(m.template_sheds);
+    // migration trajectory: placements, delta volumes, and rollbacks
+    // are part of the sharded determinism contract (DESIGN.md §10)
+    fp.push(m.migrations_in);
+    fp.push(m.migrations_out);
+    fp.push(m.tokens_migrated_in);
+    fp.push(m.tokens_migrated_out);
+    fp.push(m.migration_delta_bytes);
+    fp.push(m.migration_failures);
     fp.push(s.tier.stats.checksum_failures);
     fp.push(s.pressure() as u64);
     fp.push(parked_flags as u64);
@@ -287,6 +303,78 @@ pub fn check_round(
     // the clock itself is part of the audited state: timing must be as
     // reproducible as the token streams
     fp.push(s.clock.now().as_duration().as_nanos() as u64);
+    Ok(fp.finish())
+}
+
+/// Audit a whole sharded cluster (DESIGN.md §10): run [`check_round`]
+/// on every worker, then the cross-worker conservation laws no single
+/// worker can see —
+///
+/// * **placement uniqueness**: every request id lives on exactly one
+///   worker, whether queued, active, or completed (a migration that
+///   forked or dropped a sequence shows up here);
+/// * **request conservation**: queued + active + completed across the
+///   cluster equals `expected_requests` (nothing lost in transit);
+/// * **migration symmetry**: globally, sequences and tokens migrated in
+///   equal those migrated out — transfers move work, never mint it.
+///
+/// Per-worker prefix refcount integrity (including migration-delivered
+/// chunk pins) is covered by the inner [`check_round`] calls.  Returns
+/// a cluster fingerprint folding every worker's round fingerprint, so
+/// sharded determinism pins cover the whole trajectory.
+pub fn check_cluster(
+    workers: &[(&ServingEngine<'_>, &RunState)],
+    expected_requests: usize,
+    strict_budget: bool,
+) -> Result<u64, String> {
+    let mut errs: Vec<String> = Vec::new();
+    let mut fp = Fnv::new();
+    fp.push(workers.len() as u64);
+    let mut req_ids: Vec<u64> = Vec::new();
+    let (mut mig_in, mut mig_out) = (0u64, 0u64);
+    let (mut tok_in, mut tok_out) = (0u64, 0u64);
+    for (w, (s, state)) in workers.iter().enumerate() {
+        match check_round(s, state, strict_budget) {
+            Ok(worker_fp) => fp.push(worker_fp),
+            Err(e) => {
+                for line in e.lines() {
+                    errs.push(format!("worker {w}: {line}"));
+                }
+            }
+        }
+        req_ids.extend(state.waiting_requests().iter().map(|r| r.id));
+        req_ids.extend(state.active_seqs().iter().map(|a| a.req.id));
+        req_ids.extend(state.done_responses().iter().map(|r| r.id));
+        mig_in += s.metrics.migrations_in;
+        mig_out += s.metrics.migrations_out;
+        tok_in += s.metrics.tokens_migrated_in;
+        tok_out += s.metrics.tokens_migrated_out;
+    }
+    req_ids.sort_unstable();
+    if let Some(w) = req_ids.windows(2).find(|w| w[0] == w[1]) {
+        errs.push(format!(
+            "placement uniqueness: request {} exists on more than one worker",
+            w[0]
+        ));
+    }
+    if req_ids.len() != expected_requests {
+        errs.push(format!(
+            "request conservation: cluster holds {} requests, {expected_requests} were submitted",
+            req_ids.len()
+        ));
+    }
+    if mig_in != mig_out || tok_in != tok_out {
+        errs.push(format!(
+            "migration symmetry: {mig_in} sequences / {tok_in} tokens migrated in \
+             but {mig_out} / {tok_out} migrated out"
+        ));
+    }
+    if !errs.is_empty() {
+        return Err(errs.join("\n"));
+    }
+    fp.push(req_ids.len() as u64);
+    fp.push(mig_in);
+    fp.push(tok_in);
     Ok(fp.finish())
 }
 

@@ -203,6 +203,51 @@ pub struct ServeMetrics {
     pub template_sheds: u64,
     /// wall-clock time of the whole run
     pub wall: Duration,
+    /// latent-decoder reconstructions served by the cross-sequence
+    /// batched `{m}_decode_kv_bt` rung (the intended steady-state path)
+    pub decode_rung_bt: u64,
+    /// reconstructions that fell to the token-granular `{m}_decode_kv_t`
+    /// rung (single-sequence bulk ranges, or no batched entry compiled)
+    pub decode_rung_t: u64,
+    /// reconstructions that fell all the way to the zero-padded
+    /// full-sequence `{m}_decode_kv` rung — the silent-degradation case
+    /// the ROADMAP's "regenerate artifacts" item exists for, made
+    /// observable here
+    pub decode_rung_padded: u64,
+    /// admission waves served by the batched `{m}_prefill_b` rung
+    pub prefill_rung_b: u64,
+    /// admissions that fell to the per-request `{m}_prefill` rung
+    pub prefill_rung_single: u64,
+    /// live sequences this worker handed to a peer (router rebalance
+    /// or drain; DESIGN.md §10)
+    pub migrations_out: u64,
+    /// live sequences this worker received from a peer
+    pub migrations_in: u64,
+    /// already-sampled output tokens that left with migrating sequences
+    /// — the invariant checker's token-conservation law nets these out:
+    /// `tokens_generated == emitted + tokens_migrated_out -
+    /// tokens_migrated_in`
+    pub tokens_migrated_out: u64,
+    /// already-sampled output tokens that arrived with migrations in
+    pub tokens_migrated_in: u64,
+    /// suffix payload bytes actually shipped by the delta protocol
+    /// (changed/new block groups only)
+    pub migration_delta_bytes: u64,
+    /// suffix payload bytes the delta protocol did **not** ship because
+    /// the destination already held a bitwise-equal replica basis —
+    /// the re-migration savings the delta law pins
+    pub migration_bytes_saved: u64,
+    /// content-addressed prefix chunks shipped to this worker (each
+    /// chain ships at most once per worker, ever)
+    pub migration_chunks_in: u64,
+    /// encoded bytes those chunks carried
+    pub migration_chunk_bytes: u64,
+    /// prefix chunks a migration referenced that this worker already
+    /// held (dedup hits of the content-addressed transfer)
+    pub migration_chunks_deduped: u64,
+    /// migrations that failed verification or install and rolled back
+    /// to the source worker (the sequence keeps running there)
+    pub migration_failures: u64,
 }
 
 impl ServeMetrics {
@@ -342,6 +387,33 @@ impl ServeMetrics {
                 self.resident_bytes_uploaded as f64 / self.decode_rounds.max(1) as f64 / 1024.0,
                 self.resident_bytes_skipped as f64 / total * 100.0,
                 self.full_uploads,
+            );
+        }
+        if self.decode_rung_bt + self.decode_rung_t + self.decode_rung_padded > 0 {
+            println!(
+                "  decoder rungs: {} batched (kv_bt) / {} token (kv_t) / {} padded (kv)",
+                self.decode_rung_bt, self.decode_rung_t, self.decode_rung_padded,
+            );
+        }
+        if self.prefill_rung_b + self.prefill_rung_single > 0 {
+            println!(
+                "  prefill rungs: {} batched (prefill_b) / {} per-request (prefill)",
+                self.prefill_rung_b, self.prefill_rung_single,
+            );
+        }
+        if self.migrations_in + self.migrations_out + self.migration_failures > 0 {
+            println!(
+                "  migration: {} in / {} out ({} failed+rolled back), \
+                 {:.1} KiB delta shipped / {:.1} KiB basis-saved, \
+                 {} chunks in ({:.1} KiB) / {} deduped",
+                self.migrations_in,
+                self.migrations_out,
+                self.migration_failures,
+                self.migration_delta_bytes as f64 / 1024.0,
+                self.migration_bytes_saved as f64 / 1024.0,
+                self.migration_chunks_in,
+                self.migration_chunk_bytes as f64 / 1024.0,
+                self.migration_chunks_deduped,
             );
         }
     }

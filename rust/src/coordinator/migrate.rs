@@ -1,0 +1,261 @@
+//! Live sequence migration between sharded workers (DESIGN.md §10).
+//!
+//! A migration moves one in-flight sequence — its request, sampled
+//! output, and compressed KV bytes — from a source [`ServingEngine`]
+//! to a destination, without changing a single future token.  The
+//! transfer substrate is the tier wire format ([`ParkedBytes`]): the
+//! source extracts its encoded suffix exactly as a park would, the
+//! destination restores it exactly as a resume would, and the bytes in
+//! between travel under two volume optimizations:
+//!
+//! * **rsync-style delta** (`kvcache::delta`): the suffix payload is
+//!   cut into `block_size`-row groups with CRC32 checksums; only groups
+//!   the destination's retained *replica basis* lacks actually ship.
+//!   KV grows append-only in immutable encoded blocks, so a
+//!   re-migration ships O(rows appended since the last transfer), not
+//!   O(sequence).
+//! * **content-addressed prefix chunks**: shared prefix chain chunks
+//!   are identified by [`chunk_chain_id`](crate::kvcache::chunk_chain_id)
+//!   — a pure function of the
+//!   chain's token keys — so the router can prove a worker already
+//!   holds a chunk and skip it.  Delivered chains are pinned on the
+//!   destination ([`ServingEngine::migration_pins`]), making "each
+//!   chunk ships to a worker at most once, *ever*" sound even after
+//!   every local sharer retires.
+//!
+//! Every step is transactional: a failure at any point (including an
+//! injected transfer corruption caught by the group CRCs) rolls the
+//! sequence back onto the source worker, bit-identically live, and the
+//! whole-stack invariant checker passes in between.  The
+//! [`Router`](super::router::Router) drives these pieces and owns the
+//! per-worker delivered-chunk and replica-basis ledgers.
+
+use super::scheduler::{ActiveSeq, RunState, ServingEngine};
+use crate::kvcache::delta::{self, BlockManifest, DeltaPayload};
+use crate::kvcache::ParkedBytes;
+use anyhow::{anyhow, Result};
+use std::collections::HashSet;
+
+/// A sequence lifted off its source worker, ready to ship: the
+/// scheduler state that travels with it, the full suffix payload (the
+/// source's replica basis if the migration commits), its block-checksum
+/// manifest, and the content-addressed descriptors of its shared
+/// prefix chain.
+pub(crate) struct Outbound {
+    /// in-flight scheduler state (request, sampled output, position)
+    pub(crate) seq: ActiveSeq,
+    /// full suffix payload in tier wire format
+    pub(crate) parked: ParkedBytes,
+    /// per-group checksums of `parked` — the delta protocol's first
+    /// exchange
+    pub(crate) manifest: BlockManifest,
+    /// `(chain id, token key)` per shared prefix chunk, root first
+    /// (empty for unshared sequences)
+    pub(crate) chain: Vec<(u64, Vec<u8>)>,
+    /// source-side trie node per chain element (chunk payload export)
+    pub(crate) src_nodes: Vec<u32>,
+}
+
+/// What a completed destination install reports back to the router.
+pub(crate) struct Installed {
+    /// the sequence's cache id on the destination worker
+    pub(crate) cache_id: u64,
+    /// suffix payload bytes that actually shipped (changed/new groups)
+    pub(crate) delta_bytes: u64,
+    /// suffix payload bytes the destination's replica basis supplied
+    pub(crate) bytes_saved: u64,
+}
+
+/// Lift `cache_id` off the source worker: remove it from the live set,
+/// drop its working-set scratch, extract its encoded suffix bytes
+/// (device pool really shrinks, exactly like a park), and compute the
+/// delta manifest and prefix-chain descriptors.  On any failure the
+/// sequence is put back fully live and an error returned — nothing to
+/// roll back for the caller.
+pub(crate) fn extract(
+    src: &mut ServingEngine<'_>,
+    state: &mut RunState,
+    cache_id: u64,
+) -> Result<Outbound> {
+    let seq = state
+        .take_seq(cache_id)
+        .ok_or_else(|| anyhow!("sequence {cache_id} is not in the source worker's live set"))?;
+    if seq.parked || seq.done {
+        let msg = if seq.parked { "parked" } else { "finished" };
+        let err = anyhow!("sequence {cache_id} is {msg}; only live sequences migrate");
+        state.push_seq(seq);
+        return Err(err);
+    }
+    let leaf = src.cache.seq_prefix_leaf(cache_id);
+    let (chain, src_nodes) = match leaf {
+        Some(leaf) => (src.cache.prefix_chain(leaf)?, src.cache.prefix_path(leaf)?),
+        None => (Vec::new(), Vec::new()),
+    };
+    src.eff.remove(&cache_id);
+    src.arena.release(cache_id);
+    let parked = match src.cache.extract_sequence_bytes(cache_id) {
+        Ok(p) => p,
+        Err(e) => {
+            // the blocks never moved: re-derive the scratch and restore
+            // the sequence to the live set untouched
+            src.rebuild_effective(cache_id)?;
+            state.push_seq(seq);
+            return Err(e);
+        }
+    };
+    let manifest = match delta::manifest(&src.cache.cfg, &parked) {
+        Ok(m) => m,
+        Err(e) => {
+            src.cache.restore_sequence_bytes(cache_id, &parked)?;
+            src.rebuild_effective(cache_id)?;
+            state.push_seq(seq);
+            return Err(e);
+        }
+    };
+    Ok(Outbound {
+        seq,
+        parked,
+        manifest,
+        chain,
+        src_nodes,
+    })
+}
+
+/// Ship the outbound sequence's shared prefix chain to the destination,
+/// content-addressed: a chunk travels only if the destination neither
+/// holds it (its own admissions may have built it) nor has it in the
+/// router's `delivered` ledger.  On first delivery of a chain, its leaf
+/// is pinned on the destination and recorded in
+/// [`ServingEngine::migration_pins`], and every chain id enters
+/// `delivered` — the "at most once per worker, ever" law.  Returns the
+/// destination-side leaf node and the chunk bytes that actually
+/// traveled.  All-or-nothing: a failure partway down the chain removes
+/// every node this call imported.
+pub(crate) fn ship_chunks(
+    src: &ServingEngine<'_>,
+    dst: &mut ServingEngine<'_>,
+    out: &Outbound,
+    delivered: &mut HashSet<u64>,
+) -> Result<(Option<u32>, u64)> {
+    if out.chain.is_empty() {
+        return Ok((None, 0));
+    }
+    let mut parent: Option<u32> = None;
+    let mut created: Vec<u32> = Vec::new();
+    let mut shipped_bytes = 0u64;
+    let mut failure: Option<anyhow::Error> = None;
+    for ((chain_id, key), &src_node) in out.chain.iter().zip(&out.src_nodes) {
+        let step = if delivered.contains(chain_id) || dst.cache.prefix_child(parent, key).is_some()
+        {
+            // dedup hit: the payload never travels (an empty-stream
+            // import resolves the existing child without touching it)
+            dst.metrics.migration_chunks_deduped += 1;
+            dst.cache.import_chunk(parent, key, &[])
+        } else {
+            src.cache.export_chunk(src_node).and_then(|streams| {
+                let bytes: usize = streams.iter().map(Vec::len).sum();
+                let node = dst.cache.import_chunk(parent, key, &streams)?;
+                shipped_bytes += bytes as u64;
+                dst.metrics.migration_chunks_in += 1;
+                dst.metrics.migration_chunk_bytes += bytes as u64;
+                created.push(node);
+                Ok(node)
+            })
+        };
+        match step {
+            Ok(node) => parent = Some(node),
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+        }
+    }
+    if let Some(e) = failure {
+        // unwind deepest-first so every removed node is childless
+        for node in created.into_iter().rev() {
+            dst.cache.remove_unreferenced_chunk(node);
+        }
+        return Err(e);
+    }
+    let leaf = parent.expect("non-empty chain yields a leaf");
+    let leaf_chain_id = out.chain.last().expect("non-empty chain").0;
+    if !delivered.contains(&leaf_chain_id) {
+        // first delivery of this chain: pin it resident forever on this
+        // worker so the delivered ledger can never go stale
+        dst.cache.prefix_ref(leaf)?;
+        dst.migration_pins.push(leaf);
+        for (chain_id, _) in &out.chain {
+            delivered.insert(*chain_id);
+        }
+    }
+    Ok((Some(leaf), shipped_bytes))
+}
+
+/// Install the outbound sequence on the destination: diff its manifest
+/// against the retained replica `basis`, ship only the missing groups,
+/// verify every group CRC plus the end-to-end payload CRC while
+/// assembling (the tier corruption contract — mismatches surface as
+/// typed `checksum mismatch` errors), then restore the bytes into
+/// fresh destination blocks and rebuild the effective cache exactly as
+/// a resume would.  `corrupt` arms the chaos path: one bit of the
+/// shipped delta flips in transit, which the group CRC must catch.
+/// On error the destination is left clean (no sequence, no scratch);
+/// delivered chunks stay — they transferred intact and remain pinned.
+pub(crate) fn install(
+    dst: &mut ServingEngine<'_>,
+    out: &Outbound,
+    dst_leaf: Option<u32>,
+    basis: Option<&ParkedBytes>,
+    corrupt: bool,
+) -> Result<Installed> {
+    let basis_manifest = match basis {
+        Some(b) => Some(delta::manifest(&dst.cache.cfg, b)?),
+        None => None,
+    };
+    let wanted = delta::diff(&out.manifest, basis_manifest.as_ref());
+    let mut payload: DeltaPayload = delta::extract(&dst.cache.cfg, &out.parked, &wanted)?;
+    if corrupt {
+        if let Some((_, bytes)) = payload.groups.first_mut() {
+            if let Some(b) = bytes.first_mut() {
+                *b ^= 0x40;
+            }
+        }
+    }
+    let delta_bytes = payload.shipped_bytes() as u64;
+    let bytes_saved = out.manifest.full_bytes() as u64 - delta_bytes;
+    let assembled = delta::assemble(&dst.cache.cfg, &out.manifest, basis, &payload)?;
+    let cache_id = dst
+        .cache
+        .import_sequence(out.parked.len, dst_leaf, out.parked.demoted)?;
+    if let Err(e) = dst.cache.restore_sequence_bytes(cache_id, &assembled) {
+        dst.cache.free_sequence(cache_id);
+        return Err(e);
+    }
+    if let Err(e) = dst.rebuild_effective(cache_id) {
+        dst.eff.remove(&cache_id);
+        dst.cache.free_sequence(cache_id);
+        return Err(e);
+    }
+    Ok(Installed {
+        cache_id,
+        delta_bytes,
+        bytes_saved,
+    })
+}
+
+/// Roll a failed migration back onto the source worker: restore the
+/// extracted bytes into fresh source blocks, rebuild the working-set
+/// scratch, and put the sequence back in the live set — bitwise exactly
+/// where it was.
+pub(crate) fn rollback(
+    src: &mut ServingEngine<'_>,
+    state: &mut RunState,
+    out: Outbound,
+) -> Result<()> {
+    let cache_id = out.seq.cache_id;
+    src.cache.restore_sequence_bytes(cache_id, &out.parked)?;
+    src.rebuild_effective(cache_id)?;
+    state.push_seq(out.seq);
+    src.metrics.migration_failures += 1;
+    Ok(())
+}

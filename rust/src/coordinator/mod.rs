@@ -3,16 +3,19 @@
 //! prefill with cross-request prefix sharing and zero-launch
 //! re-admission (`prefill`), the prefill/decode scheduler with
 //! batch-first faithful reconstruction and store-resident decode
-//! staging (`resident`), and metrics.
+//! staging (`resident`), sharded multi-worker serving with delta-sync
+//! sequence migration (`router`, `migrate`), and metrics.
 
 pub mod batcher;
 pub mod clock;
 pub mod effective;
 pub mod invariants;
 pub mod metrics;
+pub(crate) mod migrate;
 pub mod prefill;
 pub mod request;
 pub mod resident;
+pub mod router;
 pub mod scenario;
 pub mod scheduler;
 pub mod supervisor;
@@ -23,7 +26,7 @@ pub use effective::{
     BatchLatentDecoder, BatchedAdvance, BatchedStats, EffStats, EffTemplate, EffectiveCache,
     LatentDecoder,
 };
-pub use invariants::check_round;
+pub use invariants::{check_cluster, check_round};
 pub use metrics::{CountHistogram, ServeMetrics};
 pub use prefill::{
     AdmittedLane, LaneWiseMockPrefiller, PrefillWave, PromptTemplate, TemplateCache, WaveOutput,
@@ -31,8 +34,10 @@ pub use prefill::{
 };
 pub use request::{GenRequest, GenResponse, Sampling};
 pub use resident::{stage_copy_round, SlotArena};
+pub use router::{MigrationOutcome, Router, RouterConfig, RouterStats};
 pub use scenario::{
-    run_scenario, scenario_spec, standard_matrix, FaultPlan, Scenario, ScenarioReport,
+    run_scenario, run_sharded, scenario_spec, sharded_matrix, standard_matrix, FaultPlan,
+    Scenario, ScenarioReport, ShardedReport, ShardedScenario,
 };
 pub use scheduler::{RunState, ServeConfig, ServingEngine};
 pub use supervisor::{ErrorClass, RecoveryAction, RetryPolicy, ServeError, StepReport};

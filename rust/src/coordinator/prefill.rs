@@ -279,6 +279,19 @@ impl TemplateCache {
         self.bytes
     }
 
+    /// The current host-byte budget.
+    pub fn byte_budget(&self) -> usize {
+        self.byte_budget
+    }
+
+    /// Override the host-byte budget (clamped to at least one byte).
+    /// Evictions need the [`CacheManager`] to release chain pins, so a
+    /// tightened bound takes effect at the next insertion rather than
+    /// immediately.
+    pub fn set_byte_budget(&mut self, bytes: usize) {
+        self.byte_budget = bytes.max(1);
+    }
+
     fn get(&self, key: &[u8]) -> Option<Arc<PromptTemplate>> {
         self.map.get(key).cloned()
     }
@@ -446,9 +459,18 @@ impl PrefillWave {
     }
 
     /// Host bytes the cached templates hold (bounded by
-    /// [`TEMPLATE_BYTE_BUDGET`]).
+    /// [`TEMPLATE_BYTE_BUDGET`] unless overridden through
+    /// [`PrefillWave::set_template_byte_budget`]).
     pub fn template_bytes(&self) -> usize {
         self.templates.host_bytes()
+    }
+
+    /// Override the template cache's host-byte budget — plumbed from
+    /// `ServeConfig::template_byte_budget` (serve CLI
+    /// `--template-budget`) so deployments can size the host-RAM
+    /// ceiling per machine instead of living with the 64 MiB default.
+    pub fn set_template_byte_budget(&mut self, bytes: usize) {
+        self.templates.set_byte_budget(bytes);
     }
 
     /// Prefix-chain leaves pinned by cached templates (refcount audits:
@@ -1285,6 +1307,44 @@ mod tests {
         assert!(!wave.shed_oldest_template(&mut cache), "nothing left to shed");
         cache.prefix_integrity(&[]).unwrap();
         assert_eq!(cache.prefix_stats().nodes_live, 0);
+        assert_eq!(cache.pool_stats().live_bytes, 0);
+    }
+
+    #[test]
+    fn template_byte_budget_is_bounded_and_configurable() {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 1);
+        // the serving default and the cache default agree on 64 MiB
+        assert_eq!(TEMPLATE_BYTE_BUDGET, 64 << 20);
+        let cfg = crate::coordinator::scheduler::ServeConfig::new(plan.clone());
+        assert_eq!(cfg.template_byte_budget, TEMPLATE_BYTE_BUDGET);
+        let mut cache = CacheManager::new(CacheConfig::new(spec.clone(), plan));
+        let mut effs = HashMap::new();
+        let mut mock = LaneWiseMockPrefiller::for_spec(&spec);
+        let mut wave = PrefillWave::with_template_capacity(8);
+        let p: &[u8] = b"sixteen-plus token prompt p";
+        let q: &[u8] = b"sixteen-plus token prompt q";
+        // two repeated prompts cache two templates under the default
+        wave.admit_wave(&mut cache, &mut effs, &spec, true, true, &[p, p, q, q], &mut mock)
+            .unwrap();
+        assert_eq!(wave.cached_prompts(), 2);
+        assert!(wave.template_bytes() > 0);
+        assert!(wave.template_bytes() <= TEMPLATE_BYTE_BUDGET);
+        // tighten the budget below one template: the bound bites at the
+        // next insertion and degrades to a cache-of-one, never to zero
+        wave.set_template_byte_budget(1);
+        let r: &[u8] = b"sixteen-plus token prompt r";
+        wave.admit_wave(&mut cache, &mut effs, &spec, true, true, &[r, r], &mut mock)
+            .unwrap();
+        assert_eq!(wave.cached_prompts(), 1, "byte bound degrades to cache-of-one");
+        cache.prefix_integrity(&wave.pinned_leaves()).unwrap();
+        let ids: Vec<u64> = effs.keys().copied().collect();
+        for id in ids {
+            cache.free_sequence(id);
+        }
+        wave.clear_templates(&mut cache);
+        assert_eq!(wave.template_bytes(), 0);
+        cache.prefix_integrity(&[]).unwrap();
         assert_eq!(cache.pool_stats().live_bytes, 0);
     }
 }

@@ -1,0 +1,588 @@
+//! Sharded multi-worker serving front end (DESIGN.md §10).
+//!
+//! A [`Router`] owns N independent [`ServingEngine`] workers — each
+//! with its own execution backend, KV pool, host tier, and supervisor
+//! — and drives them in lock-step rounds on a shared virtual clock so
+//! sharded runs stay bit-reproducible.  It places arriving requests by
+//! request-id hash affinity (with a load-aware override when the
+//! affinity worker is clearly busier than its least-loaded peer), and
+//! rebalances or drains workers by *live sequence migration*: a
+//! mid-generation sequence lifts off its source worker in tier wire
+//! format, ships under the rsync-style delta protocol plus
+//! content-addressed prefix chunks (`coordinator::migrate`), and
+//! resumes on the destination without perturbing a single future
+//! token.
+//!
+//! Determinism contract: under greedy sampling a migrated sequence's
+//! remaining tokens are bitwise identical to the never-migrated run,
+//! because the decode path is a pure function of the restored KV bytes
+//! and the sampled prefix — both of which the transfer preserves
+//! exactly (every group CRC plus an end-to-end payload CRC is verified
+//! on install, and any mismatch rolls the sequence back onto its
+//! source, still live).
+
+use super::clock::Clock;
+use super::invariants::{self, Fnv};
+use super::migrate;
+use super::request::{GenRequest, GenResponse};
+use super::scheduler::{RunState, ServeConfig, ServingEngine};
+use super::supervisor::{RecoveryAction, ServeError};
+use crate::kvcache::{tier, ParkedBytes};
+use crate::runtime::backend::ExecBackend;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet};
+
+/// Tuning knobs for placement and automatic rebalance.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Migrate from the busiest to the least-loaded worker whenever
+    /// their live-sequence counts differ by at least this much.
+    pub rebalance_threshold: usize,
+    /// Upper bound on automatic rebalance migrations per round.
+    pub max_migrations_per_round: usize,
+    /// Override hash affinity at admission when the affinity worker's
+    /// queue depth exceeds the least-loaded worker's by more than this.
+    pub load_spread: usize,
+    /// Whether [`Router::step`] rebalances automatically; scenarios
+    /// that force their own migrations turn this off.
+    pub auto_rebalance: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            rebalance_threshold: 2,
+            max_migrations_per_round: 1,
+            load_spread: 2,
+            auto_rebalance: true,
+        }
+    }
+}
+
+/// Cumulative router-level counters (per-worker detail lives in each
+/// worker's [`super::metrics::ServeMetrics`]).
+#[derive(Debug, Default, Clone)]
+pub struct RouterStats {
+    /// Lock-step rounds driven.
+    pub rounds: u64,
+    /// Migrations committed (drain + rebalance + forced).
+    pub migrations: u64,
+    /// Migrations that failed in transfer and rolled back cleanly.
+    pub failed_migrations: u64,
+    /// Committed migrations initiated by [`Router::drain`].
+    pub drain_migrations: u64,
+    /// Committed migrations initiated by automatic rebalance.
+    pub rebalance_migrations: u64,
+    /// Suffix payload bytes that actually shipped (delta groups only).
+    pub delta_bytes: u64,
+    /// Suffix payload bytes replica bases supplied instead of the wire.
+    pub bytes_saved: u64,
+    /// Shared prefix chunk bytes shipped (first delivery per worker).
+    pub chunk_bytes: u64,
+    /// Admissions where load override beat hash affinity.
+    pub placements_overridden: u64,
+}
+
+/// How one requested migration ended.
+#[derive(Debug)]
+pub enum MigrationOutcome {
+    /// The sequence now lives on the destination worker.
+    Committed {
+        /// suffix payload bytes that actually shipped
+        delta_bytes: u64,
+        /// suffix payload bytes the destination's replica basis supplied
+        bytes_saved: u64,
+        /// shared prefix chunk bytes shipped
+        chunk_bytes: u64,
+    },
+    /// The transfer failed (e.g. a checksum mismatch caught by the
+    /// delta protocol's group CRCs); the sequence is back on its
+    /// source worker, bitwise exactly where it was.
+    RolledBack {
+        /// the classified transfer fault
+        fault: ServeError,
+    },
+}
+
+/// One shard: a serving engine, its in-flight run state, and the
+/// router-side migration ledgers.
+struct Worker<'e> {
+    serving: ServingEngine<'e>,
+    state: RunState,
+    /// chunk chain ids ever delivered to this worker by a migration —
+    /// paired with the pins in `ServingEngine::migration_pins`, this
+    /// makes "each chunk ships at most once per worker" sound forever
+    delivered: HashSet<u64>,
+    /// replica bases retained when a sequence migrated away, keyed by
+    /// request id (cache ids differ per worker); a returning sequence
+    /// diffs against this and ships only groups appended since
+    replicas: HashMap<u64, ParkedBytes>,
+    draining: bool,
+    stalls: u32,
+}
+
+impl Worker<'_> {
+    fn load(&self) -> usize {
+        self.state.n_waiting() + self.state.n_active()
+    }
+
+    fn live(&self) -> usize {
+        self.state
+            .active_seqs()
+            .iter()
+            .filter(|s| !s.done && !s.parked)
+            .count()
+    }
+}
+
+/// Sharded serving front end: N workers, hash-affinity placement, and
+/// delta-sync live migration for rebalance and drain.
+pub struct Router<'e> {
+    workers: Vec<Worker<'e>>,
+    cfg: RouterConfig,
+    stats: RouterStats,
+    /// requests placed and not yet returned by [`Router::finish`] —
+    /// the conservation target for [`Router::check`]
+    expected: usize,
+}
+
+impl<'e> Router<'e> {
+    /// Build one worker per backend, all serving `model` under the
+    /// same (cloned) [`ServeConfig`] so compiled rungs and budgets
+    /// agree across the cluster.
+    pub fn new(
+        backends: Vec<&'e mut dyn ExecBackend>,
+        model: &str,
+        cfg: ServeConfig,
+        rcfg: RouterConfig,
+    ) -> Result<Router<'e>> {
+        anyhow::ensure!(!backends.is_empty(), "a router needs at least one worker backend");
+        let mut workers = Vec::with_capacity(backends.len());
+        for backend in backends {
+            let mut serving = ServingEngine::new(backend, model, cfg.clone())?;
+            let state = serving.begin(Vec::new());
+            workers.push(Worker {
+                serving,
+                state,
+                delivered: HashSet::new(),
+                replicas: HashMap::new(),
+                draining: false,
+                stalls: 0,
+            });
+        }
+        Ok(Router {
+            workers,
+            cfg: rcfg,
+            stats: RouterStats::default(),
+            expected: 0,
+        })
+    }
+
+    /// Number of workers in the cluster.
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Router-level counters.
+    pub fn stats(&self) -> &RouterStats {
+        &self.stats
+    }
+
+    /// Worker `w`'s serving engine (metrics, cache stats).
+    pub fn engine(&self, w: usize) -> &ServingEngine<'e> {
+        &self.workers[w].serving
+    }
+
+    /// Worker `w`'s serving engine, mutably (clock overrides, fault
+    /// injection, manual park/resume in tests).
+    pub fn engine_mut(&mut self, w: usize) -> &mut ServingEngine<'e> {
+        &mut self.workers[w].serving
+    }
+
+    /// Worker `w`'s in-flight run state.
+    pub fn worker_state(&self, w: usize) -> &RunState {
+        &self.workers[w].state
+    }
+
+    /// Cache ids of worker `w`'s migratable sequences (live, unparked,
+    /// unfinished), ascending for deterministic victim choice.
+    pub fn live_sequences(&self, w: usize) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.workers[w]
+            .state
+            .active_seqs()
+            .iter()
+            .filter(|s| !s.done && !s.parked)
+            .map(|s| s.cache_id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// `(request id, cache id)` of worker `w`'s migratable sequences,
+    /// sorted by request id — the scenario harness's deterministic
+    /// victim choice.
+    pub fn live_requests(&self, w: usize) -> Vec<(u64, u64)> {
+        let mut ids: Vec<(u64, u64)> = self.workers[w]
+            .state
+            .active_seqs()
+            .iter()
+            .filter(|s| !s.done && !s.parked)
+            .map(|s| (s.req.id, s.cache_id))
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Whether worker `w` is out of the admission rotation.
+    pub fn is_draining(&self, w: usize) -> bool {
+        self.workers[w].draining
+    }
+
+    /// Give every worker its own copy of `clock` (virtual clocks keep
+    /// the cluster bit-reproducible; the lock-step sync after each
+    /// round holds them together).
+    pub fn set_clock(&mut self, clock: &Clock) {
+        for wk in self.workers.iter_mut() {
+            wk.serving.set_clock(clock.clone());
+        }
+    }
+
+    /// Whether every worker has drained its queue and live set.
+    pub fn is_finished(&self) -> bool {
+        self.workers.iter().all(|w| w.state.is_finished())
+    }
+
+    /// Hash-affinity placement with load-aware override.  `extra` adds
+    /// per-worker pending load the run states don't know about yet
+    /// (the buckets [`Router::begin`] is still filling).
+    fn place(&mut self, req_id: u64, extra: &[usize]) -> usize {
+        let n = self.workers.len();
+        let mut h = Fnv::new();
+        h.push(req_id);
+        let mut affinity = (h.finish() % n as u64) as usize;
+        // linear probe past draining workers (at least one worker is
+        // always accepting — drain refuses to mark the last one)
+        for _ in 0..n {
+            if !self.workers[affinity].draining {
+                break;
+            }
+            affinity = (affinity + 1) % n;
+        }
+        let least = (0..n)
+            .filter(|&i| !self.workers[i].draining)
+            .min_by_key(|&i| (self.workers[i].load() + extra[i], i))
+            .unwrap_or(affinity);
+        let (la, ll) = (
+            self.workers[affinity].load() + extra[affinity],
+            self.workers[least].load() + extra[least],
+        );
+        if la > ll + self.cfg.load_spread {
+            self.stats.placements_overridden += 1;
+            least
+        } else {
+            affinity
+        }
+    }
+
+    /// The least-loaded worker other than `skip` (and not draining).
+    fn least_loaded_excluding(&self, skip: usize) -> Result<usize> {
+        (0..self.workers.len())
+            .filter(|&i| i != skip && !self.workers[i].draining)
+            .min_by_key(|&i| (self.workers[i].load(), i))
+            .ok_or_else(|| anyhow::anyhow!("no worker available to receive migrations"))
+    }
+
+    /// Place `requests` across the workers and start a run on each.
+    /// Each worker's [`ServingEngine::begin`] stamps its bucket with
+    /// that worker's current clock.
+    pub fn begin(&mut self, requests: Vec<GenRequest>) {
+        self.expected += requests.len();
+        let n = self.workers.len();
+        let mut buckets: Vec<Vec<GenRequest>> = (0..n).map(|_| Vec::new()).collect();
+        let mut extra = vec![0usize; n];
+        for r in requests {
+            let w = self.place(r.id, &extra);
+            extra[w] += 1;
+            buckets[w].push(r);
+        }
+        for (wk, reqs) in self.workers.iter_mut().zip(buckets) {
+            wk.state = wk.serving.begin(reqs);
+        }
+    }
+
+    /// One lock-step cluster round: every unfinished worker takes a
+    /// supervised scheduler step, clocks re-synchronize to the
+    /// slowest worker, then automatic rebalance migrates at most
+    /// [`RouterConfig::max_migrations_per_round`] sequences from the
+    /// busiest to the least-loaded worker.  Returns whether work
+    /// remains anywhere; errors only when a worker stalls past its
+    /// retry budget on a fault its supervisor cannot act on.
+    pub fn step(&mut self) -> Result<bool> {
+        self.stats.rounds += 1;
+        let mut more = false;
+        for wk in self.workers.iter_mut() {
+            if wk.state.is_finished() {
+                continue;
+            }
+            let rep = wk.serving.step_supervised(&mut wk.state);
+            match (&rep.fault, rep.action) {
+                (Some(_), RecoveryAction::None) => wk.stalls += 1,
+                _ => wk.stalls = 0,
+            }
+            if wk.stalls > wk.serving.cfg.retry.max_retries {
+                let fault = rep.fault.expect("stall counter only advances on faults");
+                return Err(fault.into_anyhow());
+            }
+            more |= rep.more;
+        }
+        self.sync_clocks();
+        if self.cfg.auto_rebalance {
+            self.rebalance()?;
+        }
+        Ok(more)
+    }
+
+    /// Advance every worker's clock to the slowest worker's stamp —
+    /// the lock-step barrier that keeps virtual-clock runs
+    /// reproducible regardless of worker iteration order (a no-op on
+    /// wall clocks).
+    fn sync_clocks(&mut self) {
+        let Some(t) = self.workers.iter().map(|w| w.serving.clock.now()).max() else {
+            return;
+        };
+        for wk in self.workers.iter_mut() {
+            wk.serving.clock.advance_to(t);
+        }
+    }
+
+    /// Automatic load balancing: while the live-count gap between the
+    /// busiest and least-loaded workers reaches the threshold, migrate
+    /// the busiest worker's lowest-numbered live sequence over.
+    fn rebalance(&mut self) -> Result<()> {
+        for _ in 0..self.cfg.max_migrations_per_round {
+            let counts: Vec<(usize, usize)> = (0..self.workers.len())
+                .filter(|&i| !self.workers[i].draining)
+                .map(|i| (i, self.workers[i].live()))
+                .collect();
+            let Some(&(busiest, hi)) = counts.iter().max_by_key(|&&(i, c)| (c, usize::MAX - i))
+            else {
+                return Ok(());
+            };
+            let Some(&(least, lo)) = counts.iter().min_by_key(|&&(i, c)| (c, i)) else {
+                return Ok(());
+            };
+            if busiest == least || hi < lo + self.cfg.rebalance_threshold {
+                return Ok(());
+            }
+            let Some(victim) = self.live_sequences(busiest).first().copied() else {
+                return Ok(());
+            };
+            match self.migrate(busiest, least, victim, false)? {
+                MigrationOutcome::Committed { .. } => self.stats.rebalance_migrations += 1,
+                // the rollback left the source live; stop trying this
+                // round rather than re-failing the same transfer
+                MigrationOutcome::RolledBack { .. } => return Ok(()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Migrate live sequence `cache_id` from worker `src` to worker
+    /// `dst`: extract in tier wire format, ship the shared prefix
+    /// chain content-addressed (dedup against the delivered ledger),
+    /// install the suffix as a checksummed delta against the
+    /// destination's retained replica basis, and commit — or roll the
+    /// sequence back onto `src`, still live, if any transfer step
+    /// fails.  `corrupt` arms the chaos path: one bit of the shipped
+    /// delta flips in transit and the group CRC must catch it.
+    ///
+    /// Errors only for caller mistakes (bad worker index, sequence not
+    /// live on `src`) or an unrecoverable rollback; transfer faults
+    /// come back as [`MigrationOutcome::RolledBack`].
+    pub fn migrate(
+        &mut self,
+        src: usize,
+        dst: usize,
+        cache_id: u64,
+        corrupt: bool,
+    ) -> Result<MigrationOutcome> {
+        let n = self.workers.len();
+        anyhow::ensure!(src < n && dst < n, "worker index out of range");
+        anyhow::ensure!(src != dst, "source and destination workers must differ");
+        let (s, d) = self.pair_mut(src, dst);
+        let out = migrate::extract(&mut s.serving, &mut s.state, cache_id)?;
+        let req_id = out.seq.req.id;
+        let tokens = out.seq.output.len() as u64;
+        let (dst_leaf, chunk_bytes) =
+            match migrate::ship_chunks(&s.serving, &mut d.serving, &out, &mut d.delivered) {
+                Ok(v) => v,
+                Err(e) => {
+                    let fault = ServeError::classify(&e).with_seq(cache_id).with_req(req_id);
+                    migrate::rollback(&mut s.serving, &mut s.state, out)?;
+                    self.stats.failed_migrations += 1;
+                    return Ok(MigrationOutcome::RolledBack { fault });
+                }
+            };
+        let installed = match migrate::install(
+            &mut d.serving,
+            &out,
+            dst_leaf,
+            d.replicas.get(&req_id),
+            corrupt,
+        ) {
+            Ok(i) => i,
+            Err(e) => {
+                let fault = ServeError::classify(&e).with_seq(cache_id).with_req(req_id);
+                migrate::rollback(&mut s.serving, &mut s.state, out)?;
+                self.stats.failed_migrations += 1;
+                return Ok(MigrationOutcome::RolledBack { fault });
+            }
+        };
+        // commit: the sequence changes identity on the destination and
+        // disappears from the source, which retains the full payload
+        // as the replica basis for any future return trip
+        let migrate::Outbound {
+            mut seq,
+            parked,
+            manifest,
+            ..
+        } = out;
+        let old_id = seq.cache_id;
+        seq.cache_id = installed.cache_id;
+        seq.admit_seq = d.serving.next_admit_seq();
+        d.state.push_seq(seq);
+        s.serving.cache.free_sequence(old_id);
+        s.serving.clear_supervision(old_id, req_id);
+        s.replicas.insert(req_id, parked);
+        s.serving.metrics.migrations_out += 1;
+        s.serving.metrics.tokens_migrated_out += tokens;
+        d.serving.metrics.migrations_in += 1;
+        d.serving.metrics.tokens_migrated_in += tokens;
+        d.serving.metrics.migration_delta_bytes += installed.delta_bytes;
+        d.serving.metrics.migration_bytes_saved += installed.bytes_saved;
+        // both endpoints pay for the wire: manifest exchange plus the
+        // chunk and delta payloads, at host-tier transfer bandwidth
+        let wire =
+            32 + 16 * manifest.groups.len() + chunk_bytes as usize + installed.delta_bytes as usize;
+        let cost = tier::transfer_cost(wire);
+        s.serving.clock.charge(cost);
+        d.serving.clock.charge(cost);
+        let (delta_bytes, bytes_saved) = (installed.delta_bytes, installed.bytes_saved);
+        self.stats.migrations += 1;
+        self.stats.delta_bytes += delta_bytes;
+        self.stats.bytes_saved += bytes_saved;
+        self.stats.chunk_bytes += chunk_bytes;
+        self.sync_clocks();
+        Ok(MigrationOutcome::Committed {
+            delta_bytes,
+            bytes_saved,
+            chunk_bytes,
+        })
+    }
+
+    /// Take worker `w` out of rotation: stop placing new work on it,
+    /// re-route its queued requests to its peers, resume anything it
+    /// parked, and migrate every live sequence to the least-loaded
+    /// peer.  Returns how many requests and sequences moved.  The
+    /// worker keeps stepping (it may still be mid-drain when called
+    /// between rounds) but ends the round empty.
+    pub fn drain(&mut self, w: usize) -> Result<usize> {
+        anyhow::ensure!(w < self.workers.len(), "worker index out of range");
+        anyhow::ensure!(
+            self.workers
+                .iter()
+                .enumerate()
+                .any(|(i, wk)| i != w && !wk.draining),
+            "cannot drain the last accepting worker"
+        );
+        self.workers[w].draining = true;
+        let mut moved = 0usize;
+        let reqs = self.workers[w].state.drain_waiting();
+        let zeros = vec![0usize; self.workers.len()];
+        for r in reqs {
+            let target = self.place(r.id, &zeros);
+            self.workers[target].state.push_waiting(r);
+            moved += 1;
+        }
+        let parked: Vec<u64> = self.workers[w]
+            .state
+            .active_seqs()
+            .iter()
+            .filter(|s| s.parked && !s.done)
+            .map(|s| s.cache_id)
+            .collect();
+        for id in parked {
+            self.workers[w].serving.resume_sequence(id)?;
+            // the engine resumed the bytes; mirror it in scheduler state
+            // (the pressure-path resume does both sides itself)
+            if let Some(mut seq) = self.workers[w].state.take_seq(id) {
+                seq.parked = false;
+                self.workers[w].state.push_seq(seq);
+            }
+        }
+        for id in self.live_sequences(w) {
+            let dst = self.least_loaded_excluding(w)?;
+            match self.migrate(w, dst, id, false)? {
+                MigrationOutcome::Committed { .. } => {
+                    self.stats.drain_migrations += 1;
+                    moved += 1;
+                }
+                MigrationOutcome::RolledBack { fault } => return Err(fault.into_anyhow()),
+            }
+        }
+        Ok(moved)
+    }
+
+    /// Put a drained worker back in the admission rotation.
+    pub fn undrain(&mut self, w: usize) {
+        self.workers[w].draining = false;
+    }
+
+    /// Close out the run on every worker and merge the responses,
+    /// sorted by request id.
+    pub fn finish(&mut self) -> Vec<GenResponse> {
+        let mut out = Vec::new();
+        for wk in self.workers.iter_mut() {
+            let state = std::mem::replace(&mut wk.state, wk.serving.begin(Vec::new()));
+            out.extend(wk.serving.finish(state));
+        }
+        out.sort_by_key(|r| r.id);
+        self.expected = 0;
+        out
+    }
+
+    /// Serve `requests` across the cluster to completion:
+    /// [`Router::begin`] → [`Router::step`] until drained →
+    /// [`Router::finish`].
+    pub fn run(&mut self, requests: Vec<GenRequest>) -> Result<Vec<GenResponse>> {
+        self.begin(requests);
+        while self.step()? {}
+        Ok(self.finish())
+    }
+
+    /// Audit the whole cluster ([`invariants::check_cluster`]):
+    /// per-worker round invariants plus the cross-worker laws —
+    /// placement uniqueness, request conservation against everything
+    /// placed, and migration symmetry.  Returns the cluster state
+    /// fingerprint.
+    pub fn check(&self, strict_budget: bool) -> Result<u64, String> {
+        let pairs: Vec<(&ServingEngine<'_>, &RunState)> = self
+            .workers
+            .iter()
+            .map(|wk| (&wk.serving, &wk.state))
+            .collect();
+        invariants::check_cluster(&pairs, self.expected, strict_budget)
+    }
+
+    /// Split-borrow two distinct workers mutably.
+    fn pair_mut(&mut self, a: usize, b: usize) -> (&mut Worker<'e>, &mut Worker<'e>) {
+        debug_assert_ne!(a, b);
+        if a < b {
+            let (lo, hi) = self.workers.split_at_mut(b);
+            (&mut lo[a], &mut hi[0])
+        } else {
+            let (lo, hi) = self.workers.split_at_mut(a);
+            (&mut hi[0], &mut lo[b])
+        }
+    }
+}

@@ -21,12 +21,21 @@
 //! [`crate::runtime::MockEngine`]; the same entry point accepts the
 //! real artifact [`crate::runtime::Engine`] when artifacts are present
 //! (`benches/scenarios.rs`).
+//!
+//! [`run_sharded`] extends the same contract to the multi-worker
+//! [`Router`]: one backend per worker, a deterministic migration plan
+//! (forced nomad hops, drains, armed transfer corruption), the
+//! cluster-wide invariant audit after every round, and a
+//! [`ShardedReport`] whose token digests must equal the single-worker
+//! run's bit for bit.
 
 use super::clock::Clock;
 use super::invariants::{check_round, Fnv};
 use super::prefill::PrefillWave;
+use super::request::GenResponse;
+use super::router::{MigrationOutcome, Router, RouterConfig};
 use super::scheduler::{ServeConfig, ServingEngine};
-use super::supervisor::RecoveryAction;
+use super::supervisor::{ErrorClass, RecoveryAction};
 use super::trace::{generate, Arrival, TraceConfig};
 use crate::data::corpus::wiki;
 use crate::kvcache::CacheConfig;
@@ -432,6 +441,9 @@ pub fn run_scenario(
     let mut serving = ServingEngine::new(engine, model, cfg)?;
     if let Some(cap) = sc.template_capacity {
         serving.waves = PrefillWave::with_template_capacity(cap);
+        serving
+            .waves
+            .set_template_byte_budget(serving.cfg.template_byte_budget);
     }
     serving.set_clock(Clock::virtual_default());
     serving.inject_tier_faults(sc.faults.park, sc.faults.resume);
@@ -491,15 +503,7 @@ pub fn run_scenario(
     }
     let responses = serving.finish(state);
 
-    let mut tokens = Fnv::new();
-    tokens.push(responses.len() as u64);
-    for r in &responses {
-        tokens.push(r.id);
-        tokens.push(r.output.len() as u64);
-        for &b in &r.output {
-            tokens.push(b as u64);
-        }
-    }
+    let (tokens_digest, output_digests) = digest_responses(&responses);
     let mut tok_s: Vec<f64> = responses.iter().map(|r| r.tokens_per_sec()).collect();
     tok_s.sort_by(|a, b| a.partial_cmp(b).expect("throughputs are finite"));
     let pct = |v: &[f64], p: f64| -> f64 {
@@ -508,16 +512,6 @@ pub fn run_scenario(
         }
         v[((v.len() - 1) as f64 * p / 100.0).round() as usize]
     };
-    let output_digests: Vec<(u64, u64)> = responses
-        .iter()
-        .map(|r| {
-            let mut d = Fnv::new();
-            for &b in &r.output {
-                d.push(b as u64);
-            }
-            (r.id, d.finish())
-        })
-        .collect();
     let m = &serving.metrics;
     Ok(ScenarioReport {
         name: sc.name.to_string(),
@@ -541,7 +535,411 @@ pub fn run_scenario(
         checksum_failures: serving.tier.stats.checksum_failures,
         template_sheds: m.template_sheds,
         virtual_ms: m.wall.as_secs_f64() * 1e3,
-        tokens_digest: tokens.finish(),
+        tokens_digest,
+        invariant_digest: inv.finish(),
+        output_digests,
+    })
+}
+
+/// The whole-run and per-response FNV token digests: the currency of
+/// every bitwise-equivalence contract in this module (fault-free vs
+/// chaos, single-worker vs sharded).
+fn digest_responses(responses: &[GenResponse]) -> (u64, Vec<(u64, u64)>) {
+    let mut tokens = Fnv::new();
+    tokens.push(responses.len() as u64);
+    for r in responses {
+        tokens.push(r.id);
+        tokens.push(r.output.len() as u64);
+        for &b in &r.output {
+            tokens.push(b as u64);
+        }
+    }
+    let output_digests: Vec<(u64, u64)> = responses
+        .iter()
+        .map(|r| {
+            let mut d = Fnv::new();
+            for &b in &r.output {
+                d.push(b as u64);
+            }
+            (r.id, d.finish())
+        })
+        .collect();
+    (tokens.finish(), output_digests)
+}
+
+/// A sharded serving scenario: the workload and serving policy in
+/// `base`, served by `n_workers` router workers instead of one, plus a
+/// deterministic migration plan — forced mid-generation moves of a
+/// "nomad" sequence, an optional worker drain, optional transfer
+/// corruption.  The determinism contract extends the single-worker
+/// one: under greedy sampling (`temperature: None`) the cluster's
+/// token streams are **bitwise identical** to `run_scenario(base)` on
+/// one worker, no matter how many times sequences migrate — which the
+/// sharded test suite asserts digest-for-digest.
+#[derive(Debug, Clone)]
+pub struct ShardedScenario {
+    /// workload + serving policy; its [`FaultPlan`] stays empty —
+    /// sharded chaos is transfer corruption, not launch faults
+    pub base: Scenario,
+    /// router workers (one backend each)
+    pub n_workers: usize,
+    /// every this many rounds, force-migrate the live sequence with
+    /// the lowest request id to the next worker in cyclic order
+    /// (`0` disables).  Repeated moves cycle the nomad back onto
+    /// workers that retain its replica basis, exercising the delta
+    /// law: a return trip ships only groups appended since it left.
+    pub migrate_every: u64,
+    /// arm transfer corruption on this many forced migrations; each
+    /// must be caught by a delta group CRC and rolled back with the
+    /// sequence still live on its source
+    pub corrupt_migrations: u32,
+    /// at this round, drain this worker: re-route its queue and
+    /// migrate its live sequences to peers
+    pub drain_at_round: Option<(u64, usize)>,
+    /// let the router migrate on live-count imbalance by itself
+    pub auto_rebalance: bool,
+}
+
+/// Everything a sharded scenario run reports.  `PartialEq` for the
+/// same reason as [`ScenarioReport`]: same scenario, same seeds ⇒ the
+/// same report bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardedReport {
+    /// scenario name, echoed
+    pub name: String,
+    /// workers the cluster ran
+    pub n_workers: usize,
+    /// requests that completed cleanly
+    pub completed: usize,
+    /// lock-step cluster rounds executed
+    pub rounds: u64,
+    /// cluster-wide invariant audits that ran
+    pub invariant_checks: u64,
+    /// migrations committed (forced + drain + rebalance)
+    pub migrations: u64,
+    /// committed forced (plan-driven) migrations
+    pub forced_migrations: u64,
+    /// committed migrations the router initiated to rebalance load
+    pub rebalance_migrations: u64,
+    /// committed migrations initiated by the drain
+    pub drain_migrations: u64,
+    /// armed corruptions the delta CRCs caught and rolled back
+    pub corruption_rollbacks: u64,
+    /// suffix payload bytes that actually shipped across workers
+    pub delta_bytes: u64,
+    /// suffix payload bytes replica bases supplied instead of the wire
+    pub bytes_saved: u64,
+    /// full suffix payload bytes of every committed migration
+    /// (`delta_bytes + bytes_saved` — the delta law's denominator)
+    pub full_bytes: u64,
+    /// shared prefix chunk bytes shipped (first delivery per worker)
+    pub chunk_bytes: u64,
+    /// prefix chunks that traveled (≤ once per chunk per worker, ever)
+    pub chunks_in: u64,
+    /// prefix chunk deliveries skipped because the worker already held
+    /// the chunk
+    pub chunks_deduped: u64,
+    /// per-worker (TTFT p50 ms, TTFT p99 ms), virtual time
+    pub worker_ttft_ms: Vec<(f64, f64)>,
+    /// whole-cluster throughput (tok/s, virtual time)
+    pub throughput_tok_s: f64,
+    /// virtual wall-clock of the run in ms (slowest worker)
+    pub virtual_ms: f64,
+    /// FNV digest over every response's id and token stream — equal to
+    /// the single-worker run's digest when `base.faults` is empty
+    pub tokens_digest: u64,
+    /// FNV digest folding every cluster-audit fingerprint
+    pub invariant_digest: u64,
+    /// per-response (request id, token-stream digest), sorted by id
+    pub output_digests: Vec<(u64, u64)>,
+}
+
+/// The named sharded workloads: a nomad sequence forced through every
+/// worker (delta law), a shared-prefix storm with a mid-run drain
+/// (content-addressed chunks + drain hook), an imbalanced burst the
+/// router must rebalance by itself, and the chaos leg whose forced
+/// transfers are corrupted in flight.
+pub fn sharded_matrix() -> Vec<ShardedScenario> {
+    let mut nomad = Scenario::new(
+        "sharded_nomad",
+        TraceConfig {
+            n_requests: 15,
+            arrival: Arrival::Poisson { rate: 150.0 },
+            prompt_len_range: (18, 26),
+            max_new_range: (10, 16),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 77,
+        },
+    );
+    nomad.max_batch = 6;
+    // no prefix chunks: the whole sequence rides the delta suffix, so
+    // a prompt past one 16-row group makes the return trip's replica
+    // savings structural (basis group 0 never changes once written)
+    nomad.prefix_sharing = false;
+    let nomad = ShardedScenario {
+        base: nomad,
+        n_workers: 3,
+        migrate_every: 2,
+        corrupt_migrations: 0,
+        drain_at_round: None,
+        auto_rebalance: false,
+    };
+
+    let shared = Scenario::new(
+        "sharded_shared_prefix_drain",
+        TraceConfig {
+            n_requests: 18,
+            arrival: Arrival::Bursty {
+                size: 6,
+                period_ms: 20,
+            },
+            prompt_len_range: (16, 22),
+            max_new_range: (8, 12),
+            temperature: None,
+            distinct_prompts: Some(2),
+            seed: 83,
+        },
+    );
+    let shared = ShardedScenario {
+        base: shared,
+        n_workers: 3,
+        migrate_every: 3,
+        corrupt_migrations: 0,
+        drain_at_round: Some((5, 0)),
+        auto_rebalance: false,
+    };
+
+    let mut storm = Scenario::new(
+        "sharded_rebalance_storm",
+        TraceConfig {
+            n_requests: 24,
+            arrival: Arrival::Bursty {
+                size: 12,
+                period_ms: 40,
+            },
+            prompt_len_range: (8, 16),
+            max_new_range: (6, 12),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 89,
+        },
+    );
+    storm.max_batch = 4;
+    let storm = ShardedScenario {
+        base: storm,
+        n_workers: 4,
+        migrate_every: 0,
+        corrupt_migrations: 0,
+        drain_at_round: None,
+        auto_rebalance: true,
+    };
+
+    let mut chaos = Scenario::new(
+        "sharded_corrupt_transfer",
+        TraceConfig {
+            n_requests: 12,
+            arrival: Arrival::Batch,
+            prompt_len_range: (12, 20),
+            max_new_range: (10, 14),
+            temperature: None,
+            distinct_prompts: None,
+            seed: 97,
+        },
+    );
+    chaos.max_batch = 6;
+    let chaos = ShardedScenario {
+        base: chaos,
+        n_workers: 3,
+        migrate_every: 2,
+        corrupt_migrations: 2,
+        drain_at_round: None,
+        auto_rebalance: false,
+    };
+
+    vec![nomad, shared, storm, chaos]
+}
+
+/// Serve one sharded scenario across `backends` (one per worker) and
+/// report.  Like [`run_scenario`] the run is a pure function of its
+/// inputs: every worker clock is virtual and re-synchronized each
+/// round, migrations follow the deterministic plan, and the
+/// cluster-wide invariant audit ([`Router::check`]) runs after every
+/// round **and** after every forced migration and drain — so a
+/// transfer that corrupted state fails the scenario with the violation
+/// list, not a skewed digest.
+pub fn run_sharded(
+    backends: Vec<&mut dyn ExecBackend>,
+    model: &str,
+    sc: &ShardedScenario,
+) -> Result<ShardedReport> {
+    anyhow::ensure!(sc.n_workers >= 2, "a sharded scenario needs at least two workers");
+    anyhow::ensure!(
+        backends.len() == sc.n_workers,
+        "scenario '{}' wants {} workers, got {} backends",
+        sc.base.name,
+        sc.n_workers,
+        backends.len()
+    );
+    let b = &sc.base;
+    let spec = backends[0].model_spec(model)?;
+    let plan = CompressionPlan::ae_first_layers(&spec, (spec.n_layer / 2).max(1));
+    let bytes_per_token = {
+        let ccfg = CacheConfig::new(spec.clone(), plan.clone());
+        ccfg.bytes_per_token()
+    };
+    let mut cfg = if b.faithful {
+        ServeConfig::faithful(plan)
+    } else {
+        ServeConfig::new(plan)
+    };
+    cfg.max_batch = b.max_batch;
+    cfg.seed = b.trace.seed;
+    cfg.cache_budget = b.cache_budget_tokens.map(|t| t * bytes_per_token);
+    cfg.prefix_sharing = b.prefix_sharing;
+    cfg.resident_cache = b.resident_cache;
+    cfg.batched_prefill = b.batched_prefill;
+    let rcfg = RouterConfig {
+        auto_rebalance: sc.auto_rebalance,
+        ..RouterConfig::default()
+    };
+    let mut router = Router::new(backends, model, cfg, rcfg)?;
+    if let Some(cap) = b.template_capacity {
+        for w in 0..router.n_workers() {
+            let budget = router.engine(w).cfg.template_byte_budget;
+            let e = router.engine_mut(w);
+            e.waves = PrefillWave::with_template_capacity(cap);
+            e.waves.set_template_byte_budget(budget);
+        }
+    }
+    router.set_clock(&Clock::virtual_default());
+
+    let trace = generate(&b.trace, &mut wiki(b.trace.seed));
+    let requests: Vec<_> = trace.items.into_iter().map(|i| i.request).collect();
+    router.begin(requests);
+
+    // the budget law audits strictly only when no budget is configured
+    // to strain: a migration can land between a peer's park rounds
+    let strict = b.cache_budget_tokens.is_none();
+    let audit = |router: &Router<'_>, inv: &mut Fnv, round: u64| -> Result<()> {
+        let fp = router.check(strict).map_err(|v| {
+            anyhow::anyhow!("scenario '{}' round {round} violated cluster invariants:\n{v}", b.name)
+        })?;
+        inv.push(fp);
+        Ok(())
+    };
+    let mut inv = Fnv::new();
+    let mut rounds = 0u64;
+    let mut invariant_checks = 0u64;
+    let mut forced_attempts = 0u64;
+    let mut forced_migrations = 0u64;
+    let mut corruption_rollbacks = 0u64;
+    let mut drained = false;
+    loop {
+        rounds += 1;
+        if rounds > MAX_ROUNDS {
+            bail!("scenario '{}' did not converge in {MAX_ROUNDS} rounds", b.name);
+        }
+        let more = router.step()?;
+        audit(&router, &mut inv, rounds)?;
+        invariant_checks += 1;
+        if !more {
+            break;
+        }
+        if let Some((at, w)) = sc.drain_at_round {
+            if rounds >= at && !drained {
+                drained = true;
+                router.drain(w)?;
+                audit(&router, &mut inv, rounds)?;
+                invariant_checks += 1;
+            }
+        }
+        if sc.migrate_every > 0 && rounds % sc.migrate_every == 0 {
+            // the nomad: the lowest-numbered live request cluster-wide
+            // hops to the next worker, mid-generation
+            let victim = (0..router.n_workers())
+                .flat_map(|w| {
+                    router
+                        .live_requests(w)
+                        .into_iter()
+                        .map(move |(req, cache)| (req, w, cache))
+                })
+                .min();
+            if let Some((_, src, cache_id)) = victim {
+                let mut dst = (src + 1) % router.n_workers();
+                while dst == src || router.is_draining(dst) {
+                    dst = (dst + 1) % router.n_workers();
+                }
+                let corrupt = forced_attempts < sc.corrupt_migrations as u64;
+                forced_attempts += 1;
+                match router.migrate(src, dst, cache_id, corrupt)? {
+                    MigrationOutcome::Committed { .. } => forced_migrations += 1,
+                    MigrationOutcome::RolledBack { fault } => {
+                        anyhow::ensure!(
+                            corrupt,
+                            "scenario '{}': clean forced migration rolled back: {}",
+                            b.name,
+                            fault.msg
+                        );
+                        anyhow::ensure!(
+                            fault.class == ErrorClass::Corruption,
+                            "scenario '{}': corrupted transfer classified {:?}, not Corruption",
+                            b.name,
+                            fault.class
+                        );
+                        corruption_rollbacks += 1;
+                    }
+                }
+                audit(&router, &mut inv, rounds)?;
+                invariant_checks += 1;
+            }
+        }
+    }
+    let responses = router.finish();
+
+    let (tokens_digest, output_digests) = digest_responses(&responses);
+    let stats = router.stats().clone();
+    let worker_ttft_ms: Vec<(f64, f64)> = (0..router.n_workers())
+        .map(|w| {
+            let m = &router.engine(w).metrics;
+            (m.ttft.percentile_ms(50.0), m.ttft.percentile_ms(99.0))
+        })
+        .collect();
+    let (mut chunks_in, mut chunks_deduped) = (0u64, 0u64);
+    let mut virtual_ms = 0f64;
+    for w in 0..router.n_workers() {
+        let m = &router.engine(w).metrics;
+        chunks_in += m.migration_chunks_in;
+        chunks_deduped += m.migration_chunks_deduped;
+        virtual_ms = virtual_ms.max(m.wall.as_secs_f64() * 1e3);
+    }
+    let generated: usize = responses.iter().map(|r| r.generated_tokens).sum();
+    let throughput_tok_s = if virtual_ms > 0.0 {
+        generated as f64 / (virtual_ms / 1e3)
+    } else {
+        0.0
+    };
+    Ok(ShardedReport {
+        name: b.name.to_string(),
+        n_workers: sc.n_workers,
+        completed: responses.iter().filter(|r| r.error.is_none()).count(),
+        rounds,
+        invariant_checks,
+        migrations: stats.migrations,
+        forced_migrations,
+        rebalance_migrations: stats.rebalance_migrations,
+        drain_migrations: stats.drain_migrations,
+        corruption_rollbacks,
+        delta_bytes: stats.delta_bytes,
+        bytes_saved: stats.bytes_saved,
+        full_bytes: stats.delta_bytes + stats.bytes_saved,
+        chunk_bytes: stats.chunk_bytes,
+        chunks_in,
+        chunks_deduped,
+        worker_ttft_ms,
+        throughput_tok_s,
+        virtual_ms,
+        tokens_digest,
         invariant_digest: inv.finish(),
         output_digests,
     })
@@ -567,6 +965,35 @@ mod tests {
                 "sustained_pressure",
             ]
         );
+    }
+
+    #[test]
+    fn sharded_matrix_is_stable_and_greedy() {
+        let names: Vec<&str> = sharded_matrix().iter().map(|s| s.base.name).collect();
+        assert_eq!(
+            names,
+            [
+                "sharded_nomad",
+                "sharded_shared_prefix_drain",
+                "sharded_rebalance_storm",
+                "sharded_corrupt_transfer",
+            ]
+        );
+        for sc in sharded_matrix() {
+            assert!(sc.n_workers >= 3, "'{}' must shard across >= 3 workers", sc.base.name);
+            // the bitwise sharded-vs-single pin requires greedy
+            // sampling: temperature draws come from per-engine rngs
+            assert!(
+                sc.base.trace.temperature.is_none(),
+                "'{}' must sample greedily",
+                sc.base.name
+            );
+            assert!(
+                sc.migrate_every > 0 || sc.auto_rebalance,
+                "'{}' never migrates",
+                sc.base.name
+            );
+        }
     }
 
     #[test]

@@ -68,7 +68,7 @@ use super::batcher::{plan_parking, plan_resume, plan_round, BatcherConfig};
 use super::clock::{Clock, Stamp};
 use super::effective::{BatchLatentDecoder, BatchedAdvance, EffectiveCache, LatentDecoder};
 use super::metrics::ServeMetrics;
-use super::prefill::{PrefillWave, WaveOutput, WavePrefiller};
+use super::prefill::{PrefillWave, WaveOutput, WavePrefiller, TEMPLATE_BYTE_BUDGET};
 use super::request::{GenRequest, GenResponse, Sampling};
 use super::resident::{stage_copy_round, SlotArena};
 use super::supervisor::{
@@ -164,6 +164,12 @@ pub struct ServeConfig {
     /// under.  Backoffs are charged on the serving clock, so under a
     /// virtual clock retry timing is bit-reproducible.
     pub retry: RetryPolicy,
+    /// host-byte ceiling on the admission planner's prompt-template
+    /// cache (`coordinator::prefill::TemplateCache`): cached prefill
+    /// templates evict oldest-first once their summed bytes exceed it.
+    /// Defaults to [`TEMPLATE_BYTE_BUDGET`] (64 MiB); the serve CLI
+    /// exposes it as `--template-budget`.
+    pub template_byte_budget: usize,
 }
 
 impl ServeConfig {
@@ -205,6 +211,7 @@ impl ServeConfig {
             pool_budget: None,
             raw_format: Format::F16,
             retry: RetryPolicy::default(),
+            template_byte_budget: TEMPLATE_BYTE_BUDGET,
         }
     }
 
@@ -287,6 +294,13 @@ pub struct ServingEngine<'e> {
     /// bit-reproducible) under [`ServingEngine::set_clock`]
     pub(crate) clock: Clock,
     pub(crate) eff: HashMap<u64, EffectiveCache>,
+    /// prefix-chain leaves pinned because a router delivered their
+    /// content-addressed chunks to this worker (DESIGN.md §10): the pin
+    /// keeps the chain resident so "each shared chunk ships to a worker
+    /// at most once, ever" stays sound even after every local sharer
+    /// retires.  The invariant checker folds these into the derived
+    /// refcount audit alongside the admission-template pins.
+    pub(crate) migration_pins: Vec<u32>,
     /// supervisor bookkeeping: per-target retry attempts, pressure
     /// rung, calm streak (DESIGN.md §9)
     sup: SupervisorState,
@@ -338,6 +352,7 @@ impl<'e> ServingEngine<'e> {
             arena: SlotArena::new(),
             clock: Clock::wall(),
             eff: HashMap::new(),
+            migration_pins: Vec::new(),
             sup: SupervisorState::default(),
             decode_batches,
             admit_counter: 0,
@@ -345,6 +360,7 @@ impl<'e> ServingEngine<'e> {
             park_faults: 0,
             resume_faults: 0,
         };
+        s.waves.set_template_byte_budget(s.cfg.template_byte_budget);
         s.apply_masks();
         Ok(s)
     }
@@ -455,6 +471,7 @@ impl<'e> ServingEngine<'e> {
             model: &self.model,
             spec: &self.spec,
             batched: self.cfg.batched_prefill,
+            metrics: &mut self.metrics,
         };
         let admitted = self.waves.admit_wave(
             &mut self.cache,
@@ -549,6 +566,7 @@ impl<'e> ServingEngine<'e> {
             store: &mut self.store,
             model: &self.model,
             spec: &self.spec,
+            metrics: &mut self.metrics,
         };
         eff.rebuild_full(&mut self.cache, cache_id, &mut dec)?;
         Ok(())
@@ -616,6 +634,26 @@ impl<'e> ServingEngine<'e> {
         Ok(cost)
     }
 
+    // ------------------------------------------------------------------
+    // cross-worker migration support (coordinator::migrate drives these;
+    // DESIGN.md §10)
+    // ------------------------------------------------------------------
+
+    /// Next admission ordinal — migrated-in sequences re-enter this
+    /// worker's park/resume priority order as its newest admission.
+    pub(crate) fn next_admit_seq(&mut self) -> u64 {
+        self.admit_counter += 1;
+        self.admit_counter
+    }
+
+    /// Drop supervisor retry bookkeeping for a sequence that left this
+    /// worker (its retry budget must not leak onto an unrelated target
+    /// that later reuses the id).
+    pub(crate) fn clear_supervision(&mut self, cache_id: u64, req_id: u64) {
+        self.sup.clear_id(cache_id);
+        self.sup.clear_id(req_id);
+    }
+
     /// One batched decode round over the given active sequences (parked
     /// sequences sit out until admission control resumes them).
     fn decode_round(&mut self, active: &mut [ActiveSeq]) -> Result<()> {
@@ -642,6 +680,7 @@ impl<'e> ServingEngine<'e> {
                 store: &mut self.store,
                 model: &self.model,
                 spec: &self.spec,
+                metrics: &mut self.metrics,
             };
             self.batched
                 .advance_round(&mut self.cache, &mut self.eff, &ids, &mut dec)?;
@@ -1496,6 +1535,37 @@ impl RunState {
         &self.active
     }
 
+    /// Remove one in-flight sequence by cache id — the source half of a
+    /// live migration (`coordinator::migrate`).  The caller owns putting
+    /// it back (rollback) or committing it to another worker.
+    pub(crate) fn take_seq(&mut self, cache_id: u64) -> Option<ActiveSeq> {
+        let i = self.active.iter().position(|s| s.cache_id == cache_id)?;
+        Some(self.active.swap_remove(i))
+    }
+
+    /// Insert an in-flight sequence — the destination half of a live
+    /// migration, and the source-side rollback of a failed one.
+    pub(crate) fn push_seq(&mut self, seq: ActiveSeq) {
+        self.active.push(seq);
+    }
+
+    /// Hand back every not-yet-admitted request (FIFO order) — the
+    /// drain hook: a draining worker's queue re-routes to its peers.
+    pub(crate) fn drain_waiting(&mut self) -> Vec<GenRequest> {
+        self.waiting.drain(..).collect()
+    }
+
+    /// Append a re-routed request — a drained worker's queued requests
+    /// land here on its peers, keeping their original arrival stamps.
+    pub(crate) fn push_waiting(&mut self, req: GenRequest) {
+        self.waiting.push_back(req);
+    }
+
+    /// The admission queue, for placement/conservation audits.
+    pub(crate) fn waiting_requests(&self) -> &VecDeque<GenRequest> {
+        &self.waiting
+    }
+
     /// Completed responses so far, for the invariant checker's
     /// conservation laws.
     pub(crate) fn done_responses(&self) -> &[GenResponse] {
@@ -1525,6 +1595,11 @@ struct ArtifactDecoder<'a> {
     store: &'a mut Store,
     model: &'a str,
     spec: &'a ModelSpec,
+    /// rung-visibility counters: every reconstruction call records
+    /// which ladder rung actually served it (`ServeMetrics::
+    /// decode_rung_bt`/`_t`/`_padded`), so a missing granular artifact
+    /// shows up in the run summary instead of silently degrading
+    metrics: &'a mut ServeMetrics,
 }
 
 impl LatentDecoder for ArtifactDecoder<'_> {
@@ -1546,6 +1621,7 @@ impl LatentDecoder for ArtifactDecoder<'_> {
         debug_assert_eq!(k_rec.len(), l * n * kvd);
         let entry_t = format!("{}_decode_kv_t", self.model);
         if n == 1 && self.engine.has_entry(&entry_t) {
+            self.metrics.decode_rung_t += 1;
             self.store
                 .insert_view("k_lat", vec![l, 1, dl])
                 .copy_from_slice(k_lat);
@@ -1558,6 +1634,7 @@ impl LatentDecoder for ArtifactDecoder<'_> {
             return Ok(());
         }
         anyhow::ensure!(n <= s, "latent range exceeds max_seq");
+        self.metrics.decode_rung_padded += 1;
         {
             let kd = self.store.insert_view("k_lat", vec![l, s, dl]);
             kd.fill(0.0);
@@ -1608,6 +1685,7 @@ impl BatchLatentDecoder for ArtifactDecoder<'_> {
         anyhow::ensure!(b <= cap, "batch {b} exceeds compiled decoder capacity {cap}");
         debug_assert_eq!(k_lat.len(), b * l * dl);
         debug_assert_eq!(k_rec.len(), b * l * kvd);
+        self.metrics.decode_rung_bt += 1;
         // pack the live slots; zero-pad the unused tail up to the
         // compiled B (same padding policy as decode_step_b{B})
         {
@@ -1652,6 +1730,10 @@ struct ArtifactPrefiller<'a> {
     /// `ServeConfig::batched_prefill`: `false` reports no capacity,
     /// forcing the per-request rung (the launch-count baseline)
     batched: bool,
+    /// rung-visibility counters (`ServeMetrics::prefill_rung_b` /
+    /// `prefill_rung_single`): which prefill ladder rung each launch
+    /// actually ran on
+    metrics: &'a mut ServeMetrics,
 }
 
 impl WavePrefiller for ArtifactPrefiller<'_> {
@@ -1698,6 +1780,7 @@ impl WavePrefiller for ArtifactPrefiller<'_> {
         }
         let entry = format!("{}_prefill_b", self.model);
         let out = self.engine.execute(&entry, self.store)?;
+        self.metrics.prefill_rung_b += 1;
         WaveOutput::new(out, cap, prompts.len())
     }
 
@@ -1717,6 +1800,7 @@ impl WavePrefiller for ArtifactPrefiller<'_> {
             .insert("last", Tensor::scalar_i32((plen - 1) as i32));
         let entry = format!("{}_prefill", self.model);
         let out = self.engine.execute(&entry, self.store)?;
+        self.metrics.prefill_rung_single += 1;
         WaveOutput::new(out, 1, 1)
     }
 }

@@ -1,0 +1,474 @@
+//! Rsync-style delta transfer over the [`ParkedBytes`] wire format —
+//! the byte-level substrate of cross-worker sequence migration
+//! (DESIGN.md §10).
+//!
+//! A sequence's KV grows append-only in immutable encoded blocks, so
+//! two extractions of the same sequence differ only in the rows
+//! appended between them.  This module exploits that: the payload is
+//! cut into **row groups** of `block_size` rows (aligned with the
+//! storage blocks — `prefix_rows` is block-aligned and own blocks fill
+//! from row zero, so group boundaries never straddle a block), each
+//! group is checksummed, and a transfer ships only the groups whose
+//! checksum the receiver cannot reproduce from a retained basis
+//! payload.  Every full group of an earlier extraction is byte-stable
+//! across re-extraction, so a re-migration ships O(new rows), not O(S).
+//!
+//! A group covers the *same* row range of every stored stream: group
+//! `g` of a payload with `own = len - prefix_rows` suffix rows is the
+//! concatenation, in wire order, of each stored stream's encoded bytes
+//! for own rows `[g·bs, min((g+1)·bs, own))`.  Gathering across
+//! streams (rather than per-stream groups) keeps the manifest small
+//! and makes "rows appended since the basis" the only source of group
+//! churn.
+//!
+//! Verification mirrors the host tier's CRC contract
+//! ([`crate::kvcache::tier`]): every shipped or basis-reused group is
+//! re-checksummed against the sender's manifest during
+//! [`assemble`], and a mismatch is reported with the same
+//! "checksum mismatch" wording the tier uses, so the supervisor types
+//! it as a corruption fault and quarantines the transfer instead of
+//! retrying garbage.
+
+use super::manager::{CacheConfig, ParkedBytes};
+use super::tier::crc32;
+use anyhow::{anyhow, Result};
+
+/// Checksum of one row group of a [`ParkedBytes`] payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupSum {
+    /// suffix rows this group covers (the last group may be partial)
+    pub rows: usize,
+    /// payload bytes of the group, summed across stored streams
+    pub bytes: usize,
+    /// CRC32 over the group's gathered bytes
+    pub crc: u32,
+}
+
+/// Per-row-group checksum manifest of one extracted payload — the
+/// negotiation half of a delta transfer: the sender computes it from
+/// the payload it just extracted, the receiver diffs it against the
+/// manifest of its retained basis, and only the disagreeing groups
+/// ship.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockManifest {
+    /// total token rows the sequence covers (prefix + suffix)
+    pub len: usize,
+    /// leading rows resident in the shared prefix store (not in the
+    /// payload; content-addressed chunks move them separately)
+    pub prefix_rows: usize,
+    /// payload encoded on the int8 demotion rung (changes every
+    /// stream's row width, so a demotion forces a full re-ship)
+    pub demoted: bool,
+    /// rows per group (the cache's `block_size`)
+    pub group_rows: usize,
+    /// per-group checksums, ascending over the own-suffix rows
+    pub groups: Vec<GroupSum>,
+    /// CRC32 over the whole payload (end-to-end check after assembly)
+    pub payload_crc: u32,
+}
+
+impl BlockManifest {
+    /// Total payload bytes the manifest describes (what a full,
+    /// delta-free transfer would ship).
+    pub fn full_bytes(&self) -> usize {
+        self.groups.iter().map(|g| g.bytes).sum()
+    }
+}
+
+/// The bytes one delta transfer actually ships: the groups the
+/// receiver could not reproduce, each tagged with its index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeltaPayload {
+    /// `(group index, gathered group bytes)` in ascending index order
+    pub groups: Vec<(usize, Vec<u8>)>,
+}
+
+impl DeltaPayload {
+    /// Bytes on the wire for this transfer (the delta-law numerator:
+    /// compare against [`BlockManifest::full_bytes`]).
+    pub fn shipped_bytes(&self) -> usize {
+        self.groups.iter().map(|(_, b)| b.len()).sum()
+    }
+}
+
+/// Byte offset and encoded row width of every byte-bearing stream in
+/// the payload's wire order, plus the total payload size.
+fn stream_spans(cfg: &CacheConfig, own: usize, demoted: bool) -> (Vec<(usize, usize)>, usize) {
+    let mut spans = Vec::new();
+    let mut off = 0usize;
+    for (fmt, epr) in cfg.wire_layout(demoted) {
+        if epr == 0 {
+            continue;
+        }
+        let rb = fmt.row_bytes(epr);
+        spans.push((off, rb));
+        off += own * rb;
+    }
+    (spans, off)
+}
+
+/// Gather group `g`'s bytes (rows `[g·bs, g·bs + rows)` of every
+/// stored stream, wire order) out of a stream-major payload.
+fn gather_group(payload: &[u8], spans: &[(usize, usize)], g: usize, bs: usize, rows: usize, out: &mut Vec<u8>) {
+    out.clear();
+    for &(off, rb) in spans {
+        let start = off + g * bs * rb;
+        out.extend_from_slice(&payload[start..start + rows * rb]);
+    }
+}
+
+/// Compute the per-group checksum manifest of an extracted payload.
+/// Fails if the payload's length disagrees with the wire layout the
+/// config derives (a corrupted or mis-attributed payload must not
+/// produce a plausible manifest).
+pub fn manifest(cfg: &CacheConfig, parked: &ParkedBytes) -> Result<BlockManifest> {
+    let bs = cfg.block_size;
+    let own = parked.len - parked.prefix_rows;
+    let (spans, total) = stream_spans(cfg, own, parked.demoted);
+    anyhow::ensure!(
+        parked.payload.len() == total,
+        "payload is {} bytes, wire layout derives {total}",
+        parked.payload.len()
+    );
+    let n_groups = own.div_ceil(bs);
+    let mut groups = Vec::with_capacity(n_groups);
+    let mut scratch = Vec::new();
+    for g in 0..n_groups {
+        let rows = bs.min(own - g * bs);
+        gather_group(&parked.payload, &spans, g, bs, rows, &mut scratch);
+        groups.push(GroupSum {
+            rows,
+            bytes: scratch.len(),
+            crc: crc32(&scratch),
+        });
+    }
+    Ok(BlockManifest {
+        len: parked.len,
+        prefix_rows: parked.prefix_rows,
+        demoted: parked.demoted,
+        group_rows: bs,
+        groups,
+        payload_crc: crc32(&parked.payload),
+    })
+}
+
+/// Indices of the groups the receiver must be sent: every group when
+/// there is no usable basis (none retained, or the layout moved under
+/// it — demotion re-encodes every stream, a prefix change re-bases row
+/// numbering), otherwise exactly the groups whose checksum the basis
+/// cannot reproduce.  Append-only growth means in the common
+/// re-migration case this is the trailing partial group plus anything
+/// appended after it.
+pub fn diff(incoming: &BlockManifest, basis: Option<&BlockManifest>) -> Vec<usize> {
+    let all = || (0..incoming.groups.len()).collect();
+    let Some(basis) = basis else { return all() };
+    if basis.demoted != incoming.demoted
+        || basis.prefix_rows != incoming.prefix_rows
+        || basis.group_rows != incoming.group_rows
+    {
+        return all();
+    }
+    incoming
+        .groups
+        .iter()
+        .enumerate()
+        .filter(|&(g, sum)| basis.groups.get(g) != Some(sum))
+        .map(|(g, _)| g)
+        .collect()
+}
+
+/// Gather the requested groups out of a payload — the sender half of a
+/// delta transfer.
+pub fn extract(cfg: &CacheConfig, parked: &ParkedBytes, wanted: &[usize]) -> Result<DeltaPayload> {
+    let bs = cfg.block_size;
+    let own = parked.len - parked.prefix_rows;
+    let (spans, total) = stream_spans(cfg, own, parked.demoted);
+    anyhow::ensure!(
+        parked.payload.len() == total,
+        "payload is {} bytes, wire layout derives {total}",
+        parked.payload.len()
+    );
+    let n_groups = own.div_ceil(bs);
+    let mut groups = Vec::with_capacity(wanted.len());
+    for &g in wanted {
+        anyhow::ensure!(g < n_groups, "group {g} out of range ({n_groups} groups)");
+        let rows = bs.min(own - g * bs);
+        let mut bytes = Vec::new();
+        gather_group(&parked.payload, &spans, g, bs, rows, &mut bytes);
+        groups.push((g, bytes));
+    }
+    Ok(DeltaPayload { groups })
+}
+
+/// Rebuild the full payload the sender's manifest describes from the
+/// shipped delta plus the receiver's retained basis — the receiver
+/// half of a delta transfer.  Every group is CRC-verified against the
+/// manifest (shipped and basis-reused alike), and the assembled whole
+/// is verified end-to-end, so a corrupted transfer or a stale basis
+/// surfaces as a typed "checksum mismatch" error instead of restoring
+/// garbage into the destination cache.
+pub fn assemble(
+    cfg: &CacheConfig,
+    incoming: &BlockManifest,
+    basis: Option<&ParkedBytes>,
+    delta: &DeltaPayload,
+) -> Result<ParkedBytes> {
+    let bs = incoming.group_rows;
+    let own = incoming.len - incoming.prefix_rows;
+    let (spans, total) = stream_spans(cfg, own, incoming.demoted);
+    anyhow::ensure!(
+        own.div_ceil(bs) == incoming.groups.len(),
+        "manifest has {} groups, layout derives {}",
+        incoming.groups.len(),
+        own.div_ceil(bs)
+    );
+    // the basis groups we may reuse, gathered lazily below
+    let basis_spans = basis.map(|b| {
+        let basis_own = b.len - b.prefix_rows;
+        let (s, t) = stream_spans(cfg, basis_own, b.demoted);
+        (s, t, basis_own)
+    });
+    let mut payload = vec![0u8; total];
+    let shipped: std::collections::HashMap<usize, &Vec<u8>> =
+        delta.groups.iter().map(|(g, b)| (*g, b)).collect();
+    let mut used = 0usize;
+    let mut scratch = Vec::new();
+    for (g, sum) in incoming.groups.iter().enumerate() {
+        let group_bytes: &[u8] = match shipped.get(&g) {
+            Some(bytes) => {
+                used += 1;
+                bytes
+            }
+            None => {
+                // not shipped: the sender expects us to reproduce it
+                // from the retained basis
+                let Some(basis) = basis else {
+                    anyhow::bail!("delta omits group {g} but no basis payload is retained");
+                };
+                let Some((bspans, btotal, basis_own)) = basis_spans.as_ref() else {
+                    unreachable!("basis_spans mirrors basis")
+                };
+                anyhow::ensure!(
+                    basis.payload.len() == *btotal,
+                    "basis payload is {} bytes, wire layout derives {btotal}",
+                    basis.payload.len()
+                );
+                anyhow::ensure!(
+                    basis.demoted == incoming.demoted
+                        && basis.prefix_rows == incoming.prefix_rows
+                        && g * bs + sum.rows <= *basis_own,
+                    "delta omits group {g} but the basis does not cover it"
+                );
+                gather_group(&basis.payload, bspans, g, bs, sum.rows, &mut scratch);
+                &scratch
+            }
+        };
+        anyhow::ensure!(
+            group_bytes.len() == sum.bytes,
+            "group {g} is {} bytes, manifest says {}",
+            group_bytes.len(),
+            sum.bytes
+        );
+        let got = crc32(group_bytes);
+        anyhow::ensure!(
+            got == sum.crc,
+            "checksum mismatch assembling migration group {g}: \
+             {} bytes corrupted in transfer (crc {got:#010x} != {:#010x})",
+            sum.bytes,
+            sum.crc
+        );
+        // scatter the gathered group back into stream-major layout
+        let mut read = 0usize;
+        for &(off, rb) in &spans {
+            let dst = off + g * bs * rb;
+            let n = sum.rows * rb;
+            payload[dst..dst + n].copy_from_slice(&group_bytes[read..read + n]);
+            read += n;
+        }
+    }
+    anyhow::ensure!(
+        used == delta.groups.len(),
+        "delta ships groups the manifest does not describe"
+    );
+    let got = crc32(&payload);
+    anyhow::ensure!(
+        got == incoming.payload_crc,
+        "checksum mismatch assembling migrated payload: \
+         {} bytes (crc {got:#010x} != {:#010x})",
+        payload.len(),
+        incoming.payload_crc
+    );
+    Ok(ParkedBytes {
+        len: incoming.len,
+        prefix_rows: incoming.prefix_rows,
+        demoted: incoming.demoted,
+        payload,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::manager::CacheManager;
+    use crate::model::memory::CompressionPlan;
+    use crate::model::{Arch, ModelSpec};
+    use crate::util::rng::Rng;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            name: "test".into(),
+            arch: Arch::Gpt2,
+            vocab: 256,
+            n_layer: 3,
+            d_model: 32,
+            n_head: 4,
+            n_kv_head: 4,
+            d_head: 8,
+            ffn_dim: 64,
+            max_seq: 96,
+            ae_hidden: 24,
+            ae_latent: 12,
+            bytes_per_el: 4,
+        }
+    }
+
+    fn manager() -> CacheManager {
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 1);
+        CacheManager::new(CacheConfig::new(spec, plan))
+    }
+
+    fn append_n(m: &mut CacheManager, id: u64, n: usize, rng: &mut Rng) {
+        let spec = m.cfg.spec.clone();
+        for _ in 0..n {
+            let kl: Vec<f32> = (0..spec.n_layer * spec.ae_latent)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let vl: Vec<f32> = (0..spec.n_layer * spec.ae_latent)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let kr: Vec<f32> = (0..spec.n_layer * spec.kv_dim())
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let vr: Vec<f32> = (0..spec.n_layer * spec.kv_dim())
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            m.append_token(id, &kl, &vl, &kr, &vr).unwrap();
+        }
+    }
+
+    #[test]
+    fn manifest_groups_align_with_storage_blocks() {
+        let mut m = manager();
+        let mut rng = Rng::new(7);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 40, &mut rng); // 16 + 16 + 8 rows
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        let man = manifest(&m.cfg, &parked).unwrap();
+        assert_eq!(man.groups.len(), 3);
+        assert_eq!(
+            man.groups.iter().map(|g| g.rows).collect::<Vec<_>>(),
+            vec![16, 16, 8]
+        );
+        assert_eq!(man.full_bytes(), parked.payload.len());
+        assert_eq!(man.payload_crc, crc32(&parked.payload));
+    }
+
+    #[test]
+    fn full_transfer_roundtrips_bitwise() {
+        let mut m = manager();
+        let mut rng = Rng::new(11);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 35, &mut rng);
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        let man = manifest(&m.cfg, &parked).unwrap();
+        let wanted = diff(&man, None);
+        assert_eq!(wanted, vec![0, 1, 2]);
+        let delta = extract(&m.cfg, &parked, &wanted).unwrap();
+        assert_eq!(delta.shipped_bytes(), man.full_bytes());
+        let back = assemble(&m.cfg, &man, None, &delta).unwrap();
+        assert_eq!(back, parked, "full transfer must be bit-identical");
+    }
+
+    #[test]
+    fn delta_law_reships_only_appended_groups() {
+        let mut m = manager();
+        let mut rng = Rng::new(23);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 40, &mut rng);
+        // first transfer: the receiver retains this payload as basis
+        let basis = m.extract_sequence_bytes(id).unwrap();
+        let basis_man = manifest(&m.cfg, &basis).unwrap();
+        m.restore_sequence_bytes(id, &basis).unwrap();
+        // sequence grows append-only, then re-migrates
+        append_n(&mut m, id, 16, &mut rng);
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        let man = manifest(&m.cfg, &parked).unwrap();
+        let wanted = diff(&man, Some(&basis_man));
+        // full groups 0 and 1 are byte-stable; the old partial group 2
+        // grew and group 3 is new
+        assert_eq!(wanted, vec![2, 3]);
+        let delta = extract(&m.cfg, &parked, &wanted).unwrap();
+        assert!(
+            delta.shipped_bytes() < man.full_bytes(),
+            "delta law: {} shipped vs {} full",
+            delta.shipped_bytes(),
+            man.full_bytes()
+        );
+        let back = assemble(&m.cfg, &man, Some(&basis), &delta).unwrap();
+        assert_eq!(back, parked, "delta assembly must be bit-identical");
+    }
+
+    #[test]
+    fn corrupted_group_trips_checksum_mismatch() {
+        let mut m = manager();
+        let mut rng = Rng::new(41);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 20, &mut rng);
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        let man = manifest(&m.cfg, &parked).unwrap();
+        let mut delta = extract(&m.cfg, &parked, &diff(&man, None)).unwrap();
+        // single in-flight bit flip in the second group
+        let bytes = &mut delta.groups[1].1;
+        let at = bytes.len() / 2;
+        bytes[at] ^= 1;
+        let err = assemble(&m.cfg, &man, None, &delta).unwrap_err();
+        assert!(
+            err.to_string().contains("checksum mismatch"),
+            "corruption must surface as a checksum mismatch: {err}"
+        );
+    }
+
+    #[test]
+    fn demotion_invalidates_the_basis_entirely() {
+        let mut m = manager();
+        let mut rng = Rng::new(53);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 40, &mut rng);
+        let basis = m.extract_sequence_bytes(id).unwrap();
+        let basis_man = manifest(&m.cfg, &basis).unwrap();
+        m.restore_sequence_bytes(id, &basis).unwrap();
+        m.demote_sequence(id).unwrap();
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        let man = manifest(&m.cfg, &parked).unwrap();
+        // every stream re-encoded: the whole payload must re-ship
+        assert_eq!(diff(&man, Some(&basis_man)), vec![0, 1, 2]);
+        let delta = extract(&m.cfg, &parked, &diff(&man, Some(&basis_man))).unwrap();
+        let back = assemble(&m.cfg, &man, None, &delta).unwrap();
+        assert_eq!(back, parked);
+    }
+
+    #[test]
+    fn missing_basis_group_is_rejected() {
+        let mut m = manager();
+        let mut rng = Rng::new(61);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 20, &mut rng);
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        let man = manifest(&m.cfg, &parked).unwrap();
+        // ship only group 1 with no basis: group 0 is unreconstructible
+        let delta = extract(&m.cfg, &parked, &[1]).unwrap();
+        let err = assemble(&m.cfg, &man, None, &delta).unwrap_err();
+        assert!(err.to_string().contains("no basis"), "{err}");
+    }
+}

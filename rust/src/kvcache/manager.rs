@@ -143,6 +143,32 @@ impl CacheConfig {
             })
             .sum()
     }
+
+    /// Per-stream wire layout of a [`ParkedBytes`] payload: `(format,
+    /// elements_per_row)` for every (layer, K|V) stream in wire order
+    /// (layer-ascending, K before V).  Fully-aliased streams report
+    /// zero elements and contribute no payload bytes.  A `demoted`
+    /// payload encodes every byte-bearing stream int8 (the pressure
+    /// ladder's rung), exactly as `restore_sequence_bytes` derives —
+    /// this is the one definition both the restore path and the
+    /// delta-transfer manifest ([`crate::kvcache::delta`]) read the
+    /// payload through.
+    pub fn wire_layout(&self, demoted: bool) -> Vec<(Format, usize)> {
+        let mut layout = Vec::with_capacity(2 * self.spec.n_layer);
+        for layer in 0..self.spec.n_layer {
+            for side in [Side::K, Side::V] {
+                let kind = self.store_kind(layer, side);
+                let epr = kind.elements(&self.spec);
+                let fmt = if demoted && epr > 0 {
+                    Format::Int8
+                } else {
+                    self.format_for(&kind)
+                };
+                layout.push((fmt, epr));
+            }
+        }
+        layout
+    }
 }
 
 /// Rows of one stream read back from the store, decoded to f32 into
@@ -751,7 +777,6 @@ impl CacheManager {
     /// parked).  The watermark stays at 0 — the next retrieval rebuilds
     /// the effective cache in full.
     pub fn restore_sequence_bytes(&mut self, id: u64, parked: &ParkedBytes) -> Result<()> {
-        let spec = self.cfg.spec.clone();
         {
             let seq = self
                 .seqs
@@ -775,21 +800,15 @@ impl CacheManager {
         // headers travel with the payload); only the suffix rows past
         // the still-resident shared prefix travel
         let own = parked.len - parked.prefix_rows;
-        let mut layout = Vec::new();
-        for layer in 0..spec.n_layer {
-            for side in [Side::K, Side::V] {
-                let kind = self.cfg.store_kind(layer, side);
-                let epr = kind.elements(&spec);
-                // a demoted payload is int8 in every stored stream
-                let fmt = if parked.demoted && epr > 0 {
-                    Format::Int8
-                } else {
-                    self.cfg.format_for(&kind)
-                };
+        let layout: Vec<(Format, usize, usize)> = self
+            .cfg
+            .wire_layout(parked.demoted)
+            .into_iter()
+            .map(|(fmt, epr)| {
                 let nbytes = if epr == 0 { 0 } else { own * fmt.row_bytes(epr) };
-                layout.push((fmt, epr, nbytes));
-            }
-        }
+                (fmt, epr, nbytes)
+            })
+            .collect();
         let total: usize = layout.iter().map(|l| l.2).sum();
         anyhow::ensure!(
             parked.payload.len() == total,
@@ -1227,6 +1246,213 @@ impl CacheManager {
             .collect();
         self.prefix.integrity(&paths, pinned_leaves)
     }
+
+    // --- cross-worker migration (DESIGN.md §10) ---------------------------
+
+    /// Leaf node of a sequence's shared prefix chain (`None` when the
+    /// sequence shares nothing) — the handle migration uses to
+    /// enumerate and re-create the chain on another worker.
+    pub fn seq_prefix_leaf(&self, id: u64) -> Option<u32> {
+        self.seqs.get(&id).and_then(|s| s.prefix_path.last().copied())
+    }
+
+    /// Node ids of the chain root→`leaf` — the walk
+    /// [`CacheManager::export_chunk`] and chunk-delivery rollback
+    /// enumerate with (pairs up index-for-index with
+    /// [`CacheManager::prefix_chain`]).
+    pub fn prefix_path(&self, leaf: u32) -> Result<Vec<u32>> {
+        self.prefix.path(leaf)
+    }
+
+    /// Look up the trie child holding `key` under `parent` (`None` =
+    /// a root chunk).  Migration uses this to skip exporting chunk
+    /// payloads the destination already stores — whether delivered by
+    /// an earlier transfer or built by its own admissions.
+    pub fn prefix_child(&self, parent: Option<u32>, key: &[u8]) -> Option<u32> {
+        self.prefix.child(parent, key)
+    }
+
+    /// Free one unreferenced, childless chunk — the rollback of a
+    /// chunk delivery that failed partway down its chain (imported
+    /// nodes are removed deepest-first so none ever has children left).
+    pub fn remove_unreferenced_chunk(&mut self, node: u32) {
+        self.prefix.remove_unreferenced(node, &mut self.pool);
+    }
+
+    /// Content-addressed descriptors of the chain root→`leaf`: one
+    /// `(chain id, token key)` per chunk, root first.  The chain id is
+    /// [`chunk_chain_id`] over the parent's id and the chunk's own
+    /// token key, so equal token prefixes hash to equal ids on every
+    /// worker with no coordination — the property that lets a router
+    /// ship each shared chunk to a worker at most once, ever.
+    pub fn prefix_chain(&self, leaf: u32) -> Result<Vec<(u64, Vec<u8>)>> {
+        let mut chain = Vec::new();
+        let mut parent_id = 0u64;
+        for node in self.prefix.path(leaf)? {
+            let key = self.prefix.key(node)?.to_vec();
+            let id = chunk_chain_id(parent_id, &key);
+            chain.push((id, key));
+            parent_id = id;
+        }
+        Ok(chain)
+    }
+
+    /// Export one shared-prefix chunk's payload: the encoded bytes of
+    /// its full block per byte-bearing stream, wire order (the same
+    /// layer-ascending, K-before-V order as [`ParkedBytes`]).  Shared
+    /// chunks are never demoted, so the formats are the plan's own.
+    pub fn export_chunk(&self, node: u32) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::new();
+        for layer in 0..self.cfg.spec.n_layer {
+            for side in [Side::K, Side::V] {
+                let kind = self.cfg.store_kind(layer, side);
+                if kind.elements(&self.cfg.spec) == 0 {
+                    continue;
+                }
+                let b = self.prefix.block(node, layer, side).ok_or_else(|| {
+                    anyhow!("prefix chunk {node} is missing a stored stream block")
+                })?;
+                out.push(b.rows_view(0, b.rows).raw().to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Import one content-addressed chunk under `parent` from an
+    /// [`CacheManager::export_chunk`] payload.  Idempotent: an existing
+    /// child under the same key is returned untouched (the payload is
+    /// ignored — content addressing guarantees it holds the same
+    /// bytes).  Staging is all-or-nothing: a budget failure frees every
+    /// staged block and leaves the trie unchanged.
+    pub fn import_chunk(
+        &mut self,
+        parent: Option<u32>,
+        key: &[u8],
+        streams: &[Vec<u8>],
+    ) -> Result<u32> {
+        if let Some(existing) = self.prefix.child(parent, key) {
+            self.prefix.stats.chunk_hits += 1;
+            return Ok(existing);
+        }
+        let bs = self.cfg.block_size;
+        anyhow::ensure!(key.len() == bs, "chunk key must span one block of tokens");
+        let spec = self.cfg.spec.clone();
+        let mut blocks: Vec<[Option<Block>; 2]> = Vec::with_capacity(spec.n_layer);
+        let mut bytes = 0usize;
+        let mut payloads = streams.iter();
+        for layer in 0..spec.n_layer {
+            let mut pair: [Option<Block>; 2] = [None, None];
+            for (side_idx, side) in [(0usize, Side::K), (1, Side::V)] {
+                let kind = self.cfg.store_kind(layer, side);
+                let epr = kind.elements(&spec);
+                if epr == 0 {
+                    continue;
+                }
+                let fmt = self.cfg.format_for(&kind);
+                let Some(raw) = payloads.next() else {
+                    for mut p in blocks {
+                        for blk in p.iter_mut().filter_map(Option::take) {
+                            self.pool.free(blk);
+                        }
+                    }
+                    for blk in pair.iter_mut().filter_map(Option::take) {
+                        self.pool.free(blk);
+                    }
+                    return Err(anyhow!("chunk payload is missing a stored stream"));
+                };
+                if raw.len() != bs * fmt.row_bytes(epr) {
+                    let got = raw.len();
+                    let want = bs * fmt.row_bytes(epr);
+                    for mut p in blocks {
+                        for blk in p.iter_mut().filter_map(Option::take) {
+                            self.pool.free(blk);
+                        }
+                    }
+                    for blk in pair.iter_mut().filter_map(Option::take) {
+                        self.pool.free(blk);
+                    }
+                    return Err(anyhow!(
+                        "chunk stream payload is {got} bytes, layout derives {want}"
+                    ));
+                }
+                let Some(mut b) = self.pool.alloc(fmt, epr, bs) else {
+                    for mut p in blocks {
+                        for blk in p.iter_mut().filter_map(Option::take) {
+                            self.pool.free(blk);
+                        }
+                    }
+                    for blk in pair.iter_mut().filter_map(Option::take) {
+                        self.pool.free(blk);
+                    }
+                    return Err(anyhow!(
+                        "cache budget exceeded importing a shared prefix chunk"
+                    ));
+                };
+                let taken = b.push_raw_rows(raw);
+                debug_assert_eq!(taken, bs, "chunk block must fill exactly");
+                bytes += b.stored_bytes();
+                pair[side_idx] = Some(b);
+            }
+            blocks.push(pair);
+        }
+        anyhow::ensure!(
+            payloads.next().is_none(),
+            "chunk payload carries extra streams"
+        );
+        self.prefix.stats.chunk_misses += 1;
+        Ok(self.prefix.add_child(parent, key.to_vec(), blocks, bytes))
+    }
+
+    /// Create the destination-side shell of a migrated sequence: a
+    /// fresh id covering `len` rows over the chain ending at `leaf`,
+    /// registered **parked** so the very next step is
+    /// [`CacheManager::restore_sequence_bytes`] with the transferred
+    /// payload.  On failure nothing is left behind.
+    pub fn import_sequence(&mut self, len: usize, leaf: Option<u32>, demoted: bool) -> Result<u64> {
+        anyhow::ensure!(
+            len <= self.cfg.spec.max_seq,
+            "imported sequence of {len} rows exceeds max_seq"
+        );
+        let id = self.create_sequence();
+        if let Some(leaf) = leaf {
+            if let Err(e) = self.attach_prefix(id, leaf) {
+                self.free_sequence(id);
+                return Err(e);
+            }
+        }
+        let prefix_rows = self.seq_prefix_rows(id);
+        if prefix_rows > len {
+            self.free_sequence(id);
+            return Err(anyhow!(
+                "imported length {len} is shorter than its {prefix_rows} shared prefix rows"
+            ));
+        }
+        let seq = self
+            .seqs
+            .get_mut(&id)
+            .expect("sequence created a few lines up");
+        seq.len = len;
+        seq.demoted = demoted;
+        seq.parked = true;
+        seq.decoded_upto = 0;
+        Ok(id)
+    }
+}
+
+/// FNV-1a chain hash giving every shared-prefix chunk a **content
+/// address**: the id of a chunk is a pure function of its ancestors'
+/// token keys and its own, so two workers that ingested the same
+/// prompt prefix independently derive the same ids — the coordination-
+/// free identity cross-worker migration dedups chunk transfers by.
+pub fn chunk_chain_id(parent: u64, key: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in parent.to_le_bytes().iter().chain(key) {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
 }
 
 /// Gather the encodable rows of one (layer, side) stream for buffer

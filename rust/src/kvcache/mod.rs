@@ -3,18 +3,21 @@
 //! per-sequence manager and zero-copy retrieval views (`manager`), the
 //! cross-request shared-prefix trie whose refcounted chunk blocks turn
 //! prefix cache bytes from O(requests) into O(distinct prompts)
-//! (`prefix`), and the host-offload tier that moves encoded bytes
-//! off-device (`tier`).
+//! (`prefix`), the host-offload tier that moves encoded bytes
+//! off-device (`tier`), and the rsync-style delta-transfer protocol
+//! cross-worker sequence migration ships payloads with (`delta`).
 
 pub mod allocator;
 pub mod block;
+pub mod delta;
 pub mod manager;
 pub mod prefix;
 pub mod tier;
 
 pub use block::{Format, RowsView};
+pub use delta::{BlockManifest, DeltaPayload, GroupSum};
 pub use manager::{
-    CacheConfig, CacheManager, ParkedBytes, SharedIngest, Side, StoreKind, StoredRows, StreamRows,
-    StreamView,
+    chunk_chain_id, CacheConfig, CacheManager, ParkedBytes, SharedIngest, Side, StoreKind,
+    StoredRows, StreamRows, StreamView,
 };
 pub use prefix::{PrefixIndex, PrefixStats};

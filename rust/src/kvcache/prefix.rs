@@ -117,6 +117,13 @@ impl PrefixIndex {
         Ok(self.node(node)?.depth)
     }
 
+    /// The `block_size` token bytes this node indexes under its parent
+    /// — the identity content-addressed chunk export walks the chain
+    /// with (`CacheManager::prefix_chain`).
+    pub fn key(&self, node: u32) -> Result<&[u8]> {
+        Ok(&self.node(node)?.key)
+    }
+
     /// Encoded bytes the node's blocks hold.
     pub fn node_bytes(&self, node: u32) -> usize {
         self.node(node).map(|n| n.bytes).unwrap_or(0)

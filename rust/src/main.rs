@@ -15,7 +15,7 @@
 use anyhow::{anyhow, Result};
 use kvcar::compress::planner::{self, to_masks};
 use kvcar::compress::similarity::Selection;
-use kvcar::coordinator::{GenRequest, Sampling, ServeConfig, ServingEngine};
+use kvcar::coordinator::{GenRequest, Router, RouterConfig, Sampling, ServeConfig, ServingEngine};
 use kvcar::data::corpus;
 use kvcar::data::tasks::Task;
 use kvcar::eval::{perplexity, zero_shot};
@@ -228,16 +228,12 @@ fn run(args: &Args) -> Result<()> {
                 } else {
                     base.raw_format
                 },
+                // --template-budget caps the admission template cache's
+                // host bytes (default 64 MiB)
+                template_byte_budget: args.usize("template-budget", base.template_byte_budget),
                 ..base
             };
-            let mut serving = ServingEngine::new(&mut engine, &model, cfg)?;
             let ckpt = PathBuf::from(args.str("checkpoints", "checkpoints"));
-            if let Some(tag) = args.opt("from") {
-                serving.store.load_params(
-                    &ckpt.join(format!("{model}_{tag}.bin")),
-                    &ckpt.join(format!("{model}_{tag}.json")),
-                )?;
-            }
             let mut c = corpus::wiki(args.u64("seed", 0));
             let n = args.usize("requests", 16);
             let reqs: Vec<GenRequest> = (0..n)
@@ -253,6 +249,58 @@ fn run(args: &Args) -> Result<()> {
                     }
                 })
                 .collect();
+            // --workers N serves the workload sharded: N router workers
+            // (one engine each over the same artifacts), hash-affinity
+            // placement, and live-migration rebalance (DESIGN.md §10)
+            let workers = args.usize("workers", 1);
+            if workers > 1 {
+                let dir = artifacts(args);
+                let mut extra: Vec<Engine> = (1..workers)
+                    .map(|_| Engine::new(&dir))
+                    .collect::<Result<_>>()?;
+                let mut backends: Vec<&mut dyn kvcar::runtime::backend::ExecBackend> =
+                    Vec::with_capacity(workers);
+                backends.push(&mut engine);
+                for e in extra.iter_mut() {
+                    backends.push(e);
+                }
+                let mut router = Router::new(backends, &model, cfg, RouterConfig::default())?;
+                if let Some(tag) = args.opt("from") {
+                    for w in 0..router.n_workers() {
+                        router.engine_mut(w).store.load_params(
+                            &ckpt.join(format!("{model}_{tag}.bin")),
+                            &ckpt.join(format!("{model}_{tag}.json")),
+                        )?;
+                    }
+                }
+                let responses = router.run(reqs)?;
+                for r in responses.iter().take(3) {
+                    println!("  req {}: {:?}", r.id, String::from_utf8_lossy(&r.output));
+                }
+                for w in 0..router.n_workers() {
+                    router.engine(w).metrics.print_summary(&format!("{model} worker {w}"));
+                }
+                let st = router.stats();
+                println!(
+                    "  router: {} migrations ({} rebalance, {} failed), \
+                     {:.1} KiB delta shipped / {:.1} KiB basis-saved, \
+                     {} placements overridden",
+                    st.migrations,
+                    st.rebalance_migrations,
+                    st.failed_migrations,
+                    st.delta_bytes as f64 / 1024.0,
+                    st.bytes_saved as f64 / 1024.0,
+                    st.placements_overridden
+                );
+                return Ok(());
+            }
+            let mut serving = ServingEngine::new(&mut engine, &model, cfg)?;
+            if let Some(tag) = args.opt("from") {
+                serving.store.load_params(
+                    &ckpt.join(format!("{model}_{tag}.bin")),
+                    &ckpt.join(format!("{model}_{tag}.json")),
+                )?;
+            }
             let responses = serving.run(reqs)?;
             for r in responses.iter().take(3) {
                 println!("  req {}: {:?}", r.id, String::from_utf8_lossy(&r.output));

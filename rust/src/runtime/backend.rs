@@ -123,3 +123,49 @@ impl ExecBackend for Engine {
         Engine::arm_launch_fault(self, kind, nth, burst)
     }
 }
+
+/// Boxed backends forward transparently, so an owner of
+/// `Vec<Box<dyn ExecBackend>>` — the sharded server front end building
+/// one backend per router worker — can lend each box out as a
+/// `&mut dyn ExecBackend` without unwrapping it.
+impl ExecBackend for Box<dyn ExecBackend + '_> {
+    fn execute(&mut self, entry: &str, store: &Store) -> Result<Vec<(String, Tensor)>> {
+        (**self).execute(entry, store)
+    }
+
+    fn load_params(&mut self, model: &str, store: &mut Store) -> Result<usize> {
+        (**self).load_params(model, store)
+    }
+
+    fn model_spec(&self, model: &str) -> Result<ModelSpec> {
+        (**self).model_spec(model)
+    }
+
+    fn decode_batches(&self, model: &str) -> Vec<usize> {
+        (**self).decode_batches(model)
+    }
+
+    fn has_entry(&self, entry: &str) -> bool {
+        (**self).has_entry(entry)
+    }
+
+    fn entry_lanes(&self, entry: &str, input: &str) -> Option<usize> {
+        (**self).entry_lanes(entry, input)
+    }
+
+    fn set_device_residency(&mut self, on: bool) {
+        (**self).set_device_residency(on)
+    }
+
+    fn stats(&self) -> &EngineStats {
+        (**self).stats()
+    }
+
+    fn inject_launch_fault(&mut self, kind: &str, nth: u64) -> bool {
+        (**self).inject_launch_fault(kind, nth)
+    }
+
+    fn inject_launch_fault_burst(&mut self, kind: &str, nth: u64, burst: u64) -> bool {
+        (**self).inject_launch_fault_burst(kind, nth, burst)
+    }
+}

@@ -18,8 +18,16 @@
 //! few-shot headers) therefore pays prefill launches and prefix cache
 //! bytes per *distinct* prompt, not per request; each client still
 //! gets its own sequence, decode stream, and response.
+//!
+//! [`Server::start_sharded`] runs the same front end over a
+//! [`Router`] of N workers (own engine, KV pool, and tier each):
+//! requests place by id-hash affinity with a load-aware override, and
+//! the router rebalances live sequences between workers by delta-sync
+//! migration (DESIGN.md §10).
 
-use crate::coordinator::{GenRequest, GenResponse, ServeConfig, ServingEngine};
+use crate::coordinator::{
+    GenRequest, GenResponse, Router, RouterConfig, RouterStats, ServeConfig, ServingEngine,
+};
 use crate::runtime::backend::ExecBackend;
 use crate::runtime::Engine;
 use anyhow::{anyhow, Result};
@@ -31,6 +39,7 @@ use std::time::Duration;
 enum Msg {
     Generate(GenRequest, Sender<Result<GenResponse, String>>),
     Metrics(Sender<crate::coordinator::metrics::ServeMetrics>),
+    RouterStats(Sender<Option<RouterStats>>),
     Shutdown,
 }
 
@@ -65,11 +74,24 @@ impl ServerHandle {
             .map_err(|e| anyhow!(e))
     }
 
-    /// Snapshot of the engine's serving metrics.
+    /// Snapshot of the engine's serving metrics (worker 0's on a
+    /// sharded server — per-worker counters stay per-worker; see
+    /// [`ServerHandle::router_stats`] for cluster-level migration and
+    /// placement counters).
     pub fn metrics(&self) -> Result<crate::coordinator::metrics::ServeMetrics> {
         let (tx, rx) = channel();
         self.tx
             .send(Msg::Metrics(tx))
+            .map_err(|_| anyhow!("server is down"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+
+    /// Cluster-level router counters (placements, migrations, delta
+    /// bytes); `None` when the server runs a single unsharded worker.
+    pub fn router_stats(&self) -> Result<Option<RouterStats>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::RouterStats(tx))
             .map_err(|_| anyhow!("server is down"))?;
         rx.recv().map_err(|_| anyhow!("server dropped the request"))
     }
@@ -97,6 +119,50 @@ impl Server {
         let handle = std::thread::Builder::new()
             .name("kvcar-serve".into())
             .spawn(move || worker(factory, model, cfg, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server thread died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Server {
+            tx,
+            handle: Some(handle),
+        })
+    }
+
+    /// Start a sharded server: `n_workers` router workers, each with
+    /// its own engine over the same artifacts, serving behind one
+    /// request channel.  Placement, rebalance migration, and drain are
+    /// the [`Router`]'s (DESIGN.md §10).
+    pub fn start_sharded(
+        artifacts: PathBuf,
+        model: String,
+        cfg: ServeConfig,
+        rcfg: RouterConfig,
+        n_workers: usize,
+    ) -> Result<Server> {
+        Server::start_sharded_with(model, cfg, rcfg, n_workers, move || {
+            Ok(Box::new(Engine::new(&artifacts)?) as Box<dyn ExecBackend>)
+        })
+    }
+
+    /// Sharded [`Server::start_with`]: `factory` runs once per worker
+    /// **on the serving thread** to build that worker's backend.
+    pub fn start_sharded_with<F>(
+        model: String,
+        cfg: ServeConfig,
+        rcfg: RouterConfig,
+        n_workers: usize,
+        factory: F,
+    ) -> Result<Server>
+    where
+        F: Fn() -> Result<Box<dyn ExecBackend>> + Send + 'static,
+    {
+        anyhow::ensure!(n_workers >= 1, "a sharded server needs at least one worker");
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("kvcar-serve".into())
+            .spawn(move || sharded_worker(factory, model, cfg, rcfg, n_workers, rx, ready_tx))?;
         ready_rx
             .recv()
             .map_err(|_| anyhow!("server thread died during startup"))?
@@ -176,6 +242,10 @@ fn worker<F>(
                 let _ = tx.send(serving.metrics.clone());
                 continue;
             }
+            Msg::RouterStats(tx) => {
+                let _ = tx.send(None);
+                continue;
+            }
             Msg::Generate(req, tx) => wave.push((stamp(req), tx)),
         }
         // A Shutdown observed during the gather window must not be
@@ -191,6 +261,9 @@ fn worker<F>(
                 Ok(Msg::Metrics(tx)) => {
                     let _ = tx.send(serving.metrics.clone());
                 }
+                Ok(Msg::RouterStats(tx)) => {
+                    let _ = tx.send(None);
+                }
                 Ok(Msg::Shutdown) => {
                     shutting_down = true;
                     break;
@@ -200,6 +273,114 @@ fn worker<F>(
         }
         let reqs: Vec<GenRequest> = wave.iter().map(|(r, _)| r.clone()).collect();
         match serving.run(reqs) {
+            Ok(responses) => {
+                for (req, tx) in wave {
+                    let resp = responses
+                        .iter()
+                        .find(|r| r.id == req.id)
+                        .cloned()
+                        .ok_or_else(|| "response missing".to_string());
+                    let _ = tx.send(resp);
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for (_, tx) in wave {
+                    let _ = tx.send(Err(msg.clone()));
+                }
+            }
+        }
+        if shutting_down {
+            return;
+        }
+    }
+}
+
+/// The sharded serving thread: builds one backend per worker through
+/// `factory`, wraps them in a [`Router`], and serves gathered waves
+/// through it.  Same gather-window and shutdown-drain contract as the
+/// single-worker loop.
+fn sharded_worker<F>(
+    factory: F,
+    model: String,
+    cfg: ServeConfig,
+    rcfg: RouterConfig,
+    n_workers: usize,
+    rx: Receiver<Msg>,
+    ready: Sender<Result<(), String>>,
+) where
+    F: Fn() -> Result<Box<dyn ExecBackend>>,
+{
+    let mut backends: Vec<Box<dyn ExecBackend>> = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        match factory() {
+            Ok(b) => backends.push(b),
+            Err(e) => {
+                let _ = ready.send(Err(format!("{e:#}")));
+                return;
+            }
+        }
+    }
+    let refs: Vec<&mut dyn ExecBackend> = backends.iter_mut().map(|b| b.as_mut()).collect();
+    let max_batch = cfg.max_batch;
+    let mut router = match Router::new(refs, &model, cfg, rcfg) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+
+    loop {
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        let mut wave: Vec<(GenRequest, Sender<Result<GenResponse, String>>)> = Vec::new();
+        let stamp = |router: &Router<'_>, mut req: GenRequest| {
+            req.arrival.get_or_insert(router.engine(0).clock.now());
+            req
+        };
+        match first {
+            Msg::Shutdown => return,
+            Msg::Metrics(tx) => {
+                let _ = tx.send(router.engine(0).metrics.clone());
+                continue;
+            }
+            Msg::RouterStats(tx) => {
+                let _ = tx.send(Some(router.stats().clone()));
+                continue;
+            }
+            Msg::Generate(req, tx) => {
+                let req = stamp(&router, req);
+                wave.push((req, tx));
+            }
+        }
+        let mut shutting_down = false;
+        let window = Duration::from_millis(2);
+        // the cluster admits up to max_batch per worker per wave
+        while wave.len() < max_batch * n_workers {
+            match rx.recv_timeout(window) {
+                Ok(Msg::Generate(req, tx)) => {
+                    let req = stamp(&router, req);
+                    wave.push((req, tx));
+                }
+                Ok(Msg::Metrics(tx)) => {
+                    let _ = tx.send(router.engine(0).metrics.clone());
+                }
+                Ok(Msg::RouterStats(tx)) => {
+                    let _ = tx.send(Some(router.stats().clone()));
+                }
+                Ok(Msg::Shutdown) => {
+                    shutting_down = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        let reqs: Vec<GenRequest> = wave.iter().map(|(r, _)| r.clone()).collect();
+        match router.run(reqs) {
             Ok(responses) => {
                 for (req, tx) in wave {
                     let resp = responses

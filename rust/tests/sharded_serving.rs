@@ -1,0 +1,407 @@
+//! Sharded serving integration suite: the sharded scenario matrix is
+//! bitwise-pinned against single-worker runs, the delta law is proved
+//! on a controlled ping-pong migration (a return trip ships only the
+//! groups appended since the replica basis was taken), shared prefix
+//! chunks are shown to ship at most once per worker ever, and a
+//! property-style interleaving of admit/migrate/park/resume/drain/
+//! retire across 2–4 workers re-audits every cluster invariant after
+//! every operation.
+
+use kvcar::coordinator::{
+    run_scenario, run_sharded, scenario_spec, sharded_matrix, Clock, GenRequest, MigrationOutcome,
+    Router, RouterConfig, Sampling, ServeConfig, ServingEngine, ShardedReport, ShardedScenario,
+    Stamp,
+};
+use kvcar::kvcache::CacheConfig;
+use kvcar::model::memory::CompressionPlan;
+use kvcar::runtime::{ExecBackend, MockEngine};
+
+fn base_cfg() -> ServeConfig {
+    let spec = scenario_spec();
+    ServeConfig::new(CompressionPlan::ae_first_layers(&spec, 1))
+}
+
+fn bytes_per_token() -> usize {
+    let spec = scenario_spec();
+    let plan = CompressionPlan::ae_first_layers(&spec, 1);
+    CacheConfig::new(spec, plan).bytes_per_token()
+}
+
+fn prompt_bytes(seed: usize, len: usize) -> Vec<u8> {
+    (0..len).map(|i| ((seed * 31 + i * 7) % 64) as u8).collect()
+}
+
+fn request(id: u64, prompt: Vec<u8>, max_new: usize, arrival_ms: Option<u64>) -> GenRequest {
+    GenRequest {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        sampling: Sampling::Greedy,
+        stop_byte: None,
+        arrival: arrival_ms.map(Stamp::from_ms),
+    }
+}
+
+/// The never-migrated reference: the same workload on one worker.
+fn single_outputs(cfg: ServeConfig, requests: Vec<GenRequest>) -> Vec<(u64, Vec<u8>)> {
+    let mut engine = MockEngine::new(scenario_spec());
+    let mut serving = ServingEngine::new(&mut engine, "mock", cfg).expect("single-worker engine");
+    serving.set_clock(Clock::virtual_default());
+    serving
+        .run(requests)
+        .expect("single-worker run")
+        .into_iter()
+        .map(|r| (r.id, r.output))
+        .collect()
+}
+
+fn run_matrix_scenario(sc: &ShardedScenario) -> ShardedReport {
+    let mut engines: Vec<MockEngine> =
+        (0..sc.n_workers).map(|_| MockEngine::new(scenario_spec())).collect();
+    let backends: Vec<&mut dyn ExecBackend> =
+        engines.iter_mut().map(|e| e as &mut dyn ExecBackend).collect();
+    run_sharded(backends, "mock", sc).expect("sharded scenario must pass its cluster audits")
+}
+
+fn audit(router: &Router<'_>, n: usize, round: u64) {
+    if let Err(v) = router.check(false) {
+        panic!("cluster invariants violated (n={n}, round {round}):\n{v}");
+    }
+}
+
+#[test]
+fn sharded_matrix_is_bitwise_identical_to_single_worker() {
+    for sc in sharded_matrix() {
+        let r = run_matrix_scenario(&sc);
+        let mut engine = MockEngine::new(scenario_spec());
+        let control = run_scenario(&mut engine, "mock", &sc.base).expect("single-worker control");
+        assert_eq!(
+            r.completed,
+            sc.base.trace.n_requests,
+            "'{}' must complete every request",
+            r.name
+        );
+        assert_eq!(
+            r.tokens_digest, control.tokens_digest,
+            "'{}' token streams diverged from the single-worker run",
+            r.name
+        );
+        assert_eq!(
+            r.output_digests, control.output_digests,
+            "'{}' per-request digests diverged from the single-worker run",
+            r.name
+        );
+        assert_eq!(
+            r.migrations,
+            r.forced_migrations + r.rebalance_migrations + r.drain_migrations,
+            "'{}' committed a migration nothing initiated",
+            r.name
+        );
+        assert_eq!(
+            r.full_bytes,
+            r.delta_bytes + r.bytes_saved,
+            "'{}' delta-law denominator must decompose",
+            r.name
+        );
+        match r.name.as_str() {
+            "sharded_nomad" => {
+                assert!(
+                    r.forced_migrations >= 3,
+                    "the nomad must hop at least 3 times, hopped {}",
+                    r.forced_migrations
+                );
+                // the delta law on the wire: return trips hit the
+                // replica basis, so less than the full payload shipped
+                assert!(r.bytes_saved > 0, "nomad return trips never hit a replica basis");
+                assert!(
+                    r.delta_bytes < r.full_bytes,
+                    "re-migration must ship less than the full sequence ({} vs {})",
+                    r.delta_bytes,
+                    r.full_bytes
+                );
+                assert_eq!(r.chunk_bytes, 0, "the nomad runs without prefix sharing");
+            }
+            "sharded_shared_prefix_drain" => {
+                assert!(r.migrations >= 1, "the drain scenario never migrated");
+                assert!(
+                    r.chunks_in + r.chunks_deduped >= 1,
+                    "shared-prefix migrations must account their chunks"
+                );
+            }
+            "sharded_corrupt_transfer" => {
+                assert_eq!(
+                    r.corruption_rollbacks, 2,
+                    "both armed corruptions must be caught by the delta CRCs and rolled back"
+                );
+                assert!(
+                    r.forced_migrations >= 1,
+                    "clean hops after the armed corruptions must commit"
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn sharded_runs_are_deterministic() {
+    for sc in sharded_matrix() {
+        let a = run_matrix_scenario(&sc);
+        let b = run_matrix_scenario(&sc);
+        assert_eq!(a, b, "'{}' must reproduce bit for bit", sc.base.name);
+    }
+}
+
+#[test]
+fn remigration_ships_only_groups_appended_since_the_basis() {
+    let mut engines: Vec<MockEngine> = (0..2).map(|_| MockEngine::new(scenario_spec())).collect();
+    let backends: Vec<&mut dyn ExecBackend> =
+        engines.iter_mut().map(|e| e as &mut dyn ExecBackend).collect();
+    let mut cfg = base_cfg();
+    cfg.max_batch = 2;
+    let req = request(11, prompt_bytes(3, 24), 20, None);
+    let control = single_outputs(cfg.clone(), vec![req.clone()]);
+    let rcfg = RouterConfig {
+        auto_rebalance: false,
+        ..RouterConfig::default()
+    };
+    let mut router = Router::new(backends, "mock", cfg, rcfg).expect("router");
+    router.set_clock(&Clock::virtual_default());
+    router.begin(vec![req]);
+    // grow the sequence past one full 16-row delta group of own suffix
+    for round in 0..10u64 {
+        assert!(router.step().expect("round"), "sequence finished before the first migration");
+        audit(&router, 2, round);
+    }
+    let src = (0..2).find(|&w| !router.live_requests(w).is_empty()).expect("a live sequence");
+    let dst = 1 - src;
+    let (_, cache_id) = *router.live_requests(src).first().expect("live sequence on src");
+    let MigrationOutcome::Committed {
+        delta_bytes: d1,
+        bytes_saved: s1,
+        ..
+    } = router.migrate(src, dst, cache_id, false).expect("first migration")
+    else {
+        panic!("first migration must commit");
+    };
+    assert!(d1 > 0, "the first trip must ship the suffix");
+    assert_eq!(s1, 0, "no replica basis exists yet: the full suffix must ship");
+    audit(&router, 2, 10);
+    // append more tokens on the destination, then send it home
+    for round in 10..14u64 {
+        assert!(router.step().expect("round"), "sequence finished before the return trip");
+        audit(&router, 2, round);
+    }
+    let (_, back) = *router.live_requests(dst).first().expect("live sequence on dst");
+    let MigrationOutcome::Committed {
+        delta_bytes: d2,
+        bytes_saved: s2,
+        ..
+    } = router.migrate(dst, src, back, false).expect("return migration")
+    else {
+        panic!("return migration must commit");
+    };
+    assert!(s2 > 0, "the source's retained replica must supply the stable groups");
+    assert!(
+        d2 < d1,
+        "the grown sequence's return trip must ship less than its first trip ({d2} vs {d1})"
+    );
+    assert!(
+        d2 + s2 > d1,
+        "the full payload must have grown between the trips ({} vs {d1})",
+        d2 + s2
+    );
+    audit(&router, 2, 14);
+    let mut round = 14u64;
+    while router.step().expect("round") {
+        round += 1;
+        audit(&router, 2, round);
+        assert!(round < 256, "run did not converge");
+    }
+    let out: Vec<(u64, Vec<u8>)> = router.finish().into_iter().map(|r| (r.id, r.output)).collect();
+    assert_eq!(out, control, "two migrations must not perturb a single future token");
+    assert_eq!(router.stats().migrations, 2);
+}
+
+#[test]
+fn shared_prefix_chunks_ship_at_most_once_per_worker_ever() {
+    let mut engines: Vec<MockEngine> = (0..2).map(|_| MockEngine::new(scenario_spec())).collect();
+    let backends: Vec<&mut dyn ExecBackend> =
+        engines.iter_mut().map(|e| e as &mut dyn ExecBackend).collect();
+    let mut cfg = base_cfg();
+    cfg.max_batch = 4;
+    let prompt = prompt_bytes(9, 24);
+    let requests: Vec<GenRequest> =
+        (0..4).map(|i| request(i, prompt.clone(), 16, None)).collect();
+    let control = single_outputs(cfg.clone(), requests.clone());
+    let rcfg = RouterConfig {
+        auto_rebalance: false,
+        ..RouterConfig::default()
+    };
+    let mut router = Router::new(backends, "mock", cfg, rcfg).expect("router");
+    router.set_clock(&Clock::virtual_default());
+    router.begin(requests);
+    for round in 0..3u64 {
+        assert!(router.step().expect("round"), "sequences finished too early");
+        audit(&router, 2, round);
+    }
+    // pick the victim on the worker with the most sharers, so the
+    // chain stays alive on the source after the victim leaves
+    let src = (0..2).max_by_key(|&w| router.live_requests(w).len()).unwrap();
+    let dst = 1 - src;
+    let (req_id, cache_id) = *router.live_requests(src).first().expect("live sequence on src");
+    assert!(
+        router.engine(src).cache.seq_prefix_leaf(cache_id).is_some(),
+        "a shared 24-token prompt must hold a block-aligned prefix chain"
+    );
+    let find = |router: &Router<'_>, w: usize| {
+        router.live_requests(w).iter().find(|(r, _)| *r == req_id).map(|&(_, c)| c)
+    };
+    // trip 1: the chain is accounted on the destination, shipped or
+    // (if the destination's own sharers already built it) deduped
+    let in0 = router.engine(dst).metrics.migration_chunks_in;
+    let dd0 = router.engine(dst).metrics.migration_chunks_deduped;
+    let MigrationOutcome::Committed { .. } =
+        router.migrate(src, dst, cache_id, false).expect("first migration")
+    else {
+        panic!("first migration must commit");
+    };
+    let shipped = router.engine(dst).metrics.migration_chunks_in - in0;
+    let deduped = router.engine(dst).metrics.migration_chunks_deduped - dd0;
+    assert!(shipped + deduped >= 1, "the chain must be accounted on delivery");
+    audit(&router, 2, 3);
+    assert!(router.step().expect("round"), "victim finished too early");
+    audit(&router, 2, 4);
+    // trip 2 (return): the source still holds the chain — no bytes
+    let back = find(&router, dst).expect("victim live on destination");
+    let MigrationOutcome::Committed { chunk_bytes: cb2, .. } =
+        router.migrate(dst, src, back, false).expect("return migration")
+    else {
+        panic!("return migration must commit");
+    };
+    assert_eq!(cb2, 0, "the return trip must not re-ship a chain the source holds");
+    audit(&router, 2, 4);
+    assert!(router.step().expect("round"), "victim finished too early");
+    audit(&router, 2, 5);
+    // trip 3 (same direction as trip 1): the delivered ledger makes a
+    // repeat delivery free, no matter what happened in between
+    let again = find(&router, src).expect("victim live on source");
+    let in_before = router.engine(dst).metrics.migration_chunks_in;
+    let dd_before = router.engine(dst).metrics.migration_chunks_deduped;
+    let MigrationOutcome::Committed { chunk_bytes: cb3, .. } =
+        router.migrate(src, dst, again, false).expect("third migration")
+    else {
+        panic!("third migration must commit");
+    };
+    assert_eq!(cb3, 0, "a chunk ships at most once per worker, ever");
+    assert_eq!(
+        router.engine(dst).metrics.migration_chunks_in,
+        in_before,
+        "the repeat delivery must not travel"
+    );
+    assert!(
+        router.engine(dst).metrics.migration_chunks_deduped > dd_before,
+        "the repeat delivery must be counted as deduped"
+    );
+    let mut round = 5u64;
+    while router.step().expect("round") {
+        round += 1;
+        audit(&router, 2, round);
+        assert!(round < 256, "run did not converge");
+    }
+    let out: Vec<(u64, Vec<u8>)> = router.finish().into_iter().map(|r| (r.id, r.output)).collect();
+    assert_eq!(out, control, "chunk dedup must not perturb a single token");
+}
+
+fn lcg(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+#[test]
+fn interleaved_migrate_park_drain_keeps_every_invariant_and_output() {
+    let bpt = bytes_per_token();
+    // a budget two mid-sized sequences overflow, so park/resume churn
+    // interleaves with the forced migrations and the drain
+    let budget = Some(64 * bpt);
+    let requests: Vec<GenRequest> = (0..9u64)
+        .map(|i| {
+            let len = 18 + (i as usize * 5) % 7;
+            let max_new = 8 + (i as usize * 3) % 7;
+            request(i, prompt_bytes(40 + i as usize, len), max_new, Some(i * 5))
+        })
+        .collect();
+    let mut cfg = base_cfg();
+    cfg.max_batch = 4;
+    cfg.cache_budget = budget;
+    let control = single_outputs(cfg.clone(), requests.clone());
+    let (mut moves_total, mut parks_total, mut resumes_total) = (0u64, 0u64, 0u64);
+    for n in 2..=4usize {
+        let mut engines: Vec<MockEngine> =
+            (0..n).map(|_| MockEngine::new(scenario_spec())).collect();
+        let backends: Vec<&mut dyn ExecBackend> =
+            engines.iter_mut().map(|e| e as &mut dyn ExecBackend).collect();
+        let rcfg = RouterConfig {
+            auto_rebalance: false,
+            ..RouterConfig::default()
+        };
+        let mut router = Router::new(backends, "mock", cfg.clone(), rcfg).expect("router");
+        router.set_clock(&Clock::virtual_default());
+        router.begin(requests.clone());
+        let mut rng: u64 = 0x243F_6A88_85A3_08D3 ^ ((n as u64) << 7);
+        let mut drained: Option<usize> = None;
+        let mut rounds = 0u64;
+        loop {
+            rounds += 1;
+            assert!(rounds < 4096, "cluster (n={n}) did not converge");
+            let more = router.step().unwrap_or_else(|e| panic!("step failed (n={n}): {e:?}"));
+            audit(&router, n, rounds);
+            if !more {
+                break;
+            }
+            if rounds == 4 {
+                let w = (lcg(&mut rng) as usize) % n;
+                router.drain(w).expect("drain");
+                drained = Some(w);
+                audit(&router, n, rounds);
+            }
+            if rounds == 9 {
+                if let Some(w) = drained.take() {
+                    router.undrain(w);
+                }
+            }
+            // hop one pseudo-random live sequence every round
+            let candidates: Vec<(usize, u64)> = (0..n)
+                .flat_map(|w| router.live_requests(w).into_iter().map(move |(_, c)| (w, c)))
+                .collect();
+            if !candidates.is_empty() {
+                let (src, cache_id) = candidates[(lcg(&mut rng) as usize) % candidates.len()];
+                let mut dst = (src + 1 + (lcg(&mut rng) as usize) % (n - 1)) % n;
+                if Some(dst) == drained {
+                    dst = (dst + 1) % n;
+                }
+                if dst != src && Some(dst) != drained {
+                    match router.migrate(src, dst, cache_id, false).expect("migrate") {
+                        MigrationOutcome::Committed { .. } => moves_total += 1,
+                        MigrationOutcome::RolledBack { fault } => {
+                            panic!("clean migration rolled back (n={n}): {}", fault.msg)
+                        }
+                    }
+                    audit(&router, n, rounds);
+                }
+            }
+        }
+        let out: Vec<(u64, Vec<u8>)> =
+            router.finish().into_iter().map(|r| (r.id, r.output)).collect();
+        assert_eq!(out, control, "sharded outputs (n={n}) diverged from the single-worker run");
+        for w in 0..n {
+            let m = &router.engine(w).metrics;
+            parks_total += m.auto_parks;
+            resumes_total += m.auto_resumes;
+        }
+        moves_total += router.stats().drain_migrations;
+    }
+    assert!(moves_total >= 1, "the interleave never migrated anything");
+    assert!(parks_total >= 1, "the budget never forced a park anywhere");
+    assert!(resumes_total >= 1, "no parked sequence ever resumed");
+}
