@@ -113,6 +113,7 @@ fn scenario_json(r: &ScenarioReport) -> Json {
         ("backoff_ms", json::num(r.backoff_ms)),
         ("quarantines", json::num(r.quarantined.len() as f64)),
         ("demotions", json::num(r.demotions as f64)),
+        ("region_demotions", json::num(r.region_demotions as f64)),
         ("checksum_failures", json::num(r.checksum_failures as f64)),
         ("template_sheds", json::num(r.template_sheds as f64)),
         // digests as hex strings: u64 does not round-trip through the

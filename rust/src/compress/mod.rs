@@ -1,6 +1,8 @@
 //! KV-CAR compression machinery on the rust side: Eq. 4 int8 packing,
-//! Alg. 2 similarity analysis, and plan construction.
+//! Alg. 2 similarity analysis, plan construction, and the adaptive
+//! per-row-region strategy layer (rungs, manifests, DESIGN.md §11).
 
 pub mod planner;
 pub mod quant;
 pub mod similarity;
+pub mod strategy;

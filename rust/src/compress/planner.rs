@@ -3,6 +3,7 @@
 //! and express plans as the runtime mask vectors the AOT artifacts take.
 
 use super::similarity::Selection;
+use super::strategy::{PlanManifest, RegionSpec, Rung};
 use crate::model::memory::CompressionPlan;
 use crate::model::ModelSpec;
 
@@ -64,6 +65,64 @@ pub fn combined_plan(spec: &ModelSpec, sel: &Selection, ae_layers: usize) -> Com
         }
     }
     plan
+}
+
+/// The labelled candidate manifests `kvcar autotune` sweeps (DESIGN.md
+/// §11): the uniform rungs (raw f32 reference first, then f16 and
+/// int8), the paper's AE plans (half and all layers), and two mixed
+/// region shapes — the attention-sink block pinned raw f32, a cold
+/// early region demoted to a cheap rung, and the recent tail kept at
+/// the plan's own rung.  Every manifest validates against `block_size`
+/// by construction; the first entry is always the lossless reference
+/// the accuracy axis is measured against.
+pub fn candidate_manifests(
+    spec: &ModelSpec,
+    block_size: usize,
+) -> Vec<(&'static str, PlanManifest)> {
+    let none = CompressionPlan::none(spec.n_layer, spec.n_kv_head);
+    let ae = CompressionPlan::ae_first_layers(spec, (spec.n_layer / 2).max(1));
+    let ae_all = CompressionPlan::ae_first_layers(spec, spec.n_layer);
+    let bs = block_size;
+    // block-aligned cold/recent boundary near the sequence midpoint,
+    // always past the sink block so the middle region is non-empty
+    let mid = bs * ((spec.max_seq / bs) / 2).max(2);
+    let sink_regions = |cold: Rung, tail: Rung| {
+        vec![
+            RegionSpec { start: 0, end: Some(bs), rung: Rung::RawF32 },
+            RegionSpec { start: bs, end: Some(mid), rung: cold },
+            RegionSpec { start: mid, end: None, rung: tail },
+        ]
+    };
+    vec![
+        (
+            "uniform_raw_f32",
+            PlanManifest::uniform_rung(none.clone(), Rung::RawF32),
+        ),
+        (
+            "uniform_raw_f16",
+            PlanManifest::uniform_rung(none.clone(), Rung::RawF16),
+        ),
+        (
+            "uniform_int8",
+            PlanManifest::uniform_rung(none, Rung::Int8),
+        ),
+        ("ae_half_plan", PlanManifest::uniform(ae.clone())),
+        ("ae_all_plan", PlanManifest::uniform(ae_all)),
+        (
+            "sink_cold_int8",
+            PlanManifest {
+                plan: ae.clone(),
+                regions: sink_regions(Rung::Int8, Rung::Plan),
+            },
+        ),
+        (
+            "sink_cold_f16",
+            PlanManifest {
+                plan: ae,
+                regions: sink_regions(Rung::RawF16, Rung::RawF32),
+            },
+        ),
+    ]
 }
 
 /// Greedy layer-budget search: the largest k such that AE-on-k-layers
@@ -133,6 +192,32 @@ mod tests {
         );
         let combined = combined_plan(&spec, &sel, spec.n_layer);
         assert!(plan_savings(&spec, &combined) > plan_savings(&spec, &heads_only));
+    }
+
+    #[test]
+    fn candidate_manifests_validate_and_lead_with_the_raw_reference() {
+        let spec = gpt2_774m();
+        let cands = candidate_manifests(&spec, 16);
+        assert_eq!(cands[0].0, "uniform_raw_f32");
+        assert_eq!(
+            cands[0].1.rung_at(0),
+            crate::compress::strategy::Rung::RawF32
+        );
+        let mut labels: Vec<&str> = cands.iter().map(|(l, _)| *l).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), cands.len(), "labels must be unique");
+        for (label, m) in &cands {
+            m.validate(16)
+                .unwrap_or_else(|e| panic!("candidate {label} invalid: {e}"));
+        }
+        // the mixed candidates pin the sink block raw f32
+        let (_, sink) = cands
+            .iter()
+            .find(|(l, _)| *l == "sink_cold_int8")
+            .expect("sink candidate present");
+        assert_eq!(sink.rung_at(0), crate::compress::strategy::Rung::RawF32);
+        assert_eq!(sink.rung_at(16), crate::compress::strategy::Rung::Int8);
     }
 
     #[test]

@@ -1,0 +1,809 @@
+//! Adaptive per-row-region compression policy: the rung vocabulary
+//! ([`Rung`] viewed abstractly through [`CompressionStrategy`]), block-
+//! aligned per-region assignments ([`RegionSpec`]), and the serde
+//! round-trippable [`PlanManifest`] that configures the adaptive serving
+//! path (`ServeConfig::adaptive_plan`, DESIGN.md §11).
+//!
+//! A manifest carries two orthogonal dimensions of the design space:
+//!
+//! * **per-layer / per-head** — the embedded [`CompressionPlan`] (AE
+//!   layers, head-reuse masks, Eq. 4 quantization), which induces the
+//!   per-stream store kinds and row widths exactly as the uniform path
+//!   always has;
+//! * **per-row-region** — an ordered, gap-free, block-aligned list of
+//!   row regions, each pinning a *format rung* (raw f32, raw f16, int8)
+//!   or deferring to the plan's own formats ([`Rung::Plan`]).
+//!
+//! Region rungs are format rungs only: the AE-latent and head-reuse
+//! rungs change stream *shapes* (elements per row), so they live on the
+//! plan axis where every row of a stream shares one width — which is
+//! what keeps block storage, the `ParkedBytes` wire format, and the
+//! delta-transfer manifests derivable from `(manifest, len)` alone.
+
+use crate::kvcache::Format;
+use crate::model::memory::CompressionPlan;
+use crate::util::json::{self, Json};
+use std::fmt;
+
+/// One compression rung viewed abstractly: what the serving stack needs
+/// to know about a storage mechanism without naming it.  Implemented by
+/// the unit strategies below for every rung the repo ships (raw
+/// f32/f16, int8, AE-latent, head-reuse) — the format rungs drive
+/// per-region block encoding, the shape rungs document the plan axis.
+pub trait CompressionStrategy {
+    /// Short stable identifier (for format rungs, also the manifest
+    /// JSON token accepted by [`Rung::parse`]).
+    fn name(&self) -> &'static str;
+
+    /// The block format this rung pins every byte-bearing stream to,
+    /// or `None` when the rung defers to (or reshapes) the plan-derived
+    /// per-stream formats instead of overriding them.
+    fn format(&self) -> Option<Format>;
+
+    /// Whether storing f32 rows under this rung reads back bit-exactly.
+    fn lossless(&self) -> bool;
+
+    /// Encoded bytes for one row of `elements` f32 values under this
+    /// rung, or `None` when the rung does not pin a format.
+    fn row_bytes(&self, elements: usize) -> Option<usize> {
+        self.format().map(|f| f.row_bytes(elements))
+    }
+}
+
+/// Raw f32 storage: 4 bytes per element, bit-exact.
+pub struct RawF32Strategy;
+
+impl CompressionStrategy for RawF32Strategy {
+    fn name(&self) -> &'static str {
+        "raw_f32"
+    }
+    fn format(&self) -> Option<Format> {
+        Some(Format::F32)
+    }
+    fn lossless(&self) -> bool {
+        true
+    }
+}
+
+/// Raw f16 storage: 2 bytes per element, round-to-nearest-even lossy.
+pub struct RawF16Strategy;
+
+impl CompressionStrategy for RawF16Strategy {
+    fn name(&self) -> &'static str {
+        "raw_f16"
+    }
+    fn format(&self) -> Option<Format> {
+        Some(Format::F16)
+    }
+    fn lossless(&self) -> bool {
+        false
+    }
+}
+
+/// Eq. 4 per-row affine int8 storage: 1 byte per element plus the
+/// 8-byte scale/zeropoint header, quantization-lossy.
+pub struct Int8Strategy;
+
+impl CompressionStrategy for Int8Strategy {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+    fn format(&self) -> Option<Format> {
+        Some(Format::Int8)
+    }
+    fn lossless(&self) -> bool {
+        false
+    }
+}
+
+/// Defer to the plan-derived per-stream formats (the legacy uniform
+/// path's behaviour, and the open-tail default of every manifest).
+pub struct PlanDefaultStrategy;
+
+impl CompressionStrategy for PlanDefaultStrategy {
+    fn name(&self) -> &'static str {
+        "plan"
+    }
+    fn format(&self) -> Option<Format> {
+        None
+    }
+    fn lossless(&self) -> bool {
+        false
+    }
+}
+
+/// AE-latent storage (plan axis): rows are `ae_latent`-wide encoder
+/// outputs, reconstructed by the decoder artifact on retrieval.  A
+/// shape rung — it narrows the stream rather than pinning a format.
+pub struct AeLatentStrategy;
+
+impl CompressionStrategy for AeLatentStrategy {
+    fn name(&self) -> &'static str {
+        "ae_latent"
+    }
+    fn format(&self) -> Option<Format> {
+        None
+    }
+    fn lossless(&self) -> bool {
+        false
+    }
+}
+
+/// Head-reuse storage (plan axis): aliased heads store nothing and
+/// resolve from layer l-1 on retrieval.  A shape rung.
+pub struct HeadReuseStrategy;
+
+impl CompressionStrategy for HeadReuseStrategy {
+    fn name(&self) -> &'static str {
+        "head_reuse"
+    }
+    fn format(&self) -> Option<Format> {
+        None
+    }
+    fn lossless(&self) -> bool {
+        false
+    }
+}
+
+/// Every strategy the repo ships, format rungs first — the sweep base
+/// the autotuner and the strategy-contract tests enumerate.
+pub fn strategies() -> [&'static dyn CompressionStrategy; 6] {
+    [
+        &RawF32Strategy,
+        &RawF16Strategy,
+        &Int8Strategy,
+        &PlanDefaultStrategy,
+        &AeLatentStrategy,
+        &HeadReuseStrategy,
+    ]
+}
+
+/// A region's storage rung: one of the format rungs, or deference to
+/// the plan's own per-stream formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rung {
+    /// defer to the plan-derived per-stream formats (legacy behaviour)
+    Plan,
+    /// pin every byte-bearing stream to raw f32
+    RawF32,
+    /// pin every byte-bearing stream to raw f16
+    RawF16,
+    /// pin every byte-bearing stream to Eq. 4 int8
+    Int8,
+}
+
+impl Rung {
+    /// Every rung, manifest-token order.
+    pub const ALL: [Rung; 4] = [Rung::Plan, Rung::RawF32, Rung::RawF16, Rung::Int8];
+
+    /// The manifest JSON token for this rung.
+    pub fn token(self) -> &'static str {
+        match self {
+            Rung::Plan => "plan",
+            Rung::RawF32 => "raw_f32",
+            Rung::RawF16 => "raw_f16",
+            Rung::Int8 => "int8",
+        }
+    }
+
+    /// Parse a manifest token ([`Rung::token`] inverse); unknown tokens
+    /// are a typed [`ManifestError::UnknownRung`], never a panic.
+    pub fn parse(token: &str) -> Result<Rung, ManifestError> {
+        Rung::ALL
+            .into_iter()
+            .find(|r| r.token() == token)
+            .ok_or_else(|| ManifestError::UnknownRung(token.to_string()))
+    }
+
+    /// The strategy object implementing this rung.
+    pub fn strategy(self) -> &'static dyn CompressionStrategy {
+        match self {
+            Rung::Plan => &PlanDefaultStrategy,
+            Rung::RawF32 => &RawF32Strategy,
+            Rung::RawF16 => &RawF16Strategy,
+            Rung::Int8 => &Int8Strategy,
+        }
+    }
+
+    /// The block format this rung pins byte-bearing streams to (`None`
+    /// for [`Rung::Plan`], which defers to the plan-derived formats).
+    pub fn format_override(self) -> Option<Format> {
+        self.strategy().format()
+    }
+}
+
+/// One contiguous row region `[start, end)` of a manifest and the rung
+/// its rows are stored under.  `end = None` is the open tail covering
+/// every row from `start` onward — exactly one region (the last) is
+/// open, so every row a sequence ever grows to has a rung.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionSpec {
+    /// first row of the region (block-aligned)
+    pub start: usize,
+    /// one past the last row (block-aligned), or `None` for the open tail
+    pub end: Option<usize>,
+    /// storage rung for rows in the region
+    pub rung: Rung,
+}
+
+/// Typed rejection of a malformed [`PlanManifest`] — every structural
+/// defect a manifest can carry gets its own variant so callers (and the
+/// serde fuzz tests) can assert the *reason*, not just failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ManifestError {
+    /// the region list is empty (no row would have a rung)
+    Empty,
+    /// a region boundary is not a multiple of the block size
+    Misaligned {
+        /// the offending boundary row
+        row: usize,
+        /// the block size it must divide by
+        block_size: usize,
+    },
+    /// rows between regions are covered by no region
+    Gap {
+        /// row the next region had to start at
+        expected: usize,
+        /// row it actually starts at
+        got: usize,
+    },
+    /// a region starts before its predecessor ends
+    Overlap {
+        /// row the next region had to start at
+        expected: usize,
+        /// row it actually starts at
+        got: usize,
+    },
+    /// a non-final region has no end (the tail would be unreachable)
+    UnboundedInterior {
+        /// index of the offending region
+        index: usize,
+    },
+    /// the final region is bounded (rows past it would have no rung)
+    BoundedTail,
+    /// a bounded region covers no rows
+    EmptyRegion {
+        /// the region's start row
+        start: usize,
+    },
+    /// a rung token [`Rung::parse`] does not recognize
+    UnknownRung(String),
+    /// the embedded compression plan failed its own validation
+    Plan(String),
+    /// the JSON is unparseable or structurally wrong for a manifest
+    Parse(String),
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Empty => write!(f, "manifest has no regions"),
+            ManifestError::Misaligned { row, block_size } => {
+                write!(f, "region boundary {row} is not {block_size}-row aligned")
+            }
+            ManifestError::Gap { expected, got } => {
+                write!(f, "rows [{expected}, {got}) are covered by no region")
+            }
+            ManifestError::Overlap { expected, got } => {
+                write!(f, "region starting at {got} overlaps rows [{got}, {expected})")
+            }
+            ManifestError::UnboundedInterior { index } => {
+                write!(f, "non-final region {index} has no end")
+            }
+            ManifestError::BoundedTail => {
+                write!(f, "final region is bounded (tail rows would have no rung)")
+            }
+            ManifestError::EmptyRegion { start } => {
+                write!(f, "region starting at {start} covers no rows")
+            }
+            ManifestError::UnknownRung(tok) => write!(f, "unknown rung token {tok:?}"),
+            ManifestError::Plan(msg) => write!(f, "embedded plan is invalid: {msg}"),
+            ManifestError::Parse(msg) => write!(f, "manifest JSON is malformed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// A complete adaptive storage policy: a per-layer/per-head
+/// [`CompressionPlan`] plus an ordered, gap-free, block-aligned list of
+/// per-row-region rung assignments.  Serde round-trippable via
+/// [`PlanManifest::to_json`] / [`PlanManifest::from_json`]; the serving
+/// stack validates it against the engine's block size before use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanManifest {
+    /// per-layer / per-head axis: store kinds and row widths
+    pub plan: CompressionPlan,
+    /// per-row-region axis: ordered regions covering [0, ∞)
+    pub regions: Vec<RegionSpec>,
+}
+
+impl PlanManifest {
+    /// The uniform manifest: one open [`Rung::Plan`] region — by
+    /// construction byte-identical to the legacy single-rung path.
+    pub fn uniform(plan: CompressionPlan) -> Self {
+        Self::uniform_rung(plan, Rung::Plan)
+    }
+
+    /// One open region pinning every row to `rung`.
+    pub fn uniform_rung(plan: CompressionPlan, rung: Rung) -> Self {
+        PlanManifest {
+            plan,
+            regions: vec![RegionSpec {
+                start: 0,
+                end: None,
+                rung,
+            }],
+        }
+    }
+
+    /// Validate the manifest against `block_size`: regions must be
+    /// non-empty, start at row 0, tile the row axis with no gap or
+    /// overlap, end with exactly one open tail, sit on block
+    /// boundaries, and embed a valid plan.  Pass `block_size = 1` to
+    /// defer alignment (what [`PlanManifest::from_json`] does — the
+    /// engine re-validates with its real block size).
+    pub fn validate(&self, block_size: usize) -> Result<(), ManifestError> {
+        if self.regions.is_empty() {
+            return Err(ManifestError::Empty);
+        }
+        let mut expected = 0usize;
+        let last = self.regions.len() - 1;
+        for (i, r) in self.regions.iter().enumerate() {
+            if r.start % block_size != 0 {
+                return Err(ManifestError::Misaligned {
+                    row: r.start,
+                    block_size,
+                });
+            }
+            match r.start.cmp(&expected) {
+                std::cmp::Ordering::Greater => {
+                    return Err(ManifestError::Gap {
+                        expected,
+                        got: r.start,
+                    })
+                }
+                std::cmp::Ordering::Less => {
+                    return Err(ManifestError::Overlap {
+                        expected,
+                        got: r.start,
+                    })
+                }
+                std::cmp::Ordering::Equal => {}
+            }
+            match r.end {
+                Some(end) => {
+                    if i == last {
+                        return Err(ManifestError::BoundedTail);
+                    }
+                    if end % block_size != 0 {
+                        return Err(ManifestError::Misaligned {
+                            row: end,
+                            block_size,
+                        });
+                    }
+                    if end <= r.start {
+                        return Err(ManifestError::EmptyRegion { start: r.start });
+                    }
+                    expected = end;
+                }
+                None => {
+                    if i != last {
+                        return Err(ManifestError::UnboundedInterior { index: i });
+                    }
+                }
+            }
+        }
+        self.plan.validate().map_err(ManifestError::Plan)
+    }
+
+    /// The rung governing `row` (the open tail's rung for rows past
+    /// every bounded region; [`Rung::Plan`] on an invalid manifest that
+    /// covers nothing).
+    pub fn rung_at(&self, row: usize) -> Rung {
+        for r in &self.regions {
+            if row >= r.start && r.end.map_or(true, |e| row < e) {
+                return r.rung;
+            }
+        }
+        Rung::Plan
+    }
+
+    /// Whether every region defers to the plan (the manifest is the
+    /// uniform legacy policy, whatever its region boundaries).
+    pub fn is_uniform_plan(&self) -> bool {
+        self.regions.iter().all(|r| r.rung == Rung::Plan)
+    }
+
+    /// Serialize to the version-1 manifest JSON schema:
+    ///
+    /// ```json
+    /// {"version": 1,
+    ///  "plan": {"ae_layers": [...], "reuse_k": [[...]],
+    ///           "reuse_v": [[...]], "quant_int8": false},
+    ///  "regions": [{"start": 0, "end": 16, "rung": "raw_f32"},
+    ///              {"start": 16, "rung": "plan"}]}
+    /// ```
+    pub fn to_json(&self) -> String {
+        let bools = |v: &[bool]| json::arr(v.iter().map(|&b| Json::Bool(b)));
+        let mat = |m: &[Vec<bool>]| json::arr(m.iter().map(|r| bools(r)));
+        let regions = json::arr(self.regions.iter().map(|r| {
+            let mut fields = vec![("start", json::num(r.start as f64))];
+            if let Some(end) = r.end {
+                fields.push(("end", json::num(end as f64)));
+            }
+            fields.push(("rung", json::s(r.rung.token())));
+            json::obj(fields)
+        }));
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            (
+                "plan",
+                json::obj(vec![
+                    ("ae_layers", bools(&self.plan.ae_layers)),
+                    ("reuse_k", mat(&self.plan.reuse_k)),
+                    ("reuse_v", mat(&self.plan.reuse_v)),
+                    ("quant_int8", Json::Bool(self.plan.quant_int8)),
+                ]),
+            ),
+            ("regions", regions),
+        ])
+        .to_string()
+    }
+
+    /// Parse and structurally validate a version-1 manifest.  Every
+    /// failure is a typed [`ManifestError`] (parse, unknown rung, gap,
+    /// overlap, …), never a panic.  Alignment is deferred
+    /// (`validate(1)`) because the block size belongs to the engine the
+    /// manifest is eventually installed into.
+    pub fn from_json(text: &str) -> Result<Self, ManifestError> {
+        let v = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let version = parse_row(&v, "version")?;
+        if version != 1 {
+            return Err(ManifestError::Parse(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let p = v
+            .get("plan")
+            .ok_or_else(|| ManifestError::Parse("missing \"plan\"".into()))?;
+        let plan = CompressionPlan {
+            ae_layers: parse_bools(field(p, "ae_layers")?, "plan.ae_layers")?,
+            reuse_k: parse_bool_matrix(field(p, "reuse_k")?, "plan.reuse_k")?,
+            reuse_v: parse_bool_matrix(field(p, "reuse_v")?, "plan.reuse_v")?,
+            quant_int8: field(p, "quant_int8")?
+                .as_bool()
+                .ok_or_else(|| ManifestError::Parse("plan.quant_int8 must be a bool".into()))?,
+        };
+        let rs = v
+            .get("regions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ManifestError::Parse("\"regions\" must be an array".into()))?;
+        let mut regions = Vec::with_capacity(rs.len());
+        for r in rs {
+            let start = parse_row(r, "start")?;
+            let end = match r.get("end") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(parse_row(r, "end")?),
+            };
+            let rung = Rung::parse(
+                r.get("rung")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ManifestError::Parse("region \"rung\" must be a string".into()))?,
+            )?;
+            regions.push(RegionSpec { start, end, rung });
+        }
+        let m = PlanManifest { plan, regions };
+        m.validate(1)?;
+        Ok(m)
+    }
+
+    /// Random *valid* manifest over an `n_layer`-layer,
+    /// `n_kv_head`-head model with `block_size`-aligned regions cut
+    /// below `max_rows` — the generator the differential property tests
+    /// drive the adaptive path with (mirrors [`CompressionPlan::random`]).
+    pub fn random(
+        rng: &mut crate::util::rng::Rng,
+        n_layer: usize,
+        n_kv_head: usize,
+        block_size: usize,
+        max_rows: usize,
+    ) -> Self {
+        let plan = CompressionPlan::random(rng, n_layer, n_kv_head);
+        let max_blocks = (max_rows / block_size).max(1);
+        let mut cuts: Vec<usize> = (0..rng.below(4))
+            .map(|_| rng.below(max_blocks) * block_size)
+            .filter(|&c| c > 0)
+            .collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        let pick = |rng: &mut crate::util::rng::Rng| Rung::ALL[rng.below(4)];
+        let mut regions = Vec::with_capacity(cuts.len() + 1);
+        let mut start = 0usize;
+        for cut in cuts {
+            regions.push(RegionSpec {
+                start,
+                end: Some(cut),
+                rung: pick(rng),
+            });
+            start = cut;
+        }
+        regions.push(RegionSpec {
+            start,
+            end: None,
+            rung: pick(rng),
+        });
+        let m = PlanManifest { plan, regions };
+        debug_assert!(m.validate(block_size).is_ok());
+        m
+    }
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, ManifestError> {
+    v.get(key)
+        .ok_or_else(|| ManifestError::Parse(format!("missing plan field {key:?}")))
+}
+
+fn parse_row(v: &Json, key: &str) -> Result<usize, ManifestError> {
+    let n = v
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ManifestError::Parse(format!("{key:?} must be a number")))?;
+    if n < 0.0 || n.fract() != 0.0 {
+        return Err(ManifestError::Parse(format!(
+            "{key:?} must be a non-negative integer, got {n}"
+        )));
+    }
+    Ok(n as usize)
+}
+
+fn parse_bools(v: &Json, what: &str) -> Result<Vec<bool>, ManifestError> {
+    v.as_arr()
+        .ok_or_else(|| ManifestError::Parse(format!("{what} must be an array")))?
+        .iter()
+        .map(|b| {
+            b.as_bool()
+                .ok_or_else(|| ManifestError::Parse(format!("{what} must hold bools")))
+        })
+        .collect()
+}
+
+fn parse_bool_matrix(v: &Json, what: &str) -> Result<Vec<Vec<bool>>, ManifestError> {
+    v.as_arr()
+        .ok_or_else(|| ManifestError::Parse(format!("{what} must be an array")))?
+        .iter()
+        .map(|row| parse_bools(row, what))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn plan() -> CompressionPlan {
+        CompressionPlan::none(3, 4)
+    }
+
+    #[test]
+    fn strategy_row_bytes_match_block_formats() {
+        assert_eq!(RawF32Strategy.row_bytes(64), Some(256));
+        assert_eq!(RawF16Strategy.row_bytes(64), Some(128));
+        assert_eq!(Int8Strategy.row_bytes(64), Some(72));
+        assert_eq!(PlanDefaultStrategy.row_bytes(64), None);
+        assert!(RawF32Strategy.lossless());
+        assert!(!Int8Strategy.lossless());
+        // names are distinct and stable — they key the manifest schema
+        let names: std::collections::BTreeSet<_> =
+            strategies().iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), strategies().len());
+    }
+
+    #[test]
+    fn rung_tokens_round_trip() {
+        for rung in Rung::ALL {
+            assert_eq!(Rung::parse(rung.token()), Ok(rung));
+            assert_eq!(rung.strategy().format(), rung.format_override());
+        }
+        assert_eq!(
+            Rung::parse("fp4"),
+            Err(ManifestError::UnknownRung("fp4".into()))
+        );
+    }
+
+    #[test]
+    fn uniform_manifest_validates_and_covers_every_row() {
+        let m = PlanManifest::uniform(plan());
+        m.validate(16).expect("uniform manifest is valid");
+        assert!(m.is_uniform_plan());
+        assert_eq!(m.rung_at(0), Rung::Plan);
+        assert_eq!(m.rung_at(10_000), Rung::Plan);
+    }
+
+    #[test]
+    fn rung_at_respects_region_boundaries() {
+        let m = PlanManifest {
+            plan: plan(),
+            regions: vec![
+                RegionSpec {
+                    start: 0,
+                    end: Some(16),
+                    rung: Rung::RawF32,
+                },
+                RegionSpec {
+                    start: 16,
+                    end: Some(48),
+                    rung: Rung::Int8,
+                },
+                RegionSpec {
+                    start: 48,
+                    end: None,
+                    rung: Rung::Plan,
+                },
+            ],
+        };
+        m.validate(16).expect("manifest is valid");
+        assert!(!m.is_uniform_plan());
+        assert_eq!(m.rung_at(0), Rung::RawF32);
+        assert_eq!(m.rung_at(15), Rung::RawF32);
+        assert_eq!(m.rung_at(16), Rung::Int8);
+        assert_eq!(m.rung_at(47), Rung::Int8);
+        assert_eq!(m.rung_at(48), Rung::Plan);
+    }
+
+    #[test]
+    fn malformed_manifests_are_typed_errors() {
+        let region = |start, end, rung| RegionSpec { start, end, rung };
+        let m = |regions| PlanManifest {
+            plan: plan(),
+            regions,
+        };
+        assert_eq!(m(vec![]).validate(16), Err(ManifestError::Empty));
+        assert_eq!(
+            m(vec![region(16, None, Rung::Plan)]).validate(16),
+            Err(ManifestError::Gap {
+                expected: 0,
+                got: 16
+            })
+        );
+        assert_eq!(
+            m(vec![
+                region(0, Some(32), Rung::Int8),
+                region(16, None, Rung::Plan)
+            ])
+            .validate(16),
+            Err(ManifestError::Overlap {
+                expected: 32,
+                got: 16
+            })
+        );
+        assert_eq!(
+            m(vec![
+                region(0, Some(16), Rung::Int8),
+                region(32, None, Rung::Plan)
+            ])
+            .validate(16),
+            Err(ManifestError::Gap {
+                expected: 16,
+                got: 32
+            })
+        );
+        assert_eq!(
+            m(vec![
+                region(0, None, Rung::Int8),
+                region(16, None, Rung::Plan)
+            ])
+            .validate(16),
+            Err(ManifestError::UnboundedInterior { index: 0 })
+        );
+        assert_eq!(
+            m(vec![region(0, Some(16), Rung::Plan)]).validate(16),
+            Err(ManifestError::BoundedTail)
+        );
+        assert_eq!(
+            m(vec![
+                region(0, Some(0), Rung::Int8),
+                region(0, None, Rung::Plan)
+            ])
+            .validate(16),
+            Err(ManifestError::EmptyRegion { start: 0 })
+        );
+        assert_eq!(
+            m(vec![
+                region(0, Some(24), Rung::Int8),
+                region(24, None, Rung::Plan)
+            ])
+            .validate(16),
+            Err(ManifestError::Misaligned {
+                row: 24,
+                block_size: 16
+            })
+        );
+        // an invalid embedded plan is typed too, not a panic
+        let mut bad = PlanManifest::uniform(plan());
+        bad.plan.reuse_k[0][0] = true;
+        assert!(matches!(bad.validate(16), Err(ManifestError::Plan(_))));
+    }
+
+    #[test]
+    fn json_round_trips_uniform_and_mixed() {
+        let uniform = PlanManifest::uniform(plan());
+        assert_eq!(
+            PlanManifest::from_json(&uniform.to_json()).expect("round trip"),
+            uniform
+        );
+        let mixed = PlanManifest {
+            plan: plan().with_quant(),
+            regions: vec![
+                RegionSpec {
+                    start: 0,
+                    end: Some(16),
+                    rung: Rung::RawF32,
+                },
+                RegionSpec {
+                    start: 16,
+                    end: None,
+                    rung: Rung::Int8,
+                },
+            ],
+        };
+        assert_eq!(
+            PlanManifest::from_json(&mixed.to_json()).expect("round trip"),
+            mixed
+        );
+    }
+
+    #[test]
+    fn json_rejections_are_typed() {
+        assert!(matches!(
+            PlanManifest::from_json("not json"),
+            Err(ManifestError::Parse(_))
+        ));
+        assert!(matches!(
+            PlanManifest::from_json("{\"version\": 2}"),
+            Err(ManifestError::Parse(_))
+        ));
+        let unknown_rung = r#"{"version": 1,
+            "plan": {"ae_layers": [false], "reuse_k": [[false]],
+                     "reuse_v": [[false]], "quant_int8": false},
+            "regions": [{"start": 0, "rung": "fp4"}]}"#;
+        assert_eq!(
+            PlanManifest::from_json(unknown_rung),
+            Err(ManifestError::UnknownRung("fp4".into()))
+        );
+        // structurally parsed, semantically overlapping → typed Overlap
+        let overlapping = r#"{"version": 1,
+            "plan": {"ae_layers": [false], "reuse_k": [[false]],
+                     "reuse_v": [[false]], "quant_int8": false},
+            "regions": [{"start": 0, "end": 32, "rung": "int8"},
+                        {"start": 16, "rung": "plan"}]}"#;
+        assert_eq!(
+            PlanManifest::from_json(overlapping),
+            Err(ManifestError::Overlap {
+                expected: 32,
+                got: 16
+            })
+        );
+        let fractional = r#"{"version": 1,
+            "plan": {"ae_layers": [false], "reuse_k": [[false]],
+                     "reuse_v": [[false]], "quant_int8": false},
+            "regions": [{"start": 0.5, "rung": "plan"}]}"#;
+        assert!(matches!(
+            PlanManifest::from_json(fractional),
+            Err(ManifestError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn arbitrary_manifests_round_trip_exactly() {
+        prop::check(200, |rng: &mut Rng| {
+            let m = PlanManifest::random(rng, 4, 4, 16, 96);
+            crate::prop_assert!(m.validate(16).is_ok(), "generator must emit valid manifests");
+            let back = PlanManifest::from_json(&m.to_json())
+                .map_err(|e| format!("round trip failed: {e}"))?;
+            crate::prop_assert!(back == m, "round trip changed the manifest");
+            Ok(())
+        });
+    }
+}

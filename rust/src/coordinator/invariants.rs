@@ -202,6 +202,24 @@ pub fn check_round(
         ));
     }
 
+    // -- plan coherence (DESIGN.md §11): every live unparked sequence's
+    //    measured stored bytes equal what the layout law predicts from
+    //    its length, prefix, and demotion state
+    //    (`CacheManager::seq_predicted_bytes`) — storage can never
+    //    drift from the declared policy.  Trivially exact under the
+    //    legacy uniform policy too, so it runs unconditionally.
+    for a in active.iter().filter(|a| !a.parked) {
+        let predicted = s.cache.seq_predicted_bytes(a.cache_id);
+        let stored = s.cache.seq_stored_bytes(a.cache_id);
+        if predicted != stored {
+            errs.push(format!(
+                "plan coherence: sequence {} stores {stored} B but the plan \
+                 layout predicts {predicted} B",
+                a.cache_id
+            ));
+        }
+    }
+
     // -- metrics conservation
     let m = &s.metrics;
     let emitted: u64 = active.iter().map(|a| a.output.len() as u64).sum::<u64>()
@@ -286,6 +304,7 @@ pub fn check_round(
     fp.push(m.quarantines);
     fp.push(m.rejects);
     fp.push(m.demotions);
+    fp.push(m.region_demotions);
     fp.push(m.template_sheds);
     // migration trajectory: placements, delta volumes, and rollbacks
     // are part of the sharded determinism contract (DESIGN.md §10)

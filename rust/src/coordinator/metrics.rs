@@ -196,6 +196,10 @@ pub struct ServeMetrics {
     /// sequences re-encoded to a cheaper storage rung by the pressure
     /// ladder (demotion frees bytes without evicting anyone)
     pub demotions: u64,
+    /// demotions that were **per-row-region** (adaptive plans only:
+    /// the ladder re-encoded the victim's coldest block run instead of
+    /// its whole sequence; every one is also counted in `demotions`)
+    pub region_demotions: u64,
     /// tier payloads that failed CRC verification on unpark (each one
     /// quarantines its sequence instead of propagating garbage rows)
     pub checksum_failures: u64,
@@ -353,12 +357,13 @@ impl ServeMetrics {
         {
             println!(
                 "  recovery: {} retries ({:.1} ms backoff), {} quarantined / {} rejected, \
-                 {} demotions, {} template sheds, {} checksum failures",
+                 {} demotions ({} regional), {} template sheds, {} checksum failures",
                 self.retries,
                 self.backoff.as_secs_f64() * 1e3,
                 self.quarantines,
                 self.rejects,
                 self.demotions,
+                self.region_demotions,
                 self.template_sheds,
                 self.checksum_failures,
             );

@@ -224,9 +224,12 @@ pub(crate) fn install(
     let delta_bytes = payload.shipped_bytes() as u64;
     let bytes_saved = out.manifest.full_bytes() as u64 - delta_bytes;
     let assembled = delta::assemble(&dst.cache.cfg, &out.manifest, basis, &payload)?;
-    let cache_id = dst
-        .cache
-        .import_sequence(out.parked.len, dst_leaf, out.parked.demoted)?;
+    let cache_id = dst.cache.import_sequence(
+        out.parked.len,
+        dst_leaf,
+        out.parked.demoted,
+        &out.parked.demoted_spans,
+    )?;
     if let Err(e) = dst.cache.restore_sequence_bytes(cache_id, &assembled) {
         dst.cache.free_sequence(cache_id);
         return Err(e);

@@ -37,6 +37,7 @@ use super::router::{MigrationOutcome, Router, RouterConfig};
 use super::scheduler::{ServeConfig, ServingEngine};
 use super::supervisor::{ErrorClass, RecoveryAction};
 use super::trace::{generate, Arrival, TraceConfig};
+use crate::compress::strategy::PlanManifest;
 use crate::data::corpus::wiki;
 use crate::kvcache::CacheConfig;
 use crate::model::memory::CompressionPlan;
@@ -110,6 +111,13 @@ pub struct Scenario {
     pub resident_cache: bool,
     /// batched admission prefill (feature-off legs set `false`)
     pub batched_prefill: bool,
+    /// adaptive compression manifest to serve under
+    /// ([`ServeConfig::adaptive_plan`]); `None` — the default — keeps
+    /// the matrix's standard single-rung plan.  When set, the
+    /// manifest's embedded plan replaces the standard one, so the
+    /// adaptive test legs build manifests around the same
+    /// `ae_first_layers` plan to keep budgets and digests comparable
+    pub adaptive_plan: Option<PlanManifest>,
     /// faults to inject
     pub faults: FaultPlan,
 }
@@ -128,6 +136,7 @@ impl Scenario {
             prefix_sharing: true,
             resident_cache: true,
             batched_prefill: true,
+            adaptive_plan: None,
             faults: FaultPlan::none(),
         }
     }
@@ -177,6 +186,9 @@ pub struct ScenarioReport {
     pub backoff_ms: f64,
     /// sequences demoted to the cheaper storage rung under pressure
     pub demotions: u64,
+    /// demotions that were per-row-region (adaptive-plan ladder;
+    /// counted inside `demotions` too)
+    pub region_demotions: u64,
     /// tier transfers that failed checksum verification on unpark
     pub checksum_failures: u64,
     /// admission templates shed by the degradation ladder
@@ -438,6 +450,7 @@ pub fn run_scenario(
     cfg.prefix_sharing = sc.prefix_sharing;
     cfg.resident_cache = sc.resident_cache;
     cfg.batched_prefill = sc.batched_prefill;
+    cfg.adaptive_plan = sc.adaptive_plan.clone();
     let mut serving = ServingEngine::new(engine, model, cfg)?;
     if let Some(cap) = sc.template_capacity {
         serving.waves = PrefillWave::with_template_capacity(cap);
@@ -532,6 +545,7 @@ pub fn run_scenario(
         retries: m.retries,
         backoff_ms: m.backoff.as_secs_f64() * 1e3,
         demotions: m.demotions,
+        region_demotions: m.region_demotions,
         checksum_failures: serving.tier.stats.checksum_failures,
         template_sheds: m.template_sheds,
         virtual_ms: m.wall.as_secs_f64() * 1e3,
@@ -799,6 +813,7 @@ pub fn run_sharded(
     cfg.prefix_sharing = b.prefix_sharing;
     cfg.resident_cache = b.resident_cache;
     cfg.batched_prefill = b.batched_prefill;
+    cfg.adaptive_plan = b.adaptive_plan.clone();
     let rcfg = RouterConfig {
         auto_rebalance: sc.auto_rebalance,
         ..RouterConfig::default()

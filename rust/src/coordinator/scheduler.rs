@@ -76,6 +76,7 @@ use super::supervisor::{
     SupervisorState,
 };
 use crate::compress::planner::{to_masks, RuntimeMasks};
+use crate::compress::strategy::PlanManifest;
 use crate::kvcache::tier::HostTier;
 use crate::kvcache::{CacheConfig, CacheManager, Format};
 use crate::model::memory::CompressionPlan;
@@ -86,6 +87,11 @@ use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
 use std::time::Duration;
+
+/// Blocks one regional ladder demotion re-encodes at a time: small
+/// enough that a single rung-2 action stays O(blocks) work, large
+/// enough that sustained pressure frees bytes in few actions.
+const DEMOTE_REGION_BLOCKS: usize = 4;
 
 /// Serving engine configuration: the compression plan plus batching,
 /// reconstruction, and memory-pressure policy.
@@ -170,6 +176,17 @@ pub struct ServeConfig {
     /// Defaults to [`TEMPLATE_BYTE_BUDGET`] (64 MiB); the serve CLI
     /// exposes it as `--template-budget`.
     pub template_byte_budget: usize,
+    /// adaptive per-layer/per-head/per-row-region compression manifest
+    /// (DESIGN.md §11).  When set, the manifest's embedded plan
+    /// *replaces* `plan`, its row regions install into the cache
+    /// manager's [`CacheConfig::regions`], and the pressure ladder's
+    /// demote rung becomes per-region
+    /// ([`CacheManager::demote_region`](crate::kvcache::CacheManager::demote_region))
+    /// instead of whole-sequence.  `None` — the default, and what
+    /// `KVCAR_NO_ADAPTIVE_PLAN=1` forces process-wide — keeps the
+    /// legacy single-rung policy, which a uniform manifest is pinned
+    /// bitwise-identical to (`tests/adaptive_plan.rs`).
+    pub adaptive_plan: Option<PlanManifest>,
 }
 
 impl ServeConfig {
@@ -212,6 +229,7 @@ impl ServeConfig {
             raw_format: Format::F16,
             retry: RetryPolicy::default(),
             template_byte_budget: TEMPLATE_BYTE_BUDGET,
+            adaptive_plan: None,
         }
     }
 
@@ -316,10 +334,20 @@ impl<'e> ServingEngine<'e> {
     /// Build a serving engine for `model` over an initialized runtime
     /// engine: loads parameters, validates the plan, and derives the
     /// compiled decode batch sizes from the manifest.
-    pub fn new(engine: &'e mut dyn ExecBackend, model: &str, cfg: ServeConfig) -> Result<Self> {
+    pub fn new(engine: &'e mut dyn ExecBackend, model: &str, mut cfg: ServeConfig) -> Result<Self> {
         let mut store = Store::new();
         engine.load_params(model, &mut store)?;
         let spec = engine.model_spec(model)?;
+        // the env kill-switch pins the legacy single-rung policy even
+        // when a manifest is configured (CI's legacy-pinning leg),
+        // mirroring KVCAR_NO_DEVICE_RESIDENCY below
+        let adaptive = cfg
+            .adaptive_plan
+            .clone()
+            .filter(|_| std::env::var("KVCAR_NO_ADAPTIVE_PLAN").is_err());
+        if let Some(m) = &adaptive {
+            cfg.plan = m.plan.clone();
+        }
         cfg.plan
             .validate()
             .map_err(|e| anyhow!("invalid plan: {e}"))?;
@@ -327,6 +355,11 @@ impl<'e> ServingEngine<'e> {
         let decode_batches = engine.decode_batches(model);
         let mut ccfg = CacheConfig::new(spec.clone(), cfg.plan.clone());
         ccfg.raw_format = cfg.raw_format;
+        if let Some(m) = &adaptive {
+            m.validate(ccfg.block_size)
+                .map_err(|e| anyhow!("invalid adaptive plan manifest: {e}"))?;
+            ccfg.regions = m.regions.clone();
+        }
         let cache = match cfg.pool_budget {
             Some(b) => CacheManager::with_budget(ccfg, b),
             None => CacheManager::new(ccfg),
@@ -1431,23 +1464,60 @@ impl<'e> ServingEngine<'e> {
     /// cheaper, outputs stay bitwise unchanged.  Faithful mode leaves
     /// the watermark at 0 by contract: the next round reconstructs from
     /// the demoted store.
+    ///
+    /// Under an adaptive plan that genuinely partitions the row axis
+    /// (`CacheConfig::regions` has more than one region) the rung is
+    /// **per-region** instead: the coldest not-yet-int8 block run of
+    /// the fattest victim is demoted (`CacheManager::demote_region`),
+    /// so one ladder action re-encodes O(block) rows rather than the
+    /// whole sequence and repeated pressure walks a sequence
+    /// cold-to-hot.  Victims with nothing left to demote are skipped,
+    /// exactly like the legacy `seq_demoted` filter.  Uniform
+    /// manifests (one open region) keep the whole-sequence rung — they
+    /// are pinned bitwise-identical to the legacy path, ladder
+    /// trajectory included (`tests/adaptive_plan.rs`).
     fn demote_victim(&mut self, state: &mut RunState) -> Option<u64> {
-        let victim = state
-            .active
-            .iter()
-            .filter(|s| !s.parked && !s.done && !self.cache.seq_demoted(s.cache_id))
-            .max_by_key(|s| (self.cache.seq_stored_bytes(s.cache_id), s.cache_id))
-            .map(|s| s.cache_id)?;
-        match self.cache.demote_sequence(victim) {
-            Ok(freed) if freed > 0 => {
-                self.metrics.demotions += 1;
-                if !self.cfg.per_step_reconstruct {
-                    let len = self.cache.seq_len(victim).unwrap_or(0);
-                    self.cache.mark_decoded(victim, len);
+        if self.cache.cfg.regions.len() <= 1 {
+            let victim = state
+                .active
+                .iter()
+                .filter(|s| !s.parked && !s.done && !self.cache.seq_demoted(s.cache_id))
+                .max_by_key(|s| (self.cache.seq_stored_bytes(s.cache_id), s.cache_id))
+                .map(|s| s.cache_id)?;
+            match self.cache.demote_sequence(victim) {
+                Ok(freed) if freed > 0 => {
+                    self.metrics.demotions += 1;
+                    if !self.cfg.per_step_reconstruct {
+                        let len = self.cache.seq_len(victim).unwrap_or(0);
+                        self.cache.mark_decoded(victim, len);
+                    }
+                    Some(victim)
                 }
-                Some(victim)
+                _ => None,
             }
-            _ => None,
+        } else {
+            let (victim, (start, end)) = state
+                .active
+                .iter()
+                .filter(|s| !s.parked && !s.done)
+                .filter_map(|s| {
+                    self.cache
+                        .coldest_promotable_region(s.cache_id, DEMOTE_REGION_BLOCKS)
+                        .map(|r| (s.cache_id, r))
+                })
+                .max_by_key(|&(id, _)| (self.cache.seq_stored_bytes(id), id))?;
+            match self.cache.demote_region(victim, start, end) {
+                Ok(freed) if freed > 0 => {
+                    self.metrics.demotions += 1;
+                    self.metrics.region_demotions += 1;
+                    if !self.cfg.per_step_reconstruct {
+                        let len = self.cache.seq_len(victim).unwrap_or(0);
+                        self.cache.mark_decoded(victim, len);
+                    }
+                    Some(victim)
+                }
+                _ => None,
+            }
         }
     }
 

@@ -59,6 +59,13 @@ pub struct BlockManifest {
     /// payload encoded on the int8 demotion rung (changes every
     /// stream's row width, so a demotion forces a full re-ship)
     pub demoted: bool,
+    /// block-aligned own-row spans regionally demoted to int8 (sorted,
+    /// disjoint, absolute rows).  Changes only the affected groups' row
+    /// widths, so unlike the whole-sequence `demoted` flag a regional
+    /// demotion churns — and re-ships — only the groups it re-encoded;
+    /// carried so the receiver derives the same per-block layout and
+    /// the assembled [`ParkedBytes`] keeps the sender's flags.
+    pub demoted_spans: Vec<(usize, usize)>,
     /// rows per group (the cache's `block_size`)
     pub group_rows: usize,
     /// per-group checksums, ascending over the own-suffix rows
@@ -91,29 +98,47 @@ impl DeltaPayload {
     }
 }
 
-/// Byte offset and encoded row width of every byte-bearing stream in
-/// the payload's wire order, plus the total payload size.
-fn stream_spans(cfg: &CacheConfig, own: usize, demoted: bool) -> (Vec<(usize, usize)>, usize) {
-    let mut spans = Vec::new();
+/// Per-stream, per-group byte extents of a payload in wire order —
+/// `extents[stream][group] = (offset, bytes)` for every byte-bearing
+/// stream — plus the total payload size.  Groups coincide with own
+/// storage blocks, so the extents come straight from the per-block
+/// format layout ([`CacheConfig::own_block_layout`]): under a uniform
+/// plan every group of a stream has one width, and under mixed rungs
+/// or regional demotion each group prices its own block's format.
+fn group_extents(
+    cfg: &CacheConfig,
+    len: usize,
+    prefix_rows: usize,
+    demoted: bool,
+    demoted_spans: &[(usize, usize)],
+) -> (Vec<Vec<(usize, usize)>>, usize) {
+    let bs = cfg.block_size;
+    let own = len - prefix_rows;
+    let mut extents = Vec::new();
     let mut off = 0usize;
-    for (fmt, epr) in cfg.wire_layout(demoted) {
+    for (epr, fmts) in cfg.own_block_layout(len, prefix_rows, demoted, demoted_spans) {
         if epr == 0 {
             continue;
         }
-        let rb = fmt.row_bytes(epr);
-        spans.push((off, rb));
-        off += own * rb;
+        let mut stream = Vec::with_capacity(fmts.len());
+        for (b, fmt) in fmts.iter().enumerate() {
+            let rows = bs.min(own - b * bs);
+            let nbytes = rows * fmt.row_bytes(epr);
+            stream.push((off, nbytes));
+            off += nbytes;
+        }
+        extents.push(stream);
     }
-    (spans, off)
+    (extents, off)
 }
 
-/// Gather group `g`'s bytes (rows `[g·bs, g·bs + rows)` of every
-/// stored stream, wire order) out of a stream-major payload.
-fn gather_group(payload: &[u8], spans: &[(usize, usize)], g: usize, bs: usize, rows: usize, out: &mut Vec<u8>) {
+/// Gather group `g`'s bytes (the same own-block rows of every stored
+/// stream, wire order) out of a stream-major payload.
+fn gather_group(payload: &[u8], extents: &[Vec<(usize, usize)>], g: usize, out: &mut Vec<u8>) {
     out.clear();
-    for &(off, rb) in spans {
-        let start = off + g * bs * rb;
-        out.extend_from_slice(&payload[start..start + rows * rb]);
+    for stream in extents {
+        let (off, nbytes) = stream[g];
+        out.extend_from_slice(&payload[off..off + nbytes]);
     }
 }
 
@@ -124,7 +149,13 @@ fn gather_group(payload: &[u8], spans: &[(usize, usize)], g: usize, bs: usize, r
 pub fn manifest(cfg: &CacheConfig, parked: &ParkedBytes) -> Result<BlockManifest> {
     let bs = cfg.block_size;
     let own = parked.len - parked.prefix_rows;
-    let (spans, total) = stream_spans(cfg, own, parked.demoted);
+    let (extents, total) = group_extents(
+        cfg,
+        parked.len,
+        parked.prefix_rows,
+        parked.demoted,
+        &parked.demoted_spans,
+    );
     anyhow::ensure!(
         parked.payload.len() == total,
         "payload is {} bytes, wire layout derives {total}",
@@ -135,7 +166,7 @@ pub fn manifest(cfg: &CacheConfig, parked: &ParkedBytes) -> Result<BlockManifest
     let mut scratch = Vec::new();
     for g in 0..n_groups {
         let rows = bs.min(own - g * bs);
-        gather_group(&parked.payload, &spans, g, bs, rows, &mut scratch);
+        gather_group(&parked.payload, &extents, g, &mut scratch);
         groups.push(GroupSum {
             rows,
             bytes: scratch.len(),
@@ -146,6 +177,7 @@ pub fn manifest(cfg: &CacheConfig, parked: &ParkedBytes) -> Result<BlockManifest
         len: parked.len,
         prefix_rows: parked.prefix_rows,
         demoted: parked.demoted,
+        demoted_spans: parked.demoted_spans.clone(),
         group_rows: bs,
         groups,
         payload_crc: crc32(&parked.payload),
@@ -154,11 +186,13 @@ pub fn manifest(cfg: &CacheConfig, parked: &ParkedBytes) -> Result<BlockManifest
 
 /// Indices of the groups the receiver must be sent: every group when
 /// there is no usable basis (none retained, or the layout moved under
-/// it — demotion re-encodes every stream, a prefix change re-bases row
-/// numbering), otherwise exactly the groups whose checksum the basis
-/// cannot reproduce.  Append-only growth means in the common
-/// re-migration case this is the trailing partial group plus anything
-/// appended after it.
+/// it — whole-sequence demotion re-encodes every stream, a prefix
+/// change re-bases row numbering), otherwise exactly the groups whose
+/// checksum the basis cannot reproduce.  Append-only growth means in
+/// the common re-migration case this is the trailing partial group
+/// plus anything appended after it; a *regional* demotion re-encodes
+/// only its own blocks, so the per-group compare re-ships exactly the
+/// churned groups rather than blanket-invalidating the basis.
 pub fn diff(incoming: &BlockManifest, basis: Option<&BlockManifest>) -> Vec<usize> {
     let all = || (0..incoming.groups.len()).collect();
     let Some(basis) = basis else { return all() };
@@ -182,7 +216,13 @@ pub fn diff(incoming: &BlockManifest, basis: Option<&BlockManifest>) -> Vec<usiz
 pub fn extract(cfg: &CacheConfig, parked: &ParkedBytes, wanted: &[usize]) -> Result<DeltaPayload> {
     let bs = cfg.block_size;
     let own = parked.len - parked.prefix_rows;
-    let (spans, total) = stream_spans(cfg, own, parked.demoted);
+    let (extents, total) = group_extents(
+        cfg,
+        parked.len,
+        parked.prefix_rows,
+        parked.demoted,
+        &parked.demoted_spans,
+    );
     anyhow::ensure!(
         parked.payload.len() == total,
         "payload is {} bytes, wire layout derives {total}",
@@ -192,9 +232,8 @@ pub fn extract(cfg: &CacheConfig, parked: &ParkedBytes, wanted: &[usize]) -> Res
     let mut groups = Vec::with_capacity(wanted.len());
     for &g in wanted {
         anyhow::ensure!(g < n_groups, "group {g} out of range ({n_groups} groups)");
-        let rows = bs.min(own - g * bs);
         let mut bytes = Vec::new();
-        gather_group(&parked.payload, &spans, g, bs, rows, &mut bytes);
+        gather_group(&parked.payload, &extents, g, &mut bytes);
         groups.push((g, bytes));
     }
     Ok(DeltaPayload { groups })
@@ -214,19 +253,32 @@ pub fn assemble(
     delta: &DeltaPayload,
 ) -> Result<ParkedBytes> {
     let bs = incoming.group_rows;
+    anyhow::ensure!(
+        bs == cfg.block_size,
+        "manifest groups span {bs} rows, cache blocks span {}",
+        cfg.block_size
+    );
     let own = incoming.len - incoming.prefix_rows;
-    let (spans, total) = stream_spans(cfg, own, incoming.demoted);
+    let (extents, total) = group_extents(
+        cfg,
+        incoming.len,
+        incoming.prefix_rows,
+        incoming.demoted,
+        &incoming.demoted_spans,
+    );
     anyhow::ensure!(
         own.div_ceil(bs) == incoming.groups.len(),
         "manifest has {} groups, layout derives {}",
         incoming.groups.len(),
         own.div_ceil(bs)
     );
-    // the basis groups we may reuse, gathered lazily below
-    let basis_spans = basis.map(|b| {
+    // the basis groups we may reuse, gathered lazily below (laid out by
+    // the basis payload's *own* flags — its spans may differ from the
+    // incoming payload's)
+    let basis_extents = basis.map(|b| {
         let basis_own = b.len - b.prefix_rows;
-        let (s, t) = stream_spans(cfg, basis_own, b.demoted);
-        (s, t, basis_own)
+        let (e, t) = group_extents(cfg, b.len, b.prefix_rows, b.demoted, &b.demoted_spans);
+        (e, t, basis_own)
     });
     let mut payload = vec![0u8; total];
     let shipped: std::collections::HashMap<usize, &Vec<u8>> =
@@ -245,8 +297,8 @@ pub fn assemble(
                 let Some(basis) = basis else {
                     anyhow::bail!("delta omits group {g} but no basis payload is retained");
                 };
-                let Some((bspans, btotal, basis_own)) = basis_spans.as_ref() else {
-                    unreachable!("basis_spans mirrors basis")
+                let Some((bextents, btotal, basis_own)) = basis_extents.as_ref() else {
+                    unreachable!("basis_extents mirrors basis")
                 };
                 anyhow::ensure!(
                     basis.payload.len() == *btotal,
@@ -259,7 +311,7 @@ pub fn assemble(
                         && g * bs + sum.rows <= *basis_own,
                     "delta omits group {g} but the basis does not cover it"
                 );
-                gather_group(&basis.payload, bspans, g, bs, sum.rows, &mut scratch);
+                gather_group(&basis.payload, bextents, g, &mut scratch);
                 &scratch
             }
         };
@@ -279,9 +331,8 @@ pub fn assemble(
         );
         // scatter the gathered group back into stream-major layout
         let mut read = 0usize;
-        for &(off, rb) in &spans {
-            let dst = off + g * bs * rb;
-            let n = sum.rows * rb;
+        for stream in &extents {
+            let (dst, n) = stream[g];
             payload[dst..dst + n].copy_from_slice(&group_bytes[read..read + n]);
             read += n;
         }
@@ -302,6 +353,7 @@ pub fn assemble(
         len: incoming.len,
         prefix_rows: incoming.prefix_rows,
         demoted: incoming.demoted,
+        demoted_spans: incoming.demoted_spans.clone(),
         payload,
     })
 }
@@ -456,6 +508,79 @@ mod tests {
         let delta = extract(&m.cfg, &parked, &diff(&man, Some(&basis_man))).unwrap();
         let back = assemble(&m.cfg, &man, None, &delta).unwrap();
         assert_eq!(back, parked);
+    }
+
+    #[test]
+    fn regional_demotion_reships_only_churned_groups() {
+        let mut m = manager();
+        let mut rng = Rng::new(67);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 40, &mut rng);
+        let basis = m.extract_sequence_bytes(id).unwrap();
+        let basis_man = manifest(&m.cfg, &basis).unwrap();
+        m.restore_sequence_bytes(id, &basis).unwrap();
+        // demote only the first block's rows — unlike a whole-sequence
+        // demotion this must churn exactly one group
+        let freed = m.demote_region(id, 0, 16).unwrap();
+        assert!(freed > 0, "re-encoding f32 blocks to int8 frees bytes");
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        assert_eq!(parked.demoted_spans, vec![(0, 16)]);
+        let man = manifest(&m.cfg, &parked).unwrap();
+        assert_eq!(
+            diff(&man, Some(&basis_man)),
+            vec![0],
+            "only the demoted region's group re-ships"
+        );
+        let delta = extract(&m.cfg, &parked, &[0]).unwrap();
+        assert!(delta.shipped_bytes() < man.full_bytes());
+        let back = assemble(&m.cfg, &man, Some(&basis), &delta).unwrap();
+        assert_eq!(back, parked, "regional delta assembly must be bit-identical");
+    }
+
+    #[test]
+    fn mixed_rung_payloads_roundtrip_through_delta() {
+        use crate::compress::strategy::{RegionSpec, Rung};
+        let spec = tiny_spec();
+        let plan = CompressionPlan::ae_first_layers(&spec, 1);
+        let mut cfg = CacheConfig::new(spec, plan);
+        cfg.regions = vec![
+            RegionSpec {
+                start: 0,
+                end: Some(16),
+                rung: Rung::RawF32,
+            },
+            RegionSpec {
+                start: 16,
+                end: Some(32),
+                rung: Rung::Int8,
+            },
+            RegionSpec {
+                start: 32,
+                end: None,
+                rung: Rung::RawF16,
+            },
+        ];
+        let mut m = CacheManager::new(cfg);
+        let mut rng = Rng::new(71);
+        let id = m.create_sequence();
+        append_n(&mut m, id, 40, &mut rng);
+        // first transfer of the heterogeneous payload: bit-faithful
+        let basis = m.extract_sequence_bytes(id).unwrap();
+        let basis_man = manifest(&m.cfg, &basis).unwrap();
+        let full = extract(&m.cfg, &basis, &diff(&basis_man, None)).unwrap();
+        let back = assemble(&m.cfg, &basis_man, None, &full).unwrap();
+        assert_eq!(back, basis, "mixed-rung full transfer must be bit-identical");
+        // grow into the f16 tail region, then re-migrate: only the
+        // churned trailing groups ship, across a format boundary
+        m.restore_sequence_bytes(id, &basis).unwrap();
+        append_n(&mut m, id, 16, &mut rng);
+        let parked = m.extract_sequence_bytes(id).unwrap();
+        let man = manifest(&m.cfg, &parked).unwrap();
+        let wanted = diff(&man, Some(&basis_man));
+        assert_eq!(wanted, vec![2, 3]);
+        let delta = extract(&m.cfg, &parked, &wanted).unwrap();
+        let back = assemble(&m.cfg, &man, Some(&basis), &delta).unwrap();
+        assert_eq!(back, parked, "mixed-rung delta assembly must be bit-identical");
     }
 
     #[test]

@@ -20,6 +20,7 @@
 use super::allocator::{BlockPool, PoolStats};
 use super::block::{Block, Format, RowsView};
 use super::prefix::{PrefixIndex, PrefixStats};
+use crate::compress::strategy::RegionSpec;
 use crate::model::memory::CompressionPlan;
 use crate::model::ModelSpec;
 use anyhow::{anyhow, Result};
@@ -69,11 +70,16 @@ pub struct CacheConfig {
     pub latent_format: Format,
     /// token rows per pooled block
     pub block_size: usize,
+    /// adaptive per-row-region rung assignments (a validated
+    /// [`crate::compress::strategy::PlanManifest`]'s regions, installed
+    /// by the serving engine); empty = the uniform legacy policy, where
+    /// every row stores under the plan-derived per-stream formats
+    pub regions: Vec<RegionSpec>,
 }
 
 impl CacheConfig {
     /// Plan-derived defaults: f32 raw rows, int8 latents iff the plan
-    /// stacks Eq. 4, 16-row blocks.
+    /// stacks Eq. 4, 16-row blocks, no adaptive regions.
     pub fn new(spec: ModelSpec, plan: CompressionPlan) -> Self {
         let latent_format = if plan.quant_int8 {
             Format::Int8
@@ -86,6 +92,7 @@ impl CacheConfig {
             raw_format: Format::F32,
             latent_format,
             block_size: 16,
+            regions: Vec::new(),
         }
     }
 
@@ -119,6 +126,82 @@ impl CacheConfig {
                 }
             }
         }
+    }
+
+    /// The format the adaptive region covering `row` pins byte-bearing
+    /// streams to (`None` with no regions installed, or when the
+    /// covering region defers to the plan).
+    fn region_format(&self, row: usize) -> Option<Format> {
+        self.regions
+            .iter()
+            .find(|r| row >= r.start && r.end.map_or(true, |e| row < e))
+            .and_then(|r| r.rung.format_override())
+    }
+
+    /// The one format-precedence rule for a stored own row: ladder
+    /// demotion (whole-sequence flag or a dynamically demoted span)
+    /// beats the static region rung, which beats the plan-derived
+    /// default.  Every path that encodes, prices, or re-derives block
+    /// formats — appends, restores, delta manifests, the predicted-
+    /// bytes law — goes through here, so they can never disagree.
+    pub(crate) fn own_row_format(
+        &self,
+        kind: &StoreKind,
+        row: usize,
+        demoted: bool,
+        demoted_spans: &[(usize, usize)],
+    ) -> Format {
+        if demoted || demoted_spans.iter().any(|&(a, b)| row >= a && row < b) {
+            return Format::Int8;
+        }
+        if let Some(fmt) = self.region_format(row) {
+            return fmt;
+        }
+        self.format_for(kind)
+    }
+
+    /// Per-stream, per-own-block format layout of a sequence's private
+    /// suffix store: for every (layer, K|V) stream in wire order
+    /// (layer-ascending, K before V), its stored elements per row and
+    /// the format of each own block, derived from `(len, prefix_rows,
+    /// demoted, demoted_spans)` plus this config alone.  Regions and
+    /// demoted spans are block-aligned and `prefix_rows` is
+    /// block-aligned, so a block never straddles a format boundary and
+    /// its first row's [`CacheConfig::own_row_format`] is the whole
+    /// block's format.  With no regions and no spans this degenerates
+    /// to [`CacheConfig::wire_layout`] repeated per block — which is
+    /// what keeps the adaptive path byte-identical to the legacy one
+    /// for uniform manifests.  Both the restore path and the
+    /// delta-transfer manifest ([`crate::kvcache::delta`]) read
+    /// heterogeneous payloads through this one definition.
+    pub(crate) fn own_block_layout(
+        &self,
+        len: usize,
+        prefix_rows: usize,
+        demoted: bool,
+        demoted_spans: &[(usize, usize)],
+    ) -> Vec<(usize, Vec<Format>)> {
+        let own = len - prefix_rows;
+        let n_blocks = own.div_ceil(self.block_size);
+        let mut out = Vec::with_capacity(2 * self.spec.n_layer);
+        for layer in 0..self.spec.n_layer {
+            for side in [Side::K, Side::V] {
+                let kind = self.store_kind(layer, side);
+                let epr = kind.elements(&self.spec);
+                let fmts = if epr == 0 {
+                    Vec::new()
+                } else {
+                    (0..n_blocks)
+                        .map(|b| {
+                            let row = prefix_rows + b * self.block_size;
+                            self.own_row_format(&kind, row, demoted, demoted_spans)
+                        })
+                        .collect()
+                };
+                out.push((epr, fmts));
+            }
+        }
+        out
     }
 
     /// Exact encoded bytes one token row adds across every stream under
@@ -329,14 +412,17 @@ impl<'a> StreamView<'a> {
 /// *actual encoded block bytes*, not a modeled byte count.
 ///
 /// Wire format (documented in `rust/DESIGN.md` §4): streams concatenated
-/// layer-ascending, K before V; each stored stream contributes exactly
-/// `(len - prefix_rows) * format.row_bytes(elements_per_row)` bytes of
-/// back-to-back encoded rows (block padding is stripped — partial
-/// trailing blocks contribute only their filled rows).  Fully-aliased
-/// streams contribute nothing.  Formats and row widths are derived from
-/// the compression plan on restore, so the payload needs no per-stream
-/// header and round-trips bit-identically for f32, f16, and int8 (Eq. 4
-/// headers included).
+/// layer-ascending, K before V; each stored stream contributes its own
+/// blocks' filled rows back-to-back, each block's rows encoded under
+/// that block's format — `rows * format.row_bytes(elements_per_row)`
+/// bytes per block (block padding is stripped — partial trailing blocks
+/// contribute only their filled rows).  Fully-aliased streams
+/// contribute nothing.  Formats and row widths are derived on restore
+/// from the compression plan, the adaptive regions, and this struct's
+/// own `demoted`/`demoted_spans` flags
+/// ([`CacheConfig::own_block_layout`]), so the payload needs no
+/// per-stream or per-block header and round-trips bit-identically for
+/// f32, f16, and int8 (Eq. 4 headers included), uniform or mixed-rung.
 ///
 /// `prefix_rows` is the park/resume side of cross-request prefix
 /// sharing (DESIGN.md §6): a sequence admitted against a shared prefix
@@ -355,6 +441,12 @@ pub struct ParkedBytes {
     /// stored stream in the payload is int8-encoded regardless of the
     /// plan's formats, and restore must derive the layout accordingly
     pub demoted: bool,
+    /// block-aligned own-row spans the pressure ladder demoted
+    /// *regionally* (sorted, disjoint, absolute row indices): rows in
+    /// these spans are int8-encoded in the payload whatever the plan or
+    /// region rung says, and restore derives the per-block layout
+    /// accordingly.  Empty for sequences the ladder never touched.
+    pub demoted_spans: Vec<(usize, usize)>,
     /// concatenated encoded suffix stream bytes (see wire format above)
     pub payload: Vec<u8>,
 }
@@ -385,8 +477,30 @@ struct SeqCache {
     /// int8 rung: existing rows were re-encoded, future appends and
     /// park/restore layouts use int8 for every stored stream
     demoted: bool,
+    /// block-aligned own-row spans demoted regionally by the adaptive
+    /// ladder (sorted, disjoint, absolute rows): their blocks were
+    /// re-encoded int8 and appends landing inside them encode int8,
+    /// whatever the plan or region rung says.  Carried through
+    /// [`ParkedBytes`] so park/unpark and migration re-derive the same
+    /// per-block layout.
+    demoted_spans: Vec<(usize, usize)>,
     /// [layer][side] streams, side 0 = K, 1 = V — suffix rows only
     streams: Vec<[Stream; 2]>,
+}
+
+/// Merge `[start, end)` into a sorted, disjoint span list, coalescing
+/// overlapping or adjacent spans.
+fn merge_span(spans: &mut Vec<(usize, usize)>, start: usize, end: usize) {
+    spans.push((start, end));
+    spans.sort_unstable();
+    let mut merged: Vec<(usize, usize)> = Vec::with_capacity(spans.len());
+    for &(a, b) in spans.iter() {
+        match merged.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => merged.push((a, b)),
+        }
+    }
+    *spans = merged;
 }
 
 /// Per-sequence compressed block store: create/append/stream/park
@@ -497,6 +611,7 @@ impl CacheManager {
                 prefix_path: Vec::new(),
                 prefix_rows: 0,
                 demoted: false,
+                demoted_spans: Vec::new(),
                 streams,
             },
         );
@@ -620,17 +735,21 @@ impl CacheManager {
                     &mut gather,
                 );
                 if let Some(mut rows) = rows {
-                    // a demoted sequence keeps every stored stream on
-                    // the int8 rung, whatever the plan would encode
-                    let fmt = if seq.demoted {
-                        Format::Int8
-                    } else {
-                        self.cfg.format_for(&kind)
-                    };
                     let epr = kind.elements(&spec);
+                    // copy the format inputs out before mutably
+                    // borrowing the stream (field-disjoint borrows)
+                    let demoted = seq.demoted;
+                    let prefix_rows = seq.prefix_rows;
+                    let spans = seq.demoted_spans.clone();
                     let stream = &mut seq.streams[layer][side];
                     while !rows.is_empty() {
                         if stream.blocks.last().map_or(true, Block::is_full) {
+                            // each freshly-allocated block takes the
+                            // format its first row's rung pins — the
+                            // one precedence rule in `own_row_format`
+                            // (ladder demotion > region rung > plan)
+                            let row0 = prefix_rows + stream.blocks.len() * self.cfg.block_size;
+                            let fmt = self.cfg.own_row_format(&kind, row0, demoted, &spans);
                             let b = self
                                 .pool
                                 .alloc(fmt, epr, self.cfg.block_size)
@@ -765,6 +884,7 @@ impl CacheManager {
             len: seq.len,
             prefix_rows: seq.prefix_rows,
             demoted: seq.demoted,
+            demoted_spans: seq.demoted_spans.clone(),
             payload,
         })
     }
@@ -796,20 +916,28 @@ impl CacheManager {
                 seq.prefix_rows
             );
         }
-        // derive the wire layout from the plan alone (no per-stream
-        // headers travel with the payload); only the suffix rows past
-        // the still-resident shared prefix travel
+        // derive the per-block wire layout from the plan, the adaptive
+        // regions, and the payload's own demotion flags (no per-stream
+        // or per-block headers travel with the payload); only the
+        // suffix rows past the still-resident shared prefix travel
         let own = parked.len - parked.prefix_rows;
-        let layout: Vec<(Format, usize, usize)> = self
-            .cfg
-            .wire_layout(parked.demoted)
-            .into_iter()
-            .map(|(fmt, epr)| {
-                let nbytes = if epr == 0 { 0 } else { own * fmt.row_bytes(epr) };
-                (fmt, epr, nbytes)
+        let bs = self.cfg.block_size;
+        let layout = self.cfg.own_block_layout(
+            parked.len,
+            parked.prefix_rows,
+            parked.demoted,
+            &parked.demoted_spans,
+        );
+        let block_rows = |b: usize| (own - b * bs).min(bs);
+        let total: usize = layout
+            .iter()
+            .map(|(epr, fmts)| {
+                fmts.iter()
+                    .enumerate()
+                    .map(|(b, f)| block_rows(b) * f.row_bytes(*epr))
+                    .sum::<usize>()
             })
-            .collect();
-        let total: usize = layout.iter().map(|l| l.2).sum();
+            .sum();
         anyhow::ensure!(
             parked.payload.len() == total,
             "parked payload is {} bytes, wire format needs {total}",
@@ -819,29 +947,25 @@ impl CacheManager {
         // mid-way leaves the sequence cleanly parked
         let mut staged: Vec<Vec<Block>> = Vec::with_capacity(layout.len());
         let mut off = 0usize;
-        for &(fmt, epr, nbytes) in &layout {
-            let mut blocks = Vec::new();
-            if epr > 0 {
-                let rb = fmt.row_bytes(epr);
-                let mut rest = &parked.payload[off..off + nbytes];
+        for (epr, fmts) in &layout {
+            let mut blocks = Vec::with_capacity(fmts.len());
+            for (bi, &fmt) in fmts.iter().enumerate() {
+                let nbytes = block_rows(bi) * fmt.row_bytes(*epr);
+                let Some(mut b) = self.pool.alloc(fmt, *epr, bs) else {
+                    for blks in staged {
+                        for blk in blks {
+                            self.pool.free(blk);
+                        }
+                    }
+                    for blk in blocks {
+                        self.pool.free(blk);
+                    }
+                    return Err(anyhow!("cache budget exceeded restoring sequence {id}"));
+                };
+                let taken = b.push_raw_rows(&parked.payload[off..off + nbytes]);
+                debug_assert_eq!(taken, block_rows(bi));
                 off += nbytes;
-                while !rest.is_empty() {
-                    let Some(mut b) = self.pool.alloc(fmt, epr, self.cfg.block_size) else {
-                        for bs in staged {
-                            for b in bs {
-                                self.pool.free(b);
-                            }
-                        }
-                        for b in blocks {
-                            self.pool.free(b);
-                        }
-                        return Err(anyhow!("cache budget exceeded restoring sequence {id}"));
-                    };
-                    let taken = b.push_raw_rows(rest);
-                    debug_assert!(taken > 0);
-                    rest = &rest[taken * rb..];
-                    blocks.push(b);
-                }
+                blocks.push(b);
             }
             staged.push(blocks);
         }
@@ -854,6 +978,7 @@ impl CacheManager {
         }
         seq.parked = false;
         seq.demoted = parked.demoted;
+        seq.demoted_spans = parked.demoted_spans.clone();
         seq.decoded_upto = 0;
         Ok(())
     }
@@ -956,6 +1081,158 @@ impl CacheManager {
         seq.demoted = true;
         seq.decoded_upto = 0;
         Ok(before.saturating_sub(after))
+    }
+
+    /// Block-aligned own-row spans the adaptive ladder demoted
+    /// regionally (sorted, disjoint; empty for untouched sequences or
+    /// unknown ids).
+    pub fn seq_demoted_spans(&self, id: u64) -> Vec<(usize, usize)> {
+        self.seqs
+            .get(&id)
+            .map_or_else(Vec::new, |s| s.demoted_spans.clone())
+    }
+
+    /// Demote one block-aligned own-row region `[start, end)` to the
+    /// int8 rung — the per-region generalization of
+    /// [`CacheManager::demote_sequence`] the adaptive ladder uses: only
+    /// the region's blocks are decoded and re-encoded int8, the rest of
+    /// the sequence keeps its rungs, and the span is recorded in
+    /// `demoted_spans` (merged, carried through [`ParkedBytes`]) so
+    /// every layout derivation — appends into the span, park/unpark,
+    /// delta manifests, the predicted-bytes law — sees the demotion.
+    ///
+    /// Staging is all-or-nothing exactly like the whole-sequence rung:
+    /// a budget failure mid-way leaves the sequence untouched.  Blocks
+    /// in the region already int8 (plan, region rung, or an earlier
+    /// demotion) are skipped, so re-demoting a span is idempotent and
+    /// frees 0.  The decode watermark is clamped to `start` — re-encoded
+    /// rows decode to slightly different f32s, so scratch past the
+    /// region start must not survive.
+    ///
+    /// Returns the stored bytes freed (block-capacity granularity).
+    pub fn demote_region(&mut self, id: u64, start: usize, end: usize) -> Result<usize> {
+        let spec = self.cfg.spec.clone();
+        let bs = self.cfg.block_size;
+        anyhow::ensure!(
+            start < end && start % bs == 0 && end % bs == 0,
+            "demotion region [{start}, {end}) must be non-empty and {bs}-row aligned"
+        );
+        let seq = self
+            .seqs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("unknown sequence {id}"))?;
+        anyhow::ensure!(!seq.parked, "sequence {id} is parked in the host tier");
+        anyhow::ensure!(
+            start >= seq.prefix_rows,
+            "region starts at {start}, inside the shared prefix ({} rows) — \
+             shared chunks are immutable and cannot be demoted",
+            seq.prefix_rows
+        );
+        let own = seq.len - seq.prefix_rows;
+        let n_blocks = own.div_ceil(bs);
+        anyhow::ensure!(
+            end <= seq.prefix_rows + n_blocks * bs,
+            "region ends at {end}, past the sequence's {} stored rows",
+            seq.len
+        );
+        let b0 = (start - seq.prefix_rows) / bs;
+        let b1 = (end - seq.prefix_rows) / bs;
+        // stage replacement int8 blocks for every non-int8 block in the
+        // region before freeing any original (all-or-nothing)
+        let mut staged: Vec<(usize, usize, Block)> = Vec::new();
+        let mut scratch: Vec<f32> = Vec::new();
+        for (si, stream) in seq
+            .streams
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .enumerate()
+        {
+            let epr = stream.kind.elements(&spec);
+            if epr == 0 {
+                continue;
+            }
+            for (bi, b) in stream.blocks.iter().enumerate().take(b1).skip(b0) {
+                if matches!(b.format, Format::Int8) {
+                    continue;
+                }
+                scratch.resize(b.rows * epr, 0.0);
+                b.decode_rows_into(0, b.rows, &mut scratch[..b.rows * epr]);
+                let Some(mut nb) = self.pool.alloc(Format::Int8, epr, bs) else {
+                    for (_, _, blk) in staged {
+                        self.pool.free(blk);
+                    }
+                    return Err(anyhow!(
+                        "cache budget exceeded demoting region of sequence {id}"
+                    ));
+                };
+                let pushed = nb.push_rows(&scratch[..b.rows * epr]);
+                debug_assert_eq!(pushed, b.rows);
+                staged.push((si, bi, nb));
+            }
+        }
+        let mut before = 0usize;
+        let mut after = 0usize;
+        for (si, bi, nb) in staged {
+            after += nb.stored_bytes();
+            let old = std::mem::replace(&mut seq.streams[si / 2][si % 2].blocks[bi], nb);
+            before += old.stored_bytes();
+            self.pool.free(old);
+        }
+        merge_span(&mut seq.demoted_spans, start, end);
+        seq.decoded_upto = seq.decoded_upto.min(start);
+        Ok(before.saturating_sub(after))
+    }
+
+    /// The coldest (lowest-index) run of up to `max_blocks` own blocks
+    /// still holding a rung above int8, as an absolute row region ready
+    /// for [`CacheManager::demote_region`] — `None` when the sequence
+    /// is parked, unknown, or already int8 throughout (nothing left for
+    /// the regional ladder rung to reclaim).
+    pub fn coldest_promotable_region(&self, id: u64, max_blocks: usize) -> Option<(usize, usize)> {
+        let seq = self.seqs.get(&id)?;
+        if seq.parked {
+            return None;
+        }
+        let bs = self.cfg.block_size;
+        let n_blocks = (seq.len - seq.prefix_rows).div_ceil(bs);
+        let first = seq
+            .streams
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .filter_map(|st| {
+                st.blocks
+                    .iter()
+                    .position(|b| !matches!(b.format, Format::Int8))
+            })
+            .min()?;
+        let last = (first + max_blocks.max(1)).min(n_blocks);
+        Some((seq.prefix_rows + first * bs, seq.prefix_rows + last * bs))
+    }
+
+    /// Manifest-predicted stored bytes for a live sequence: what the
+    /// config's per-block layout says the sequence's own blocks must
+    /// cost at block-capacity granularity.  The plan-coherence
+    /// invariant (`coordinator/invariants.rs`) asserts this equals
+    /// [`CacheManager::seq_stored_bytes`] for every live sequence after
+    /// every round — the bytes law that pins measured storage to the
+    /// declared policy.  0 for parked or unknown sequences.
+    pub fn seq_predicted_bytes(&self, id: u64) -> usize {
+        let Some(seq) = self.seqs.get(&id) else {
+            return 0;
+        };
+        if seq.parked {
+            return 0;
+        }
+        let bs = self.cfg.block_size;
+        self.cfg
+            .own_block_layout(seq.len, seq.prefix_rows, seq.demoted, &seq.demoted_spans)
+            .into_iter()
+            .map(|(epr, fmts)| {
+                fmts.iter()
+                    .map(|f| bs * f.row_bytes(epr))
+                    .sum::<usize>()
+            })
+            .sum()
     }
 
     /// Measured stored bytes for a sequence (block capacity granularity).
@@ -1407,8 +1684,17 @@ impl CacheManager {
     /// fresh id covering `len` rows over the chain ending at `leaf`,
     /// registered **parked** so the very next step is
     /// [`CacheManager::restore_sequence_bytes`] with the transferred
-    /// payload.  On failure nothing is left behind.
-    pub fn import_sequence(&mut self, len: usize, leaf: Option<u32>, demoted: bool) -> Result<u64> {
+    /// payload.  `demoted`/`demoted_spans` mirror the transferred
+    /// [`ParkedBytes`] flags so the shell already reflects the rungs
+    /// the payload was encoded under.  On failure nothing is left
+    /// behind.
+    pub fn import_sequence(
+        &mut self,
+        len: usize,
+        leaf: Option<u32>,
+        demoted: bool,
+        demoted_spans: &[(usize, usize)],
+    ) -> Result<u64> {
         anyhow::ensure!(
             len <= self.cfg.spec.max_seq,
             "imported sequence of {len} rows exceeds max_seq"
@@ -1433,6 +1719,7 @@ impl CacheManager {
             .expect("sequence created a few lines up");
         seq.len = len;
         seq.demoted = demoted;
+        seq.demoted_spans = demoted_spans.to_vec();
         seq.parked = true;
         seq.decoded_upto = 0;
         Ok(id)

@@ -314,6 +314,7 @@ mod tests {
             len: 3,
             prefix_rows: 0,
             demoted: false,
+            demoted_spans: Vec::new(),
             payload: vec![7u8, 1, 2, 255, 0, 42],
         };
         let c1 = tier.park(5, bytes.clone());
@@ -344,6 +345,7 @@ mod tests {
                 len: 2,
                 prefix_rows: 0,
                 demoted: false,
+                demoted_spans: Vec::new(),
                 payload: vec![1, 2, 3, 4],
             },
         );
@@ -366,6 +368,7 @@ mod tests {
             len: 1,
             prefix_rows: 0,
             demoted: false,
+            demoted_spans: Vec::new(),
             payload: vec![0],
         };
         tier.park(1, b.clone());
@@ -417,6 +420,7 @@ mod tests {
             len: 3,
             prefix_rows: 1,
             demoted: false,
+            demoted_spans: Vec::new(),
             payload: vec![9u8, 8, 7, 6, 5, 4],
         };
         let c1 = tier.park(2, bytes.clone());
@@ -440,6 +444,7 @@ mod tests {
                 len: 2,
                 prefix_rows: 0,
                 demoted: false,
+                demoted_spans: Vec::new(),
                 payload: vec![1, 2, 3, 4],
             },
         );
@@ -458,6 +463,7 @@ mod tests {
                 len: 1,
                 prefix_rows: 0,
                 demoted: false,
+                demoted_spans: Vec::new(),
                 payload: vec![42, 43],
             },
         );
@@ -474,6 +480,7 @@ mod tests {
                 len: 2,
                 prefix_rows: 0,
                 demoted: false,
+                demoted_spans: Vec::new(),
                 payload: vec![1, 2, 3, 4],
             },
         );

@@ -8,23 +8,34 @@
 //!   train-reuse               Alg. 2 reuse finetuning
 //!   eval                      perplexity / zero-shot under a plan
 //!   serve                     demo serve of a synthetic workload
+//!   autotune                  sweep adaptive plan manifests, emit the
+//!                             bytes-vs-accuracy Pareto frontier into
+//!                             BENCH_plans.json (--out overrides)
 //!   memplan                   Fig. 2/3 OOM-frontier table
 //!
 //! Common flags: --model gpt2t|tinyllama_t  --artifacts DIR  --seed N
 
 use anyhow::{anyhow, Result};
-use kvcar::compress::planner::{self, to_masks};
+use kvcar::compress::planner::{self, candidate_manifests, to_masks};
 use kvcar::compress::similarity::Selection;
-use kvcar::coordinator::{GenRequest, Router, RouterConfig, Sampling, ServeConfig, ServingEngine};
+use kvcar::compress::strategy::PlanManifest;
+use kvcar::coordinator::{
+    scenario_spec, GenRequest, GenResponse, Router, RouterConfig, Sampling, ServeConfig,
+    ServingEngine,
+};
 use kvcar::data::corpus;
 use kvcar::data::tasks::Task;
 use kvcar::eval::{perplexity, zero_shot};
+use kvcar::kvcache::{CacheConfig, CacheManager, Format, Side, StoredRows};
 use kvcar::memsim::{frontier, FigureCompression, GpuModel, FIGURE_BATCHES};
 use kvcar::model::memory::{plan_savings, CompressionPlan};
 use kvcar::model::ModelSpec;
-use kvcar::runtime::{Engine, Store};
+use kvcar::runtime::backend::ExecBackend;
+use kvcar::runtime::{Engine, MockEngine, Store};
 use kvcar::train::{TrainConfig, Trainer};
 use kvcar::util::cli::Args;
+use kvcar::util::json::{self, Json};
+use kvcar::util::rng::Rng;
 use std::path::PathBuf;
 
 fn main() {
@@ -313,6 +324,7 @@ fn run(args: &Args) -> Result<()> {
             );
             Ok(())
         }
+        Some("autotune") => autotune(args, &model),
         Some("memplan") => {
             let spec = match args.str("paper-model", "gpt2-774m").as_str() {
                 "gpt2-774m" => kvcar::model::gpt2_774m(),
@@ -345,4 +357,315 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// One measured point of the autotune sweep: a candidate manifest's
+/// bytes and accuracy on one backend.
+struct PlanRow {
+    name: &'static str,
+    /// peak live cache-pool bytes over the serving run (measured, not
+    /// modelled — the plan-coherence invariant pins the two together)
+    bytes: usize,
+    /// fraction of generated token positions agreeing with the raw-f32
+    /// reference manifest's run (1.0 for the reference itself)
+    agreement: f64,
+    /// RMS error of stored rows read back against the exact rows
+    /// appended — the logits-delta proxy measurable without a model
+    rms: f64,
+    pareto: bool,
+    manifest_json: String,
+}
+
+/// Serve a fixed greedy workload under `manifest` in faithful mode
+/// (per-step reconstruction re-reads stored rows every round, so the
+/// storage rungs are *observable in the tokens*) and measure peak
+/// cache bytes.  Responses come back sorted by request id.
+fn serve_manifest(
+    engine: &mut dyn ExecBackend,
+    model: &str,
+    spec: &ModelSpec,
+    manifest: &PlanManifest,
+    seed: u64,
+) -> Result<(Vec<GenResponse>, usize)> {
+    let mut cfg = ServeConfig::faithful(CompressionPlan::none(spec.n_layer, spec.n_kv_head));
+    cfg.seed = seed;
+    cfg.max_batch = 4;
+    cfg.adaptive_plan = Some(manifest.clone());
+    let mut serving = ServingEngine::new(engine, model, cfg)?;
+    let mut c = corpus::wiki(seed);
+    let prompt_len = (spec.max_seq / 2).min(24).max(1);
+    let max_new = (spec.max_seq / 4).min(16).max(1);
+    let reqs: Vec<GenRequest> = (0..8u64)
+        .map(|i| GenRequest::greedy(i, &c.tokens(prompt_len), max_new))
+        .collect();
+    let mut responses = serving.run(reqs)?;
+    responses.sort_by_key(|r| r.id);
+    let bytes = serving.cache.pool_stats().peak_live_bytes;
+    Ok((responses, bytes))
+}
+
+/// Token agreement against the reference run: matching positions over
+/// reference positions, id-matched (greedy sampling, so any divergence
+/// is storage-rung loss surfacing through faithful reconstruction).
+fn token_agreement(reference: &[GenResponse], got: &[GenResponse]) -> f64 {
+    let (mut hits, mut total) = (0usize, 0usize);
+    for r in reference {
+        let out = got
+            .iter()
+            .find(|g| g.id == r.id)
+            .map(|g| g.output.as_slice())
+            .unwrap_or(&[]);
+        total += r.output.len();
+        hits += r
+            .output
+            .iter()
+            .zip(out)
+            .filter(|(a, b)| a == b)
+            .count();
+    }
+    if total == 0 {
+        1.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+/// Stored-row reconstruction RMS under `manifest`: append a full
+/// deterministic gaussian sequence through the adaptive layouts, read
+/// every stream back, and compare against exactly what went in.  Raw
+/// f32 rungs come back at 0; f16/int8 rungs report their quantization
+/// loss — the accuracy axis that needs no model at all.
+fn rung_rms(spec: &ModelSpec, manifest: &PlanManifest) -> Result<f64> {
+    let mut ccfg = CacheConfig::new(spec.clone(), manifest.plan.clone());
+    ccfg.raw_format = Format::F32;
+    ccfg.regions = manifest.regions.clone();
+    let mut m = CacheManager::new(ccfg);
+    let id = m.create_sequence();
+    let (l, dl, kvd, dh) = (spec.n_layer, spec.ae_latent, spec.kv_dim(), spec.d_head);
+    let n = spec.max_seq.min(48);
+    let mut rng = Rng::new(0xA070);
+    let mut fill = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    };
+    let k_lat = fill(l * n * dl);
+    let v_lat = fill(l * n * dl);
+    let k_raw = fill(l * n * kvd);
+    let v_raw = fill(l * n * kvd);
+    m.append_rows(id, n, n, &k_lat, &v_lat, &k_raw, &v_raw)?;
+    let (mut err, mut count) = (0.0f64, 0usize);
+    for layer in 0..l {
+        for (side, lat, raw) in [(Side::K, &k_lat, &k_raw), (Side::V, &v_lat, &v_raw)] {
+            match m.stored_rows(id, layer, side)? {
+                StoredRows::Alias => {}
+                StoredRows::Latent(v) => {
+                    let base = layer * n * dl;
+                    for (i, &x) in v.iter().enumerate() {
+                        let d = f64::from(x - lat[base + i]);
+                        err += d * d;
+                    }
+                    count += v.len();
+                }
+                StoredRows::Heads(v, heads) => {
+                    let w = heads.len() * dh;
+                    for t in 0..n {
+                        for (hi, &h) in heads.iter().enumerate() {
+                            for e in 0..dh {
+                                let stored = v[t * w + hi * dh + e];
+                                let orig = raw[layer * n * kvd + t * kvd + h * dh + e];
+                                let d = f64::from(stored - orig);
+                                err += d * d;
+                            }
+                        }
+                    }
+                    count += n * w;
+                }
+            }
+        }
+    }
+    Ok(if count == 0 {
+        0.0
+    } else {
+        (err / count as f64).sqrt()
+    })
+}
+
+/// Sweep every candidate manifest on one backend: the first candidate
+/// (uniform raw f32) is the accuracy reference the rest are scored
+/// against.
+fn sweep_manifests(
+    engine: &mut dyn ExecBackend,
+    model: &str,
+    spec: &ModelSpec,
+    cands: &[(&'static str, PlanManifest)],
+    seed: u64,
+) -> Result<Vec<PlanRow>> {
+    let mut rows: Vec<PlanRow> = Vec::new();
+    let mut reference: Option<Vec<GenResponse>> = None;
+    for &(name, ref manifest) in cands {
+        let (responses, bytes) = serve_manifest(engine, model, spec, manifest, seed)?;
+        let agreement = match &reference {
+            None => 1.0,
+            Some(r) => token_agreement(r, &responses),
+        };
+        if reference.is_none() {
+            reference = Some(responses);
+        }
+        rows.push(PlanRow {
+            name,
+            bytes,
+            agreement,
+            rms: rung_rms(spec, manifest)?,
+            pareto: false,
+            manifest_json: manifest.to_json(),
+        });
+    }
+    mark_pareto(&mut rows);
+    Ok(rows)
+}
+
+/// Mark the Pareto frontier over (bytes ↓, agreement ↑, rms ↓): a row
+/// is on the frontier unless some other row is at least as good on all
+/// three axes and strictly better on one.
+fn mark_pareto(rows: &mut [PlanRow]) {
+    let flags: Vec<bool> = rows
+        .iter()
+        .map(|a| {
+            !rows.iter().any(|b| {
+                b.bytes <= a.bytes
+                    && b.agreement >= a.agreement
+                    && b.rms <= a.rms
+                    && (b.bytes < a.bytes || b.agreement > a.agreement || b.rms < a.rms)
+            })
+        })
+        .collect();
+    for (row, on) in rows.iter_mut().zip(flags) {
+        row.pareto = on;
+    }
+}
+
+fn plan_row_json(r: &PlanRow) -> Result<Json> {
+    let manifest = Json::parse(&r.manifest_json)
+        .map_err(|e| anyhow!("candidate {} manifest json: {e}", r.name))?;
+    Ok(json::obj(vec![
+        ("name", json::s(r.name)),
+        ("bytes", json::num(r.bytes as f64)),
+        ("token_agreement", json::num(r.agreement)),
+        ("reconstruction_rms", json::num(r.rms)),
+        ("pareto", Json::Bool(r.pareto)),
+        ("manifest", manifest),
+    ]))
+}
+
+/// Print run-over-run deltas against the previous BENCH_plans.json
+/// (mirrors the bench writers: any movement here is a policy change,
+/// not machine noise — the whole sweep is deterministic).
+fn report_plan_deltas(prev: &Json, key: &str, rows: &[PlanRow]) {
+    let Some(prev_rows) = prev.get(key).and_then(Json::as_arr) else {
+        return;
+    };
+    for r in rows {
+        let Some(old) = prev_rows
+            .iter()
+            .find(|p| p.get("name").and_then(Json::as_str) == Some(r.name))
+        else {
+            continue;
+        };
+        for (field, new_v) in [
+            ("bytes", r.bytes as f64),
+            ("token_agreement", r.agreement),
+            ("reconstruction_rms", r.rms),
+        ] {
+            if let Some(old_v) = old.get(field).and_then(Json::as_f64) {
+                if old_v > 0.0 && (old_v - new_v).abs() > 1e-9 {
+                    println!(
+                        "autotune {key}/{:<18} vs previous: {field} {:+.1}% ({:.4} -> {:.4})",
+                        r.name,
+                        100.0 * (new_v - old_v) / old_v,
+                        old_v,
+                        new_v,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `kvcar autotune`: sweep the candidate adaptive manifests against
+/// measured bytes and accuracy (token agreement + stored-row RMS vs
+/// the raw-f32 reference) on the mock backend — plus the real artifact
+/// backend when artifacts are present — and write the Pareto frontier
+/// to BENCH_plans.json (DESIGN.md §11; `examples/README.md` shows the
+/// autotune-then-serve workflow reading it back).
+fn autotune(args: &Args, model: &str) -> Result<()> {
+    let out_path = args.str("out", "BENCH_plans.json");
+    let seed = args.u64("seed", 0);
+    let spec = scenario_spec();
+    let block_size = CacheConfig::new(
+        spec.clone(),
+        CompressionPlan::none(spec.n_layer, spec.n_kv_head),
+    )
+    .block_size;
+    let cands = candidate_manifests(&spec, block_size);
+    let mut mock = MockEngine::new(spec.clone());
+    let rows = sweep_manifests(&mut mock, "mock", &spec, &cands, seed)?;
+    for r in &rows {
+        println!(
+            "autotune mock/{:<18} {:>8} B  agreement {:.4}  rms {:.5}{}",
+            r.name,
+            r.bytes,
+            r.agreement,
+            r.rms,
+            if r.pareto { "  [pareto]" } else { "" },
+        );
+    }
+
+    // artifact-gated real leg: identical sweep over the PJRT artifact
+    // backend; absent artifacts the mock leg alone runs, never skipped
+    let mut engine_rows: Vec<PlanRow> = Vec::new();
+    let dir = artifacts(args);
+    if dir.join("manifest.json").exists() {
+        let mut engine = Engine::new(&dir)?;
+        let espec = ModelSpec::from_manifest(&engine.manifest.raw, model)?;
+        let ecands = candidate_manifests(&espec, block_size);
+        engine_rows = sweep_manifests(&mut engine, model, &espec, &ecands, seed)?;
+        for r in &engine_rows {
+            println!(
+                "autotune {model}/{:<18} {:>8} B  agreement {:.4}  rms {:.5}{}",
+                r.name,
+                r.bytes,
+                r.agreement,
+                r.rms,
+                if r.pareto { "  [pareto]" } else { "" },
+            );
+        }
+    } else {
+        println!("autotune: artifacts absent; real-engine leg skipped (mock leg above)");
+    }
+
+    match std::fs::read_to_string(&out_path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(prev) => {
+                report_plan_deltas(&prev, "plans", &rows);
+                report_plan_deltas(&prev, "engine_plans", &engine_rows);
+            }
+            Err(e) => println!("autotune: previous {out_path} unreadable ({e}); no deltas"),
+        },
+        Err(_) => println!("autotune: no previous run ({out_path}); deltas start next run"),
+    }
+    let plans = rows.iter().map(plan_row_json).collect::<Result<Vec<_>>>()?;
+    let engine_plans = engine_rows
+        .iter()
+        .map(plan_row_json)
+        .collect::<Result<Vec<_>>>()?;
+    let j = json::obj(vec![
+        ("version", json::num(1.0)),
+        ("bench", json::s("autotune")),
+        ("backend", json::s("mock")),
+        ("plans", json::arr(plans)),
+        ("engine_plans", json::arr(engine_plans)),
+    ]);
+    std::fs::write(&out_path, j.to_string())
+        .map_err(|e| anyhow!("could not write {out_path}: {e}"))?;
+    println!("autotune: wrote {out_path}");
+    Ok(())
 }

@@ -1,0 +1,433 @@
+//! Differential pins for the adaptive per-layer/per-head/per-row-region
+//! compression policy (DESIGN.md §11):
+//!
+//! * A **uniform** `PlanManifest` served through the adaptive path is
+//!   **bitwise identical** to the legacy single-rung path — token
+//!   digests, invariant-trajectory digests, ladder counters, and every
+//!   virtual-clock timing figure — across the whole standard scenario
+//!   matrix and the whole sharded matrix.
+//! * A **mixed** manifest's rows read back bitwise equal to per-region
+//!   single-rung oracle stores, and the measured stored bytes always
+//!   equal what the plan layout law predicts.
+//! * Mixed-rung sequences round-trip the host tier (CRC-verified) and
+//!   survive regional ladder demotion bit-identically.
+//! * Sustained admission pressure under a partitioned manifest walks a
+//!   **per-region** demotion ladder, deterministically, with the
+//!   plan-coherence invariant audited after every round.
+
+use kvcar::compress::planner::candidate_manifests;
+use kvcar::compress::strategy::{PlanManifest, RegionSpec, Rung};
+use kvcar::coordinator::{
+    run_scenario, scenario_spec, sharded_matrix, standard_matrix, Scenario, ScenarioReport,
+};
+use kvcar::kvcache::tier::HostTier;
+use kvcar::kvcache::{CacheConfig, CacheManager, Format, Side, StoredRows};
+use kvcar::model::memory::CompressionPlan;
+use kvcar::model::ModelSpec;
+use kvcar::prop_assert;
+use kvcar::runtime::{ExecBackend, MockEngine};
+use kvcar::util::prop::check;
+use kvcar::util::rng::Rng;
+
+const BS: usize = 16; // scenario_spec block size (CacheConfig::new default)
+
+/// The plan `run_scenario` builds internally for every matrix entry —
+/// adaptive legs embed the same plan so budgets and digests compare.
+fn matrix_plan(spec: &ModelSpec) -> CompressionPlan {
+    CompressionPlan::ae_first_layers(spec, (spec.n_layer / 2).max(1))
+}
+
+/// A genuinely partitioned manifest over the scenario spec: the sink
+/// block pinned raw f32, a cold early region at int8, the tail at the
+/// plan's own rung.
+fn partitioned_manifest(spec: &ModelSpec) -> PlanManifest {
+    let m = PlanManifest {
+        plan: matrix_plan(spec),
+        regions: vec![
+            RegionSpec { start: 0, end: Some(BS), rung: Rung::RawF32 },
+            RegionSpec { start: BS, end: Some(2 * BS), rung: Rung::Int8 },
+            RegionSpec { start: 2 * BS, end: None, rung: Rung::Plan },
+        ],
+    };
+    m.validate(BS).expect("partitioned manifest must validate");
+    m
+}
+
+fn run(sc: &Scenario) -> ScenarioReport {
+    let mut engine = MockEngine::new(scenario_spec());
+    run_scenario(&mut engine, "mock", sc).expect("scenario must pass its invariants")
+}
+
+fn gauss(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+/// A manager under `ccfg` holding one sequence of `n` seeded gaussian
+/// rows (same seed ⇒ bit-identical appended data across managers).
+fn filled_manager(ccfg: CacheConfig, n: usize, seed: u64) -> (CacheManager, u64) {
+    let spec = ccfg.spec.clone();
+    let mut m = CacheManager::new(ccfg);
+    let id = m.create_sequence();
+    let (l, dl, kvd) = (spec.n_layer, spec.ae_latent, spec.kv_dim());
+    let mut rng = Rng::new(seed);
+    let k_lat = gauss(&mut rng, l * n * dl);
+    let v_lat = gauss(&mut rng, l * n * dl);
+    let k_raw = gauss(&mut rng, l * n * kvd);
+    let v_raw = gauss(&mut rng, l * n * kvd);
+    m.append_rows(id, n, n, &k_lat, &v_lat, &k_raw, &v_raw)
+        .expect("append rows");
+    (m, id)
+}
+
+/// Decoded f32 contents of rows `[start, end)` of one stream, `None`
+/// for fully-aliased streams.
+fn rows(m: &CacheManager, id: u64, layer: usize, side: Side, start: usize, end: usize) -> Option<Vec<f32>> {
+    match m.stored_rows(id, layer, side).expect("stored rows") {
+        StoredRows::Alias => None,
+        StoredRows::Latent(v) => {
+            let epr = m.cfg.spec.ae_latent;
+            Some(v[start * epr..end * epr].to_vec())
+        }
+        StoredRows::Heads(v, heads) => {
+            let epr = heads.len() * m.cfg.spec.d_head;
+            Some(v[start * epr..end * epr].to_vec())
+        }
+    }
+}
+
+/// Every stream's decoded rows `[start, end)`, in wire order.
+fn all_rows(m: &CacheManager, id: u64, start: usize, end: usize) -> Vec<Option<Vec<f32>>> {
+    (0..m.cfg.spec.n_layer)
+        .flat_map(|l| [Side::K, Side::V].map(|s| (l, s)))
+        .map(|(l, s)| rows(m, id, l, s, start, end))
+        .collect()
+}
+
+#[test]
+fn uniform_manifest_is_bitwise_identical_to_the_legacy_path() {
+    // the tentpole pin: a uniformly-Plan-rung manifest through the
+    // adaptive path must reproduce the legacy single-rung path *report
+    // for report* — tokens, invariant fingerprints (which fold the
+    // regional-demotion counter), parks, retries, and every timing
+    // figure — across the whole standard matrix, faults included
+    let spec = scenario_spec();
+    for sc in standard_matrix() {
+        let legacy = run(&sc);
+        let mut adaptive = sc.clone();
+        adaptive.adaptive_plan = Some(PlanManifest::uniform(matrix_plan(&spec)));
+        let pinned = run(&adaptive);
+        assert_eq!(
+            legacy, pinned,
+            "scenario '{}' diverged under a uniform manifest",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn uniform_manifest_pin_holds_across_sharded_serving() {
+    // same pin, whole cluster: uniform manifests must not perturb one
+    // bit of any sharded report — migrations, delta bytes, digests
+    for sc in sharded_matrix() {
+        let run_one = |sc: &kvcar::coordinator::ShardedScenario| {
+            let mut engines: Vec<MockEngine> =
+                (0..sc.n_workers).map(|_| MockEngine::new(scenario_spec())).collect();
+            let backends: Vec<&mut dyn ExecBackend> =
+                engines.iter_mut().map(|e| e as &mut dyn ExecBackend).collect();
+            kvcar::coordinator::run_sharded(backends, "mock", sc)
+                .expect("sharded scenario must pass its cluster audits")
+        };
+        let legacy = run_one(&sc);
+        let mut adaptive = sc.clone();
+        adaptive.base.adaptive_plan =
+            Some(PlanManifest::uniform(matrix_plan(&scenario_spec())));
+        let pinned = run_one(&adaptive);
+        assert_eq!(
+            legacy, pinned,
+            "sharded scenario '{}' diverged under a uniform manifest",
+            sc.base.name
+        );
+    }
+}
+
+#[test]
+fn uniform_offplan_rungs_match_their_single_rung_twins() {
+    // a uniformly rung-R manifest must store byte-for-byte what a
+    // legacy config pinned to R's format stores: same stored bytes,
+    // same predicted bytes, same park payload, same decoded rows
+    let spec = scenario_spec();
+    let n = 40;
+    for (rung, fmt) in [
+        (Rung::RawF32, Format::F32),
+        (Rung::RawF16, Format::F16),
+        (Rung::Int8, Format::Int8),
+    ] {
+        let plan = matrix_plan(&spec);
+        let mut adaptive_cfg = CacheConfig::new(spec.clone(), plan.clone());
+        adaptive_cfg.regions = PlanManifest::uniform_rung(plan.clone(), rung).regions;
+        let mut twin_cfg = CacheConfig::new(spec.clone(), plan);
+        twin_cfg.raw_format = fmt;
+        twin_cfg.latent_format = fmt;
+        let (mut a, aid) = filled_manager(adaptive_cfg, n, 7);
+        let (mut t, tid) = filled_manager(twin_cfg, n, 7);
+        assert_eq!(
+            a.seq_stored_bytes(aid),
+            t.seq_stored_bytes(tid),
+            "{rung:?}: stored bytes diverge from the single-rung twin"
+        );
+        assert_eq!(
+            a.seq_predicted_bytes(aid),
+            a.seq_stored_bytes(aid),
+            "{rung:?}: the bytes law must hold on the adaptive store"
+        );
+        assert_eq!(
+            all_rows(&a, aid, 0, n),
+            all_rows(&t, tid, 0, n),
+            "{rung:?}: decoded rows diverge from the single-rung twin"
+        );
+        let pa = a.extract_sequence_bytes(aid).expect("extract adaptive");
+        let pt = t.extract_sequence_bytes(tid).expect("extract twin");
+        assert_eq!(pa, pt, "{rung:?}: park payloads diverge from the single-rung twin");
+    }
+}
+
+#[test]
+fn mixed_regions_read_back_as_their_single_rung_oracles() {
+    // property: an arbitrary 3-region manifest's rows decode
+    // region-by-region bitwise equal to uniform single-rung oracle
+    // stores fed the same data, and measured bytes always equal the
+    // layout law's prediction
+    let spec = scenario_spec();
+    let rungs = [Rung::Plan, Rung::RawF32, Rung::RawF16, Rung::Int8];
+    check(24, |rng| {
+        let picks = [rungs[rng.below(4)], rungs[rng.below(4)], rungs[rng.below(4)]];
+        let n = rng.range(2 * BS + 1, spec.max_seq);
+        let seed = rng.below(1 << 30) as u64;
+        let plan = matrix_plan(&spec);
+        let manifest = PlanManifest {
+            plan: plan.clone(),
+            regions: vec![
+                RegionSpec { start: 0, end: Some(BS), rung: picks[0] },
+                RegionSpec { start: BS, end: Some(2 * BS), rung: picks[1] },
+                RegionSpec { start: 2 * BS, end: None, rung: picks[2] },
+            ],
+        };
+        manifest.validate(BS).map_err(|e| e.to_string())?;
+        let mut mixed_cfg = CacheConfig::new(spec.clone(), plan.clone());
+        mixed_cfg.regions = manifest.regions.clone();
+        let (mixed, mid) = filled_manager(mixed_cfg, n, seed);
+        prop_assert!(
+            mixed.seq_predicted_bytes(mid) == mixed.seq_stored_bytes(mid),
+            "bytes law broken: predicted {} vs stored {} (rungs {picks:?}, n {n})",
+            mixed.seq_predicted_bytes(mid),
+            mixed.seq_stored_bytes(mid)
+        );
+        let bounds = [(0, BS), (BS, 2 * BS), (2 * BS, n)];
+        for (r, &(start, end)) in bounds.iter().enumerate() {
+            let oracle_cfg = {
+                let mut c = CacheConfig::new(spec.clone(), plan.clone());
+                c.regions = PlanManifest::uniform_rung(plan.clone(), picks[r]).regions;
+                c
+            };
+            let (oracle, oid) = filled_manager(oracle_cfg, n, seed);
+            prop_assert!(
+                all_rows(&mixed, mid, start, end) == all_rows(&oracle, oid, start, end),
+                "region {r} ({picks:?}, rows [{start},{end})) diverges from its \
+                 single-rung oracle"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mixed_rung_sequences_roundtrip_the_host_tier_bit_identically() {
+    // heterogeneous park/unpark through the CRC-verified tier path: a
+    // mixed-rung sequence with a ladder-demoted span must restore every
+    // stream bit-identically, spans and bytes law included
+    let spec = scenario_spec();
+    let n = 44;
+    let manifest = partitioned_manifest(&spec);
+    let mut ccfg = CacheConfig::new(spec.clone(), manifest.plan.clone());
+    ccfg.regions = manifest.regions.clone();
+    let (mut m, id) = filled_manager(ccfg, n, 21);
+    // churn one row group through the regional ladder so the payload
+    // carries a live demoted span on top of the static regions
+    let freed = m.demote_region(id, 2 * BS, 2 * BS + BS).expect("regional demotion");
+    assert!(freed > 0, "demoting an f32-stored block must free bytes");
+    assert_eq!(m.seq_demoted_spans(id), vec![(2 * BS, 2 * BS + BS)]);
+    let before = all_rows(&m, id, 0, n);
+    let before_bytes = m.seq_stored_bytes(id);
+    assert_eq!(m.seq_predicted_bytes(id), before_bytes);
+
+    let parked = m.extract_sequence_bytes(id).expect("extract");
+    assert_eq!(parked.demoted_spans, vec![(2 * BS, 2 * BS + BS)]);
+    let mut tier = HostTier::new();
+    tier.park(id, parked.clone());
+    assert_eq!(m.seq_stored_bytes(id), 0, "device must be empty while parked");
+    let (back, _cost) = tier
+        .unpark_verified(id)
+        .expect("checksum must verify")
+        .expect("sequence must be parked");
+    assert_eq!(back, parked, "tier transfer must be byte-faithful");
+    m.restore_sequence_bytes(id, &back).expect("restore");
+    assert_eq!(all_rows(&m, id, 0, n), before, "restored rows diverge");
+    assert_eq!(m.seq_stored_bytes(id), before_bytes);
+    assert_eq!(m.seq_demoted_spans(id), vec![(2 * BS, 2 * BS + BS)]);
+    assert_eq!(m.seq_predicted_bytes(id), m.seq_stored_bytes(id));
+}
+
+#[test]
+fn regional_demotion_is_block_aligned_and_keeps_the_bytes_law() {
+    // the per-region ladder rung: the coldest promotable region is
+    // block-aligned, demoting it re-encodes exactly those rows to int8
+    // (bitwise equal to an all-int8 oracle there), leaves every other
+    // row untouched, and the bytes law survives the whole walk
+    let spec = scenario_spec();
+    let n = 48;
+    let manifest = partitioned_manifest(&spec);
+    let mut ccfg = CacheConfig::new(spec.clone(), manifest.plan.clone());
+    ccfg.regions = manifest.regions.clone();
+    let (mut m, id) = filled_manager(ccfg, n, 33);
+
+    let (start, end) = m
+        .coldest_promotable_region(id, 2)
+        .expect("an f32-stored sequence must have a promotable region");
+    assert_eq!(start % BS, 0, "region start must be block-aligned");
+    assert_eq!(end % BS, 0, "region end must be block-aligned");
+    assert!(end > start && end - start <= 2 * BS, "region capped at max_blocks");
+    // snapshot the rows the demotion must NOT touch before it runs
+    let head = (start > 0).then(|| all_rows(&m, id, 0, start));
+    let tail = (end < n).then(|| all_rows(&m, id, end, n));
+    let freed = m.demote_region(id, start, end).expect("demote region");
+    assert!(freed > 0, "first demotion must free bytes");
+    assert_eq!(m.seq_demoted_spans(id), vec![(start, end)]);
+    assert_eq!(m.seq_predicted_bytes(id), m.seq_stored_bytes(id));
+
+    // demoted rows match the all-int8 oracle; all others are untouched
+    let int8_cfg = {
+        let mut c = CacheConfig::new(spec.clone(), manifest.plan.clone());
+        c.regions = PlanManifest::uniform_rung(manifest.plan.clone(), Rung::Int8).regions;
+        c
+    };
+    let (oracle, oid) = filled_manager(int8_cfg, n, 33);
+    assert_eq!(
+        all_rows(&m, id, start, end),
+        all_rows(&oracle, oid, start, end),
+        "demoted rows must re-encode exactly as the int8 rung would"
+    );
+    if let Some(head) = head {
+        assert_eq!(all_rows(&m, id, 0, start), head, "rows before the region changed");
+    }
+    if let Some(tail) = tail {
+        assert_eq!(all_rows(&m, id, end, n), tail, "rows after the region changed");
+    }
+
+    // repeated pressure walks the sequence cold-to-hot until nothing
+    // is left to promote; the bytes law holds at every step and the
+    // spans merge into one block-aligned cover of the whole sequence
+    let mut guard = 0;
+    while let Some((s, e)) = m.coldest_promotable_region(id, 2) {
+        m.demote_region(id, s, e).expect("demote region");
+        assert_eq!(m.seq_predicted_bytes(id), m.seq_stored_bytes(id));
+        guard += 1;
+        assert!(guard <= 8, "the regional walk must terminate");
+    }
+    assert_eq!(
+        m.seq_demoted_spans(id),
+        vec![(0, n)],
+        "the exhausted walk must leave one merged span over every row"
+    );
+    assert_eq!(
+        all_rows(&m, id, 0, n),
+        all_rows(&oracle, oid, 0, n),
+        "a fully-walked sequence must match the all-int8 oracle everywhere"
+    );
+}
+
+#[test]
+fn pressure_with_a_partitioned_manifest_demotes_per_region() {
+    // §9 ladder × adaptive: sustained admission pressure under a
+    // genuinely partitioned manifest must walk a *per-region* demotion
+    // ladder — every demotion is regional — deterministically, with
+    // the plan-coherence invariant (stored == predicted bytes for
+    // every live sequence) audited inside run_scenario every round
+    if std::env::var("KVCAR_NO_ADAPTIVE_PLAN").is_ok() {
+        // the kill-switch leg ignores manifests by design, so the
+        // per-region ladder cannot fire; that leg's contract (adaptive
+        // off == legacy) is pinned by the uniform-manifest tests above
+        return;
+    }
+    let spec = scenario_spec();
+    let mut sc = standard_matrix()
+        .into_iter()
+        .find(|s| s.name == "sustained_pressure")
+        .unwrap();
+    // no templates to shed and no shared prefixes: the ladder's first
+    // escalation lands on the demote rung with fully-owned sequences
+    sc.template_capacity = Some(0);
+    sc.prefix_sharing = false;
+    sc.adaptive_plan = Some(partitioned_manifest(&spec));
+    let a = run(&sc);
+    let b = run(&sc);
+    assert_eq!(a, b, "the regional ladder trajectory must be deterministic");
+    assert_eq!(
+        a.demotions, a.region_demotions,
+        "under a partitioned manifest every ladder demotion must be per-region"
+    );
+    assert!(
+        a.region_demotions >= 1,
+        "sustained pressure must trigger at least one per-region demotion \
+         (demotions {}, parks {}, rejected {})",
+        a.demotions,
+        a.parks,
+        a.rejected.len()
+    );
+    assert!(a.retries >= 1, "pressure must first be absorbed by the retry budget");
+    assert_eq!(
+        a.completed + a.rejected.len() + a.quarantined.len(),
+        sc.trace.n_requests,
+        "every request must resolve"
+    );
+}
+
+#[test]
+fn candidate_manifests_roundtrip_json_and_malformed_inputs_reject() {
+    // serde integration over the real sweep candidates: exact
+    // round-trips for every candidate, typed rejections for malformed
+    // manifests (the exhaustive property fuzz lives in
+    // `compress::strategy`'s own tests)
+    let spec = scenario_spec();
+    for (label, m) in candidate_manifests(&spec, BS) {
+        let back = PlanManifest::from_json(&m.to_json())
+            .unwrap_or_else(|e| panic!("candidate {label} failed to round-trip: {e}"));
+        assert_eq!(m, back, "candidate {label} round-trip must be exact");
+        back.validate(BS)
+            .unwrap_or_else(|e| panic!("candidate {label} invalid after round-trip: {e}"));
+    }
+    let good = partitioned_manifest(&spec).to_json();
+    assert!(PlanManifest::from_json(&good).is_ok());
+    // unknown rung token
+    let bad_rung = good.replace("\"int8\"", "\"int9\"");
+    assert!(
+        PlanManifest::from_json(&bad_rung).is_err(),
+        "an unknown rung token must be rejected"
+    );
+    // overlapping / misaligned regions are rejected by validate
+    let overlapping = PlanManifest {
+        plan: matrix_plan(&spec),
+        regions: vec![
+            RegionSpec { start: 0, end: Some(2 * BS), rung: Rung::RawF32 },
+            RegionSpec { start: BS, end: None, rung: Rung::Int8 },
+        ],
+    };
+    assert!(overlapping.validate(BS).is_err(), "overlapping regions must be rejected");
+    let gapped = PlanManifest {
+        plan: matrix_plan(&spec),
+        regions: vec![
+            RegionSpec { start: 0, end: Some(BS), rung: Rung::RawF32 },
+            RegionSpec { start: 2 * BS, end: None, rung: Rung::Int8 },
+        ],
+    };
+    assert!(gapped.validate(BS).is_err(), "a row gap between regions must be rejected");
+}

@@ -405,3 +405,83 @@ fn interleaved_migrate_park_drain_keeps_every_invariant_and_output() {
     assert!(parks_total >= 1, "the budget never forced a park anywhere");
     assert!(resumes_total >= 1, "no parked sequence ever resumed");
 }
+
+#[test]
+fn mixed_rung_migration_stays_bit_faithful_and_delta_efficient() {
+    // heterogeneous-rung wire transfers: under a genuinely partitioned
+    // adaptive manifest (raw-f32 sink block, int8 cold region, plan-rung
+    // tail) the same ping-pong as above must still commit through the
+    // per-group CRCs, still satisfy the delta law on the return trip,
+    // and must not perturb one token versus the never-migrated
+    // single-worker run under the identical manifest
+    use kvcar::compress::strategy::{PlanManifest, RegionSpec, Rung};
+    let spec = scenario_spec();
+    let manifest = PlanManifest {
+        plan: CompressionPlan::ae_first_layers(&spec, 1),
+        regions: vec![
+            RegionSpec { start: 0, end: Some(16), rung: Rung::RawF32 },
+            RegionSpec { start: 16, end: Some(32), rung: Rung::Int8 },
+            RegionSpec { start: 32, end: None, rung: Rung::Plan },
+        ],
+    };
+    manifest.validate(16).expect("mixed manifest must validate");
+    let mut engines: Vec<MockEngine> = (0..2).map(|_| MockEngine::new(scenario_spec())).collect();
+    let backends: Vec<&mut dyn ExecBackend> =
+        engines.iter_mut().map(|e| e as &mut dyn ExecBackend).collect();
+    let mut cfg = base_cfg();
+    cfg.max_batch = 2;
+    cfg.adaptive_plan = Some(manifest);
+    let req = request(17, prompt_bytes(5, 24), 20, None);
+    let control = single_outputs(cfg.clone(), vec![req.clone()]);
+    let rcfg = RouterConfig {
+        auto_rebalance: false,
+        ..RouterConfig::default()
+    };
+    let mut router = Router::new(backends, "mock", cfg, rcfg).expect("router");
+    router.set_clock(&Clock::virtual_default());
+    router.begin(vec![req]);
+    for round in 0..10u64 {
+        assert!(router.step().expect("round"), "sequence finished before the first migration");
+        audit(&router, 2, round);
+    }
+    let src = (0..2).find(|&w| !router.live_requests(w).is_empty()).expect("a live sequence");
+    let dst = 1 - src;
+    let (_, cache_id) = *router.live_requests(src).first().expect("live sequence on src");
+    let MigrationOutcome::Committed { delta_bytes: d1, bytes_saved: s1, .. } =
+        router.migrate(src, dst, cache_id, false).expect("first migration")
+    else {
+        panic!("first mixed-rung migration must commit");
+    };
+    assert!(d1 > 0, "the first trip must ship the mixed-rung suffix");
+    assert_eq!(s1, 0, "no replica basis exists yet: the full suffix must ship");
+    audit(&router, 2, 10);
+    for round in 10..14u64 {
+        assert!(router.step().expect("round"), "sequence finished before the return trip");
+        audit(&router, 2, round);
+    }
+    let (_, back) = *router.live_requests(dst).first().expect("live sequence on dst");
+    let MigrationOutcome::Committed { delta_bytes: d2, bytes_saved: s2, .. } =
+        router.migrate(dst, src, back, false).expect("return migration")
+    else {
+        panic!("mixed-rung return migration must commit");
+    };
+    assert!(s2 > 0, "stable mixed-rung groups must come from the replica basis");
+    assert!(
+        d2 < d1,
+        "the return trip must ship only groups churned since the basis ({d2} vs {d1})"
+    );
+    audit(&router, 2, 14);
+    let mut round = 14u64;
+    while router.step().expect("round") {
+        round += 1;
+        audit(&router, 2, round);
+        assert!(round < 256, "run did not converge");
+    }
+    let out: Vec<(u64, Vec<u8>)> = router.finish().into_iter().map(|r| (r.id, r.output)).collect();
+    assert_eq!(
+        out, control,
+        "mixed-rung migrations must not perturb a single token versus the \
+         never-migrated run under the same manifest"
+    );
+    assert_eq!(router.stats().migrations, 2);
+}
